@@ -1,0 +1,60 @@
+//! Memory-elastic batch scaling demo (paper §3.3): run the same model
+//! under three VRAM budgets and watch B(t) find the largest batch that
+//! fits — including the OOM-avoidance path when the budget is so tight
+//! the initial batch doesn't fit at all.
+//!
+//!     cargo run --release --example elastic_demo
+
+use anyhow::Result;
+
+use tri_accel::config::{Config, Method};
+use tri_accel::memsim::MemoryMonitor;
+use tri_accel::runtime::Engine;
+use tri_accel::train::Trainer;
+
+fn main() -> Result<()> {
+    let engine = Engine::new(std::path::Path::new("artifacts"))?;
+
+    for &(label, budget_gb) in
+        &[("roomy", 0.500f64), ("paper-like", 0.065), ("starved", 0.050)]
+    {
+        let mut cfg = Config::cell("tiny_cnn_c10", Method::TriAccel, 0);
+        cfg.epochs = 2;
+        cfg.steps_per_epoch = Some(60);
+        cfg.train_examples = 4096;
+        cfg.eval_examples = 256;
+        cfg.batch_init = 32;
+        cfg.t_ctrl = 5;
+        cfg.batch_cooldown = 5;
+        cfg.t_curv = 0; // isolate the batch controller
+        cfg.warmup_epochs = 1;
+        cfg.mem_budget_gb = budget_gb;
+
+        let mut tr = Trainer::new(&engine, cfg)?;
+        for e in 0..2 {
+            tr.run_epoch(e)?;
+        }
+        let trace: Vec<String> = tr
+            .metrics
+            .batch_trace
+            .iter()
+            .map(|(s, b)| format!("@{s}→{b}"))
+            .collect();
+        println!(
+            "budget {:>9} ({:.3}GB): peak {:.4}GB  util {:>5.1}%  moves {}  vetoes {}  OOM {}  trace [{}]",
+            label,
+            budget_gb,
+            tr.memsim.peak_gb(),
+            100.0 * tr.memsim.peak_gb() / tr.memsim.mem_max_gb(),
+            tr.controller.batch.moves(),
+            tr.controller.batch.vetoes(),
+            tr.metrics.oom_events,
+            trace.join(" ")
+        );
+    }
+
+    println!("\nThe controller grows B under roomy budgets, holds near the");
+    println!("utilization band in the paper-like case, and shrinks (without");
+    println!("crashing) when starved — the §3.3 feedback behaviour.");
+    Ok(())
+}

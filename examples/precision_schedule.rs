@@ -1,0 +1,69 @@
+//! Precision-adaptivity demo (paper §3.1 + §3.2): trace each layer's
+//! gradient-variance EMA, its assigned precision over training, and the
+//! curvature promotions that pin unstable layers to FP32.
+//!
+//!     cargo run --release --example precision_schedule
+
+use anyhow::Result;
+
+use tri_accel::config::{Config, Method};
+use tri_accel::manifest::precision_name;
+use tri_accel::runtime::Engine;
+use tri_accel::train::Trainer;
+
+fn main() -> Result<()> {
+    let engine = Engine::new(std::path::Path::new("artifacts"))?;
+
+    let mut cfg = Config::cell("tiny_cnn_c10", Method::TriAccel, 1);
+    cfg.epochs = 1;
+    cfg.steps_per_epoch = Some(120);
+    cfg.train_examples = 4096;
+    cfg.eval_examples = 256;
+    cfg.batch_init = 32;
+    cfg.t_ctrl = 10;
+    cfg.t_curv = 30;
+    cfg.curv_warmup = 2;
+    cfg.warmup_epochs = 0;
+    cfg.mem_budget_gb = 0.05;
+
+    let mut tr = Trainer::new(&engine, cfg)?;
+    let num_layers = tr.session.num_layers();
+    println!("tracking {num_layers} precision layers; control window every 10 steps\n");
+    println!("{:>5}  {:<24}  {:<20}  lr-scales", "step", "codes", "v_l (EMA)");
+
+    for _ in 0..120 {
+        tr.step()?;
+        let step = tr.global_step();
+        if step % 10 == 0 {
+            let codes = tr.controller.codes();
+            let names: Vec<&str> = codes.iter().map(|&c| precision_name(c)).collect();
+            let vars = tr.controller.precision.variances();
+            let scales = tr.controller.lr_scales();
+            println!(
+                "{:>5}  {:<24}  [{}]  [{}]",
+                step,
+                names.join(","),
+                vars.iter().map(|v| format!("{v:.1e}")).collect::<Vec<_>>().join(" "),
+                scales.iter().map(|s| format!("{s:.2}")).collect::<Vec<_>>().join(" ")
+            );
+        }
+    }
+
+    let (lo, hi) = tr.controller.precision.thresholds();
+    println!("\ncalibrated thresholds: τ_low={lo:.3e} τ_high={hi:.3e}");
+    println!(
+        "transitions {}  curvature firings {}  promotions {}  λ = {:?}",
+        tr.controller.precision.transitions(),
+        tr.controller.curvature.firings(),
+        tr.metrics.promotions,
+        tr.controller
+            .curvature
+            .lambdas()
+            .iter()
+            .map(|l| format!("{l:.2}"))
+            .collect::<Vec<_>>()
+    );
+    let (test_loss, test_acc) = tr.evaluate()?;
+    println!("eval: loss {test_loss:.4}  acc {test_acc:.1}%");
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Quickstart: train a small CNN on (synthetic) CIFAR-10 with the full
+//! Tri-Accel loop and print what the controller is doing.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Uses the `tiny_cnn_c10` model so it finishes in ~a minute on CPU.
+
+use anyhow::Result;
+
+use tri_accel::config::{Config, Method};
+use tri_accel::manifest::precision_name;
+use tri_accel::runtime::Engine;
+use tri_accel::train::Trainer;
+
+fn main() -> Result<()> {
+    let engine = Engine::new(std::path::Path::new("artifacts"))?;
+    println!("PJRT platform: {}", engine.platform());
+
+    // The full adaptive method on a laptop-scale budget.
+    let mut cfg = Config::cell("tiny_cnn_c10", Method::TriAccel, 0);
+    cfg.epochs = 3;
+    cfg.steps_per_epoch = Some(40);
+    cfg.train_examples = 4096;
+    cfg.eval_examples = 512;
+    cfg.batch_init = 32;
+    cfg.t_ctrl = 10;
+    cfg.t_curv = 20;
+    cfg.warmup_epochs = 1;
+    cfg.mem_budget_gb = 0.06; // tight budget so the elastic controller works
+
+    let mut tr = Trainer::new(&engine, cfg)?;
+    println!(
+        "model: {} layers, buckets {:?}",
+        tr.session.num_layers(),
+        tr.controller.batch.buckets()
+    );
+
+    for epoch in 0..3 {
+        let r = tr.run_epoch(epoch)?;
+        let codes = tr.controller.codes();
+        let names: Vec<&str> = codes.iter().map(|&c| precision_name(c)).collect();
+        println!(
+            "epoch {}  train_loss {:.4}  test_acc {:.1}%  peak {:.4}GB  B̄ {:.0}  codes {:?}",
+            r.epoch, r.train_loss, r.test_acc, r.peak_vram_gb, r.mean_batch, names
+        );
+    }
+
+    let s = tr.summary();
+    println!(
+        "\nsummary: acc {:.2}%  modeled {:.3}s/epoch  wall {:.2}s/epoch  peak {:.4}GB  eff-score {:.2}",
+        s.test_acc_pct, s.modeled_s_per_epoch, s.wall_s_per_epoch, s.peak_vram_gb, s.eff_score
+    );
+    println!(
+        "controller: {} precision transitions, {} promotions, {} batch moves, {} OOM events",
+        tr.controller.precision.transitions(),
+        tr.metrics.promotions,
+        tr.controller.batch.moves(),
+        tr.metrics.oom_events
+    );
+    Ok(())
+}

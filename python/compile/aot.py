@@ -1,0 +1,189 @@
+"""AOT pipeline: lower every (model × graph × batch bucket) to HLO *text*
+and write the manifest the Rust runtime loads everything from.
+
+Interchange format is HLO text, NOT `lowered.compile().serialize()`:
+the image's xla_extension 0.5.1 rejects jax≥0.5 protos (64-bit instruction
+ids); `HloModuleProto::from_text_file` re-parses and reassigns ids.
+
+Incremental: an artifact is skipped when its file already exists, unless
+--force. `make artifacts` only invokes this when compile/ sources change.
+
+Usage: python -m compile.aot --out-dir ../artifacts [--only tiny_cnn] [--force]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import math
+import pathlib
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import curv_graph, eval_graph, init_graph, train_graph
+from .kernels import ref
+from .models import REGISTRY, build
+from .models import effnet, resnet, tiny_cnn
+
+# Batch-bucket ladder (DESIGN.md §6.2). PJRT executables are
+# shape-specialized; the elastic controller snaps B(t) onto this ladder.
+TRAIN_BUCKETS = {
+    "tiny_cnn": [8, 16, 24, 32, 48, 64, 96, 128],
+    "resnet18": [32, 48, 64, 96, 128],
+    "effnet_lite": [32, 48, 64, 96, 128],
+}
+# CIFAR test split is 10000 = 78×128 + 16, so eval needs exactly these two.
+EVAL_BUCKETS = [128, 16]
+CURV_BATCH = 32  # paper §4.3: b_curv = 32
+
+# (model, num_classes) cells. tiny_cnn is the CI/quickstart model and only
+# ships CIFAR-10; the paper's Table-1 grid uses the two real architectures.
+CELLS = [
+    ("tiny_cnn", 10),
+    ("resnet18", 10),
+    ("resnet18", 100),
+    ("effnet_lite", 10),
+    ("effnet_lite", 100),
+]
+
+FORWARD_FACTORIES = {
+    "tiny_cnn": tiny_cnn.make_forward,
+    "resnet18": resnet.make_forward,
+    "effnet_lite": effnet.make_forward,
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(fn, args, path: pathlib.Path, force: bool) -> bool:
+    if path.exists() and not force:
+        return False
+    t0 = time.time()
+    # keep_unused: the artifact parameter list must match the manifest IO
+    # contract exactly — jit's default pruning would silently drop, e.g.,
+    # BN state from the curv probe (train-mode batch stats don't read it).
+    text = to_hlo_text(jax.jit(fn, keep_unused=True).lower(*args))
+    path.write_text(text)
+    print(f"  wrote {path.name}  ({len(text)/1e6:.1f} MB, {time.time()-t0:.1f}s)")
+    return True
+
+
+def model_manifest(model, name: str, num_classes: int) -> dict:
+    return {
+        "model": name,
+        "num_classes": num_classes,
+        "num_layers": model.num_layers,
+        "param_count": model.param_count,
+        "layers": [
+            {
+                "name": ls.name,
+                "kind": ls.kind,
+                "param_elems": ls.param_elems,
+                "act_elems": ls.act_elems,
+                "flops": ls.flops,
+            }
+            for ls in model.layer_specs
+        ],
+        "params": [
+            {
+                "name": ps.name,
+                "shape": list(ps.shape),
+                "layer_idx": ps.layer_idx,
+                "elems": int(math.prod(ps.shape)),
+            }
+            for ps in model.param_specs
+        ],
+        "state_shapes": [list(s.shape) for s in model.state],
+        "train_buckets": TRAIN_BUCKETS[name],
+        "eval_buckets": EVAL_BUCKETS,
+        "curv_batch": CURV_BATCH,
+        "artifacts": {},  # filled by main()
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="limit to one model name")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    out = pathlib.Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+
+    manifest = {
+        "precision_codes": {"fp16": ref.FP16, "bf16": ref.BF16, "fp32": ref.FP32},
+        "precision_bytes": {str(k): v for k, v in ref.PRECISION_BYTES.items()},
+        "io": {
+            "train": {
+                "inputs": "params*N, mom*N, state*S, x, y, codes, lr_scales, lr, loss_scale, wd",
+                "outputs": "params*N, mom*N, state*S, loss, correct, grad_var, grad_norm, overflow",
+            },
+            "eval": {
+                "inputs": "params*N, state*S, x, y, codes",
+                "outputs": "loss, correct",
+            },
+            "curv": {
+                "inputs": "params*N, state*S, x, y, u*N, codes",
+                "outputs": "u_next*N, lambdas",
+            },
+            "init": {"inputs": "seed", "outputs": "params*N, state*S"},
+        },
+        "models": {},
+    }
+
+    for name, num_classes in CELLS:
+        if args.only and name != args.only:
+            continue
+        key = f"{name}_c{num_classes}"
+        print(f"[{key}]")
+        model = build(name, num_classes=num_classes)
+        entry = model_manifest(model, name, num_classes)
+
+        ts = train_graph.make_train_step(model)
+        for b in TRAIN_BUCKETS[name]:
+            fname = f"{key}_train_b{b}.hlo.txt"
+            lower_one(ts, train_graph.example_args(model, b), out / fname, args.force)
+            entry["artifacts"][f"train_b{b}"] = fname
+
+        es = eval_graph.make_eval_step(model)
+        for b in EVAL_BUCKETS:
+            fname = f"{key}_eval_b{b}.hlo.txt"
+            lower_one(es, eval_graph.example_args(model, b), out / fname, args.force)
+            entry["artifacts"][f"eval_b{b}"] = fname
+
+        cp = curv_graph.make_curv_probe(model)
+        fname = f"{key}_curv_b{CURV_BATCH}.hlo.txt"
+        lower_one(cp, curv_graph.example_args(model, CURV_BATCH), out / fname, args.force)
+        entry["artifacts"]["curv"] = fname
+
+        init = init_graph.make_init(REGISTRY[name], num_classes, FORWARD_FACTORIES[name])
+        fname = f"{key}_init.hlo.txt"
+        lower_one(init, init_graph.example_args(), out / fname, args.force)
+        entry["artifacts"]["init"] = fname
+
+        manifest["models"][key] = entry
+
+    mpath = out / "manifest.json"
+    if args.only and mpath.exists():
+        # Merge into the existing manifest rather than clobbering it.
+        old = json.loads(mpath.read_text())
+        old["models"].update(manifest["models"])
+        manifest = old
+    mpath.write_text(json.dumps(manifest, indent=1))
+    digest = hashlib.sha256(mpath.read_bytes()).hexdigest()[:12]
+    print(f"manifest.json written ({len(manifest['models'])} models, sha {digest})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,125 @@
+"""L2 curvature probe — one amortized power-iteration step (§3.2).
+
+Computes a Hessian-vector product Hu of the training loss at the current
+params (curvature batch b_curv ≪ B_train) via forward-over-reverse, then
+per precision layer l:
+
+    λ_l = ⟨u_l, (Hu)_l⟩ / ⟨u_l, u_l⟩          (Rayleigh quotient)
+    u'_l = (Hu)_l / ‖(Hu)_l‖                  (next probe, unit per layer)
+
+The Rust curvature scheduler persists u between firings (every T_curv
+steps), so the iteration converges across firings at one-HVP cost each —
+amortized power iteration (DESIGN.md §6.6).
+
+Approximation note (documented in DESIGN.md): the paper's block-diagonal
+H_l is approximated by the layer-slice of the full HVP. Cross-layer terms
+perturb the iterate, but the control law only consumes max-λ magnitude,
+and the §4.3 protocol's λ are themselves power-iteration estimates. The
+strict per-block variant (L masked HVPs) is available for tiny models as
+`make_curv_probe(strict_block=True)` and is used by pytest to bound the
+approximation error.
+
+Precision codes: the probe runs with the *current* codes, so λ reflects
+the loss surface the optimizer actually walks (quantization included).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import api
+from .models import common as C
+
+EPS = 1e-12
+
+# The HVP needs forward-over-reverse differentiation, but the Pallas
+# kernels carry custom_vjp rules (no jvp). The probe therefore traces the
+# model through the pure-jnp reference kernels — pytest pins those to the
+# Pallas kernels bit-for-bit, and astype/dot are differentiable at any
+# order. The probe is its own artifact, so the train step keeps the real
+# kernels.
+
+
+def _group_by_layer(model, vecs):
+    """Yield (layer_idx, [tensor...]) for precision layers."""
+    groups: dict[int, list] = {}
+    for spec, v in zip(model.param_specs, vecs):
+        if spec.layer_idx >= 0:
+            groups.setdefault(spec.layer_idx, []).append(v)
+    return groups
+
+
+def make_curv_probe(model, strict_block: bool = False):
+    """Returns curv_probe(params, state, x, y, u, codes) -> (u', lambdas)."""
+
+    def loss_only(params, state, x, y, codes):
+        with api.backend("ref"):
+            logits, _ = model.apply(params, state, x, codes, train=True)
+        return C.cross_entropy(logits, y)
+
+    def hvp(params, state, x, y, codes, u):
+        g_fn = lambda p: jax.grad(loss_only)(p, state, x, y, codes)
+        _, hu = jax.jvp(g_fn, (params,), (u,))
+        return hu
+
+    def curv_probe(params, state, x, y, u, codes):
+        params = tuple(params)
+        state = tuple(state)
+        u = tuple(u)
+        L = model.num_layers
+
+        if strict_block:
+            # L masked HVPs: zero the tangent outside layer l — exact
+            # block-diagonal power iteration (test/reference path only).
+            hu_parts = []
+            for li in range(L):
+                masked = tuple(
+                    v if s.layer_idx == li else jnp.zeros_like(v)
+                    for s, v in zip(model.param_specs, u)
+                )
+                hu_l = hvp(params, state, x, y, codes, masked)
+                hu_parts.append(hu_l)
+            hu = tuple(
+                hu_parts[s.layer_idx][pi] if s.layer_idx >= 0 else jnp.zeros_like(u[pi])
+                for pi, s in enumerate(model.param_specs)
+            )
+        else:
+            hu = hvp(params, state, x, y, codes, u)
+
+        groups = _group_by_layer(model, list(range(len(u))))
+        lambdas = [jnp.float32(0.0)] * L
+        norms = {}
+        for li, idxs in groups.items():
+            num = jnp.float32(0.0)
+            den = jnp.float32(0.0)
+            hn = jnp.float32(0.0)
+            for pi in idxs:
+                num += jnp.vdot(u[pi], hu[pi])
+                den += jnp.vdot(u[pi], u[pi])
+                hn += jnp.vdot(hu[pi], hu[pi])
+            lambdas[li] = num / (den + EPS)
+            norms[li] = jnp.sqrt(hn) + EPS
+
+        u_next = []
+        for pi, spec in enumerate(model.param_specs):
+            li = spec.layer_idx
+            if li < 0:
+                u_next.append(jnp.zeros_like(u[pi]))
+            else:
+                u_next.append(hu[pi] / norms[li])
+        return tuple(u_next), jnp.stack(lambdas)
+
+    return curv_probe
+
+
+def example_args(model, batch: int):
+    f32 = jnp.float32
+    sds = jax.ShapeDtypeStruct
+    params = tuple(sds(p.shape, f32) for p in model.params)
+    state = tuple(sds(s.shape, f32) for s in model.state)
+    x = sds((batch, 32, 32, 3), f32)
+    y = sds((batch,), jnp.int32)
+    u = tuple(sds(p.shape, f32) for p in model.params)
+    codes = sds((model.num_layers,), jnp.int32)
+    return (params, state, x, y, u, codes)

@@ -1,0 +1,31 @@
+"""L2 eval step: running-stat BN, precision codes still honoured so the
+Rust side can also measure quantized-inference accuracy (all-FP32 codes =
+the paper's test-time protocol)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .models import common as C
+
+
+def make_eval_step(model):
+    def eval_step(params, state, x, y, codes):
+        logits, _ = model.apply(tuple(params), tuple(state), x, codes, train=False)
+        loss = C.cross_entropy(logits, y)
+        correct = C.correct_count(logits, y)
+        return loss, correct
+
+    return eval_step
+
+
+def example_args(model, batch: int):
+    f32 = jnp.float32
+    sds = jax.ShapeDtypeStruct
+    params = tuple(sds(p.shape, f32) for p in model.params)
+    state = tuple(sds(s.shape, f32) for s in model.state)
+    x = sds((batch, 32, 32, 3), f32)
+    y = sds((batch,), jnp.int32)
+    codes = sds((model.num_layers,), jnp.int32)
+    return (params, state, x, y, codes)

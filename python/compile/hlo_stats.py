@@ -1,0 +1,193 @@
+"""HLO cost analysis over the AOT artifacts — the §Perf L2 profiling
+tool (DESIGN.md §7).
+
+Parses HLO *text* (the interchange format) and reports, per artifact:
+
+  * op histogram (convolution / dot / elementwise / reduce / ...)
+  * estimated FLOPs for convolution+dot ops (from shapes)
+  * parameter + output bytes (HBM traffic floor)
+  * arithmetic intensity (FLOPs / byte) — roofline position
+  * duplicate-computation smells: identical convolution shapes appearing
+    more than forward+backward would explain
+
+Usage:
+    python -m compile.hlo_stats artifacts/resnet18_c10_train_b96.hlo.txt
+    python -m compile.hlo_stats --all artifacts/   # summary table
+"""
+
+from __future__ import annotations
+
+import argparse
+import math
+import pathlib
+import re
+import sys
+from collections import Counter, defaultdict
+
+# f32[32,32,32,3]{3,2,1,0} — capture dtype and dims.
+SHAPE_RE = re.compile(r"(f16|bf16|f32|f64|s32|u32|pred|s8|u8)\[([0-9,]*)\]")
+# op name after " = <shape> opcode(" — e.g. "convolution(", "dot("
+OP_RE = re.compile(r"=\s+[^ ]+\s+([a-z][a-z0-9\-]*)\(")
+
+DTYPE_BYTES = {"f16": 2, "bf16": 2, "f32": 4, "f64": 8, "s32": 4, "u32": 4, "pred": 1, "s8": 1, "u8": 1}
+
+
+def parse_shape(text: str, pos: int = 0):
+    m = SHAPE_RE.search(text, pos)
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",") if d] if m.group(2) else []
+    return m.group(1), dims, m.end()
+
+
+def elems(dims) -> int:
+    return math.prod(dims) if dims else 1
+
+
+class ArtifactStats:
+    def __init__(self, path: pathlib.Path):
+        self.path = path
+        self.ops = Counter()
+        self.flops = 0
+        self.param_bytes = 0
+        self.out_bytes = 0
+        self.conv_shapes = Counter()
+        self._analyze(path.read_text())
+
+    def _analyze(self, text: str):
+        # First pass: symbol table name -> (dtype, dims) from each LHS.
+        self.symbols: dict[str, tuple[str, list[int]]] = {}
+        lines = [l.strip() for l in text.splitlines()]
+        for line in lines:
+            if " = " not in line:
+                continue
+            name = line.split(" = ", 1)[0].lstrip("%")
+            if name.startswith("ROOT "):
+                name = name[5:].lstrip("%")
+            s = parse_shape(line.split(" = ", 1)[1])
+            if s:
+                self.symbols[name] = (s[0], s[1])
+        # Second pass: histogram + cost.
+        for line in lines:
+            m = OP_RE.search(line)
+            if not m:
+                if line.startswith("ROOT") or "parameter(" in line:
+                    self._param_or_root(line)
+                continue
+            op = m.group(1)
+            self.ops[op] += 1
+            if op == "convolution":
+                self._conv_flops(line)
+            elif op == "dot":
+                self._dot_flops(line)
+            if "parameter(" in line or line.startswith("ROOT"):
+                self._param_or_root(line)
+
+    def _operand_shapes(self, line: str) -> list[list[int]]:
+        """Shapes of the operands named inside the op's parens."""
+        m = re.search(r"\(([^)]*)\)", line)
+        if not m:
+            return []
+        out = []
+        for name in m.group(1).split(","):
+            name = name.strip().lstrip("%")
+            if name in self.symbols:
+                out.append(self.symbols[name][1])
+        return out
+
+    def _param_or_root(self, line: str):
+        if "parameter(" in line:
+            s = parse_shape(line)
+            if s:
+                dt, dims, _ = s
+                self.param_bytes += elems(dims) * DTYPE_BYTES.get(dt, 4)
+        if line.startswith("ROOT"):
+            # Sum every shape in the ROOT tuple.
+            pos = 0
+            while True:
+                s = parse_shape(line, pos)
+                if not s:
+                    break
+                dt, dims, pos = s
+                self.out_bytes += elems(dims) * DTYPE_BYTES.get(dt, 4)
+
+    def _conv_flops(self, line: str):
+        # FLOPs = 2 × prod(result) × per-output reduction size.
+        s = parse_shape(line.split(" = ", 1)[1]) if " = " in line else None
+        operands = self._operand_shapes(line)
+        if s and len(operands) >= 2:
+            out = s[1]
+            rhs = operands[1]
+            # rhs = kernel [kh,kw,cin,cout] (or permuted); reduction size
+            # = prod(kernel)/cout, where cout is the rhs dim matching
+            # out's channel dim.
+            cout = out[-1] if out else 1
+            red = elems(rhs) // max(cout, 1)
+            self.flops += 2 * elems(out) * red
+            self.conv_shapes[f"{out}x{rhs}"] += 1
+
+    def _dot_flops(self, line: str):
+        s = parse_shape(line.split(" = ", 1)[1]) if " = " in line else None
+        operands = self._operand_shapes(line)
+        if s and len(operands) >= 1:
+            out = s[1]
+            lhs = operands[0]
+            # Contraction size = prod(lhs) / prod(out's row dims).
+            k = elems(lhs) // max(elems(out[:-1]) if out else 1, 1)
+            self.flops += 2 * elems(out) * max(k, 1)
+
+    @property
+    def total_ops(self) -> int:
+        return sum(self.ops.values())
+
+    @property
+    def intensity(self) -> float:
+        traffic = self.param_bytes + self.out_bytes
+        return self.flops / traffic if traffic else 0.0
+
+    def duplicate_convs(self):
+        """Conv shapes appearing >3× (fwd + input-grad + weight-grad is 3)."""
+        return {k: v for k, v in self.conv_shapes.items() if v > 3}
+
+    def report(self) -> str:
+        lines = [f"== {self.path.name} =="]
+        lines.append(
+            f"ops {self.total_ops}  estFLOPs {self.flops/1e6:.1f}M  "
+            f"param {self.param_bytes/1e6:.2f}MB  out {self.out_bytes/1e6:.2f}MB  "
+            f"intensity {self.intensity:.1f} FLOP/B"
+        )
+        top = ", ".join(f"{op}:{n}" for op, n in self.ops.most_common(8))
+        lines.append(f"top ops: {top}")
+        dups = self.duplicate_convs()
+        if dups:
+            lines.append("duplicate-conv smells (shape → count >3):")
+            for k, v in sorted(dups.items(), key=lambda kv: -kv[1])[:5]:
+                lines.append(f"  {v}× {k}")
+        else:
+            lines.append("no duplicate-computation smells (convs ≤3× per shape)")
+        return "\n".join(lines)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path", help="artifact file, or directory with --all")
+    ap.add_argument("--all", action="store_true", help="summarize a directory")
+    args = ap.parse_args()
+    p = pathlib.Path(args.path)
+    if args.all:
+        rows = []
+        for f in sorted(p.glob("*.hlo.txt")):
+            s = ArtifactStats(f)
+            rows.append(
+                f"{f.name:<42} ops {s.total_ops:>5}  estFLOPs {s.flops/1e6:>9.1f}M  "
+                f"conv {s.ops.get('convolution', 0):>3}  dot {s.ops.get('dot', 0):>3}  "
+                f"fusable-elemwise {s.ops.get('add', 0) + s.ops.get('multiply', 0):>5}"
+            )
+        print("\n".join(rows))
+    else:
+        print(ArtifactStats(p).report())
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

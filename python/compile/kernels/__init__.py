@@ -1,0 +1,3 @@
+"""L1 Pallas kernels (build-time only; lowered into the L2 HLO)."""
+
+from . import api, grad_stats, mp_matmul, qdq, ref, sr_qdq  # noqa: F401

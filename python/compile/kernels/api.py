@@ -1,0 +1,78 @@
+"""Kernel dispatch surface for the L2 graphs.
+
+The model code calls `api.qdq(...)` etc. and never touches pallas_call
+directly. `set_backend("ref")` swaps every kernel for its pure-jnp oracle —
+used (a) by pytest to diff the two paths through entire train graphs and
+(b) to lower reference-numerics variants for A/B artifacts.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+import jax.numpy as jnp
+
+from . import grad_stats as _grad_stats_mod
+from . import mp_matmul as _mp_matmul_mod
+from . import qdq as _qdq_mod
+from . import ref
+from . import sgd_update as _sgd_update_mod
+from . import sr_qdq as _sr_qdq_mod
+
+FP16, BF16, FP32 = ref.FP16, ref.BF16, ref.FP32
+
+_state = threading.local()
+
+
+def _backend() -> str:
+    return getattr(_state, "backend", "pallas")
+
+
+def set_backend(name: str) -> None:
+    assert name in ("pallas", "ref"), name
+    _state.backend = name
+
+
+@contextlib.contextmanager
+def backend(name: str):
+    prev = _backend()
+    set_backend(name)
+    try:
+        yield
+    finally:
+        set_backend(prev)
+
+
+def qdq(x: jnp.ndarray, code) -> jnp.ndarray:
+    code = jnp.asarray(code, jnp.int32)
+    if _backend() == "ref":
+        return ref.qdq_ref(x, code)
+    return _qdq_mod.qdq(x, code)
+
+
+def mp_matmul(x: jnp.ndarray, w: jnp.ndarray, code) -> jnp.ndarray:
+    code = jnp.asarray(code, jnp.int32)
+    if _backend() == "ref":
+        return ref.mp_matmul_ref(x, w, code)
+    return _mp_matmul_mod.mp_matmul(x, w, code)
+
+
+def grad_stats(g: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    if _backend() == "ref":
+        return ref.grad_stats_ref(jax.lax.stop_gradient(g))
+    return _grad_stats_mod.grad_stats(g)
+
+
+def sgd_update(p, m, g, lr_eff, wd, apply_mask):
+    if _backend() == "ref":
+        return ref.sgd_update_ref(p, m, g, lr_eff, wd, apply_mask)
+    return _sgd_update_mod.sgd_update(p, m, g, lr_eff, wd, apply_mask)
+
+
+def sr_qdq(x: jnp.ndarray, noise: jnp.ndarray, code) -> jnp.ndarray:
+    code = jnp.asarray(code, jnp.int32)
+    if _backend() == "ref":
+        return ref.sr_qdq_ref(x, noise, code)
+    return _sr_qdq_mod.sr_qdq(x, noise, code)

@@ -1,0 +1,64 @@
+"""`grad_stats` — fused two-moment reduction Pallas kernel.
+
+Computes (mean, biased variance) of a gradient tensor in one pass: each
+grid step accumulates the block's sum and sum-of-squares into a 2-element
+VMEM accumulator; the final moments are formed on the way out. This is the
+per-layer `Var[∇_l(t)]` the paper's precision controller consumes every
+step (§3.1) — it has to be cheap enough to be "negligible overhead", hence
+one fused pass instead of mean-then-var.
+
+The count is carried statically (the tensor size is known at lowering
+time), so the kernel only reduces sums.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 128 * 1024
+
+
+def _stats_kernel(x_ref, acc_ref):
+    x = x_ref[...]
+    s = jnp.sum(x)
+    sq = jnp.sum(x * x)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        acc_ref[0] = s
+        acc_ref[1] = sq
+
+    @pl.when(pl.program_id(0) != 0)
+    def _accum():
+        acc_ref[0] += s
+        acc_ref[1] += sq
+
+
+def grad_stats(g: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(mean, biased variance) over all elements of `g`.
+
+    Matches `ref.grad_stats_ref` (allclose; block accumulation order).
+    Not differentiated — callers wrap in stop_gradient.
+    """
+    g_flat = jax.lax.stop_gradient(g).astype(jnp.float32).reshape(-1)
+    n = g_flat.shape[0]
+    pad = (-n) % BLOCK if n > BLOCK else 0
+    if pad:
+        # Zero padding is moment-safe: we divide by the true n below.
+        g_flat = jnp.concatenate([g_flat, jnp.zeros((pad,), jnp.float32)])
+    np_ = g_flat.shape[0]
+    block = BLOCK if np_ >= BLOCK else np_
+    acc = pl.pallas_call(
+        _stats_kernel,
+        grid=(np_ // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((2,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((2,), jnp.float32),
+        interpret=True,
+    )(g_flat)
+    inv_n = 1.0 / float(n)
+    mean = acc[0] * inv_n
+    var = acc[1] * inv_n - mean * mean
+    return mean, jnp.maximum(var, 0.0)

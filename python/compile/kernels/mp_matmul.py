@@ -1,0 +1,106 @@
+"""`mp_matmul` — mixed-precision tiled matmul Pallas kernel.
+
+The compute hot-spot for the dense layers: inputs are rounded to the
+runtime-selected precision *at the tile boundary* (where a real TPU would
+pick the bf16 vs f32 HBM→VMEM layout), then multiplied with an **fp32 VMEM
+accumulator** — the Triton "fp16 in, fp32 accumulate" idiom re-expressed
+for the MXU (DESIGN.md §4).
+
+Grid = (M/BM, N/BN, K/BK) with the K axis innermost so the accumulator
+block stays resident in VMEM across the K sweep; the qdq of each tile fuses
+into the load. Block shapes default to MXU-aligned 128×128×128.
+
+Backward (custom_vjp) recomputes the two transposed mixed-precision
+matmuls with the same code — AMP semantics for dense layers.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+BM, BN, BK = 128, 128, 128
+
+
+def _round(x, code):
+    f16 = x.astype(jnp.float16).astype(jnp.float32)
+    b16 = x.astype(jnp.bfloat16).astype(jnp.float32)
+    return jnp.where(code == ref.FP16, f16, jnp.where(code == ref.BF16, b16, x))
+
+
+def _mm_kernel(code_ref, x_ref, w_ref, o_ref):
+    code = code_ref[0]
+    xq = _round(x_ref[...], code)
+    wq = _round(w_ref[...], code)
+    acc = jnp.dot(xq, wq, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = acc
+
+    @pl.when(pl.program_id(2) != 0)
+    def _accum():
+        o_ref[...] += acc
+
+
+def _pad2(a, bm, bk):
+    m, k = a.shape
+    pm, pk = (-m) % bm, (-k) % bk
+    if pm or pk:
+        a = jnp.pad(a, ((0, pm), (0, pk)))
+    return a
+
+
+def _mp_matmul_raw(x: jnp.ndarray, w: jnp.ndarray, code: jnp.ndarray) -> jnp.ndarray:
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    # Small problems run as a single block (grid 1×1×1) — padding a tiny
+    # dense head up to 128³ would waste the interpreter's time.
+    bm, bn, bk = min(BM, m), min(BN, n), min(BK, k)
+    xp, wp = _pad2(x.astype(jnp.float32), bm, bk), _pad2(w.astype(jnp.float32), bk, bn)
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    out = pl.pallas_call(
+        _mm_kernel,
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j, l: (0,)),
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(code.reshape(1).astype(jnp.int32), xp, wp)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def mp_matmul(x: jnp.ndarray, w: jnp.ndarray, code: jnp.ndarray) -> jnp.ndarray:
+    """x @ w with both operands rounded to `code`, fp32 accumulation.
+
+    Matches `ref.mp_matmul_ref` (allclose — accumulation order differs
+    across tiles).
+    """
+    return _mp_matmul_raw(x, w, code)
+
+
+def _fwd(x, w, code):
+    return _mp_matmul_raw(x, w, code), (x, w, code)
+
+
+def _bwd(res, g):
+    x, w, code = res
+    # AMP backward: the two grad matmuls also run in compute precision.
+    dx = _mp_matmul_raw(g, w.T, code)
+    dw = _mp_matmul_raw(x.T, g, code)
+    return dx, dw, None
+
+
+mp_matmul.defvjp(_fwd, _bwd)

@@ -1,0 +1,96 @@
+"""`qdq` — precision-emulation Pallas kernel (the paper's per-layer
+precision mechanism, §3.1).
+
+Quantize-dequantize an f32 tensor through a *runtime-selected* precision:
+the code (0=FP16, 1=BF16, 2=FP32) arrives as an i32[1] input, so a single
+lowered executable serves every precision policy the Rust controller can
+emit — this is what makes runtime precision scheduling possible without
+recompilation (DESIGN.md §6.1).
+
+Hardware adaptation (DESIGN.md §4): the kernel is tiled so each block fits
+VMEM (BLOCK f32 elements, 512 KiB at the default); on a real TPU the
+quantize would fuse into the HBM→VMEM load. Lowered with interpret=True so
+the CPU PJRT plugin can run it.
+
+The custom_vjp makes the backward pass *also* quantize the cotangent to the
+same precision — modelling AMP's reduced-precision backward, which is the
+very signal (gradient variance inflation under FP16) that drives the
+paper's adaptive controller.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Elements per block: 128Ki f32 = 512 KiB << 16 MiB VMEM, leaving room for
+# the output block and double-buffering on a real TPU.
+BLOCK = 128 * 1024
+
+
+def _qdq_kernel(code_ref, x_ref, o_ref):
+    x = x_ref[...]
+    f16 = x.astype(jnp.float16).astype(jnp.float32)
+    b16 = x.astype(jnp.bfloat16).astype(jnp.float32)
+    code = code_ref[0]
+    o_ref[...] = jnp.where(code == ref.FP16, f16, jnp.where(code == ref.BF16, b16, x))
+
+
+def _qdq_flat(x_flat: jnp.ndarray, code: jnp.ndarray) -> jnp.ndarray:
+    """Run the kernel over a 1-D f32 array (already padded to BLOCK)."""
+    n = x_flat.shape[0]
+    grid = n // BLOCK if n >= BLOCK else 1
+    block = BLOCK if n >= BLOCK else n
+    return pl.pallas_call(
+        _qdq_kernel,
+        grid=(grid,),
+        in_specs=[
+            # The code is broadcast to every block (same scalar each step).
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(code.reshape(1).astype(jnp.int32), x_flat)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def qdq(x: jnp.ndarray, code: jnp.ndarray) -> jnp.ndarray:
+    """Precision round-trip of `x` through the format named by `code`.
+
+    Matches `ref.qdq_ref` exactly. Differentiable: the cotangent is itself
+    rounded to the same precision (AMP-style reduced-precision backward).
+    """
+    return _qdq_fwd(x, code)[0]
+
+
+def _apply(x: jnp.ndarray, code: jnp.ndarray) -> jnp.ndarray:
+    shape = x.shape
+    x_flat = x.astype(jnp.float32).reshape(-1)
+    n = x_flat.shape[0]
+    pad = (-n) % BLOCK if n > BLOCK else 0
+    if pad:
+        x_flat = jnp.concatenate([x_flat, jnp.zeros((pad,), jnp.float32)])
+    out = _qdq_flat(x_flat, code)
+    if pad:
+        out = out[:n]
+    return out.reshape(shape)
+
+
+def _qdq_fwd(x, code):
+    return _apply(x, code), code
+
+
+def _qdq_bwd(code, g):
+    # Reduced-precision backward: the gradient that flows out of a layer
+    # running at precision p is itself representable in p.
+    return _apply(g, code), None
+
+
+qdq.defvjp(_qdq_fwd, _qdq_bwd)

@@ -1,0 +1,104 @@
+"""Pure-jnp reference oracle for every L1 Pallas kernel.
+
+These are the ground-truth semantics the Pallas kernels must match
+bit-for-bit (modulo fp32 accumulation order, tested with allclose).
+The Rust side never sees this file; it exists so pytest + hypothesis can
+pin the kernels down before AOT lowering.
+
+Precision codes (shared contract with the Rust coordinator — see
+rust/src/coordinator/precision.rs and artifacts/manifest.json):
+    0 = FP16, 1 = BF16, 2 = FP32.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Precision-code contract. Keep in sync with rust/src/coordinator/precision.rs.
+FP16 = 0
+BF16 = 1
+FP32 = 2
+PRECISION_NAMES = {FP16: "fp16", BF16: "bf16", FP32: "fp32"}
+
+# Bytes per element charged by the memory model for each code.
+PRECISION_BYTES = {FP16: 2, BF16: 2, FP32: 4}
+
+
+def qdq_ref(x: jnp.ndarray, code) -> jnp.ndarray:
+    """Quantize-dequantize `x` (f32) through the precision named by `code`.
+
+    FP16 models IEEE half: overflow saturates to inf, subnormals flush per
+    the hardware convert; BF16 is round-to-nearest-even on the top 16 bits.
+    FP32 is the identity. `code` may be a traced scalar.
+    """
+    x = x.astype(jnp.float32)
+    f16 = x.astype(jnp.float16).astype(jnp.float32)
+    b16 = x.astype(jnp.bfloat16).astype(jnp.float32)
+    code = jnp.asarray(code, dtype=jnp.int32)
+    return jnp.where(code == FP16, f16, jnp.where(code == BF16, b16, x))
+
+
+def mp_matmul_ref(x: jnp.ndarray, w: jnp.ndarray, code) -> jnp.ndarray:
+    """Mixed-precision matmul: inputs rounded to `code`, fp32 accumulate."""
+    xq = qdq_ref(x, code)
+    wq = qdq_ref(w, code)
+    return jnp.matmul(xq, wq, preferred_element_type=jnp.float32)
+
+
+def grad_stats_ref(g: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(mean, biased variance) over all elements of `g`, fp32."""
+    g = g.astype(jnp.float32).reshape(-1)
+    mean = jnp.mean(g)
+    var = jnp.mean(jnp.square(g)) - jnp.square(mean)
+    # Clamp tiny negative round-off so downstream log/thresholds are safe.
+    return mean, jnp.maximum(var, 0.0)
+
+
+SGD_MOMENTUM = 0.9
+
+
+def sgd_update_ref(p, m, g, lr_eff, wd, apply_mask):
+    """Fused SGD+momentum update (see kernels/sgd_update.py).
+
+    g_eff = (g + wd·p)·mask;  m' = μ·m + g_eff (held when mask=0);
+    p' = p − lr_eff·mask·m'.
+    """
+    p = p.astype(jnp.float32)
+    m = m.astype(jnp.float32)
+    g = g.astype(jnp.float32)
+    lr_eff = jnp.asarray(lr_eff, jnp.float32)
+    wd = jnp.asarray(wd, jnp.float32)
+    apply_mask = jnp.asarray(apply_mask, jnp.float32)
+    g_eff = (g + wd * p) * apply_mask
+    m_new = SGD_MOMENTUM * m + g_eff
+    m_out = jnp.where(apply_mask > 0.5, m_new, m)
+    p_out = p - lr_eff * apply_mask * m_out
+    return p_out, m_out
+
+
+def sr_qdq_ref(x: jnp.ndarray, noise: jnp.ndarray, code) -> jnp.ndarray:
+    """Stochastic-rounding qdq (paper §4.5 extension).
+
+    `noise` is uniform [0,1) of x's shape. For BF16 we round down/up to the
+    two nearest representable values with probability proportional to the
+    distance to each; FP16 falls back to round-to-nearest (the hardware
+    convert); FP32 passes through.
+    """
+    x = x.astype(jnp.float32)
+    noise = noise.astype(jnp.float32)
+    code = jnp.asarray(code, dtype=jnp.int32)
+
+    # Stochastic rounding to bf16: truncate mantissa to get the lower
+    # representable value, add one bf16-ULP for the upper, pick by noise.
+    bits = x.view(jnp.uint32)
+    lo_bits = bits & jnp.uint32(0xFFFF0000)
+    lo = lo_bits.view(jnp.float32)
+    hi = (lo_bits + jnp.uint32(0x00010000)).view(jnp.float32)
+    span = hi - lo
+    frac = jnp.where(span != 0, (x - lo) / jnp.where(span != 0, span, 1.0), 0.0)
+    sr_b16 = jnp.where(noise < frac, hi, lo)
+    # Exactly-representable values and non-finite inputs pass through.
+    sr_b16 = jnp.where(jnp.isfinite(x), sr_b16, x)
+
+    f16 = x.astype(jnp.float16).astype(jnp.float32)
+    return jnp.where(code == FP16, f16, jnp.where(code == BF16, sr_b16, x))

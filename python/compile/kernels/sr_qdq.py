@@ -1,0 +1,91 @@
+"""`sr_qdq` — stochastic-rounding precision emulation (extension kernel).
+
+The paper's §4.5 points at "low-rank or learned approximations" and broader
+numeric work as future directions; stochastic rounding is the standard
+next step beyond round-to-nearest for low-precision training (Gupta et
+al. 2015), so we ship it as a first-class ablation: the Rust config can
+flip `rounding = "stochastic"` and the BF16 leg of every qdq becomes
+unbiased.
+
+Noise is an explicit uniform-[0,1) input (threaded from the Rust side's
+seeded RNG via the train graph) — the kernel stays deterministic and
+replayable, matching the 3-seed protocol.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+BLOCK = 128 * 1024
+
+
+def _sr_kernel(code_ref, x_ref, noise_ref, o_ref):
+    x = x_ref[...]
+    noise = noise_ref[...]
+    code = code_ref[0]
+
+    bits = x.view(jnp.uint32)
+    lo_bits = bits & jnp.uint32(0xFFFF0000)
+    lo = lo_bits.view(jnp.float32)
+    hi = (lo_bits + jnp.uint32(0x00010000)).view(jnp.float32)
+    span = hi - lo
+    frac = jnp.where(span != 0, (x - lo) / jnp.where(span != 0, span, 1.0), 0.0)
+    sr_b16 = jnp.where(noise < frac, hi, lo)
+    sr_b16 = jnp.where(jnp.isfinite(x), sr_b16, x)
+
+    f16 = x.astype(jnp.float16).astype(jnp.float32)
+    o_ref[...] = jnp.where(
+        code == ref.FP16, f16, jnp.where(code == ref.BF16, sr_b16, x)
+    )
+
+
+@jax.custom_vjp
+def sr_qdq(x: jnp.ndarray, noise: jnp.ndarray, code: jnp.ndarray) -> jnp.ndarray:
+    """Stochastically-rounded qdq. Matches `ref.sr_qdq_ref` exactly."""
+    return _apply(x, noise, code)
+
+
+def _apply(x, noise, code):
+    shape = x.shape
+    x_flat = x.astype(jnp.float32).reshape(-1)
+    noise_flat = noise.astype(jnp.float32).reshape(-1)
+    n = x_flat.shape[0]
+    pad = (-n) % BLOCK if n > BLOCK else 0
+    if pad:
+        z = jnp.zeros((pad,), jnp.float32)
+        x_flat = jnp.concatenate([x_flat, z])
+        noise_flat = jnp.concatenate([noise_flat, z])
+    np_ = x_flat.shape[0]
+    block = BLOCK if np_ >= BLOCK else np_
+    out = pl.pallas_call(
+        _sr_kernel,
+        grid=(np_ // block,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((np_,), jnp.float32),
+        interpret=True,
+    )(code.reshape(1).astype(jnp.int32), x_flat, noise_flat)
+    if pad:
+        out = out[:n]
+    return out.reshape(shape)
+
+
+def _fwd(x, noise, code):
+    return _apply(x, noise, code), code
+
+
+def _bwd(code, g):
+    # Straight-through: SR is unbiased, so identity is the right estimator
+    # (round-to-nearest on the cotangent would re-bias it).
+    return g, None, None
+
+
+sr_qdq.defvjp(_fwd, _bwd)

@@ -1,0 +1,13 @@
+"""L2 model zoo (from-scratch JAX; no flax/optax)."""
+
+from . import common, effnet, resnet, tiny_cnn  # noqa: F401
+
+REGISTRY = {
+    tiny_cnn.NAME: tiny_cnn.build,
+    resnet.NAME: resnet.build,
+    effnet.NAME: effnet.build,
+}
+
+
+def build(name: str, num_classes: int = 10, seed: int = 0):
+    return REGISTRY[name](num_classes=num_classes, seed=seed)

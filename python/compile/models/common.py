@@ -1,0 +1,321 @@
+"""Model-building micro-framework (flax-lite, build-time only).
+
+Every model is a pure function over an ordered, *flat* list of parameter
+arrays + a flat list of batchnorm-state arrays — flatness is the contract
+with the Rust runtime, which packs/unpacks PJRT literals positionally from
+the manifest.
+
+Precision layers: each conv / dense call consumes one entry of the runtime
+`codes` i32[L] vector (the paper's per-layer `p_l(t)`), quantizing its
+weights and input activations through the L1 `qdq` kernel (dense layers go
+through the tiled `mp_matmul` kernel instead). BN parameters stay fp32,
+matching AMP practice.
+
+The same forward code runs in three modes via `Store`:
+  * init  — allocates params/state, records `LayerSpec`s (param/activation
+            element counts that feed the Rust memsim),
+  * train — consumes params, emits updated BN state,
+  * eval  — consumes params, uses running BN stats.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..kernels import api
+
+BN_MOMENTUM = 0.1  # torch-style: running ← (1-m)·running + m·batch
+BN_EPS = 1e-5
+
+
+@dataclasses.dataclass
+class LayerSpec:
+    """Static accounting for one precision layer (consumed by memsim)."""
+
+    name: str
+    kind: str  # "conv" | "dense" | "dwconv"
+    param_elems: int  # quantizable weight elements (bias/BN excluded)
+    act_elems: int  # output activation elements per sample
+    flops: int  # MACs per sample (for the analytic speed model)
+
+
+@dataclasses.dataclass
+class ParamSpec:
+    name: str
+    shape: tuple
+    layer_idx: int  # precision layer this param belongs to; -1 = fp32-only
+
+
+class Store:
+    """Positional parameter/state store with three modes (init/train/eval)."""
+
+    def __init__(self, params=None, state=None, rng=None, train=True):
+        self.initializing = params is None
+        self.params = [] if self.initializing else list(params)
+        self.state_in = [] if state is None else list(state)
+        self.state_out = []
+        self.param_specs: list[ParamSpec] = []
+        self.layer_specs: list[LayerSpec] = []
+        self._p = 0
+        self._s = 0
+        self._rng = rng
+        self.train = train
+        self.codes = None  # set by Model.apply
+        self._layer = 0
+
+    # -- precision-layer bookkeeping ------------------------------------
+    def next_code(self):
+        c = self._layer
+        self._layer += 1
+        if self.initializing:
+            return jnp.int32(api.FP32)
+        return self.codes[c]
+
+    @property
+    def current_layer(self) -> int:
+        return self._layer - 1
+
+    def add_layer_spec(self, spec: LayerSpec):
+        if self.initializing:
+            self.layer_specs.append(spec)
+
+    # -- params ----------------------------------------------------------
+    def param(self, name: str, shape, init_fn: Callable, layer_idx: int = -1):
+        if self.initializing:
+            self._rng, sub = jax.random.split(self._rng)
+            p = init_fn(sub, shape).astype(jnp.float32)
+            self.params.append(p)
+            self.param_specs.append(ParamSpec(name, tuple(shape), layer_idx))
+            return p
+        p = self.params[self._p]
+        self._p += 1
+        return p
+
+    # -- batchnorm state ---------------------------------------------------
+    def bn_state(self, shape):
+        """Returns (running_mean, running_var); caller pushes updates."""
+        if self.initializing:
+            rm = jnp.zeros(shape, jnp.float32)
+            rv = jnp.ones(shape, jnp.float32)
+            self.state_in.extend([rm, rv])
+            self.state_out.extend([rm, rv])
+            return rm, rv
+        rm = self.state_in[self._s]
+        rv = self.state_in[self._s + 1]
+        self._s += 2
+        return rm, rv
+
+    def push_bn_state(self, rm, rv):
+        if not self.initializing:
+            self.state_out.extend([rm, rv])
+
+
+# ---------------------------------------------------------------------------
+# initializers
+
+
+def he_normal(rng, shape):
+    fan_in = math.prod(shape[:-1])
+    return jax.random.normal(rng, shape) * math.sqrt(2.0 / max(fan_in, 1))
+
+
+def zeros(_rng, shape):
+    return jnp.zeros(shape)
+
+
+def ones(_rng, shape):
+    return jnp.ones(shape)
+
+
+def dense_init(rng, shape):
+    fan_in = shape[0]
+    bound = 1.0 / math.sqrt(max(fan_in, 1))
+    return jax.random.uniform(rng, shape, minval=-bound, maxval=bound)
+
+
+# ---------------------------------------------------------------------------
+# precision-aware layers (each consumes one runtime precision code)
+
+_DN = lax.conv_dimension_numbers((1, 1, 1, 1), (1, 1, 1, 1), ("NHWC", "HWIO", "NHWC"))
+
+
+def conv2d(
+    store: Store,
+    name: str,
+    x: jnp.ndarray,
+    features: int,
+    kernel: int = 3,
+    stride: int = 1,
+    groups: int = 1,
+    padding: str = "SAME",
+):
+    """Precision-adaptive conv: weights and input rounded to this layer's code."""
+    cin = x.shape[-1]
+    w = store.param(
+        name + "/w",
+        (kernel, kernel, cin // groups, features),
+        he_normal,
+        layer_idx=store._layer,  # the code this conv will consume
+    )
+    code = store.next_code()
+    if not store.initializing:
+        xq = api.qdq(x, code)
+        wq = api.qdq(w, code)
+    else:
+        xq, wq = x, w
+    dn = lax.conv_dimension_numbers(x.shape, w.shape, ("NHWC", "HWIO", "NHWC"))
+    out = lax.conv_general_dilated(
+        xq,
+        wq,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=dn,
+        feature_group_count=groups,
+    )
+    if store.initializing:
+        hw = out.shape[1] * out.shape[2]
+        macs = hw * kernel * kernel * (cin // groups) * features
+        store.add_layer_spec(
+            LayerSpec(
+                name=name,
+                kind="dwconv" if groups > 1 else "conv",
+                param_elems=int(math.prod(w.shape)),
+                act_elems=int(hw * features),
+                flops=int(macs),
+            )
+        )
+    return out
+
+
+def dense(store: Store, name: str, x: jnp.ndarray, features: int, bias: bool = True):
+    """Precision-adaptive dense head via the tiled mp_matmul Pallas kernel."""
+    cin = x.shape[-1]
+    w = store.param(name + "/w", (cin, features), dense_init, layer_idx=store._layer)
+    b = store.param(name + "/b", (features,), zeros) if bias else None
+    code = store.next_code()
+    if store.initializing:
+        out = jnp.matmul(x, w)
+    else:
+        out = api.mp_matmul(x, w, code)
+    if b is not None:
+        out = out + b
+    if store.initializing:
+        store.add_layer_spec(
+            LayerSpec(
+                name=name,
+                kind="dense",
+                param_elems=int(cin * features),
+                act_elems=int(features),
+                flops=int(cin * features),
+            )
+        )
+    return out
+
+
+def batchnorm(store: Store, name: str, x: jnp.ndarray):
+    """BatchNorm2d with running stats (state threaded through the Store).
+
+    Always fp32: AMP and the paper both keep normalization in full precision.
+    """
+    c = x.shape[-1]
+    gamma = store.param(name + "/gamma", (c,), ones)
+    beta = store.param(name + "/beta", (c,), zeros)
+    rm, rv = store.bn_state((c,))
+    if store.train or store.initializing:
+        axes = tuple(range(x.ndim - 1))
+        mean = jnp.mean(x, axis=axes)
+        var = jnp.var(x, axis=axes)
+        new_rm = (1 - BN_MOMENTUM) * rm + BN_MOMENTUM * lax.stop_gradient(mean)
+        new_rv = (1 - BN_MOMENTUM) * rv + BN_MOMENTUM * lax.stop_gradient(var)
+        store.push_bn_state(new_rm, new_rv)
+    else:
+        mean, var = rm, rv
+        store.push_bn_state(rm, rv)
+    inv = lax.rsqrt(var + BN_EPS)
+    return (x - mean) * inv * gamma + beta
+
+
+def global_avg_pool(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean(x, axis=(1, 2))
+
+
+def max_pool(x: jnp.ndarray, window: int = 2, stride: int = 2) -> jnp.ndarray:
+    return lax.reduce_window(
+        x,
+        -jnp.inf,
+        lax.max,
+        (1, window, window, 1),
+        (1, stride, stride, 1),
+        "VALID",
+    )
+
+
+# ---------------------------------------------------------------------------
+# loss / metrics
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean softmax cross-entropy; labels are int32 class ids."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    return jnp.mean(logz - ll)
+
+
+def correct_count(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jnp.sum((pred == labels.astype(jnp.int32)).astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Model wrapper
+
+
+@dataclasses.dataclass
+class Model:
+    """A built model: flat params/state plus the static specs Rust needs."""
+
+    name: str
+    num_classes: int
+    forward: Callable  # forward(store, x) -> logits
+    params: list
+    state: list
+    param_specs: list[ParamSpec]
+    layer_specs: list[LayerSpec]
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.layer_specs)
+
+    @property
+    def param_count(self) -> int:
+        return sum(math.prod(s.shape) for s in self.param_specs)
+
+    def apply(self, params, state, x, codes, train: bool):
+        """Returns (logits, new_state)."""
+        store = Store(params=params, state=state, train=train)
+        store.codes = codes
+        logits = self.forward(store, x)
+        assert store._layer == self.num_layers, (store._layer, self.num_layers)
+        return logits, store.state_out
+
+
+def build_model(name: str, num_classes: int, forward: Callable, sample_hw=(32, 32), seed=0) -> Model:
+    """Trace `forward` once in init mode to materialize params + specs."""
+    store = Store(rng=jax.random.PRNGKey(seed), train=True)
+    x = jnp.zeros((1, sample_hw[0], sample_hw[1], 3), jnp.float32)
+    forward(store, x)
+    return Model(
+        name=name,
+        num_classes=num_classes,
+        forward=forward,
+        params=store.params,
+        state=store.state_in,
+        param_specs=store.param_specs,
+        layer_specs=store.layer_specs,
+    )

@@ -1,0 +1,79 @@
+"""EfficientNet-lite — the paper's second architecture, compound-scaled
+down to CIFAR 32×32 (DESIGN.md §5 substitution: the paper runs B0 at
+224×224 from pretrained weights; we keep the architectural ingredients that
+matter for per-layer precision/curvature dynamics — MBConv inverted
+bottlenecks, depthwise convs, squeeze-excite — at a CPU-trainable size).
+
+Stem 3×3 s1 → MBConv stages (expansion 1/6, SE ¼) → 1×1 head conv →
+GAP → dense. SE squeeze convs stay fp32 (tiny, numerically sensitive —
+same policy AMP applies to softmax-adjacent ops).
+"""
+
+from __future__ import annotations
+
+import jax.nn
+import jax.numpy as jnp
+
+from . import common as C
+
+NAME = "effnet_lite"
+
+# (expansion, features, num_blocks, stride)
+STAGES = (
+    (1, 16, 1, 1),
+    (6, 24, 2, 2),  # 16x16
+    (6, 40, 2, 2),  # 8x8
+    (6, 80, 2, 2),  # 4x4
+)
+HEAD_FEATURES = 192
+
+
+def _se(store: C.Store, name: str, x, reduced: int):
+    """Squeeze-excite. Uses precision layers for its 1×1 convs (they are
+    cheap but real layers — the controller may still retune them)."""
+    s = jnp.mean(x, axis=(1, 2), keepdims=True)
+    s = C.conv2d(store, f"{name}/reduce", s, reduced, kernel=1)
+    s = jax.nn.relu(s)
+    s = C.conv2d(store, f"{name}/expand", s, x.shape[-1], kernel=1)
+    return x * jax.nn.sigmoid(s)
+
+
+def _mbconv(store: C.Store, name: str, x, expansion: int, features: int, stride: int):
+    cin = x.shape[-1]
+    mid = cin * expansion
+    out = x
+    if expansion != 1:
+        out = C.conv2d(store, f"{name}/expand", out, mid, kernel=1)
+        out = C.batchnorm(store, f"{name}/bn_expand", out)
+        out = jax.nn.relu(out)
+    out = C.conv2d(store, f"{name}/dw", out, mid, kernel=3, stride=stride, groups=mid)
+    out = C.batchnorm(store, f"{name}/bn_dw", out)
+    out = jax.nn.relu(out)
+    out = _se(store, f"{name}/se", out, max(1, cin // 4))
+    out = C.conv2d(store, f"{name}/project", out, features, kernel=1)
+    out = C.batchnorm(store, f"{name}/bn_project", out)
+    if stride == 1 and cin == features:
+        out = out + x
+    return out
+
+
+def make_forward(num_classes: int):
+    def forward(store: C.Store, x):
+        x = C.conv2d(store, "stem", x, 32, kernel=3)
+        x = C.batchnorm(store, "bn_stem", x)
+        x = jax.nn.relu(x)
+        for si, (exp, feat, nblocks, stride) in enumerate(STAGES):
+            for bi in range(nblocks):
+                s = stride if bi == 0 else 1
+                x = _mbconv(store, f"stage{si}/block{bi}", x, exp, feat, s)
+        x = C.conv2d(store, "head_conv", x, HEAD_FEATURES, kernel=1)
+        x = C.batchnorm(store, "bn_head", x)
+        x = jax.nn.relu(x)
+        x = C.global_avg_pool(x)
+        return C.dense(store, "head", x, num_classes)
+
+    return forward
+
+
+def build(num_classes: int = 10, seed: int = 0) -> C.Model:
+    return C.build_model(NAME, num_classes, make_forward(num_classes), seed=seed)

@@ -1,0 +1,50 @@
+"""CIFAR ResNet-18 (He et al. 2016), the paper's primary architecture.
+
+Standard CIFAR variant: 3×3 stem (no 7×7/maxpool), 4 stages × 2 BasicBlocks
+with widths (64, 128, 256, 512) and strides (1, 2, 2, 2), global average
+pool, dense head. 21 precision layers (17 main convs + 3 downsample convs
++ head), ~11.2M params — matching the paper's setup.
+"""
+
+from __future__ import annotations
+
+import jax.nn
+
+from . import common as C
+
+NAME = "resnet18"
+
+STAGES = ((64, 1), (128, 2), (256, 2), (512, 2))
+BLOCKS_PER_STAGE = 2
+
+
+def _basic_block(store: C.Store, name: str, x, features: int, stride: int):
+    identity = x
+    out = C.conv2d(store, f"{name}/conv1", x, features, kernel=3, stride=stride)
+    out = C.batchnorm(store, f"{name}/bn1", out)
+    out = jax.nn.relu(out)
+    out = C.conv2d(store, f"{name}/conv2", out, features, kernel=3)
+    out = C.batchnorm(store, f"{name}/bn2", out)
+    if stride != 1 or x.shape[-1] != features:
+        identity = C.conv2d(store, f"{name}/down", x, features, kernel=1, stride=stride)
+        identity = C.batchnorm(store, f"{name}/bn_down", identity)
+    return jax.nn.relu(out + identity)
+
+
+def make_forward(num_classes: int):
+    def forward(store: C.Store, x):
+        x = C.conv2d(store, "stem", x, 64, kernel=3)
+        x = C.batchnorm(store, "bn_stem", x)
+        x = jax.nn.relu(x)
+        for si, (features, stride) in enumerate(STAGES):
+            for bi in range(BLOCKS_PER_STAGE):
+                s = stride if bi == 0 else 1
+                x = _basic_block(store, f"stage{si}/block{bi}", x, features, s)
+        x = C.global_avg_pool(x)
+        return C.dense(store, "head", x, num_classes)
+
+    return forward
+
+
+def build(num_classes: int = 10, seed: int = 0) -> C.Model:
+    return C.build_model(NAME, num_classes, make_forward(num_classes), seed=seed)

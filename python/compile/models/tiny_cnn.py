@@ -1,0 +1,35 @@
+"""tiny_cnn — 3-block CNN for CIFAR (fast path for CI, quickstart, and the
+Rust integration tests). 4 precision layers: conv1..conv3 + dense head.
+~25k params, so full train-step artifacts lower in seconds.
+"""
+
+from __future__ import annotations
+
+import jax.nn
+
+from . import common as C
+
+NAME = "tiny_cnn"
+
+
+def make_forward(num_classes: int):
+    def forward(store: C.Store, x):
+        x = C.conv2d(store, "conv1", x, 16, kernel=3)
+        x = C.batchnorm(store, "bn1", x)
+        x = jax.nn.relu(x)
+        x = C.max_pool(x)  # 16x16
+        x = C.conv2d(store, "conv2", x, 32, kernel=3)
+        x = C.batchnorm(store, "bn2", x)
+        x = jax.nn.relu(x)
+        x = C.max_pool(x)  # 8x8
+        x = C.conv2d(store, "conv3", x, 64, kernel=3)
+        x = C.batchnorm(store, "bn3", x)
+        x = jax.nn.relu(x)
+        x = C.global_avg_pool(x)
+        return C.dense(store, "head", x, num_classes)
+
+    return forward
+
+
+def build(num_classes: int = 10, seed: int = 0) -> C.Model:
+    return C.build_model(NAME, num_classes, make_forward(num_classes), seed=seed)

@@ -1,0 +1,144 @@
+"""L2 train step — the single jitted computation the Rust hot loop executes.
+
+One SGD+momentum step with the paper's three control surfaces exposed as
+*runtime inputs* so the Rust coordinator can steer every knob without
+recompilation:
+
+  * `codes`      i32[L]  — per-layer precision p_l(t)           (§3.1)
+  * `lr_scales`  f32[L]  — per-layer curvature LR scaling η_l/η₀ (§3.2)
+  * `loss_scale` f32     — dynamic loss scale for FP16 layers
+  * `lr`, `wd`   f32     — cosine-schedule LR and weight decay
+
+and the control *signals* exposed as outputs:
+
+  * `grad_var`  f32[L] — per-layer gradient variance (via the fused
+                         grad_stats kernel), feeding the EMA v_l(t)
+  * `grad_norm` f32[L] — per-layer gradient L2² (diagnostics / telemetry)
+  * `overflow`  i32    — any non-finite grad → the step was skipped and the
+                         Rust side should halve the loss scale (AMP-style)
+
+Batch size is baked per artifact (PJRT executables are shape-specialized);
+the elastic controller snaps to the bucket ladder (DESIGN.md §6.2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import api
+from .models import common as C
+
+MOMENTUM = 0.9
+
+
+def _per_layer_grad_stats(model, grads):
+    """Combine per-param moments into per-precision-layer variance/norm.
+
+    Counts are static, so the weighted-moment combination is exact:
+      E[x²]_layer = Σ n_p·E[x²]_p / Σ n_p,  var = E[x²] − mean².
+    """
+    L = model.num_layers
+    sums = [jnp.float32(0.0)] * L
+    sqs = [jnp.float32(0.0)] * L
+    counts = [0] * L
+    for spec, g in zip(model.param_specs, grads):
+        li = spec.layer_idx
+        if li < 0:
+            continue  # BN/bias params don't drive precision decisions
+        n = 1
+        for d in spec.shape:
+            n *= d
+        mean, var = api.grad_stats(g)
+        sums[li] = sums[li] + n * mean
+        sqs[li] = sqs[li] + n * (var + mean * mean)
+        counts[li] += n
+    grad_var = []
+    grad_norm = []
+    for li in range(L):
+        n = max(counts[li], 1)
+        mean = sums[li] / n
+        ex2 = sqs[li] / n
+        grad_var.append(jnp.maximum(ex2 - mean * mean, 0.0))
+        grad_norm.append(sqs[li])  # Σ g² over the layer
+    return jnp.stack(grad_var), jnp.stack(grad_norm)
+
+
+def make_train_step(model):
+    """Returns train_step(params, mom, state, x, y, codes, lr_scales, lr,
+    loss_scale, wd) -> (params', mom', state', loss, correct, grad_var,
+    grad_norm, overflow)."""
+
+    layer_of_param = [s.layer_idx for s in model.param_specs]
+
+    def loss_fn(params, state, x, y, codes, loss_scale):
+        logits, new_state = model.apply(params, state, x, codes, train=True)
+        loss = C.cross_entropy(logits, y)
+        correct = C.correct_count(logits, y)
+        # Scale only the loss that produces grads; report the true loss.
+        return loss * loss_scale, (loss, correct, new_state)
+
+    def train_step(params, mom, state, x, y, codes, lr_scales, lr, loss_scale, wd):
+        params = tuple(params)
+        mom = tuple(mom)
+        state = tuple(state)
+        grads, (loss, correct, new_state) = jax.grad(loss_fn, has_aux=True)(
+            params, state, x, y, codes, loss_scale
+        )
+        inv_scale = 1.0 / loss_scale
+        grads = [g * inv_scale for g in grads]
+
+        # Overflow detection over every grad tensor (cheap reductions).
+        finite = jnp.bool_(True)
+        for g in grads:
+            finite = jnp.logical_and(finite, jnp.all(jnp.isfinite(g)))
+        overflow = jnp.logical_not(finite)
+
+        grad_var, grad_norm = _per_layer_grad_stats(model, grads)
+
+        # Fused optimizer update (L1 sgd_update kernel): one streaming
+        # pass per tensor computing g_eff/momentum/step with the overflow
+        # gate as a runtime mask -- no branch recompilation (same design
+        # as the precision codes).
+        apply_mask = jnp.where(overflow, jnp.float32(0.0), jnp.float32(1.0))
+        new_params = []
+        new_mom = []
+        for p, m, g, li in zip(params, mom, grads, layer_of_param):
+            scale = lr_scales[li] if li >= 0 else jnp.float32(1.0)
+            p_new, m_new = api.sgd_update(p, m, g, lr * scale, wd, apply_mask)
+            new_params.append(p_new)
+            new_mom.append(m_new)
+
+        # BN state also holds on overflow (the batch stats came from a
+        # poisoned forward only if activations overflowed; conservative).
+        new_state = [
+            jnp.where(overflow, old, new) for old, new in zip(state, new_state)
+        ]
+
+        return (
+            tuple(new_params),
+            tuple(new_mom),
+            tuple(new_state),
+            loss,
+            correct,
+            grad_var,
+            grad_norm,
+            overflow.astype(jnp.int32),
+        )
+
+    return train_step
+
+
+def example_args(model, batch: int):
+    """ShapeDtypeStructs for AOT lowering (order = HLO parameter order)."""
+    f32 = jnp.float32
+    sds = jax.ShapeDtypeStruct
+    params = tuple(sds(p.shape, f32) for p in model.params)
+    mom = tuple(sds(p.shape, f32) for p in model.params)
+    state = tuple(sds(s.shape, f32) for s in model.state)
+    x = sds((batch, 32, 32, 3), f32)
+    y = sds((batch,), jnp.int32)
+    codes = sds((model.num_layers,), jnp.int32)
+    lr_scales = sds((model.num_layers,), f32)
+    scalar = sds((), f32)
+    return (params, mom, state, x, y, codes, lr_scales, scalar, scalar, scalar)

@@ -1,0 +1,77 @@
+"""grad_stats fused reduction vs oracle + moment invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import grad_stats as gs_mod
+from compile.kernels import ref
+from compile.kernels.grad_stats import grad_stats
+
+
+def _rand(shape, seed=0, scale=1.0, loc=0.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(
+        rng.standard_normal(shape, dtype=np.float32) * scale + loc
+    )
+
+
+@pytest.mark.parametrize(
+    "shape", [(1,), (5,), (1024,), (3, 5, 7), (64, 3, 3, 64), (100001,)]
+)
+def test_grad_stats_matches_ref(shape):
+    g = _rand(shape, seed=hash(shape) % 2**31, scale=3.0, loc=-1.0)
+    m_k, v_k = grad_stats(g)
+    m_r, v_r = ref.grad_stats_ref(g)
+    np.testing.assert_allclose(float(m_k), float(m_r), rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(float(v_k), float(v_r), rtol=1e-4, atol=1e-7)
+
+
+def test_grad_stats_multiblock_tail():
+    n = gs_mod.BLOCK * 3 + 777
+    g = _rand((n,), seed=42, scale=2.0, loc=0.5)
+    m_k, v_k = grad_stats(g)
+    m_np = float(np.mean(np.asarray(g)))
+    v_np = float(np.var(np.asarray(g)))
+    np.testing.assert_allclose(float(m_k), m_np, rtol=1e-4)
+    np.testing.assert_allclose(float(v_k), v_np, rtol=1e-3)
+
+
+def test_constant_tensor_zero_variance():
+    g = jnp.full((4096,), 2.5, jnp.float32)
+    m, v = grad_stats(g)
+    assert abs(float(m) - 2.5) < 1e-6
+    assert float(v) >= 0.0 and float(v) < 1e-6
+
+
+def test_variance_nonnegative_after_cancellation():
+    # Catastrophic-cancellation regime: huge mean, tiny variance.
+    g = jnp.full((8192,), 1e4, jnp.float32) + _rand((8192,), seed=1, scale=1e-3)
+    _, v = grad_stats(g)
+    assert float(v) >= 0.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(1, 5000),
+    scale=st.floats(1e-3, 1e3),
+    loc=st.floats(-10, 10),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_grad_stats_hypothesis(n, scale, loc, seed):
+    g = _rand((n,), seed=seed, scale=scale, loc=loc)
+    m_k, v_k = grad_stats(g)
+    m_r, v_r = ref.grad_stats_ref(g)
+    np.testing.assert_allclose(float(m_k), float(m_r), rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(float(v_k), float(v_r), rtol=1e-3, atol=1e-6)
+
+
+def test_scaling_law():
+    # Var[c·g] = c²·Var[g] — the invariant the precision controller's
+    # loss-scale compensation relies on.
+    g = _rand((2048,), seed=3)
+    _, v1 = grad_stats(g)
+    _, v4 = grad_stats(4.0 * g)
+    np.testing.assert_allclose(float(v4), 16.0 * float(v1), rtol=1e-4)

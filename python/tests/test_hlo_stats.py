@@ -1,0 +1,82 @@
+"""hlo_stats parser against a hand-written HLO snippet and (if present)
+a real artifact."""
+
+import pathlib
+import textwrap
+
+from compile.hlo_stats import ArtifactStats, elems, parse_shape
+
+SNIPPET = textwrap.dedent(
+    """\
+    HloModule test
+
+    ENTRY main.1 {
+      Arg_0.1 = f32[8,32,32,3]{3,2,1,0} parameter(0)
+      Arg_1.1 = f32[3,3,3,16]{3,2,1,0} parameter(1)
+      Arg_2.1 = f32[256,10]{1,0} parameter(2)
+      convolution.1 = f32[8,32,32,16]{3,2,1,0} convolution(Arg_0.1, Arg_1.1), window={size=3x3 pad=1_1x1_1}, dim_labels=b01f_01io->b01f
+      reshape.1 = f32[8,256]{1,0} reshape(convolution.1)
+      dot.1 = f32[8,10]{1,0} dot(reshape.1, Arg_2.1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      add.1 = f32[8,10]{1,0} add(dot.1, dot.1)
+      ROOT tuple.1 = (f32[8,10]{1,0}) tuple(add.1)
+    }
+    """
+)
+
+
+def write_snippet(tmp_path):
+    p = tmp_path / "snippet.hlo.txt"
+    p.write_text(SNIPPET)
+    return p
+
+
+def test_parse_shape():
+    dt, dims, _ = parse_shape("f32[8,32,32,3]{3,2,1,0}")
+    assert dt == "f32" and dims == [8, 32, 32, 3]
+    dt, dims, _ = parse_shape("s32[] parameter(0)")
+    assert dt == "s32" and dims == []
+    assert elems([2, 3, 4]) == 24
+    assert elems([]) == 1
+
+
+def test_op_histogram(tmp_path):
+    s = ArtifactStats(write_snippet(tmp_path))
+    assert s.ops["convolution"] == 1
+    assert s.ops["dot"] == 1
+    assert s.ops["add"] == 1
+    assert s.ops["reshape"] == 1
+
+
+def test_conv_and_dot_flops(tmp_path):
+    s = ArtifactStats(write_snippet(tmp_path))
+    # conv: 2 * prod(8,32,32,16) * (3*3*3*16)/16 = 2*131072*27
+    conv = 2 * (8 * 32 * 32 * 16) * (3 * 3 * 3)
+    # dot: 2 * prod(8,10) * (prod(8,256)/8) = 2*80*256
+    dot = 2 * 80 * 256
+    assert s.flops == conv + dot
+
+
+def test_param_and_output_bytes(tmp_path):
+    s = ArtifactStats(write_snippet(tmp_path))
+    want_params = 4 * (8 * 32 * 32 * 3 + 3 * 3 * 3 * 16 + 256 * 10)
+    assert s.param_bytes == want_params
+    assert s.out_bytes == 4 * 8 * 10
+    assert s.intensity > 0
+
+
+def test_no_duplicate_smell_in_snippet(tmp_path):
+    s = ArtifactStats(write_snippet(tmp_path))
+    assert s.duplicate_convs() == {}
+
+
+def test_real_artifact_if_present():
+    art = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+    f = art / "tiny_cnn_c10_train_b32.hlo.txt"
+    if not f.exists():
+        return  # artifacts not built in this checkout
+    s = ArtifactStats(f)
+    assert s.ops["convolution"] >= 3, "tiny_cnn has 3 convs in fwd alone"
+    assert s.flops > 1e6
+    assert s.total_ops > 100
+    report = s.report()
+    assert "estFLOPs" in report

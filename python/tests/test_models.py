@@ -1,0 +1,126 @@
+"""Model zoo: shapes, parameter accounting, BN state, precision plumbing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import models
+from compile.kernels import api
+
+
+def _batch(b=4, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((b, 32, 32, 3), dtype=np.float32))
+    return x
+
+
+@pytest.mark.parametrize("name", ["tiny_cnn", "resnet18", "effnet_lite"])
+def test_build_and_forward_shapes(name):
+    m = models.build(name, num_classes=10)
+    x = _batch(2)
+    codes = jnp.full((m.num_layers,), api.FP32, jnp.int32)
+    logits, new_state = m.apply(m.params, m.state, x, codes, train=True)
+    assert logits.shape == (2, 10)
+    assert len(new_state) == len(m.state)
+    assert all(a.shape == b.shape for a, b in zip(new_state, m.state))
+
+
+def test_resnet18_matches_paper_scale():
+    m = models.build("resnet18", num_classes=10)
+    # He et al. CIFAR ResNet-18 ≈ 11.17M params; paper reports ~11.2M-class.
+    assert 11_000_000 < m.param_count < 11_300_000
+    assert m.num_layers == 21  # 17 convs + 3 downsample + head
+
+
+def test_num_classes_changes_head_only():
+    m10 = models.build("resnet18", num_classes=10)
+    m100 = models.build("resnet18", num_classes=100)
+    assert m100.param_count - m10.param_count == 512 * 90 + 90  # w + b
+
+
+@pytest.mark.parametrize("name", ["tiny_cnn", "effnet_lite"])
+def test_param_specs_match_params(name):
+    m = models.build(name)
+    assert len(m.param_specs) == len(m.params)
+    for spec, p in zip(m.param_specs, m.params):
+        assert tuple(spec.shape) == tuple(p.shape)
+    # Every precision layer owns exactly one quantizable weight tensor.
+    owners = [s.layer_idx for s in m.param_specs if s.layer_idx >= 0]
+    assert sorted(owners) == list(range(m.num_layers))
+
+
+def test_layer_specs_accounting():
+    m = models.build("tiny_cnn")
+    specs = {ls.name: ls for ls in m.layer_specs}
+    assert specs["conv1"].param_elems == 3 * 3 * 3 * 16
+    assert specs["conv1"].act_elems == 32 * 32 * 16
+    assert specs["conv2"].act_elems == 16 * 16 * 32
+    assert specs["head"].kind == "dense"
+    assert specs["head"].param_elems == 64 * 10
+
+
+def test_bn_state_updates_in_train_mode():
+    m = models.build("tiny_cnn")
+    x = _batch(8, seed=1) * 5.0 + 2.0
+    codes = jnp.full((m.num_layers,), api.FP32, jnp.int32)
+    _, new_state = m.apply(m.params, m.state, x, codes, train=True)
+    changed = [
+        not np.allclose(np.asarray(a), np.asarray(b))
+        for a, b in zip(new_state, m.state)
+    ]
+    assert all(changed), "all running stats must move on a non-trivial batch"
+    # Eval mode must NOT change state.
+    _, eval_state = m.apply(m.params, m.state, x, codes, train=False)
+    for a, b in zip(eval_state, m.state):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_precision_codes_change_output():
+    m = models.build("tiny_cnn")
+    x = _batch(4, seed=2)
+    full = jnp.full((m.num_layers,), api.FP32, jnp.int32)
+    half = jnp.full((m.num_layers,), api.FP16, jnp.int32)
+    l32, _ = m.apply(m.params, m.state, x, full, train=False)
+    l16, _ = m.apply(m.params, m.state, x, half, train=False)
+    assert not np.allclose(np.asarray(l32), np.asarray(l16))
+    # ... but not by much: fp16 on a well-scaled net is a small perturbation.
+    np.testing.assert_allclose(np.asarray(l32), np.asarray(l16), atol=0.1)
+
+
+def test_per_layer_codes_are_independent():
+    m = models.build("tiny_cnn")
+    x = _batch(4, seed=3)
+    base = jnp.full((m.num_layers,), api.FP32, jnp.int32)
+    one16 = base.at[0].set(api.FP16)
+    l_base, _ = m.apply(m.params, m.state, x, base, train=False)
+    l_one, _ = m.apply(m.params, m.state, x, one16, train=False)
+    assert not np.allclose(np.asarray(l_base), np.asarray(l_one))
+
+
+def test_ref_and_pallas_backends_agree():
+    m = models.build("tiny_cnn")
+    x = _batch(4, seed=4)
+    codes = jnp.asarray([0, 1, 2, 1], jnp.int32)
+    lp, _ = m.apply(m.params, m.state, x, codes, train=False)
+    with api.backend("ref"):
+        lr_, _ = m.apply(m.params, m.state, x, codes, train=False)
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(lr_), rtol=1e-5, atol=1e-5)
+
+
+def test_init_is_seed_deterministic():
+    a = models.build("tiny_cnn", seed=7)
+    b = models.build("tiny_cnn", seed=7)
+    c = models.build("tiny_cnn", seed=8)
+    for pa, pb in zip(a.params, b.params):
+        np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
+    assert any(
+        not np.array_equal(np.asarray(pa), np.asarray(pc))
+        for pa, pc in zip(a.params, c.params)
+    )
+
+
+def test_effnet_has_depthwise_layers():
+    m = models.build("effnet_lite")
+    kinds = {ls.kind for ls in m.layer_specs}
+    assert "dwconv" in kinds and "conv" in kinds and "dense" in kinds

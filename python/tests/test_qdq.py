@@ -1,0 +1,128 @@
+"""qdq Pallas kernel vs pure-jnp oracle — the core numeric-format contract."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import qdq as qdq_mod
+from compile.kernels import ref
+from compile.kernels.qdq import qdq
+
+CODES = [ref.FP16, ref.BF16, ref.FP32]
+
+
+def _rand(shape, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32) * scale)
+
+
+@pytest.mark.parametrize("code", CODES)
+@pytest.mark.parametrize(
+    "shape", [(7,), (128,), (3, 5), (32, 32, 3), (257,), (2, 130, 130)]
+)
+def test_qdq_matches_ref(code, shape):
+    x = _rand(shape, seed=hash((code, shape)) % 2**31)
+    got = qdq(x, jnp.int32(code))
+    want = ref.qdq_ref(x, code)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("code", CODES)
+def test_qdq_large_multiblock(code):
+    # > BLOCK elements with a non-divisible tail — exercises grid + padding.
+    n = qdq_mod.BLOCK * 2 + 12345
+    x = _rand((n,), seed=1, scale=100.0)
+    got = qdq(x, jnp.int32(code))
+    want = ref.qdq_ref(x, code)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fp32_is_identity():
+    x = _rand((1000,), seed=2, scale=1e30)
+    np.testing.assert_array_equal(np.asarray(qdq(x, jnp.int32(ref.FP32))), np.asarray(x))
+
+
+def test_fp16_overflows_to_inf():
+    x = jnp.asarray([1e6, -1e6, 65504.0, 65520.0], jnp.float32)
+    out = np.asarray(qdq(x, jnp.int32(ref.FP16)))
+    assert np.isinf(out[0]) and np.isinf(out[1]) and out[1] < 0
+    assert out[2] == 65504.0  # max finite fp16 survives
+    assert np.isinf(out[3])  # rounds up past max finite
+
+
+def test_bf16_keeps_fp32_range():
+    x = jnp.asarray([1e38, -1e38, 1e-38], jnp.float32)
+    out = np.asarray(qdq(x, jnp.int32(ref.BF16)))
+    assert np.all(np.isfinite(out))
+
+
+def test_bf16_round_to_nearest_even():
+    # 1 + 2^-8 is exactly between bf16(1.0) and bf16(1+2^-7): ties-to-even → 1.0
+    x = jnp.asarray([1.0 + 2.0**-8], jnp.float32)
+    out = np.asarray(qdq(x, jnp.int32(ref.BF16)))
+    assert out[0] == 1.0
+
+
+def test_qdq_idempotent():
+    x = _rand((4096,), seed=3, scale=10.0)
+    for code in CODES:
+        once = qdq(x, jnp.int32(code))
+        twice = qdq(once, jnp.int32(code))
+        np.testing.assert_array_equal(np.asarray(once), np.asarray(twice))
+
+
+def test_qdq_grad_is_quantized():
+    # The custom_vjp rounds the cotangent to the same precision.
+    x = _rand((64,), seed=4)
+
+    def f(x):
+        return jnp.sum(qdq(x, jnp.int32(ref.BF16)) * 3.14159)
+
+    g = jax.grad(f)(x)
+    expected = ref.qdq_ref(jnp.full((64,), 3.14159, jnp.float32), ref.BF16)
+    np.testing.assert_array_equal(np.asarray(g), np.asarray(expected))
+
+
+def test_qdq_grad_fp32_identity():
+    x = _rand((64,), seed=5)
+    g = jax.grad(lambda x: jnp.sum(qdq(x, jnp.int32(ref.FP32)) ** 2))(x)
+    np.testing.assert_allclose(np.asarray(g), 2 * np.asarray(x), rtol=1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=2048),
+    code=st.sampled_from(CODES),
+    scale=st.floats(min_value=1e-6, max_value=1e6),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_qdq_hypothesis_matches_ref(n, code, scale, seed):
+    x = _rand((n,), seed=seed, scale=scale)
+    got = qdq(x, jnp.int32(code))
+    want = ref.qdq_ref(x, code)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    code=st.sampled_from([ref.FP16, ref.BF16]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_qdq_error_bounded_by_ulp(code, seed):
+    x = _rand((512,), seed=seed)
+    out = np.asarray(qdq(x, jnp.int32(code)))
+    # Relative error ≤ 2^-mantissa_bits (11 for fp16, 8 for bf16).
+    rel = 2.0 ** -(11 if code == ref.FP16 else 8)
+    np.testing.assert_allclose(out, np.asarray(x), rtol=rel, atol=1e-7)
+
+
+def test_qdq_under_jit():
+    x = _rand((300,), seed=6)
+    f = jax.jit(lambda x, c: qdq(x, c))
+    for code in CODES:
+        got = f(x, jnp.int32(code))
+        want = ref.qdq_ref(x, code)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

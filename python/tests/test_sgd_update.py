@@ -1,0 +1,97 @@
+"""L1 sgd_update Pallas kernel vs the pure-jnp oracle, plus semantic
+checks of the fused overflow gate and momentum accumulation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import api, ref
+from compile.kernels import sgd_update as k
+
+
+def rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+@pytest.mark.parametrize(
+    "shape",
+    [(7,), (32,), (8, 8), (3, 3, 3, 16), (1,), (257,), (64 * 1024 + 3,)],
+)
+def test_matches_ref_across_shapes(shape):
+    p, m, g = rand(shape, 0), rand(shape, 1), rand(shape, 2)
+    got_p, got_m = k.sgd_update(p, m, g, 0.1, 5e-4, 1.0)
+    want_p, want_m = ref.sgd_update_ref(p, m, g, 0.1, 5e-4, 1.0)
+    np.testing.assert_allclose(got_p, want_p, rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(got_m, want_m, rtol=1e-6, atol=1e-7)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=2048),
+    lr=st.floats(min_value=1e-5, max_value=1.0),
+    wd=st.floats(min_value=0.0, max_value=0.1),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_matches_ref_hypothesis(n, lr, wd, seed):
+    p, m, g = rand((n,), seed), rand((n,), seed + 1), rand((n,), seed + 2)
+    got_p, got_m = k.sgd_update(p, m, g, lr, wd, 1.0)
+    want_p, want_m = ref.sgd_update_ref(p, m, g, lr, wd, 1.0)
+    np.testing.assert_allclose(got_p, want_p, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(got_m, want_m, rtol=1e-5, atol=1e-6)
+
+
+def test_mask_zero_holds_params_and_momentum():
+    p, m, g = rand((100,), 3), rand((100,), 4), rand((100,), 5)
+    got_p, got_m = k.sgd_update(p, m, g, 0.1, 5e-4, 0.0)
+    np.testing.assert_array_equal(np.asarray(got_p), np.asarray(p))
+    np.testing.assert_array_equal(np.asarray(got_m), np.asarray(m))
+
+
+def test_momentum_accumulates_like_sgd():
+    # Two steps with constant gradient: m2 = μ(μ·0 + g) + g = (1+μ)g.
+    p = jnp.zeros((10,))
+    m = jnp.zeros((10,))
+    g = jnp.ones((10,))
+    p1, m1 = k.sgd_update(p, m, g, 1.0, 0.0, 1.0)
+    p2, m2 = k.sgd_update(p1, m1, g, 1.0, 0.0, 1.0)
+    mu = ref.SGD_MOMENTUM
+    np.testing.assert_allclose(m2, (1 + mu) * np.ones(10), rtol=1e-6)
+    np.testing.assert_allclose(p2, -(1.0 + (1 + mu)) * np.ones(10), rtol=1e-6)
+
+
+def test_weight_decay_pulls_toward_zero():
+    p = jnp.full((10,), 2.0)
+    m = jnp.zeros((10,))
+    g = jnp.zeros((10,))
+    p1, _ = k.sgd_update(p, m, g, 0.1, 0.5, 1.0)
+    assert np.all(np.asarray(p1) < 2.0)
+
+
+def test_api_dispatch_backends_agree():
+    p, m, g = rand((500,), 7), rand((500,), 8), rand((500,), 9)
+    with api.backend("pallas"):
+        a = api.sgd_update(p, m, g, 0.05, 1e-4, 1.0)
+    with api.backend("ref"):
+        b = api.sgd_update(p, m, g, 0.05, 1e-4, 1.0)
+    np.testing.assert_allclose(a[0], b[0], rtol=2e-5, atol=1e-6)
+    np.testing.assert_allclose(a[1], b[1], rtol=2e-5, atol=1e-6)
+
+
+def test_jit_and_block_boundary():
+    # Exactly one block and one block + 1 (padding path), jitted.
+    for n in (k.BLOCK, k.BLOCK + 1):
+        p, m, g = rand((n,), 10), rand((n,), 11), rand((n,), 12)
+        f = jax.jit(lambda p, m, g: k.sgd_update(p, m, g, 0.1, 0.0, 1.0))
+        got_p, got_m = f(p, m, g)
+        want_p, want_m = ref.sgd_update_ref(p, m, g, 0.1, 0.0, 1.0)
+        np.testing.assert_allclose(got_p, want_p, rtol=2e-5, atol=1e-6)
+        np.testing.assert_allclose(got_m, want_m, rtol=2e-5, atol=1e-6)
+
+
+def test_momentum_constant_consistent_with_train_graph():
+    from compile import train_graph
+
+    assert train_graph.MOMENTUM == ref.SGD_MOMENTUM == k.MOMENTUM

@@ -1,0 +1,94 @@
+"""Stochastic-rounding qdq: oracle match + unbiasedness property."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import ref
+from compile.kernels.sr_qdq import sr_qdq
+
+CODES = [ref.FP16, ref.BF16, ref.FP32]
+
+
+def _rand(shape, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32) * scale)
+
+
+def _noise(shape, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.random(shape, dtype=np.float32))
+
+
+@pytest.mark.parametrize("code", CODES)
+@pytest.mark.parametrize("shape", [(17,), (1024,), (3, 7, 11)])
+def test_sr_qdq_matches_ref(code, shape):
+    x = _rand(shape, seed=hash((code, shape)) % 2**31, scale=5.0)
+    noise = _noise(shape, seed=1)
+    got = sr_qdq(x, noise, jnp.int32(code))
+    want = ref.sr_qdq_ref(x, noise, code)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_sr_output_is_bf16_representable():
+    x = _rand((4096,), seed=2, scale=3.0)
+    out = np.asarray(sr_qdq(x, _noise((4096,), seed=3), jnp.int32(ref.BF16)))
+    rt = out.astype(np.float32).view(np.uint32)
+    assert np.all((rt & 0xFFFF) == 0), "all outputs must have zero low mantissa bits"
+
+
+def test_sr_is_unbiased_in_expectation():
+    # E[sr(x)] ≈ x — the whole point vs round-to-nearest.
+    x = jnp.full((1,), 1.0 + 2.0**-9, jnp.float32)  # strictly between bf16 grid pts
+    trials = 4000
+    rng = np.random.default_rng(4)
+    noise = jnp.asarray(rng.random((trials,), dtype=np.float32))
+    xs = jnp.broadcast_to(x, (trials,))
+    out = np.asarray(sr_qdq(xs, noise, jnp.int32(ref.BF16)))
+    assert abs(out.mean() - float(x[0])) < 2.0**-9 * 0.15
+
+
+def test_sr_exact_values_pass_through():
+    x = jnp.asarray([1.0, 2.0, 0.0, -4.0, 0.5], jnp.float32)  # bf16-exact
+    out = np.asarray(sr_qdq(x, _noise((5,), seed=5), jnp.int32(ref.BF16)))
+    np.testing.assert_array_equal(out, np.asarray(x))
+
+
+def test_sr_fp32_identity_any_noise():
+    x = _rand((256,), seed=6, scale=1e8)
+    out = sr_qdq(x, _noise((256,), seed=7), jnp.int32(ref.FP32))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+
+
+def test_sr_gradient_is_straight_through():
+    x = _rand((64,), seed=8)
+    noise = _noise((64,), seed=9)
+    g = jax.grad(lambda x: jnp.sum(sr_qdq(x, noise, jnp.int32(ref.BF16)) * 2.0))(x)
+    np.testing.assert_array_equal(np.asarray(g), np.full((64,), 2.0, np.float32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 1024),
+    code=st.sampled_from(CODES),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sr_hypothesis_matches_ref(n, code, seed):
+    x = _rand((n,), seed=seed, scale=10.0)
+    noise = _noise((n,), seed=seed + 1)
+    got = sr_qdq(x, noise, jnp.int32(code))
+    want = ref.sr_qdq_ref(x, noise, code)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_sr_within_one_ulp(seed):
+    x = _rand((512,), seed=seed)
+    out = np.asarray(sr_qdq(x, _noise((512,), seed=seed + 1), jnp.int32(ref.BF16)))
+    # SR picks one of the two bracketing grid points → error ≤ 1 bf16 ULP,
+    # which is up to 2^-7 relative to values just above a binade boundary.
+    np.testing.assert_allclose(out, np.asarray(x), rtol=2.0**-7 + 1e-9, atol=1e-30)

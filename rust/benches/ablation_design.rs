@@ -1,0 +1,75 @@
+//! Design-choice ablations (DESIGN.md §6) — the decisions the paper
+//! leaves implicit, measured so EXPERIMENTS.md can justify them:
+//!
+//!   A1  auto-thresholding vs the paper's fixed τ_low/τ_high
+//!   A2  curvature LR-scaling on/off (η_l = η₀/(1+α·λ) vs η₀)
+//!   A3  batch-growth cooldown 0 vs tuned (oscillation damping)
+//!   A4  linear LR/batch scaling on/off under elastic batching
+//!
+//! Env knobs: AB_STEPS, AB_EPOCHS, AB_SEEDS, AB_MODEL.
+
+use tri_accel::config::{Config, Method};
+use tri_accel::harness::{self, quick_budget};
+use tri_accel::runtime::Engine;
+
+fn env_usize(k: &str, d: usize) -> usize {
+    std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+}
+
+fn main() {
+    let engine = Engine::new(std::path::Path::new("artifacts"))
+        .expect("run `make artifacts` first");
+    let steps = env_usize("AB_STEPS", 30);
+    let epochs = env_usize("AB_EPOCHS", 2);
+    let seeds: Vec<u64> = std::env::var("AB_SEEDS")
+        .unwrap_or_else(|_| "0,1".into())
+        .split(',')
+        .map(|s| s.parse().unwrap())
+        .collect();
+    let model = std::env::var("AB_MODEL").unwrap_or_else(|_| "tiny_cnn_c10".into());
+    let base = quick_budget(steps, epochs);
+
+    type Tweak = Box<dyn Fn(&mut Config)>;
+    let variants: Vec<(&str, Tweak)> = vec![
+        ("baseline (all defaults)", Box::new(|_: &mut Config| {})),
+        (
+            "A1: fixed τ (no auto-threshold)",
+            Box::new(|c: &mut Config| {
+                c.auto_threshold = false;
+            }),
+        ),
+        (
+            "A2: curvature LR-scaling off",
+            Box::new(|c: &mut Config| {
+                c.ablation.curvature = false;
+            }),
+        ),
+        (
+            "A3: batch cooldown 0",
+            Box::new(|c: &mut Config| {
+                c.batch_cooldown = 0;
+            }),
+        ),
+        (
+            "A4: linear LR/batch scaling",
+            Box::new(|c: &mut Config| {
+                c.lr_batch_scaling = true;
+            }),
+        ),
+    ];
+
+    println!(
+        "== design ablations — {model}, Tri-Accel, {} seed(s) × {steps} steps × {epochs} epochs ==",
+        seeds.len()
+    );
+    for (label, tweak) in &variants {
+        let t = |cfg: &mut Config| {
+            base(cfg);
+            tweak(cfg);
+        };
+        let cell = harness::run_cell(&engine, &model, Method::TriAccel, label, &seeds, &t)
+            .expect("ablation cell");
+        println!("{}", cell.row());
+    }
+    println!("\n(rows share data/seeds; deltas isolate each design choice.)");
+}

@@ -1,0 +1,46 @@
+//! Adaptive-behaviour figure bench (DESIGN.md F1): the abstract's
+//! "efficiency gradually improving over the course of training" series
+//! plus the §4.2 effective-batch-size trace, for one Tri-Accel run.
+//!
+//! Env knobs: FIG_STEPS, FIG_EPOCHS, FIG_MODEL, FIG_SEED.
+
+use tri_accel::harness;
+use tri_accel::runtime::Engine;
+
+fn env_usize(k: &str, d: usize) -> usize {
+    std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+}
+
+fn main() {
+    let engine = Engine::new(std::path::Path::new("artifacts"))
+        .expect("run `make artifacts` first");
+    let steps = env_usize("FIG_STEPS", 12);
+    let epochs = env_usize("FIG_EPOCHS", 4);
+    let seed = env_usize("FIG_SEED", 0) as u64;
+    let model = std::env::var("FIG_MODEL").unwrap_or_else(|_| "tiny_cnn_c10".into());
+
+    println!("== bench fig_adaptive — {model}, Tri-Accel, seed {seed} ==");
+    let t = harness::fig_adaptive(&engine, &model, seed, &harness::quick_budget(steps, epochs))
+        .expect("fig run");
+
+    println!("{:>5} {:>10}  {:>18}", "epoch", "eff_score", "fp16/bf16/fp32");
+    for ((e, s), (_, f16, b16, f32_)) in t.epoch_eff.iter().zip(&t.mix_trace) {
+        let bar = "#".repeat((s * 2.0).min(60.0) as usize);
+        println!("{e:>5} {s:>10.3}  {f16:>5.2}/{b16:.2}/{f32_:.2}  {bar}");
+    }
+
+    println!("\nbatch-size trace (step → B):");
+    for (st, b) in &t.batch_trace {
+        println!("  {st:>6} → {b}");
+    }
+
+    // Shape check: late-training efficiency ≥ early (the adaptive claim).
+    if t.epoch_eff.len() >= 2 {
+        let early = t.epoch_eff[0].1;
+        let late = t.epoch_eff.last().unwrap().1;
+        println!(
+            "\nshape: efficiency trend {} (early {early:.3} → late {late:.3}; paper: gradually improving)",
+            if late >= early { "OK" } else { "MISS" }
+        );
+    }
+}

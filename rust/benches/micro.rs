@@ -1,0 +1,92 @@
+//! Micro benchmarks (DESIGN.md P1): hot-path component latencies —
+//! train-step per batch bucket and precision mix, eval, curvature probe,
+//! pure controller overhead, memsim accounting, and the data pipeline.
+//! The controller/memsim rows quantify the paper's "negligible overhead"
+//! claim: control-loop work must be orders of magnitude below a step.
+
+use tri_accel::config::{Config, Method};
+use tri_accel::coordinator::Controller;
+use tri_accel::data::{synthetic::SyntheticCifar, BatchIter};
+use tri_accel::manifest::{BF16, FP16, FP32};
+use tri_accel::memsim::VramSim;
+use tri_accel::runtime::{Engine, Session, StepCtrl};
+use tri_accel::util::bench::{black_box, Bencher};
+
+fn main() {
+    let engine = Engine::new(std::path::Path::new("artifacts"))
+        .expect("run `make artifacts` first");
+    let key = "tiny_cnn_c10";
+    let entry = engine.manifest.model(key).unwrap().clone();
+    let n_layers = entry.num_layers;
+
+    println!("== micro: L3 hot path ({key}) ==");
+    let heavy = Bencher::heavy();
+    let quick = Bencher::default();
+
+    // -- data pipeline ----------------------------------------------------
+    let ds = SyntheticCifar::new(10, 4096, true, 0);
+    let mut it = BatchIter::new(Box::new(ds), 0, true);
+    quick.run("data/next_batch(B=32, augmented)", || {
+        black_box(it.next_batch(32).unwrap());
+    });
+
+    // -- train step per bucket ---------------------------------------------
+    let mut session = Session::init(&engine, key, 0).unwrap();
+    for &b in &[16usize, 32, 64, 96] {
+        if !entry.train_buckets.contains(&b) {
+            continue;
+        }
+        let batch = it.next_batch(b).unwrap();
+        let ctrl = StepCtrl::uniform(n_layers, BF16, 0.05, 5e-4);
+        heavy.run(&format!("train_step(B={b}, bf16)"), || {
+            black_box(session.train_step(&batch, &ctrl).unwrap());
+        });
+    }
+
+    // -- precision mix sensitivity at fixed B -------------------------------
+    let batch = it.next_batch(32).unwrap();
+    for (name, code) in [("fp16", FP16), ("bf16", BF16), ("fp32", FP32)] {
+        let ctrl = StepCtrl::uniform(n_layers, code, 0.05, 5e-4);
+        heavy.run(&format!("train_step(B=32, uniform {name})"), || {
+            black_box(session.train_step(&batch, &ctrl).unwrap());
+        });
+    }
+
+    // -- eval + curvature ---------------------------------------------------
+    let eval_b = it.next_batch(16).unwrap();
+    let codes = vec![FP32; n_layers];
+    heavy.run("eval_batch(B=16)", || {
+        black_box(session.eval_batch(&eval_b, &codes).unwrap());
+    });
+    let curv_b = it.next_batch(entry.curv_batch).unwrap();
+    heavy.run(&format!("curv_step(B={})", entry.curv_batch), || {
+        black_box(session.curv_step(&curv_b, &codes, 7).unwrap());
+    });
+
+    // -- controller-only overhead (the paper's "negligible" claim) ----------
+    let mut cfg = Config::cell(key, Method::TriAccel, 0);
+    cfg.t_ctrl = 1;
+    let mut ctl = Controller::new(&cfg, &entry);
+    let vars: Vec<f32> = (0..n_layers).map(|i| 1e-6 * (i + 1) as f32).collect();
+    quick.run("controller/observe_step", || {
+        ctl.observe_step(black_box(&vars), false);
+    });
+    let mut step = 0u64;
+    quick.run("controller/control_window", || {
+        step += 1;
+        black_box(ctl.control_window(step, 0.8, 1.0, |_| true));
+    });
+
+    // -- memsim accounting ---------------------------------------------------
+    let mut sim = VramSim::new(&entry, 0.45, 0.01, 0);
+    let codes2: Vec<i32> = (0..n_layers).map(|i| (i % 3) as i32).collect();
+    quick.run("memsim/usage", || {
+        black_box(sim.usage(96, &codes2, false));
+    });
+    quick.run("memsim/would_fit", || {
+        black_box(sim.would_fit(128, &codes2, false));
+    });
+
+    println!("\n(controller+memsim rows are the per-step control overhead;");
+    println!(" compare against the train_step rows — expect ≥1000× headroom.)");
+}

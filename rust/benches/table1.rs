@@ -1,0 +1,58 @@
+//! Table-1 regeneration bench (DESIGN.md T1): 12 cells of
+//! (CIFAR-10/100 × ResNet-18/EffNet-lite × FP32/AMP/Tri-Accel) at a
+//! reduced budget. Full-budget reproduction: `cargo run --release
+//! --example reproduce_tables -- --steps 100 --epochs 5`.
+//!
+//! Env knobs: T1_STEPS, T1_EPOCHS, T1_SEEDS, T1_MODELS.
+
+use tri_accel::harness;
+use tri_accel::runtime::Engine;
+
+fn env_usize(k: &str, d: usize) -> usize {
+    std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+}
+
+fn main() {
+    let engine = Engine::new(std::path::Path::new("artifacts"))
+        .expect("run `make artifacts` first");
+    let steps = env_usize("T1_STEPS", 6);
+    let epochs = env_usize("T1_EPOCHS", 1);
+    let seeds: Vec<u64> = std::env::var("T1_SEEDS")
+        .unwrap_or_else(|_| "0".into())
+        .split(',')
+        .map(|s| s.parse().unwrap())
+        .collect();
+    let models_env = std::env::var("T1_MODELS")
+        .unwrap_or_else(|_| "resnet18_c10,effnet_lite_c10".into()); // full grid: add the _c100 keys via T1_MODELS
+    let keys: Vec<&str> = models_env.split(',').collect();
+
+    println!("== bench table1: {steps} steps × {epochs} epochs × {} seed(s) ==", seeds.len());
+    let t0 = std::time::Instant::now();
+    let rows = harness::table1(&engine, &keys, &seeds, &harness::quick_budget(steps, epochs))
+        .expect("table1 run");
+    harness::print_table1(&rows);
+    println!("\nshape checks vs paper Table 1:");
+    for chunk in rows.chunks(3) {
+        let (fp32, amp, tri) = (&chunk[0], &chunk[1], &chunk[2]);
+        // Robust shape: both reduced-precision methods strictly below
+        // FP32. Tri-Accel vs AMP is regime-dependent (paper's 3%
+        // advantage needs a net batch shrink; our band holds) — the
+        // delta is reported alongside rather than asserted.
+        let mem_ok = amp.peak_gb.mean() < fp32.peak_gb.mean()
+            && tri.peak_gb.mean() < fp32.peak_gb.mean();
+        let tri_vs_amp =
+            100.0 * (tri.peak_gb.mean() - amp.peak_gb.mean()) / amp.peak_gb.mean();
+        let time_ok = tri.modeled_s.mean() < fp32.modeled_s.mean();
+        let score_ok = tri.score.mean() > fp32.score.mean();
+        println!(
+            "  {:<18} mem order {}  time order {}  score order {}  tri-vs-amp mem {:+.1}% (paper −3%..0%)   [{}]",
+            fp32.model_key,
+            if mem_ok { "OK " } else { "MISS" },
+            if time_ok { "OK " } else { "MISS" },
+            if score_ok { "OK " } else { "MISS" },
+            tri_vs_amp,
+            harness::headline(fp32, tri)
+        );
+    }
+    println!("total bench wallclock: {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,243 @@
+//! Checkpointing substrate: save/restore a training session (params,
+//! momentum, BN state, controller step) to a single binary file, so long
+//! table-regeneration runs survive interruption and runs can be resumed
+//! or evaluated offline.
+//!
+//! Format (little-endian, versioned):
+//!
+//! ```text
+//! magic "TRIACCEL"  u32 version  u32 model_key_len  model_key bytes
+//! u64 step  u32 n_tensors  then per tensor:
+//!   u32 name_len  name  u32 ndim  u64 dims[ndim]  f32 data[prod(dims)]
+//! u64 crc  (FNV-1a over everything before it)
+//! ```
+//!
+//! Tensors are stored by *role/index* name (`param/3`, `mom/3`,
+//! `state/1`), validated against the manifest on load — loading a
+//! checkpoint into a different model is an error, not a crash.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+const MAGIC: &[u8; 8] = b"TRIACCEL";
+const VERSION: u32 = 1;
+
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub name: String,
+    pub dims: Vec<u64>,
+    pub data: Vec<f32>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    pub model_key: String,
+    pub step: u64,
+    pub tensors: Vec<Tensor>,
+}
+
+/// FNV-1a over a byte stream (substrate — no crc crates offline).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        let key = self.model_key.as_bytes();
+        buf.extend_from_slice(&(key.len() as u32).to_le_bytes());
+        buf.extend_from_slice(key);
+        buf.extend_from_slice(&self.step.to_le_bytes());
+        buf.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
+        for t in &self.tensors {
+            let name = t.name.as_bytes();
+            buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            buf.extend_from_slice(name);
+            buf.extend_from_slice(&(t.dims.len() as u32).to_le_bytes());
+            for &d in &t.dims {
+                buf.extend_from_slice(&d.to_le_bytes());
+            }
+            let elems: u64 = t.dims.iter().product();
+            anyhow::ensure!(
+                elems as usize == t.data.len(),
+                "tensor {}: dims {:?} vs data {}",
+                t.name,
+                t.dims,
+                t.data.len()
+            );
+            for &v in &t.data {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        let crc = fnv1a(&buf);
+        buf.extend_from_slice(&crc.to_le_bytes());
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        let mut f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+        f.write_all(&buf)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut bytes = Vec::new();
+        std::fs::File::open(path)
+            .with_context(|| format!("open {path:?}"))?
+            .read_to_end(&mut bytes)?;
+        anyhow::ensure!(bytes.len() > 8 + 4 + 4 + 8 + 4 + 8, "checkpoint truncated");
+        let (body, crc_bytes) = bytes.split_at(bytes.len() - 8);
+        let want = u64::from_le_bytes(crc_bytes.try_into().unwrap());
+        anyhow::ensure!(fnv1a(body) == want, "checkpoint CRC mismatch (corrupt file)");
+
+        let mut r = Reader { b: body, i: 0 };
+        anyhow::ensure!(r.take(8)? == MAGIC, "bad magic — not a Tri-Accel checkpoint");
+        let version = r.u32()?;
+        anyhow::ensure!(version == VERSION, "unsupported checkpoint version {version}");
+        let key_len = r.u32()? as usize;
+        let model_key = String::from_utf8(r.take(key_len)?.to_vec()).context("model key utf8")?;
+        let step = r.u64()?;
+        let n = r.u32()? as usize;
+        let mut tensors = Vec::with_capacity(n);
+        for _ in 0..n {
+            let name_len = r.u32()? as usize;
+            let name = String::from_utf8(r.take(name_len)?.to_vec()).context("tensor name")?;
+            let ndim = r.u32()? as usize;
+            anyhow::ensure!(ndim <= 8, "implausible ndim {ndim}");
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(r.u64()?);
+            }
+            let elems: u64 = dims.iter().product();
+            let raw = r.take(elems as usize * 4)?;
+            let data = raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            tensors.push(Tensor { name, dims, data });
+        }
+        anyhow::ensure!(r.i == body.len(), "trailing bytes in checkpoint");
+        Ok(Checkpoint { model_key, step, tensors })
+    }
+
+    pub fn tensor(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .iter()
+            .find(|t| t.name == name)
+            .with_context(|| format!("checkpoint has no tensor `{name}`"))
+    }
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        anyhow::ensure!(self.i + n <= self.b.len(), "checkpoint truncated");
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            model_key: "tiny_cnn_c10".into(),
+            step: 1234,
+            tensors: vec![
+                Tensor { name: "param/0".into(), dims: vec![2, 3], data: vec![1.0, -2.5, 3.0, 0.0, 5.5, -6.25] },
+                Tensor { name: "mom/0".into(), dims: vec![6], data: vec![0.5; 6] },
+                Tensor { name: "state/0".into(), dims: vec![], data: vec![3.25] }, // scalar
+            ],
+        }
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("triaccel_ckpt_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_bitexact() {
+        let c = sample();
+        let p = tmp("rt");
+        c.save(&p).unwrap();
+        let d = Checkpoint::load(&p).unwrap();
+        assert_eq!(d.model_key, c.model_key);
+        assert_eq!(d.step, 1234);
+        assert_eq!(d.tensors.len(), 3);
+        for (a, b) in c.tensors.iter().zip(&d.tensors) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.dims, b.dims);
+            assert_eq!(a.data, b.data, "f32 payload must be bit-exact");
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let c = sample();
+        let p = tmp("crc");
+        c.save(&p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(Checkpoint::load(&p).unwrap_err().to_string().contains("CRC"));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let c = sample();
+        let p = tmp("trunc");
+        c.save(&p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 20]).unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let p = tmp("magic");
+        std::fs::write(&p, b"NOTACKPTxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxx").unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn dims_data_mismatch_rejected_on_save() {
+        let mut c = sample();
+        c.tensors[0].dims = vec![7];
+        assert!(c.save(&tmp("mismatch")).is_err());
+    }
+
+    #[test]
+    fn tensor_lookup() {
+        let c = sample();
+        assert!(c.tensor("mom/0").is_ok());
+        assert!(c.tensor("nope").is_err());
+    }
+}

@@ -1,0 +1,298 @@
+//! Configuration system: every paper hyperparameter (§3, §4.3) as a typed
+//! field with the paper's defaults, loadable from a JSON file with CLI
+//! overrides (`--set key=value`).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Training method — the paper's three Table-1 columns.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    /// FP32 SGD+momentum baseline.
+    Fp32,
+    /// Static AMP: uniform BF16 compute everywhere, dynamic loss scale,
+    /// no per-layer adaptivity (the paper's "AMP (Static)").
+    AmpStatic,
+    /// The full adaptive system.
+    TriAccel,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Result<Method> {
+        Ok(match s {
+            "fp32" => Method::Fp32,
+            "amp" | "amp_static" => Method::AmpStatic,
+            "tri_accel" | "tri-accel" | "triaccel" => Method::TriAccel,
+            _ => anyhow::bail!("unknown method `{s}` (fp32|amp|tri_accel)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Fp32 => "FP32 Baseline",
+            Method::AmpStatic => "AMP (Static)",
+            Method::TriAccel => "Tri-Accel",
+        }
+    }
+}
+
+/// Component toggles for the Table-2 ablation rows.
+#[derive(Debug, Clone, Copy)]
+pub struct Ablation {
+    pub dynamic_precision: bool,
+    pub dynamic_batch: bool,
+    pub curvature: bool,
+}
+
+impl Ablation {
+    pub fn full() -> Self {
+        Ablation { dynamic_precision: true, dynamic_batch: true, curvature: true }
+    }
+
+    pub fn none() -> Self {
+        Ablation { dynamic_precision: false, dynamic_batch: false, curvature: false }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Config {
+    // -- workload ---------------------------------------------------------
+    pub model_key: String, // manifest key, e.g. "resnet18_c10"
+    pub method: Method,
+    pub ablation: Ablation,
+    pub seed: u64,
+    pub epochs: usize,
+    /// Steps per epoch; None = full pass over the training set.
+    pub steps_per_epoch: Option<usize>,
+    pub train_examples: usize, // synthetic set size (50k = CIFAR)
+    pub eval_examples: usize,  // test set size (10k = CIFAR)
+
+    // -- optimizer (paper §4.1: SGD momentum 0.9, tuned lr/wd) ------------
+    pub base_lr: f32,
+    pub weight_decay: f32,
+    pub warmup_epochs: usize,
+    /// Linear LR/batch scaling (Smith et al. [8], Goyal et al. [49]):
+    /// when the elastic controller moves B(t), scale the LR by
+    /// B(t)/batch_init to keep the per-example step size consistent.
+    /// Off by default — the paper couples B only through memory.
+    pub lr_batch_scaling: bool,
+
+    // -- precision controller (§3.1) ---------------------------------------
+    pub beta: f64,      // EMA smoothing of Var[∇_l]
+    pub tau_low: f64,   // v < τ_low  → FP16
+    pub tau_high: f64,  // v ≥ τ_high → FP32
+    /// Auto-calibrate τ from the observed variance distribution after the
+    /// first control window ("automatic optimization without manual
+    /// hyperparameter tuning", abstract).
+    pub auto_threshold: bool,
+    pub t_ctrl: u64, // control-loop cadence in steps (§3.4)
+
+    // -- curvature (§3.2, §4.3) --------------------------------------------
+    pub t_curv: u64,     // probe cadence (paper: 200)
+    pub alpha: f32,      // η_l = η0 / (1 + α·λ_max)
+    pub tau_curv: f64,   // precision promotion threshold on λ
+    pub curv_warmup: u64, // power-iteration steps before trusting λ
+
+    // -- elastic batching (§3.3) -------------------------------------------
+    pub batch_init: usize, // paper: 96
+    pub rho_low: f64,      // grow when usage < ρ_low·budget
+    pub rho_high: f64,     // shrink when usage > ρ_high·budget
+    pub batch_cooldown: u64, // min steps between batch moves
+
+    // -- memory simulator ---------------------------------------------------
+    /// MemMax: the strict single-GPU budget. `0` = auto: 1.05× the FP32
+    /// footprint at `batch_init` — the paper's "strict memory budget"
+    /// around the workload, scaled per model.
+    pub mem_budget_gb: f64,
+    pub mem_noise: f64,     // allocator transient noise fraction
+
+    // -- loss scaling --------------------------------------------------------
+    pub init_loss_scale: f32,
+    pub loss_scale_growth_interval: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            model_key: "resnet18_c10".into(),
+            method: Method::TriAccel,
+            ablation: Ablation::full(),
+            seed: 0,
+            epochs: 2,
+            steps_per_epoch: None,
+            train_examples: 50_000,
+            eval_examples: 10_000,
+            base_lr: 0.1,
+            weight_decay: 5e-4,
+            warmup_epochs: 5,
+            lr_batch_scaling: false,
+            beta: 0.9,
+            tau_low: 1e-6,
+            tau_high: 1e-4,
+            auto_threshold: true,
+            t_ctrl: 20,
+            t_curv: 200,
+            alpha: 0.5,
+            tau_curv: 50.0,
+            curv_warmup: 3,
+            batch_init: 96,
+            rho_low: 0.70,
+            rho_high: 0.90,
+            batch_cooldown: 30,
+            mem_budget_gb: 0.45,
+            mem_noise: 0.01,
+            init_loss_scale: 1024.0,
+            loss_scale_growth_interval: 200,
+        }
+    }
+}
+
+impl Config {
+    /// Paper evaluation preset for one Table-1 cell.
+    pub fn cell(model_key: &str, method: Method, seed: u64) -> Config {
+        Config {
+            model_key: model_key.into(),
+            method,
+            ablation: match method {
+                Method::TriAccel => Ablation::full(),
+                _ => Ablation::none(),
+            },
+            seed,
+            ..Config::default()
+        }
+    }
+
+    pub fn load(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path:?}"))?;
+        let mut cfg = Config::default();
+        let j = Json::parse(&text).context("config json")?;
+        let obj = j.as_obj().context("config must be a JSON object")?;
+        for (k, v) in obj {
+            cfg.set(k, &json_to_str(v))?;
+        }
+        Ok(cfg)
+    }
+
+    /// Set one field by name from a string (CLI `--set k=v` / JSON load).
+    pub fn set(&mut self, key: &str, val: &str) -> Result<()> {
+        macro_rules! num {
+            () => {
+                val.parse().with_context(|| format!("config {key}={val}"))?
+            };
+        }
+        match key {
+            "model_key" => self.model_key = val.to_string(),
+            "method" => self.method = Method::parse(val)?,
+            "seed" => self.seed = num!(),
+            "epochs" => self.epochs = num!(),
+            "steps_per_epoch" => {
+                self.steps_per_epoch = if val == "full" { None } else { Some(num!()) }
+            }
+            "train_examples" => self.train_examples = num!(),
+            "eval_examples" => self.eval_examples = num!(),
+            "base_lr" => self.base_lr = num!(),
+            "weight_decay" => self.weight_decay = num!(),
+            "warmup_epochs" => self.warmup_epochs = num!(),
+            "lr_batch_scaling" => self.lr_batch_scaling = parse_bool(val)?,
+            "beta" => self.beta = num!(),
+            "tau_low" => self.tau_low = num!(),
+            "tau_high" => self.tau_high = num!(),
+            "auto_threshold" => self.auto_threshold = parse_bool(val)?,
+            "t_ctrl" => self.t_ctrl = num!(),
+            "t_curv" => self.t_curv = num!(),
+            "alpha" => self.alpha = num!(),
+            "tau_curv" => self.tau_curv = num!(),
+            "curv_warmup" => self.curv_warmup = num!(),
+            "batch_init" => self.batch_init = num!(),
+            "rho_low" => self.rho_low = num!(),
+            "rho_high" => self.rho_high = num!(),
+            "batch_cooldown" => self.batch_cooldown = num!(),
+            "mem_budget_gb" => self.mem_budget_gb = num!(),
+            "mem_noise" => self.mem_noise = num!(),
+            "init_loss_scale" => self.init_loss_scale = num!(),
+            "loss_scale_growth_interval" => self.loss_scale_growth_interval = num!(),
+            "dynamic_precision" => self.ablation.dynamic_precision = parse_bool(val)?,
+            "dynamic_batch" => self.ablation.dynamic_batch = parse_bool(val)?,
+            "curvature" => self.ablation.curvature = parse_bool(val)?,
+            _ => anyhow::bail!("unknown config key `{key}`"),
+        }
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!((0.0..1.0).contains(&self.beta), "beta in [0,1)");
+        anyhow::ensure!(self.tau_low <= self.tau_high, "tau_low <= tau_high");
+        anyhow::ensure!(
+            0.0 < self.rho_low && self.rho_low < self.rho_high && self.rho_high <= 1.0,
+            "0 < rho_low < rho_high <= 1"
+        );
+        anyhow::ensure!(self.mem_budget_gb >= 0.0, "mem_budget_gb >= 0 (0 = auto)");
+        anyhow::ensure!(self.batch_init > 0 && self.epochs > 0, "positive sizes");
+        Ok(())
+    }
+}
+
+fn parse_bool(v: &str) -> Result<bool> {
+    match v {
+        "true" | "1" | "yes" => Ok(true),
+        "false" | "0" | "no" => Ok(false),
+        _ => anyhow::bail!("bad bool `{v}`"),
+    }
+}
+
+fn json_to_str(v: &Json) -> String {
+    match v {
+        Json::Str(s) => s.clone(),
+        other => other.to_string_compact(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid_and_match_paper() {
+        let c = Config::default();
+        c.validate().unwrap();
+        assert_eq!(c.batch_init, 96); // §4: "initial batch size of 96"
+        assert_eq!(c.t_curv, 200); // §4.3: T_curv = 200
+        assert_eq!(c.warmup_epochs, 5); // §4.3: 5-epoch warmup
+    }
+
+    #[test]
+    fn set_overrides() {
+        let mut c = Config::default();
+        c.set("method", "amp").unwrap();
+        c.set("epochs", "7").unwrap();
+        c.set("rho_high", "0.95").unwrap();
+        c.set("dynamic_batch", "false").unwrap();
+        assert_eq!(c.method, Method::AmpStatic);
+        assert_eq!(c.epochs, 7);
+        assert!(!c.ablation.dynamic_batch);
+        assert!(c.set("nope", "1").is_err());
+        assert!(c.set("epochs", "x").is_err());
+    }
+
+    #[test]
+    fn validation_catches_bad_ranges() {
+        let mut c = Config::default();
+        c.rho_low = 0.95;
+        c.rho_high = 0.9;
+        assert!(c.validate().is_err());
+        let mut c2 = Config::default();
+        c2.beta = 1.5;
+        assert!(c2.validate().is_err());
+    }
+
+    #[test]
+    fn method_parse_names() {
+        assert_eq!(Method::parse("fp32").unwrap().name(), "FP32 Baseline");
+        assert_eq!(Method::parse("tri-accel").unwrap(), Method::TriAccel);
+        assert!(Method::parse("adam").is_err());
+    }
+}

@@ -1,0 +1,235 @@
+//! §3.3 Memory-Elastic Batch Scaling.
+//!
+//! The paper's VRAM feedback controller:
+//!
+//! ```text
+//! B(t+1) = B(t) + δ↑   if MemUsage(t) < ρ_low · MemMax
+//!          B(t) − δ↓   if MemUsage(t) > ρ_high · MemMax
+//!          B(t)        otherwise
+//! ```
+//!
+//! Two adaptations to the AOT substrate (DESIGN.md decision 2): PJRT
+//! executables are shape-specialized, so B(t) moves along the bucket
+//! ladder baked at compile time (δ↑/δ↓ become "one bucket"), and growth
+//! is vetoed by a predictive `would_fit` check so the controller never
+//! *causes* the OOM it exists to avoid. A cooldown between moves damps
+//! oscillation from allocator noise.
+
+/// Outcome of one controller decision (telemetry / tests).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchMove {
+    Grow,
+    Shrink,
+    Hold,
+    /// Growth was indicated but vetoed by the fit predictor.
+    VetoedGrow,
+}
+
+#[derive(Debug, Clone)]
+pub struct BatchConfig {
+    pub rho_low: f64,
+    pub rho_high: f64,
+    /// Minimum steps between moves.
+    pub cooldown: u64,
+}
+
+impl BatchConfig {
+    pub fn from_cfg(cfg: &crate::config::Config) -> BatchConfig {
+        BatchConfig {
+            rho_low: cfg.rho_low,
+            rho_high: cfg.rho_high,
+            cooldown: cfg.batch_cooldown,
+        }
+    }
+}
+
+pub struct BatchController {
+    cfg: BatchConfig,
+    /// Ascending AOT bucket ladder.
+    buckets: Vec<usize>,
+    /// Index into `buckets`.
+    idx: usize,
+    last_move_step: u64,
+    moves: u64,
+    vetoes: u64,
+}
+
+impl BatchController {
+    /// `buckets` must be the model's AOT train buckets; `init` snaps to
+    /// the nearest bucket ≤ init (paper's initial batch size 96).
+    pub fn new(mut buckets: Vec<usize>, init: usize, cfg: BatchConfig) -> BatchController {
+        assert!(!buckets.is_empty(), "no train buckets");
+        buckets.sort_unstable();
+        buckets.dedup();
+        let idx = buckets
+            .iter()
+            .rposition(|&b| b <= init)
+            .unwrap_or(0);
+        BatchController { cfg, buckets, idx, last_move_step: 0, moves: 0, vetoes: 0 }
+    }
+
+    pub fn current(&self) -> usize {
+        self.buckets[self.idx]
+    }
+
+    pub fn buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    /// One §3.3 decision. `mem_used`/`mem_max` in GiB; `step` for the
+    /// cooldown; `fits(next_b)` is the predictive OOM veto over the
+    /// candidate batch size (from `VramSim::would_fit`).
+    pub fn update<F: FnMut(usize) -> bool>(
+        &mut self,
+        step: u64,
+        mem_used: f64,
+        mem_max: f64,
+        mut fits: F,
+    ) -> BatchMove {
+        let frac = mem_used / mem_max;
+        // OOM-pressure shrink bypasses the cooldown: reacting late to
+        // over-budget usage defeats the controller's purpose.
+        if frac > self.cfg.rho_high {
+            if self.idx > 0 {
+                self.idx -= 1;
+                self.last_move_step = step;
+                self.moves += 1;
+                return BatchMove::Shrink;
+            }
+            return BatchMove::Hold; // already at the smallest bucket
+        }
+        if step.saturating_sub(self.last_move_step) < self.cfg.cooldown {
+            return BatchMove::Hold;
+        }
+        if frac < self.cfg.rho_low && self.idx + 1 < self.buckets.len() {
+            let next = self.buckets[self.idx + 1];
+            if fits(next) {
+                self.idx += 1;
+                self.last_move_step = step;
+                self.moves += 1;
+                return BatchMove::Grow;
+            }
+            self.vetoes += 1;
+            return BatchMove::VetoedGrow;
+        }
+        BatchMove::Hold
+    }
+
+    /// Emergency shrink on an actual OOM signal (simulator over-budget or
+    /// a real allocator failure): drop one bucket immediately.
+    pub fn force_shrink(&mut self, step: u64) -> bool {
+        if self.idx == 0 {
+            return false;
+        }
+        self.idx -= 1;
+        self.last_move_step = step;
+        self.moves += 1;
+        true
+    }
+
+    pub fn moves(&self) -> u64 {
+        self.moves
+    }
+
+    pub fn vetoes(&self) -> u64 {
+        self.vetoes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> BatchConfig {
+        BatchConfig { rho_low: 0.7, rho_high: 0.9, cooldown: 5 }
+    }
+
+    fn ctl() -> BatchController {
+        BatchController::new(vec![16, 32, 64, 96, 128], 96, cfg())
+    }
+
+    #[test]
+    fn init_snaps_to_ladder() {
+        assert_eq!(ctl().current(), 96);
+        let c = BatchController::new(vec![16, 32, 64], 96, cfg());
+        assert_eq!(c.current(), 64, "snap down to largest ≤ init");
+        let c = BatchController::new(vec![32, 64], 8, cfg());
+        assert_eq!(c.current(), 32, "init below ladder → smallest bucket");
+    }
+
+    #[test]
+    fn grows_when_underutilized() {
+        let mut c = ctl();
+        let m = c.update(10, 0.5, 1.0, |_| true);
+        assert_eq!(m, BatchMove::Grow);
+        assert_eq!(c.current(), 128);
+    }
+
+    #[test]
+    fn shrinks_when_over_rho_high() {
+        let mut c = ctl();
+        let m = c.update(10, 0.95, 1.0, |_| true);
+        assert_eq!(m, BatchMove::Shrink);
+        assert_eq!(c.current(), 64);
+    }
+
+    #[test]
+    fn holds_in_the_band() {
+        let mut c = ctl();
+        assert_eq!(c.update(10, 0.8, 1.0, |_| true), BatchMove::Hold);
+        assert_eq!(c.current(), 96);
+    }
+
+    #[test]
+    fn cooldown_blocks_consecutive_growth() {
+        let mut c = ctl();
+        assert_eq!(c.update(10, 0.1, 1.0, |_| true), BatchMove::Grow);
+        assert_eq!(c.update(12, 0.1, 1.0, |_| true), BatchMove::Hold, "cooling down");
+        // 128 is the top bucket, so even after cooldown it's a hold.
+        assert_eq!(c.update(20, 0.1, 1.0, |_| true), BatchMove::Hold);
+        assert_eq!(c.current(), 128);
+    }
+
+    #[test]
+    fn shrink_bypasses_cooldown() {
+        let mut c = ctl();
+        assert_eq!(c.update(10, 0.5, 1.0, |_| true), BatchMove::Grow);
+        assert_eq!(c.update(11, 0.99, 1.0, |_| true), BatchMove::Shrink);
+        assert_eq!(c.current(), 96);
+    }
+
+    #[test]
+    fn veto_blocks_unfit_growth() {
+        let mut c = ctl();
+        assert_eq!(c.update(10, 0.5, 1.0, |_| false), BatchMove::VetoedGrow);
+        assert_eq!(c.current(), 96);
+        assert_eq!(c.vetoes(), 1);
+    }
+
+    #[test]
+    fn clamps_at_ladder_ends() {
+        let mut c = BatchController::new(vec![16, 32], 16, cfg());
+        assert_eq!(c.update(10, 0.99, 1.0, |_| true), BatchMove::Hold, "floor");
+        c.update(20, 0.1, 1.0, |_| true);
+        assert_eq!(c.current(), 32);
+        assert_eq!(c.update(40, 0.1, 1.0, |_| true), BatchMove::Hold, "ceiling");
+    }
+
+    #[test]
+    fn force_shrink_drops_one_bucket() {
+        let mut c = ctl();
+        assert!(c.force_shrink(5));
+        assert_eq!(c.current(), 64);
+        c.force_shrink(6);
+        c.force_shrink(7);
+        c.force_shrink(8);
+        assert_eq!(c.current(), 16);
+        assert!(!c.force_shrink(9), "cannot shrink below the floor");
+    }
+
+    #[test]
+    fn ladder_deduped_and_sorted() {
+        let c = BatchController::new(vec![96, 16, 96, 32], 96, cfg());
+        assert_eq!(c.buckets(), &[16, 32, 96]);
+    }
+}

@@ -1,0 +1,375 @@
+//! §3.4 Unified Control Loop — the closed loop that couples the three
+//! controllers on a `T_ctrl` cadence:
+//!
+//! 1. collect per-layer gradient variance (every step, cheap EMA) and
+//!    curvature (every `T_curv`, via the AOT curv graph);
+//! 2. adjust precision allocations p_l(t);
+//! 3. adapt per-layer learning rates from curvature;
+//! 4. update batch size B(t) from the VRAM signal.
+//!
+//! The interdependencies the paper calls out are all mediated here:
+//! curvature promotes precision (`CurvatureScheduler::promotions` →
+//! `PrecisionController::promote`), precision changes the memory model's
+//! input (codes), memory drives batch size, and batch size feeds back
+//! into gradient-variance statistics through the next steps' training.
+//!
+//! Method/ablation semantics (paper §4.1 baselines, Table 2 rows):
+//! * `Fp32` — all layers pinned FP32, fixed batch, no curvature, scale 1.
+//! * `AmpStatic` — all layers pinned BF16 (the paper's uniform policy;
+//!   "BF16 is the default precision mode"), dynamic loss scale, fixed
+//!   batch, no curvature.
+//! * `TriAccel` — the full loop, with `Ablation` toggles selecting the
+//!   Table-2 rows (+batch only, +precision only, full).
+
+use crate::config::{Ablation, Config, Method};
+use crate::manifest::{ModelEntry, BF16, FP16, FP32};
+
+use super::batch::{BatchController, BatchMove};
+use super::curvature::CurvatureScheduler;
+use super::precision::{LossScaler, PrecisionController};
+use super::{batch::BatchConfig, curvature::CurvatureConfig, precision::PrecisionConfig};
+
+/// What one control window decided (telemetry / tests / traces).
+#[derive(Debug, Clone)]
+pub struct ControlDecision {
+    pub step: u64,
+    pub precision_changed: bool,
+    pub promotions: Vec<usize>,
+    pub batch_move: BatchMove,
+    pub batch_size: usize,
+    pub loss_scale: f32,
+}
+
+pub struct Controller {
+    pub method: Method,
+    pub ablation: Ablation,
+    pub precision: PrecisionController,
+    pub curvature: CurvatureScheduler,
+    pub batch: BatchController,
+    pub scaler: LossScaler,
+    t_ctrl: u64,
+    windows: u64,
+}
+
+impl Controller {
+    pub fn new(cfg: &Config, entry: &ModelEntry) -> Controller {
+        let ablation = match cfg.method {
+            Method::TriAccel => cfg.ablation,
+            _ => Ablation::none(),
+        };
+        let mut precision =
+            PrecisionController::new(entry.num_layers, PrecisionConfig::from_cfg(cfg));
+        match cfg.method {
+            Method::Fp32 => precision.pin_all(FP32),
+            Method::AmpStatic => precision.pin_all(BF16),
+            Method::TriAccel if !ablation.dynamic_precision => precision.pin_all(BF16),
+            _ => {}
+        }
+        let scaler = match cfg.method {
+            Method::Fp32 => LossScaler::disabled(),
+            _ => LossScaler::new(cfg.init_loss_scale, cfg.loss_scale_growth_interval),
+        };
+        Controller {
+            method: cfg.method,
+            ablation,
+            precision,
+            curvature: CurvatureScheduler::new(entry.num_layers, CurvatureConfig::from_cfg(cfg)),
+            batch: BatchController::new(
+                entry.train_buckets.clone(),
+                cfg.batch_init,
+                BatchConfig::from_cfg(cfg),
+            ),
+            scaler,
+            t_ctrl: cfg.t_ctrl.max(1),
+            windows: 0,
+        }
+    }
+
+    /// Is the dynamic-precision path active (vs pinned)?
+    fn precision_active(&self) -> bool {
+        self.method == Method::TriAccel && self.ablation.dynamic_precision
+    }
+
+    /// Is the memory-elastic batch path active (vs the paper's static
+    /// baselines, which keep B fixed and simply OOM)?
+    pub fn batch_active(&self) -> bool {
+        self.method == Method::TriAccel && self.ablation.dynamic_batch
+    }
+
+    fn curvature_active(&self) -> bool {
+        self.method == Method::TriAccel && self.ablation.curvature
+    }
+
+    /// Per-step ingest: gradient variance + overflow flag from the train
+    /// graph. O(L); runs every step.
+    pub fn observe_step(&mut self, grad_var: &[f32], overflow: bool) {
+        if self.precision_active() {
+            self.precision.observe(grad_var);
+        }
+        // Loss scaling reacts every step for any method with half layers.
+        if self.has_half_layers() {
+            self.scaler.update(overflow);
+        }
+    }
+
+    fn has_half_layers(&self) -> bool {
+        self.precision.codes().iter().any(|&c| c != FP32)
+    }
+
+    /// Should the trainer run a curvature probe at this step?
+    pub fn curvature_due(&self, step: u64) -> bool {
+        self.curvature_active() && self.curvature.due(step)
+    }
+
+    /// Ingest probe results; returns layers whose probe vectors must be
+    /// reset (non-finite λ).
+    pub fn observe_curvature(&mut self, lambdas: &[f32]) -> Vec<usize> {
+        self.curvature.observe(lambdas)
+    }
+
+    /// Is `step` a control-window boundary (§3.4 cadence)?
+    pub fn window_due(&self, step: u64) -> bool {
+        step > 0 && step % self.t_ctrl == 0
+    }
+
+    /// One §3.4 control window. `mem_used`/`mem_max` from the memory
+    /// monitor; `fits(b)` is the predictive OOM check for a candidate
+    /// batch size *under the current precision codes*.
+    pub fn control_window<F: FnMut(usize) -> bool>(
+        &mut self,
+        step: u64,
+        mem_used: f64,
+        mem_max: f64,
+        fits: F,
+    ) -> ControlDecision {
+        self.windows += 1;
+
+        // (2) precision from variance; (3) promotion from curvature.
+        let mut promotions = Vec::new();
+        let mut precision_changed = false;
+        if self.precision_active() {
+            precision_changed = self.precision.control_window();
+            if self.curvature_active() {
+                promotions = self.curvature.promotions();
+                for &l in &promotions {
+                    self.precision.promote(l);
+                    precision_changed = true;
+                }
+            }
+        }
+
+        // (4) batch from memory.
+        let batch_move = if self.batch_active() {
+            self.batch.update(step, mem_used, mem_max, fits)
+        } else {
+            BatchMove::Hold
+        };
+
+        ControlDecision {
+            step,
+            precision_changed,
+            promotions,
+            batch_move,
+            batch_size: self.batch.current(),
+            loss_scale: self.scaler.scale(),
+        }
+    }
+
+    /// The per-layer precision codes fed to the train executable.
+    pub fn codes(&self) -> Vec<i32> {
+        self.precision.codes().to_vec()
+    }
+
+    /// Per-layer LR scales; all-ones unless curvature is active+warm.
+    pub fn lr_scales(&self) -> Vec<f32> {
+        if self.curvature_active() {
+            self.curvature.lr_scales()
+        } else {
+            vec![1.0; self.precision.num_layers()]
+        }
+    }
+
+    /// The loss scale fed to the train executable. FP16 layers need a
+    /// real scale; BF16/FP32-only runs use whatever the scaler holds
+    /// (the graph divides it back out, so it is value-neutral).
+    pub fn loss_scale(&self) -> f32 {
+        if self.precision.codes().contains(&FP16) {
+            self.scaler.scale()
+        } else {
+            1.0
+        }
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch.current()
+    }
+
+    pub fn windows(&self) -> u64 {
+        self.windows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::LayerSpec;
+    use std::collections::BTreeMap;
+
+    fn entry(num_layers: usize) -> ModelEntry {
+        ModelEntry {
+            key: "toy_c10".into(),
+            model: "toy".into(),
+            num_classes: 10,
+            num_layers,
+            param_count: 0,
+            layers: (0..num_layers)
+                .map(|i| LayerSpec {
+                    name: format!("l{i}"),
+                    kind: "conv".into(),
+                    param_elems: 1000,
+                    act_elems: 100,
+                    flops: 10_000,
+                })
+                .collect(),
+            params: vec![],
+            state_shapes: vec![],
+            train_buckets: vec![16, 32, 64, 96, 128],
+            eval_buckets: vec![128],
+            curv_batch: 32,
+            artifacts: BTreeMap::new(),
+        }
+    }
+
+    fn cfg(method: Method) -> Config {
+        let mut c = Config::default();
+        c.method = method;
+        c.t_ctrl = 10;
+        c.t_curv = 20;
+        c.auto_threshold = false;
+        c.tau_low = 1e-6;
+        c.tau_high = 1e-3;
+        c.batch_cooldown = 0;
+        c
+    }
+
+    #[test]
+    fn fp32_baseline_is_static() {
+        let mut ctl = Controller::new(&cfg(Method::Fp32), &entry(3));
+        assert_eq!(ctl.codes(), vec![FP32, FP32, FP32]);
+        assert!(!ctl.curvature_due(200));
+        ctl.observe_step(&[1e-9, 1e-9, 1e-9], false);
+        let d = ctl.control_window(10, 0.1, 1.0, |_| true);
+        assert!(!d.precision_changed);
+        assert_eq!(d.batch_move, BatchMove::Hold);
+        assert_eq!(ctl.loss_scale(), 1.0);
+        assert_eq!(ctl.lr_scales(), vec![1.0; 3]);
+    }
+
+    #[test]
+    fn amp_static_is_uniform_bf16_fixed_batch() {
+        let mut ctl = Controller::new(&cfg(Method::AmpStatic), &entry(2));
+        assert_eq!(ctl.codes(), vec![BF16, BF16]);
+        for s in 1..=50 {
+            ctl.observe_step(&[1e-9, 1.0], false);
+            if ctl.window_due(s) {
+                ctl.control_window(s, 0.1, 1.0, |_| true);
+            }
+        }
+        assert_eq!(ctl.codes(), vec![BF16, BF16], "static policy never moves");
+        assert_eq!(ctl.batch_size(), 96);
+    }
+
+    #[test]
+    fn tri_accel_adapts_precision_per_layer() {
+        let mut ctl = Controller::new(&cfg(Method::TriAccel), &entry(2));
+        for s in 1..=60 {
+            ctl.observe_step(&[1e-9, 1.0], false);
+            if ctl.window_due(s) {
+                ctl.control_window(s, 0.8, 1.0, |_| true);
+            }
+        }
+        assert_eq!(ctl.codes(), vec![FP16, FP32], "low-var down, high-var up");
+    }
+
+    #[test]
+    fn tri_accel_grows_batch_when_memory_free() {
+        let mut ctl = Controller::new(&cfg(Method::TriAccel), &entry(1));
+        assert_eq!(ctl.batch_size(), 96);
+        let d = ctl.control_window(10, 0.2, 1.0, |_| true);
+        assert_eq!(d.batch_move, BatchMove::Grow);
+        assert_eq!(ctl.batch_size(), 128);
+    }
+
+    #[test]
+    fn ablation_flags_gate_components() {
+        let mut c = cfg(Method::TriAccel);
+        c.ablation.dynamic_precision = false;
+        let mut ctl = Controller::new(&c, &entry(2));
+        for s in 1..=60 {
+            ctl.observe_step(&[1e-9, 1.0], false);
+            if ctl.window_due(s) {
+                ctl.control_window(s, 0.2, 1.0, |_| true);
+            }
+        }
+        assert_eq!(ctl.codes(), vec![BF16, BF16], "precision off → pinned");
+        assert_eq!(ctl.batch_size(), 128, "batch still elastic");
+
+        let mut c2 = cfg(Method::TriAccel);
+        c2.ablation.dynamic_batch = false;
+        let mut ctl2 = Controller::new(&c2, &entry(2));
+        let d = ctl2.control_window(10, 0.1, 1.0, |_| true);
+        assert_eq!(d.batch_move, BatchMove::Hold, "batch off → fixed");
+    }
+
+    #[test]
+    fn curvature_promotion_flows_into_precision() {
+        let mut c = cfg(Method::TriAccel);
+        c.tau_curv = 5.0;
+        c.curv_warmup = 1;
+        let mut ctl = Controller::new(&c, &entry(2));
+        // Drive both layers to FP16 first.
+        for s in 1..=40 {
+            ctl.observe_step(&[1e-9, 1e-9], false);
+            if ctl.window_due(s) {
+                ctl.control_window(s, 0.8, 1.0, |_| true);
+            }
+        }
+        assert_eq!(ctl.codes(), vec![FP16, FP16]);
+        assert!(ctl.curvature_due(40), "t_curv=20 divides 40");
+        ctl.observe_curvature(&[0.1, 50.0]);
+        let d = ctl.control_window(50, 0.8, 1.0, |_| true);
+        assert_eq!(d.promotions, vec![1]);
+        assert_eq!(ctl.codes()[1], FP32, "steep layer promoted");
+        assert_eq!(ctl.codes()[0], FP16, "flat layer untouched");
+    }
+
+    #[test]
+    fn loss_scale_only_applies_with_fp16_layers() {
+        let ctl = Controller::new(&cfg(Method::AmpStatic), &entry(1));
+        // BF16-only: graph receives neutral scale.
+        assert_eq!(ctl.loss_scale(), 1.0);
+        let mut c = cfg(Method::TriAccel);
+        c.init_loss_scale = 512.0;
+        let mut ctl2 = Controller::new(&c, &entry(1));
+        for s in 1..=30 {
+            ctl2.observe_step(&[1e-9], false);
+            if ctl2.window_due(s) {
+                ctl2.control_window(s, 0.8, 1.0, |_| true);
+            }
+        }
+        assert_eq!(ctl2.codes(), vec![FP16]);
+        assert_eq!(ctl2.loss_scale(), 512.0);
+        // Overflow halves it.
+        ctl2.observe_step(&[1e-9], true);
+        assert_eq!(ctl2.loss_scale(), 256.0);
+    }
+
+    #[test]
+    fn window_cadence() {
+        let ctl = Controller::new(&cfg(Method::TriAccel), &entry(1));
+        assert!(!ctl.window_due(0));
+        assert!(ctl.window_due(10));
+        assert!(!ctl.window_due(15));
+        assert!(ctl.window_due(20));
+    }
+}

@@ -1,0 +1,220 @@
+//! §3.2 Sparse Second-Order Signals.
+//!
+//! The expensive part — one power-iteration step of per-layer
+//! block-diagonal HVPs — runs inside the AOT `curv` graph
+//! (`Session::curv_step`); this module is the *scheduler and consumer*:
+//!
+//! * decides when a probe fires (`every T_curv steps`, paper §4.3),
+//! * smooths the per-layer Rayleigh quotients λ_l across firings
+//!   (power iteration is amortized: one step per firing, warm-started
+//!   probe vectors persisted in the session),
+//! * turns λ into per-layer step-size scales
+//!   `η_l = η₀ / (1 + α·max λ)` (§3.2, "Step size scaling"),
+//! * flags layers whose λ exceeds τ_curv for precision promotion
+//!   (§3.2, "Precision promotion").
+
+use crate::util::stats::Ema;
+
+#[derive(Debug, Clone)]
+pub struct CurvatureConfig {
+    /// Probe cadence in optimizer steps (paper: 200).
+    pub t_curv: u64,
+    /// Step-size scaling coefficient α.
+    pub alpha: f32,
+    /// Promotion threshold τ_curv on λ_max.
+    pub tau_curv: f64,
+    /// Firings before λ is trusted (power iteration convergence).
+    pub warmup: u64,
+    /// EMA smoothing across firings.
+    pub beta: f64,
+}
+
+impl CurvatureConfig {
+    pub fn from_cfg(cfg: &crate::config::Config) -> CurvatureConfig {
+        CurvatureConfig {
+            t_curv: cfg.t_curv,
+            alpha: cfg.alpha,
+            tau_curv: cfg.tau_curv,
+            warmup: cfg.curv_warmup,
+            beta: 0.5,
+        }
+    }
+}
+
+pub struct CurvatureScheduler {
+    cfg: CurvatureConfig,
+    /// Smoothed |λ_max| per layer.
+    lambdas: Vec<Ema>,
+    firings: u64,
+    /// Telemetry: probes that produced non-finite λ (reset events).
+    rejected: u64,
+}
+
+impl CurvatureScheduler {
+    pub fn new(num_layers: usize, cfg: CurvatureConfig) -> CurvatureScheduler {
+        CurvatureScheduler {
+            lambdas: (0..num_layers).map(|_| Ema::new(cfg.beta)).collect(),
+            cfg,
+            firings: 0,
+            rejected: 0,
+        }
+    }
+
+    /// Should the trainer run a curvature probe at `step`?
+    pub fn due(&self, step: u64) -> bool {
+        self.cfg.t_curv > 0 && step > 0 && step % self.cfg.t_curv == 0
+    }
+
+    /// Ingest one probe's per-layer Rayleigh quotients. Non-finite
+    /// entries (diverged probe) are rejected; the caller should reset
+    /// that probe vector. Returns the indices of rejected layers.
+    pub fn observe(&mut self, lambdas: &[f32]) -> Vec<usize> {
+        assert_eq!(lambdas.len(), self.lambdas.len(), "lambda arity");
+        self.firings += 1;
+        let mut bad = Vec::new();
+        for (l, (ema, &lam)) in self.lambdas.iter_mut().zip(lambdas).enumerate() {
+            if lam.is_finite() {
+                // The loss surface can be locally concave; the step-size
+                // rule uses curvature *magnitude*.
+                ema.update(lam.abs() as f64);
+            } else {
+                bad.push(l);
+            }
+        }
+        self.rejected += bad.len() as u64;
+        bad
+    }
+
+    /// True once enough firings have happened to trust λ (§ warmup).
+    pub fn warmed_up(&self) -> bool {
+        self.firings >= self.cfg.warmup
+    }
+
+    /// Per-layer learning-rate scales `1 / (1 + α·λ_l)`; all-ones until
+    /// warmed up (so the early schedule matches the baselines exactly).
+    pub fn lr_scales(&self) -> Vec<f32> {
+        if !self.warmed_up() {
+            return vec![1.0; self.lambdas.len()];
+        }
+        self.lambdas
+            .iter()
+            .map(|e| 1.0 / (1.0 + self.cfg.alpha as f64 * e.get()) as f32)
+            .collect()
+    }
+
+    /// Layers whose smoothed λ exceeds τ_curv → precision promotion.
+    pub fn promotions(&self) -> Vec<usize> {
+        if !self.warmed_up() {
+            return Vec::new();
+        }
+        self.lambdas
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.get() > self.cfg.tau_curv)
+            .map(|(l, _)| l)
+            .collect()
+    }
+
+    pub fn lambda(&self, l: usize) -> f64 {
+        self.lambdas[l].get()
+    }
+
+    pub fn lambdas(&self) -> Vec<f64> {
+        self.lambdas.iter().map(|e| e.get()).collect()
+    }
+
+    pub fn firings(&self) -> u64 {
+        self.firings
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.rejected
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> CurvatureConfig {
+        CurvatureConfig { t_curv: 10, alpha: 0.5, tau_curv: 4.0, warmup: 2, beta: 0.0 }
+    }
+
+    #[test]
+    fn cadence() {
+        let cs = CurvatureScheduler::new(1, cfg());
+        assert!(!cs.due(0), "never at step 0");
+        assert!(cs.due(10));
+        assert!(!cs.due(11));
+        assert!(cs.due(20));
+    }
+
+    #[test]
+    fn cadence_disabled_when_zero() {
+        let mut c = cfg();
+        c.t_curv = 0;
+        let cs = CurvatureScheduler::new(1, c);
+        assert!(!cs.due(10) && !cs.due(200));
+    }
+
+    #[test]
+    fn lr_scales_flat_until_warmup() {
+        let mut cs = CurvatureScheduler::new(2, cfg());
+        cs.observe(&[8.0, 0.0]);
+        assert_eq!(cs.lr_scales(), vec![1.0, 1.0], "1 firing < warmup 2");
+        cs.observe(&[8.0, 0.0]);
+        let s = cs.lr_scales();
+        assert!((s[0] - 1.0 / 5.0).abs() < 1e-6, "1/(1+0.5·8) = 0.2, got {}", s[0]);
+        assert_eq!(s[1], 1.0);
+    }
+
+    #[test]
+    fn high_curvature_shrinks_lr_monotonically() {
+        let mut cs = CurvatureScheduler::new(3, cfg());
+        cs.observe(&[0.0, 2.0, 20.0]);
+        cs.observe(&[0.0, 2.0, 20.0]);
+        let s = cs.lr_scales();
+        assert!(s[0] > s[1] && s[1] > s[2]);
+        assert!(s.iter().all(|&x| x > 0.0 && x <= 1.0));
+    }
+
+    #[test]
+    fn promotions_above_tau() {
+        let mut cs = CurvatureScheduler::new(3, cfg());
+        cs.observe(&[1.0, 5.0, 3.9]);
+        assert!(cs.promotions().is_empty(), "not warmed up");
+        cs.observe(&[1.0, 5.0, 3.9]);
+        assert_eq!(cs.promotions(), vec![1]);
+    }
+
+    #[test]
+    fn negative_lambda_uses_magnitude() {
+        let mut cs = CurvatureScheduler::new(1, cfg());
+        cs.observe(&[-8.0]);
+        cs.observe(&[-8.0]);
+        assert!((cs.lambda(0) - 8.0).abs() < 1e-9);
+        assert_eq!(cs.promotions(), vec![0]);
+    }
+
+    #[test]
+    fn non_finite_rejected() {
+        let mut cs = CurvatureScheduler::new(2, cfg());
+        let bad = cs.observe(&[f32::NAN, 1.0]);
+        assert_eq!(bad, vec![0]);
+        assert_eq!(cs.rejected(), 1);
+        assert_eq!(cs.lambda(0), 0.0, "rejected probe leaves EMA untouched");
+        assert!((cs.lambda(1) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ema_smooths_across_firings() {
+        let mut c = cfg();
+        c.beta = 0.5;
+        c.warmup = 1;
+        let mut cs = CurvatureScheduler::new(1, c);
+        cs.observe(&[10.0]);
+        cs.observe(&[0.0]);
+        let lam = cs.lambda(0);
+        assert!(lam > 0.0 && lam < 10.0, "smoothed, got {lam}");
+    }
+}

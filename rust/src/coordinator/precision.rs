@@ -1,0 +1,478 @@
+//! §3.1 Precision-Adaptive Updates.
+//!
+//! Per layer l the controller maintains an EMA of the gradient variance,
+//!
+//! ```text
+//! v_l(t) = β·v_l(t-1) + (1-β)·Var[∇_l(t)]
+//! ```
+//!
+//! and at each control window selects
+//!
+//! ```text
+//! p_l(t) = FP16   if v_l < τ_low
+//!          BF16   if τ_low ≤ v_l < τ_high
+//!          FP32   if v_l ≥ τ_high
+//! ```
+//!
+//! Two practical mechanisms on top of the paper's rule:
+//!
+//! * **Hysteresis** — a layer only moves one precision rung per control
+//!   window and the thresholds carry a relative dead-band, so the policy
+//!   does not chatter when v_l sits on a boundary (chatter would defeat
+//!   the paper's "negligible overhead" claim by thrashing compute copies).
+//! * **Auto-thresholding** — when `auto_threshold` is set, τ_low/τ_high
+//!   are (re)calibrated from the observed cross-layer variance
+//!   distribution (percentiles), reproducing the abstract's "automatic
+//!   optimization without manual hyperparameter tuning".
+//!
+//! Curvature promotion (§3.2 "precision promotion") enters through
+//! [`PrecisionController::promote`]: promoted layers are pinned to FP32
+//! for a configurable number of windows regardless of variance.
+
+use crate::manifest::{BF16, FP16, FP32};
+use crate::util::stats::Ema;
+
+/// Relative dead-band applied around τ when deciding to *leave* the
+/// current precision (enter thresholds are the paper's exact rule).
+const HYSTERESIS: f64 = 0.2;
+
+/// How many control windows a curvature promotion pins a layer to FP32.
+const PROMOTION_WINDOWS: u32 = 2;
+
+#[derive(Debug, Clone)]
+pub struct PrecisionConfig {
+    pub beta: f64,
+    pub tau_low: f64,
+    pub tau_high: f64,
+    pub auto_threshold: bool,
+    /// Default code before any statistics exist (paper: "BF16 is the
+    /// default precision mode unless otherwise noted").
+    pub default_code: i32,
+}
+
+impl PrecisionConfig {
+    pub fn from_cfg(cfg: &crate::config::Config) -> PrecisionConfig {
+        PrecisionConfig {
+            beta: cfg.beta,
+            tau_low: cfg.tau_low,
+            tau_high: cfg.tau_high,
+            auto_threshold: cfg.auto_threshold,
+            default_code: BF16,
+        }
+    }
+}
+
+pub struct PrecisionController {
+    cfg: PrecisionConfig,
+    /// EMA of Var[∇_l] per layer.
+    vars: Vec<Ema>,
+    codes: Vec<i32>,
+    /// Remaining FP32-pin windows per layer from curvature promotion.
+    promoted: Vec<u32>,
+    tau_low: f64,
+    tau_high: f64,
+    calibrated: bool,
+    /// Telemetry: number of code changes applied so far.
+    transitions: u64,
+}
+
+impl PrecisionController {
+    pub fn new(num_layers: usize, cfg: PrecisionConfig) -> PrecisionController {
+        let tau_low = cfg.tau_low;
+        let tau_high = cfg.tau_high;
+        PrecisionController {
+            vars: (0..num_layers).map(|_| Ema::new(cfg.beta)).collect(),
+            codes: vec![cfg.default_code; num_layers],
+            promoted: vec![0; num_layers],
+            cfg,
+            tau_low,
+            tau_high,
+            calibrated: false,
+            transitions: 0,
+        }
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.vars.len()
+    }
+
+    /// Feed one step's per-layer gradient variance (from the fused
+    /// grad_stats kernel). Called every step; cheap (L EMA updates).
+    pub fn observe(&mut self, grad_var: &[f32]) {
+        assert_eq!(grad_var.len(), self.vars.len(), "grad_var arity");
+        for (ema, &v) in self.vars.iter_mut().zip(grad_var) {
+            // Overflowed/NaN steps carry no variance information.
+            if v.is_finite() {
+                ema.update(v as f64);
+            }
+        }
+    }
+
+    /// §3.2 precision promotion: pin layer `l` to FP32 for the next
+    /// [`PROMOTION_WINDOWS`] control windows.
+    pub fn promote(&mut self, l: usize) {
+        self.promoted[l] = PROMOTION_WINDOWS;
+        if self.codes[l] != FP32 {
+            self.codes[l] = FP32;
+            self.transitions += 1;
+        }
+    }
+
+    /// Recompute per-layer codes; call on the `T_ctrl` cadence.
+    /// Returns true if any code changed.
+    pub fn control_window(&mut self) -> bool {
+        if self.cfg.auto_threshold && !self.calibrated && self.ready() {
+            self.calibrate();
+        }
+        let mut changed = false;
+        for l in 0..self.codes.len() {
+            if self.promoted[l] > 0 {
+                self.promoted[l] -= 1;
+                continue; // pinned to FP32 this window
+            }
+            let v = self.vars[l].get();
+            if self.vars[l].steps() == 0 {
+                continue; // no data yet — keep default
+            }
+            let target = self.classify(v, self.codes[l]);
+            // Hysteresis rung limit: move at most one precision step.
+            let next = step_toward(self.codes[l], target);
+            if next != self.codes[l] {
+                self.codes[l] = next;
+                self.transitions += 1;
+                changed = true;
+            }
+        }
+        changed
+    }
+
+    /// The paper's threshold rule with a leave-side dead-band.
+    fn classify(&self, v: f64, current: i32) -> i32 {
+        let (lo, hi) = (self.tau_low, self.tau_high);
+        match current {
+            FP16 => {
+                // Leaving FP16 requires clearing τ_low by the dead-band.
+                if v >= hi {
+                    FP32
+                } else if v >= lo * (1.0 + HYSTERESIS) {
+                    BF16
+                } else {
+                    FP16
+                }
+            }
+            FP32 => {
+                // Leaving FP32 requires dropping below τ_high by the band.
+                if v < lo {
+                    FP16
+                } else if v < hi * (1.0 - HYSTERESIS) {
+                    BF16
+                } else {
+                    FP32
+                }
+            }
+            _ => {
+                if v < lo {
+                    FP16
+                } else if v >= hi {
+                    FP32
+                } else {
+                    BF16
+                }
+            }
+        }
+    }
+
+    /// True once every layer has at least one variance sample.
+    fn ready(&self) -> bool {
+        self.vars.iter().all(|e| e.steps() > 0)
+    }
+
+    /// Percentile auto-calibration: τ_low = p25, τ_high = p90 of the
+    /// observed cross-layer EMA variances (floored to keep ordering).
+    fn calibrate(&mut self) {
+        let mut vs: Vec<f64> = self.vars.iter().map(|e| e.get().max(1e-30)).collect();
+        vs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let lo = crate::util::stats::percentile(&vs, 0.25);
+        let hi = crate::util::stats::percentile(&vs, 0.90);
+        if hi > lo {
+            self.tau_low = lo;
+            self.tau_high = hi;
+        }
+        self.calibrated = true;
+    }
+
+    pub fn codes(&self) -> &[i32] {
+        &self.codes
+    }
+
+    /// Force a uniform code (used by the FP32 / static-AMP baselines and
+    /// the ablation with dynamic precision off).
+    pub fn pin_all(&mut self, code: i32) {
+        for c in self.codes.iter_mut() {
+            *c = code;
+        }
+    }
+
+    pub fn thresholds(&self) -> (f64, f64) {
+        (self.tau_low, self.tau_high)
+    }
+
+    pub fn variances(&self) -> Vec<f64> {
+        self.vars.iter().map(|e| e.get()).collect()
+    }
+
+    pub fn transitions(&self) -> u64 {
+        self.transitions
+    }
+}
+
+/// Move `from` one rung toward `target` on the FP16 < BF16 < FP32 ladder.
+fn step_toward(from: i32, target: i32) -> i32 {
+    debug_assert!(rung(from).is_some() && rung(target).is_some());
+    let (f, t) = (rung(from).unwrap(), rung(target).unwrap());
+    let next = if t > f { f + 1 } else if t < f { f - 1 } else { f };
+    [FP16, BF16, FP32][next]
+}
+
+fn rung(code: i32) -> Option<usize> {
+    match code {
+        FP16 => Some(0),
+        BF16 => Some(1),
+        FP32 => Some(2),
+        _ => None,
+    }
+}
+
+/// Micikevicius-style dynamic loss scaling for the FP16 leg: halve on
+/// overflow, double after `growth_interval` consecutive clean steps.
+#[derive(Debug, Clone)]
+pub struct LossScaler {
+    scale: f32,
+    growth_interval: u64,
+    clean_steps: u64,
+    overflows: u64,
+    min_scale: f32,
+    max_scale: f32,
+}
+
+impl LossScaler {
+    pub fn new(init: f32, growth_interval: u64) -> LossScaler {
+        LossScaler {
+            scale: init,
+            growth_interval: growth_interval.max(1),
+            clean_steps: 0,
+            overflows: 0,
+            min_scale: 1.0,
+            max_scale: 65536.0,
+        }
+    }
+
+    /// Fixed scale of 1 — used when no FP16 layer exists (pure FP32 run).
+    pub fn disabled() -> LossScaler {
+        LossScaler {
+            scale: 1.0,
+            growth_interval: u64::MAX,
+            clean_steps: 0,
+            overflows: 0,
+            min_scale: 1.0,
+            max_scale: 1.0,
+        }
+    }
+
+    pub fn scale(&self) -> f32 {
+        self.scale
+    }
+
+    pub fn overflows(&self) -> u64 {
+        self.overflows
+    }
+
+    /// Record one step's overflow flag. Returns true when the step must
+    /// be treated as skipped (the train graph already zeroes the update
+    /// on overflow; this is for telemetry/control).
+    pub fn update(&mut self, overflow: bool) -> bool {
+        if overflow {
+            self.overflows += 1;
+            self.clean_steps = 0;
+            self.scale = (self.scale * 0.5).max(self.min_scale);
+            true
+        } else {
+            self.clean_steps += 1;
+            if self.clean_steps >= self.growth_interval {
+                self.clean_steps = 0;
+                self.scale = (self.scale * 2.0).min(self.max_scale);
+            }
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> PrecisionConfig {
+        PrecisionConfig {
+            beta: 0.5,
+            tau_low: 1e-4,
+            tau_high: 1e-2,
+            auto_threshold: false,
+            default_code: BF16,
+        }
+    }
+
+    #[test]
+    fn starts_at_default_bf16() {
+        let pc = PrecisionController::new(3, cfg());
+        assert_eq!(pc.codes(), &[BF16, BF16, BF16]);
+    }
+
+    #[test]
+    fn low_variance_descends_to_fp16() {
+        let mut pc = PrecisionController::new(1, cfg());
+        for _ in 0..10 {
+            pc.observe(&[1e-7]);
+            pc.control_window();
+        }
+        assert_eq!(pc.codes(), &[FP16]);
+    }
+
+    #[test]
+    fn high_variance_ascends_to_fp32() {
+        let mut pc = PrecisionController::new(1, cfg());
+        for _ in 0..10 {
+            pc.observe(&[1.0]);
+            pc.control_window();
+        }
+        assert_eq!(pc.codes(), &[FP32]);
+    }
+
+    #[test]
+    fn one_rung_per_window() {
+        let mut pc = PrecisionController::new(1, cfg());
+        // Drive straight to FP16 territory: first window only reaches...
+        pc.observe(&[1e-8]);
+        pc.control_window();
+        assert_eq!(pc.codes(), &[FP16], "BF16→FP16 is one rung");
+        // ...now jump to FP32 territory: must pass through BF16.
+        pc.observe(&[10.0]);
+        pc.observe(&[10.0]);
+        pc.control_window();
+        assert_eq!(pc.codes(), &[BF16]);
+        pc.control_window();
+        assert_eq!(pc.codes(), &[FP32]);
+    }
+
+    #[test]
+    fn hysteresis_blocks_boundary_chatter() {
+        let mut pc = PrecisionController::new(1, cfg());
+        // Sit just above τ_low: from BF16 the enter-FP16 rule needs
+        // v < τ_low, so we stay BF16 …
+        for _ in 0..5 {
+            pc.observe(&[1.1e-4]);
+            pc.control_window();
+        }
+        assert_eq!(pc.codes(), &[BF16]);
+        let t0 = pc.transitions();
+        // … and oscillating ±5% around τ_low may settle into FP16 once
+        // (enter rule is the paper's exact threshold) but must not
+        // chatter back and forth: at most one transition total.
+        for i in 0..20 {
+            pc.observe(&[if i % 2 == 0 { 0.95e-4 } else { 1.05e-4 }]);
+            pc.control_window();
+        }
+        assert!(
+            pc.transitions() <= t0 + 1,
+            "boundary chatter: {} transitions",
+            pc.transitions() - t0
+        );
+    }
+
+    #[test]
+    fn promotion_pins_fp32_then_releases() {
+        let mut pc = PrecisionController::new(2, cfg());
+        for _ in 0..6 {
+            pc.observe(&[1e-8, 1e-8]); // both want FP16
+            pc.control_window();
+        }
+        assert_eq!(pc.codes(), &[FP16, FP16]);
+        pc.promote(1);
+        assert_eq!(pc.codes(), &[FP16, FP32]);
+        // Pinned for PROMOTION_WINDOWS windows even under tiny variance.
+        pc.observe(&[1e-8, 1e-8]);
+        pc.control_window();
+        assert_eq!(pc.codes()[1], FP32);
+        pc.control_window();
+        // After the pin expires it may descend again (one rung/window).
+        pc.control_window();
+        assert_eq!(pc.codes()[1], BF16);
+        pc.control_window();
+        assert_eq!(pc.codes()[1], FP16);
+    }
+
+    #[test]
+    fn auto_threshold_calibrates_from_distribution() {
+        let mut c = cfg();
+        c.auto_threshold = true;
+        // Absurd initial thresholds that would send everything to FP16.
+        c.tau_low = 1e3;
+        c.tau_high = 1e6;
+        let mut pc = PrecisionController::new(4, c);
+        // Layers with spread-out variances.
+        for _ in 0..8 {
+            pc.observe(&[1e-6, 1e-5, 1e-4, 1e-2]);
+            pc.control_window();
+        }
+        let (lo, hi) = pc.thresholds();
+        assert!(lo < hi && hi < 1e3, "calibrated: lo={lo} hi={hi}");
+        // The top-variance layer must not be FP16 after calibration.
+        assert_ne!(pc.codes()[3], FP16);
+    }
+
+    #[test]
+    fn nan_variance_ignored() {
+        let mut pc = PrecisionController::new(1, cfg());
+        pc.observe(&[f32::NAN]);
+        pc.control_window();
+        assert_eq!(pc.codes(), &[BF16], "NaN carries no signal");
+    }
+
+    #[test]
+    fn pin_all_overrides() {
+        let mut pc = PrecisionController::new(3, cfg());
+        pc.pin_all(FP32);
+        assert_eq!(pc.codes(), &[FP32, FP32, FP32]);
+    }
+
+    #[test]
+    fn loss_scaler_halves_and_grows() {
+        let mut ls = LossScaler::new(1024.0, 4);
+        assert!(ls.update(true));
+        assert_eq!(ls.scale(), 512.0);
+        for _ in 0..4 {
+            assert!(!ls.update(false));
+        }
+        assert_eq!(ls.scale(), 1024.0);
+        assert_eq!(ls.overflows(), 1);
+    }
+
+    #[test]
+    fn loss_scaler_clamps() {
+        let mut ls = LossScaler::new(2.0, 1);
+        ls.update(true);
+        ls.update(true);
+        ls.update(true);
+        assert_eq!(ls.scale(), 1.0, "floor at 1");
+        let mut hi = LossScaler::new(65536.0, 1);
+        hi.update(false);
+        assert_eq!(hi.scale(), 65536.0, "cap holds");
+    }
+
+    #[test]
+    fn disabled_scaler_is_inert() {
+        let mut ls = LossScaler::disabled();
+        ls.update(false);
+        ls.update(true);
+        assert_eq!(ls.scale(), 1.0);
+    }
+}

@@ -1,0 +1,128 @@
+//! Training augmentations (paper §4.1: "augmented using random
+//! horizontal flips and random crops"). Standard CIFAR recipe: flip with
+//! p=0.5, then pad-4 reflect-free zero pad + random 32×32 crop.
+
+use super::{IMG_C, IMG_H, IMG_W};
+use crate::util::rng::Rng;
+
+const PAD: usize = 4;
+
+/// In-place flip + crop on one normalized NHWC image.
+pub fn flip_crop(img: &mut [f32], rng: &mut Rng) {
+    debug_assert_eq!(img.len(), IMG_H * IMG_W * IMG_C);
+    if rng.bernoulli(0.5) {
+        hflip(img);
+    }
+    // Offsets into the virtual (32+2·4)² padded canvas.
+    let dy = rng.below((2 * PAD + 1) as u64) as isize - PAD as isize;
+    let dx = rng.below((2 * PAD + 1) as u64) as isize - PAD as isize;
+    if dy != 0 || dx != 0 {
+        shift_zero_pad(img, dy, dx);
+    }
+}
+
+/// Horizontal mirror.
+pub fn hflip(img: &mut [f32]) {
+    for y in 0..IMG_H {
+        for x in 0..IMG_W / 2 {
+            let xr = IMG_W - 1 - x;
+            for c in 0..IMG_C {
+                let a = (y * IMG_W + x) * IMG_C + c;
+                let b = (y * IMG_W + xr) * IMG_C + c;
+                img.swap(a, b);
+            }
+        }
+    }
+}
+
+/// Translate by (dy, dx), filling exposed pixels with 0 (the padded
+/// canvas is zero = per-channel mean after normalization).
+pub fn shift_zero_pad(img: &mut [f32], dy: isize, dx: isize) {
+    let src = img.to_vec();
+    for y in 0..IMG_H as isize {
+        for x in 0..IMG_W as isize {
+            let (sy, sx) = (y + dy, x + dx);
+            let dst = ((y as usize * IMG_W) + x as usize) * IMG_C;
+            if (0..IMG_H as isize).contains(&sy) && (0..IMG_W as isize).contains(&sx) {
+                let s = ((sy as usize * IMG_W) + sx as usize) * IMG_C;
+                img[dst..dst + IMG_C].copy_from_slice(&src[s..s + IMG_C]);
+            } else {
+                img[dst..dst + IMG_C].fill(0.0);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::IMG_ELEMS;
+
+    fn ramp() -> Vec<f32> {
+        (0..IMG_ELEMS).map(|i| i as f32).collect()
+    }
+
+    #[test]
+    fn hflip_is_involution() {
+        let orig = ramp();
+        let mut img = orig.clone();
+        hflip(&mut img);
+        assert_ne!(img, orig);
+        hflip(&mut img);
+        assert_eq!(img, orig);
+    }
+
+    #[test]
+    fn hflip_mirrors_rows() {
+        let mut img = ramp();
+        hflip(&mut img);
+        // Pixel (0,0) must now hold the old (0,31).
+        for c in 0..IMG_C {
+            assert_eq!(img[c], ((IMG_W - 1) * IMG_C + c) as f32);
+        }
+    }
+
+    #[test]
+    fn shift_moves_and_zero_fills() {
+        let mut img = ramp();
+        shift_zero_pad(&mut img, 1, 0); // read from row y+1
+        // Bottom row (y=31) reads from y=32 → zero-filled.
+        let last = (IMG_H - 1) * IMG_W * IMG_C;
+        assert!(img[last..last + IMG_W * IMG_C].iter().all(|&v| v == 0.0));
+        // Top row reads old row 1.
+        assert_eq!(img[0], (IMG_W * IMG_C) as f32);
+    }
+
+    #[test]
+    fn zero_shift_is_identity() {
+        let orig = ramp();
+        let mut img = orig.clone();
+        shift_zero_pad(&mut img, 0, 0);
+        assert_eq!(img, orig);
+    }
+
+    #[test]
+    fn crop_offsets_bounded_by_pad() {
+        // Over many draws, no shift may exceed ±PAD and both extremes
+        // should be hit.
+        let mut rng = Rng::new(11);
+        let mut seen_neg = false;
+        let mut seen_pos = false;
+        for _ in 0..500 {
+            let d = rng.below((2 * PAD + 1) as u64) as isize - PAD as isize;
+            assert!(d.abs() <= PAD as isize);
+            seen_neg |= d == -(PAD as isize);
+            seen_pos |= d == PAD as isize;
+        }
+        assert!(seen_neg && seen_pos);
+    }
+
+    #[test]
+    fn flip_crop_deterministic_per_rng_stream() {
+        let mut a = ramp();
+        let mut b = ramp();
+        flip_crop(&mut a, &mut Rng::stream(5, 9));
+        flip_crop(&mut b, &mut Rng::stream(5, 9));
+        assert_eq!(a, b);
+    }
+}

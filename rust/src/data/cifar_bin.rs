@@ -1,0 +1,155 @@
+//! Loader for the canonical CIFAR binary distributions
+//! (`cifar-10-batches-bin`: 5×10000 train records of 1+3072 bytes CHW;
+//! `cifar-100-binary`: train.bin/test.bin with 2 label bytes). Used
+//! automatically when the directory exists (DESIGN.md §5); otherwise the
+//! synthetic generator stands in.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::{Dataset, IMG_C, IMG_ELEMS, IMG_H, IMG_W, MEAN, STD};
+
+pub struct CifarBin {
+    num_classes: usize,
+    /// Raw records: label(s) + CHW pixels, contiguous.
+    data: Vec<u8>,
+    record: usize,
+    label_off: usize,
+    len: usize,
+}
+
+impl CifarBin {
+    pub fn load(dir: &Path, num_classes: usize, train: bool) -> Result<CifarBin> {
+        let (files, label_bytes): (Vec<String>, usize) = match (num_classes, train) {
+            (10, true) => (
+                (1..=5).map(|i| format!("data_batch_{i}.bin")).collect(),
+                1,
+            ),
+            (10, false) => (vec!["test_batch.bin".into()], 1),
+            (100, true) => (vec!["train.bin".into()], 2),
+            (100, false) => (vec!["test.bin".into()], 2),
+            _ => anyhow::bail!("unsupported num_classes {num_classes}"),
+        };
+        let record = label_bytes + IMG_ELEMS;
+        let mut data = Vec::new();
+        for f in &files {
+            let p = dir.join(f);
+            let bytes =
+                std::fs::read(&p).with_context(|| format!("reading CIFAR binary {p:?}"))?;
+            anyhow::ensure!(bytes.len() % record == 0, "{p:?}: truncated records");
+            data.extend_from_slice(&bytes);
+        }
+        let len = data.len() / record;
+        anyhow::ensure!(len > 0, "no records in {dir:?}");
+        Ok(CifarBin {
+            num_classes,
+            data,
+            record,
+            // CIFAR-100 records are [coarse, fine, pixels]; fine is the
+            // 100-way label.
+            label_off: label_bytes - 1,
+            len,
+        })
+    }
+}
+
+impl Dataset for CifarBin {
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    fn example(&self, idx: usize, out: &mut [f32]) -> i32 {
+        let rec = &self.data[idx * self.record..(idx + 1) * self.record];
+        let label = rec[self.label_off] as i32;
+        let px = &rec[self.record - IMG_ELEMS..];
+        // CHW u8 → normalized NHWC f32.
+        for c in 0..IMG_C {
+            for y in 0..IMG_H {
+                for x in 0..IMG_W {
+                    let raw = px[c * IMG_H * IMG_W + y * IMG_W + x] as f32 / 255.0;
+                    out[(y * IMG_W + x) * IMG_C + c] = (raw - MEAN[c]) / STD[c];
+                }
+            }
+        }
+        label
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_cifar10_dir() -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("triaccel_cifar_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // Two records per batch file: label i, pixels = i everywhere.
+        for f in 1..=5 {
+            let mut bytes = Vec::new();
+            for r in 0..2u8 {
+                bytes.push((f as u8 + r) % 10); // label
+                bytes.extend(std::iter::repeat(10 * f as u8 + r).take(IMG_ELEMS));
+            }
+            std::fs::write(dir.join(format!("data_batch_{f}.bin")), &bytes).unwrap();
+        }
+        std::fs::write(
+            dir.join("test_batch.bin"),
+            {
+                let mut b = vec![7u8];
+                b.extend(std::iter::repeat(128u8).take(IMG_ELEMS));
+                b
+            },
+        )
+        .unwrap();
+        dir
+    }
+
+    #[test]
+    fn loads_and_decodes_cifar10_layout() {
+        let dir = fake_cifar10_dir();
+        let ds = CifarBin::load(&dir, 10, true).unwrap();
+        assert_eq!(ds.len(), 10, "5 files × 2 records");
+        let mut buf = vec![0f32; IMG_ELEMS];
+        let l = ds.example(0, &mut buf);
+        assert_eq!(l, 1);
+        // Constant image 10/255 normalized on channel 0.
+        let want = (10.0 / 255.0 - MEAN[0]) / STD[0];
+        assert!((buf[0] - want).abs() < 1e-6);
+        let test = CifarBin::load(&dir, 10, false).unwrap();
+        assert_eq!(test.len(), 1);
+        let lt = test.example(0, &mut buf);
+        assert_eq!(lt, 7);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(CifarBin::load(Path::new("/nonexistent/xyz"), 10, true).is_err());
+    }
+
+    #[test]
+    fn truncated_file_rejected() {
+        let dir = std::env::temp_dir().join(format!("triaccel_trunc_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("test_batch.bin"), vec![0u8; 100]).unwrap();
+        assert!(CifarBin::load(&dir, 10, false).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cifar100_uses_fine_label() {
+        let dir = std::env::temp_dir().join(format!("triaccel_c100_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut bytes = vec![3u8, 42u8]; // coarse=3, fine=42
+        bytes.extend(std::iter::repeat(0u8).take(IMG_ELEMS));
+        std::fs::write(dir.join("train.bin"), &bytes).unwrap();
+        let ds = CifarBin::load(&dir, 100, true).unwrap();
+        let mut buf = vec![0f32; IMG_ELEMS];
+        assert_eq!(ds.example(0, &mut buf), 42);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,197 @@
+//! Data pipeline substrate: CIFAR-10/100 sources (real binaries when
+//! present, deterministic synthetic otherwise — DESIGN.md §5), the
+//! paper's augmentations (random horizontal flip + pad-4 random crop),
+//! and a dynamic-batch iterator that serves whatever batch size the
+//! elastic controller currently wants.
+
+pub mod augment;
+pub mod cifar_bin;
+pub mod synthetic;
+
+use anyhow::Result;
+
+use crate::runtime::Batch;
+use crate::util::rng::Rng;
+
+/// CIFAR per-channel normalization constants (the paper: "all images are
+/// normalized per channel").
+pub const MEAN: [f32; 3] = [0.4914, 0.4822, 0.4465];
+pub const STD: [f32; 3] = [0.2470, 0.2435, 0.2616];
+
+pub const IMG_H: usize = 32;
+pub const IMG_W: usize = 32;
+pub const IMG_C: usize = 3;
+pub const IMG_ELEMS: usize = IMG_H * IMG_W * IMG_C;
+
+/// An indexable example source producing normalized NHWC f32 images.
+/// Both the synthetic generator and the real-binary loader implement
+/// this, so the trainer is agnostic to the source (DESIGN.md §5: "the
+/// loader interface is identical for both").
+pub trait Dataset: Send {
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    fn num_classes(&self) -> usize;
+    /// Write example `idx` (un-augmented, normalized) into `out`
+    /// (NHWC, `IMG_ELEMS` floats) and return its label.
+    fn example(&self, idx: usize, out: &mut [f32]) -> i32;
+}
+
+/// Resolve the data source for a model key: real CIFAR binaries if the
+/// well-known directory exists, else the synthetic generator.
+pub fn auto_source(num_classes: usize, train: bool, examples: usize, seed: u64) -> Box<dyn Dataset> {
+    let dir = match num_classes {
+        10 => "data/cifar-10-batches-bin",
+        _ => "data/cifar-100-binary",
+    };
+    if let Ok(ds) = cifar_bin::CifarBin::load(std::path::Path::new(dir), num_classes, train) {
+        return Box::new(ds);
+    }
+    Box::new(synthetic::SyntheticCifar::new(num_classes, examples, train, seed))
+}
+
+/// Epoch-shuffled, augmentation-applying iterator that serves batches of
+/// *any* requested size — the bridge between the fixed-size dataset and
+/// the elastic batch controller. Order within an epoch is fixed by
+/// (seed, epoch); batch boundaries move freely as B(t) changes.
+pub struct BatchIter {
+    ds: Box<dyn Dataset>,
+    order: Vec<u32>,
+    pos: usize,
+    epoch: u64,
+    seed: u64,
+    augment: bool,
+}
+
+impl BatchIter {
+    pub fn new(ds: Box<dyn Dataset>, seed: u64, augment: bool) -> BatchIter {
+        let mut it = BatchIter {
+            order: (0..ds.len() as u32).collect(),
+            ds,
+            pos: 0,
+            epoch: 0,
+            seed,
+            augment,
+        };
+        it.reshuffle();
+        it
+    }
+
+    pub fn dataset(&self) -> &dyn Dataset {
+        self.ds.as_ref()
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Examples remaining in the current epoch.
+    pub fn remaining(&self) -> usize {
+        self.order.len() - self.pos
+    }
+
+    fn reshuffle(&mut self) {
+        let mut rng = Rng::stream(self.seed, 0x5348 ^ self.epoch);
+        rng.shuffle(&mut self.order);
+        self.pos = 0;
+    }
+
+    /// Advance to the next epoch (reshuffles; resets position).
+    pub fn next_epoch(&mut self) {
+        self.epoch += 1;
+        self.reshuffle();
+    }
+
+    /// Draw the next `n` examples. Wraps into the next epoch when the
+    /// current one is exhausted mid-batch (keeps every batch full, which
+    /// the fixed-shape AOT executables require).
+    pub fn next_batch(&mut self, n: usize) -> Result<Batch> {
+        anyhow::ensure!(n > 0 && n <= self.ds.len(), "bad batch size {n}");
+        let mut x = vec![0f32; n * IMG_ELEMS];
+        let mut y = vec![0i32; n];
+        for i in 0..n {
+            if self.pos >= self.order.len() {
+                self.next_epoch();
+            }
+            let idx = self.order[self.pos] as usize;
+            self.pos += 1;
+            let out = &mut x[i * IMG_ELEMS..(i + 1) * IMG_ELEMS];
+            y[i] = self.ds.example(idx, out);
+            if self.augment {
+                // Keyed by (seed, epoch, example): bit-reproducible
+                // across batch-size histories.
+                let mut rng =
+                    Rng::stream(self.seed ^ 0xA06, self.epoch.wrapping_mul(1_000_003) ^ idx as u64);
+                augment::flip_crop(out, &mut rng);
+            }
+        }
+        Ok(Batch::new(x, y))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn iter(n: usize) -> BatchIter {
+        let ds = synthetic::SyntheticCifar::new(10, n, true, 7);
+        BatchIter::new(Box::new(ds), 3, true)
+    }
+
+    #[test]
+    fn batches_have_requested_size() {
+        let mut it = iter(100);
+        for &n in &[8usize, 32, 17, 96] {
+            let b = it.next_batch(n).unwrap();
+            assert_eq!(b.n, n);
+            assert_eq!(b.x.len(), n * IMG_ELEMS);
+        }
+    }
+
+    #[test]
+    fn epoch_order_is_deterministic() {
+        let mut a = iter(64);
+        let mut b = iter(64);
+        let ba = a.next_batch(16).unwrap();
+        let bb = b.next_batch(16).unwrap();
+        assert_eq!(ba.y, bb.y);
+        assert_eq!(ba.x, bb.x);
+    }
+
+    #[test]
+    fn reshuffle_changes_order() {
+        let mut it = iter(256);
+        let b1 = it.next_batch(32).unwrap();
+        it.next_epoch();
+        let b2 = it.next_batch(32).unwrap();
+        assert_ne!(b1.y, b2.y, "different epoch, different order");
+    }
+
+    #[test]
+    fn wraps_across_epoch_boundary() {
+        let mut it = iter(40);
+        let _ = it.next_batch(32).unwrap();
+        let b = it.next_batch(32).unwrap(); // 8 left + 24 from next epoch
+        assert_eq!(b.n, 32);
+        assert_eq!(it.epoch(), 1);
+    }
+
+    #[test]
+    fn labels_in_range_and_normalized_pixels() {
+        let mut it = iter(128);
+        let b = it.next_batch(64).unwrap();
+        assert!(b.y.iter().all(|&y| (0..10).contains(&y)));
+        // Normalized CIFAR pixels live in roughly [-3, 3].
+        assert!(b.x.iter().all(|&v| v.abs() < 4.0));
+        let mean: f32 = b.x.iter().sum::<f32>() / b.x.len() as f32;
+        assert!(mean.abs() < 1.0, "roughly centered, got {mean}");
+    }
+
+    #[test]
+    fn oversized_batch_rejected() {
+        let mut it = iter(16);
+        assert!(it.next_batch(17).is_err());
+        assert!(it.next_batch(0).is_err());
+    }
+}

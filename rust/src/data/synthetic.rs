@@ -1,0 +1,221 @@
+//! Deterministic synthetic CIFAR (DESIGN.md §5 substitution for the
+//! real downloads). Class-conditional construction:
+//!
+//! * each class gets a smooth low-frequency *prototype* (sum of a few
+//!   seeded 2-D cosine modes per channel) — this is what makes classes
+//!   separable, so accuracy is a meaningful (if easier) signal;
+//! * each example adds a per-example low-frequency deformation and
+//!   white noise, so gradients carry realistic per-layer variance
+//!   structure (what the precision controller consumes);
+//! * train and test splits draw from the same distribution with
+//!   disjoint example streams.
+//!
+//! Everything is a pure function of (seed, class, index): no storage
+//! beyond the prototypes, examples are synthesized on demand.
+
+use super::{Dataset, IMG_C, IMG_ELEMS, IMG_H, IMG_W, MEAN, STD};
+use crate::util::rng::Rng;
+
+/// Modes per channel in a class prototype.
+const MODES: usize = 4;
+/// Amplitude of the per-example deformation relative to the prototype.
+const DEFORM: f32 = 1.6;
+/// White-noise sigma in raw pixel space (0..1).
+const NOISE: f32 = 0.12;
+
+struct Mode {
+    fy: f32,
+    fx: f32,
+    phase: f32,
+    amp: f32,
+}
+
+pub struct SyntheticCifar {
+    num_classes: usize,
+    len: usize,
+    /// Raw-space prototypes, one image per class.
+    protos: Vec<Vec<f32>>,
+    seed: u64,
+    /// Split tag (train=0, test=1) — keeps example streams disjoint.
+    split: u64,
+}
+
+impl SyntheticCifar {
+    pub fn new(num_classes: usize, len: usize, train: bool, seed: u64) -> SyntheticCifar {
+        let protos = (0..num_classes)
+            .map(|c| Self::prototype(seed, c))
+            .collect();
+        SyntheticCifar {
+            num_classes,
+            len,
+            protos,
+            seed,
+            split: if train { 0 } else { 1 },
+        }
+    }
+
+    /// Smooth class prototype in raw [0,1] pixel space.
+    fn prototype(seed: u64, class: usize) -> Vec<f32> {
+        let mut rng = Rng::stream(seed, 0x5052 ^ class as u64);
+        let mut img = vec![0.5f32; IMG_ELEMS];
+        for c in 0..IMG_C {
+            let modes: Vec<Mode> = (0..MODES)
+                .map(|_| Mode {
+                    fy: 1.0 + rng.next_f32() * 3.0,
+                    fx: 1.0 + rng.next_f32() * 3.0,
+                    phase: rng.next_f32() * std::f32::consts::TAU,
+                    amp: 0.03 + rng.next_f32() * 0.05,
+                })
+                .collect();
+            for y in 0..IMG_H {
+                for x in 0..IMG_W {
+                    let mut v = 0.0;
+                    for m in &modes {
+                        let ty = y as f32 / IMG_H as f32;
+                        let tx = x as f32 / IMG_W as f32;
+                        v += m.amp
+                            * (std::f32::consts::TAU * (m.fy * ty + m.fx * tx) + m.phase).cos();
+                    }
+                    img[(y * IMG_W + x) * IMG_C + c] += v;
+                }
+            }
+        }
+        img
+    }
+}
+
+impl Dataset for SyntheticCifar {
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    fn example(&self, idx: usize, out: &mut [f32]) -> i32 {
+        debug_assert_eq!(out.len(), IMG_ELEMS);
+        // Balanced labels: stripes over the index space, then shuffled
+        // implicitly by the BatchIter's epoch permutation.
+        let label = (idx % self.num_classes) as i32;
+        let proto = &self.protos[label as usize];
+
+        let mut rng = Rng::stream(
+            self.seed ^ (self.split << 60),
+            0xE9 ^ (idx as u64).wrapping_mul(0x9E37_79B9),
+        );
+        // Per-example smooth deformation: one extra cosine mode.
+        let fy = 1.0 + rng.next_f32() * 2.0;
+        let fx = 1.0 + rng.next_f32() * 2.0;
+        let phase = rng.next_f32() * std::f32::consts::TAU;
+        let amp = DEFORM * (0.5 + rng.next_f32());
+
+        for y in 0..IMG_H {
+            let ty = y as f32 / IMG_H as f32;
+            for x in 0..IMG_W {
+                let tx = x as f32 / IMG_W as f32;
+                let d = amp
+                    * 0.1
+                    * (std::f32::consts::TAU * (fy * ty + fx * tx) + phase).cos();
+                for c in 0..IMG_C {
+                    let i = (y * IMG_W + x) * IMG_C + c;
+                    let raw = (proto[i] + d + NOISE * rng.next_normal()).clamp(0.0, 1.0);
+                    out[i] = (raw - MEAN[c]) / STD[c];
+                }
+            }
+        }
+        label
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_index() {
+        let ds = SyntheticCifar::new(10, 100, true, 42);
+        let mut a = vec![0f32; IMG_ELEMS];
+        let mut b = vec![0f32; IMG_ELEMS];
+        let la = ds.example(17, &mut a);
+        let lb = ds.example(17, &mut b);
+        assert_eq!(la, lb);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn different_indices_differ() {
+        let ds = SyntheticCifar::new(10, 100, true, 42);
+        let mut a = vec![0f32; IMG_ELEMS];
+        let mut b = vec![0f32; IMG_ELEMS];
+        ds.example(0, &mut a);
+        ds.example(10, &mut b); // same class, different example
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn train_test_streams_disjoint() {
+        let tr = SyntheticCifar::new(10, 100, true, 42);
+        let te = SyntheticCifar::new(10, 100, false, 42);
+        let mut a = vec![0f32; IMG_ELEMS];
+        let mut b = vec![0f32; IMG_ELEMS];
+        tr.example(3, &mut a);
+        te.example(3, &mut b);
+        assert_ne!(a, b, "same index, different split");
+    }
+
+    #[test]
+    fn labels_balanced() {
+        let ds = SyntheticCifar::new(10, 1000, true, 1);
+        let mut counts = [0usize; 10];
+        let mut buf = vec![0f32; IMG_ELEMS];
+        for i in 0..1000 {
+            counts[ds.example(i, &mut buf) as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 100), "{counts:?}");
+    }
+
+    #[test]
+    fn classes_are_separable_by_prototype_distance() {
+        // Mean within-class distance must be well below between-class
+        // distance — otherwise training signal is pure noise.
+        let ds = SyntheticCifar::new(10, 1000, true, 5);
+        let ex = |i: usize| {
+            let mut v = vec![0f32; IMG_ELEMS];
+            let l = ds.example(i, &mut v);
+            (v, l)
+        };
+        let dist = |a: &[f32], b: &[f32]| -> f64 {
+            a.iter()
+                .zip(b)
+                .map(|(&x, &y)| ((x - y) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt()
+        };
+        // Statistical: average over many pairs (the task is deliberately
+        // hard per-pair — DEFORM/NOISE dominate single distances).
+        let mut within = 0.0;
+        let mut between = 0.0;
+        let pairs = 30;
+        for k in 0..pairs {
+            let (a, _) = ex(k * 10); // class 0 examples
+            let (b, _) = ex(k * 10 + 100); // class 0, other example
+            let (c, _) = ex(k * 10 + 1); // class 1
+            within += dist(&a, &b);
+            between += dist(&a, &c);
+        }
+        assert!(
+            between > within * 1.02,
+            "between {between} vs within {within} over {pairs} pairs"
+        );
+    }
+
+    #[test]
+    fn cifar100_shape() {
+        let ds = SyntheticCifar::new(100, 500, true, 9);
+        assert_eq!(ds.num_classes(), 100);
+        let mut buf = vec![0f32; IMG_ELEMS];
+        let l = ds.example(499, &mut buf);
+        assert!((0..100).contains(&l));
+    }
+}

@@ -1,0 +1,264 @@
+//! Table/figure regeneration harness (DESIGN.md §3): runs the paper's
+//! (dataset × architecture × method) grid over seeds and prints rows in
+//! Table 1 / Table 2 format with mean±std, exactly the §4.3 protocol
+//! ("each experiment is repeated 3 times with different random seeds").
+//!
+//! Absolute numbers live on this CPU substrate; the *shape* — method
+//! ordering, memory reductions, ablation progression — is the
+//! reproduction target (repro band 0/5 ⇒ simulated hardware, DESIGN.md
+//! §5).
+
+use anyhow::Result;
+
+use crate::config::{Ablation, Config, Method};
+
+use crate::metrics::efficiency_score;
+use crate::runtime::Engine;
+use crate::train::Trainer;
+use crate::util::stats::Welford;
+
+/// Aggregate of one (model, method, config) cell over seeds.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    pub model_key: String,
+    pub label: String,
+    pub acc: Welford,
+    pub wall_s: Welford,
+    pub modeled_s: Welford,
+    pub peak_gb: Welford,
+    pub score: Welford,
+}
+
+impl CellResult {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<18} {:<16} acc {:>5.1}±{:>4.2}%  time {:>7.2}±{:.2}s (wall {:>6.2}s)  vram {:>6.4}±{:.4}GB  score {:>6.2}",
+            self.model_key,
+            self.label,
+            self.acc.mean(),
+            self.acc.std(),
+            self.modeled_s.mean(),
+            self.modeled_s.std(),
+            self.wall_s.mean(),
+            self.peak_gb.mean(),
+            self.peak_gb.std(),
+            self.score.mean(),
+        )
+    }
+}
+
+/// Run one cell (fixed model/method/ablation) across `seeds`, applying
+/// `tweak` to each seed's config (epoch budget etc.).
+pub fn run_cell(
+    engine: &Engine,
+    model_key: &str,
+    method: Method,
+    label: &str,
+    seeds: &[u64],
+    tweak: &dyn Fn(&mut Config),
+) -> Result<CellResult> {
+    let mut cell = CellResult {
+        model_key: model_key.to_string(),
+        label: label.to_string(),
+        acc: Welford::default(),
+        wall_s: Welford::default(),
+        modeled_s: Welford::default(),
+        peak_gb: Welford::default(),
+        score: Welford::default(),
+    };
+    for &seed in seeds {
+        let mut cfg = Config::cell(model_key, method, seed);
+        tweak(&mut cfg);
+        let mut tr = Trainer::new(engine, cfg)?;
+        let s = tr.run()?;
+        cell.acc.push(s.test_acc_pct);
+        cell.wall_s.push(s.wall_s_per_epoch);
+        cell.modeled_s.push(s.modeled_s_per_epoch);
+        cell.peak_gb.push(s.peak_vram_gb);
+        cell.score.push(s.eff_score);
+    }
+    Ok(cell)
+}
+
+/// Table 1: methods × model keys. Returns rows in paper order.
+pub fn table1(
+    engine: &Engine,
+    model_keys: &[&str],
+    seeds: &[u64],
+    tweak: &dyn Fn(&mut Config),
+) -> Result<Vec<CellResult>> {
+    let mut rows = Vec::new();
+    for key in model_keys {
+        for method in [Method::Fp32, Method::AmpStatic, Method::TriAccel] {
+            rows.push(run_cell(engine, key, method, method.name(), seeds, tweak)?);
+        }
+    }
+    Ok(rows)
+}
+
+/// Table 2 ablation rows for one model: standard, +batch, +precision,
+/// full (paper order).
+pub fn table2(
+    engine: &Engine,
+    model_key: &str,
+    seeds: &[u64],
+    tweak: &dyn Fn(&mut Config),
+) -> Result<Vec<CellResult>> {
+    let rows_spec: [(&str, Method, Ablation); 4] = [
+        ("Standard Training", Method::Fp32, Ablation::none()),
+        (
+            "+ Dynamic Batch",
+            Method::TriAccel,
+            Ablation { dynamic_precision: false, dynamic_batch: true, curvature: false },
+        ),
+        (
+            "+ Dynamic Precision",
+            Method::TriAccel,
+            Ablation { dynamic_precision: true, dynamic_batch: false, curvature: false },
+        ),
+        ("+ Full Tri-Accel", Method::TriAccel, Ablation::full()),
+    ];
+    let mut rows = Vec::new();
+    for (label, method, ablation) in rows_spec {
+        let t = move |cfg: &mut Config| {
+            cfg.ablation = ablation;
+            tweak(cfg);
+        };
+        rows.push(run_cell(engine, model_key, method, label, seeds, &t)?);
+    }
+    Ok(rows)
+}
+
+/// Print Table 2 with the paper's "Reduction" column (vs the first row).
+pub fn print_table2(rows: &[CellResult]) {
+    let base = rows[0].peak_gb.mean();
+    println!("{:<22} {:>10} {:>10}", "Configuration", "VRAM (GB)", "Reduction");
+    for (i, r) in rows.iter().enumerate() {
+        let red = if i == 0 {
+            "-".to_string()
+        } else {
+            format!("{:.1}%", 100.0 * (base - r.peak_gb.mean()) / base)
+        };
+        println!("{:<22} {:>10.4} {:>10}", r.label, r.peak_gb.mean(), red);
+    }
+}
+
+/// The adaptive-behaviour figure (abstract: "efficiency gradually
+/// improving over the course of training"): per-epoch efficiency-score
+/// and batch-size series for one Tri-Accel run.
+pub struct AdaptiveTrace {
+    pub epoch_eff: Vec<(usize, f64)>,
+    pub batch_trace: Vec<(u64, usize)>,
+    pub mix_trace: Vec<(usize, f64, f64, f64)>,
+}
+
+pub fn fig_adaptive(
+    engine: &Engine,
+    model_key: &str,
+    seed: u64,
+    tweak: &dyn Fn(&mut Config),
+) -> Result<AdaptiveTrace> {
+    let mut cfg = Config::cell(model_key, Method::TriAccel, seed);
+    tweak(&mut cfg);
+    let mut tr = Trainer::new(engine, cfg)?;
+    tr.run()?;
+    let epoch_eff = tr
+        .metrics
+        .epochs
+        .iter()
+        .map(|e| (e.epoch, e.eff_score))
+        .collect();
+    let mix_trace = tr
+        .metrics
+        .epochs
+        .iter()
+        .map(|e| (e.epoch, e.mix.fp16, e.mix.bf16, e.mix.fp32))
+        .collect();
+    Ok(AdaptiveTrace {
+        epoch_eff,
+        batch_trace: tr.metrics.batch_trace.clone(),
+        mix_trace,
+    })
+}
+
+/// Shared "small budget" tweak used by the bench targets so `cargo
+/// bench` completes in minutes on this single-core CPU substrate;
+/// `reproduce_tables` exposes knobs for bigger runs.
+///
+/// `batch_init` drops to 32 (the smallest resnet/effnet bucket): the
+/// memory model and controller dynamics are batch-relative, so the
+/// Table-1/2 *shape* is preserved while a B=96 CPU step (~30s on one
+/// core for ResNet-18) would make regeneration infeasible. The paper's
+/// B=96 is restored by `--set batch_init=96` / env overrides.
+pub fn quick_budget(steps: usize, epochs: usize) -> impl Fn(&mut Config) {
+    move |cfg: &mut Config| {
+        cfg.steps_per_epoch = Some(steps);
+        cfg.epochs = epochs;
+        cfg.train_examples = 4096;
+        cfg.eval_examples = 128;
+        // B=48 keeps the paper's b_curv(32) < B geometry so probe
+        // buffers hide under the activation headroom (memsim test
+        // `paper_geometry_probe_hides_under_activation_headroom`).
+        cfg.batch_init = 48;
+        // Place the utilization band so the BF16 footprint (~0.65 of
+        // the strict budget) holds rather than grows — the paper's
+        // shrink-or-hold Table-2 regime.
+        cfg.rho_low = 0.55;
+        cfg.t_ctrl = 3;
+        cfg.t_curv = 4;
+        cfg.curv_warmup = 1;
+        cfg.batch_cooldown = 4;
+        cfg.warmup_epochs = 1;
+        cfg.mem_budget_gb = 0.0; // auto: strict budget around the workload
+    }
+}
+
+/// Report the headline abstract claims from a Table-1 triple
+/// (FP32, AMP, Tri-Accel) — % time reduction, % memory reduction,
+/// accuracy delta — so EXPERIMENTS.md can quote ours vs the paper's.
+pub fn headline(fp32: &CellResult, tri: &CellResult) -> String {
+    let dt = 100.0 * (fp32.modeled_s.mean() - tri.modeled_s.mean()) / fp32.modeled_s.mean();
+    let dm = 100.0 * (fp32.peak_gb.mean() - tri.peak_gb.mean()) / fp32.peak_gb.mean();
+    let da = tri.acc.mean() - fp32.acc.mean();
+    format!(
+        "vs FP32: time −{dt:.1}%  memory −{dm:.1}%  accuracy {}{da:.1}pp  score ×{:.2}",
+        if da >= 0.0 { "+" } else { "" },
+        tri.score.mean() / fp32.score.mean().max(1e-9),
+    )
+}
+
+/// Sanity used by tests: a VramSim-backed budget check that the elastic
+/// controller's ladder can actually express (at least two buckets fit).
+pub fn ladder_headroom(engine: &Engine, model_key: &str, budget_gb: f64) -> Result<usize> {
+    let entry = engine.manifest.model(model_key)?.clone();
+    let mut sim = crate::memsim::VramSim::new(&entry, budget_gb, 0.0, 0);
+    let codes = vec![crate::manifest::BF16; entry.num_layers];
+    Ok(entry
+        .train_buckets
+        .iter()
+        .filter(|&&b| sim.would_fit(b, &codes, false))
+        .count())
+}
+
+/// Convenience: pretty header + rows.
+pub fn print_table1(rows: &[CellResult]) {
+    println!(
+        "{:<18} {:<16} {:>7} {:>12} {:>12} {:>8}",
+        "Model", "Method", "Acc(%)", "Time(s)", "VRAM(GB)", "Score"
+    );
+    for r in rows {
+        println!(
+            "{:<18} {:<16} {:>6.1}±{:<4.2} {:>8.2}±{:<4.2} {:>8.4}±{:<6.4} {:>8.2}",
+            r.model_key,
+            r.label,
+            r.acc.mean(),
+            r.acc.std(),
+            r.modeled_s.mean(),
+            r.modeled_s.std(),
+            r.peak_gb.mean(),
+            r.peak_gb.std(),
+            r.score.mean()
+        );
+    }
+    let _ = efficiency_score(0.0, 1.0, 1.0); // keep the import honest
+}

@@ -1,0 +1,30 @@
+//! # Tri-Accel
+//!
+//! Reproduction of *"Tri-Accel: Curvature-Aware Precision-Adaptive and
+//! Memory-Elastic Optimization for Efficient GPU Usage"* as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L1** — Pallas numeric-format kernels (qdq / mp_matmul / grad_stats),
+//!   authored in `python/compile/kernels/` and lowered into the HLO.
+//! * **L2** — JAX train/eval/curvature graphs (`python/compile/`), AOT-
+//!   lowered to HLO text artifacts by `make artifacts`.
+//! * **L3** — this crate: the unified control loop (precision × curvature
+//!   × elastic batching), the PJRT runtime that executes the artifacts,
+//!   and every substrate (data pipeline, VRAM simulator, metrics, config,
+//!   offline-build utilities).
+//!
+//! Python never runs on the training path: after `make artifacts` the
+//! `tri-accel` binary is self-contained.
+
+pub mod checkpoint;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod harness;
+pub mod manifest;
+pub mod memsim;
+pub mod metrics;
+pub mod runtime;
+pub mod schedule;
+pub mod train;
+pub mod util;

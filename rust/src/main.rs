@@ -1,0 +1,244 @@
+//! `tri-accel` — leader entrypoint / CLI.
+//!
+//! Subcommands:
+//!   info                          artifact + model inventory
+//!   train   [--model K] [--method M] [--epochs N] [--set k=v ...]
+//!   table1  [--models a,b] [--seeds 0,1,2] [--steps N] [--epochs N]
+//!   table2  [--model K]    [--seeds 0,1,2] [--steps N] [--epochs N]
+//!   fig     [--model K]    [--seed S]      [--steps N] [--epochs N]
+//!
+//! Run `make artifacts` first; the binary only needs `artifacts/`.
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use tri_accel::config::{Config, Method};
+use tri_accel::harness;
+use tri_accel::metrics::PrecisionMix;
+use tri_accel::runtime::Engine;
+use tri_accel::train::Trainer;
+use tri_accel::util::args::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    match args.subcommand.as_deref() {
+        Some("info") => info(&artifacts, &args),
+        Some("train") | None => train(&artifacts, &args),
+        Some("table1") => table1(&artifacts, &args),
+        Some("table2") => table2(&artifacts, &args),
+        Some("fig") => fig(&artifacts, &args),
+        Some("compare") => compare(&args),
+        Some(other) => {
+            anyhow::bail!("unknown subcommand `{other}` (info|train|table1|table2|fig|compare)")
+        }
+    }
+}
+
+/// Compare two run JSONs written by `train` (`runs/<tag>.json`): final
+/// accuracy, time, peak VRAM, efficiency — the per-cell Table-1 delta.
+fn compare(args: &Args) -> Result<()> {
+    let a_path = args.get("a").context("--a <run.json> required")?.to_string();
+    let b_path = args.get("b").context("--b <run.json> required")?.to_string();
+    args.reject_unknown()?;
+    let load = |p: &str| -> Result<(f64, f64, f64, f64)> {
+        let j = tri_accel::util::json::Json::parse(&std::fs::read_to_string(p)?)
+            .map_err(|e| anyhow::anyhow!("{p}: {e}"))?;
+        let epochs = j.req("epochs")?.as_arr().context("epochs")?;
+        let last = epochs.last().context("empty run")?;
+        let acc = last.req("test_acc")?.as_f64().context("test_acc")?;
+        let time = last.req("modeled_s_norm")?.as_f64().context("modeled_s_norm")?;
+        let peak = epochs
+            .iter()
+            .filter_map(|e| e.get("peak_vram_gb").and_then(|v| v.as_f64()))
+            .fold(0.0, f64::max);
+        let eff = last.req("eff_score")?.as_f64().context("eff_score")?;
+        Ok((acc, time, peak, eff))
+    };
+    let (aa, at, ap, ae) = load(&a_path)?;
+    let (ba, bt, bp, be) = load(&b_path)?;
+    println!("{:<28} {:>10} {:>10} {:>12}", "", "A", "B", "B vs A");
+    let row = |name: &str, a: f64, b: f64, pct: bool| {
+        let d = if pct { 100.0 * (b - a) / a.max(1e-12) } else { b - a };
+        println!(
+            "{:<28} {:>10.4} {:>10.4} {:>+11.2}{}",
+            name,
+            a,
+            b,
+            d,
+            if pct { "%" } else { " " }
+        );
+    };
+    row("test accuracy (%)", aa, ba, false);
+    row("time/epoch (modeled s)", at, bt, true);
+    row("peak VRAM (GB)", ap, bp, true);
+    row("efficiency score", ae, be, true);
+    Ok(())
+}
+
+fn info(artifacts: &PathBuf, args: &Args) -> Result<()> {
+    args.reject_unknown()?;
+    let engine = Engine::new(artifacts)?;
+    println!("platform: {}", engine.platform());
+    println!("{:<20} {:>7} {:>11} {:>8} {:>22}", "model", "layers", "params", "curv_b", "train buckets");
+    for (key, e) in &engine.manifest.models {
+        println!(
+            "{:<20} {:>7} {:>11} {:>8} {:>22?}",
+            key, e.num_layers, e.param_count, e.curv_batch, e.train_buckets
+        );
+    }
+    Ok(())
+}
+
+/// Build a Config from common CLI options + freeform --set k=v pairs.
+fn config_from(args: &Args) -> Result<Config> {
+    let mut cfg = Config::default();
+    if let Some(path) = args.get("config") {
+        cfg = Config::load(std::path::Path::new(path))?;
+    }
+    if let Some(m) = args.get("model") {
+        cfg.model_key = m.to_string();
+    }
+    if let Some(m) = args.get("method") {
+        cfg.method = Method::parse(m)?;
+    }
+    cfg.epochs = args.parse_or("epochs", cfg.epochs)?;
+    cfg.seed = args.parse_or("seed", cfg.seed)?;
+    if let Some(s) = args.get("steps") {
+        cfg.steps_per_epoch = Some(s.parse().context("--steps")?);
+    }
+    // k=v escape hatch for every remaining hyperparameter.
+    if let Some(sets) = args.get("set") {
+        for kv in sets.split(',') {
+            let (k, v) = kv
+                .split_once('=')
+                .with_context(|| format!("--set expects k=v, got `{kv}`"))?;
+            cfg.set(k, v)?;
+        }
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn train(artifacts: &PathBuf, args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let out_dir = PathBuf::from(args.get_or("out", "runs"));
+    let quiet = args.flag("quiet");
+    let save_ckpt = args.get("save-ckpt").map(PathBuf::from);
+    let resume = args.get("resume").map(PathBuf::from);
+    args.reject_unknown()?;
+
+    let engine = Engine::new(artifacts)?;
+    let tag = format!(
+        "{}_{}_s{}",
+        cfg.model_key,
+        cfg.method.name().replace([' ', '(', ')'], "").to_lowercase(),
+        cfg.seed
+    );
+    println!(
+        "training {} with {} — {} epochs, seed {}",
+        cfg.model_key,
+        cfg.method.name(),
+        cfg.epochs,
+        cfg.seed
+    );
+    let epochs = cfg.epochs;
+    let mut tr = Trainer::new(&engine, cfg)?;
+    if let Some(ref p) = resume {
+        let step = tr.resume_from(p)?;
+        println!("resumed from {} at step {step}", p.display());
+    }
+    for epoch in 0..epochs {
+        let r = tr.run_epoch(epoch)?;
+        if let Some(ref p) = save_ckpt {
+            tr.save_checkpoint(p)?;
+        }
+        if !quiet {
+            let mix = r.mix;
+            println!(
+                "epoch {:>3}  loss {:.4}  train {:5.1}%  test {:5.1}%  wall {:6.2}s  modeled {:7.3}s  peak {:.4}GB  B̄ {:5.1}  mix {:.0}/{:.0}/{:.0}  score {:6.2}",
+                r.epoch, r.train_loss, r.train_acc, r.test_acc, r.wall_s, r.modeled_s,
+                r.peak_vram_gb, r.mean_batch,
+                100.0 * mix.fp16, 100.0 * mix.bf16, 100.0 * mix.fp32,
+                r.eff_score
+            );
+        }
+    }
+    let s = tr.summary();
+    println!(
+        "final: acc {:.2}%  time/epoch {:.2}s (wall {:.2}s)  peak {:.4}GB  score {:.2}",
+        s.test_acc_pct, s.modeled_s_per_epoch, s.wall_s_per_epoch, s.peak_vram_gb, s.eff_score
+    );
+    tr.metrics.write(&out_dir, &tag)?;
+    println!("metrics → {}/{}*.csv|json", out_dir.display(), tag);
+    let _ = PrecisionMix::of(&tr.controller.codes());
+    Ok(())
+}
+
+fn parse_seeds(args: &Args) -> Result<Vec<u64>> {
+    args.get_or("seeds", "0,1,2")
+        .split(',')
+        .map(|s| s.parse::<u64>().context("--seeds"))
+        .collect()
+}
+
+fn budget_tweak(args: &Args) -> Result<impl Fn(&mut Config)> {
+    let steps: usize = args.parse_or("steps", 60)?;
+    let epochs: usize = args.parse_or("epochs", 3)?;
+    Ok(harness::quick_budget(steps, epochs))
+}
+
+fn table1(artifacts: &PathBuf, args: &Args) -> Result<()> {
+    let models = args.get_or("models", "resnet18_c10,effnet_lite_c10,resnet18_c100,effnet_lite_c100");
+    let seeds = parse_seeds(args)?;
+    let tweak = budget_tweak(args)?;
+    args.reject_unknown()?;
+    let engine = Engine::new(artifacts)?;
+    let keys: Vec<&str> = models.split(',').collect();
+    let rows = harness::table1(&engine, &keys, &seeds, &tweak)?;
+    println!("== Table 1 (reduced budget; shape comparison vs paper) ==");
+    harness::print_table1(&rows);
+    for chunk in rows.chunks(3) {
+        println!("{} — {}", chunk[0].model_key, harness::headline(&chunk[0], &chunk[2]));
+    }
+    Ok(())
+}
+
+fn table2(artifacts: &PathBuf, args: &Args) -> Result<()> {
+    let model = args.get_or("model", "resnet18_c10");
+    let seeds = parse_seeds(args)?;
+    let tweak = budget_tweak(args)?;
+    args.reject_unknown()?;
+    let engine = Engine::new(artifacts)?;
+    let rows = harness::table2(&engine, &model, &seeds, &tweak)?;
+    println!("== Table 2 ablation — {model} ==");
+    harness::print_table2(&rows);
+    Ok(())
+}
+
+fn fig(artifacts: &PathBuf, args: &Args) -> Result<()> {
+    let model = args.get_or("model", "resnet18_c10");
+    let seed: u64 = args.parse_or("seed", 0)?;
+    let tweak = budget_tweak(args)?;
+    args.reject_unknown()?;
+    let engine = Engine::new(artifacts)?;
+    let t = harness::fig_adaptive(&engine, &model, seed, &tweak)?;
+    println!("== adaptive behaviour — {model} seed {seed} ==");
+    println!("epoch, eff_score, fp16, bf16, fp32");
+    for ((e, s), (_, f16, b16, f32_)) in t.epoch_eff.iter().zip(&t.mix_trace) {
+        println!("{e}, {s:.3}, {f16:.2}, {b16:.2}, {f32_:.2}");
+    }
+    println!("batch trace (step, B):");
+    for (st, b) in &t.batch_trace {
+        println!("{st}, {b}");
+    }
+    Ok(())
+}

@@ -1,0 +1,281 @@
+//! `artifacts/manifest.json` — the contract between the Python compile
+//! path and the Rust runtime. Every shape, ordering, and artifact path the
+//! runtime needs is read from here; nothing about models is hardcoded.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Precision codes — MUST match python/compile/kernels/ref.py.
+pub const FP16: i32 = 0;
+pub const BF16: i32 = 1;
+pub const FP32: i32 = 2;
+
+pub fn precision_name(code: i32) -> &'static str {
+    match code {
+        FP16 => "fp16",
+        BF16 => "bf16",
+        FP32 => "fp32",
+        _ => "?",
+    }
+}
+
+/// Bytes/element the memory model charges per precision code.
+pub fn precision_bytes(code: i32) -> usize {
+    match code {
+        FP16 | BF16 => 2,
+        _ => 4,
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct LayerSpec {
+    pub name: String,
+    pub kind: String, // "conv" | "dwconv" | "dense"
+    pub param_elems: usize,
+    pub act_elems: usize, // per sample
+    pub flops: usize,     // MACs per sample
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub layer_idx: i64, // -1 => fp32-only (BN/bias)
+    pub elems: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub key: String,
+    pub model: String,
+    pub num_classes: usize,
+    pub num_layers: usize,
+    pub param_count: usize,
+    pub layers: Vec<LayerSpec>,
+    pub params: Vec<ParamSpec>,
+    pub state_shapes: Vec<Vec<usize>>,
+    pub train_buckets: Vec<usize>,
+    pub eval_buckets: Vec<usize>,
+    pub curv_batch: usize,
+    pub artifacts: BTreeMap<String, String>,
+}
+
+impl ModelEntry {
+    pub fn artifact(&self, name: &str) -> Result<&str> {
+        self.artifacts
+            .get(name)
+            .map(|s| s.as_str())
+            .with_context(|| format!("model {}: no artifact `{name}`", self.key))
+    }
+
+    /// Total quantizable parameter elements across precision layers.
+    pub fn quantizable_elems(&self) -> usize {
+        self.layers.iter().map(|l| l.param_elems).sum()
+    }
+
+    /// Activation elements per sample summed over layers (memsim input).
+    pub fn act_elems_per_sample(&self) -> usize {
+        self.layers.iter().map(|l| l.act_elems).sum()
+    }
+
+    /// Total MACs per sample (analytic speed model input).
+    pub fn flops_per_sample(&self) -> usize {
+        self.layers.iter().map(|l| l.flops).sum()
+    }
+
+    pub fn state_elems(&self) -> usize {
+        self.state_shapes.iter().map(|s| s.iter().product::<usize>()).sum()
+    }
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let root = Json::parse(text).context("manifest.json")?;
+
+        // Fail loudly if the python-side code contract drifted.
+        let codes = root.req("precision_codes")?;
+        anyhow::ensure!(
+            codes.req("fp16")?.as_i64() == Some(FP16 as i64)
+                && codes.req("bf16")?.as_i64() == Some(BF16 as i64)
+                && codes.req("fp32")?.as_i64() == Some(FP32 as i64),
+            "precision-code contract mismatch between manifest and runtime"
+        );
+
+        let mut models = BTreeMap::new();
+        for (key, m) in root.req("models")?.as_obj().context("models not an object")? {
+            models.insert(key.clone(), Self::parse_model(key, m)?);
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), models })
+    }
+
+    fn parse_model(key: &str, m: &Json) -> Result<ModelEntry> {
+        let usize_of = |j: &Json, what: &str| -> Result<usize> {
+            j.as_usize().with_context(|| format!("{key}: bad {what}"))
+        };
+        let layers = m
+            .req("layers")?
+            .as_arr()
+            .context("layers")?
+            .iter()
+            .map(|l| {
+                Ok(LayerSpec {
+                    name: l.req("name")?.as_str().context("name")?.to_string(),
+                    kind: l.req("kind")?.as_str().context("kind")?.to_string(),
+                    param_elems: usize_of(l.req("param_elems")?, "param_elems")?,
+                    act_elems: usize_of(l.req("act_elems")?, "act_elems")?,
+                    flops: usize_of(l.req("flops")?, "flops")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let params = m
+            .req("params")?
+            .as_arr()
+            .context("params")?
+            .iter()
+            .map(|p| {
+                Ok(ParamSpec {
+                    name: p.req("name")?.as_str().context("name")?.to_string(),
+                    shape: p
+                        .req("shape")?
+                        .as_arr()
+                        .context("shape")?
+                        .iter()
+                        .map(|d| usize_of(d, "dim"))
+                        .collect::<Result<Vec<_>>>()?,
+                    layer_idx: p.req("layer_idx")?.as_i64().context("layer_idx")?,
+                    elems: usize_of(p.req("elems")?, "elems")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let state_shapes = m
+            .req("state_shapes")?
+            .as_arr()
+            .context("state_shapes")?
+            .iter()
+            .map(|s| {
+                s.as_arr()
+                    .context("state shape")?
+                    .iter()
+                    .map(|d| usize_of(d, "dim"))
+                    .collect::<Result<Vec<_>>>()
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let buckets = |field: &str| -> Result<Vec<usize>> {
+            m.req(field)?
+                .as_arr()
+                .with_context(|| field.to_string())?
+                .iter()
+                .map(|b| usize_of(b, field))
+                .collect()
+        };
+        let mut artifacts = BTreeMap::new();
+        for (k, v) in m.req("artifacts")?.as_obj().context("artifacts")? {
+            artifacts.insert(k.clone(), v.as_str().context("artifact path")?.to_string());
+        }
+        let entry = ModelEntry {
+            key: key.to_string(),
+            model: m.req("model")?.as_str().context("model")?.to_string(),
+            num_classes: usize_of(m.req("num_classes")?, "num_classes")?,
+            num_layers: usize_of(m.req("num_layers")?, "num_layers")?,
+            param_count: usize_of(m.req("param_count")?, "param_count")?,
+            layers,
+            params,
+            state_shapes,
+            train_buckets: buckets("train_buckets")?,
+            eval_buckets: buckets("eval_buckets")?,
+            curv_batch: usize_of(m.req("curv_batch")?, "curv_batch")?,
+            artifacts,
+        };
+        anyhow::ensure!(
+            entry.layers.len() == entry.num_layers,
+            "{key}: layer count mismatch"
+        );
+        anyhow::ensure!(
+            entry.params.iter().map(|p| p.elems).sum::<usize>() == entry.param_count,
+            "{key}: param count mismatch"
+        );
+        Ok(entry)
+    }
+
+    pub fn model(&self, key: &str) -> Result<&ModelEntry> {
+        self.models
+            .get(key)
+            .with_context(|| format!("model `{key}` not in manifest (have: {:?})", self.models.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn artifact_path(&self, entry: &ModelEntry, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(entry.artifact(name)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"{
+      "precision_codes": {"fp16":0,"bf16":1,"fp32":2},
+      "models": {
+        "m_c10": {
+          "model":"m","num_classes":10,"num_layers":1,"param_count":6,
+          "layers":[{"name":"l0","kind":"conv","param_elems":6,"act_elems":4,"flops":24}],
+          "params":[{"name":"l0/w","shape":[2,3],"layer_idx":0,"elems":6}],
+          "state_shapes":[[3]],
+          "train_buckets":[8,16],"eval_buckets":[16],"curv_batch":8,
+          "artifacts":{"train_b8":"m_t8.hlo.txt"}
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_minimal() {
+        let m = Manifest::parse(MINI, Path::new("/tmp/a")).unwrap();
+        let e = m.model("m_c10").unwrap();
+        assert_eq!(e.num_layers, 1);
+        assert_eq!(e.quantizable_elems(), 6);
+        assert_eq!(e.act_elems_per_sample(), 4);
+        assert_eq!(e.state_elems(), 3);
+        assert_eq!(
+            m.artifact_path(e, "train_b8").unwrap(),
+            PathBuf::from("/tmp/a/m_t8.hlo.txt")
+        );
+        assert!(e.artifact("nope").is_err());
+        assert!(m.model("zzz").is_err());
+    }
+
+    #[test]
+    fn code_contract_enforced() {
+        let bad = MINI.replace(r#""fp16":0"#, r#""fp16":5"#);
+        assert!(Manifest::parse(&bad, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn count_mismatch_rejected() {
+        let bad = MINI.replace(r#""param_count":6"#, r#""param_count":7"#);
+        assert!(Manifest::parse(&bad, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn precision_helpers() {
+        assert_eq!(precision_name(FP16), "fp16");
+        assert_eq!(precision_bytes(FP16), 2);
+        assert_eq!(precision_bytes(BF16), 2);
+        assert_eq!(precision_bytes(FP32), 4);
+    }
+}

@@ -1,0 +1,398 @@
+//! VRAM simulator — the substitution for CUDA memory telemetry
+//! (DESIGN.md §5). The paper's controller consumes two scalars,
+//! `MemUsage(t)` and `MemMax`; this module produces them from an analytic
+//! allocator model driven by the manifest's per-layer tensor shapes, the
+//! live precision map, and the live batch size.
+//!
+//! The model is deliberately structural, not fitted: every term is the
+//! byte count of a real allocation the PyTorch/Triton stack would make,
+//! so the *functional form* of memory vs (B, precision) — which is what
+//! the feedback controller's dynamics depend on — is preserved.
+
+use crate::manifest::{precision_bytes, ModelEntry};
+use crate::util::rng::Rng;
+
+/// Hardware-agnostic memory telemetry (the abstraction the paper's §4.5
+/// names as future work). `VramSim` is the simulator backend; a CUDA/TPU
+/// backend would implement the same trait from vendor APIs.
+pub trait MemoryMonitor {
+    /// Current usage in GiB (most recent step).
+    fn mem_used_gb(&self) -> f64;
+    /// Capacity / budget in GiB (MemMax).
+    fn mem_max_gb(&self) -> f64;
+    /// High-water mark over the run.
+    fn peak_gb(&self) -> f64;
+}
+
+const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+
+/// Fixed runtime overhead: context, cuDNN/Triton handles, streams.
+const BASE_OVERHEAD_BYTES: f64 = 48.0 * 1024.0 * 1024.0;
+/// Allocator block rounding / fragmentation factor.
+const FRAG_FACTOR: f64 = 1.05;
+
+#[derive(Debug, Clone)]
+pub struct StepUsage {
+    pub params_gb: f64,
+    pub compute_copies_gb: f64,
+    pub grads_gb: f64,
+    pub momentum_gb: f64,
+    pub activations_gb: f64,
+    pub workspace_gb: f64,
+    pub transient_gb: f64,
+    pub total_gb: f64,
+}
+
+pub struct VramSim {
+    budget_gb: f64,
+    noise_frac: f64,
+    rng: Rng,
+    // static per-model quantities (elements)
+    param_elems_total: usize,
+    layer_param_elems: Vec<usize>,
+    layer_act_elems: Vec<usize>,
+    state_elems: usize,
+    max_layer_act_elems: usize,
+    last: f64,
+    peak: f64,
+    oom_events: u64,
+}
+
+impl VramSim {
+    pub fn new(entry: &ModelEntry, budget_gb: f64, noise_frac: f64, seed: u64) -> VramSim {
+        VramSim {
+            budget_gb,
+            noise_frac,
+            rng: Rng::stream(seed, 0x4D454D),
+            param_elems_total: entry.param_count,
+            layer_param_elems: entry.layers.iter().map(|l| l.param_elems).collect(),
+            layer_act_elems: entry.layers.iter().map(|l| l.act_elems).collect(),
+            state_elems: entry.state_elems(),
+            max_layer_act_elems: entry.layers.iter().map(|l| l.act_elems).max().unwrap_or(0),
+            last: BASE_OVERHEAD_BYTES / GIB,
+            peak: BASE_OVERHEAD_BYTES / GIB,
+            oom_events: 0,
+        }
+    }
+
+    /// Byte accounting for one train step at batch size `b` with the live
+    /// per-layer precision `codes`. `curv_active` charges the curvature
+    /// probe's extra HVP buffers on probe steps.
+    pub fn usage(&mut self, b: usize, codes: &[i32], curv_active: bool) -> StepUsage {
+        assert_eq!(codes.len(), self.layer_param_elems.len(), "codes arity");
+        let f = |elems: usize, bytes: usize| (elems * bytes) as f64;
+
+        // Master weights + momentum + BN state: always fp32.
+        let params = f(self.param_elems_total + self.state_elems, 4);
+        let momentum = f(self.param_elems_total, 4);
+
+        // Low-precision compute copies & gradients per layer.
+        let mut copies = 0.0;
+        let mut grads = 0.0;
+        let mut acts = 0.0;
+        for ((&pe, &ae), &c) in self
+            .layer_param_elems
+            .iter()
+            .zip(self.layer_act_elems.iter())
+            .zip(codes.iter())
+        {
+            let by = precision_bytes(c);
+            // A quantized weight copy only exists when compute ≠ fp32.
+            if by != 4 {
+                copies += f(pe, by);
+            }
+            grads += f(pe, by.max(2)); // grads live in compute precision
+            acts += f(ae, by) * b as f64; // saved activations for backward
+        }
+        // Non-layer (BN) grads, fp32.
+        let bn_elems = self.param_elems_total
+            - self.layer_param_elems.iter().sum::<usize>();
+        grads += f(bn_elems, 4);
+
+        // Workspace: conv scratch ~ one layer's input+output tile at the
+        // live precision, plus the loss/reduction buffers.
+        let ws_bytes = self.max_layer_act_elems as f64
+            * b as f64
+            * codes.iter().map(|&c| precision_bytes(c)).max().unwrap_or(4) as f64;
+        let workspace = ws_bytes * 0.5;
+
+        // Curvature probes (§3.2 block-diagonal): the power iteration
+        // walks layer blocks, so u/Hu buffers are sized by the largest
+        // layer, not the whole network (×2 for u and Hu, fp32).
+        let max_layer = self.layer_param_elems.iter().copied().max().unwrap_or(0);
+        let transient = if curv_active { f(max_layer, 4) * 2.0 } else { 0.0 };
+
+        let noise = 1.0 + self.noise_frac * (2.0 * self.rng.next_f64() - 1.0);
+        let total_bytes = (params + momentum + copies + grads + acts + workspace + transient)
+            * FRAG_FACTOR
+            * noise
+            + BASE_OVERHEAD_BYTES;
+
+        let u = StepUsage {
+            params_gb: params / GIB,
+            compute_copies_gb: copies / GIB,
+            grads_gb: grads / GIB,
+            momentum_gb: momentum / GIB,
+            activations_gb: acts / GIB,
+            workspace_gb: workspace / GIB,
+            transient_gb: transient / GIB,
+            total_gb: total_bytes / GIB,
+        };
+        self.last = u.total_gb;
+        if u.total_gb > self.peak {
+            self.peak = u.total_gb;
+        }
+        if u.total_gb > self.budget_gb {
+            self.oom_events += 1;
+        }
+        u
+    }
+
+    /// Would a step at (b, codes) exceed the budget? Used by the batch
+    /// controller to veto growth before attempting it (OOM avoidance).
+    pub fn would_fit(&mut self, b: usize, codes: &[i32], curv_active: bool) -> bool {
+        self.would_fit_within(b, codes, curv_active, 1.0)
+    }
+
+    /// Predictive fit against `frac·budget`. Growing only while the
+    /// *predicted* usage stays under ρ_high·MemMax keeps the controller
+    /// from spiking the peak with a grow-then-shrink oscillation — the
+    /// grown batch would immediately trip the §3.3 shrink rule.
+    pub fn would_fit_within(
+        &mut self,
+        b: usize,
+        codes: &[i32],
+        curv_active: bool,
+        frac: f64,
+    ) -> bool {
+        // Probe without mutating peak/last: run on a cloned accounting.
+        let saved = (self.last, self.peak, self.oom_events, self.rng.clone());
+        let u = self.usage(b, codes, curv_active);
+        self.last = saved.0;
+        self.peak = saved.1;
+        self.oom_events = saved.2;
+        self.rng = saved.3;
+        u.total_gb <= self.budget_gb * frac
+    }
+
+    pub fn oom_events(&self) -> u64 {
+        self.oom_events
+    }
+
+    pub fn reset_peak(&mut self) {
+        self.peak = self.last;
+    }
+}
+
+impl MemoryMonitor for VramSim {
+    fn mem_used_gb(&self) -> f64 {
+        self.last
+    }
+
+    fn mem_max_gb(&self) -> f64 {
+        self.budget_gb
+    }
+
+    fn peak_gb(&self) -> f64 {
+        self.peak
+    }
+}
+
+/// Analytic accelerator-time model: translates measured step counts into
+/// "GPU-terms" seconds for the Table-1 time column (DESIGN.md §5). Uses
+/// MAC counts from the manifest with per-precision throughput factors
+/// (T4-class: half precision ≈ 1.8× fp32 effective, memory-bound tail
+/// keeps it below the 8× tensor-core peak).
+#[derive(Debug, Clone)]
+pub struct SpeedModel {
+    pub fp32_tflops: f64,
+    pub half_speedup: f64,
+    pub fixed_overhead_s: f64, // per-step launch/host overhead
+    flops_per_sample: f64,
+}
+
+impl SpeedModel {
+    pub fn t4_like(entry: &ModelEntry) -> SpeedModel {
+        SpeedModel {
+            fp32_tflops: 8.1,
+            half_speedup: 1.8,
+            fixed_overhead_s: 2.0e-3,
+            flops_per_sample: entry.flops_per_sample() as f64 * 2.0, // MAC→FLOP
+        }
+    }
+
+    /// Modeled seconds for one fwd+bwd step (bwd ≈ 2× fwd FLOPs).
+    pub fn step_seconds(&self, b: usize, codes: &[i32], layer_flops: &[usize]) -> f64 {
+        let total: f64 = layer_flops
+            .iter()
+            .zip(codes.iter())
+            .map(|(&fl, &c)| {
+                let speed = if precision_bytes(c) == 2 { self.half_speedup } else { 1.0 };
+                (fl as f64 * 2.0) / speed
+            })
+            .sum();
+        let _ = self.flops_per_sample;
+        let flops = total * 3.0 * b as f64; // fwd + 2×fwd for bwd
+        flops / (self.fp32_tflops * 1e12) + self.fixed_overhead_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::{LayerSpec, ModelEntry, BF16, FP16, FP32};
+    use std::collections::BTreeMap;
+
+    fn toy_entry() -> ModelEntry {
+        ModelEntry {
+            key: "toy".into(),
+            model: "toy".into(),
+            num_classes: 10,
+            num_layers: 2,
+            param_count: 1_000_000,
+            layers: vec![
+                LayerSpec {
+                    name: "a".into(),
+                    kind: "conv".into(),
+                    param_elems: 600_000,
+                    act_elems: 100_000,
+                    flops: 10_000_000,
+                },
+                LayerSpec {
+                    name: "b".into(),
+                    kind: "dense".into(),
+                    param_elems: 300_000,
+                    act_elems: 10,
+                    flops: 300_000,
+                },
+            ],
+            params: vec![],
+            state_shapes: vec![],
+            train_buckets: vec![32, 64],
+            eval_buckets: vec![16],
+            curv_batch: 32,
+            artifacts: BTreeMap::new(),
+        }
+    }
+
+    #[test]
+    fn memory_grows_with_batch() {
+        let e = toy_entry();
+        let mut sim = VramSim::new(&e, 1.0, 0.0, 0);
+        let u32_ = sim.usage(32, &[FP32, FP32], false);
+        let u64_ = sim.usage(64, &[FP32, FP32], false);
+        assert!(u64_.total_gb > u32_.total_gb);
+        assert!(u64_.activations_gb > 1.9 * u32_.activations_gb);
+    }
+
+    #[test]
+    fn half_precision_saves_memory() {
+        let e = toy_entry();
+        let mut sim = VramSim::new(&e, 1.0, 0.0, 0);
+        let hi = sim.usage(64, &[FP32, FP32], false);
+        let lo = sim.usage(64, &[FP16, BF16], false);
+        assert!(lo.total_gb < hi.total_gb);
+        assert!(lo.activations_gb < 0.6 * hi.activations_gb);
+    }
+
+    #[test]
+    fn peak_tracks_high_water() {
+        let e = toy_entry();
+        let mut sim = VramSim::new(&e, 1.0, 0.0, 0);
+        sim.usage(64, &[FP32, FP32], false);
+        let peak_hi = sim.peak_gb();
+        sim.usage(32, &[FP16, FP16], false);
+        assert_eq!(sim.peak_gb(), peak_hi, "peak must not decrease");
+        assert!(sim.mem_used_gb() < peak_hi);
+    }
+
+    #[test]
+    fn curvature_charges_transient() {
+        let e = toy_entry();
+        let mut sim = VramSim::new(&e, 1.0, 0.0, 0);
+        let base = sim.usage(32, &[FP32, FP32], false);
+        let probe = sim.usage(32, &[FP32, FP32], true);
+        assert!(probe.transient_gb > 0.0 && probe.total_gb > base.total_gb);
+    }
+
+    #[test]
+    fn would_fit_does_not_mutate(){
+        let e = toy_entry();
+        let mut sim = VramSim::new(&e, 0.08, 0.0, 0);
+        let before = sim.peak_gb();
+        let fits = sim.would_fit(64, &[FP32, FP32], false);
+        assert!(!fits, "64×fp32 should blow a 0.08GB budget");
+        assert_eq!(sim.peak_gb(), before);
+        assert_eq!(sim.oom_events(), 0);
+    }
+
+    #[test]
+    fn paper_geometry_probe_hides_under_activation_headroom() {
+        // §3.2/§4.3 geometry: train at B=96, curvature probe at
+        // b_curv=32. The probe's u/Hu buffers must sit below the train
+        // step's activation peak, so Tri-Accel's peak equals AMP's —
+        // the Table-1 "Tri-Accel ≤ AMP" shape. (When b_curv ≈ B, as in
+        // the CPU-scaled bench, the probe surfaces in the peak; see
+        // EXPERIMENTS.md.)
+        let mut layers = Vec::new();
+        for i in 0..8 {
+            layers.push(LayerSpec {
+                name: format!("l{i}"),
+                kind: "conv".into(),
+                param_elems: 1_400_000,
+                act_elems: 500_000, // CIFAR ResNet-scale per-sample acts
+                flops: 0,
+            });
+        }
+        let e = ModelEntry {
+            key: "rn".into(),
+            model: "rn".into(),
+            num_classes: 10,
+            num_layers: 8,
+            param_count: 11_200_000,
+            layers,
+            params: vec![],
+            state_shapes: vec![],
+            train_buckets: vec![32, 96],
+            eval_buckets: vec![16],
+            curv_batch: 32,
+            artifacts: BTreeMap::new(),
+        };
+        let codes = vec![BF16; 8];
+        // AMP peak: train step at B=96.
+        let mut amp = VramSim::new(&e, 10.0, 0.0, 0);
+        let amp_peak = {
+            amp.usage(96, &codes, false);
+            amp.peak_gb()
+        };
+        // Tri-Accel: same train steps + separate probe events at b=32.
+        let mut tri = VramSim::new(&e, 10.0, 0.0, 0);
+        tri.usage(96, &codes, false);
+        tri.usage(32, &codes, true); // probe step
+        tri.usage(96, &codes, false);
+        assert!(
+            tri.peak_gb() <= amp_peak + 1e-9,
+            "probe surfaced in the peak: tri {} vs amp {amp_peak}",
+            tri.peak_gb()
+        );
+    }
+
+    #[test]
+    fn oom_counted_when_over_budget() {
+        let e = toy_entry();
+        let mut sim = VramSim::new(&e, 0.05, 0.0, 0);
+        sim.usage(64, &[FP32, FP32], false);
+        assert_eq!(sim.oom_events(), 1);
+    }
+
+    #[test]
+    fn speed_model_prefers_half() {
+        let e = toy_entry();
+        let sm = SpeedModel::t4_like(&e);
+        let fl: Vec<usize> = e.layers.iter().map(|l| l.flops).collect();
+        let t32 = sm.step_seconds(96, &[FP32, FP32], &fl);
+        let t16 = sm.step_seconds(96, &[FP16, FP16], &fl);
+        assert!(t16 < t32);
+        assert!(t32 < 1.0, "sane magnitude: {t32}");
+    }
+}

@@ -1,0 +1,340 @@
+//! Metrics substrate: the paper's four measurement axes (§4.2) — top-1
+//! accuracy, time per epoch, peak VRAM, aggregate efficiency score —
+//! plus the traces §4.2 says are logged (effective batch size) and the
+//! adaptive-behaviour series the abstract describes (efficiency over
+//! training). CSV/JSON writers for offline plotting.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::manifest::{BF16, FP16, FP32};
+use crate::util::json::Json;
+
+/// The paper's aggregate efficiency score (§4.2):
+///
+/// ```text
+/// Score = Accuracy(%) / (Time(s) × MemoryUsage(%)) × 100
+/// ```
+///
+/// Table 1 is consistent with MemoryUsage(%) = VRAM_GB × 100 (e.g.
+/// 77.0 / (21.0 × 35) × 100 = 10.48 for the FP32 ResNet row), i.e. the
+/// score reduces to `acc / (time × vram_gb)`.
+pub fn efficiency_score(acc_pct: f64, time_s: f64, vram_gb: f64) -> f64 {
+    if time_s <= 0.0 || vram_gb <= 0.0 {
+        return 0.0;
+    }
+    acc_pct / (time_s * vram_gb)
+}
+
+/// Precision-mix summary of a codes vector: fraction of layers at each
+/// precision (telemetry for the adaptive-behaviour figure).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PrecisionMix {
+    pub fp16: f64,
+    pub bf16: f64,
+    pub fp32: f64,
+}
+
+impl PrecisionMix {
+    pub fn of(codes: &[i32]) -> PrecisionMix {
+        if codes.is_empty() {
+            return PrecisionMix::default();
+        }
+        let n = codes.len() as f64;
+        PrecisionMix {
+            fp16: codes.iter().filter(|&&c| c == FP16).count() as f64 / n,
+            bf16: codes.iter().filter(|&&c| c == BF16).count() as f64 / n,
+            fp32: codes.iter().filter(|&&c| c == FP32).count() as f64 / n,
+        }
+    }
+}
+
+/// One epoch's record — one row of the per-run log.
+#[derive(Debug, Clone)]
+pub struct EpochRecord {
+    pub epoch: usize,
+    pub steps: u64,
+    pub train_loss: f64,
+    pub train_acc: f64,
+    pub test_loss: f64,
+    pub test_acc: f64,
+    /// Examples consumed this epoch (varies with elastic batching).
+    pub examples: usize,
+    /// Measured wallclock for the epoch's train steps (CPU substrate).
+    pub wall_s: f64,
+    /// Analytic accelerator-terms seconds (DESIGN.md §5 speed model),
+    /// raw over the steps actually taken.
+    pub modeled_s: f64,
+    /// `modeled_s` normalized to one *nominal* epoch (train_examples
+    /// examples) — the Table-1 comparable: reduced-step runs and elastic
+    /// batch sizes otherwise distort per-epoch time.
+    pub modeled_s_norm: f64,
+    pub peak_vram_gb: f64,
+    pub mean_batch: f64,
+    pub mix: PrecisionMix,
+    pub lr: f64,
+    pub loss_scale: f64,
+    pub eff_score: f64,
+}
+
+/// Full run log: epoch rows plus the §4.2 effective-batch-size trace and
+/// the control-decision counters.
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    pub epochs: Vec<EpochRecord>,
+    /// (step, batch size) — recorded at every change plus epoch marks.
+    pub batch_trace: Vec<(u64, usize)>,
+    pub precision_transitions: u64,
+    pub promotions: u64,
+    pub overflows: u64,
+    pub oom_events: u64,
+    pub curv_firings: u64,
+}
+
+impl RunMetrics {
+    pub fn record_batch(&mut self, step: u64, b: usize) {
+        if self.batch_trace.last().map(|&(_, pb)| pb) != Some(b) {
+            self.batch_trace.push((step, b));
+        }
+    }
+
+    pub fn final_test_acc(&self) -> f64 {
+        self.epochs.last().map(|e| e.test_acc).unwrap_or(0.0)
+    }
+
+    pub fn peak_vram_gb(&self) -> f64 {
+        self.epochs.iter().map(|e| e.peak_vram_gb).fold(0.0, f64::max)
+    }
+
+    /// Time/epoch averaged over the last `k` epochs (paper §4.2 averages
+    /// the final five to mitigate data-loading variance).
+    pub fn time_per_epoch(&self, k: usize, modeled: bool) -> f64 {
+        let n = self.epochs.len();
+        if n == 0 {
+            return 0.0;
+        }
+        let take = k.min(n).max(1);
+        let slice = &self.epochs[n - take..];
+        let sum: f64 = slice
+            .iter()
+            .map(|e| if modeled { e.modeled_s_norm } else { e.wall_s })
+            .sum();
+        sum / take as f64
+    }
+
+    /// CSV of the epoch rows.
+    pub fn epochs_csv(&self) -> String {
+        let mut s = String::from(
+            "epoch,steps,examples,train_loss,train_acc,test_loss,test_acc,wall_s,modeled_s,modeled_s_norm,\
+             peak_vram_gb,mean_batch,fp16_frac,bf16_frac,fp32_frac,lr,loss_scale,eff_score\n",
+        );
+        for e in &self.epochs {
+            s.push_str(&format!(
+                "{},{},{},{:.6},{:.4},{:.6},{:.4},{:.4},{:.4},{:.4},{:.5},{:.2},{:.3},{:.3},{:.3},{:.6},{},{:.4}\n",
+                e.epoch,
+                e.steps,
+                e.examples,
+                e.train_loss,
+                e.train_acc,
+                e.test_loss,
+                e.test_acc,
+                e.wall_s,
+                e.modeled_s,
+                e.modeled_s_norm,
+                e.peak_vram_gb,
+                e.mean_batch,
+                e.mix.fp16,
+                e.mix.bf16,
+                e.mix.fp32,
+                e.lr,
+                e.loss_scale,
+                e.eff_score,
+            ));
+        }
+        s
+    }
+
+    /// CSV of the batch-size trace (the §4.2 log).
+    pub fn batch_trace_csv(&self) -> String {
+        let mut s = String::from("step,batch\n");
+        for &(st, b) in &self.batch_trace {
+            s.push_str(&format!("{st},{b}\n"));
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert(
+            "epochs".into(),
+            Json::Arr(
+                self.epochs
+                    .iter()
+                    .map(|e| {
+                        let mut m = BTreeMap::new();
+                        let mut put = |k: &str, v: f64| {
+                            m.insert(k.to_string(), Json::Num(v));
+                        };
+                        put("epoch", e.epoch as f64);
+                        put("steps", e.steps as f64);
+                        put("examples", e.examples as f64);
+                        put("modeled_s_norm", e.modeled_s_norm);
+                        put("train_loss", e.train_loss);
+                        put("train_acc", e.train_acc);
+                        put("test_loss", e.test_loss);
+                        put("test_acc", e.test_acc);
+                        put("wall_s", e.wall_s);
+                        put("modeled_s", e.modeled_s);
+                        put("peak_vram_gb", e.peak_vram_gb);
+                        put("mean_batch", e.mean_batch);
+                        put("fp16_frac", e.mix.fp16);
+                        put("bf16_frac", e.mix.bf16);
+                        put("fp32_frac", e.mix.fp32);
+                        put("lr", e.lr);
+                        put("loss_scale", e.loss_scale);
+                        put("eff_score", e.eff_score);
+                        Json::Obj(m)
+                    })
+                    .collect(),
+            ),
+        );
+        obj.insert(
+            "batch_trace".into(),
+            Json::Arr(
+                self.batch_trace
+                    .iter()
+                    .map(|&(s, b)| Json::Arr(vec![Json::Num(s as f64), Json::Num(b as f64)]))
+                    .collect(),
+            ),
+        );
+        let mut counters = BTreeMap::new();
+        counters.insert("precision_transitions".into(), Json::Num(self.precision_transitions as f64));
+        counters.insert("promotions".into(), Json::Num(self.promotions as f64));
+        counters.insert("overflows".into(), Json::Num(self.overflows as f64));
+        counters.insert("oom_events".into(), Json::Num(self.oom_events as f64));
+        counters.insert("curv_firings".into(), Json::Num(self.curv_firings as f64));
+        obj.insert("counters".into(), Json::Obj(counters));
+        Json::Obj(obj)
+    }
+
+    pub fn write(&self, dir: &Path, tag: &str) -> Result<()> {
+        std::fs::create_dir_all(dir).with_context(|| format!("mkdir {dir:?}"))?;
+        std::fs::write(dir.join(format!("{tag}_epochs.csv")), self.epochs_csv())?;
+        std::fs::write(dir.join(format!("{tag}_batch_trace.csv")), self.batch_trace_csv())?;
+        std::fs::write(
+            dir.join(format!("{tag}.json")),
+            self.to_json().to_string_compact(),
+        )?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(epoch: usize, acc: f64, wall: f64, peak: f64) -> EpochRecord {
+        EpochRecord {
+            epoch,
+            steps: 100,
+            train_loss: 1.0,
+            train_acc: acc - 1.0,
+            test_loss: 1.2,
+            test_acc: acc,
+            examples: 9600,
+            wall_s: wall,
+            modeled_s: wall / 10.0,
+            modeled_s_norm: wall,
+            peak_vram_gb: peak,
+            mean_batch: 96.0,
+            mix: PrecisionMix { fp16: 0.2, bf16: 0.5, fp32: 0.3 },
+            lr: 0.1,
+            loss_scale: 1024.0,
+            eff_score: efficiency_score(acc, wall, peak),
+        }
+    }
+
+    #[test]
+    fn score_matches_paper_table1_rows() {
+        // CIFAR-10 / ResNet-18 rows of Table 1.
+        assert!((efficiency_score(77.0, 21.0, 0.35) - 10.48).abs() < 0.01);
+        assert!((efficiency_score(77.2, 19.4, 0.32) - 12.25).abs() < 0.20);
+        assert!((efficiency_score(78.1, 19.5, 0.31) - 12.92).abs() < 0.01);
+        // EfficientNet CIFAR-100 row.
+        assert!((efficiency_score(74.3, 19.0, 0.29) - 13.48).abs() < 0.01);
+    }
+
+    #[test]
+    fn score_guards_degenerate_inputs() {
+        assert_eq!(efficiency_score(50.0, 0.0, 0.3), 0.0);
+        assert_eq!(efficiency_score(50.0, 10.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn precision_mix_fractions() {
+        let m = PrecisionMix::of(&[FP16, BF16, BF16, FP32]);
+        assert!((m.fp16 - 0.25).abs() < 1e-12);
+        assert!((m.bf16 - 0.50).abs() < 1e-12);
+        assert!((m.fp32 - 0.25).abs() < 1e-12);
+        assert_eq!(PrecisionMix::of(&[]), PrecisionMix::default());
+    }
+
+    #[test]
+    fn batch_trace_dedupes_consecutive() {
+        let mut m = RunMetrics::default();
+        m.record_batch(0, 96);
+        m.record_batch(5, 96);
+        m.record_batch(10, 128);
+        m.record_batch(20, 128);
+        m.record_batch(30, 96);
+        assert_eq!(m.batch_trace, vec![(0, 96), (10, 128), (30, 96)]);
+    }
+
+    #[test]
+    fn time_per_epoch_last_k() {
+        let mut m = RunMetrics::default();
+        for (i, w) in [100.0, 100.0, 10.0, 20.0, 30.0].iter().enumerate() {
+            m.epochs.push(rec(i, 70.0, *w, 0.3));
+        }
+        assert!((m.time_per_epoch(3, false) - 20.0).abs() < 1e-9);
+        assert!((m.time_per_epoch(99, false) - 52.0).abs() < 1e-9, "clamps to n");
+        assert_eq!(RunMetrics::default().time_per_epoch(5, false), 0.0);
+    }
+
+    #[test]
+    fn csv_and_json_roundtrip_shapes() {
+        let mut m = RunMetrics::default();
+        m.epochs.push(rec(0, 70.0, 10.0, 0.3));
+        m.record_batch(0, 96);
+        let csv = m.epochs_csv();
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.contains("eff_score"));
+        let j = Json::parse(&m.to_json().to_string_compact()).unwrap();
+        assert_eq!(j.req("epochs").unwrap().as_arr().unwrap().len(), 1);
+        assert!(j.req("counters").unwrap().get("oom_events").is_some());
+    }
+
+    #[test]
+    fn write_creates_files() {
+        let mut m = RunMetrics::default();
+        m.epochs.push(rec(0, 70.0, 10.0, 0.3));
+        let dir = std::env::temp_dir().join(format!("triaccel_metrics_{}", std::process::id()));
+        m.write(&dir, "t").unwrap();
+        assert!(dir.join("t_epochs.csv").exists());
+        assert!(dir.join("t_batch_trace.csv").exists());
+        assert!(dir.join("t.json").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn peak_and_final_acc() {
+        let mut m = RunMetrics::default();
+        m.epochs.push(rec(0, 60.0, 10.0, 0.30));
+        m.epochs.push(rec(1, 70.0, 10.0, 0.35));
+        m.epochs.push(rec(2, 75.0, 10.0, 0.32));
+        assert_eq!(m.final_test_acc(), 75.0);
+        assert_eq!(m.peak_vram_gb(), 0.35);
+    }
+}

@@ -1,0 +1,100 @@
+//! PJRT client + lazy executable cache.
+//!
+//! Executables are compiled on first use and cached by (model key,
+//! artifact name) — the batch-bucket ladder means the elastic controller
+//! can request a new bucket mid-run and pay the compile exactly once
+//! (mirrors Triton's per-shape JIT cache in the paper's stack).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::manifest::{Manifest, ModelEntry};
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    compile_log: RefCell<Vec<(String, f64)>>,
+}
+
+impl Engine {
+    pub fn new(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            compile_log: RefCell::new(Vec::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Fetch (compile-on-miss) the executable for `entry`'s artifact
+    /// `name` (e.g. "train_b96", "eval_b128", "curv", "init").
+    pub fn executable(
+        &self,
+        entry: &ModelEntry,
+        name: &str,
+    ) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        let key = format!("{}::{}", entry.key, name);
+        if let Some(exe) = self.cache.borrow().get(&key) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.artifact_path(entry, name)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {key}"))?,
+        );
+        let dt = t0.elapsed().as_secs_f64();
+        self.compile_log.borrow_mut().push((key.clone(), dt));
+        self.cache.borrow_mut().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// True if the executable is already compiled (used by the batch
+    /// controller to prefer warm buckets when latency matters).
+    pub fn is_warm(&self, entry: &ModelEntry, name: &str) -> bool {
+        self.cache
+            .borrow()
+            .contains_key(&format!("{}::{}", entry.key, name))
+    }
+
+    /// (artifact, seconds) pairs for every compile performed so far.
+    pub fn compile_log(&self) -> Vec<(String, f64)> {
+        self.compile_log.borrow().clone()
+    }
+
+    /// Run a compiled executable over host literals and flatten the
+    /// single tuple result into its leaves.
+    pub fn run(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let out = exe.execute::<xla::Literal>(inputs)?;
+        anyhow::ensure!(
+            out.len() == 1 && out[0].len() == 1,
+            "expected single tuple output, got {}x{}",
+            out.len(),
+            out.first().map(|v| v.len()).unwrap_or(0)
+        );
+        let lit = out[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime — loads the AOT artifacts (HLO text) and executes them on
+//! the CPU PJRT client. This is the only module that touches the `xla`
+//! crate; everything above it deals in plain `f32` host vectors.
+//!
+//! Python never runs here: the artifacts were lowered once at build time
+//! (`make artifacts`) and the binary is self-contained afterwards.
+
+mod engine;
+mod session;
+
+pub use engine::Engine;
+pub use session::{Batch, EvalResult, Session, StepCtrl, TrainOutputs};

@@ -1,0 +1,346 @@
+//! A training session: model parameters + optimizer + BN state held as
+//! host literals, with train / eval / curvature entry points that call the
+//! corresponding AOT executables.
+//!
+//! IO orderings here mirror manifest `io` exactly:
+//!   train: params*N, mom*N, state*S, x, y, codes, lr_scales, lr, loss_scale, wd
+//!       -> params*N, mom*N, state*S, loss, correct, grad_var, grad_norm, overflow
+//!   eval:  params*N, state*S, x, y, codes -> loss, correct
+//!   curv:  params*N, state*S, x, y, u*N, codes -> u_next*N, lambdas
+//!   init:  seed -> params*N, state*S
+
+use anyhow::{Context, Result};
+
+use super::engine::Engine;
+use crate::manifest::ModelEntry;
+use crate::util::rng::Rng;
+
+/// One training batch in host memory (NHWC f32 images + i32 labels).
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub n: usize,
+}
+
+impl Batch {
+    pub fn new(x: Vec<f32>, y: Vec<i32>) -> Batch {
+        let n = y.len();
+        assert_eq!(x.len(), n * 32 * 32 * 3, "batch image payload mismatch");
+        Batch { x, y, n }
+    }
+}
+
+/// Per-step control surface — everything the Tri-Accel coordinator steers.
+#[derive(Clone, Debug)]
+pub struct StepCtrl {
+    pub codes: Vec<i32>,
+    pub lr_scales: Vec<f32>,
+    pub lr: f32,
+    pub loss_scale: f32,
+    pub weight_decay: f32,
+}
+
+impl StepCtrl {
+    pub fn uniform(num_layers: usize, code: i32, lr: f32, wd: f32) -> StepCtrl {
+        StepCtrl {
+            codes: vec![code; num_layers],
+            lr_scales: vec![1.0; num_layers],
+            lr,
+            loss_scale: 1.0,
+            weight_decay: wd,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainOutputs {
+    pub loss: f32,
+    pub correct: i64,
+    pub grad_var: Vec<f32>,
+    pub grad_norm: Vec<f32>,
+    pub overflow: bool,
+}
+
+#[derive(Clone, Debug)]
+pub struct EvalResult {
+    pub loss: f32,
+    pub correct: i64,
+    pub total: usize,
+}
+
+pub struct Session<'e> {
+    pub engine: &'e Engine,
+    pub entry: ModelEntry,
+    params: Vec<xla::Literal>,
+    mom: Vec<xla::Literal>,
+    state: Vec<xla::Literal>,
+    /// Power-iteration probe vectors, persisted across curvature firings.
+    probes: Option<Vec<xla::Literal>>,
+    pub steps: u64,
+}
+
+fn scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+fn vec_f32(v: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+fn vec_i32(v: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+impl<'e> Session<'e> {
+    /// Materialize params/state by executing the model's `init` artifact
+    /// with `seed` (threefry inside XLA — no weight blobs on disk).
+    pub fn init(engine: &'e Engine, model_key: &str, seed: i32) -> Result<Session<'e>> {
+        let entry = engine.manifest.model(model_key)?.clone();
+        let exe = engine.executable(&entry, "init")?;
+        let outs = engine.run(&exe, &[xla::Literal::scalar(seed)])?;
+        let n = entry.params.len();
+        let s = entry.state_shapes.len();
+        anyhow::ensure!(outs.len() == n + s, "init output arity {} != {}", outs.len(), n + s);
+        let mut outs = outs.into_iter();
+        let params: Vec<_> = outs.by_ref().take(n).collect();
+        let state: Vec<_> = outs.collect();
+        let mom = entry
+            .params
+            .iter()
+            .map(|p| {
+                let zeros = vec![0f32; p.elems];
+                let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
+                vec_f32(&zeros).reshape(&dims).context("zeros reshape")
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Session { engine, entry, params, mom, state, probes: None, steps: 0 })
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.entry.num_layers
+    }
+
+    fn batch_literals(&self, batch: &Batch) -> Result<(xla::Literal, xla::Literal)> {
+        let x = vec_f32(&batch.x).reshape(&[batch.n as i64, 32, 32, 3])?;
+        let y = vec_i32(&batch.y);
+        Ok((x, y))
+    }
+
+    /// One optimizer step through the `train_b{n}` executable.
+    pub fn train_step(&mut self, batch: &Batch, ctrl: &StepCtrl) -> Result<TrainOutputs> {
+        anyhow::ensure!(
+            self.entry.train_buckets.contains(&batch.n),
+            "batch size {} is not an AOT bucket {:?}",
+            batch.n,
+            self.entry.train_buckets
+        );
+        anyhow::ensure!(ctrl.codes.len() == self.entry.num_layers, "codes arity");
+        anyhow::ensure!(ctrl.lr_scales.len() == self.entry.num_layers, "lr_scales arity");
+        let exe = self
+            .engine
+            .executable(&self.entry, &format!("train_b{}", batch.n))?;
+        let (x, y) = self.batch_literals(batch)?;
+
+        // Literal isn't Copy; execute takes Borrow<Literal>, so borrow the
+        // resident params/mom/state and the freshly-built control literals.
+        let mut refs: Vec<&xla::Literal> =
+            Vec::with_capacity(self.params.len() * 2 + self.state.len() + 7);
+        refs.extend(self.params.iter());
+        refs.extend(self.mom.iter());
+        refs.extend(self.state.iter());
+        let codes = vec_i32(&ctrl.codes);
+        let lr_scales = vec_f32(&ctrl.lr_scales);
+        let lr = scalar_f32(ctrl.lr);
+        let ls = scalar_f32(ctrl.loss_scale);
+        let wd = scalar_f32(ctrl.weight_decay);
+        refs.push(&x);
+        refs.push(&y);
+        refs.push(&codes);
+        refs.push(&lr_scales);
+        refs.push(&lr);
+        refs.push(&ls);
+        refs.push(&wd);
+
+        let outs = run_refs(&exe, &refs)?;
+        let n = self.params.len();
+        let s = self.state.len();
+        anyhow::ensure!(outs.len() == 2 * n + s + 5, "train output arity {}", outs.len());
+        let mut it = outs.into_iter();
+        self.params = it.by_ref().take(n).collect();
+        self.mom = it.by_ref().take(n).collect();
+        self.state = it.by_ref().take(s).collect();
+        let loss = it.next().unwrap().get_first_element::<f32>()?;
+        let correct = it.next().unwrap().get_first_element::<i32>()? as i64;
+        let grad_var = it.next().unwrap().to_vec::<f32>()?;
+        let grad_norm = it.next().unwrap().to_vec::<f32>()?;
+        let overflow = it.next().unwrap().get_first_element::<i32>()? != 0;
+        self.steps += 1;
+        Ok(TrainOutputs { loss, correct, grad_var, grad_norm, overflow })
+    }
+
+    /// Evaluate one batch through `eval_b{n}`. Codes let callers measure
+    /// quantized inference; pass all-FP32 for the paper's test protocol.
+    pub fn eval_batch(&self, batch: &Batch, codes: &[i32]) -> Result<EvalResult> {
+        anyhow::ensure!(
+            self.entry.eval_buckets.contains(&batch.n),
+            "eval batch size {} not in buckets {:?}",
+            batch.n,
+            self.entry.eval_buckets
+        );
+        let exe = self
+            .engine
+            .executable(&self.entry, &format!("eval_b{}", batch.n))?;
+        let (x, y) = self.batch_literals(batch)?;
+        let codes_l = vec_i32(codes);
+        let mut refs: Vec<&xla::Literal> = Vec::new();
+        refs.extend(self.params.iter());
+        refs.extend(self.state.iter());
+        refs.push(&x);
+        refs.push(&y);
+        refs.push(&codes_l);
+        let outs = run_refs(&exe, &refs)?;
+        anyhow::ensure!(outs.len() == 2, "eval output arity");
+        Ok(EvalResult {
+            loss: outs[0].get_first_element::<f32>()?,
+            correct: outs[1].get_first_element::<i32>()? as i64,
+            total: batch.n,
+        })
+    }
+
+    /// One amortized power-iteration step on the curvature batch; returns
+    /// per-layer Rayleigh quotients λ_l. Probe vectors persist in the
+    /// session and warm-start the next firing.
+    pub fn curv_step(&mut self, batch: &Batch, codes: &[i32], seed: u64) -> Result<Vec<f32>> {
+        anyhow::ensure!(batch.n == self.entry.curv_batch, "curvature batch size");
+        let exe = self.engine.executable(&self.entry, "curv")?;
+        if self.probes.is_none() {
+            self.probes = Some(self.fresh_probes(seed)?);
+        }
+        let (x, y) = self.batch_literals(batch)?;
+        let codes_l = vec_i32(codes);
+        let probes = self.probes.as_ref().unwrap();
+        let mut refs: Vec<&xla::Literal> = Vec::new();
+        refs.extend(self.params.iter());
+        refs.extend(self.state.iter());
+        refs.push(&x);
+        refs.push(&y);
+        refs.extend(probes.iter());
+        refs.push(&codes_l);
+        let outs = run_refs(&exe, &refs)?;
+        let n = self.params.len();
+        anyhow::ensure!(outs.len() == n + 1, "curv output arity");
+        let mut it = outs.into_iter();
+        self.probes = Some(it.by_ref().take(n).collect());
+        let lambdas = it.next().unwrap().to_vec::<f32>()?;
+        Ok(lambdas)
+    }
+
+    /// Reset the power iteration (e.g. after large parameter jumps).
+    pub fn reset_probes(&mut self) {
+        self.probes = None;
+    }
+
+    fn fresh_probes(&self, seed: u64) -> Result<Vec<xla::Literal>> {
+        let mut rng = Rng::stream(seed, 0xC0FFEE);
+        self.entry
+            .params
+            .iter()
+            .map(|p| {
+                let v: Vec<f32> = if p.layer_idx >= 0 {
+                    (0..p.elems).map(|_| rng.next_normal()).collect()
+                } else {
+                    vec![0f32; p.elems] // non-precision params don't probe
+                };
+                let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
+                vec_f32(&v).reshape(&dims).context("probe reshape")
+            })
+            .collect()
+    }
+
+    /// L2 norm of a parameter tensor (telemetry / tests).
+    pub fn param_norm(&self, idx: usize) -> Result<f64> {
+        let v = self.params[idx].to_vec::<f32>()?;
+        Ok(v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt())
+    }
+
+    /// Snapshot of all parameters as host vectors (tests / checkpoints).
+    pub fn params_host(&self) -> Result<Vec<Vec<f32>>> {
+        self.params.iter().map(|l| Ok(l.to_vec::<f32>()?)).collect()
+    }
+
+    /// Serialize the full optimizer state into a [`Checkpoint`].
+    pub fn export(&self, step: u64) -> Result<crate::checkpoint::Checkpoint> {
+        use crate::checkpoint::{Checkpoint, Tensor};
+        let mut tensors = Vec::new();
+        let mut push = |role: &str, i: usize, lit: &xla::Literal, dims: &[usize]| -> Result<()> {
+            tensors.push(Tensor {
+                name: format!("{role}/{i}"),
+                dims: dims.iter().map(|&d| d as u64).collect(),
+                data: lit.to_vec::<f32>()?,
+            });
+            Ok(())
+        };
+        for (i, (p, spec)) in self.params.iter().zip(&self.entry.params).enumerate() {
+            push("param", i, p, &spec.shape)?;
+        }
+        for (i, (m, spec)) in self.mom.iter().zip(&self.entry.params).enumerate() {
+            push("mom", i, m, &spec.shape)?;
+        }
+        for (i, (s, shape)) in self.state.iter().zip(&self.entry.state_shapes).enumerate() {
+            push("state", i, s, shape)?;
+        }
+        Ok(Checkpoint { model_key: self.entry.key.clone(), step, tensors })
+    }
+
+    /// Restore params/momentum/state from a checkpoint. Model key and
+    /// every tensor shape are validated against the manifest; probe
+    /// vectors are reset (they are re-warmed cheaply).
+    pub fn restore(&mut self, ckpt: &crate::checkpoint::Checkpoint) -> Result<u64> {
+        anyhow::ensure!(
+            ckpt.model_key == self.entry.key,
+            "checkpoint is for model `{}`, session is `{}`",
+            ckpt.model_key,
+            self.entry.key
+        );
+        let lit_for = |t: &crate::checkpoint::Tensor, want: &[usize]| -> Result<xla::Literal> {
+            let dims: Vec<usize> = t.dims.iter().map(|&d| d as usize).collect();
+            anyhow::ensure!(
+                dims == want,
+                "tensor {}: checkpoint shape {:?} != manifest {:?}",
+                t.name,
+                dims,
+                want
+            );
+            let d64: Vec<i64> = want.iter().map(|&d| d as i64).collect();
+            Ok(vec_f32(&t.data).reshape(&d64)?)
+        };
+        let mut params = Vec::with_capacity(self.params.len());
+        let mut mom = Vec::with_capacity(self.mom.len());
+        let mut state = Vec::with_capacity(self.state.len());
+        for (i, spec) in self.entry.params.iter().enumerate() {
+            params.push(lit_for(ckpt.tensor(&format!("param/{i}"))?, &spec.shape)?);
+            mom.push(lit_for(ckpt.tensor(&format!("mom/{i}"))?, &spec.shape)?);
+        }
+        for (i, shape) in self.entry.state_shapes.iter().enumerate() {
+            state.push(lit_for(ckpt.tensor(&format!("state/{i}"))?, shape)?);
+        }
+        self.params = params;
+        self.mom = mom;
+        self.state = state;
+        self.probes = None;
+        self.steps = ckpt.step;
+        Ok(ckpt.step)
+    }
+}
+
+/// Execute with borrowed literals and flatten the single tuple result.
+fn run_refs(
+    exe: &xla::PjRtLoadedExecutable,
+    refs: &[&xla::Literal],
+) -> Result<Vec<xla::Literal>> {
+    let out = exe.execute::<&xla::Literal>(refs)?;
+    anyhow::ensure!(out.len() == 1 && out[0].len() == 1, "expected 1x1 output");
+    let lit = out[0][0].to_literal_sync()?;
+    Ok(lit.to_tuple()?)
+}

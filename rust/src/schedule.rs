@@ -1,0 +1,62 @@
+//! Learning-rate schedule: linear warmup then cosine decay (paper §4.3:
+//! "learning rates are warmed up for the first 5 epochs and decayed
+//! following a cosine schedule").
+
+#[derive(Debug, Clone)]
+pub struct LrSchedule {
+    pub base_lr: f32,
+    pub warmup_steps: u64,
+    pub total_steps: u64,
+    pub min_lr: f32,
+}
+
+impl LrSchedule {
+    pub fn new(base_lr: f32, warmup_steps: u64, total_steps: u64) -> LrSchedule {
+        LrSchedule { base_lr, warmup_steps, total_steps: total_steps.max(1), min_lr: 0.0 }
+    }
+
+    pub fn lr_at(&self, step: u64) -> f32 {
+        if self.warmup_steps > 0 && step < self.warmup_steps {
+            // Linear warmup from base_lr/warmup to base_lr.
+            return self.base_lr * (step + 1) as f32 / self.warmup_steps as f32;
+        }
+        let t = (step - self.warmup_steps) as f64;
+        let total = (self.total_steps.saturating_sub(self.warmup_steps)).max(1) as f64;
+        let frac = (t / total).min(1.0);
+        let cos = 0.5 * (1.0 + (std::f64::consts::PI * frac).cos());
+        self.min_lr + (self.base_lr - self.min_lr) * cos as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = LrSchedule::new(0.1, 10, 100);
+        assert!((s.lr_at(0) - 0.01).abs() < 1e-6);
+        assert!((s.lr_at(4) - 0.05).abs() < 1e-6);
+        assert!((s.lr_at(9) - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cosine_decays_to_min() {
+        let s = LrSchedule::new(0.1, 0, 100);
+        assert!((s.lr_at(0) - 0.1).abs() < 1e-6);
+        assert!(s.lr_at(50) < 0.06 && s.lr_at(50) > 0.04);
+        assert!(s.lr_at(100) < 1e-6);
+        assert!(s.lr_at(500) < 1e-6, "clamps past the end");
+    }
+
+    #[test]
+    fn monotone_after_warmup() {
+        let s = LrSchedule::new(0.2, 5, 50);
+        let mut prev = f32::INFINITY;
+        for step in 5..=50 {
+            let lr = s.lr_at(step);
+            assert!(lr <= prev + 1e-9);
+            prev = lr;
+        }
+    }
+}

@@ -1,0 +1,117 @@
+//! Tiny CLI argument parser (substrate — no clap in the offline build).
+//!
+//! Grammar: `prog <subcommand> [--key value]... [--flag]...`
+//! Unknown keys are an error (catches typos in experiment scripts).
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    kv: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> anyhow::Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        if i < argv.len() && !argv[i].starts_with("--") {
+            out.subcommand = Some(argv[i].clone());
+            i += 1;
+        }
+        while i < argv.len() {
+            let a = &argv[i];
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow::anyhow!("expected --option, got `{a}`"))?;
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                out.kv.insert(key.to_string(), argv[i + 1].clone());
+                i += 2;
+            } else {
+                out.flags.push(key.to_string());
+                i += 1;
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> anyhow::Result<Args> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Self::parse(&argv)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.consumed.borrow_mut().push(key.to_string());
+        self.kv.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> anyhow::Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|_| anyhow::anyhow!("--{key}: cannot parse `{v}`")),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.consumed.borrow_mut().push(key.to_string());
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Call after all gets: errors on any option the program never read.
+    pub fn reject_unknown(&self) -> anyhow::Result<()> {
+        let seen = self.consumed.borrow();
+        for k in self.kv.keys().chain(self.flags.iter()) {
+            if !seen.iter().any(|s| s == k) {
+                anyhow::bail!("unknown option --{k}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn subcommand_and_kv() {
+        let a = Args::parse(&argv("train --model resnet18 --epochs 3 --verbose")).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("model"), Some("resnet18"));
+        assert_eq!(a.parse_or("epochs", 0usize).unwrap(), 3);
+        assert!(a.flag("verbose"));
+        a.reject_unknown().unwrap();
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&argv("run")).unwrap();
+        assert_eq!(a.get_or("x", "d"), "d");
+        assert_eq!(a.parse_or("n", 7i32).unwrap(), 7);
+        assert!(!a.flag("f"));
+    }
+
+    #[test]
+    fn unknown_rejected() {
+        let a = Args::parse(&argv("run --oops 1")).unwrap();
+        assert!(a.reject_unknown().is_err());
+    }
+
+    #[test]
+    fn bad_parse_is_error() {
+        let a = Args::parse(&argv("run --n abc")).unwrap();
+        assert!(a.parse_or("n", 0usize).is_err());
+    }
+}

@@ -1,0 +1,105 @@
+//! Micro-benchmark harness (substrate — no criterion in the offline
+//! build). `cargo bench` targets use `harness = false` and call into this.
+//!
+//! Methodology: warmup runs, then timed iterations until both a minimum
+//! iteration count and a minimum wall budget are met; reports mean ± std
+//! and p50/p90 per iteration.
+
+use std::time::{Duration, Instant};
+
+use super::stats::{percentile, Welford};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub std: Duration,
+    pub p50: Duration,
+    pub p90: Duration,
+}
+
+impl BenchResult {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>8} iters   mean {:>12?}   std {:>10?}   p50 {:>12?}   p90 {:>12?}",
+            self.name, self.iters, self.mean, self.std, self.p50, self.p90
+        )
+    }
+}
+
+pub struct Bencher {
+    pub warmup: u32,
+    pub min_iters: u64,
+    pub min_time: Duration,
+    pub max_iters: u64,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: 2,
+            min_iters: 10,
+            min_time: Duration::from_millis(300),
+            max_iters: 10_000_000,
+        }
+    }
+}
+
+impl Bencher {
+    /// Quick preset for expensive end-to-end cases (train epochs etc.).
+    pub fn heavy() -> Self {
+        Bencher { warmup: 1, min_iters: 3, min_time: Duration::from_millis(100), max_iters: 20 }
+    }
+
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut w = Welford::default();
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        let mut iters = 0u64;
+        while (iters < self.min_iters || start.elapsed() < self.min_time)
+            && iters < self.max_iters
+        {
+            let t0 = Instant::now();
+            f();
+            let dt = t0.elapsed();
+            w.push(dt.as_secs_f64());
+            samples.push(dt.as_secs_f64());
+            iters += 1;
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let res = BenchResult {
+            name: name.to_string(),
+            iters,
+            mean: Duration::from_secs_f64(w.mean()),
+            std: Duration::from_secs_f64(w.std()),
+            p50: Duration::from_secs_f64(percentile(&samples, 0.5)),
+            p90: Duration::from_secs_f64(percentile(&samples, 0.9)),
+        };
+        println!("{}", res.row());
+        res
+    }
+}
+
+/// Prevents the optimizer from eliding a computed value (ptr read fence).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let b = Bencher { warmup: 1, min_iters: 5, min_time: Duration::from_millis(1), max_iters: 50 };
+        let mut acc = 0u64;
+        let r = b.run("noop", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(r.iters >= 5);
+        assert!(r.mean >= Duration::ZERO);
+    }
+}

@@ -1,0 +1,9 @@
+//! In-tree substrates for the fully-offline build: JSON, RNG, CLI args,
+//! a stats helper, and the micro bench harness used by `cargo bench`.
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

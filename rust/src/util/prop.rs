@@ -1,0 +1,108 @@
+//! Property-based testing substrate (offline build — no proptest crate).
+//!
+//! A minimal QuickCheck-style runner over the in-tree [`Rng`]: N random
+//! cases per property, deterministic per seed, with the failing case's
+//! seed printed so a failure is reproducible with `PROP_SEED=<n>`.
+//! No shrinking — generators are kept small-biased instead.
+
+use super::rng::Rng;
+
+/// Number of cases per property (override with env `PROP_CASES`).
+pub fn default_cases() -> u64 {
+    std::env::var("PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(200)
+}
+
+/// Run `f` over `cases` seeded inputs; panic with the failing seed.
+pub fn check<F: FnMut(&mut Rng) -> Result<(), String>>(name: &str, mut f: F) {
+    let base: u64 = std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xDEFA17);
+    let cases = if std::env::var("PROP_SEED").is_ok() { 1 } else { default_cases() };
+    for case in 0..cases {
+        let seed = base.wrapping_add(case);
+        let mut rng = Rng::stream(seed, 0x1E57);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property `{name}` failed at PROP_SEED={seed}: {msg}");
+        }
+    }
+}
+
+/// Small-biased usize in [lo, hi]: half the draws come from the bottom
+/// decade, so boundary behaviour is exercised heavily.
+pub fn small_usize(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    debug_assert!(lo <= hi);
+    let span = hi - lo + 1;
+    if span == 1 {
+        return lo;
+    }
+    if rng.bernoulli(0.5) {
+        lo + rng.below(span.min(10) as u64) as usize
+    } else {
+        lo + rng.below(span as u64) as usize
+    }
+}
+
+/// Log-uniform positive f64 in [10^lo_exp, 10^hi_exp] — matches the
+/// scale-free quantities (gradient variances, curvatures) the
+/// controllers consume.
+pub fn log_uniform(rng: &mut Rng, lo_exp: f64, hi_exp: f64) -> f64 {
+    let e = lo_exp + (hi_exp - lo_exp) * rng.next_f64();
+    10f64.powf(e)
+}
+
+/// Uniform f64 in [lo, hi].
+pub fn uniform(rng: &mut Rng, lo: f64, hi: f64) -> f64 {
+    lo + (hi - lo) * rng.next_f64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("trivial", |rng| {
+            let x = rng.next_f64();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "PROP_SEED=")]
+    fn check_reports_seed_on_failure() {
+        check("always-fails", |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn small_usize_in_bounds_and_hits_extremes() {
+        let mut rng = Rng::new(1);
+        let mut lo_hit = false;
+        for _ in 0..2000 {
+            let v = small_usize(&mut rng, 3, 40);
+            assert!((3..=40).contains(&v));
+            lo_hit |= v == 3;
+        }
+        assert!(lo_hit, "small bias should hit the lower bound");
+        assert_eq!(small_usize(&mut rng, 7, 7), 7);
+    }
+
+    #[test]
+    fn log_uniform_spans_decades() {
+        let mut rng = Rng::new(2);
+        let (mut lo, mut hi) = (f64::MAX, f64::MIN);
+        for _ in 0..2000 {
+            let v = log_uniform(&mut rng, -8.0, 2.0);
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        assert!(lo < 1e-6 && hi > 1.0, "lo={lo} hi={hi}");
+    }
+}

@@ -1,0 +1,129 @@
+//! Small statistics helpers shared by metrics, memsim, and benches.
+
+/// Online mean/variance (Welford). Used for per-epoch timing stats and the
+/// mean±std rows in the table harness.
+#[derive(Debug, Default, Clone)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample standard deviation (n-1); 0 for n<2.
+    pub fn std(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.n - 1) as f64).sqrt()
+        }
+    }
+}
+
+/// Exponential moving average with bias-corrected warmup, matching the
+/// paper's v_l(t) = β·v_l(t-1) + (1-β)·Var[∇_l(t)].
+#[derive(Debug, Clone)]
+pub struct Ema {
+    beta: f64,
+    value: f64,
+    steps: u64,
+}
+
+impl Ema {
+    pub fn new(beta: f64) -> Self {
+        assert!((0.0..1.0).contains(&beta), "beta must be in [0,1)");
+        Ema { beta, value: 0.0, steps: 0 }
+    }
+
+    pub fn update(&mut self, x: f64) -> f64 {
+        self.value = self.beta * self.value + (1.0 - self.beta) * x;
+        self.steps += 1;
+        self.get()
+    }
+
+    /// Bias-corrected estimate (Adam-style), so early windows aren't
+    /// dragged toward zero and the thresholds τ behave from step 1.
+    pub fn get(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            let corr = 1.0 - self.beta.powi(self.steps as i32);
+            self.value / corr
+        }
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+}
+
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let idx = (p.clamp(0.0, 1.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_direct() {
+        let xs = [1.0, 2.0, 4.0, 8.0, 16.0];
+        let mut w = Welford::default();
+        for x in xs {
+            w.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var =
+            xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (xs.len() - 1) as f64;
+        assert!((w.mean() - mean).abs() < 1e-12);
+        assert!((w.std() - var.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ema_converges_to_constant() {
+        let mut e = Ema::new(0.9);
+        for _ in 0..200 {
+            e.update(5.0);
+        }
+        assert!((e.get() - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ema_bias_correction_first_step() {
+        let mut e = Ema::new(0.99);
+        e.update(3.0);
+        // Without correction this would read 0.03; corrected it reads 3.0.
+        assert!((e.get() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn ema_rejects_bad_beta() {
+        Ema::new(1.0);
+    }
+
+    #[test]
+    fn percentile_basic() {
+        let v = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 0.5), 3.0);
+        assert_eq!(percentile(&v, 1.0), 5.0);
+    }
+}

@@ -1,0 +1,209 @@
+//! Integration tests over the PJRT runtime layer: manifest → engine →
+//! session, exercising the real AOT artifacts (`make artifacts` first).
+//! Uses `tiny_cnn_c10` — the CI-speed model.
+
+use tri_accel::data::{synthetic::SyntheticCifar, BatchIter, Dataset};
+use tri_accel::manifest::{BF16, FP16, FP32};
+use tri_accel::runtime::{Engine, Session, StepCtrl};
+
+fn engine() -> Engine {
+    Engine::new(std::path::Path::new("artifacts"))
+        .expect("run `make artifacts` before cargo test")
+}
+
+fn batch(n: usize, seed: u64) -> tri_accel::runtime::Batch {
+    let ds = SyntheticCifar::new(10, 512, true, seed);
+    BatchIter::new(Box::new(ds), seed, false).next_batch(n).unwrap()
+}
+
+#[test]
+fn manifest_lists_all_models_with_artifacts() {
+    let e = engine();
+    for key in ["tiny_cnn_c10", "resnet18_c10", "resnet18_c100", "effnet_lite_c10", "effnet_lite_c100"] {
+        let m = e.manifest.model(key).unwrap();
+        assert!(m.num_layers > 0);
+        assert!(!m.train_buckets.is_empty());
+        // Every advertised artifact file must exist on disk.
+        for name in m.artifacts.keys() {
+            let p = e.manifest.artifact_path(m, name).unwrap();
+            assert!(p.exists(), "{key}: missing artifact {p:?}");
+        }
+    }
+}
+
+#[test]
+fn init_is_deterministic_per_seed() {
+    let e = engine();
+    let s1 = Session::init(&e, "tiny_cnn_c10", 7).unwrap();
+    let s2 = Session::init(&e, "tiny_cnn_c10", 7).unwrap();
+    let s3 = Session::init(&e, "tiny_cnn_c10", 8).unwrap();
+    for i in 0..3 {
+        assert_eq!(s1.param_norm(i).unwrap(), s2.param_norm(i).unwrap());
+    }
+    let diff = (0..3).any(|i| s1.param_norm(i).unwrap() != s3.param_norm(i).unwrap());
+    assert!(diff, "different seeds must give different inits");
+}
+
+#[test]
+fn train_step_updates_params_and_reports_stats() {
+    let e = engine();
+    let mut s = Session::init(&e, "tiny_cnn_c10", 0).unwrap();
+    let n = s.num_layers();
+    let before: Vec<f64> = (0..n).map(|i| s.param_norm(i).unwrap()).collect();
+    let b = batch(16, 0);
+    let ctrl = StepCtrl::uniform(n, FP32, 0.05, 5e-4);
+    let out = s.train_step(&b, &ctrl).unwrap();
+    assert!(out.loss.is_finite() && out.loss > 0.0, "loss {}", out.loss);
+    assert!((0..=16).contains(&out.correct));
+    assert_eq!(out.grad_var.len(), n);
+    assert!(out.grad_var.iter().all(|v| v.is_finite() && *v >= 0.0));
+    assert!(out.grad_norm.iter().all(|g| g.is_finite() && *g >= 0.0));
+    assert!(!out.overflow);
+    let after: Vec<f64> = (0..n).map(|i| s.param_norm(i).unwrap()).collect();
+    assert_ne!(before, after, "params must move");
+}
+
+#[test]
+fn train_step_rejects_non_bucket_batch() {
+    let e = engine();
+    let mut s = Session::init(&e, "tiny_cnn_c10", 0).unwrap();
+    let n = s.num_layers();
+    let b = batch(13, 0); // 13 is not an AOT bucket
+    let ctrl = StepCtrl::uniform(n, FP32, 0.05, 0.0);
+    assert!(s.train_step(&b, &ctrl).is_err());
+}
+
+#[test]
+fn train_step_rejects_bad_arity() {
+    let e = engine();
+    let mut s = Session::init(&e, "tiny_cnn_c10", 0).unwrap();
+    let b = batch(16, 0);
+    let ctrl = StepCtrl::uniform(2, FP32, 0.05, 0.0); // wrong layer count
+    if s.num_layers() != 2 {
+        assert!(s.train_step(&b, &ctrl).is_err());
+    }
+}
+
+#[test]
+fn training_is_bitwise_reproducible() {
+    let e = engine();
+    let run = || {
+        let mut s = Session::init(&e, "tiny_cnn_c10", 3).unwrap();
+        let n = s.num_layers();
+        let ctrl = StepCtrl::uniform(n, BF16, 0.05, 5e-4);
+        let mut losses = Vec::new();
+        for i in 0..3 {
+            let b = batch(16, 100 + i);
+            losses.push(s.train_step(&b, &ctrl).unwrap().loss);
+        }
+        (losses, s.params_host().unwrap())
+    };
+    let (l1, p1) = run();
+    let (l2, p2) = run();
+    assert_eq!(l1, l2, "loss trajectory must be bit-identical");
+    assert_eq!(p1, p2, "parameters must be bit-identical");
+}
+
+#[test]
+fn precision_codes_change_numerics_but_stay_close() {
+    let e = engine();
+    let run_at = |code: i32| {
+        let mut s = Session::init(&e, "tiny_cnn_c10", 1).unwrap();
+        let ctrl = StepCtrl::uniform(s.num_layers(), code, 0.05, 0.0);
+        let b = batch(16, 9);
+        let out = s.train_step(&b, &ctrl).unwrap();
+        (out.loss, out.grad_var)
+    };
+    let (l32, v32) = run_at(FP32);
+    let (l16, v16) = run_at(FP16);
+    let (lbf, vbf) = run_at(BF16);
+    // The quantization must actually perturb the computation. The
+    // scalar loss can coincidentally round identically (observed for
+    // fp16 at init), so the robust check is on the gradient statistics,
+    // which integrate rounding error across every parameter.
+    assert_ne!(v32, v16, "fp16 emulation must perturb gradients");
+    assert_ne!(v32, vbf, "bf16 emulation must perturb gradients");
+    // ... but only slightly: same loss to 10%, grad variance same scale.
+    assert!((l32 - l16).abs() / l32 < 0.1, "fp16 loss far off: {l32} vs {l16}");
+    assert!((l32 - lbf).abs() / l32 < 0.1, "bf16 loss far off: {l32} vs {lbf}");
+    for (a, b) in v32.iter().zip(&v16) {
+        assert!((a / b).max(b / a) < 2.0, "fp16 grad_var off-scale: {a} vs {b}");
+    }
+}
+
+#[test]
+fn eval_counts_correct_within_batch() {
+    let e = engine();
+    let s = Session::init(&e, "tiny_cnn_c10", 0).unwrap();
+    let codes = vec![FP32; s.num_layers()];
+    let ds = SyntheticCifar::new(10, 512, false, 4);
+    let mut x = vec![0f32; 16 * 32 * 32 * 3];
+    let mut y = vec![0i32; 16];
+    for i in 0..16 {
+        y[i] = ds.example(i, &mut x[i * 3072..(i + 1) * 3072]);
+    }
+    let b = tri_accel::runtime::Batch::new(x, y);
+    let r = s.eval_batch(&b, &codes).unwrap();
+    assert!(r.loss.is_finite() && r.loss > 0.0);
+    assert!((0..=16).contains(&r.correct));
+    assert_eq!(r.total, 16);
+}
+
+#[test]
+fn curvature_probe_converges_to_stable_lambda() {
+    let e = engine();
+    let mut s = Session::init(&e, "tiny_cnn_c10", 0).unwrap();
+    let n = s.num_layers();
+    let codes = vec![FP32; n];
+    let cb = s.entry.curv_batch;
+    let b = batch(cb, 5);
+    let mut last = Vec::new();
+    for _ in 0..6 {
+        last = s.curv_step(&b, &codes, 11).unwrap();
+        assert_eq!(last.len(), n);
+    }
+    let next = s.curv_step(&b, &codes, 11).unwrap();
+    for (l, (a, b_)) in last.iter().zip(&next).enumerate() {
+        assert!(a.is_finite() && b_.is_finite(), "layer {l}: λ not finite");
+        // Power iteration on a fixed batch should be near-converged
+        // after 7 steps: successive Rayleigh quotients within 25%.
+        let denom = a.abs().max(1e-3);
+        assert!(
+            (a - b_).abs() / denom < 0.25,
+            "layer {l}: λ jitter {a} → {b_}"
+        );
+    }
+}
+
+#[test]
+fn executable_cache_compiles_once() {
+    let e = engine();
+    let entry = e.manifest.model("tiny_cnn_c10").unwrap().clone();
+    assert!(!e.is_warm(&entry, "train_b16"));
+    let _ = e.executable(&entry, "train_b16").unwrap();
+    assert!(e.is_warm(&entry, "train_b16"));
+    let log1 = e.compile_log().len();
+    let _ = e.executable(&entry, "train_b16").unwrap();
+    assert_eq!(e.compile_log().len(), log1, "second fetch must hit the cache");
+}
+
+#[test]
+fn loss_scale_is_value_neutral_for_fp32() {
+    // The train graph divides the scale back out — an FP32 run with
+    // scale 1024 must match scale 1 bit-for-bit (no fp16 rounding).
+    let e = engine();
+    let run = |scale: f32| {
+        let mut s = Session::init(&e, "tiny_cnn_c10", 2).unwrap();
+        let n = s.num_layers();
+        let mut ctrl = StepCtrl::uniform(n, FP32, 0.05, 0.0);
+        ctrl.loss_scale = scale;
+        let b = batch(16, 77);
+        let out = s.train_step(&b, &ctrl).unwrap();
+        (out.loss, s.params_host().unwrap())
+    };
+    let (l1, p1) = run(1.0);
+    let (l2, p2) = run(1024.0);
+    assert_eq!(l1, l2);
+    // Gradients go through *2^k scaling — exact in binary fp.
+    assert_eq!(p1, p2, "2^k loss scaling must be exact for fp32");
+}

@@ -1,0 +1,284 @@
+//! End-to-end integration over the trainer: full Tri-Accel loop against
+//! the real AOT artifacts, plus method/ablation behaviour the tables
+//! depend on. Small step budgets keep this in CI range.
+
+use tri_accel::config::{Config, Method};
+use tri_accel::manifest::FP32;
+use tri_accel::memsim::MemoryMonitor;
+use tri_accel::runtime::Engine;
+use tri_accel::train::Trainer;
+
+fn engine() -> Engine {
+    Engine::new(std::path::Path::new("artifacts"))
+        .expect("run `make artifacts` before cargo test")
+}
+
+fn quick_cfg(method: Method, seed: u64) -> Config {
+    let mut cfg = Config::cell("tiny_cnn_c10", method, seed);
+    cfg.epochs = 1;
+    cfg.steps_per_epoch = Some(25);
+    cfg.train_examples = 2048;
+    cfg.eval_examples = 256;
+    cfg.batch_init = 16;
+    cfg.t_ctrl = 5;
+    cfg.t_curv = 10;
+    cfg.curv_warmup = 1;
+    cfg.batch_cooldown = 5;
+    cfg.warmup_epochs = 0;
+    // Base runtime overhead in the simulator is ~0.047GB; 0.06 leaves
+    // headroom for small batches but pressures large ones.
+    cfg.mem_budget_gb = 0.06;
+    cfg.mem_noise = 0.0;
+    cfg
+}
+
+#[test]
+fn triaccel_epoch_produces_sane_record() {
+    let e = engine();
+    let mut tr = Trainer::new(&e, quick_cfg(Method::TriAccel, 0)).unwrap();
+    let r = tr.run_epoch(0).unwrap();
+    assert_eq!(r.steps, 25);
+    assert!(r.train_loss.is_finite() && r.train_loss > 0.0);
+    assert!((0.0..=100.0).contains(&r.train_acc));
+    assert!((0.0..=100.0).contains(&r.test_acc));
+    assert!(r.peak_vram_gb > 0.0 && r.peak_vram_gb < 1.0);
+    assert!(r.modeled_s > 0.0 && r.wall_s > 0.0);
+    assert!(r.mean_batch > 0.0);
+    let mix_sum = r.mix.fp16 + r.mix.bf16 + r.mix.fp32;
+    assert!((mix_sum - 1.0).abs() < 1e-9);
+    assert!(r.eff_score > 0.0);
+}
+
+#[test]
+fn loss_decreases_over_training() {
+    let e = engine();
+    let mut cfg = quick_cfg(Method::TriAccel, 1);
+    cfg.epochs = 3;
+    cfg.steps_per_epoch = Some(40);
+    cfg.base_lr = 0.1;
+    cfg.batch_init = 32;
+    cfg.mem_budget_gb = 0.5; // roomy: isolate learning from OOM shrink
+    let mut tr = Trainer::new(&e, cfg).unwrap();
+    let first = tr.run_epoch(0).unwrap();
+    tr.run_epoch(1).unwrap();
+    let last = tr.run_epoch(2).unwrap();
+    assert!(
+        last.train_loss < first.train_loss,
+        "no learning: {} → {}",
+        first.train_loss,
+        last.train_loss
+    );
+    // Synthetic classes are separable — accuracy should beat chance (10%).
+    assert!(last.test_acc > 15.0, "test acc {} ≤ chance", last.test_acc);
+}
+
+#[test]
+fn methods_are_reproducible_per_seed() {
+    let e = engine();
+    let run = |seed| {
+        let mut tr = Trainer::new(&e, quick_cfg(Method::TriAccel, seed)).unwrap();
+        let r = tr.run_epoch(0).unwrap();
+        (r.train_loss, r.test_acc, tr.controller.codes())
+    };
+    let a = run(5);
+    let b = run(5);
+    assert_eq!(a, b, "same seed ⇒ identical run");
+    let c = run(6);
+    assert_ne!(a.0, c.0, "different seed ⇒ different trajectory");
+}
+
+#[test]
+fn fp32_baseline_stays_fp32_and_fixed_batch() {
+    let e = engine();
+    let mut tr = Trainer::new(&e, quick_cfg(Method::Fp32, 0)).unwrap();
+    tr.run_epoch(0).unwrap();
+    assert!(tr.controller.codes().iter().all(|&c| c == FP32));
+    assert_eq!(tr.metrics.batch_trace.len(), 1, "batch never moves");
+    assert_eq!(tr.metrics.curv_firings, 0);
+    assert_eq!(tr.metrics.promotions, 0);
+}
+
+#[test]
+fn amp_static_has_lower_memory_than_fp32() {
+    let e = engine();
+    let peak = |method| {
+        let mut tr = Trainer::new(&e, quick_cfg(method, 0)).unwrap();
+        tr.run_epoch(0).unwrap();
+        tr.metrics.peak_vram_gb()
+    };
+    let fp32 = peak(Method::Fp32);
+    let amp = peak(Method::AmpStatic);
+    assert!(amp < fp32, "AMP {amp} must beat FP32 {fp32} on memory");
+}
+
+#[test]
+fn triaccel_curvature_fires_and_scales_lr() {
+    let e = engine();
+    let mut tr = Trainer::new(&e, quick_cfg(Method::TriAccel, 2)).unwrap();
+    tr.run_epoch(0).unwrap();
+    assert!(tr.metrics.curv_firings >= 2, "t_curv=10 over 25 steps");
+    let scales = tr.controller.lr_scales();
+    assert!(scales.iter().all(|&s| s > 0.0 && s <= 1.0));
+    // After warmup at least one layer should see real curvature.
+    assert!(
+        scales.iter().any(|&s| s < 1.0),
+        "curvature had no effect: {scales:?}"
+    );
+}
+
+#[test]
+fn elastic_batch_responds_to_budget() {
+    let e = engine();
+    // Roomy budget → B grows above its initial bucket.
+    let mut roomy = quick_cfg(Method::TriAccel, 3);
+    roomy.mem_budget_gb = 0.5;
+    roomy.steps_per_epoch = Some(40);
+    roomy.batch_cooldown = 3;
+    let mut tr = Trainer::new(&e, roomy).unwrap();
+    tr.run_epoch(0).unwrap();
+    let max_b = tr.metrics.batch_trace.iter().map(|&(_, b)| b).max().unwrap();
+    assert!(max_b > 16, "batch never grew under roomy budget");
+
+    // Starved budget → controller shrinks/holds at the floor, never OOM-loops.
+    let mut tight = quick_cfg(Method::TriAccel, 3);
+    tight.mem_budget_gb = 0.05;
+    tight.batch_init = 96;
+    let mut tr2 = Trainer::new(&e, tight).unwrap();
+    tr2.run_epoch(0).unwrap();
+    let last_b = tr2.metrics.batch_trace.last().unwrap().1;
+    assert!(last_b < 96, "batch never shrank under starved budget");
+    assert!(tr2.memsim.peak_gb() > 0.0);
+}
+
+#[test]
+fn evaluate_covers_whole_test_set() {
+    let e = engine();
+    let mut cfg = quick_cfg(Method::Fp32, 0);
+    cfg.eval_examples = 272; // 2×128 + 16 — exercises both buckets
+    let mut tr = Trainer::new(&e, cfg).unwrap();
+    let (loss, acc) = tr.evaluate().unwrap();
+    assert!(loss.is_finite() && loss > 0.0);
+    assert!((0.0..=100.0).contains(&acc));
+}
+
+#[test]
+fn eval_examples_must_align_to_bucket() {
+    let e = engine();
+    let mut cfg = quick_cfg(Method::Fp32, 0);
+    cfg.eval_examples = 250; // not a multiple of 16
+    assert!(Trainer::new(&e, cfg).is_err());
+}
+
+#[test]
+fn run_summary_aggregates_last_epochs() {
+    let e = engine();
+    let mut cfg = quick_cfg(Method::TriAccel, 0);
+    cfg.epochs = 2;
+    cfg.steps_per_epoch = Some(10);
+    let mut tr = Trainer::new(&e, cfg).unwrap();
+    let s = tr.run().unwrap();
+    assert_eq!(tr.metrics.epochs.len(), 2);
+    assert!(s.test_acc_pct >= 0.0);
+    assert!(s.wall_s_per_epoch > 0.0 && s.modeled_s_per_epoch > 0.0);
+    assert!(s.peak_vram_gb > 0.0);
+    assert!(s.eff_score > 0.0);
+    assert_eq!(s.method, Method::TriAccel);
+}
+
+#[test]
+fn metrics_files_written() {
+    let e = engine();
+    let mut cfg = quick_cfg(Method::TriAccel, 0);
+    cfg.steps_per_epoch = Some(6);
+    let mut tr = Trainer::new(&e, cfg).unwrap();
+    tr.run_epoch(0).unwrap();
+    let dir = std::env::temp_dir().join(format!("triaccel_it_{}", std::process::id()));
+    tr.metrics.write(&dir, "itest").unwrap();
+    let csv = std::fs::read_to_string(dir.join("itest_epochs.csv")).unwrap();
+    assert!(csv.lines().count() >= 2);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn checkpoint_roundtrip_resumes_identically() {
+    let e = engine();
+    let ckpt_path =
+        std::env::temp_dir().join(format!("triaccel_ckpt_it_{}.bin", std::process::id()));
+
+    // Train 10 steps, checkpoint, then 5 more.
+    let mut cfg = quick_cfg(Method::Fp32, 9);
+    cfg.t_curv = 0;
+    let mut tr = Trainer::new(&e, cfg.clone()).unwrap();
+    for _ in 0..10 {
+        tr.step().unwrap();
+    }
+    tr.save_checkpoint(&ckpt_path).unwrap();
+    let mut direct_losses = Vec::new();
+    for _ in 0..5 {
+        direct_losses.push(tr.step().unwrap().0);
+    }
+
+    // Fresh trainer, resume, same 5 steps must be bit-identical: the
+    // checkpoint captures params+mom+state and the step counter keys
+    // both the LR schedule and the data order.
+    let mut tr2 = Trainer::new(&e, cfg).unwrap();
+    let step = tr2.resume_from(&ckpt_path).unwrap();
+    assert_eq!(step, 10);
+    // Fast-forward the data iterator to the same stream position.
+    for _ in 0..10 {
+        tr2.skip_batch().unwrap();
+    }
+    let mut resumed_losses = Vec::new();
+    for _ in 0..5 {
+        resumed_losses.push(tr2.step().unwrap().0);
+    }
+    assert_eq!(direct_losses, resumed_losses, "resume must be bit-exact");
+
+    // Wrong model → clean error.
+    let mut tr3 = Trainer::new(&e, quick_cfg(Method::Fp32, 9)).unwrap();
+    let _ = tr3;
+    std::fs::remove_file(&ckpt_path).ok();
+}
+
+#[test]
+fn checkpoint_rejects_wrong_model() {
+    let e = engine();
+    let ckpt_path =
+        std::env::temp_dir().join(format!("triaccel_ckpt_wm_{}.bin", std::process::id()));
+    let mut cfg = quick_cfg(Method::Fp32, 0);
+    cfg.t_curv = 0;
+    let tr = Trainer::new(&e, cfg).unwrap();
+    tr.save_checkpoint(&ckpt_path).unwrap();
+    let mut ckpt = tri_accel::checkpoint::Checkpoint::load(&ckpt_path).unwrap();
+    ckpt.model_key = "resnet18_c10".into();
+    let mut cfg2 = quick_cfg(Method::Fp32, 0);
+    cfg2.t_curv = 0;
+    let mut tr2 = Trainer::new(&e, cfg2).unwrap();
+    assert!(tr2.session.restore(&ckpt).is_err(), "model-key mismatch must fail");
+    std::fs::remove_file(&ckpt_path).ok();
+}
+
+#[test]
+fn lr_batch_scaling_scales_step_size() {
+    let e = engine();
+    // With scaling on and a roomy budget (batch grows), training still
+    // works; smoke-level: loss finite and decreasing-ish.
+    let mut cfg = quick_cfg(Method::TriAccel, 4);
+    cfg.lr_batch_scaling = true;
+    cfg.mem_budget_gb = 0.5;
+    cfg.steps_per_epoch = Some(20);
+    let mut tr = Trainer::new(&e, cfg).unwrap();
+    let r = tr.run_epoch(0).unwrap();
+    assert!(r.train_loss.is_finite());
+}
+
+#[test]
+fn full_epoch_mode_consumes_train_examples() {
+    let e = engine();
+    let mut cfg = quick_cfg(Method::Fp32, 0);
+    cfg.steps_per_epoch = None; // full pass
+    cfg.train_examples = 160; // 10 steps at B=16
+    let mut tr = Trainer::new(&e, cfg).unwrap();
+    let r = tr.run_epoch(0).unwrap();
+    assert_eq!(r.steps, 10);
+}

@@ -1,0 +1,386 @@
+//! Property-based tests on the coordinator state machines (DESIGN.md
+//! deliverable c): randomized measurement streams must never violate the
+//! §3 invariants, whatever the history.
+
+use tri_accel::config::{Ablation, Config, Method};
+use tri_accel::coordinator::batch::{BatchConfig, BatchController, BatchMove};
+use tri_accel::coordinator::curvature::{CurvatureConfig, CurvatureScheduler};
+use tri_accel::coordinator::precision::{LossScaler, PrecisionConfig, PrecisionController};
+use tri_accel::coordinator::Controller;
+use tri_accel::manifest::{LayerSpec, ModelEntry, BF16, FP16, FP32};
+use tri_accel::util::prop::{check, log_uniform, small_usize, uniform};
+use tri_accel::util::rng::Rng;
+
+fn entry(num_layers: usize, buckets: Vec<usize>) -> ModelEntry {
+    ModelEntry {
+        key: "prop".into(),
+        model: "prop".into(),
+        num_classes: 10,
+        num_layers,
+        param_count: 0,
+        layers: (0..num_layers)
+            .map(|i| LayerSpec {
+                name: format!("l{i}"),
+                kind: "conv".into(),
+                param_elems: 100,
+                act_elems: 10,
+                flops: 1000,
+            })
+            .collect(),
+        params: vec![],
+        state_shapes: vec![],
+        train_buckets: buckets,
+        eval_buckets: vec![16],
+        curv_batch: 8,
+        artifacts: Default::default(),
+    }
+}
+
+fn random_ladder(rng: &mut Rng) -> Vec<usize> {
+    let len = small_usize(rng, 1, 7);
+    let mut v: Vec<usize> = (0..len).map(|_| small_usize(rng, 1, 256)).collect();
+    v.sort_unstable();
+    v.dedup();
+    v
+}
+
+// ---------------------------------------------------------------- batch
+
+#[test]
+fn prop_batch_stays_on_ladder() {
+    check("batch size is always an AOT bucket", |rng| {
+        let ladder = random_ladder(rng);
+        let cfg = BatchConfig {
+            rho_low: uniform(rng, 0.2, 0.6),
+            rho_high: uniform(rng, 0.65, 0.99),
+            cooldown: small_usize(rng, 0, 20) as u64,
+        };
+        let init = small_usize(rng, 1, 256);
+        let mut c = BatchController::new(ladder.clone(), init, cfg);
+        for step in 0..200u64 {
+            let used = uniform(rng, 0.0, 1.2);
+            let fits = rng.bernoulli(0.7);
+            c.update(step, used, 1.0, |_| fits);
+            if rng.bernoulli(0.05) {
+                c.force_shrink(step);
+            }
+            if !c.buckets().contains(&c.current()) {
+                return Err(format!("B={} not in {:?}", c.current(), c.buckets()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batch_never_grows_past_veto() {
+    check("vetoed growth leaves B unchanged", |rng| {
+        let ladder = random_ladder(rng);
+        let cfg = BatchConfig { rho_low: 0.7, rho_high: 0.9, cooldown: 0 };
+        let mut c = BatchController::new(ladder, 64, cfg);
+        for step in 0..100u64 {
+            let before = c.current();
+            let m = c.update(step, uniform(rng, 0.0, 0.69), 1.0, |_| false);
+            if m == BatchMove::Grow {
+                return Err("grew despite universal veto".into());
+            }
+            if c.current() != before {
+                return Err(format!("moved {}→{} without fit", before, c.current()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batch_monotone_under_pressure() {
+    check("sustained over-budget usage is non-increasing in B", |rng| {
+        let ladder = random_ladder(rng);
+        let cfg = BatchConfig { rho_low: 0.3, rho_high: 0.8, cooldown: small_usize(rng, 0, 5) as u64 };
+        let mut c = BatchController::new(ladder, 256, cfg);
+        let mut prev = c.current();
+        for step in 0..50u64 {
+            c.update(step, uniform(rng, 0.81, 2.0), 1.0, |_| true);
+            if c.current() > prev {
+                return Err(format!("grew under pressure {}→{}", prev, c.current()));
+            }
+            prev = c.current();
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------------ precision
+
+fn pcfg(rng: &mut Rng) -> PrecisionConfig {
+    let lo = log_uniform(rng, -8.0, -3.0);
+    PrecisionConfig {
+        beta: uniform(rng, 0.0, 0.99),
+        tau_low: lo,
+        tau_high: lo * log_uniform(rng, 0.5, 3.0),
+        auto_threshold: false,
+        default_code: BF16,
+    }
+}
+
+#[test]
+fn prop_precision_codes_always_valid() {
+    check("codes ∈ {FP16, BF16, FP32} under arbitrary streams", |rng| {
+        let layers = small_usize(rng, 1, 12);
+        let mut pc = PrecisionController::new(layers, pcfg(rng));
+        for _ in 0..100 {
+            let vars: Vec<f32> = (0..layers)
+                .map(|_| {
+                    if rng.bernoulli(0.05) {
+                        f32::NAN
+                    } else {
+                        log_uniform(rng, -10.0, 1.0) as f32
+                    }
+                })
+                .collect();
+            pc.observe(&vars);
+            if rng.bernoulli(0.3) {
+                pc.control_window();
+            }
+            if rng.bernoulli(0.1) {
+                pc.promote(small_usize(rng, 0, layers - 1));
+            }
+            if !pc.codes().iter().all(|c| [FP16, BF16, FP32].contains(c)) {
+                return Err(format!("invalid codes {:?}", pc.codes()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_precision_moves_at_most_one_rung_per_window() {
+    check("one rung per control window", |rng| {
+        let layers = small_usize(rng, 1, 8);
+        let mut pc = PrecisionController::new(layers, pcfg(rng));
+        let rung = |c: i32| [FP16, BF16, FP32].iter().position(|&x| x == c).unwrap() as i64;
+        for _ in 0..60 {
+            let vars: Vec<f32> =
+                (0..layers).map(|_| log_uniform(rng, -10.0, 1.0) as f32).collect();
+            pc.observe(&vars);
+            let before: Vec<i64> = pc.codes().iter().map(|&c| rung(c)).collect();
+            pc.control_window();
+            for (l, (&b, &a)) in before
+                .iter()
+                .zip(pc.codes().iter().map(|&c| rung(c)).collect::<Vec<_>>().iter())
+                .enumerate()
+            {
+                // Promotions (not exercised here) may jump; pure variance
+                // moves must be |Δ| ≤ 1.
+                if (a - b).abs() > 1 {
+                    return Err(format!("layer {l} jumped {b}→{a}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_promotion_always_yields_fp32() {
+    check("promote() pins FP32 immediately", |rng| {
+        let layers = small_usize(rng, 1, 8);
+        let mut pc = PrecisionController::new(layers, pcfg(rng));
+        for _ in 0..30 {
+            let vars: Vec<f32> =
+                (0..layers).map(|_| log_uniform(rng, -10.0, -2.0) as f32).collect();
+            pc.observe(&vars);
+            pc.control_window();
+            let l = small_usize(rng, 0, layers - 1);
+            pc.promote(l);
+            if pc.codes()[l] != FP32 {
+                return Err(format!("layer {l} is {} after promote", pc.codes()[l]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_loss_scaler_positive_and_bounded() {
+    check("loss scale ∈ [1, 65536] and halves on overflow", |rng| {
+        let mut ls = LossScaler::new(2f32.powi(small_usize(rng, 0, 16) as i32), small_usize(rng, 1, 50) as u64);
+        for _ in 0..300 {
+            let before = ls.scale();
+            let overflow = rng.bernoulli(0.15);
+            ls.update(overflow);
+            let s = ls.scale();
+            if !(1.0..=65536.0).contains(&s) {
+                return Err(format!("scale {s} out of bounds"));
+            }
+            if overflow && before > 1.0 && s != before * 0.5 {
+                return Err(format!("overflow: {before} → {s}, expected halving"));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------------ curvature
+
+#[test]
+fn prop_lr_scales_in_unit_interval() {
+    check("η_l/η₀ ∈ (0, 1] for any λ stream", |rng| {
+        let layers = small_usize(rng, 1, 10);
+        let cfg = CurvatureConfig {
+            t_curv: 10,
+            alpha: uniform(rng, 0.01, 5.0) as f32,
+            tau_curv: log_uniform(rng, -1.0, 3.0),
+            warmup: small_usize(rng, 0, 3) as u64,
+            beta: uniform(rng, 0.0, 0.9),
+        };
+        let mut cs = CurvatureScheduler::new(layers, cfg);
+        for _ in 0..30 {
+            let lams: Vec<f32> = (0..layers)
+                .map(|_| {
+                    let mag = log_uniform(rng, -3.0, 4.0) as f32;
+                    if rng.bernoulli(0.3) {
+                        -mag
+                    } else if rng.bernoulli(0.05) {
+                        f32::INFINITY
+                    } else {
+                        mag
+                    }
+                })
+                .collect();
+            cs.observe(&lams);
+            for (l, &s) in cs.lr_scales().iter().enumerate() {
+                if !(s > 0.0 && s <= 1.0) {
+                    return Err(format!("layer {l}: scale {s}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lr_scale_antitone_in_lambda() {
+    check("larger λ never yields larger η", |rng| {
+        let cfg = CurvatureConfig {
+            t_curv: 10,
+            alpha: uniform(rng, 0.01, 5.0) as f32,
+            tau_curv: 1e9,
+            warmup: 0,
+            beta: 0.0,
+        };
+        let mut cs = CurvatureScheduler::new(2, cfg);
+        let a = log_uniform(rng, -3.0, 3.0) as f32;
+        let b = log_uniform(rng, -3.0, 3.0) as f32;
+        cs.observe(&[a.min(b), a.max(b)]);
+        let s = cs.lr_scales();
+        if s[0] < s[1] - 1e-6 {
+            return Err(format!("λ=({},{}) → η=({},{})", a.min(b), a.max(b), s[0], s[1]));
+        }
+        Ok(())
+    });
+}
+
+// ----------------------------------------------------- unified controller
+
+#[test]
+fn prop_controller_respects_method_contracts() {
+    check("baselines stay pinned; Tri-Accel stays on the ladder", |rng| {
+        let layers = small_usize(rng, 1, 6);
+        let buckets = vec![16, 32, 64, 96, 128];
+        let e = entry(layers, buckets.clone());
+        let method = match small_usize(rng, 0, 2) {
+            0 => Method::Fp32,
+            1 => Method::AmpStatic,
+            _ => Method::TriAccel,
+        };
+        let mut cfg = Config::default();
+        cfg.method = method;
+        cfg.ablation = Ablation {
+            dynamic_precision: rng.bernoulli(0.5),
+            dynamic_batch: rng.bernoulli(0.5),
+            curvature: rng.bernoulli(0.5),
+        };
+        cfg.t_ctrl = small_usize(rng, 1, 10) as u64;
+        cfg.auto_threshold = rng.bernoulli(0.5);
+        cfg.batch_cooldown = small_usize(rng, 0, 5) as u64;
+        let mut ctl = Controller::new(&cfg, &e);
+        for step in 1..=120u64 {
+            let vars: Vec<f32> =
+                (0..layers).map(|_| log_uniform(rng, -9.0, 0.0) as f32).collect();
+            ctl.observe_step(&vars, rng.bernoulli(0.05));
+            if ctl.curvature_due(step) {
+                let lams: Vec<f32> =
+                    (0..layers).map(|_| log_uniform(rng, -2.0, 3.0) as f32).collect();
+                ctl.observe_curvature(&lams);
+            }
+            if ctl.window_due(step) {
+                let fits = rng.bernoulli(0.8);
+                ctl.control_window(step, uniform(rng, 0.0, 1.1), 1.0, |_| fits);
+            }
+            match method {
+                Method::Fp32 => {
+                    if ctl.codes().iter().any(|&c| c != FP32) {
+                        return Err("FP32 baseline drifted".into());
+                    }
+                    if ctl.batch_size() != 96 {
+                        return Err("FP32 baseline batch moved".into());
+                    }
+                    if ctl.loss_scale() != 1.0 {
+                        return Err("FP32 baseline has a loss scale".into());
+                    }
+                }
+                Method::AmpStatic => {
+                    if ctl.codes().iter().any(|&c| c != BF16) {
+                        return Err("AMP static drifted".into());
+                    }
+                    if ctl.batch_size() != 96 {
+                        return Err("AMP static batch moved".into());
+                    }
+                }
+                Method::TriAccel => {
+                    if !buckets.contains(&ctl.batch_size()) {
+                        return Err(format!("B={} off ladder", ctl.batch_size()));
+                    }
+                    if !cfg.ablation.dynamic_batch && ctl.batch_size() != 96 {
+                        return Err("batch moved with dynamic_batch=off".into());
+                    }
+                }
+            }
+            let scales = ctl.lr_scales();
+            if scales.len() != layers || scales.iter().any(|&s| !(s > 0.0 && s <= 1.0)) {
+                return Err(format!("bad lr scales {scales:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_controller_loss_scale_only_with_fp16() {
+    check("loss scale ≠ 1 implies an FP16 layer exists", |rng| {
+        let layers = small_usize(rng, 1, 6);
+        let e = entry(layers, vec![32, 96]);
+        let mut cfg = Config::default();
+        cfg.method = Method::TriAccel;
+        cfg.t_ctrl = 5;
+        cfg.auto_threshold = false;
+        let mut ctl = Controller::new(&cfg, &e);
+        for step in 1..=80u64 {
+            let vars: Vec<f32> =
+                (0..layers).map(|_| log_uniform(rng, -12.0, -1.0) as f32).collect();
+            ctl.observe_step(&vars, rng.bernoulli(0.1));
+            if ctl.window_due(step) {
+                ctl.control_window(step, 0.8, 1.0, |_| true);
+            }
+            if ctl.loss_scale() != 1.0 && !ctl.codes().contains(&FP16) {
+                return Err(format!(
+                    "scale {} without FP16 in {:?}",
+                    ctl.loss_scale(),
+                    ctl.codes()
+                ));
+            }
+        }
+        Ok(())
+    });
+}

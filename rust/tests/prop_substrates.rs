@@ -1,0 +1,256 @@
+//! Property tests on the substrates the coordinator trusts: the VRAM
+//! simulator's monotonicity laws, the data pipeline's coverage
+//! guarantees, the LR schedule, and checkpoint serialization.
+
+use std::collections::BTreeSet;
+
+use tri_accel::checkpoint::{Checkpoint, Tensor};
+use tri_accel::data::{synthetic::SyntheticCifar, BatchIter};
+use tri_accel::manifest::{LayerSpec, ModelEntry, BF16, FP16, FP32};
+use tri_accel::memsim::{MemoryMonitor, VramSim};
+use tri_accel::schedule::LrSchedule;
+use tri_accel::util::prop::{check, log_uniform, small_usize, uniform};
+use tri_accel::util::rng::Rng;
+
+fn random_entry(rng: &mut Rng) -> ModelEntry {
+    let layers = small_usize(rng, 1, 10);
+    ModelEntry {
+        key: "prop".into(),
+        model: "prop".into(),
+        num_classes: 10,
+        num_layers: layers,
+        param_count: 0,
+        layers: (0..layers)
+            .map(|i| LayerSpec {
+                name: format!("l{i}"),
+                kind: "conv".into(),
+                param_elems: small_usize(rng, 100, 1_000_000),
+                act_elems: small_usize(rng, 10, 200_000),
+                flops: small_usize(rng, 1000, 10_000_000),
+            })
+            .collect(),
+        params: vec![],
+        state_shapes: vec![],
+        train_buckets: vec![16, 32, 64, 96, 128],
+        eval_buckets: vec![16],
+        curv_batch: 32,
+        artifacts: Default::default(),
+    }
+    .with_param_count()
+}
+
+trait Fixup {
+    fn with_param_count(self) -> Self;
+}
+
+impl Fixup for ModelEntry {
+    fn with_param_count(mut self) -> Self {
+        self.param_count = self.layers.iter().map(|l| l.param_elems).sum();
+        self
+    }
+}
+
+// ---------------------------------------------------------------- memsim
+
+#[test]
+fn prop_memsim_monotone_in_batch() {
+    check("usage is strictly increasing in batch size", |rng| {
+        let e = random_entry(rng);
+        let mut sim = VramSim::new(&e, 10.0, 0.0, 0);
+        let codes: Vec<i32> = (0..e.num_layers)
+            .map(|_| [FP16, BF16, FP32][small_usize(rng, 0, 2)])
+            .collect();
+        let mut prev = 0.0;
+        for &b in &[16usize, 32, 64, 96, 128] {
+            let u = sim.usage(b, &codes, false).total_gb;
+            if u <= prev {
+                return Err(format!("usage({b}) = {u} ≤ usage(prev) = {prev}"));
+            }
+            prev = u;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_memsim_lower_precision_never_costs_more() {
+    check("uniformly lower-precision codes never increase usage", |rng| {
+        let e = random_entry(rng);
+        let mut sim = VramSim::new(&e, 10.0, 0.0, 0);
+        let b = [16usize, 32, 64, 96][small_usize(rng, 0, 3)];
+        let hi = vec![FP32; e.num_layers];
+        let lo: Vec<i32> = (0..e.num_layers)
+            .map(|_| [FP16, BF16][small_usize(rng, 0, 1)])
+            .collect();
+        let u_hi = sim.usage(b, &hi, false).total_gb;
+        let u_lo = sim.usage(b, &lo, false).total_gb;
+        if u_lo > u_hi {
+            return Err(format!("half-precision usage {u_lo} > fp32 {u_hi}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_memsim_peak_is_monotone_nondecreasing() {
+    check("peak never decreases over a run", |rng| {
+        let e = random_entry(rng);
+        let mut sim = VramSim::new(&e, 10.0, uniform(rng, 0.0, 0.05), 7);
+        let codes = vec![BF16; e.num_layers];
+        let mut peak = sim.peak_gb();
+        for _ in 0..50 {
+            let b = [16usize, 32, 64, 96, 128][small_usize(rng, 0, 4)];
+            sim.usage(b, &codes, rng.bernoulli(0.2));
+            if sim.peak_gb() < peak - 1e-12 {
+                return Err(format!("peak dropped {peak} → {}", sim.peak_gb()));
+            }
+            peak = sim.peak_gb();
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_memsim_would_fit_consistent_with_usage() {
+    check("would_fit(b) ⇔ usage(b) ≤ budget (noise-free)", |rng| {
+        let e = random_entry(rng);
+        let budget = log_uniform(rng, -2.0, 1.0);
+        let mut sim = VramSim::new(&e, budget, 0.0, 0);
+        let codes = vec![BF16; e.num_layers];
+        for &b in &[16usize, 64, 128] {
+            let fits = sim.would_fit(b, &codes, false);
+            let u = sim.usage(b, &codes, false).total_gb;
+            if fits != (u <= budget) {
+                return Err(format!("would_fit {fits} but usage {u} vs budget {budget}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------------------ data
+
+#[test]
+fn prop_batchiter_covers_epoch_exactly_once() {
+    check("fixed-B epoch serves every example exactly once", |rng| {
+        let n_batches = small_usize(rng, 2, 12);
+        let b = small_usize(rng, 1, 32);
+        let n = n_batches * b;
+        let ds = SyntheticCifar::new(10, n, true, rng.next_u64());
+        let mut it = BatchIter::new(Box::new(ds), rng.next_u64(), false);
+        let mut seen = BTreeSet::new();
+        let mut labels = Vec::new();
+        for _ in 0..n_batches {
+            let batch = it.next_batch(b).map_err(|e| e.to_string())?;
+            labels.extend_from_slice(&batch.y);
+        }
+        // Labels are idx % 10 and the permutation is a bijection, so the
+        // label histogram must match the dataset's exactly.
+        let mut want: Vec<i32> = (0..n).map(|i| (i % 10) as i32).collect();
+        want.sort_unstable();
+        labels.sort_unstable();
+        if labels != want {
+            return Err("epoch coverage broken: label multiset mismatch".into());
+        }
+        seen.insert(0);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batchiter_deterministic_across_batch_splits() {
+    check("example content independent of batch-size history", |rng| {
+        let n = 240;
+        let seed = rng.next_u64();
+        let mk = || {
+            let ds = SyntheticCifar::new(10, n, true, seed);
+            BatchIter::new(Box::new(ds), seed, true)
+        };
+        // Drain the same epoch with two different batch-size schedules.
+        let mut a = mk();
+        let mut b = mk();
+        let mut xa = Vec::new();
+        let mut xb = Vec::new();
+        for _ in 0..5 {
+            xa.extend(a.next_batch(24).map_err(|e| e.to_string())?.x);
+        }
+        let splits = [16usize, 32, 8, 40, 24];
+        for &s in &splits {
+            xb.extend(b.next_batch(s).map_err(|e| e.to_string())?.x);
+        }
+        if xa != xb {
+            return Err("same stream position, different pixels".into());
+        }
+        Ok(())
+    });
+}
+
+// -------------------------------------------------------------- schedule
+
+#[test]
+fn prop_schedule_bounded_and_decaying() {
+    check("lr ∈ [0, base]; monotone non-increasing after warmup", |rng| {
+        let base = uniform(rng, 1e-4, 1.0) as f32;
+        let total = small_usize(rng, 10, 2000) as u64;
+        let warmup = small_usize(rng, 0, 500) as u64;
+        let s = LrSchedule::new(base, warmup.min(total / 2), total);
+        let mut prev = f32::INFINITY;
+        for step in 0..total + 10 {
+            let lr = s.lr_at(step);
+            if !(0.0..=base + 1e-6).contains(&lr) {
+                return Err(format!("lr {lr} out of [0, {base}] at {step}"));
+            }
+            if step >= s.warmup_steps && lr > prev + 1e-6 {
+                return Err(format!("lr increased after warmup at {step}"));
+            }
+            if step >= s.warmup_steps {
+                prev = lr;
+            }
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------------ checkpoint
+
+#[test]
+fn prop_checkpoint_roundtrip_any_shapes() {
+    check("checkpoint save/load is identity for arbitrary tensors", |rng| {
+        let n_tensors = small_usize(rng, 1, 8);
+        let tensors: Vec<Tensor> = (0..n_tensors)
+            .map(|i| {
+                let ndim = small_usize(rng, 0, 4);
+                let dims: Vec<u64> =
+                    (0..ndim).map(|_| small_usize(rng, 1, 8) as u64).collect();
+                let elems: u64 = dims.iter().product();
+                Tensor {
+                    name: format!("t/{i}"),
+                    dims,
+                    data: (0..elems).map(|_| rng.next_normal()).collect(),
+                }
+            })
+            .collect();
+        let c = Checkpoint {
+            model_key: format!("m{}", small_usize(rng, 0, 99)),
+            step: rng.next_u64() % 1_000_000,
+            tensors,
+        };
+        let p = std::env::temp_dir().join(format!(
+            "triaccel_prop_ckpt_{}_{}.bin",
+            std::process::id(),
+            rng.next_u64()
+        ));
+        c.save(&p).map_err(|e| e.to_string())?;
+        let d = Checkpoint::load(&p).map_err(|e| e.to_string())?;
+        std::fs::remove_file(&p).ok();
+        if d.model_key != c.model_key || d.step != c.step {
+            return Err("header mismatch".into());
+        }
+        for (a, b) in c.tensors.iter().zip(&d.tensors) {
+            if a.name != b.name || a.dims != b.dims || a.data != b.data {
+                return Err(format!("tensor {} mismatch", a.name));
+            }
+        }
+        Ok(())
+    });
+}
