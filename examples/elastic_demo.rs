@@ -13,7 +13,7 @@ use tri_accel::runtime::Engine;
 use tri_accel::train::Trainer;
 
 fn main() -> Result<()> {
-    let engine = Engine::new(std::path::Path::new("artifacts"))?;
+    let engine = Engine::native();
 
     for &(label, budget_gb) in
         &[("roomy", 0.500f64), ("paper-like", 0.065), ("starved", 0.050)]

@@ -12,7 +12,7 @@ use tri_accel::runtime::Engine;
 use tri_accel::train::Trainer;
 
 fn main() -> Result<()> {
-    let engine = Engine::new(std::path::Path::new("artifacts"))?;
+    let engine = Engine::native();
 
     let mut cfg = Config::cell("tiny_cnn_c10", Method::TriAccel, 1);
     cfg.epochs = 1;

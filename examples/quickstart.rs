@@ -1,9 +1,10 @@
 //! Quickstart: train a small CNN on (synthetic) CIFAR-10 with the full
 //! Tri-Accel loop and print what the controller is doing.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart
 //!
-//! Uses the `tiny_cnn_c10` model so it finishes in ~a minute on CPU.
+//! Runs hermetically on the native backend (`tiny_cnn_c10`, built-in
+//! manifest — no artifacts, no Python) in ~a minute on CPU.
 
 use anyhow::Result;
 
@@ -13,8 +14,8 @@ use tri_accel::runtime::Engine;
 use tri_accel::train::Trainer;
 
 fn main() -> Result<()> {
-    let engine = Engine::new(std::path::Path::new("artifacts"))?;
-    println!("PJRT platform: {}", engine.platform());
+    let engine = Engine::native();
+    println!("backend: {}", engine.platform());
 
     // The full adaptive method on a laptop-scale budget.
     let mut cfg = Config::cell("tiny_cnn_c10", Method::TriAccel, 0);

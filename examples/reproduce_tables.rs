@@ -26,13 +26,22 @@ fn main() -> Result<()> {
         .split(',')
         .map(|s| s.parse().unwrap())
         .collect();
-    let models = args.get_or(
-        "models",
-        "resnet18_c10,effnet_lite_c10,resnet18_c100,effnet_lite_c100",
-    );
-    args.reject_unknown()?;
-
+    // Native backend by default; the artifact models (resnet18/effnet)
+    // come back with `--features pjrt` + `make artifacts`. The default
+    // model list is whatever the selected backend's manifest serves,
+    // so it stays valid on both.
     let engine = Engine::new(std::path::Path::new("artifacts"))?;
+    let models = match args.get("models") {
+        Some(m) => m.to_string(),
+        None => engine
+            .manifest
+            .models
+            .keys()
+            .cloned()
+            .collect::<Vec<_>>()
+            .join(","),
+    };
+    args.reject_unknown()?;
     println!("platform {} — {} steps/epoch × {} epochs × {} seeds", engine.platform(), steps, epochs, seeds.len());
     let tweak = harness::quick_budget(steps, epochs);
 
@@ -48,22 +57,18 @@ fn main() -> Result<()> {
     println!("paper: time −9.9% (max), memory −13.3% (max), accuracy +1.1–1.7pp vs FP32");
 
     // ---------------- Table 2 ------------------------------------------
-    for key in ["resnet18_c10", "effnet_lite_c10"] {
-        if !keys.contains(&key) {
-            continue;
-        }
-        println!("\n=== Table 2: ablation — {key} (CIFAR-10) ===");
-        let rows = harness::table2(&engine, key, &seeds, &tweak)?;
-        harness::print_table2(&rows);
-    }
+    let ablation_key = keys[0];
+    println!("\n=== Table 2: ablation — {ablation_key} ===");
+    let rows = harness::table2(&engine, ablation_key, &seeds, &tweak)?;
+    harness::print_table2(&rows);
 
     // ---------------- Figure: adaptive behaviour -----------------------
-    println!("\n=== Figure: adaptive behaviour (resnet18_c10, Tri-Accel, seed 0) ===");
+    println!("\n=== Figure: adaptive behaviour ({ablation_key}, Tri-Accel, seed 0) ===");
     let more_epochs = move |cfg: &mut Config| {
         tweak(cfg);
         cfg.epochs = (epochs * 2).max(4); // longer horizon to see the trend
     };
-    let t = harness::fig_adaptive(&engine, "resnet18_c10", 0, &more_epochs)?;
+    let t = harness::fig_adaptive(&engine, ablation_key, 0, &more_epochs)?;
     println!("epoch  eff_score   fp16/bf16/fp32 mix");
     for ((e, s), (_, f16, b16, f32_)) in t.epoch_eff.iter().zip(&t.mix_trace) {
         println!("{e:>5}  {s:>9.3}   {:.2}/{:.2}/{:.2}", f16, b16, f32_);

@@ -17,8 +17,7 @@ fn env_usize(k: &str, d: usize) -> usize {
 }
 
 fn main() {
-    let engine = Engine::new(std::path::Path::new("artifacts"))
-        .expect("run `make artifacts` first");
+    let engine = Engine::native();
     let steps = env_usize("AB_STEPS", 30);
     let epochs = env_usize("AB_EPOCHS", 2);
     let seeds: Vec<u64> = std::env::var("AB_SEEDS")

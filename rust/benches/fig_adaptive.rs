@@ -12,8 +12,7 @@ fn env_usize(k: &str, d: usize) -> usize {
 }
 
 fn main() {
-    let engine = Engine::new(std::path::Path::new("artifacts"))
-        .expect("run `make artifacts` first");
+    let engine = Engine::native();
     let steps = env_usize("FIG_STEPS", 12);
     let epochs = env_usize("FIG_EPOCHS", 4);
     let seed = env_usize("FIG_SEED", 0) as u64;

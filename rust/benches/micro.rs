@@ -13,8 +13,7 @@ use tri_accel::runtime::{Engine, Session, StepCtrl};
 use tri_accel::util::bench::{black_box, Bencher};
 
 fn main() {
-    let engine = Engine::new(std::path::Path::new("artifacts"))
-        .expect("run `make artifacts` first");
+    let engine = Engine::native();
     let key = "tiny_cnn_c10";
     let entry = engine.manifest.model(key).unwrap().clone();
     let n_layers = entry.num_layers;

@@ -13,8 +13,7 @@ fn env_usize(k: &str, d: usize) -> usize {
 }
 
 fn main() {
-    let engine = Engine::new(std::path::Path::new("artifacts"))
-        .expect("run `make artifacts` first");
+    let engine = Engine::native();
     let steps = env_usize("T1_STEPS", 6);
     let epochs = env_usize("T1_EPOCHS", 1);
     let seeds: Vec<u64> = std::env::var("T1_SEEDS")
@@ -23,7 +22,7 @@ fn main() {
         .map(|s| s.parse().unwrap())
         .collect();
     let models_env = std::env::var("T1_MODELS")
-        .unwrap_or_else(|_| "resnet18_c10,effnet_lite_c10".into()); // full grid: add the _c100 keys via T1_MODELS
+        .unwrap_or_else(|_| "tiny_cnn_c10,tiny_cnn_c100".into()); // artifact models via T1_MODELS + --features pjrt
     let keys: Vec<&str> = models_env.split(',').collect();
 
     println!("== bench table1: {steps} steps × {epochs} epochs × {} seed(s) ==", seeds.len());

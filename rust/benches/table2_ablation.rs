@@ -13,8 +13,7 @@ fn env_usize(k: &str, d: usize) -> usize {
 }
 
 fn main() {
-    let engine = Engine::new(std::path::Path::new("artifacts"))
-        .expect("run `make artifacts` first");
+    let engine = Engine::native();
     let steps = env_usize("T2_STEPS", 6);
     let epochs = env_usize("T2_EPOCHS", 1);
     let seeds: Vec<u64> = std::env::var("T2_SEEDS")
@@ -23,7 +22,7 @@ fn main() {
         .map(|s| s.parse().unwrap())
         .collect();
     let models_env =
-        std::env::var("T2_MODELS").unwrap_or_else(|_| "resnet18_c10".into()); // add effnet_lite_c10 via T2_MODELS
+        std::env::var("T2_MODELS").unwrap_or_else(|_| "tiny_cnn_c10".into()); // artifact models via T2_MODELS
 
     for key in models_env.split(',') {
         println!("\n== bench table2 (ablation) — {key}, CIFAR-10 ==");

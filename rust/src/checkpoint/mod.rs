@@ -1,7 +1,7 @@
 //! Checkpointing substrate: save/restore a training session (params,
-//! momentum, BN state, controller step) to a single binary file, so long
-//! table-regeneration runs survive interruption and runs can be resumed
-//! or evaluated offline.
+//! momentum, BN state, curvature probes, controller state, step) to a
+//! single binary file, so long table-regeneration runs survive
+//! interruption and runs can be resumed or evaluated offline.
 //!
 //! Format (little-endian, versioned):
 //!
@@ -9,12 +9,19 @@
 //! magic "TRIACCEL"  u32 version  u32 model_key_len  model_key bytes
 //! u64 step  u32 n_tensors  then per tensor:
 //!   u32 name_len  name  u32 ndim  u64 dims[ndim]  f32 data[prod(dims)]
+//! (v2) u32 n_ctrl  then per entry:
+//!   u32 name_len  name  u32 len  f64 data[len]
 //! u64 crc  (FNV-1a over everything before it)
 //! ```
 //!
 //! Tensors are stored by *role/index* name (`param/3`, `mom/3`,
-//! `state/1`), validated against the manifest on load — loading a
-//! checkpoint into a different model is an error, not a crash.
+//! `state/1`, `probe/3`), validated against the manifest on load —
+//! loading a checkpoint into a different model is an error, not a
+//! crash. The v2 `ctrl` section holds the Tri-Accel controller state
+//! (precision codes + variance EMAs, curvature EMAs, loss scale,
+//! batch-ladder position) as named f64 vectors, so a resumed run
+//! continues with the policy the saved run had, not the defaults.
+//! Version-1 files (no ctrl section) still load, with empty `ctrl`.
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -22,7 +29,7 @@ use std::path::Path;
 use anyhow::{Context, Result};
 
 const MAGIC: &[u8; 8] = b"TRIACCEL";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
 #[derive(Debug, Clone)]
 pub struct Tensor {
@@ -36,6 +43,9 @@ pub struct Checkpoint {
     pub model_key: String,
     pub step: u64,
     pub tensors: Vec<Tensor>,
+    /// Controller state: named f64 vectors (empty for v1 files and for
+    /// checkpoints saved without a controller).
+    pub ctrl: Vec<(String, Vec<f64>)>,
 }
 
 /// FNV-1a over a byte stream (substrate — no crc crates offline).
@@ -78,6 +88,16 @@ impl Checkpoint {
                 buf.extend_from_slice(&v.to_le_bytes());
             }
         }
+        buf.extend_from_slice(&(self.ctrl.len() as u32).to_le_bytes());
+        for (name, vals) in &self.ctrl {
+            let name = name.as_bytes();
+            buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            buf.extend_from_slice(name);
+            buf.extend_from_slice(&(vals.len() as u32).to_le_bytes());
+            for &v in vals {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+        }
         let crc = fnv1a(&buf);
         buf.extend_from_slice(&crc.to_le_bytes());
         if let Some(dir) = path.parent() {
@@ -101,7 +121,10 @@ impl Checkpoint {
         let mut r = Reader { b: body, i: 0 };
         anyhow::ensure!(r.take(8)? == MAGIC, "bad magic — not a Tri-Accel checkpoint");
         let version = r.u32()?;
-        anyhow::ensure!(version == VERSION, "unsupported checkpoint version {version}");
+        anyhow::ensure!(
+            version == 1 || version == VERSION,
+            "unsupported checkpoint version {version}"
+        );
         let key_len = r.u32()? as usize;
         let model_key = String::from_utf8(r.take(key_len)?.to_vec()).context("model key utf8")?;
         let step = r.u64()?;
@@ -124,8 +147,24 @@ impl Checkpoint {
                 .collect();
             tensors.push(Tensor { name, dims, data });
         }
+        let mut ctrl = Vec::new();
+        if version >= 2 {
+            let n_ctrl = r.u32()? as usize;
+            for _ in 0..n_ctrl {
+                let name_len = r.u32()? as usize;
+                let name =
+                    String::from_utf8(r.take(name_len)?.to_vec()).context("ctrl name")?;
+                let len = r.u32()? as usize;
+                let raw = r.take(len * 8)?;
+                let vals = raw
+                    .chunks_exact(8)
+                    .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                ctrl.push((name, vals));
+            }
+        }
         anyhow::ensure!(r.i == body.len(), "trailing bytes in checkpoint");
-        Ok(Checkpoint { model_key, step, tensors })
+        Ok(Checkpoint { model_key, step, tensors, ctrl })
     }
 
     pub fn tensor(&self, name: &str) -> Result<&Tensor> {
@@ -171,6 +210,10 @@ mod tests {
                 Tensor { name: "mom/0".into(), dims: vec![6], data: vec![0.5; 6] },
                 Tensor { name: "state/0".into(), dims: vec![], data: vec![3.25] }, // scalar
             ],
+            ctrl: vec![
+                ("precision/codes".into(), vec![0.0, 1.0, 2.0]),
+                ("scaler/state".into(), vec![1024.0, 17.0, 3.0]),
+            ],
         }
     }
 
@@ -192,6 +235,54 @@ mod tests {
             assert_eq!(a.dims, b.dims);
             assert_eq!(a.data, b.data, "f32 payload must be bit-exact");
         }
+        assert_eq!(d.ctrl, c.ctrl, "controller state must be bit-exact (f64)");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn v1_files_load_with_empty_ctrl() {
+        // Hand-build a version-1 byte stream (no ctrl section).
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        let key = b"m";
+        buf.extend_from_slice(&(key.len() as u32).to_le_bytes());
+        buf.extend_from_slice(key);
+        buf.extend_from_slice(&7u64.to_le_bytes());
+        buf.extend_from_slice(&1u32.to_le_bytes()); // one tensor
+        let name = b"param/0";
+        buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        buf.extend_from_slice(name);
+        buf.extend_from_slice(&1u32.to_le_bytes()); // ndim
+        buf.extend_from_slice(&2u64.to_le_bytes()); // dims [2]
+        buf.extend_from_slice(&1.5f32.to_le_bytes());
+        buf.extend_from_slice(&(-2.0f32).to_le_bytes());
+        let crc = fnv1a(&buf);
+        buf.extend_from_slice(&crc.to_le_bytes());
+        let p = tmp("v1");
+        std::fs::write(&p, &buf).unwrap();
+        let c = Checkpoint::load(&p).unwrap();
+        assert_eq!(c.model_key, "m");
+        assert_eq!(c.step, 7);
+        assert!(c.ctrl.is_empty());
+        assert_eq!(c.tensors[0].data, vec![1.5, -2.0]);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn unknown_version_rejected() {
+        let c = sample();
+        let p = tmp("ver");
+        c.save(&p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        // Patch the version field and re-stamp the CRC.
+        bytes[8..12].copy_from_slice(&9u32.to_le_bytes());
+        let n = bytes.len();
+        let crc = fnv1a(&bytes[..n - 8]);
+        bytes[n - 8..].copy_from_slice(&crc.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        let err = Checkpoint::load(&p).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
         std::fs::remove_file(&p).ok();
     }
 

@@ -117,7 +117,9 @@ pub struct Config {
 impl Default for Config {
     fn default() -> Self {
         Config {
-            model_key: "resnet18_c10".into(),
+            // The native backend's built-in model; artifact-driven
+            // backends override via --model / model_key.
+            model_key: "tiny_cnn_c10".into(),
             method: Method::TriAccel,
             ablation: Ablation::full(),
             seed: 0,

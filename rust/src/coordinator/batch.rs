@@ -134,6 +134,45 @@ impl BatchController {
     pub fn vetoes(&self) -> u64 {
         self.vetoes
     }
+
+    /// Serialize (current bucket *value*, cooldown anchor, move/veto
+    /// counters). The value — not the ladder index — is stored so a
+    /// checkpoint resumed under a backend with a different bucket
+    /// ladder fails loudly instead of silently landing on a different
+    /// batch size.
+    pub fn export_state(&self) -> Vec<(String, Vec<f64>)> {
+        vec![(
+            "batch/state".into(),
+            vec![
+                self.current() as f64,
+                self.last_move_step as f64,
+                self.moves as f64,
+                self.vetoes as f64,
+            ],
+        )]
+    }
+
+    /// Restore state written by [`Self::export_state`].
+    pub fn import_state(&mut self, kv: &[(String, Vec<f64>)]) -> anyhow::Result<()> {
+        let v = super::ckpt_lookup(kv, "batch/state")?;
+        anyhow::ensure!(v.len() == 4, "batch state arity");
+        let bucket = v[0] as usize;
+        let idx = self
+            .buckets
+            .iter()
+            .position(|&b| b == bucket)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "checkpoint batch size {bucket} is not on this ladder {:?}",
+                    self.buckets
+                )
+            })?;
+        self.idx = idx;
+        self.last_move_step = v[1] as u64;
+        self.moves = v[2] as u64;
+        self.vetoes = v[3] as u64;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

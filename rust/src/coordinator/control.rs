@@ -106,14 +106,20 @@ impl Controller {
         if self.precision_active() {
             self.precision.observe(grad_var);
         }
-        // Loss scaling reacts every step for any method with half layers.
-        if self.has_half_layers() {
+        // The scaler only matters while FP16 layers exist: BF16 shares
+        // FP32's exponent range, so its overflow-free steps must not
+        // grow the scale — a BF16-only run would otherwise ratchet the
+        // scale to the cap while `loss_scale()` feeds 1.0 to the graph,
+        // and a later FP16 demotion would inherit that absurd scale and
+        // churn overflows until it halves back down. (The scaler itself
+        // additionally clamps to [1, 65536].)
+        if self.has_fp16_layers() {
             self.scaler.update(overflow);
         }
     }
 
-    fn has_half_layers(&self) -> bool {
-        self.precision.codes().iter().any(|&c| c != FP32)
+    fn has_fp16_layers(&self) -> bool {
+        self.precision.codes().contains(&FP16)
     }
 
     /// Should the trainer run a curvature probe at this step?
@@ -206,6 +212,47 @@ impl Controller {
 
     pub fn windows(&self) -> u64 {
         self.windows
+    }
+
+    /// Serialize every sub-controller's state for checkpointing, so a
+    /// resumed run continues exactly where the saved one stopped
+    /// (precision codes + variance EMAs, curvature EMAs, loss-scaler
+    /// value, batch-ladder position and cooldown anchor).
+    pub fn export_state(&self) -> Vec<(String, Vec<f64>)> {
+        let mut out = vec![("controller/windows".to_string(), vec![self.windows as f64])];
+        out.extend(self.precision.export_state());
+        out.extend(self.curvature.export_state());
+        out.extend(self.batch.export_state());
+        out.extend(self.scaler.export_state());
+        out
+    }
+
+    /// Restore state written by [`Self::export_state`]. This
+    /// controller's *method* stays authoritative: a pinned-precision
+    /// run (FP32 / AMP-static / precision-off ablation) resuming a
+    /// checkpoint saved under a different method must not adopt its
+    /// adaptive codes or batch position — pins are re-applied after
+    /// the import, exactly as [`Controller::new`] sets them.
+    pub fn import_state(&mut self, kv: &[(String, Vec<f64>)]) -> anyhow::Result<()> {
+        if let Some((_, v)) = kv.iter().find(|(k, _)| k == "controller/windows") {
+            anyhow::ensure!(v.len() == 1, "controller/windows arity");
+            self.windows = v[0] as u64;
+        }
+        self.precision.import_state(kv)?;
+        self.curvature.import_state(kv)?;
+        if self.batch_active() {
+            self.batch.import_state(kv)?;
+        }
+        self.scaler.import_state(kv)?;
+        match self.method {
+            Method::Fp32 => self.precision.pin_all(FP32),
+            Method::AmpStatic => self.precision.pin_all(BF16),
+            Method::TriAccel if !self.ablation.dynamic_precision => {
+                self.precision.pin_all(BF16)
+            }
+            _ => {}
+        }
+        Ok(())
     }
 }
 
@@ -362,6 +409,86 @@ mod tests {
         // Overflow halves it.
         ctl2.observe_step(&[1e-9], true);
         assert_eq!(ctl2.loss_scale(), 256.0);
+    }
+
+    #[test]
+    fn bf16_only_run_never_moves_the_scale() {
+        // The satellite bug: BF16 layers used to count as "half", so a
+        // BF16-only run doubled the scale every growth interval while
+        // feeding 1.0 to the graph — a later FP16 demotion then started
+        // at an absurd scale. Scaler updates are now FP16-gated.
+        let mut c = cfg(Method::AmpStatic);
+        c.loss_scale_growth_interval = 2;
+        c.init_loss_scale = 1024.0;
+        let mut ctl = Controller::new(&c, &entry(2));
+        for _ in 0..50 {
+            ctl.observe_step(&[1e-9, 1e-9], false);
+        }
+        assert_eq!(ctl.scaler.scale(), 1024.0, "BF16-only must not grow the scale");
+        assert_eq!(ctl.loss_scale(), 1.0);
+    }
+
+    #[test]
+    fn fp16_layers_drive_the_scaler() {
+        let mut c = cfg(Method::TriAccel);
+        c.loss_scale_growth_interval = 3;
+        c.init_loss_scale = 512.0;
+        let mut ctl = Controller::new(&c, &entry(1));
+        // Drive the single layer to FP16.
+        for s in 1..=30 {
+            ctl.observe_step(&[1e-9], false);
+            if ctl.window_due(s) {
+                ctl.control_window(s, 0.8, 1.0, |_| true);
+            }
+        }
+        assert_eq!(ctl.codes(), vec![FP16]);
+        let s0 = ctl.scaler.scale();
+        for _ in 0..3 {
+            ctl.observe_step(&[1e-9], false);
+        }
+        assert_eq!(ctl.scaler.scale(), s0 * 2.0, "clean FP16 steps grow the scale");
+        assert!(ctl.scaler.scale() <= 65536.0);
+    }
+
+    #[test]
+    fn controller_state_roundtrips() {
+        let mut c = cfg(Method::TriAccel);
+        c.tau_curv = 5.0;
+        c.curv_warmup = 1;
+        let mut ctl = Controller::new(&c, &entry(3));
+        for s in 1..=45 {
+            ctl.observe_step(&[1e-9, 1e-4, 1.0], s % 13 == 0);
+            if s % 20 == 0 {
+                ctl.observe_curvature(&[0.5, 2.0, 10.0]);
+            }
+            if ctl.window_due(s) {
+                ctl.control_window(s, 0.85, 1.0, |_| true);
+            }
+        }
+        let saved = ctl.export_state();
+        let mut fresh = Controller::new(&c, &entry(3));
+        fresh.import_state(&saved).unwrap();
+        assert_eq!(fresh.codes(), ctl.codes());
+        assert_eq!(fresh.batch_size(), ctl.batch_size());
+        assert_eq!(fresh.scaler.scale(), ctl.scaler.scale());
+        assert_eq!(fresh.lr_scales(), ctl.lr_scales());
+        assert_eq!(fresh.windows(), ctl.windows());
+        assert_eq!(fresh.precision.transitions(), ctl.precision.transitions());
+        // Continued evolution must match step for step.
+        for s in 46..=60 {
+            ctl.observe_step(&[1e-9, 1e-4, 1.0], false);
+            fresh.observe_step(&[1e-9, 1e-4, 1.0], false);
+            if ctl.window_due(s) {
+                let a = ctl.control_window(s, 0.5, 1.0, |_| true);
+                let b = fresh.control_window(s, 0.5, 1.0, |_| true);
+                assert_eq!(a.batch_size, b.batch_size);
+                assert_eq!(a.loss_scale, b.loss_scale);
+            }
+            assert_eq!(ctl.codes(), fresh.codes());
+        }
+        // A mismatched geometry is rejected loudly.
+        let mut wrong = Controller::new(&c, &entry(2));
+        assert!(wrong.import_state(&saved).is_err());
     }
 
     #[test]

@@ -130,6 +130,41 @@ impl CurvatureScheduler {
     pub fn rejected(&self) -> u64 {
         self.rejected
     }
+
+    /// Serialize the λ EMAs and firing counters for checkpointing.
+    pub fn export_state(&self) -> Vec<(String, Vec<f64>)> {
+        let mut vals = Vec::with_capacity(self.lambdas.len());
+        let mut steps = Vec::with_capacity(self.lambdas.len());
+        for e in &self.lambdas {
+            let (v, s) = e.raw();
+            vals.push(v);
+            steps.push(s as f64);
+        }
+        vec![
+            ("curvature/lam_values".into(), vals),
+            ("curvature/lam_steps".into(), steps),
+            ("curvature/counters".into(), vec![self.firings as f64, self.rejected as f64]),
+        ]
+    }
+
+    /// Restore state written by [`Self::export_state`].
+    pub fn import_state(&mut self, kv: &[(String, Vec<f64>)]) -> anyhow::Result<()> {
+        let vals = super::ckpt_lookup(kv, "curvature/lam_values")?;
+        let steps = super::ckpt_lookup(kv, "curvature/lam_steps")?;
+        let counters = super::ckpt_lookup(kv, "curvature/counters")?;
+        anyhow::ensure!(
+            vals.len() == self.lambdas.len() && steps.len() == self.lambdas.len(),
+            "curvature state arity mismatch ({} layers)",
+            self.lambdas.len()
+        );
+        anyhow::ensure!(counters.len() == 2, "curvature counters arity");
+        for (ema, (&v, &s)) in self.lambdas.iter_mut().zip(vals.iter().zip(steps.iter())) {
+            ema.set_raw(v, s as u64);
+        }
+        self.firings = counters[0] as u64;
+        self.rejected = counters[1] as u64;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -26,3 +26,14 @@ pub use batch::BatchController;
 pub use control::{ControlDecision, Controller};
 pub use curvature::CurvatureScheduler;
 pub use precision::{LossScaler, PrecisionController};
+
+/// Find a named state vector in a checkpoint's controller section.
+pub(crate) fn ckpt_lookup<'a>(
+    kv: &'a [(String, Vec<f64>)],
+    name: &str,
+) -> anyhow::Result<&'a Vec<f64>> {
+    kv.iter()
+        .find(|(k, _)| k == name)
+        .map(|(_, v)| v)
+        .ok_or_else(|| anyhow::anyhow!("checkpoint missing `{name}`"))
+}

@@ -224,6 +224,68 @@ impl PrecisionController {
     pub fn transitions(&self) -> u64 {
         self.transitions
     }
+
+    /// Serialize the full controller state (codes, variance EMAs,
+    /// promotion pins, calibrated thresholds) for checkpointing.
+    pub fn export_state(&self) -> Vec<(String, Vec<f64>)> {
+        let mut vals = Vec::with_capacity(self.vars.len());
+        let mut steps = Vec::with_capacity(self.vars.len());
+        for e in &self.vars {
+            let (v, s) = e.raw();
+            vals.push(v);
+            steps.push(s as f64);
+        }
+        vec![
+            ("precision/codes".into(), self.codes.iter().map(|&c| c as f64).collect()),
+            ("precision/var_values".into(), vals),
+            ("precision/var_steps".into(), steps),
+            ("precision/promoted".into(), self.promoted.iter().map(|&p| p as f64).collect()),
+            (
+                "precision/meta".into(),
+                vec![
+                    self.tau_low,
+                    self.tau_high,
+                    if self.calibrated { 1.0 } else { 0.0 },
+                    self.transitions as f64,
+                ],
+            ),
+        ]
+    }
+
+    /// Restore state written by [`Self::export_state`].
+    pub fn import_state(&mut self, kv: &[(String, Vec<f64>)]) -> anyhow::Result<()> {
+        let n = self.vars.len();
+        let codes = super::ckpt_lookup(kv, "precision/codes")?;
+        let vals = super::ckpt_lookup(kv, "precision/var_values")?;
+        let steps = super::ckpt_lookup(kv, "precision/var_steps")?;
+        let promoted = super::ckpt_lookup(kv, "precision/promoted")?;
+        let meta = super::ckpt_lookup(kv, "precision/meta")?;
+        anyhow::ensure!(
+            codes.len() == n && vals.len() == n && steps.len() == n && promoted.len() == n,
+            "precision state arity mismatch ({} layers)",
+            n
+        );
+        anyhow::ensure!(meta.len() == 4, "precision meta arity");
+        for (i, &c) in codes.iter().enumerate() {
+            let c = c as i32;
+            anyhow::ensure!(
+                [FP16, BF16, FP32].contains(&c),
+                "invalid precision code {c} in checkpoint"
+            );
+            self.codes[i] = c;
+        }
+        for (ema, (&v, &s)) in self.vars.iter_mut().zip(vals.iter().zip(steps.iter())) {
+            ema.set_raw(v, s as u64);
+        }
+        for (p, &v) in self.promoted.iter_mut().zip(promoted.iter()) {
+            *p = v as u32;
+        }
+        self.tau_low = meta[0];
+        self.tau_high = meta[1];
+        self.calibrated = meta[2] > 0.5;
+        self.transitions = meta[3] as u64;
+        Ok(())
+    }
 }
 
 /// Move `from` one rung toward `target` on the FP16 < BF16 < FP32 ladder.
@@ -285,6 +347,25 @@ impl LossScaler {
 
     pub fn overflows(&self) -> u64 {
         self.overflows
+    }
+
+    /// Serialize (scale, clean-step streak, overflow count).
+    pub fn export_state(&self) -> Vec<(String, Vec<f64>)> {
+        vec![(
+            "scaler/state".into(),
+            vec![self.scale as f64, self.clean_steps as f64, self.overflows as f64],
+        )]
+    }
+
+    /// Restore state written by [`Self::export_state`]. The restored
+    /// scale is clamped into the scaler's [min, max] band.
+    pub fn import_state(&mut self, kv: &[(String, Vec<f64>)]) -> anyhow::Result<()> {
+        let v = super::ckpt_lookup(kv, "scaler/state")?;
+        anyhow::ensure!(v.len() == 3, "scaler state arity");
+        self.scale = (v[0] as f32).clamp(self.min_scale, self.max_scale);
+        self.clean_steps = v[1] as u64;
+        self.overflows = v[2] as u64;
+        Ok(())
     }
 
     /// Record one step's overflow flag. Returns true when the step must

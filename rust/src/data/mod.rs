@@ -103,6 +103,31 @@ impl BatchIter {
         self.reshuffle();
     }
 
+    /// (epoch, within-epoch position) — checkpoint resume state.
+    pub fn stream_state(&self) -> (u64, usize) {
+        (self.epoch, self.pos)
+    }
+
+    /// Seek to a position saved by [`Self::stream_state`]. The epoch
+    /// permutation is a pure function of (seed, epoch), so seeking
+    /// reproduces the exact example stream the saved run would have
+    /// continued with — including under elastic batch histories, where
+    /// "skip N batches" cannot reconstruct the consumed-example count.
+    /// Errors if `pos` lies beyond this dataset (checkpoint saved
+    /// against a different `train_examples`) — silently clamping would
+    /// break the exact-stream guarantee.
+    pub fn seek(&mut self, epoch: u64, pos: usize) -> Result<()> {
+        anyhow::ensure!(
+            pos <= self.order.len(),
+            "stream position {pos} beyond dataset of {} examples (checkpoint from a different data config?)",
+            self.order.len()
+        );
+        self.epoch = epoch;
+        self.reshuffle();
+        self.pos = pos;
+        Ok(())
+    }
+
     /// Draw the next `n` examples. Wraps into the next epoch when the
     /// current one is exhausted mid-batch (keeps every batch full, which
     /// the fixed-shape AOT executables require).

@@ -185,21 +185,21 @@ pub fn fig_adaptive(
 /// bench` completes in minutes on this single-core CPU substrate;
 /// `reproduce_tables` exposes knobs for bigger runs.
 ///
-/// `batch_init` drops to 32 (the smallest resnet/effnet bucket): the
+/// `batch_init` drops to 64 (the smallest bucket above b_curv): the
 /// memory model and controller dynamics are batch-relative, so the
-/// Table-1/2 *shape* is preserved while a B=96 CPU step (~30s on one
-/// core for ResNet-18) would make regeneration infeasible. The paper's
-/// B=96 is restored by `--set batch_init=96` / env overrides.
+/// Table-1/2 *shape* is preserved while a full B=96 CPU step budget
+/// would make regeneration needlessly slow. The paper's B=96 is
+/// restored by `--set batch_init=96` / env overrides.
 pub fn quick_budget(steps: usize, epochs: usize) -> impl Fn(&mut Config) {
     move |cfg: &mut Config| {
         cfg.steps_per_epoch = Some(steps);
         cfg.epochs = epochs;
         cfg.train_examples = 4096;
         cfg.eval_examples = 128;
-        // B=48 keeps the paper's b_curv(32) < B geometry so probe
+        // B=64 keeps the paper's b_curv(32) < B geometry so probe
         // buffers hide under the activation headroom (memsim test
         // `paper_geometry_probe_hides_under_activation_headroom`).
-        cfg.batch_init = 48;
+        cfg.batch_init = 64;
         // Place the utilization band so the BF16 footprint (~0.65 of
         // the strict budget) holds rather than grows — the paper's
         // shrink-or-hold Table-2 regime.

@@ -1,20 +1,40 @@
 //! # Tri-Accel
 //!
 //! Reproduction of *"Tri-Accel: Curvature-Aware Precision-Adaptive and
-//! Memory-Elastic Optimization for Efficient GPU Usage"* as a three-layer
-//! Rust + JAX + Pallas stack:
+//! Memory-Elastic Optimization for Efficient GPU Usage"* as a
+//! three-layer stack with pluggable runtime backends:
 //!
-//! * **L1** — Pallas numeric-format kernels (qdq / mp_matmul / grad_stats),
-//!   authored in `python/compile/kernels/` and lowered into the HLO.
-//! * **L2** — JAX train/eval/curvature graphs (`python/compile/`), AOT-
-//!   lowered to HLO text artifacts by `make artifacts`.
-//! * **L3** — this crate: the unified control loop (precision × curvature
-//!   × elastic batching), the PJRT runtime that executes the artifacts,
-//!   and every substrate (data pipeline, VRAM simulator, metrics, config,
+//! * **L1** — numeric-format kernels (qdq / mp_matmul / grad_stats).
+//!   Reference semantics live in `python/compile/kernels/ref.py`; the
+//!   default build runs the pure-Rust port in
+//!   [`runtime::native::qdq`] + `runtime/native/ops.rs`.
+//! * **L2** — the train/eval/curvature graphs. The native backend
+//!   executes them directly in Rust (`runtime/native/tiny_cnn.rs`);
+//!   the optional `pjrt` feature executes JAX-lowered HLO artifacts
+//!   instead (`make artifacts` + an external `xla` crate).
+//! * **L3** — this crate: the unified control loop (precision ×
+//!   curvature × elastic batching), backend-agnostic sessions, and
+//!   every substrate (data pipeline, VRAM simulator, metrics, config,
 //!   offline-build utilities).
 //!
-//! Python never runs on the training path: after `make artifacts` the
-//! `tri-accel` binary is self-contained.
+//! ## Backend selection
+//!
+//! The [`runtime::Backend`] trait covers the four entry points the
+//! manifest contract names (`init`, `train_b{n}`, `eval_b{n}`,
+//! `curv`). Two implementations ship:
+//!
+//! * `native` (default) — [`runtime::native::NativeBackend`], a
+//!   pure-Rust reference executor with a built-in manifest. The
+//!   default build is fully hermetic: `cargo build && cargo test`
+//!   needs no `artifacts/` directory, no `xla` crate, and no Python
+//!   step — Python never runs at all on this path.
+//! * `pjrt` (`--features pjrt`) — the PJRT/XLA executor over AOT HLO
+//!   artifacts. Requires supplying the external `xla` crate and
+//!   running `make artifacts` once; after that the binary is
+//!   self-contained.
+//!
+//! Select at the CLI with `--backend native|pjrt`, or in code via
+//! [`runtime::Engine::native`] / `Engine::pjrt` / [`runtime::Engine::new`].
 
 pub mod checkpoint;
 pub mod config;

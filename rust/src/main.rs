@@ -1,13 +1,16 @@
 //! `tri-accel` — leader entrypoint / CLI.
 //!
 //! Subcommands:
-//!   info                          artifact + model inventory
+//!   info                          backend + model inventory
 //!   train   [--model K] [--method M] [--epochs N] [--set k=v ...]
 //!   table1  [--models a,b] [--seeds 0,1,2] [--steps N] [--epochs N]
 //!   table2  [--model K]    [--seeds 0,1,2] [--steps N] [--epochs N]
 //!   fig     [--model K]    [--seed S]      [--steps N] [--epochs N]
+//!   compare --a run.json --b run.json
 //!
-//! Run `make artifacts` first; the binary only needs `artifacts/`.
+//! Backend selection: `--backend native` (default — the hermetic
+//! pure-Rust executor, no artifacts needed) or `--backend pjrt`
+//! (`--features pjrt` builds only; reads `--artifacts <dir>`).
 
 use std::path::PathBuf;
 
@@ -29,17 +32,48 @@ fn main() {
 
 fn run() -> Result<()> {
     let args = Args::from_env()?;
-    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
     match args.subcommand.as_deref() {
-        Some("info") => info(&artifacts, &args),
-        Some("train") | None => train(&artifacts, &args),
-        Some("table1") => table1(&artifacts, &args),
-        Some("table2") => table2(&artifacts, &args),
-        Some("fig") => fig(&artifacts, &args),
+        Some("info") => info(&args),
+        Some("train") | None => train(&args),
+        Some("table1") => table1(&args),
+        Some("table2") => table2(&args),
+        Some("fig") => fig(&args),
         Some("compare") => compare(&args),
         Some(other) => {
             anyhow::bail!("unknown subcommand `{other}` (info|train|table1|table2|fig|compare)")
         }
+    }
+}
+
+/// Build the engine from `--backend` / `--artifacts`.
+fn engine_from(args: &Args) -> Result<Engine> {
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let backend = args.get_or("backend", "native");
+    Engine::by_name(&backend, &artifacts)
+}
+
+/// Default model list: everything the engine's manifest serves.
+fn all_models(engine: &Engine) -> String {
+    engine
+        .manifest
+        .models
+        .keys()
+        .cloned()
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+/// `--model` with the manifest's first entry as the default.
+fn model_or_first(args: &Args, engine: &Engine) -> Result<String> {
+    match args.get("model") {
+        Some(m) => Ok(m.to_string()),
+        None => Ok(engine
+            .manifest
+            .models
+            .keys()
+            .next()
+            .context("empty manifest")?
+            .clone()),
     }
 }
 
@@ -48,6 +82,10 @@ fn run() -> Result<()> {
 fn compare(args: &Args) -> Result<()> {
     let a_path = args.get("a").context("--a <run.json> required")?.to_string();
     let b_path = args.get("b").context("--b <run.json> required")?.to_string();
+    // Engine options are accepted (and ignored) everywhere for script
+    // compatibility — compare needs no backend.
+    let _ = args.get("artifacts");
+    let _ = args.get("backend");
     args.reject_unknown()?;
     let load = |p: &str| -> Result<(f64, f64, f64, f64)> {
         let j = tri_accel::util::json::Json::parse(&std::fs::read_to_string(p)?)
@@ -84,11 +122,14 @@ fn compare(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn info(artifacts: &PathBuf, args: &Args) -> Result<()> {
+fn info(args: &Args) -> Result<()> {
+    let engine = engine_from(args)?;
     args.reject_unknown()?;
-    let engine = Engine::new(artifacts)?;
-    println!("platform: {}", engine.platform());
-    println!("{:<20} {:>7} {:>11} {:>8} {:>22}", "model", "layers", "params", "curv_b", "train buckets");
+    println!("backend: {}", engine.platform());
+    println!(
+        "{:<20} {:>7} {:>11} {:>8} {:>22}",
+        "model", "layers", "params", "curv_b", "train buckets"
+    );
     for (key, e) in &engine.manifest.models {
         println!(
             "{:<20} {:>7} {:>11} {:>8} {:>22?}",
@@ -128,7 +169,8 @@ fn config_from(args: &Args) -> Result<Config> {
     Ok(cfg)
 }
 
-fn train(artifacts: &PathBuf, args: &Args) -> Result<()> {
+fn train(args: &Args) -> Result<()> {
+    let engine = engine_from(args)?;
     let cfg = config_from(args)?;
     let out_dir = PathBuf::from(args.get_or("out", "runs"));
     let quiet = args.flag("quiet");
@@ -136,7 +178,6 @@ fn train(artifacts: &PathBuf, args: &Args) -> Result<()> {
     let resume = args.get("resume").map(PathBuf::from);
     args.reject_unknown()?;
 
-    let engine = Engine::new(artifacts)?;
     let tag = format!(
         "{}_{}_s{}",
         cfg.model_key,
@@ -144,9 +185,10 @@ fn train(artifacts: &PathBuf, args: &Args) -> Result<()> {
         cfg.seed
     );
     println!(
-        "training {} with {} — {} epochs, seed {}",
+        "training {} with {} on {} — {} epochs, seed {}",
         cfg.model_key,
         cfg.method.name(),
+        engine.platform(),
         cfg.epochs,
         cfg.seed
     );
@@ -196,12 +238,15 @@ fn budget_tweak(args: &Args) -> Result<impl Fn(&mut Config)> {
     Ok(harness::quick_budget(steps, epochs))
 }
 
-fn table1(artifacts: &PathBuf, args: &Args) -> Result<()> {
-    let models = args.get_or("models", "resnet18_c10,effnet_lite_c10,resnet18_c100,effnet_lite_c100");
+fn table1(args: &Args) -> Result<()> {
+    let engine = engine_from(args)?;
+    let models = match args.get("models") {
+        Some(m) => m.to_string(),
+        None => all_models(&engine),
+    };
     let seeds = parse_seeds(args)?;
     let tweak = budget_tweak(args)?;
     args.reject_unknown()?;
-    let engine = Engine::new(artifacts)?;
     let keys: Vec<&str> = models.split(',').collect();
     let rows = harness::table1(&engine, &keys, &seeds, &tweak)?;
     println!("== Table 1 (reduced budget; shape comparison vs paper) ==");
@@ -212,24 +257,24 @@ fn table1(artifacts: &PathBuf, args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn table2(artifacts: &PathBuf, args: &Args) -> Result<()> {
-    let model = args.get_or("model", "resnet18_c10");
+fn table2(args: &Args) -> Result<()> {
+    let engine = engine_from(args)?;
+    let model = model_or_first(args, &engine)?;
     let seeds = parse_seeds(args)?;
     let tweak = budget_tweak(args)?;
     args.reject_unknown()?;
-    let engine = Engine::new(artifacts)?;
     let rows = harness::table2(&engine, &model, &seeds, &tweak)?;
     println!("== Table 2 ablation — {model} ==");
     harness::print_table2(&rows);
     Ok(())
 }
 
-fn fig(artifacts: &PathBuf, args: &Args) -> Result<()> {
-    let model = args.get_or("model", "resnet18_c10");
+fn fig(args: &Args) -> Result<()> {
+    let engine = engine_from(args)?;
+    let model = model_or_first(args, &engine)?;
     let seed: u64 = args.parse_or("seed", 0)?;
     let tweak = budget_tweak(args)?;
     args.reject_unknown()?;
-    let engine = Engine::new(artifacts)?;
     let t = harness::fig_adaptive(&engine, &model, seed, &tweak)?;
     println!("== adaptive behaviour — {model} seed {seed} ==");
     println!("epoch, eff_score, fp16, bf16, fp32");

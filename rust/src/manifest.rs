@@ -82,11 +82,6 @@ impl ModelEntry {
         self.layers.iter().map(|l| l.act_elems).sum()
     }
 
-    /// Total MACs per sample (analytic speed model input).
-    pub fn flops_per_sample(&self) -> usize {
-        self.layers.iter().map(|l| l.flops).sum()
-    }
-
     pub fn state_elems(&self) -> usize {
         self.state_shapes.iter().map(|s| s.iter().product::<usize>()).sum()
     }

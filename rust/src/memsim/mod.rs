@@ -208,20 +208,16 @@ pub struct SpeedModel {
     pub fp32_tflops: f64,
     pub half_speedup: f64,
     pub fixed_overhead_s: f64, // per-step launch/host overhead
-    flops_per_sample: f64,
 }
 
 impl SpeedModel {
-    pub fn t4_like(entry: &ModelEntry) -> SpeedModel {
-        SpeedModel {
-            fp32_tflops: 8.1,
-            half_speedup: 1.8,
-            fixed_overhead_s: 2.0e-3,
-            flops_per_sample: entry.flops_per_sample() as f64 * 2.0, // MAC→FLOP
-        }
+    pub fn t4_like() -> SpeedModel {
+        SpeedModel { fp32_tflops: 8.1, half_speedup: 1.8, fixed_overhead_s: 2.0e-3 }
     }
 
-    /// Modeled seconds for one fwd+bwd step (bwd ≈ 2× fwd FLOPs).
+    /// Modeled seconds for one fwd+bwd step (bwd ≈ 2× fwd FLOPs). The
+    /// per-layer MAC counts come from the manifest at call time, so the
+    /// model carries no per-entry state.
     pub fn step_seconds(&self, b: usize, codes: &[i32], layer_flops: &[usize]) -> f64 {
         let total: f64 = layer_flops
             .iter()
@@ -231,7 +227,6 @@ impl SpeedModel {
                 (fl as f64 * 2.0) / speed
             })
             .sum();
-        let _ = self.flops_per_sample;
         let flops = total * 3.0 * b as f64; // fwd + 2×fwd for bwd
         flops / (self.fp32_tflops * 1e12) + self.fixed_overhead_s
     }
@@ -388,7 +383,7 @@ mod tests {
     #[test]
     fn speed_model_prefers_half() {
         let e = toy_entry();
-        let sm = SpeedModel::t4_like(&e);
+        let sm = SpeedModel::t4_like();
         let fl: Vec<usize> = e.layers.iter().map(|l| l.flops).collect();
         let t32 = sm.step_seconds(96, &[FP32, FP32], &fl);
         let t16 = sm.step_seconds(96, &[FP16, FP16], &fl);

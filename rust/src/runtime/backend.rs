@@ -1,0 +1,84 @@
+//! The pluggable runtime backend abstraction.
+//!
+//! A [`Backend`] executes the four entry points the manifest contract
+//! names — `init`, `train_b{n}`, `eval_b{n}`, `curv` — over plain host
+//! `f32` vectors. Everything above this trait (Session, Trainer,
+//! harness, CLI) is backend-agnostic; everything below it owns the
+//! compute: the built-in pure-Rust reference executor
+//! ([`super::native::NativeBackend`]), the PJRT/XLA artifact executor
+//! (`--features pjrt`), and any future CUDA / remote backend.
+//!
+//! IO orderings mirror the manifest `io` contract exactly:
+//!   train: params*N, mom*N, state*S, x, y, codes, lr_scales, lr,
+//!          loss_scale, wd -> params*N, mom*N, state*S, loss, correct,
+//!          grad_var, grad_norm, overflow
+//!   eval:  params*N, state*S, x, y, codes -> loss, correct
+//!   curv:  params*N, state*S, x, y, u*N, codes -> u_next*N, lambdas
+//!   init:  seed -> params*N, state*S
+
+use anyhow::Result;
+
+use super::{Batch, EvalResult, StepCtrl, TrainOutputs};
+use crate::manifest::ModelEntry;
+
+/// Host-resident model state: flat `f32` tensors ordered positionally
+/// per the manifest (`entry.params` for params/momentum,
+/// `entry.state_shapes` for BN state).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelState {
+    pub params: Vec<Vec<f32>>,
+    pub mom: Vec<Vec<f32>>,
+    pub state: Vec<Vec<f32>>,
+}
+
+/// A runtime executor for the manifest's model entry points.
+///
+/// Contract (enforced by the conformance suite in
+/// `tests/backend_conformance.rs`):
+/// * all four calls are deterministic functions of their inputs;
+/// * `init` is deterministic per seed and seed-sensitive;
+/// * `train_step` mutates `st` in place, EXCEPT when it reports
+///   `overflow` — then params/momentum/state are left untouched;
+/// * `grad_var`/`grad_norm`/`curv` lambdas have `entry.num_layers`
+///   arity; `eval` reports `total == batch.n`.
+pub trait Backend {
+    /// Short platform name for logs/CLI (e.g. "native-cpu", "pjrt-cpu").
+    fn name(&self) -> &'static str;
+
+    /// Can this backend execute `entry`? (The native backend implements
+    /// `tiny_cnn`; the PJRT backend anything with compiled artifacts.)
+    fn supports(&self, entry: &ModelEntry) -> bool;
+
+    /// Materialize params + zero momentum + BN state from `seed`.
+    fn init(&self, entry: &ModelEntry, seed: i32) -> Result<ModelState>;
+
+    /// One optimizer step (the `train_b{n}` entry point).
+    fn train_step(
+        &self,
+        entry: &ModelEntry,
+        st: &mut ModelState,
+        batch: &Batch,
+        ctrl: &StepCtrl,
+    ) -> Result<TrainOutputs>;
+
+    /// One eval batch (the `eval_b{n}` entry point).
+    fn eval_batch(
+        &self,
+        entry: &ModelEntry,
+        st: &ModelState,
+        batch: &Batch,
+        codes: &[i32],
+    ) -> Result<EvalResult>;
+
+    /// One amortized power-iteration step (the `curv` entry point).
+    /// Updates `probes` in place and returns per-layer Rayleigh
+    /// quotients λ_l.
+    fn curv_step(
+        &self,
+        entry: &ModelEntry,
+        st: &ModelState,
+        batch: &Batch,
+        probes: &mut [Vec<f32>],
+        codes: &[i32],
+    ) -> Result<Vec<f32>>;
+}

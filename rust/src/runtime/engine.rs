@@ -1,100 +1,116 @@
-//! PJRT client + lazy executable cache.
+//! Engine: a manifest plus the [`Backend`] that executes it.
 //!
-//! Executables are compiled on first use and cached by (model key,
-//! artifact name) — the batch-bucket ladder means the elastic controller
-//! can request a new bucket mid-run and pay the compile exactly once
-//! (mirrors Triton's per-shape JIT cache in the paper's stack).
+//! Backend selection:
+//! * [`Engine::native`] — the hermetic default: pure-Rust reference
+//!   executor with its built-in manifest. Works from a fresh checkout
+//!   with no artifacts, no Python, no native deps.
+//! * [`Engine::pjrt`] (`--features pjrt`) — the PJRT/XLA executor over
+//!   AOT HLO artifacts produced by `make artifacts`.
+//! * [`Engine::new`] — compatibility constructor: picks PJRT when the
+//!   feature is enabled *and* an artifact manifest exists at the given
+//!   path, else falls back to the native backend.
 
-use std::cell::RefCell;
-use std::collections::HashMap;
 use std::path::Path;
-use std::rc::Rc;
-use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
-use crate::manifest::{Manifest, ModelEntry};
+use super::backend::Backend;
+use super::native;
+use crate::manifest::Manifest;
 
 pub struct Engine {
-    client: xla::PjRtClient,
     pub manifest: Manifest,
-    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
-    compile_log: RefCell<Vec<(String, f64)>>,
+    backend: Box<dyn Backend>,
 }
 
 impl Engine {
+    /// The hermetic pure-Rust engine (built-in manifest, no disk IO).
+    pub fn native() -> Engine {
+        Engine {
+            manifest: native::builtin_manifest(),
+            backend: Box::new(native::NativeBackend::new()),
+        }
+    }
+
+    /// Compatibility constructor: PJRT over `artifacts_dir` when built
+    /// with `--features pjrt` and a manifest is present there, else the
+    /// native backend (ignoring `artifacts_dir`).
     pub fn new(artifacts_dir: &Path) -> Result<Engine> {
-        let manifest = Manifest::load(artifacts_dir)?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        #[cfg(feature = "pjrt")]
+        {
+            if artifacts_dir.join("manifest.json").exists() {
+                return Engine::pjrt(artifacts_dir);
+            }
+        }
+        let _ = artifacts_dir;
+        Ok(Engine::native())
+    }
+
+    /// The PJRT/XLA artifact executor.
+    #[cfg(feature = "pjrt")]
+    pub fn pjrt(artifacts_dir: &Path) -> Result<Engine> {
+        let backend = super::pjrt::PjrtBackend::new(artifacts_dir)?;
         Ok(Engine {
-            client,
-            manifest,
-            cache: RefCell::new(HashMap::new()),
-            compile_log: RefCell::new(Vec::new()),
+            manifest: Manifest::load(artifacts_dir)?,
+            backend: Box::new(backend),
         })
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Fetch (compile-on-miss) the executable for `entry`'s artifact
-    /// `name` (e.g. "train_b96", "eval_b128", "curv", "init").
-    pub fn executable(
-        &self,
-        entry: &ModelEntry,
-        name: &str,
-    ) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        let key = format!("{}::{}", entry.key, name);
-        if let Some(exe) = self.cache.borrow().get(&key) {
-            return Ok(exe.clone());
+    /// Select a backend by name (the CLI's `--backend` flag).
+    pub fn by_name(backend: &str, artifacts_dir: &Path) -> Result<Engine> {
+        match backend {
+            "native" => Ok(Engine::native()),
+            #[cfg(feature = "pjrt")]
+            "pjrt" => Engine::pjrt(artifacts_dir),
+            other => {
+                let _ = artifacts_dir;
+                anyhow::bail!(
+                    "unknown backend `{other}` (available: native{})",
+                    if cfg!(feature = "pjrt") {
+                        "|pjrt"
+                    } else {
+                        "; rebuild with --features pjrt for the XLA executor"
+                    }
+                )
+            }
         }
-        let path = self.manifest.artifact_path(entry, name)?;
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("artifact path not utf-8")?,
-        )
-        .with_context(|| format!("parsing HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Rc::new(
-            self.client
-                .compile(&comp)
-                .with_context(|| format!("compiling {key}"))?,
-        );
-        let dt = t0.elapsed().as_secs_f64();
-        self.compile_log.borrow_mut().push((key.clone(), dt));
-        self.cache.borrow_mut().insert(key, exe.clone());
-        Ok(exe)
     }
 
-    /// True if the executable is already compiled (used by the batch
-    /// controller to prefer warm buckets when latency matters).
-    pub fn is_warm(&self, entry: &ModelEntry, name: &str) -> bool {
-        self.cache
-            .borrow()
-            .contains_key(&format!("{}::{}", entry.key, name))
+    /// The backend's platform name (e.g. "native-cpu").
+    pub fn platform(&self) -> String {
+        self.backend.name().to_string()
     }
 
-    /// (artifact, seconds) pairs for every compile performed so far.
-    pub fn compile_log(&self) -> Vec<(String, f64)> {
-        self.compile_log.borrow().clone()
+    pub fn backend(&self) -> &dyn Backend {
+        self.backend.as_ref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_engine_is_hermetic() {
+        let e = Engine::native();
+        assert_eq!(e.platform(), "native-cpu");
+        assert!(e.manifest.model("tiny_cnn_c10").is_ok());
+        assert!(e.manifest.model("resnet18_c10").is_err(), "not built in");
     }
 
-    /// Run a compiled executable over host literals and flatten the
-    /// single tuple result into its leaves.
-    pub fn run(
-        &self,
-        exe: &xla::PjRtLoadedExecutable,
-        inputs: &[xla::Literal],
-    ) -> Result<Vec<xla::Literal>> {
-        let out = exe.execute::<xla::Literal>(inputs)?;
-        anyhow::ensure!(
-            out.len() == 1 && out[0].len() == 1,
-            "expected single tuple output, got {}x{}",
-            out.len(),
-            out.first().map(|v| v.len()).unwrap_or(0)
-        );
-        let lit = out[0][0].to_literal_sync()?;
-        Ok(lit.to_tuple()?)
+    #[test]
+    fn new_falls_back_to_native_without_artifacts() {
+        let e = Engine::new(Path::new("/definitely/not/a/dir")).unwrap();
+        assert_eq!(e.platform(), "native-cpu");
+    }
+
+    #[test]
+    fn by_name_selects_and_rejects() {
+        let e = Engine::by_name("native", Path::new("artifacts")).unwrap();
+        assert_eq!(e.platform(), "native-cpu");
+        let err = Engine::by_name("cuda", Path::new("artifacts")).unwrap_err();
+        assert!(err.to_string().contains("unknown backend"));
+        #[cfg(not(feature = "pjrt"))]
+        assert!(Engine::by_name("pjrt", Path::new("artifacts")).is_err());
     }
 }

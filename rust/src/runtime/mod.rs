@@ -1,12 +1,24 @@
-//! PJRT runtime — loads the AOT artifacts (HLO text) and executes them on
-//! the CPU PJRT client. This is the only module that touches the `xla`
-//! crate; everything above it deals in plain `f32` host vectors.
+//! Runtime layer: backend-agnostic sessions over a pluggable executor.
 //!
-//! Python never runs here: the artifacts were lowered once at build time
-//! (`make artifacts`) and the binary is self-contained afterwards.
+//! * [`backend`] — the [`Backend`] trait: the four manifest entry
+//!   points (`init`, `train_b{n}`, `eval_b{n}`, `curv`) over host `f32`
+//!   vectors, plus [`ModelState`].
+//! * [`native`] — the default pure-Rust reference executor (tiny-CNN
+//!   forward/backward, qdq precision emulation, loss-scaled SGD,
+//!   grad stats, FD power-iteration curvature) with a built-in
+//!   manifest. Hermetic: no artifacts, no Python, no native deps.
+//! * `pjrt` (`--features pjrt`) — the PJRT/XLA executor that loads AOT
+//!   HLO artifacts (`make artifacts`) and runs them on the CPU PJRT
+//!   client. The only module that touches the external `xla` crate.
+//! * [`Engine`] / [`Session`] — backend selection and per-run state.
 
+pub mod backend;
 mod engine;
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 mod session;
 
+pub use backend::{Backend, ModelState};
 pub use engine::Engine;
 pub use session::{Batch, EvalResult, Session, StepCtrl, TrainOutputs};

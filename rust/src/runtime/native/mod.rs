@@ -1,0 +1,181 @@
+//! The native reference backend: a pure-Rust executor for the manifest
+//! entry points, needing no artifacts, no Python, and no native deps.
+//!
+//! It ships its own built-in manifest (the same schema
+//! `python/compile/aot.py` emits), so `Engine::native()` works from a
+//! fresh checkout. Currently implements the `tiny_cnn` architecture —
+//! the CI-speed model the integration tests and quickstart use; larger
+//! models stay on the artifact-driven PJRT backend.
+
+mod ops;
+pub mod qdq;
+mod tiny_cnn;
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::backend::{Backend, ModelState};
+use super::{Batch, EvalResult, StepCtrl, TrainOutputs};
+use crate::manifest::{Manifest, ModelEntry};
+
+/// The built-in manifest served by [`builtin_manifest`]. Layer/param
+/// accounting matches `python/compile/models/tiny_cnn.py` exactly
+/// (3×3 convs at 16/32/64 channels on 32×32 inputs, dense head).
+const BUILTIN_MANIFEST: &str = r#"{
+  "precision_codes": {"fp16": 0, "bf16": 1, "fp32": 2},
+  "models": {
+    "tiny_cnn_c10": {
+      "model": "tiny_cnn",
+      "num_classes": 10,
+      "num_layers": 4,
+      "param_count": 24346,
+      "layers": [
+        {"name": "conv1", "kind": "conv", "param_elems": 432, "act_elems": 16384, "flops": 442368},
+        {"name": "conv2", "kind": "conv", "param_elems": 4608, "act_elems": 8192, "flops": 1179648},
+        {"name": "conv3", "kind": "conv", "param_elems": 18432, "act_elems": 4096, "flops": 1179648},
+        {"name": "head", "kind": "dense", "param_elems": 640, "act_elems": 10, "flops": 640}
+      ],
+      "params": [
+        {"name": "conv1/w", "shape": [3, 3, 3, 16], "layer_idx": 0, "elems": 432},
+        {"name": "bn1/gamma", "shape": [16], "layer_idx": -1, "elems": 16},
+        {"name": "bn1/beta", "shape": [16], "layer_idx": -1, "elems": 16},
+        {"name": "conv2/w", "shape": [3, 3, 16, 32], "layer_idx": 1, "elems": 4608},
+        {"name": "bn2/gamma", "shape": [32], "layer_idx": -1, "elems": 32},
+        {"name": "bn2/beta", "shape": [32], "layer_idx": -1, "elems": 32},
+        {"name": "conv3/w", "shape": [3, 3, 32, 64], "layer_idx": 2, "elems": 18432},
+        {"name": "bn3/gamma", "shape": [64], "layer_idx": -1, "elems": 64},
+        {"name": "bn3/beta", "shape": [64], "layer_idx": -1, "elems": 64},
+        {"name": "head/w", "shape": [64, 10], "layer_idx": 3, "elems": 640},
+        {"name": "head/b", "shape": [10], "layer_idx": -1, "elems": 10}
+      ],
+      "state_shapes": [[16], [16], [32], [32], [64], [64]],
+      "train_buckets": [16, 32, 64, 96, 128],
+      "eval_buckets": [16, 128],
+      "curv_batch": 32,
+      "artifacts": {}
+    },
+    "tiny_cnn_c100": {
+      "model": "tiny_cnn",
+      "num_classes": 100,
+      "num_layers": 4,
+      "param_count": 30196,
+      "layers": [
+        {"name": "conv1", "kind": "conv", "param_elems": 432, "act_elems": 16384, "flops": 442368},
+        {"name": "conv2", "kind": "conv", "param_elems": 4608, "act_elems": 8192, "flops": 1179648},
+        {"name": "conv3", "kind": "conv", "param_elems": 18432, "act_elems": 4096, "flops": 1179648},
+        {"name": "head", "kind": "dense", "param_elems": 6400, "act_elems": 100, "flops": 6400}
+      ],
+      "params": [
+        {"name": "conv1/w", "shape": [3, 3, 3, 16], "layer_idx": 0, "elems": 432},
+        {"name": "bn1/gamma", "shape": [16], "layer_idx": -1, "elems": 16},
+        {"name": "bn1/beta", "shape": [16], "layer_idx": -1, "elems": 16},
+        {"name": "conv2/w", "shape": [3, 3, 16, 32], "layer_idx": 1, "elems": 4608},
+        {"name": "bn2/gamma", "shape": [32], "layer_idx": -1, "elems": 32},
+        {"name": "bn2/beta", "shape": [32], "layer_idx": -1, "elems": 32},
+        {"name": "conv3/w", "shape": [3, 3, 32, 64], "layer_idx": 2, "elems": 18432},
+        {"name": "bn3/gamma", "shape": [64], "layer_idx": -1, "elems": 64},
+        {"name": "bn3/beta", "shape": [64], "layer_idx": -1, "elems": 64},
+        {"name": "head/w", "shape": [64, 100], "layer_idx": 3, "elems": 6400},
+        {"name": "head/b", "shape": [100], "layer_idx": -1, "elems": 100}
+      ],
+      "state_shapes": [[16], [16], [32], [32], [64], [64]],
+      "train_buckets": [16, 32, 64, 96, 128],
+      "eval_buckets": [16, 128],
+      "curv_batch": 32,
+      "artifacts": {}
+    }
+  }
+}"#;
+
+/// The manifest the native backend serves (no `artifacts/` needed).
+pub fn builtin_manifest() -> Manifest {
+    Manifest::parse(BUILTIN_MANIFEST, Path::new("builtin"))
+        .expect("built-in manifest is valid by construction")
+}
+
+/// Pure-Rust reference executor.
+#[derive(Debug, Default)]
+pub struct NativeBackend;
+
+impl NativeBackend {
+    pub fn new() -> NativeBackend {
+        NativeBackend
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native-cpu"
+    }
+
+    fn supports(&self, entry: &ModelEntry) -> bool {
+        entry.model == "tiny_cnn"
+    }
+
+    fn init(&self, entry: &ModelEntry, seed: i32) -> Result<ModelState> {
+        tiny_cnn::init(entry, seed)
+    }
+
+    fn train_step(
+        &self,
+        entry: &ModelEntry,
+        st: &mut ModelState,
+        batch: &Batch,
+        ctrl: &StepCtrl,
+    ) -> Result<TrainOutputs> {
+        tiny_cnn::train_step(entry, st, batch, ctrl)
+    }
+
+    fn eval_batch(
+        &self,
+        entry: &ModelEntry,
+        st: &ModelState,
+        batch: &Batch,
+        codes: &[i32],
+    ) -> Result<EvalResult> {
+        tiny_cnn::eval_batch(entry, st, batch, codes)
+    }
+
+    fn curv_step(
+        &self,
+        entry: &ModelEntry,
+        st: &ModelState,
+        batch: &Batch,
+        probes: &mut [Vec<f32>],
+        codes: &[i32],
+    ) -> Result<Vec<f32>> {
+        tiny_cnn::curv_step(entry, st, batch, probes, codes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_manifest_parses_and_accounts() {
+        let m = builtin_manifest();
+        let e = m.model("tiny_cnn_c10").unwrap();
+        assert_eq!(e.num_layers, 4);
+        assert_eq!(e.param_count, 24346);
+        assert_eq!(e.quantizable_elems(), 432 + 4608 + 18432 + 640);
+        assert_eq!(e.act_elems_per_sample(), 16384 + 8192 + 4096 + 10);
+        assert_eq!(e.state_elems(), 2 * (16 + 32 + 64));
+        assert!(e.train_buckets.contains(&96));
+        let e100 = m.model("tiny_cnn_c100").unwrap();
+        assert_eq!(e100.num_classes, 100);
+        assert_eq!(e100.param_count, 30196);
+    }
+
+    #[test]
+    fn backend_supports_tiny_cnn_only() {
+        let m = builtin_manifest();
+        let b = NativeBackend::new();
+        assert!(b.supports(m.model("tiny_cnn_c10").unwrap()));
+        let mut other = m.model("tiny_cnn_c10").unwrap().clone();
+        other.model = "resnet18".into();
+        assert!(!b.supports(&other));
+        assert_eq!(b.name(), "native-cpu");
+    }
+}

@@ -1,0 +1,639 @@
+//! Neural-net primitives for the native backend: SAME 3×3 convolution,
+//! BatchNorm (train/eval), 2×2 max-pool, global average pool, dense
+//! matmul, and softmax cross-entropy — each with its backward pass.
+//!
+//! Semantics are a port of `python/compile/models/common.py` +
+//! `python/compile/train_graph.py` (validated against the JAX reference
+//! graphs numerically): NHWC layout, f32 activations, fp32-style
+//! accumulation, batch-stat BN with torch-style running updates.
+//! Channel reductions (BN statistics, BN backward sums, CE loss mean)
+//! accumulate in f64 for robustness; everything stored is f32.
+//!
+//! Loss-scale exactness: every backward op here is *linear* in the
+//! incoming cotangent, so scaling the loss by 2^k scales every gradient
+//! by exactly 2^k in binary floating point — the property the FP32
+//! value-neutrality test pins down.
+
+#![allow(clippy::too_many_arguments)]
+
+pub const BN_MOMENTUM: f32 = 0.1;
+pub const BN_EPS: f32 = 1e-5;
+
+/// SAME-padded 3×3 stride-1 convolution. `x` is NHWC `(n,h,w,cin)`
+/// flat, `wt` is HWIO `(3,3,cin,cout)` flat; returns `(n,h,w,cout)`.
+pub fn conv3x3_fwd(
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    wt: &[f32],
+    cout: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(x.len(), n * h * w * cin);
+    debug_assert_eq!(wt.len(), 9 * cin * cout);
+    let mut out = vec![0f32; n * h * w * cout];
+    for bi in 0..n {
+        for oy in 0..h {
+            for ox in 0..w {
+                let o_base = ((bi * h + oy) * w + ox) * cout;
+                for ky in 0..3usize {
+                    let iy = oy as isize + ky as isize - 1;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..3usize {
+                        let ix = ox as isize + kx as isize - 1;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let x_base = ((bi * h + iy as usize) * w + ix as usize) * cin;
+                        let w_base = (ky * 3 + kx) * cin * cout;
+                        for ci in 0..cin {
+                            let xv = x[x_base + ci];
+                            let wrow = &wt[w_base + ci * cout..w_base + (ci + 1) * cout];
+                            let orow = &mut out[o_base..o_base + cout];
+                            for (o, &wv) in orow.iter_mut().zip(wrow.iter()) {
+                                *o += xv * wv;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Backward of [`conv3x3_fwd`]: returns `(dx, dw)` for cotangent `g`
+/// of shape `(n,h,w,cout)`.
+pub fn conv3x3_bwd(
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    wt: &[f32],
+    cout: usize,
+    g: &[f32],
+) -> (Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(g.len(), n * h * w * cout);
+    let mut dx = vec![0f32; x.len()];
+    let mut dw = vec![0f32; wt.len()];
+    for bi in 0..n {
+        for oy in 0..h {
+            for ox in 0..w {
+                let g_base = ((bi * h + oy) * w + ox) * cout;
+                let grow = &g[g_base..g_base + cout];
+                for ky in 0..3usize {
+                    let iy = oy as isize + ky as isize - 1;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..3usize {
+                        let ix = ox as isize + kx as isize - 1;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let x_base = ((bi * h + iy as usize) * w + ix as usize) * cin;
+                        let w_base = (ky * 3 + kx) * cin * cout;
+                        for ci in 0..cin {
+                            let xv = x[x_base + ci];
+                            let wrow = &wt[w_base + ci * cout..w_base + (ci + 1) * cout];
+                            let dwrow = &mut dw[w_base + ci * cout..w_base + (ci + 1) * cout];
+                            let mut acc = 0f32;
+                            for co in 0..cout {
+                                let gv = grow[co];
+                                dwrow[co] += xv * gv;
+                                acc += wrow[co] * gv;
+                            }
+                            dx[x_base + ci] += acc;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (dx, dw)
+}
+
+/// Per-channel statistics cached by the BN forward for the backward.
+pub struct BnCache {
+    pub mean: Vec<f32>,
+    pub inv: Vec<f32>, // 1/sqrt(var + eps)
+}
+
+/// BatchNorm forward. `x` is `(rows, c)` flat with `rows = n*h*w`.
+/// In train mode uses batch statistics and returns torch-style updated
+/// running stats; in eval mode normalizes with `(rm, rv)` unchanged.
+/// Returns `(out, new_rm, new_rv, cache)`.
+pub fn bn_fwd(
+    x: &[f32],
+    rows: usize,
+    c: usize,
+    gamma: &[f32],
+    beta: &[f32],
+    rm: &[f32],
+    rv: &[f32],
+    train: bool,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>, BnCache) {
+    debug_assert_eq!(x.len(), rows * c);
+    let (mean, var) = if train {
+        let mut sum = vec![0f64; c];
+        for r in 0..rows {
+            for (ci, s) in sum.iter_mut().enumerate() {
+                *s += x[r * c + ci] as f64;
+            }
+        }
+        let mean: Vec<f32> = sum.iter().map(|&s| (s / rows as f64) as f32).collect();
+        let mut sq = vec![0f64; c];
+        for r in 0..rows {
+            for (ci, s) in sq.iter_mut().enumerate() {
+                let d = (x[r * c + ci] - mean[ci]) as f64;
+                *s += d * d;
+            }
+        }
+        let var: Vec<f32> = sq.iter().map(|&s| (s / rows as f64) as f32).collect();
+        (mean, var)
+    } else {
+        (rm.to_vec(), rv.to_vec())
+    };
+    let inv: Vec<f32> = var.iter().map(|&v| 1.0 / (v + BN_EPS).sqrt()).collect();
+    let mut out = vec![0f32; rows * c];
+    for r in 0..rows {
+        for ci in 0..c {
+            out[r * c + ci] = (x[r * c + ci] - mean[ci]) * inv[ci] * gamma[ci] + beta[ci];
+        }
+    }
+    let (new_rm, new_rv) = if train {
+        let nrm = rm
+            .iter()
+            .zip(mean.iter())
+            .map(|(&r, &m)| (1.0 - BN_MOMENTUM) * r + BN_MOMENTUM * m)
+            .collect();
+        let nrv = rv
+            .iter()
+            .zip(var.iter())
+            .map(|(&r, &v)| (1.0 - BN_MOMENTUM) * r + BN_MOMENTUM * v)
+            .collect();
+        (nrm, nrv)
+    } else {
+        (rm.to_vec(), rv.to_vec())
+    };
+    (out, new_rm, new_rv, BnCache { mean, inv })
+}
+
+/// BatchNorm train-mode backward (batch statistics participate in the
+/// gradient). Returns `(dx, dgamma, dbeta)`.
+pub fn bn_bwd(
+    x: &[f32],
+    g: &[f32],
+    rows: usize,
+    c: usize,
+    gamma: &[f32],
+    cache: &BnCache,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(g.len(), rows * c);
+    let mut dbeta = vec![0f64; c];
+    let mut dgamma = vec![0f64; c];
+    for r in 0..rows {
+        for ci in 0..c {
+            let gv = g[r * c + ci] as f64;
+            let xhat = ((x[r * c + ci] - cache.mean[ci]) * cache.inv[ci]) as f64;
+            dbeta[ci] += gv;
+            dgamma[ci] += gv * xhat;
+        }
+    }
+    let nf = rows as f32;
+    let mut dx = vec![0f32; rows * c];
+    for r in 0..rows {
+        for ci in 0..c {
+            let xhat = (x[r * c + ci] - cache.mean[ci]) * cache.inv[ci];
+            let coeff = gamma[ci] * cache.inv[ci] / nf;
+            dx[r * c + ci] = coeff
+                * (nf * g[r * c + ci] - dbeta[ci] as f32 - xhat * dgamma[ci] as f32);
+        }
+    }
+    (
+        dx,
+        dgamma.iter().map(|&v| v as f32).collect(),
+        dbeta.iter().map(|&v| v as f32).collect(),
+    )
+}
+
+/// ReLU forward in place.
+pub fn relu_inplace(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Mask the cotangent by the ReLU activation pattern of `pre` (the
+/// pre-activation values).
+pub fn relu_bwd_inplace(g: &mut [f32], pre: &[f32]) {
+    for (gv, &p) in g.iter_mut().zip(pre.iter()) {
+        if p <= 0.0 {
+            *gv = 0.0;
+        }
+    }
+}
+
+/// 2×2 stride-2 max pool. Returns the pooled output and the argmax
+/// index (0..4, scan order (dy,dx)) per output element, first max wins
+/// (matching XLA's select-and-scatter tie-break).
+pub fn maxpool2_fwd(x: &[f32], n: usize, h: usize, w: usize, c: usize) -> (Vec<f32>, Vec<u8>) {
+    let (ho, wo) = (h / 2, w / 2);
+    let mut out = vec![0f32; n * ho * wo * c];
+    let mut arg = vec![0u8; n * ho * wo * c];
+    for bi in 0..n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                for ci in 0..c {
+                    let mut best = f32::NEG_INFINITY;
+                    let mut bidx = 0u8;
+                    for dy in 0..2usize {
+                        for dx in 0..2usize {
+                            let v = x[((bi * h + 2 * oy + dy) * w + 2 * ox + dx) * c + ci];
+                            if v > best {
+                                best = v;
+                                bidx = (dy * 2 + dx) as u8;
+                            }
+                        }
+                    }
+                    let o = ((bi * ho + oy) * wo + ox) * c + ci;
+                    out[o] = best;
+                    arg[o] = bidx;
+                }
+            }
+        }
+    }
+    (out, arg)
+}
+
+/// Backward of [`maxpool2_fwd`]: routes each cotangent to its argmax.
+/// `h`/`w` are the *input* dimensions.
+pub fn maxpool2_bwd(g: &[f32], arg: &[u8], n: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
+    let (ho, wo) = (h / 2, w / 2);
+    debug_assert_eq!(g.len(), n * ho * wo * c);
+    let mut dx = vec![0f32; n * h * w * c];
+    for bi in 0..n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                for ci in 0..c {
+                    let o = ((bi * ho + oy) * wo + ox) * c + ci;
+                    let (dy, dx_) = ((arg[o] / 2) as usize, (arg[o] % 2) as usize);
+                    dx[((bi * h + 2 * oy + dy) * w + 2 * ox + dx_) * c + ci] = g[o];
+                }
+            }
+        }
+    }
+    dx
+}
+
+/// Global average pool over the spatial dims: `(n,h,w,c)` -> `(n,c)`.
+pub fn gap_fwd(x: &[f32], n: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
+    let hw = h * w;
+    let mut out = vec![0f32; n * c];
+    for bi in 0..n {
+        let mut acc = vec![0f64; c];
+        for p in 0..hw {
+            let base = (bi * hw + p) * c;
+            for (ci, a) in acc.iter_mut().enumerate() {
+                *a += x[base + ci] as f64;
+            }
+        }
+        for ci in 0..c {
+            out[bi * c + ci] = (acc[ci] / hw as f64) as f32;
+        }
+    }
+    out
+}
+
+/// Backward of [`gap_fwd`]: broadcast `g/(h*w)` over the spatial dims.
+pub fn gap_bwd(g: &[f32], n: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
+    let hw = h * w;
+    let inv = 1.0 / hw as f32;
+    let mut dx = vec![0f32; n * hw * c];
+    for bi in 0..n {
+        for p in 0..hw {
+            let base = (bi * hw + p) * c;
+            for ci in 0..c {
+                dx[base + ci] = g[bi * c + ci] * inv;
+            }
+        }
+    }
+    dx
+}
+
+/// Dense layer forward: `x (n,cin) @ w (cin,cout) + b`, f32 accumulate.
+pub fn dense_fwd(x: &[f32], n: usize, cin: usize, w: &[f32], cout: usize, b: &[f32]) -> Vec<f32> {
+    let mut out = vec![0f32; n * cout];
+    for bi in 0..n {
+        let orow = &mut out[bi * cout..(bi + 1) * cout];
+        orow.copy_from_slice(b);
+        for ci in 0..cin {
+            let xv = x[bi * cin + ci];
+            let wrow = &w[ci * cout..(ci + 1) * cout];
+            for (o, &wv) in orow.iter_mut().zip(wrow.iter()) {
+                *o += xv * wv;
+            }
+        }
+    }
+    out
+}
+
+/// Dense backward matmuls: `dw = x^T g` and `dx = g w^T`, plus
+/// `db = sum_rows g`. Matches the `mp_matmul` VJP structure (the
+/// caller quantizes the operands per the layer code before calling).
+pub fn dense_bwd(
+    x: &[f32],
+    n: usize,
+    cin: usize,
+    w: &[f32],
+    cout: usize,
+    g: &[f32],
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut dx = vec![0f32; n * cin];
+    let mut dw = vec![0f32; cin * cout];
+    let mut db = vec![0f32; cout];
+    for bi in 0..n {
+        let grow = &g[bi * cout..(bi + 1) * cout];
+        for (d, &gv) in db.iter_mut().zip(grow.iter()) {
+            *d += gv;
+        }
+        for ci in 0..cin {
+            let xv = x[bi * cin + ci];
+            let wrow = &w[ci * cout..(ci + 1) * cout];
+            let dwrow = &mut dw[ci * cout..(ci + 1) * cout];
+            let mut acc = 0f32;
+            for co in 0..cout {
+                dwrow[co] += xv * grow[co];
+                acc += wrow[co] * grow[co];
+            }
+            dx[bi * cin + ci] += acc;
+        }
+    }
+    (dx, dw, db)
+}
+
+/// Mean softmax cross-entropy with int labels. Returns
+/// `(loss, correct, dlogits)` where `dlogits = (softmax - onehot)/n`
+/// (the cotangent of the *unscaled* mean loss).
+pub fn softmax_ce(logits: &[f32], y: &[i32], n: usize, classes: usize) -> (f32, i64, Vec<f32>) {
+    debug_assert_eq!(logits.len(), n * classes);
+    let mut loss_sum = 0f64;
+    let mut correct = 0i64;
+    let mut dlogits = vec![0f32; n * classes];
+    for bi in 0..n {
+        let row = &logits[bi * classes..(bi + 1) * classes];
+        let mut m = f32::NEG_INFINITY;
+        let mut argmax = 0usize;
+        for (ci, &v) in row.iter().enumerate() {
+            if v > m {
+                m = v;
+                argmax = ci;
+            }
+        }
+        let mut z = 0f32;
+        for &v in row.iter() {
+            z += (v - m).exp();
+        }
+        let logz = z.ln() + m;
+        let label = y[bi] as usize;
+        loss_sum += (logz - row[label]) as f64;
+        if argmax == label {
+            correct += 1;
+        }
+        let drow = &mut dlogits[bi * classes..(bi + 1) * classes];
+        for (ci, d) in drow.iter_mut().enumerate() {
+            let p = (row[ci] - m).exp() / z;
+            *d = (p - if ci == label { 1.0 } else { 0.0 }) / n as f32;
+        }
+    }
+    ((loss_sum / n as f64) as f32, correct, dlogits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.next_normal()).collect()
+    }
+
+    /// Central-difference gradient check of a scalar loss built from
+    /// the op under test. `f` maps (inputs) -> loss; `analytic` is the
+    /// gradient produced by the backward pass. eps/floor/tol settings
+    /// are tuned for f32 forward passes (FD noise ~1e-4 at this eps).
+    fn gradcheck(name: &str, inputs: &mut [f32], analytic: &[f32], mut f: impl FnMut(&[f32]) -> f64) {
+        let mut rng = Rng::new(0x6C);
+        let checks = inputs.len().min(24);
+        for _ in 0..checks {
+            let i = rng.below(inputs.len() as u64) as usize;
+            let eps = 3e-2f32;
+            let orig = inputs[i];
+            inputs[i] = orig + eps;
+            let lp = f(inputs);
+            inputs[i] = orig - eps;
+            let lm = f(inputs);
+            inputs[i] = orig;
+            let numeric = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            let diff = (numeric - analytic[i]).abs();
+            let scale = numeric.abs().max(analytic[i].abs()).max(3e-2);
+            assert!(
+                diff / scale < 0.05,
+                "{name}[{i}]: numeric {numeric} vs analytic {}",
+                analytic[i]
+            );
+        }
+    }
+
+    /// Weighted-sum loss so cotangents are non-trivial but known.
+    fn wsum(v: &[f32]) -> (f64, Vec<f32>) {
+        let mut l = 0f64;
+        let mut g = vec![0f32; v.len()];
+        for (i, &x) in v.iter().enumerate() {
+            let wgt = ((i % 7) as f32 - 3.0) * 0.25;
+            l += (x * wgt) as f64;
+            g[i] = wgt;
+        }
+        (l, g)
+    }
+
+    #[test]
+    fn conv_gradcheck() {
+        let (n, h, w, cin, cout) = (2, 4, 4, 3, 5);
+        let mut rng = Rng::new(1);
+        let mut x = randv(&mut rng, n * h * w * cin);
+        let mut wt = randv(&mut rng, 9 * cin * cout);
+        let out = conv3x3_fwd(&x, n, h, w, cin, &wt, cout);
+        let (_, g) = wsum(&out);
+        let (dx, dw) = conv3x3_bwd(&x, n, h, w, cin, &wt, cout, &g);
+        let wt2 = wt.clone();
+        gradcheck("conv/dx", &mut x, &dx, |xs| {
+            wsum(&conv3x3_fwd(xs, n, h, w, cin, &wt2, cout)).0
+        });
+        let x2 = x.clone();
+        gradcheck("conv/dw", &mut wt, &dw, |ws| {
+            wsum(&conv3x3_fwd(&x2, n, h, w, cin, ws, cout)).0
+        });
+    }
+
+    #[test]
+    fn bn_gradcheck() {
+        let (rows, c) = (32, 4);
+        let mut rng = Rng::new(2);
+        let mut x = randv(&mut rng, rows * c);
+        let mut gamma: Vec<f32> = (0..c).map(|i| 1.0 + 0.1 * i as f32).collect();
+        let beta = randv(&mut rng, c);
+        let rm = vec![0f32; c];
+        let rv = vec![1f32; c];
+        let run = |xs: &[f32], gm: &[f32]| {
+            let (out, _, _, _) = bn_fwd(xs, rows, c, gm, &beta, &rm, &rv, true);
+            wsum(&out).0
+        };
+        let (out, _, _, cache) = bn_fwd(&x, rows, c, &gamma, &beta, &rm, &rv, true);
+        let (_, g) = wsum(&out);
+        let (dx, dgamma, _dbeta) = bn_bwd(&x, &g, rows, c, &gamma, &cache);
+        let gamma2 = gamma.clone();
+        gradcheck("bn/dx", &mut x, &dx, |xs| run(xs, &gamma2));
+        let x2 = x.clone();
+        gradcheck("bn/dgamma", &mut gamma, &dgamma, |gm| run(&x2, gm));
+    }
+
+    #[test]
+    fn bn_eval_uses_running_stats() {
+        let (rows, c) = (8, 2);
+        let mut rng = Rng::new(3);
+        let x = randv(&mut rng, rows * c);
+        let gamma = vec![1f32; c];
+        let beta = vec![0f32; c];
+        let rm = vec![0.5f32; c];
+        let rv = vec![2.0f32; c];
+        let (out, nrm, nrv, _) = bn_fwd(&x, rows, c, &gamma, &beta, &rm, &rv, false);
+        assert_eq!(nrm, rm, "eval must not touch running stats");
+        assert_eq!(nrv, rv);
+        let inv = 1.0 / (2.0f32 + BN_EPS).sqrt();
+        assert!((out[0] - (x[0] - 0.5) * inv).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bn_train_updates_running_stats() {
+        let (rows, c) = (64, 1);
+        let mut rng = Rng::new(4);
+        let x: Vec<f32> = (0..rows).map(|_| 3.0 + rng.next_normal()).collect();
+        let (_, nrm, nrv, _) =
+            bn_fwd(&x, rows, c, &[1.0], &[0.0], &[0.0], &[1.0], true);
+        // torch-style: running <- 0.9*running + 0.1*batch.
+        assert!(nrm[0] > 0.2 && nrm[0] < 0.4, "rm {}", nrm[0]);
+        assert!(nrv[0] > 0.9, "rv {}", nrv[0]);
+    }
+
+    #[test]
+    fn maxpool_routes_gradient_to_argmax() {
+        let (n, h, w, c) = (1, 4, 4, 1);
+        let mut x = vec![0f32; 16];
+        x[5] = 7.0; // window (0,0) interior max at (1,1)
+        x[2] = 3.0; // window (0,1) max at (0,2) -> arg 0
+        let (out, arg) = maxpool2_fwd(&x, n, h, w, c);
+        assert_eq!(out[0], 7.0);
+        assert_eq!(arg[0], 3);
+        assert_eq!(out[1], 3.0);
+        assert_eq!(arg[1], 0);
+        let g = vec![1f32, 2.0, 3.0, 4.0];
+        let dx = maxpool2_bwd(&g, &arg, n, h, w, c);
+        assert_eq!(dx[5], 1.0);
+        assert_eq!(dx[2], 2.0);
+        assert_eq!(dx.iter().filter(|&&v| v != 0.0).count(), 4);
+    }
+
+    #[test]
+    fn maxpool_tie_breaks_to_first() {
+        let x = vec![2f32, 2.0, 2.0, 2.0];
+        let (_, arg) = maxpool2_fwd(&x, 1, 2, 2, 1);
+        assert_eq!(arg[0], 0, "ties go to the first scanned element");
+    }
+
+    #[test]
+    fn gap_roundtrip() {
+        let (n, h, w, c) = (2, 2, 2, 3);
+        let mut rng = Rng::new(5);
+        let x = randv(&mut rng, n * h * w * c);
+        let out = gap_fwd(&x, n, h, w, c);
+        let manual: f32 = (0..4).map(|p| x[p * c]).sum::<f32>() / 4.0;
+        assert!((out[0] - manual).abs() < 1e-6);
+        let g: Vec<f32> = (0..n * c).map(|i| i as f32).collect();
+        let dx = gap_bwd(&g, n, h, w, c);
+        assert!((dx[0] - 0.0).abs() < 1e-7);
+        assert!((dx[c] - 0.0).abs() < 1e-7);
+        assert!((dx[1] - 0.25).abs() < 1e-7, "g=1 spread over 4 pixels");
+    }
+
+    #[test]
+    fn dense_gradcheck() {
+        let (n, cin, cout) = (4, 6, 5);
+        let mut rng = Rng::new(6);
+        let mut x = randv(&mut rng, n * cin);
+        let mut w = randv(&mut rng, cin * cout);
+        let b = randv(&mut rng, cout);
+        let out = dense_fwd(&x, n, cin, &w, cout, &b);
+        let (_, g) = wsum(&out);
+        let (dx, dw, db) = dense_bwd(&x, n, cin, &w, cout, &g);
+        let w2 = w.clone();
+        let b2 = b.clone();
+        gradcheck("dense/dx", &mut x, &dx, |xs| {
+            wsum(&dense_fwd(xs, n, cin, &w2, cout, &b2)).0
+        });
+        let x2 = x.clone();
+        gradcheck("dense/dw", &mut w, &dw, |ws| {
+            wsum(&dense_fwd(&x2, n, cin, ws, cout, &b2)).0
+        });
+        // db is the column sum of g.
+        for co in 0..cout {
+            let want: f32 = (0..n).map(|bi| g[bi * cout + co]).sum();
+            assert!((db[co] - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn softmax_ce_gradcheck_and_counts() {
+        let (n, classes) = (6, 4);
+        let mut rng = Rng::new(7);
+        let mut logits = randv(&mut rng, n * classes);
+        let y: Vec<i32> = (0..n).map(|i| (i % classes) as i32).collect();
+        let (loss, correct, dlogits) = softmax_ce(&logits, &y, n, classes);
+        assert!(loss > 0.0 && loss.is_finite());
+        assert!((0..=n as i64).contains(&correct));
+        gradcheck("ce/dlogits", &mut logits, &dlogits, |ls| {
+            softmax_ce(ls, &y, n, classes).0 as f64
+        });
+        // Perfect logits -> full correct count, tiny loss.
+        let mut perfect = vec![0f32; n * classes];
+        for (bi, &label) in y.iter().enumerate() {
+            perfect[bi * classes + label as usize] = 30.0;
+        }
+        let (l2, c2, _) = softmax_ce(&perfect, &y, n, classes);
+        assert_eq!(c2, n as i64);
+        assert!(l2 < 1e-6);
+    }
+
+    #[test]
+    fn conv_zero_padding_at_borders() {
+        // A single centered weight (identity kernel) must reproduce x.
+        let (n, h, w, cin, cout) = (1, 3, 3, 1, 1);
+        let x: Vec<f32> = (1..=9).map(|v| v as f32).collect();
+        let mut wt = vec![0f32; 9];
+        wt[4] = 1.0; // (ky=1, kx=1)
+        let out = conv3x3_fwd(&x, n, h, w, cin, &wt, cout);
+        assert_eq!(out, x);
+        // A corner weight reads the zero-padded halo at the borders.
+        let mut wt2 = vec![0f32; 9];
+        wt2[0] = 1.0; // (ky=0, kx=0) -> reads (y-1, x-1)
+        let out2 = conv3x3_fwd(&x, n, h, w, cin, &wt2, cout);
+        assert_eq!(out2[0], 0.0, "top-left reads the halo");
+        assert_eq!(out2[4], 1.0, "center reads x[0,0]");
+    }
+}

@@ -1,0 +1,227 @@
+//! Precision emulation for the native backend — the pure-Rust port of
+//! `python/compile/kernels/ref.py::qdq_ref`.
+//!
+//! * FP16: exact IEEE binary16 round-trip (round-to-nearest-even,
+//!   subnormals preserved, overflow to ±inf) via bit manipulation —
+//!   matches `x.astype(float16).astype(float32)` bit-for-bit.
+//! * BF16: round-to-nearest-even on the top 16 bits — matches
+//!   `x.astype(bfloat16).astype(float32)` bit-for-bit.
+//! * FP32: identity.
+//!
+//! The backward-pass contract mirrors the Pallas kernels' custom VJPs:
+//! cotangents flowing out of a layer at precision p are themselves
+//! rounded to p (see `qdq.py` / `mp_matmul.py`), which is what makes
+//! FP16 overflow observable as non-finite gradients.
+
+use crate::manifest::{BF16, FP16};
+
+/// 2^-24 as f32 — the value of one binary16 subnormal ULP.
+const F16_SUBNORMAL_ULP: f32 = 5.960_464_5e-8;
+
+/// Round-trip one f32 through IEEE binary16 (RNE, saturating to inf).
+pub fn f16_qdq(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+/// f32 -> binary16 bits with round-to-nearest-even.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let mant = bits & 0x007F_FFFF;
+    if exp == 0xFF {
+        // inf / NaN (canonical quiet-NaN payload).
+        return sign | 0x7C00 | if mant != 0 { 0x0200 } else { 0 };
+    }
+    let e = exp - 127;
+    if e >= 16 {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if e >= -14 {
+        // Normal half; RNE on the 13 dropped mantissa bits. A mantissa
+        // carry naturally increments the exponent (and can round the
+        // largest normals up to inf, which is correct RNE).
+        let m = (mant >> 13) as u16;
+        let rem = mant & 0x1FFF;
+        let mut h = (((e + 15) as u16) << 10) | m;
+        if rem > 0x1000 || (rem == 0x1000 && (m & 1) == 1) {
+            h += 1;
+        }
+        return sign | h;
+    }
+    if e < -25 {
+        return sign; // underflow to signed zero
+    }
+    // Subnormal half: value = round(1.mant * 2^(e+24)) * 2^-24.
+    let m = mant | 0x0080_0000;
+    let shift = (-e - 1) as u32; // 14..=24
+    let sub = (m >> shift) as u16;
+    let rem = m & ((1u32 << shift) - 1);
+    let half = 1u32 << (shift - 1);
+    let mut h = sub;
+    if rem > half || (rem == half && (sub & 1) == 1) {
+        h += 1;
+    }
+    sign | h
+}
+
+/// binary16 bits -> f32 (exact widening).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let mant = (h & 0x03FF) as u32;
+    if exp == 0x1F {
+        return f32::from_bits(sign | 0x7F80_0000 | (mant << 13));
+    }
+    if exp == 0 {
+        if mant == 0 {
+            return f32::from_bits(sign); // signed zero
+        }
+        let v = mant as f32 * F16_SUBNORMAL_ULP;
+        return if sign != 0 { -v } else { v };
+    }
+    f32::from_bits(sign | ((exp + 112) << 23) | (mant << 13))
+}
+
+/// Round-trip one f32 through bfloat16 (RNE on the top 16 bits).
+pub fn bf16_qdq(x: f32) -> f32 {
+    if x.is_nan() {
+        return x;
+    }
+    let bits = x.to_bits();
+    let round = ((bits >> 16) & 1).wrapping_add(0x7FFF);
+    f32::from_bits(bits.wrapping_add(round) & 0xFFFF_0000)
+}
+
+/// Quantize-dequantize one scalar through the precision named by `code`.
+#[inline]
+pub fn qdq1(x: f32, code: i32) -> f32 {
+    match code {
+        FP16 => f16_qdq(x),
+        BF16 => bf16_qdq(x),
+        _ => x,
+    }
+}
+
+/// Quantize-dequantize a slice into a fresh vector.
+pub fn qdq(x: &[f32], code: i32) -> Vec<f32> {
+    match code {
+        FP16 => x.iter().map(|&v| f16_qdq(v)).collect(),
+        BF16 => x.iter().map(|&v| bf16_qdq(v)).collect(),
+        _ => x.to_vec(),
+    }
+}
+
+/// In-place quantize-dequantize.
+pub fn qdq_inplace(x: &mut [f32], code: i32) {
+    match code {
+        FP16 => {
+            for v in x.iter_mut() {
+                *v = f16_qdq(*v);
+            }
+        }
+        BF16 => {
+            for v in x.iter_mut() {
+                *v = bf16_qdq(*v);
+            }
+        }
+        _ => {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::FP32;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fp32_is_identity() {
+        let v = [1.0f32, -2.5, 1e-30, f32::INFINITY];
+        assert_eq!(qdq(&v, FP32), v.to_vec());
+    }
+
+    #[test]
+    fn f16_known_values() {
+        // Exactly representable values pass through.
+        for v in [0.0f32, -0.0, 1.0, -2.0, 0.5, 65504.0, -65504.0] {
+            assert_eq!(f16_qdq(v), v, "{v}");
+        }
+        // Half max is 65504; the RNE boundary to inf is 65520.
+        assert_eq!(f16_qdq(65519.9), 65504.0);
+        assert_eq!(f16_qdq(65520.0), f32::INFINITY);
+        assert_eq!(f16_qdq(-65520.0), f32::NEG_INFINITY);
+        assert_eq!(f16_qdq(1e30), f32::INFINITY);
+        // Smallest subnormal half is 2^-24; below 2^-25 flushes to 0.
+        assert_eq!(f16_qdq(5.960_464_5e-8), 5.960_464_5e-8);
+        assert_eq!(f16_qdq(2.0f32.powi(-26)), 0.0);
+        // 2^-25 is exactly halfway between 0 and one ULP: ties to even (0).
+        assert_eq!(f16_qdq(2.0f32.powi(-25)), 0.0);
+        assert!(f16_qdq(f32::NAN).is_nan());
+        assert_eq!(f16_qdq(f32::INFINITY), f32::INFINITY);
+    }
+
+    #[test]
+    fn f16_rne_tie_to_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and 1.0+2^-10 in
+        // half precision; RNE picks the even mantissa (1.0).
+        let tie = 1.0 + 2.0f32.powi(-11);
+        assert_eq!(f16_qdq(tie), 1.0);
+        // 1 + 3*2^-11 is halfway between odd 1+2^-10 and even 1+2^-9.
+        let tie2 = 1.0 + 3.0 * 2.0f32.powi(-11);
+        assert_eq!(f16_qdq(tie2), 1.0 + 2.0f32.powi(-9));
+    }
+
+    #[test]
+    fn bf16_known_values() {
+        for v in [0.0f32, -0.0, 1.0, -2.0, 0.5] {
+            assert_eq!(bf16_qdq(v), v, "{v}");
+        }
+        // bf16 has an 8-bit mantissa: 1 + 2^-9 is halfway, ties to even.
+        assert_eq!(bf16_qdq(1.0 + 2.0f32.powi(-9)), 1.0);
+        assert_eq!(bf16_qdq(1.0 + 3.0 * 2.0f32.powi(-9)), 1.0 + 2.0f32.powi(-7));
+        assert_eq!(bf16_qdq(f32::MAX), f32::INFINITY, "RNE overflow");
+        assert_eq!(bf16_qdq(f32::INFINITY), f32::INFINITY);
+        assert_eq!(bf16_qdq(f32::NEG_INFINITY), f32::NEG_INFINITY);
+        assert!(bf16_qdq(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn qdq_is_idempotent() {
+        let mut rng = Rng::new(7);
+        for _ in 0..2000 {
+            let v = rng.next_normal() * 10f32.powi((rng.below(12) as i32) - 6);
+            for code in [FP16, BF16] {
+                let once = qdq1(v, code);
+                assert_eq!(qdq1(once, code), once, "code {code} v {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantization_error_bounded() {
+        let mut rng = Rng::new(9);
+        for _ in 0..2000 {
+            let v = rng.next_normal();
+            let e16 = (f16_qdq(v) - v).abs();
+            let eb = (bf16_qdq(v) - v).abs();
+            // Relative ULP bounds: 2^-11 for fp16, 2^-8 for bf16.
+            assert!(e16 <= v.abs() * 4.9e-4 + 1e-7, "fp16 {v} err {e16}");
+            assert!(eb <= v.abs() * 4e-3 + 1e-7, "bf16 {v} err {eb}");
+            // bf16 is coarser than fp16 in the normal range.
+        }
+    }
+
+    #[test]
+    fn roundtrip_monotone() {
+        // Quantization must preserve ordering.
+        let mut rng = Rng::new(3);
+        for _ in 0..1000 {
+            let a = rng.next_normal();
+            let b = rng.next_normal();
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            assert!(f16_qdq(lo) <= f16_qdq(hi));
+            assert!(bf16_qdq(lo) <= bf16_qdq(hi));
+        }
+    }
+}

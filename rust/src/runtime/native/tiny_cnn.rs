@@ -1,0 +1,580 @@
+//! The `tiny_cnn` model for the native backend — a pure-Rust port of
+//! `python/compile/models/tiny_cnn.py` + `train_graph.py` semantics:
+//!
+//! * forward: [conv3×3 → BN → ReLU → maxpool2]×2 → conv3×3 → BN → ReLU
+//!   → global-avg-pool → dense head; each conv/dense consumes one entry
+//!   of the runtime `codes` vector (weights + input activations rounded
+//!   through qdq / mp_matmul, BN always fp32);
+//! * backward: hand-written reverse pass with the Pallas kernels' VJP
+//!   contract (cotangents re-quantized at each precision layer);
+//! * train step: loss-scaled grads, overflow detection (any non-finite
+//!   grad skips the whole update and holds BN state), per-layer
+//!   grad-variance/norm stats, fused SGD+momentum with weight decay and
+//!   per-layer LR scales;
+//! * curv step: block-diagonal Hessian-vector products via per-layer
+//!   central-difference of the gradient (one power-iteration step per
+//!   firing, probe vectors normalized per layer) — the strict-block
+//!   variant of `curv_graph.py`.
+//!
+//! Parameter order (the manifest contract): conv{1,2,3}/w, bn{1,2,3}
+//! gamma+beta interleaved per block, then head/w, head/b. BN state is
+//! [rm, rv] per block, zeros/ones initialized.
+
+#![allow(clippy::too_many_arguments)]
+
+use anyhow::Result;
+
+use super::ops::{self, BnCache};
+use super::qdq;
+use crate::manifest::ModelEntry;
+use crate::runtime::backend::ModelState;
+use crate::runtime::{Batch, EvalResult, StepCtrl, TrainOutputs};
+use crate::util::rng::Rng;
+
+/// Conv-block output channels.
+pub const CHANNELS: [usize; 3] = [16, 32, 64];
+/// Spatial side length at the input of each conv block.
+const DIMS: [usize; 3] = [32, 16, 8];
+/// Dense-head input features (= last conv channels after GAP).
+const FEATURES: usize = 64;
+/// SGD momentum (kernels/ref.py::SGD_MOMENTUM).
+const MOMENTUM: f32 = 0.9;
+/// Number of flat parameter tensors.
+const N_PARAMS: usize = 11;
+
+/// Forward-pass caches consumed by [`backward`].
+struct Fwd {
+    /// Quantized conv inputs, per conv block.
+    xq: Vec<Vec<f32>>,
+    /// Quantized conv weights, per conv block.
+    wq: Vec<Vec<f32>>,
+    /// Conv outputs (BN inputs), per conv block.
+    conv_out: Vec<Vec<f32>>,
+    /// BN statistics, per conv block.
+    bn: Vec<BnCache>,
+    /// BN outputs (ReLU pre-activations), per conv block.
+    bn_out: Vec<Vec<f32>>,
+    /// Max-pool argmax maps for blocks 0 and 1.
+    arg: Vec<Vec<u8>>,
+    /// Quantized dense input / weight.
+    head_xq: Vec<f32>,
+    head_wq: Vec<f32>,
+    /// Cotangent of the (unscaled) mean loss w.r.t. the logits.
+    dlogits: Vec<f32>,
+    /// Updated BN running stats (train mode).
+    new_state: Vec<Vec<f32>>,
+    loss: f32,
+    correct: i64,
+}
+
+fn forward(
+    entry: &ModelEntry,
+    params: &[Vec<f32>],
+    state: &[Vec<f32>],
+    x: &[f32],
+    y: &[i32],
+    n: usize,
+    codes: &[i32],
+    train: bool,
+) -> Fwd {
+    debug_assert_eq!(params.len(), N_PARAMS);
+    let classes = entry.num_classes;
+    let mut h = x.to_vec();
+    let mut cin = 3usize;
+    let mut xq_v = Vec::with_capacity(3);
+    let mut wq_v = Vec::with_capacity(3);
+    let mut conv_v = Vec::with_capacity(3);
+    let mut bn_v = Vec::with_capacity(3);
+    let mut bn_out_v = Vec::with_capacity(3);
+    let mut arg_v = Vec::with_capacity(2);
+    let mut new_state = Vec::with_capacity(6);
+    for li in 0..3 {
+        let dim = DIMS[li];
+        let cout = CHANNELS[li];
+        let code = codes[li];
+        let hq = qdq::qdq(&h, code);
+        let wq = qdq::qdq(&params[li * 3], code);
+        let conv = ops::conv3x3_fwd(&hq, n, dim, dim, cin, &wq, cout);
+        let rows = n * dim * dim;
+        let (bn_out, nrm, nrv, cache) = ops::bn_fwd(
+            &conv,
+            rows,
+            cout,
+            &params[li * 3 + 1],
+            &params[li * 3 + 2],
+            &state[li * 2],
+            &state[li * 2 + 1],
+            train,
+        );
+        new_state.push(nrm);
+        new_state.push(nrv);
+        let mut r = bn_out.clone();
+        ops::relu_inplace(&mut r);
+        if li < 2 {
+            let (pool, arg) = ops::maxpool2_fwd(&r, n, dim, dim, cout);
+            arg_v.push(arg);
+            h = pool;
+        } else {
+            h = ops::gap_fwd(&r, n, dim, dim, cout);
+        }
+        xq_v.push(hq);
+        wq_v.push(wq);
+        conv_v.push(conv);
+        bn_v.push(cache);
+        bn_out_v.push(bn_out);
+        cin = cout;
+    }
+    let code = codes[3];
+    let head_xq = qdq::qdq(&h, code);
+    let head_wq = qdq::qdq(&params[9], code);
+    let logits = ops::dense_fwd(&head_xq, n, FEATURES, &head_wq, classes, &params[10]);
+    let (loss, correct, dlogits) = ops::softmax_ce(&logits, y, n, classes);
+    Fwd {
+        xq: xq_v,
+        wq: wq_v,
+        conv_out: conv_v,
+        bn: bn_v,
+        bn_out: bn_out_v,
+        arg: arg_v,
+        head_xq,
+        head_wq,
+        dlogits,
+        new_state,
+        loss,
+        correct,
+    }
+}
+
+/// Reverse pass: returns the 11 parameter gradients of the *unscaled*
+/// mean loss (the loss-scale round-trip is exact for 2^k scales).
+fn backward(
+    entry: &ModelEntry,
+    fwd: &Fwd,
+    params: &[Vec<f32>],
+    codes: &[i32],
+    loss_scale: f32,
+    n: usize,
+) -> Vec<Vec<f32>> {
+    let classes = entry.num_classes;
+    let mut grads: Vec<Vec<f32>> = vec![Vec::new(); N_PARAMS];
+
+    // Seed with the cotangent of the scaled loss.
+    let g_logits: Vec<f32> = fwd.dlogits.iter().map(|&v| v * loss_scale).collect();
+
+    // Dense head (mp_matmul VJP): dx/dw see the quantized cotangent,
+    // the bias grad sits outside the kernel and sees the raw one.
+    let gq = qdq::qdq(&g_logits, codes[3]);
+    let (dx_head, dw_head, _) =
+        ops::dense_bwd(&fwd.head_xq, n, FEATURES, &fwd.head_wq, classes, &gq);
+    let mut db = vec![0f32; classes];
+    for bi in 0..n {
+        for (co, d) in db.iter_mut().enumerate() {
+            *d += g_logits[bi * classes + co];
+        }
+    }
+    grads[9] = dw_head;
+    grads[10] = db;
+
+    let mut g = dx_head;
+    for li in (0..3).rev() {
+        let dim = DIMS[li];
+        let cout = CHANNELS[li];
+        let cin = if li == 0 { 3 } else { CHANNELS[li - 1] };
+        let mut gs = if li == 2 {
+            ops::gap_bwd(&g, n, dim, dim, cout)
+        } else {
+            ops::maxpool2_bwd(&g, &fwd.arg[li], n, dim, dim, cout)
+        };
+        ops::relu_bwd_inplace(&mut gs, &fwd.bn_out[li]);
+        let rows = n * dim * dim;
+        let (dxbn, dgamma, dbeta) = ops::bn_bwd(
+            &fwd.conv_out[li],
+            &gs,
+            rows,
+            cout,
+            &params[li * 3 + 1],
+            &fwd.bn[li],
+        );
+        let (dxq, dwq) =
+            ops::conv3x3_bwd(&fwd.xq[li], n, dim, dim, cin, &fwd.wq[li], cout, &dxbn);
+        // qdq VJP: cotangents are rounded to the layer's precision.
+        grads[li * 3] = qdq::qdq(&dwq, codes[li]);
+        grads[li * 3 + 1] = dgamma;
+        grads[li * 3 + 2] = dbeta;
+        g = qdq::qdq(&dxq, codes[li]);
+    }
+
+    // Unscale (exact for power-of-two loss scales).
+    let inv = 1.0 / loss_scale;
+    for gvec in grads.iter_mut() {
+        for v in gvec.iter_mut() {
+            *v *= inv;
+        }
+    }
+    grads
+}
+
+/// Per-precision-layer (variance, Σg²) of the parameter gradients,
+/// mirroring `train_graph._per_layer_grad_stats`. NaN/inf gradients
+/// propagate into the stats (the controller ignores non-finite values).
+fn layer_stats(entry: &ModelEntry, grads: &[Vec<f32>]) -> (Vec<f32>, Vec<f32>) {
+    let l_count = entry.num_layers;
+    let mut sum = vec![0f64; l_count];
+    let mut sq = vec![0f64; l_count];
+    let mut count = vec![0usize; l_count];
+    for (spec, g) in entry.params.iter().zip(grads) {
+        if spec.layer_idx < 0 {
+            continue;
+        }
+        let li = spec.layer_idx as usize;
+        for &v in g {
+            sum[li] += v as f64;
+            sq[li] += (v as f64) * (v as f64);
+        }
+        count[li] += g.len();
+    }
+    let mut var = Vec::with_capacity(l_count);
+    let mut norm = Vec::with_capacity(l_count);
+    for li in 0..l_count {
+        let cnt = count[li].max(1) as f64;
+        let mean = sum[li] / cnt;
+        let raw = sq[li] / cnt - mean * mean;
+        // Clamp round-off below zero but let NaN through (overflow
+        // steps must not report a fake zero variance).
+        let v = if raw.is_nan() { f64::NAN } else { raw.max(0.0) };
+        var.push(v as f32);
+        norm.push(sq[li] as f32);
+    }
+    (var, norm)
+}
+
+/// Seed-deterministic parameter/state materialization (he-normal convs,
+/// kaiming-uniform dense, unit gammas, zero betas/bias; BN running
+/// stats start at (0, 1)). Each tensor draws from its own RNG stream,
+/// so the init is independent of evaluation order.
+pub fn init(entry: &ModelEntry, seed: i32) -> Result<ModelState> {
+    let base = seed as i64 as u64;
+    let mut params = Vec::with_capacity(entry.params.len());
+    for (i, spec) in entry.params.iter().enumerate() {
+        let mut rng = Rng::stream(base, 0x1817 ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let v: Vec<f32> = if spec.shape.len() == 4 {
+            // conv kernel: he_normal, fan_in = k*k*cin.
+            let fan_in = (spec.shape[0] * spec.shape[1] * spec.shape[2]).max(1);
+            let s = (2.0 / fan_in as f64).sqrt() as f32;
+            (0..spec.elems).map(|_| rng.next_normal() * s).collect()
+        } else if spec.shape.len() == 2 {
+            // dense kernel: uniform(-1/sqrt(fan_in), 1/sqrt(fan_in)).
+            let bound = 1.0 / (spec.shape[0].max(1) as f32).sqrt();
+            (0..spec.elems)
+                .map(|_| -bound + rng.next_f32() * (2.0 * bound))
+                .collect()
+        } else if spec.name.ends_with("gamma") {
+            vec![1.0; spec.elems]
+        } else {
+            vec![0.0; spec.elems] // beta / bias
+        };
+        params.push(v);
+    }
+    let mom = entry.params.iter().map(|p| vec![0f32; p.elems]).collect();
+    // BN state interleaves [running_mean, running_var] per block.
+    let state = entry
+        .state_shapes
+        .iter()
+        .enumerate()
+        .map(|(i, shape)| {
+            let elems: usize = shape.iter().product();
+            if i % 2 == 0 {
+                vec![0f32; elems]
+            } else {
+                vec![1f32; elems]
+            }
+        })
+        .collect();
+    Ok(ModelState { params, mom, state })
+}
+
+/// One fused SGD+momentum training step (train_graph.py semantics).
+pub fn train_step(
+    entry: &ModelEntry,
+    st: &mut ModelState,
+    batch: &Batch,
+    ctrl: &StepCtrl,
+) -> Result<TrainOutputs> {
+    let n = batch.n;
+    let fwd = forward(entry, &st.params, &st.state, &batch.x, &batch.y, n, &ctrl.codes, true);
+    let grads = backward(entry, &fwd, &st.params, &ctrl.codes, ctrl.loss_scale, n);
+    let overflow = grads.iter().any(|g| g.iter().any(|v| !v.is_finite()));
+    let (grad_var, grad_norm) = layer_stats(entry, &grads);
+
+    // Fused update with the overflow gate as a runtime mask: an
+    // overflowed step leaves params, momentum, and BN state untouched.
+    let mask = if overflow { 0f32 } else { 1f32 };
+    for (i, spec) in entry.params.iter().enumerate() {
+        let scale = if spec.layer_idx >= 0 {
+            ctrl.lr_scales[spec.layer_idx as usize]
+        } else {
+            1.0
+        };
+        let lr_eff = ctrl.lr * scale;
+        let p = &mut st.params[i];
+        let m = &mut st.mom[i];
+        let g = &grads[i];
+        for k in 0..p.len() {
+            let g_eff = (g[k] + ctrl.weight_decay * p[k]) * mask;
+            let m_new = MOMENTUM * m[k] + g_eff;
+            let m_out = if mask > 0.5 { m_new } else { m[k] };
+            p[k] -= lr_eff * mask * m_out;
+            m[k] = m_out;
+        }
+    }
+    if !overflow {
+        st.state = fwd.new_state;
+    }
+    Ok(TrainOutputs {
+        loss: fwd.loss,
+        correct: fwd.correct,
+        grad_var,
+        grad_norm,
+        overflow,
+    })
+}
+
+/// Eval with running-stat BN (codes honoured, state untouched).
+pub fn eval_batch(
+    entry: &ModelEntry,
+    st: &ModelState,
+    batch: &Batch,
+    codes: &[i32],
+) -> Result<EvalResult> {
+    let fwd = forward(entry, &st.params, &st.state, &batch.x, &batch.y, batch.n, codes, false);
+    Ok(EvalResult {
+        loss: fwd.loss,
+        correct: fwd.correct,
+        total: batch.n,
+    })
+}
+
+/// Relative step size of the central-difference HVP probe.
+const FD_EPS_REL: f64 = 1e-2;
+
+/// Gradients of the unscaled train-mode loss at `params`.
+fn grad_at(
+    entry: &ModelEntry,
+    params: &[Vec<f32>],
+    state: &[Vec<f32>],
+    batch: &Batch,
+    codes: &[i32],
+) -> Vec<Vec<f32>> {
+    let fwd = forward(entry, params, state, &batch.x, &batch.y, batch.n, codes, true);
+    backward(entry, &fwd, params, codes, 1.0, batch.n)
+}
+
+/// One amortized power-iteration step per precision layer:
+/// block-diagonal HVP `H_l u_l` via a per-layer central difference of
+/// the gradient, Rayleigh quotient `λ_l`, and normalized next probe
+/// written back into `probes` (curv_graph.py strict-block semantics).
+pub fn curv_step(
+    entry: &ModelEntry,
+    st: &ModelState,
+    batch: &Batch,
+    probes: &mut [Vec<f32>],
+    codes: &[i32],
+) -> Result<Vec<f32>> {
+    let l_count = entry.num_layers;
+    let mut lambdas = vec![0f32; l_count];
+    for li in 0..l_count {
+        let idxs: Vec<usize> = entry
+            .params
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.layer_idx == li as i64)
+            .map(|(i, _)| i)
+            .collect();
+        let un: f64 = idxs
+            .iter()
+            .map(|&i| probes[i].iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>())
+            .sum::<f64>()
+            .sqrt();
+        if un < 1e-12 {
+            continue; // degenerate probe — λ stays 0, probe untouched
+        }
+        let tn: f64 = idxs
+            .iter()
+            .map(|&i| st.params[i].iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>())
+            .sum::<f64>()
+            .sqrt();
+        let eps = (FD_EPS_REL * (tn + 1.0) / un) as f32;
+
+        let mut pp = st.params.clone();
+        let mut pm = st.params.clone();
+        for &i in &idxs {
+            for k in 0..pp[i].len() {
+                let d = eps * probes[i][k];
+                pp[i][k] += d;
+                pm[i][k] -= d;
+            }
+        }
+        let gp = grad_at(entry, &pp, &st.state, batch, codes);
+        let gm = grad_at(entry, &pm, &st.state, batch, codes);
+
+        let inv2e = 1.0 / (2.0 * eps);
+        let mut num = 0f64;
+        let mut den = 0f64;
+        let mut hn2 = 0f64;
+        let mut hu: Vec<(usize, Vec<f32>)> = Vec::with_capacity(idxs.len());
+        for &i in &idxs {
+            let h: Vec<f32> = gp[i]
+                .iter()
+                .zip(gm[i].iter())
+                .map(|(&a, &b)| (a - b) * inv2e)
+                .collect();
+            for (k, &hv) in h.iter().enumerate() {
+                num += probes[i][k] as f64 * hv as f64;
+                den += (probes[i][k] as f64) * (probes[i][k] as f64);
+                hn2 += (hv as f64) * (hv as f64);
+            }
+            hu.push((i, h));
+        }
+        let hn = hn2.sqrt() + 1e-12;
+        lambdas[li] = (num / (den + 1e-12)) as f32;
+        for (i, h) in hu {
+            probes[i] = h.iter().map(|&v| (v as f64 / hn) as f32).collect();
+        }
+    }
+    Ok(lambdas)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::{FP16, FP32};
+    use crate::runtime::native::builtin_manifest;
+
+    fn entry() -> ModelEntry {
+        builtin_manifest().model("tiny_cnn_c10").unwrap().clone()
+    }
+
+    fn rand_batch(n: usize, seed: u64) -> Batch {
+        let mut rng = Rng::new(seed);
+        let x: Vec<f32> = (0..n * 32 * 32 * 3).map(|_| rng.next_normal()).collect();
+        let y: Vec<i32> = (0..n).map(|_| rng.below(10) as i32).collect();
+        Batch::new(x, y)
+    }
+
+    #[test]
+    fn init_shapes_match_manifest() {
+        let e = entry();
+        let st = init(&e, 3).unwrap();
+        assert_eq!(st.params.len(), e.params.len());
+        for (p, spec) in st.params.iter().zip(&e.params) {
+            assert_eq!(p.len(), spec.elems, "{}", spec.name);
+        }
+        assert_eq!(st.state.len(), e.state_shapes.len());
+        // gammas one, betas zero, running stats (0, 1).
+        assert!(st.params[1].iter().all(|&v| v == 1.0), "gamma");
+        assert!(st.params[2].iter().all(|&v| v == 0.0), "beta");
+        assert!(st.state[0].iter().all(|&v| v == 0.0), "rm");
+        assert!(st.state[1].iter().all(|&v| v == 1.0), "rv");
+        // conv weights have he-normal-ish spread.
+        let w0 = &st.params[0];
+        let norm: f64 = w0.iter().map(|&v| (v as f64).powi(2)).sum::<f64>();
+        assert!(norm > 1.0 && norm < 100.0, "conv1 norm² {norm}");
+    }
+
+    #[test]
+    fn whole_model_gradcheck_fp32() {
+        let e = entry();
+        let mut st = init(&e, 7).unwrap();
+        let b = rand_batch(4, 1);
+        let codes = vec![FP32; 4];
+        let grads = grad_at(&e, &st.params, &st.state, &b, &codes);
+        let loss_at = |params: &[Vec<f32>], st: &ModelState| -> f64 {
+            forward(&e, params, &st.state, &b.x, &b.y, b.n, &codes, true).loss as f64
+        };
+        let mut rng = Rng::new(0xFD);
+        // Spot-check a few components of every parameter tensor.
+        for pi in 0..st.params.len() {
+            for _ in 0..4 {
+                let k = rng.below(st.params[pi].len() as u64) as usize;
+                let eps = 5e-3f32;
+                let orig = st.params[pi][k];
+                st.params[pi][k] = orig + eps;
+                let lp = loss_at(&st.params, &st);
+                st.params[pi][k] = orig - eps;
+                let lm = loss_at(&st.params, &st);
+                st.params[pi][k] = orig;
+                let numeric = ((lp - lm) / (2.0 * eps as f64)) as f32;
+                let analytic = grads[pi][k];
+                let diff = (numeric - analytic).abs();
+                let scale = numeric.abs().max(analytic.abs()).max(3e-2);
+                assert!(
+                    diff / scale < 0.15,
+                    "param {pi}[{k}]: numeric {numeric} vs analytic {analytic}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn overfits_one_batch() {
+        let e = entry();
+        let mut st = init(&e, 1).unwrap();
+        let b = rand_batch(8, 5);
+        let ctrl = StepCtrl::uniform(4, FP32, 0.1, 0.0);
+        let mut first = 0f32;
+        let mut last = TrainOutputs {
+            loss: 0.0,
+            correct: 0,
+            grad_var: vec![],
+            grad_norm: vec![],
+            overflow: false,
+        };
+        for step in 0..40 {
+            last = train_step(&e, &mut st, &b, &ctrl).unwrap();
+            if step == 0 {
+                first = last.loss;
+            }
+        }
+        assert!(
+            last.loss < 0.5 && last.loss < first * 0.5,
+            "no memorization: {first} -> {}",
+            last.loss
+        );
+        assert_eq!(last.correct, 8, "one batch must be memorized");
+    }
+
+    #[test]
+    fn overflow_masks_the_update() {
+        let e = entry();
+        let mut st = init(&e, 2).unwrap();
+        let before = st.clone();
+        let b = rand_batch(8, 9);
+        let mut ctrl = StepCtrl::uniform(4, FP16, 0.05, 0.0);
+        ctrl.loss_scale = 1e30; // cotangents overflow binary16 -> inf
+        let out = train_step(&e, &mut st, &b, &ctrl).unwrap();
+        assert!(out.overflow, "1e30 scale through fp16 must overflow");
+        assert_eq!(st.params, before.params, "params held on overflow");
+        assert_eq!(st.mom, before.mom, "momentum held on overflow");
+        assert_eq!(st.state, before.state, "BN state held on overflow");
+        // A sane scale on the same batch recovers immediately.
+        ctrl.loss_scale = 1024.0;
+        let ok = train_step(&e, &mut st, &b, &ctrl).unwrap();
+        assert!(!ok.overflow);
+        assert_ne!(st.params, before.params, "clean step updates params");
+    }
+
+    #[test]
+    fn grad_stats_have_layer_arity_and_scale() {
+        let e = entry();
+        let mut st = init(&e, 4).unwrap();
+        let b = rand_batch(16, 2);
+        let ctrl = StepCtrl::uniform(4, FP32, 0.05, 5e-4);
+        let out = train_step(&e, &mut st, &b, &ctrl).unwrap();
+        assert_eq!(out.grad_var.len(), 4);
+        assert_eq!(out.grad_norm.len(), 4);
+        assert!(out.grad_var.iter().all(|v| v.is_finite() && *v >= 0.0));
+        assert!(out.grad_norm.iter().all(|v| v.is_finite() && *v >= 0.0));
+        // The dense head sees the largest per-element gradients at init.
+        assert!(out.grad_var[3] > out.grad_var[1]);
+    }
+}

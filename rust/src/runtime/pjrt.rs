@@ -1,0 +1,248 @@
+//! PJRT/XLA backend (`--features pjrt`) — loads the AOT artifacts (HLO
+//! text lowered by `make artifacts`) and executes them on the CPU PJRT
+//! client. This is the only module that touches the external `xla`
+//! crate; enabling the feature requires *adding* that crate to
+//! `[dependencies]` (vendored path or git dep — it is intentionally
+//! undeclared so the hermetic default build never resolves it; see
+//! README "Backends").
+//!
+//! Executables are compiled on first use and cached by (model key,
+//! artifact name): the batch-bucket ladder means the elastic controller
+//! can request a new bucket mid-run and pay the compile exactly once.
+//!
+//! The backend uploads the session's host state to device literals per
+//! call and downloads the outputs — simple and correct; a
+//! device-resident state cache is a later optimization once a real
+//! accelerator backend lands.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use super::backend::{Backend, ModelState};
+use super::{Batch, EvalResult, StepCtrl, TrainOutputs};
+use crate::manifest::{Manifest, ModelEntry};
+
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl PjrtBackend {
+    pub fn new(artifacts_dir: &Path) -> Result<PjrtBackend> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtBackend { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Fetch (compile-on-miss) the executable for `entry`'s artifact.
+    fn executable(&self, entry: &ModelEntry, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        let key = format!("{}::{}", entry.key, name);
+        if let Some(exe) = self.cache.borrow().get(&key) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.artifact_path(entry, name)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {key}"))?,
+        );
+        self.cache.borrow_mut().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    fn batch_literals(batch: &Batch) -> Result<(xla::Literal, xla::Literal)> {
+        let x = xla::Literal::vec1(&batch.x).reshape(&[batch.n as i64, 32, 32, 3])?;
+        let y = xla::Literal::vec1(&batch.y);
+        Ok((x, y))
+    }
+
+    fn tensor_literal(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(data).reshape(&dims)?)
+    }
+
+    /// Execute with borrowed literals and flatten the single tuple result.
+    fn run_refs(
+        exe: &xla::PjRtLoadedExecutable,
+        refs: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let out = exe.execute::<&xla::Literal>(refs)?;
+        anyhow::ensure!(out.len() == 1 && out[0].len() == 1, "expected 1x1 output");
+        let lit = out[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt-cpu"
+    }
+
+    fn supports(&self, entry: &ModelEntry) -> bool {
+        entry.artifacts.contains_key("init")
+    }
+
+    fn init(&self, entry: &ModelEntry, seed: i32) -> Result<ModelState> {
+        let exe = self.executable(entry, "init")?;
+        let seed_lit = xla::Literal::scalar(seed);
+        let outs = Self::run_refs(&exe, &[&seed_lit])?;
+        let n = entry.params.len();
+        let s = entry.state_shapes.len();
+        anyhow::ensure!(outs.len() == n + s, "init output arity {} != {}", outs.len(), n + s);
+        let mut params = Vec::with_capacity(n);
+        let mut state = Vec::with_capacity(s);
+        for (i, lit) in outs.into_iter().enumerate() {
+            let v = lit.to_vec::<f32>()?;
+            if i < n {
+                params.push(v);
+            } else {
+                state.push(v);
+            }
+        }
+        let mom = entry.params.iter().map(|p| vec![0f32; p.elems]).collect();
+        Ok(ModelState { params, mom, state })
+    }
+
+    fn train_step(
+        &self,
+        entry: &ModelEntry,
+        st: &mut ModelState,
+        batch: &Batch,
+        ctrl: &StepCtrl,
+    ) -> Result<TrainOutputs> {
+        let exe = self.executable(entry, &format!("train_b{}", batch.n))?;
+        let (x, y) = Self::batch_literals(batch)?;
+        let mut holders: Vec<xla::Literal> = Vec::new();
+        for (p, spec) in st.params.iter().zip(&entry.params) {
+            holders.push(Self::tensor_literal(p, &spec.shape)?);
+        }
+        for (m, spec) in st.mom.iter().zip(&entry.params) {
+            holders.push(Self::tensor_literal(m, &spec.shape)?);
+        }
+        for (s, shape) in st.state.iter().zip(&entry.state_shapes) {
+            holders.push(Self::tensor_literal(s, shape)?);
+        }
+        let codes = xla::Literal::vec1(&ctrl.codes);
+        let lr_scales = xla::Literal::vec1(&ctrl.lr_scales);
+        let lr = xla::Literal::scalar(ctrl.lr);
+        let ls = xla::Literal::scalar(ctrl.loss_scale);
+        let wd = xla::Literal::scalar(ctrl.weight_decay);
+        let mut refs: Vec<&xla::Literal> = holders.iter().collect();
+        refs.push(&x);
+        refs.push(&y);
+        refs.push(&codes);
+        refs.push(&lr_scales);
+        refs.push(&lr);
+        refs.push(&ls);
+        refs.push(&wd);
+        let outs = Self::run_refs(&exe, &refs)?;
+        let n = entry.params.len();
+        let s = entry.state_shapes.len();
+        anyhow::ensure!(outs.len() == 2 * n + s + 5, "train output arity {}", outs.len());
+        let mut it = outs.into_iter();
+        let mut params = Vec::with_capacity(n);
+        for _ in 0..n {
+            params.push(it.next().unwrap().to_vec::<f32>()?);
+        }
+        let mut mom = Vec::with_capacity(n);
+        for _ in 0..n {
+            mom.push(it.next().unwrap().to_vec::<f32>()?);
+        }
+        let mut state = Vec::with_capacity(s);
+        for _ in 0..s {
+            state.push(it.next().unwrap().to_vec::<f32>()?);
+        }
+        let loss = it.next().unwrap().get_first_element::<f32>()?;
+        let correct = it.next().unwrap().get_first_element::<i32>()? as i64;
+        let grad_var = it.next().unwrap().to_vec::<f32>()?;
+        let grad_norm = it.next().unwrap().to_vec::<f32>()?;
+        let overflow = it.next().unwrap().get_first_element::<i32>()? != 0;
+        st.params = params;
+        st.mom = mom;
+        st.state = state;
+        Ok(TrainOutputs { loss, correct, grad_var, grad_norm, overflow })
+    }
+
+    fn eval_batch(
+        &self,
+        entry: &ModelEntry,
+        st: &ModelState,
+        batch: &Batch,
+        codes: &[i32],
+    ) -> Result<EvalResult> {
+        let exe = self.executable(entry, &format!("eval_b{}", batch.n))?;
+        let (x, y) = Self::batch_literals(batch)?;
+        let mut holders: Vec<xla::Literal> = Vec::new();
+        for (p, spec) in st.params.iter().zip(&entry.params) {
+            holders.push(Self::tensor_literal(p, &spec.shape)?);
+        }
+        for (s, shape) in st.state.iter().zip(&entry.state_shapes) {
+            holders.push(Self::tensor_literal(s, shape)?);
+        }
+        let codes_l = xla::Literal::vec1(codes);
+        let mut refs: Vec<&xla::Literal> = holders.iter().collect();
+        refs.push(&x);
+        refs.push(&y);
+        refs.push(&codes_l);
+        let outs = Self::run_refs(&exe, &refs)?;
+        anyhow::ensure!(outs.len() == 2, "eval output arity");
+        Ok(EvalResult {
+            loss: outs[0].get_first_element::<f32>()?,
+            correct: outs[1].get_first_element::<i32>()? as i64,
+            total: batch.n,
+        })
+    }
+
+    fn curv_step(
+        &self,
+        entry: &ModelEntry,
+        st: &ModelState,
+        batch: &Batch,
+        probes: &mut [Vec<f32>],
+        codes: &[i32],
+    ) -> Result<Vec<f32>> {
+        let exe = self.executable(entry, "curv")?;
+        let (x, y) = Self::batch_literals(batch)?;
+        let mut holders: Vec<xla::Literal> = Vec::new();
+        for (p, spec) in st.params.iter().zip(&entry.params) {
+            holders.push(Self::tensor_literal(p, &spec.shape)?);
+        }
+        for (s, shape) in st.state.iter().zip(&entry.state_shapes) {
+            holders.push(Self::tensor_literal(s, shape)?);
+        }
+        let head = holders.len();
+        let mut refs: Vec<&xla::Literal> = holders[..head].iter().collect();
+        let (xr, yr) = (&x, &y);
+        refs.push(xr);
+        refs.push(yr);
+        let probe_lits: Vec<xla::Literal> = probes
+            .iter()
+            .zip(&entry.params)
+            .map(|(u, spec)| Self::tensor_literal(u, &spec.shape))
+            .collect::<Result<Vec<_>>>()?;
+        for lit in probe_lits.iter() {
+            refs.push(lit);
+        }
+        let codes_l = xla::Literal::vec1(codes);
+        refs.push(&codes_l);
+        let outs = Self::run_refs(&exe, &refs)?;
+        let n = entry.params.len();
+        anyhow::ensure!(outs.len() == n + 1, "curv output arity");
+        let mut it = outs.into_iter();
+        for u in probes.iter_mut() {
+            *u = it.next().unwrap().to_vec::<f32>()?;
+        }
+        let lambdas = it.next().unwrap().to_vec::<f32>()?;
+        Ok(lambdas)
+    }
+}

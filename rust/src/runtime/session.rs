@@ -1,16 +1,14 @@
 //! A training session: model parameters + optimizer + BN state held as
-//! host literals, with train / eval / curvature entry points that call the
-//! corresponding AOT executables.
+//! host `f32` vectors, with train / eval / curvature entry points that
+//! dispatch to the engine's [`Backend`](super::Backend).
 //!
-//! IO orderings here mirror manifest `io` exactly:
-//!   train: params*N, mom*N, state*S, x, y, codes, lr_scales, lr, loss_scale, wd
-//!       -> params*N, mom*N, state*S, loss, correct, grad_var, grad_norm, overflow
-//!   eval:  params*N, state*S, x, y, codes -> loss, correct
-//!   curv:  params*N, state*S, x, y, u*N, codes -> u_next*N, lambdas
-//!   init:  seed -> params*N, state*S
+//! The session owns the *state*; the backend owns the *compute*. This
+//! is what lets the same Trainer run on the pure-Rust reference
+//! executor, the PJRT artifact executor, or any future backend.
 
 use anyhow::{Context, Result};
 
+use super::backend::ModelState;
 use super::engine::Engine;
 use crate::manifest::ModelEntry;
 use crate::util::rng::Rng;
@@ -72,111 +70,74 @@ pub struct EvalResult {
 pub struct Session<'e> {
     pub engine: &'e Engine,
     pub entry: ModelEntry,
-    params: Vec<xla::Literal>,
-    mom: Vec<xla::Literal>,
-    state: Vec<xla::Literal>,
+    st: ModelState,
     /// Power-iteration probe vectors, persisted across curvature firings.
-    probes: Option<Vec<xla::Literal>>,
+    probes: Option<Vec<Vec<f32>>>,
     pub steps: u64,
 }
 
-fn scalar_f32(v: f32) -> xla::Literal {
-    xla::Literal::scalar(v)
-}
-
-fn vec_f32(v: &[f32]) -> xla::Literal {
-    xla::Literal::vec1(v)
-}
-
-fn vec_i32(v: &[i32]) -> xla::Literal {
-    xla::Literal::vec1(v)
-}
-
 impl<'e> Session<'e> {
-    /// Materialize params/state by executing the model's `init` artifact
-    /// with `seed` (threefry inside XLA — no weight blobs on disk).
+    /// Materialize params/momentum/state through the backend's `init`
+    /// entry point (seed-deterministic — no weight blobs on disk).
     pub fn init(engine: &'e Engine, model_key: &str, seed: i32) -> Result<Session<'e>> {
         let entry = engine.manifest.model(model_key)?.clone();
-        let exe = engine.executable(&entry, "init")?;
-        let outs = engine.run(&exe, &[xla::Literal::scalar(seed)])?;
-        let n = entry.params.len();
-        let s = entry.state_shapes.len();
-        anyhow::ensure!(outs.len() == n + s, "init output arity {} != {}", outs.len(), n + s);
-        let mut outs = outs.into_iter();
-        let params: Vec<_> = outs.by_ref().take(n).collect();
-        let state: Vec<_> = outs.collect();
-        let mom = entry
-            .params
-            .iter()
-            .map(|p| {
-                let zeros = vec![0f32; p.elems];
-                let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
-                vec_f32(&zeros).reshape(&dims).context("zeros reshape")
-            })
-            .collect::<Result<Vec<_>>>()?;
-        Ok(Session { engine, entry, params, mom, state, probes: None, steps: 0 })
+        anyhow::ensure!(
+            engine.backend().supports(&entry),
+            "backend `{}` does not implement model `{}` (architecture `{}`)",
+            engine.platform(),
+            model_key,
+            entry.model
+        );
+        let st = engine
+            .backend()
+            .init(&entry, seed)
+            .with_context(|| format!("initializing `{model_key}`"))?;
+        anyhow::ensure!(
+            st.params.len() == entry.params.len(),
+            "init params arity {} != manifest {}",
+            st.params.len(),
+            entry.params.len()
+        );
+        anyhow::ensure!(
+            st.state.len() == entry.state_shapes.len(),
+            "init state arity {} != manifest {}",
+            st.state.len(),
+            entry.state_shapes.len()
+        );
+        for (p, spec) in st.params.iter().zip(&entry.params) {
+            anyhow::ensure!(
+                p.len() == spec.elems,
+                "init tensor {}: {} elems != manifest {}",
+                spec.name,
+                p.len(),
+                spec.elems
+            );
+        }
+        Ok(Session { engine, entry, st, probes: None, steps: 0 })
     }
 
     pub fn num_layers(&self) -> usize {
         self.entry.num_layers
     }
 
-    fn batch_literals(&self, batch: &Batch) -> Result<(xla::Literal, xla::Literal)> {
-        let x = vec_f32(&batch.x).reshape(&[batch.n as i64, 32, 32, 3])?;
-        let y = vec_i32(&batch.y);
-        Ok((x, y))
-    }
-
-    /// One optimizer step through the `train_b{n}` executable.
+    /// One optimizer step through the backend's `train_b{n}` entry point.
     pub fn train_step(&mut self, batch: &Batch, ctrl: &StepCtrl) -> Result<TrainOutputs> {
         anyhow::ensure!(
             self.entry.train_buckets.contains(&batch.n),
-            "batch size {} is not an AOT bucket {:?}",
+            "batch size {} is not a train bucket {:?}",
             batch.n,
             self.entry.train_buckets
         );
         anyhow::ensure!(ctrl.codes.len() == self.entry.num_layers, "codes arity");
         anyhow::ensure!(ctrl.lr_scales.len() == self.entry.num_layers, "lr_scales arity");
-        let exe = self
+        let out = self
             .engine
-            .executable(&self.entry, &format!("train_b{}", batch.n))?;
-        let (x, y) = self.batch_literals(batch)?;
-
-        // Literal isn't Copy; execute takes Borrow<Literal>, so borrow the
-        // resident params/mom/state and the freshly-built control literals.
-        let mut refs: Vec<&xla::Literal> =
-            Vec::with_capacity(self.params.len() * 2 + self.state.len() + 7);
-        refs.extend(self.params.iter());
-        refs.extend(self.mom.iter());
-        refs.extend(self.state.iter());
-        let codes = vec_i32(&ctrl.codes);
-        let lr_scales = vec_f32(&ctrl.lr_scales);
-        let lr = scalar_f32(ctrl.lr);
-        let ls = scalar_f32(ctrl.loss_scale);
-        let wd = scalar_f32(ctrl.weight_decay);
-        refs.push(&x);
-        refs.push(&y);
-        refs.push(&codes);
-        refs.push(&lr_scales);
-        refs.push(&lr);
-        refs.push(&ls);
-        refs.push(&wd);
-
-        let outs = run_refs(&exe, &refs)?;
-        let n = self.params.len();
-        let s = self.state.len();
-        anyhow::ensure!(outs.len() == 2 * n + s + 5, "train output arity {}", outs.len());
-        let mut it = outs.into_iter();
-        self.params = it.by_ref().take(n).collect();
-        self.mom = it.by_ref().take(n).collect();
-        self.state = it.by_ref().take(s).collect();
-        let loss = it.next().unwrap().get_first_element::<f32>()?;
-        let correct = it.next().unwrap().get_first_element::<i32>()? as i64;
-        let grad_var = it.next().unwrap().to_vec::<f32>()?;
-        let grad_norm = it.next().unwrap().to_vec::<f32>()?;
-        let overflow = it.next().unwrap().get_first_element::<i32>()? != 0;
+            .backend()
+            .train_step(&self.entry, &mut self.st, batch, ctrl)?;
+        anyhow::ensure!(out.grad_var.len() == self.entry.num_layers, "grad_var arity");
+        anyhow::ensure!(out.grad_norm.len() == self.entry.num_layers, "grad_norm arity");
         self.steps += 1;
-        Ok(TrainOutputs { loss, correct, grad_var, grad_norm, overflow })
+        Ok(out)
     }
 
     /// Evaluate one batch through `eval_b{n}`. Codes let callers measure
@@ -188,24 +149,8 @@ impl<'e> Session<'e> {
             batch.n,
             self.entry.eval_buckets
         );
-        let exe = self
-            .engine
-            .executable(&self.entry, &format!("eval_b{}", batch.n))?;
-        let (x, y) = self.batch_literals(batch)?;
-        let codes_l = vec_i32(codes);
-        let mut refs: Vec<&xla::Literal> = Vec::new();
-        refs.extend(self.params.iter());
-        refs.extend(self.state.iter());
-        refs.push(&x);
-        refs.push(&y);
-        refs.push(&codes_l);
-        let outs = run_refs(&exe, &refs)?;
-        anyhow::ensure!(outs.len() == 2, "eval output arity");
-        Ok(EvalResult {
-            loss: outs[0].get_first_element::<f32>()?,
-            correct: outs[1].get_first_element::<i32>()? as i64,
-            total: batch.n,
-        })
+        anyhow::ensure!(codes.len() == self.entry.num_layers, "codes arity");
+        self.engine.backend().eval_batch(&self.entry, &self.st, batch, codes)
     }
 
     /// One amortized power-iteration step on the curvature batch; returns
@@ -213,26 +158,14 @@ impl<'e> Session<'e> {
     /// session and warm-start the next firing.
     pub fn curv_step(&mut self, batch: &Batch, codes: &[i32], seed: u64) -> Result<Vec<f32>> {
         anyhow::ensure!(batch.n == self.entry.curv_batch, "curvature batch size");
-        let exe = self.engine.executable(&self.entry, "curv")?;
+        anyhow::ensure!(codes.len() == self.entry.num_layers, "codes arity");
         if self.probes.is_none() {
-            self.probes = Some(self.fresh_probes(seed)?);
+            self.probes = Some(fresh_probes(&self.entry, seed));
         }
-        let (x, y) = self.batch_literals(batch)?;
-        let codes_l = vec_i32(codes);
-        let probes = self.probes.as_ref().unwrap();
-        let mut refs: Vec<&xla::Literal> = Vec::new();
-        refs.extend(self.params.iter());
-        refs.extend(self.state.iter());
-        refs.push(&x);
-        refs.push(&y);
-        refs.extend(probes.iter());
-        refs.push(&codes_l);
-        let outs = run_refs(&exe, &refs)?;
-        let n = self.params.len();
-        anyhow::ensure!(outs.len() == n + 1, "curv output arity");
-        let mut it = outs.into_iter();
-        self.probes = Some(it.by_ref().take(n).collect());
-        let lambdas = it.next().unwrap().to_vec::<f32>()?;
+        let backend = self.engine.backend();
+        let probes = self.probes.as_mut().unwrap();
+        let lambdas = backend.curv_step(&self.entry, &self.st, batch, probes, codes)?;
+        anyhow::ensure!(lambdas.len() == self.entry.num_layers, "lambda arity");
         Ok(lambdas)
     }
 
@@ -241,61 +174,58 @@ impl<'e> Session<'e> {
         self.probes = None;
     }
 
-    fn fresh_probes(&self, seed: u64) -> Result<Vec<xla::Literal>> {
-        let mut rng = Rng::stream(seed, 0xC0FFEE);
-        self.entry
-            .params
-            .iter()
-            .map(|p| {
-                let v: Vec<f32> = if p.layer_idx >= 0 {
-                    (0..p.elems).map(|_| rng.next_normal()).collect()
-                } else {
-                    vec![0f32; p.elems] // non-precision params don't probe
-                };
-                let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
-                vec_f32(&v).reshape(&dims).context("probe reshape")
-            })
-            .collect()
-    }
-
     /// L2 norm of a parameter tensor (telemetry / tests).
     pub fn param_norm(&self, idx: usize) -> Result<f64> {
-        let v = self.params[idx].to_vec::<f32>()?;
-        Ok(v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt())
+        let p = self
+            .st
+            .params
+            .get(idx)
+            .with_context(|| format!("no parameter {idx}"))?;
+        Ok(p.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt())
     }
 
     /// Snapshot of all parameters as host vectors (tests / checkpoints).
     pub fn params_host(&self) -> Result<Vec<Vec<f32>>> {
-        self.params.iter().map(|l| Ok(l.to_vec::<f32>()?)).collect()
+        Ok(self.st.params.clone())
     }
 
-    /// Serialize the full optimizer state into a [`Checkpoint`].
+    /// Serialize the full optimizer state (plus live curvature probes,
+    /// when warm) into a [`crate::checkpoint::Checkpoint`].
     pub fn export(&self, step: u64) -> Result<crate::checkpoint::Checkpoint> {
         use crate::checkpoint::{Checkpoint, Tensor};
         let mut tensors = Vec::new();
-        let mut push = |role: &str, i: usize, lit: &xla::Literal, dims: &[usize]| -> Result<()> {
+        let mut push = |role: &str, i: usize, data: &[f32], dims: &[usize]| {
             tensors.push(Tensor {
                 name: format!("{role}/{i}"),
                 dims: dims.iter().map(|&d| d as u64).collect(),
-                data: lit.to_vec::<f32>()?,
+                data: data.to_vec(),
             });
-            Ok(())
         };
-        for (i, (p, spec)) in self.params.iter().zip(&self.entry.params).enumerate() {
-            push("param", i, p, &spec.shape)?;
+        for (i, (p, spec)) in self.st.params.iter().zip(&self.entry.params).enumerate() {
+            push("param", i, p, &spec.shape);
         }
-        for (i, (m, spec)) in self.mom.iter().zip(&self.entry.params).enumerate() {
-            push("mom", i, m, &spec.shape)?;
+        for (i, (m, spec)) in self.st.mom.iter().zip(&self.entry.params).enumerate() {
+            push("mom", i, m, &spec.shape);
         }
-        for (i, (s, shape)) in self.state.iter().zip(&self.entry.state_shapes).enumerate() {
-            push("state", i, s, shape)?;
+        for (i, (s, shape)) in self.st.state.iter().zip(&self.entry.state_shapes).enumerate() {
+            push("state", i, s, shape);
         }
-        Ok(Checkpoint { model_key: self.entry.key.clone(), step, tensors })
+        if let Some(probes) = &self.probes {
+            for (i, (u, spec)) in probes.iter().zip(&self.entry.params).enumerate() {
+                push("probe", i, u, &spec.shape);
+            }
+        }
+        Ok(Checkpoint {
+            model_key: self.entry.key.clone(),
+            step,
+            tensors,
+            ctrl: Vec::new(),
+        })
     }
 
-    /// Restore params/momentum/state from a checkpoint. Model key and
-    /// every tensor shape are validated against the manifest; probe
-    /// vectors are reset (they are re-warmed cheaply).
+    /// Restore params/momentum/state (and curvature probes, if saved)
+    /// from a checkpoint. Model key and every tensor shape are validated
+    /// against the manifest.
     pub fn restore(&mut self, ckpt: &crate::checkpoint::Checkpoint) -> Result<u64> {
         anyhow::ensure!(
             ckpt.model_key == self.entry.key,
@@ -303,7 +233,7 @@ impl<'e> Session<'e> {
             ckpt.model_key,
             self.entry.key
         );
-        let lit_for = |t: &crate::checkpoint::Tensor, want: &[usize]| -> Result<xla::Literal> {
+        let vec_for = |t: &crate::checkpoint::Tensor, want: &[usize]| -> Result<Vec<f32>> {
             let dims: Vec<usize> = t.dims.iter().map(|&d| d as usize).collect();
             anyhow::ensure!(
                 dims == want,
@@ -312,35 +242,50 @@ impl<'e> Session<'e> {
                 dims,
                 want
             );
-            let d64: Vec<i64> = want.iter().map(|&d| d as i64).collect();
-            Ok(vec_f32(&t.data).reshape(&d64)?)
+            Ok(t.data.clone())
         };
-        let mut params = Vec::with_capacity(self.params.len());
-        let mut mom = Vec::with_capacity(self.mom.len());
-        let mut state = Vec::with_capacity(self.state.len());
+        let mut params = Vec::with_capacity(self.st.params.len());
+        let mut mom = Vec::with_capacity(self.st.mom.len());
+        let mut state = Vec::with_capacity(self.st.state.len());
         for (i, spec) in self.entry.params.iter().enumerate() {
-            params.push(lit_for(ckpt.tensor(&format!("param/{i}"))?, &spec.shape)?);
-            mom.push(lit_for(ckpt.tensor(&format!("mom/{i}"))?, &spec.shape)?);
+            params.push(vec_for(ckpt.tensor(&format!("param/{i}"))?, &spec.shape)?);
+            mom.push(vec_for(ckpt.tensor(&format!("mom/{i}"))?, &spec.shape)?);
         }
         for (i, shape) in self.entry.state_shapes.iter().enumerate() {
-            state.push(lit_for(ckpt.tensor(&format!("state/{i}"))?, shape)?);
+            state.push(vec_for(ckpt.tensor(&format!("state/{i}"))?, shape)?);
         }
-        self.params = params;
-        self.mom = mom;
-        self.state = state;
-        self.probes = None;
+        // Probes are optional (absent for sessions that never probed).
+        let mut probes = Vec::with_capacity(self.entry.params.len());
+        let mut have_probes = true;
+        for (i, spec) in self.entry.params.iter().enumerate() {
+            match ckpt.tensor(&format!("probe/{i}")) {
+                Ok(t) => probes.push(vec_for(t, &spec.shape)?),
+                Err(_) => {
+                    have_probes = false;
+                    break;
+                }
+            }
+        }
+        self.st = ModelState { params, mom, state };
+        self.probes = if have_probes { Some(probes) } else { None };
         self.steps = ckpt.step;
         Ok(ckpt.step)
     }
 }
 
-/// Execute with borrowed literals and flatten the single tuple result.
-fn run_refs(
-    exe: &xla::PjRtLoadedExecutable,
-    refs: &[&xla::Literal],
-) -> Result<Vec<xla::Literal>> {
-    let out = exe.execute::<&xla::Literal>(refs)?;
-    anyhow::ensure!(out.len() == 1 && out[0].len() == 1, "expected 1x1 output");
-    let lit = out[0][0].to_literal_sync()?;
-    Ok(lit.to_tuple()?)
+/// Fresh probe vectors: unit-free normals on precision layers, zeros on
+/// fp32-only params (BN/bias don't probe).
+fn fresh_probes(entry: &ModelEntry, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::stream(seed, 0xC0FFEE);
+    entry
+        .params
+        .iter()
+        .map(|p| {
+            if p.layer_idx >= 0 {
+                (0..p.elems).map(|_| rng.next_normal()).collect()
+            } else {
+                vec![0f32; p.elems]
+            }
+        })
+        .collect()
 }

@@ -1,6 +1,7 @@
-//! The trainer: binds the PJRT runtime (AOT train/eval/curv graphs), the
-//! Tri-Accel controller, the VRAM simulator, and the data pipeline into
-//! the paper's training procedure (§4.1–§4.3): SGD+momentum, 5-epoch
+//! The trainer: binds the runtime session (any [`crate::runtime::Backend`]:
+//! native reference executor or PJRT artifacts), the Tri-Accel
+//! controller, the VRAM simulator, and the data pipeline into the
+//! paper's training procedure (§4.1–§4.3): SGD+momentum, 5-epoch
 //! warmup + cosine decay, per-epoch test evaluation, 3-axis metrics.
 //!
 //! One `Trainer::run()` = one Table-1 cell at one seed.
@@ -54,10 +55,25 @@ impl<'e> Trainer<'e> {
     pub fn new(engine: &'e Engine, cfg: Config) -> Result<Trainer<'e>> {
         cfg.validate()?;
         let entry = engine.manifest.model(&cfg.model_key)?.clone();
+        let min_eval_bucket = entry
+            .eval_buckets
+            .iter()
+            .min()
+            .copied()
+            .context("model has no eval buckets")?;
         anyhow::ensure!(
-            cfg.eval_examples % 16 == 0,
-            "eval_examples must be a multiple of the smallest eval bucket (16)"
+            cfg.eval_examples % min_eval_bucket == 0,
+            "eval_examples must be a multiple of the smallest eval bucket ({min_eval_bucket})"
         );
+        // The greedy descending eval tiling in [`Self::evaluate`] covers
+        // every multiple of the smallest bucket only when each bucket is
+        // itself such a multiple — validate rather than assume.
+        for &b in &entry.eval_buckets {
+            anyhow::ensure!(
+                b % min_eval_bucket == 0,
+                "eval bucket {b} is not a multiple of the smallest ({min_eval_bucket})"
+            );
+        }
         let session = Session::init(engine, &cfg.model_key, cfg.seed as i32)
             .context("initializing session")?;
         let controller = Controller::new(&cfg, &entry);
@@ -73,7 +89,7 @@ impl<'e> Trainer<'e> {
             probe.usage(cfg.batch_init, &fp32_codes, false).total_gb * 1.05
         };
         let memsim = VramSim::new(&entry, budget_gb, cfg.mem_noise, cfg.seed);
-        let speed = SpeedModel::t4_like(&entry);
+        let speed = SpeedModel::t4_like();
         let train_ds = auto_source(entry.num_classes, true, cfg.train_examples, cfg.seed);
         // Same seed as the train source: the class prototypes define the
         // task and must match; the train=false split flag already makes
@@ -196,7 +212,6 @@ impl<'e> Trainer<'e> {
         let mut steps = 0u64;
         let mut loss_sum = 0.0;
         let mut correct = 0i64;
-        
         let mut modeled_s = 0.0;
         let budget_examples = self.cfg.train_examples;
         let fixed_steps = self.cfg.steps_per_epoch;
@@ -205,7 +220,6 @@ impl<'e> Trainer<'e> {
             let (loss, corr, b, modeled) = self.step()?;
             steps += 1;
             consumed += b;
-            
             loss_sum += loss;
             correct += corr;
             modeled_s += modeled;
@@ -249,18 +263,32 @@ impl<'e> Trainer<'e> {
     }
 
     /// Full test-set evaluation at FP32 (paper's test protocol), tiled
-    /// over the eval bucket ladder (128s then 16s).
+    /// over the eval bucket ladder (largest buckets first).
+    ///
+    /// The example count is truncated to a multiple of the smallest
+    /// eval bucket: when the dataset is smaller than `eval_examples`
+    /// and not bucket-aligned, the old greedy tiling could strand a
+    /// remainder below the smallest bucket and abort mid-eval. Each
+    /// ladder bucket is a multiple of the smallest, so greedy
+    /// descending tiling covers any truncated count exactly.
     pub fn evaluate(&mut self) -> Result<(f64, f64)> {
-        let n = self.cfg.eval_examples.min(self.eval_ds.len());
-        let codes = vec![FP32; self.session.num_layers()];
-        let mut pos = 0usize;
-        let mut loss_sum = 0.0;
-        let mut correct = 0i64;
         let buckets: Vec<usize> = {
             let mut b = self.session.entry.eval_buckets.clone();
             b.sort_unstable_by(|a, c| c.cmp(a)); // descending
             b
         };
+        let &smallest = buckets.last().context("model has no eval buckets")?;
+        let n = self.cfg.eval_examples.min(self.eval_ds.len());
+        let n = n - n % smallest;
+        anyhow::ensure!(
+            n > 0,
+            "eval set ({}) smaller than the smallest eval bucket ({smallest})",
+            self.eval_ds.len()
+        );
+        let codes = vec![FP32; self.session.num_layers()];
+        let mut pos = 0usize;
+        let mut loss_sum = 0.0;
+        let mut correct = 0i64;
         while pos < n {
             let remaining = n - pos;
             let &bs = buckets
@@ -317,26 +345,108 @@ impl<'e> Trainer<'e> {
         self.steps_per_epoch_hint
     }
 
-    /// Advance the training stream by one batch without training. Used
-    /// to re-align the data iterator after [`Self::resume_from`] — the
-    /// checkpoint stores the optimizer state, not the stream position.
+    /// Advance the training stream by one batch without training.
+    /// Manual re-alignment for *version-1* checkpoints, which stored no
+    /// stream position (only valid for fixed-batch runs — an elastic
+    /// history changes the consumed-example count per batch). Current
+    /// checkpoints restore the stream position automatically.
     pub fn skip_batch(&mut self) -> Result<()> {
         let b = self.controller.batch_size();
         let _ = self.train_iter.next_batch(b)?;
         Ok(())
     }
 
-    /// Save the full optimizer state (params/momentum/BN state + step).
+    /// Save the full optimizer state (params/momentum/BN state, live
+    /// curvature probes, Tri-Accel controller state, the data-stream
+    /// position, and the step).
     pub fn save_checkpoint(&self, path: &std::path::Path) -> Result<()> {
-        self.session.export(self.global_step)?.save(path)
+        let mut ckpt = self.session.export(self.global_step)?;
+        ckpt.ctrl = self.controller.export_state();
+        let (epoch, pos) = self.train_iter.stream_state();
+        ckpt.ctrl.push(("trainer/stream".into(), vec![epoch as f64, pos as f64]));
+        ckpt.save(path)
     }
 
     /// Restore from a checkpoint saved by [`Self::save_checkpoint`];
-    /// resumes the step counter (and thus the LR schedule position).
+    /// resumes the step counter (and thus the LR schedule position)
+    /// *and* the controller (precision codes, variance/curvature EMAs,
+    /// loss scale, batch-ladder position) — a resumed Tri-Accel run
+    /// continues the saved policy instead of resetting to defaults.
+    /// Version-1 checkpoints (no controller section) restore tensors
+    /// only and keep the fresh controller.
+    ///
+    /// Exactness caveat: the VRAM simulator's allocator-noise RNG is
+    /// *not* checkpointed, so bit-exact continuation holds only with
+    /// `mem_noise = 0`. Under nonzero noise the resumed memory
+    /// telemetry (a simulated transient by design) re-randomizes and
+    /// batch decisions may diverge within the noise band.
     pub fn resume_from(&mut self, path: &std::path::Path) -> Result<u64> {
         let ckpt = crate::checkpoint::Checkpoint::load(path)?;
         let step = self.session.restore(&ckpt)?;
+        if !ckpt.ctrl.is_empty() {
+            self.controller
+                .import_state(&ckpt.ctrl)
+                .context("restoring controller state")?;
+        }
+        if let Some((_, v)) = ckpt.ctrl.iter().find(|(k, _)| k == "trainer/stream") {
+            anyhow::ensure!(v.len() == 2, "trainer/stream arity");
+            self.train_iter
+                .seek(v[0] as u64, v[1] as usize)
+                .context("restoring data-stream position")?;
+        }
         self.global_step = step;
         Ok(step)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SyntheticCifar;
+
+    fn quick_cfg() -> Config {
+        let mut cfg = Config::cell("tiny_cnn_c10", Method::Fp32, 0);
+        cfg.epochs = 1;
+        cfg.steps_per_epoch = Some(2);
+        cfg.train_examples = 256;
+        cfg.eval_examples = 256;
+        cfg.batch_init = 16;
+        cfg.t_curv = 0;
+        cfg.warmup_epochs = 0;
+        cfg.mem_budget_gb = 0.5;
+        cfg.mem_noise = 0.0;
+        cfg
+    }
+
+    #[test]
+    fn evaluate_truncates_to_bucket_alignment() {
+        // Regression (satellite #1): an eval set smaller than
+        // `eval_examples` and not bucket-aligned used to strand a
+        // remainder below the smallest bucket and abort with "no eval
+        // bucket fits remaining". It must now truncate and succeed.
+        let engine = Engine::native();
+        let mut tr = Trainer::new(&engine, quick_cfg()).unwrap();
+        // 40 examples with buckets {16, 128}: 40 -> 32 evaluated.
+        tr.eval_ds = Box::new(SyntheticCifar::new(10, 40, false, 0));
+        let (loss, acc) = tr.evaluate().unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        assert!((0.0..=100.0).contains(&acc));
+    }
+
+    #[test]
+    fn evaluate_rejects_sub_bucket_dataset() {
+        let engine = Engine::native();
+        let mut tr = Trainer::new(&engine, quick_cfg()).unwrap();
+        tr.eval_ds = Box::new(SyntheticCifar::new(10, 7, false, 0));
+        let err = tr.evaluate().unwrap_err().to_string();
+        assert!(err.contains("smaller than the smallest eval bucket"), "{err}");
+    }
+
+    #[test]
+    fn eval_examples_must_align_to_smallest_bucket() {
+        let engine = Engine::native();
+        let mut cfg = quick_cfg();
+        cfg.eval_examples = 250; // not a multiple of 16
+        assert!(Trainer::new(&engine, cfg).is_err());
     }
 }

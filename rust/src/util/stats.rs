@@ -70,6 +70,17 @@ impl Ema {
     pub fn steps(&self) -> u64 {
         self.steps
     }
+
+    /// Raw (uncorrected value, steps) pair — checkpoint serialization.
+    pub fn raw(&self) -> (f64, u64) {
+        (self.value, self.steps)
+    }
+
+    /// Restore from a [`Self::raw`] pair (checkpoint resume).
+    pub fn set_raw(&mut self, value: f64, steps: u64) {
+        self.value = value;
+        self.steps = steps;
+    }
 }
 
 pub fn percentile(sorted: &[f64], p: f64) -> f64 {
@@ -117,6 +128,21 @@ mod tests {
     #[should_panic]
     fn ema_rejects_bad_beta() {
         Ema::new(1.0);
+    }
+
+    #[test]
+    fn ema_raw_roundtrip() {
+        let mut a = Ema::new(0.9);
+        a.update(2.0);
+        a.update(5.0);
+        let (v, s) = a.raw();
+        let mut b = Ema::new(0.9);
+        b.set_raw(v, s);
+        assert_eq!(a.get(), b.get());
+        assert_eq!(a.steps(), b.steps());
+        b.update(1.0);
+        a.update(1.0);
+        assert_eq!(a.get(), b.get(), "restored EMA continues identically");
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! End-to-end integration over the trainer: full Tri-Accel loop against
-//! the real AOT artifacts, plus method/ablation behaviour the tables
-//! depend on. Small step budgets keep this in CI range.
+//! the native reference backend, plus method/ablation behaviour the
+//! tables depend on. Hermetic (no artifacts); small step budgets keep
+//! this in CI range.
 
 use tri_accel::config::{Config, Method};
 use tri_accel::manifest::FP32;
@@ -9,8 +10,7 @@ use tri_accel::runtime::Engine;
 use tri_accel::train::Trainer;
 
 fn engine() -> Engine {
-    Engine::new(std::path::Path::new("artifacts"))
-        .expect("run `make artifacts` before cargo test")
+    Engine::native()
 }
 
 fn quick_cfg(method: Method, seed: u64) -> Config {
@@ -50,14 +50,16 @@ fn triaccel_epoch_produces_sane_record() {
 }
 
 #[test]
-fn loss_decreases_over_training() {
+fn triaccel_learns_above_chance_within_25_step_epochs() {
+    // The acceptance bar: the full Tri-Accel method, trained in
+    // 25-step epochs on the synthetic dataset, must clear 10-class
+    // chance comfortably by the third epoch.
     let e = engine();
     let mut cfg = quick_cfg(Method::TriAccel, 1);
     cfg.epochs = 3;
-    cfg.steps_per_epoch = Some(40);
-    cfg.base_lr = 0.1;
+    cfg.base_lr = 0.2;
     cfg.batch_init = 32;
-    cfg.mem_budget_gb = 0.5; // roomy: isolate learning from OOM shrink
+    cfg.t_curv = 20; // probe cadence down: keeps the test CPU-friendly
     let mut tr = Trainer::new(&e, cfg).unwrap();
     let first = tr.run_epoch(0).unwrap();
     tr.run_epoch(1).unwrap();
@@ -68,7 +70,12 @@ fn loss_decreases_over_training() {
         first.train_loss,
         last.train_loss
     );
-    // Synthetic classes are separable — accuracy should beat chance (10%).
+    assert!(
+        last.train_acc > 20.0,
+        "train acc {} ≤ 2× chance after 3×25 steps",
+        last.train_acc
+    );
+    // Synthetic classes are separable — test accuracy beats chance too.
     assert!(last.test_acc > 15.0, "test acc {} ≤ chance", last.test_acc);
 }
 
@@ -219,24 +226,62 @@ fn checkpoint_roundtrip_resumes_identically() {
     }
 
     // Fresh trainer, resume, same 5 steps must be bit-identical: the
-    // checkpoint captures params+mom+state and the step counter keys
-    // both the LR schedule and the data order.
+    // checkpoint captures params+mom+state, the controller, the
+    // data-stream position, and the step counter (which keys the LR
+    // schedule).
     let mut tr2 = Trainer::new(&e, cfg).unwrap();
     let step = tr2.resume_from(&ckpt_path).unwrap();
     assert_eq!(step, 10);
-    // Fast-forward the data iterator to the same stream position.
-    for _ in 0..10 {
-        tr2.skip_batch().unwrap();
-    }
     let mut resumed_losses = Vec::new();
     for _ in 0..5 {
         resumed_losses.push(tr2.step().unwrap().0);
     }
     assert_eq!(direct_losses, resumed_losses, "resume must be bit-exact");
+    std::fs::remove_file(&ckpt_path).ok();
+}
 
-    // Wrong model → clean error.
-    let mut tr3 = Trainer::new(&e, quick_cfg(Method::Fp32, 9)).unwrap();
-    let _ = tr3;
+#[test]
+fn triaccel_resume_restores_controller_state() {
+    // Satellite regression: resuming used to reset precision codes,
+    // loss scale, batch-ladder index, and curvature EMAs to defaults,
+    // so a resumed Tri-Accel run diverged from an uninterrupted one.
+    // With controller state in the checkpoint, the continuation must be
+    // bit-exact (noise-free memsim).
+    let e = engine();
+    let ckpt_path =
+        std::env::temp_dir().join(format!("triaccel_ckpt_ctrl_{}.bin", std::process::id()));
+    let mut cfg = quick_cfg(Method::TriAccel, 4);
+    cfg.steps_per_epoch = Some(40);
+    cfg.t_ctrl = 3;
+    cfg.t_curv = 6;
+    cfg.batch_cooldown = 3;
+    cfg.mem_budget_gb = 0.5; // roomy so the batch ladder actually moves
+
+    let mut tr = Trainer::new(&e, cfg.clone()).unwrap();
+    for _ in 0..12 {
+        tr.step().unwrap();
+    }
+    tr.save_checkpoint(&ckpt_path).unwrap();
+    let saved_codes = tr.controller.codes();
+    let saved_scale = tr.controller.scaler.scale();
+    let saved_batch = tr.controller.batch_size();
+    let mut direct = Vec::new();
+    for _ in 0..6 {
+        let (loss, _, b, _) = tr.step().unwrap();
+        direct.push((loss, b, tr.controller.codes()));
+    }
+
+    let mut tr2 = Trainer::new(&e, cfg).unwrap();
+    tr2.resume_from(&ckpt_path).unwrap();
+    assert_eq!(tr2.controller.codes(), saved_codes, "codes restored");
+    assert_eq!(tr2.controller.scaler.scale(), saved_scale, "scale restored");
+    assert_eq!(tr2.controller.batch_size(), saved_batch, "ladder restored");
+    let mut resumed = Vec::new();
+    for _ in 0..6 {
+        let (loss, _, b, _) = tr2.step().unwrap();
+        resumed.push((loss, b, tr2.controller.codes()));
+    }
+    assert_eq!(direct, resumed, "Tri-Accel resume must continue the policy");
     std::fs::remove_file(&ckpt_path).ok();
 }
 
@@ -250,7 +295,7 @@ fn checkpoint_rejects_wrong_model() {
     let tr = Trainer::new(&e, cfg).unwrap();
     tr.save_checkpoint(&ckpt_path).unwrap();
     let mut ckpt = tri_accel::checkpoint::Checkpoint::load(&ckpt_path).unwrap();
-    ckpt.model_key = "resnet18_c10".into();
+    ckpt.model_key = "tiny_cnn_c100".into();
     let mut cfg2 = quick_cfg(Method::Fp32, 0);
     cfg2.t_curv = 0;
     let mut tr2 = Trainer::new(&e, cfg2).unwrap();

@@ -230,10 +230,21 @@ fn prop_checkpoint_roundtrip_any_shapes() {
                 }
             })
             .collect();
+        let n_ctrl = small_usize(rng, 0, 5);
+        let ctrl: Vec<(String, Vec<f64>)> = (0..n_ctrl)
+            .map(|i| {
+                let len = small_usize(rng, 0, 16);
+                (
+                    format!("ctrl/{i}"),
+                    (0..len).map(|_| rng.next_normal() as f64 * 1e3).collect(),
+                )
+            })
+            .collect();
         let c = Checkpoint {
             model_key: format!("m{}", small_usize(rng, 0, 99)),
             step: rng.next_u64() % 1_000_000,
             tensors,
+            ctrl,
         };
         let p = std::env::temp_dir().join(format!(
             "triaccel_prop_ckpt_{}_{}.bin",
@@ -250,6 +261,34 @@ fn prop_checkpoint_roundtrip_any_shapes() {
             if a.name != b.name || a.dims != b.dims || a.data != b.data {
                 return Err(format!("tensor {} mismatch", a.name));
             }
+        }
+        if d.ctrl != c.ctrl {
+            return Err("ctrl section mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------- qdq kernels
+
+#[test]
+fn prop_qdq_idempotent_and_ordered() {
+    use tri_accel::runtime::native::qdq::qdq1;
+    check("qdq is idempotent, monotone, and magnitude-bounded", |rng| {
+        let v = (rng.next_normal() as f64 * log_uniform(rng, -6.0, 4.0)) as f32;
+        let w = (rng.next_normal() as f64 * log_uniform(rng, -6.0, 4.0)) as f32;
+        for code in [FP16, BF16, FP32] {
+            let qv = qdq1(v, code);
+            if qdq1(qv, code) != qv {
+                return Err(format!("code {code}: not idempotent at {v}"));
+            }
+            let (lo, hi) = if v <= w { (v, w) } else { (w, v) };
+            if qdq1(lo, code) > qdq1(hi, code) {
+                return Err(format!("code {code}: order flipped at ({lo}, {hi})"));
+            }
+        }
+        if qdq1(v, FP32) != v {
+            return Err("fp32 must be the identity".into());
         }
         Ok(())
     });

@@ -1,0 +1,198 @@
+//! In-tree substitute for the `anyhow` crate (offline-build substrate,
+//! same spirit as the crate-free JSON/RNG/bench modules in `tri-accel`).
+//!
+//! Implements exactly the subset this workspace uses:
+//!
+//! * [`Error`] — a message plus a cause chain of messages. `{e}` prints
+//!   the outermost message, `{e:#}` the full `outer: cause: cause` chain.
+//! * [`Result`] — alias with `Error` as the default error type.
+//! * [`Context`] — `.context(msg)` / `.with_context(|| msg)` on both
+//!   `Result` and `Option`.
+//! * `anyhow!` / `bail!` / `ensure!` — format-string macros.
+//!
+//! Not implemented (unused in this workspace): backtraces, downcasting,
+//! `source()` chaining of live error values.
+
+use std::fmt;
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A message-chain error. Deliberately does **not** implement
+/// `std::error::Error`, so the blanket `From<E: std::error::Error>`
+/// impl below cannot overlap with the identity `From<Error>`.
+pub struct Error {
+    msg: String,
+    /// Causes, outermost first (each `context` pushes the old `msg`).
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string(), chain: Vec::new() }
+    }
+
+    /// Wrap with an outer context message.
+    fn wrap<M: fmt::Display>(self, m: M) -> Error {
+        let mut chain = Vec::with_capacity(self.chain.len() + 1);
+        chain.push(self.msg);
+        chain.extend(self.chain);
+        Error { msg: m.to_string(), chain }
+    }
+
+    /// The cause messages, outermost first.
+    pub fn chain(&self) -> &[String] {
+        &self.chain
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            for c in &self.chain {
+                write!(f, ": {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if !self.chain.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for c in &self.chain {
+                write!(f, "\n    {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut chain = Vec::new();
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { msg: e.to_string(), chain }
+    }
+}
+
+/// Context extension for `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().wrap(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)+) => {
+        $crate::Error::msg(format!($($arg)+))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("reading file")
+            .unwrap_err();
+        assert_eq!(e.to_string(), "reading file");
+        assert_eq!(format!("{e:#}"), "reading file: gone");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing").unwrap_err();
+        assert_eq!(e.to_string(), "missing");
+        assert_eq!(Some(3u32).context("missing").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_format() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "too big: {x}");
+            if x == 5 {
+                bail!("five is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(12).unwrap_err().to_string(), "too big: 12");
+        assert_eq!(f(5).unwrap_err().to_string(), "five is right out");
+        let e = anyhow!("v={}", 7);
+        assert_eq!(e.to_string(), "v=7");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn g() -> Result<u32> {
+            let n: u32 = "x".parse()?;
+            Ok(n)
+        }
+        assert!(g().is_err());
+    }
+
+    #[test]
+    fn with_context_lazy() {
+        let r: Result<(), Error> = Err(Error::msg("inner"));
+        let e = r.with_context(|| format!("outer {}", 1)).unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer 1: inner");
+    }
+}
