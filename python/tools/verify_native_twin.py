@@ -1,0 +1,318 @@
+"""Numpy twin of the Rust native compute core, validated against the
+repo's JAX reference train graph.
+
+The twin mirrors the structure of `rust/src/runtime/native/` after the
+PR-2 rewrite — fused-qdq im2col + GEMM convolution, chunked
+ordered-reduction weight gradients (`gemm_at_b`), col2im input
+gradients, f64-accumulated BN statistics, mp_matmul-style dense VJP —
+and a full train step is compared against
+`python/compile/train_graph.make_train_step` (loss, per-parameter
+gradients, BN state, per-layer grad stats, overflow flag).
+
+Run whenever the native ops change and no Rust toolchain is available
+(see .claude/skills/verify/SKILL.md):
+
+    python3 python/tools/verify_native_twin.py
+
+Expected: "TWIN == JAX REFERENCE: all scenarios pass". The all-fp16
+huge-loss-scale scenario is held to the repo's statistical fp16
+standard (same loss / overflow flag / grad-stat scale) because
+elementwise equality across accumulation orders is undefined on fp16
+quantization cliffs.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile.models import tiny_cnn
+from compile import train_graph
+
+FP16, BF16, FP32 = 0, 1, 2
+BN_EPS, BN_MOM = 1e-5, 0.1
+CH = [16, 32, 64]
+DIMS = [32, 16, 8]
+FEAT = 64
+
+
+# ---- qdq (mirrors rust/src/runtime/native/qdq.rs) -------------------------
+def qdq(x, code):
+    x = np.asarray(x, np.float32)
+    if code == FP16:
+        return x.astype(np.float16).astype(np.float32)
+    if code == BF16:
+        bits = np.ascontiguousarray(x).view(np.uint32)
+        rnd = ((bits >> 16) & 1) + np.uint32(0x7FFF)
+        out = ((bits + rnd) & np.uint32(0xFFFF0000)).view(np.float32)
+        return np.where(np.isnan(x), x, out)
+    return x
+
+
+# ---- im2col / col2im (mirror gemm.rs layouts) -----------------------------
+def im2col_qdq(x, n, h, w, cin, code):
+    k9 = 9 * cin
+    cols = np.zeros((n * h * w, k9), np.float32)
+    xq = qdq(x.reshape(n, h, w, cin), code)
+    for ky in range(3):
+        for kx in range(3):
+            c0 = (ky * 3 + kx) * cin
+            for bi in range(n):
+                for oy in range(h):
+                    iy = oy + ky - 1
+                    if iy < 0 or iy >= h:
+                        continue
+                    for ox in range(w):
+                        ix = ox + kx - 1
+                        if ix < 0 or ix >= w:
+                            continue
+                        cols[(bi * h + oy) * w + ox, c0:c0 + cin] = xq[bi, iy, ix]
+    return cols
+
+
+def col2im(dcols, n, h, w, cin):
+    dx = np.zeros((n, h, w, cin), np.float32)
+    k9 = 9 * cin
+    for ky in range(3):
+        for kx in range(3):
+            c0 = (ky * 3 + kx) * cin
+            for bi in range(n):
+                for iy in range(h):
+                    oy = iy + 1 - ky
+                    if oy < 0 or oy >= h:
+                        continue
+                    for ix in range(w):
+                        ox = ix + 1 - kx
+                        if ox < 0 or ox >= w:
+                            continue
+                        dx[bi, iy, ix] += dcols[(bi * h + oy) * w + ox, c0:c0 + cin]
+    return dx
+
+
+def gemm_at_b_chunked(a, b, chunk=1024):
+    """AᵀB via fixed m-chunk partials + ordered reduction (gemm.rs)."""
+    m = a.shape[0]
+    acc = np.zeros((a.shape[1], b.shape[1]), np.float32)
+    for c in range((m + chunk - 1) // chunk):
+        lo, hi = c * chunk, min((c + 1) * chunk, m)
+        part = (a[lo:hi].T @ b[lo:hi]).astype(np.float32)
+        acc = (acc + part).astype(np.float32)
+    return acc
+
+
+# ---- layer ops (mirror ops.rs *_into variants) ----------------------------
+def bn_fwd(x2d, gamma, beta, rm, rv):
+    rows, _ = x2d.shape
+    mean = (x2d.astype(np.float64).sum(0) / rows).astype(np.float32)
+    d = (x2d - mean).astype(np.float32).astype(np.float64)
+    var = ((d * d).sum(0) / rows).astype(np.float32)
+    nrm = ((1 - BN_MOM) * rm + BN_MOM * mean).astype(np.float32)
+    nrv = ((1 - BN_MOM) * rv + BN_MOM * var).astype(np.float32)
+    inv = (1.0 / np.sqrt(var + BN_EPS)).astype(np.float32)
+    out = ((x2d - mean) * inv * gamma + beta).astype(np.float32)
+    return out, nrm, nrv, mean, inv
+
+
+def bn_bwd(x2d, g2d, gamma, mean, inv):
+    rows, _ = x2d.shape
+    gv = g2d.astype(np.float64)
+    xhat64 = ((x2d - mean) * inv).astype(np.float32).astype(np.float64)
+    dbeta = gv.sum(0).astype(np.float32)
+    dgamma = (gv * xhat64).sum(0).astype(np.float32)
+    nf = np.float32(rows)
+    xhat = ((x2d - mean) * inv).astype(np.float32)
+    coeff = (gamma * inv / nf).astype(np.float32)
+    dx = (coeff * (nf * g2d - dbeta - xhat * dgamma)).astype(np.float32)
+    return dx, dgamma, dbeta
+
+
+def maxpool(x4):
+    n, h, w, c = x4.shape
+    ho, wo = h // 2, w // 2
+    win = x4.reshape(n, ho, 2, wo, 2, c).transpose(0, 1, 3, 2, 4, 5).reshape(n, ho, wo, 4, c)
+    arg = np.argmax(win, axis=3)  # first max wins, like the Rust kernel
+    out = np.take_along_axis(win, arg[:, :, :, None, :], axis=3)[:, :, :, 0, :]
+    return out, arg
+
+
+def maxpool_bwd(g4, arg, n, h, w, c):
+    ho, wo = h // 2, w // 2
+    dwin = np.zeros((n, ho, wo, 4, c), np.float32)
+    np.put_along_axis(dwin, arg[:, :, :, None, :], g4[:, :, :, None, :], axis=3)
+    return dwin.reshape(n, ho, wo, 2, 2, c).transpose(0, 1, 3, 2, 4, 5).reshape(n, h, w, c)
+
+
+def softmax_ce(logits, y):
+    n, _ = logits.shape
+    m = logits.max(1, keepdims=True)
+    z = np.exp((logits - m).astype(np.float32)).sum(1, keepdims=True).astype(np.float32)
+    logz = np.log(z) + m
+    loss = np.float32(
+        np.float64((logz[:, 0] - logits[np.arange(n), y]).astype(np.float64).sum()) / n
+    )
+    p = (np.exp(logits - m) / z).astype(np.float32)
+    d = p.copy()
+    d[np.arange(n), y] -= 1.0
+    d = (d / np.float32(n)).astype(np.float32)
+    return loss, int((logits.argmax(1) == y).sum()), d
+
+
+LAYER_OF = [0, -1, -1, 1, -1, -1, 2, -1, -1, 3, -1]
+
+
+def twin_step(params, state, x, y, codes, loss_scale):
+    """One train step with the PR-2 Rust pipeline's structure."""
+    n = y.shape[0]
+    cache = []
+    cur = x.astype(np.float32)
+    cin = 3
+    new_state = []
+    for li in range(3):
+        dim, cout, code = DIMS[li], CH[li], codes[li]
+        cols = im2col_qdq(cur.reshape(-1), n, dim, dim, cin, code)
+        wq = qdq(params[li * 3], code).reshape(9 * cin, cout)
+        conv = (cols @ wq).astype(np.float32)
+        bnout, nrm, nrv, mean, inv = bn_fwd(
+            conv, params[li * 3 + 1], params[li * 3 + 2], state[li * 2], state[li * 2 + 1]
+        )
+        new_state += [nrm, nrv]
+        r = np.maximum(bnout, 0.0).reshape(n, dim, dim, cout)
+        if li < 2:
+            nxt, arg = maxpool(r)
+        else:
+            nxt = (r.reshape(n, dim * dim, cout).astype(np.float64).sum(1) / (dim * dim))
+            nxt = nxt.astype(np.float32)
+            arg = None
+        cache.append((cols, wq, conv, mean, inv, bnout, arg))
+        cur = nxt
+        cin = cout
+
+    code = codes[3]
+    head_xq = qdq(cur.reshape(n, FEAT), code)
+    head_wq = qdq(params[9], code)
+    logits = (params[10][None, :] + head_xq @ head_wq).astype(np.float32)
+    loss, correct, dlogits = softmax_ce(logits, y)
+
+    grads = [None] * 11
+    g_logits = (dlogits * np.float32(loss_scale)).astype(np.float32)
+    gq = qdq(g_logits, code)
+    grads[9] = gemm_at_b_chunked(head_xq, gq)
+    db = np.zeros_like(params[10])
+    for bi in range(n):  # raw cotangent, bi-major (backward() in tiny_cnn.rs)
+        db = (db + g_logits[bi]).astype(np.float32)
+    grads[10] = db
+    g = (gq @ head_wq.T).astype(np.float32)
+    for li in (2, 1, 0):
+        dim, cout, code = DIMS[li], CH[li], codes[li]
+        cin_l = 3 if li == 0 else CH[li - 1]
+        rows = n * dim * dim
+        cols, wq, conv, mean, inv, bnout, arg = cache[li]
+        if li == 2:
+            gs = (np.repeat(g[:, None, :], dim * dim, 1) / np.float32(dim * dim))
+            gs = gs.reshape(rows, cout).astype(np.float32)
+        else:
+            gs = maxpool_bwd(g, arg, n, dim, dim, cout).reshape(rows, cout)
+        gs = np.where(bnout <= 0.0, np.float32(0.0), gs).astype(np.float32)
+        dxbn, dgamma, dbeta = bn_bwd(conv, gs, params[li * 3 + 1], mean, inv)
+        grads[li * 3] = qdq(gemm_at_b_chunked(cols, dxbn), code)
+        grads[li * 3 + 1] = dgamma
+        grads[li * 3 + 2] = dbeta
+        if li > 0:  # conv1's input gradient is skipped in the Rust core too
+            dcols = (dxbn @ wq.T).astype(np.float32)
+            g = qdq(col2im(dcols, n, dim, dim, cin_l), code)
+
+    inv_s = np.float32(1.0 / loss_scale)
+    grads = [(gg * inv_s).astype(np.float32) for gg in grads]
+    overflow = any(not np.all(np.isfinite(gg)) for gg in grads)
+    gv, gn = [], []
+    for layer in range(4):
+        s = sq = 0.0
+        cnt = 0
+        for pi, lidx in enumerate(LAYER_OF):
+            if lidx != layer:
+                continue
+            gg = grads[pi].astype(np.float64).reshape(-1)
+            s += gg.sum()
+            sq += (gg * gg).sum()
+            cnt += gg.size
+        mean = s / max(cnt, 1)
+        raw = sq / max(cnt, 1) - mean * mean
+        gv.append(np.float32(raw if np.isnan(raw) else max(raw, 0.0)))
+        gn.append(np.float32(sq))
+    return loss, correct, grads, new_state, overflow, gv, gn
+
+
+def main():
+    model = tiny_cnn.build(10, seed=0)
+    step = jax.jit(train_graph.make_train_step(model))
+    rng = np.random.default_rng(7)
+    n = 8
+    x = rng.standard_normal((n, 32, 32, 3)).astype(np.float32)
+    y = rng.integers(0, 10, n).astype(np.int32)
+    params = [np.asarray(p) for p in model.params]
+    mom = [np.zeros_like(p) for p in params]
+    state = [np.asarray(s) for s in model.state]
+
+    scenarios = [
+        ([FP32] * 4, 1.0, "fp32/scale1"),
+        ([FP32] * 4, 1024.0, "fp32/scale1024"),
+        ([FP16, BF16, FP32, BF16], 256.0, "mixed/scale256"),
+        ([FP16] * 4, 65536.0, "fp16/scale64k"),
+        ([FP16] * 4, 1e30, "fp16/overflow"),
+    ]
+    for codes, scale, tag in scenarios:
+        out = step(
+            tuple(jnp.asarray(p) for p in params),
+            tuple(jnp.asarray(m) for m in mom),
+            tuple(jnp.asarray(s) for s in state),
+            jnp.asarray(x),
+            jnp.asarray(y),
+            jnp.asarray(codes, jnp.int32),
+            jnp.ones(4, jnp.float32),
+            jnp.float32(0.05),
+            jnp.float32(scale),
+            jnp.float32(5e-4),
+        )
+        jp, jm, js, jloss, jcorr, jgv, jgn, jovf = out
+        with np.errstate(over="ignore", invalid="ignore"):
+            tl, tc, tg, tns, tovf, tgv, tgn = twin_step(params, state, x, y, codes, scale)
+        print(
+            f"== {tag}: jax loss {float(jloss):.6f} twin {float(tl):.6f} "
+            f"correct {int(jcorr)}/{tc} overflow {int(jovf)}/{int(tovf)}"
+        )
+        assert abs(float(jloss) - float(tl)) < 2e-4 * max(1.0, abs(float(jloss)))
+        assert int(jcorr) == tc and int(jovf) == int(tovf)
+        if tag == "fp16/overflow":
+            assert tovf and np.allclose(np.asarray(jp[0]), params[0]), "params must hold"
+            print("   overflow contract OK")
+            continue
+        if tag == "fp16/scale64k":
+            # Quantization-cliff regime: statistical agreement only (the
+            # standard integration_runtime.rs applies to fp16).
+            for layer in range(4):
+                a, b = float(np.asarray(jgv)[layer]), float(tgv[layer])
+                assert max(a / b, b / a) < 2.0, f"grad_var off-scale L{layer}: {a} vs {b}"
+            print("   fp16 statistical check OK")
+            continue
+        # mom was zero, so the updated momentum IS g + wd·p — recover the
+        # reference gradient from the optimizer output and compare.
+        for pi in range(11):
+            jgrad = np.asarray(jm[pi]).reshape(-1) - 5e-4 * params[pi].reshape(-1)
+            rel = (np.abs(jgrad - tg[pi].reshape(-1)) / np.maximum(np.abs(jgrad), 1e-4)).max()
+            assert rel < 2e-2, f"{tag} param {pi}: max rel grad diff {rel}"
+        for layer in range(4):
+            a, b = float(np.asarray(jgv)[layer]), float(tgv[layer])
+            assert abs(a - b) < 2e-2 * max(abs(a), 1e-9), f"grad_var L{layer}: {a} vs {b}"
+            a, b = float(np.asarray(jgn)[layer]), float(tgn[layer])
+            assert abs(a - b) < 2e-2 * max(abs(a), 1e-9), f"grad_norm L{layer}: {a} vs {b}"
+        for si in range(6):
+            assert np.abs(np.asarray(js[si]) - tns[si]).max() < 1e-4, f"bn state {si}"
+        print("   grads/stats/state OK")
+    print("TWIN == JAX REFERENCE: all scenarios pass")
+
+
+if __name__ == "__main__":
+    main()

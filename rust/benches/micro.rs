@@ -1,33 +1,107 @@
 //! Micro benchmarks (DESIGN.md P1): hot-path component latencies —
-//! train-step per batch bucket and precision mix, eval, curvature probe,
-//! pure controller overhead, memsim accounting, and the data pipeline.
-//! The controller/memsim rows quantify the paper's "negligible overhead"
-//! claim: control-loop work must be orders of magnitude below a step.
+//! the native compute kernels (gemm / im2col / fused-qdq / conv3x3),
+//! train-step per batch bucket and precision mix, eval, curvature
+//! probe, pure controller overhead, memsim accounting, and the data
+//! pipeline. The controller/memsim rows quantify the paper's
+//! "negligible overhead" claim: control-loop work must be orders of
+//! magnitude below a step.
+//!
+//! Output: the pretty table on stdout plus `BENCH_native.json` (via
+//! `util::bench::BenchReport`), the machine-readable perf record
+//! compared across PRs. `-- --quick` runs every case once — the CI
+//! smoke mode that keeps the kernels compiling and running.
 
 use tri_accel::config::{Config, Method};
 use tri_accel::coordinator::Controller;
 use tri_accel::data::{synthetic::SyntheticCifar, BatchIter};
 use tri_accel::manifest::{BF16, FP16, FP32};
 use tri_accel::memsim::VramSim;
+use tri_accel::runtime::native::{arena::Arena, gemm, ops, pool::Pool};
 use tri_accel::runtime::{Engine, Session, StepCtrl};
-use tri_accel::util::bench::{black_box, Bencher};
+use tri_accel::util::bench::{black_box, BenchReport, Bencher};
+use tri_accel::util::rng::Rng;
 
 fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
     let engine = Engine::native();
     let key = "tiny_cnn_c10";
     let entry = engine.manifest.model(key).unwrap().clone();
     let n_layers = entry.num_layers;
+    let pool = Pool::from_env();
 
-    println!("== micro: L3 hot path ({key}) ==");
-    let heavy = Bencher::heavy();
-    let quick = Bencher::default();
+    let mut report = BenchReport::new("micro");
+    report.meta_str("model", key);
+    report.meta_str("mode", if quick { "quick" } else { "full" });
+    report.meta_num("threads", pool.threads() as f64);
+
+    println!(
+        "== micro: L3 hot path ({key}, {} thread(s){}) ==",
+        pool.threads(),
+        if quick { ", quick" } else { "" }
+    );
+    let heavy = if quick { Bencher::smoke() } else { Bencher::heavy() };
+    let quick_b = if quick { Bencher::smoke() } else { Bencher::default() };
+
+    // -- compute kernels ----------------------------------------------------
+    // conv2-shaped GEMM: M = 32·16·16 pixel rows, K = 9·16, N = 32.
+    {
+        let (m, k, n) = (8192usize, 144usize, 32usize);
+        let mut rng = Rng::new(0xBE);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.next_normal()).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.next_normal()).collect();
+        let mut c = vec![0f32; m * n];
+        let mut arena = Arena::new();
+        report.push(&quick_b.run(&format!("gemm({m}x{k}x{n})"), || {
+            gemm::gemm(&pool, &mut arena, &a, &b, &mut c, m, k, n, false);
+            black_box(c[0]);
+        }));
+        let g: Vec<f32> = (0..m * n).map(|_| rng.next_normal()).collect();
+        let mut dw = vec![0f32; k * n];
+        report.push(&quick_b.run(&format!("gemm_at_b({m}x{k}x{n})"), || {
+            gemm::gemm_at_b(&pool, &mut arena, &a, &g, &mut dw, m, k, n);
+            black_box(dw[0]);
+        }));
+    }
+    {
+        // conv1-shaped im2col at B=32, plain and with fused fp16 qdq.
+        let (n, h, w, cin) = (32usize, 32usize, 32usize, 3usize);
+        let mut rng = Rng::new(0xC0);
+        let x: Vec<f32> = (0..n * h * w * cin).map(|_| rng.next_normal()).collect();
+        let mut cols = vec![0f32; n * h * w * 9 * cin];
+        report.push(&quick_b.run("im2col3x3(B=32, fp32)", || {
+            gemm::im2col3x3_qdq(&pool, &x, n, h, w, cin, FP32, &mut cols);
+            black_box(cols[0]);
+        }));
+        report.push(&quick_b.run("im2col3x3(B=32, fused fp16 qdq)", || {
+            gemm::im2col3x3_qdq(&pool, &x, n, h, w, cin, FP16, &mut cols);
+            black_box(cols[0]);
+        }));
+    }
+    {
+        // The acceptance rows: conv3x3 forward and backward, conv1 shape.
+        let (n, h, w, cin, cout) = (16usize, 32usize, 32usize, 3usize, 16usize);
+        let mut rng = Rng::new(0xC1);
+        let x: Vec<f32> = (0..n * h * w * cin).map(|_| rng.next_normal()).collect();
+        let wt: Vec<f32> = (0..9 * cin * cout).map(|_| rng.next_normal()).collect();
+        let g: Vec<f32> = (0..n * h * w * cout).map(|_| rng.next_normal()).collect();
+        report.push(&quick_b.run("conv3x3_fwd(B=16, 32x32x3->16)", || {
+            black_box(ops::conv3x3_fwd(&x, n, h, w, cin, &wt, cout));
+        }));
+        report.push(&quick_b.run("conv3x3_bwd(B=16, 32x32x3->16)", || {
+            black_box(ops::conv3x3_bwd(&x, n, h, w, cin, &wt, cout, &g));
+        }));
+        report.push(&quick_b.run("conv3x3_fwd+bwd(B=16, 32x32x3->16)", || {
+            black_box(ops::conv3x3_fwd(&x, n, h, w, cin, &wt, cout));
+            black_box(ops::conv3x3_bwd(&x, n, h, w, cin, &wt, cout, &g));
+        }));
+    }
 
     // -- data pipeline ----------------------------------------------------
     let ds = SyntheticCifar::new(10, 4096, true, 0);
     let mut it = BatchIter::new(Box::new(ds), 0, true);
-    quick.run("data/next_batch(B=32, augmented)", || {
+    report.push(&quick_b.run("data/next_batch(B=32, augmented)", || {
         black_box(it.next_batch(32).unwrap());
-    });
+    }));
 
     // -- train step per bucket ---------------------------------------------
     let mut session = Session::init(&engine, key, 0).unwrap();
@@ -37,55 +111,60 @@ fn main() {
         }
         let batch = it.next_batch(b).unwrap();
         let ctrl = StepCtrl::uniform(n_layers, BF16, 0.05, 5e-4);
-        heavy.run(&format!("train_step(B={b}, bf16)"), || {
+        report.push(&heavy.run(&format!("train_step(B={b}, bf16)"), || {
             black_box(session.train_step(&batch, &ctrl).unwrap());
-        });
+        }));
     }
 
     // -- precision mix sensitivity at fixed B -------------------------------
     let batch = it.next_batch(32).unwrap();
     for (name, code) in [("fp16", FP16), ("bf16", BF16), ("fp32", FP32)] {
         let ctrl = StepCtrl::uniform(n_layers, code, 0.05, 5e-4);
-        heavy.run(&format!("train_step(B=32, uniform {name})"), || {
+        report.push(&heavy.run(&format!("train_step(B=32, uniform {name})"), || {
             black_box(session.train_step(&batch, &ctrl).unwrap());
-        });
+        }));
     }
 
     // -- eval + curvature ---------------------------------------------------
     let eval_b = it.next_batch(16).unwrap();
     let codes = vec![FP32; n_layers];
-    heavy.run("eval_batch(B=16)", || {
+    report.push(&heavy.run("eval_batch(B=16)", || {
         black_box(session.eval_batch(&eval_b, &codes).unwrap());
-    });
+    }));
     let curv_b = it.next_batch(entry.curv_batch).unwrap();
-    heavy.run(&format!("curv_step(B={})", entry.curv_batch), || {
+    report.push(&heavy.run(&format!("curv_step(B={})", entry.curv_batch), || {
         black_box(session.curv_step(&curv_b, &codes, 7).unwrap());
-    });
+    }));
 
     // -- controller-only overhead (the paper's "negligible" claim) ----------
     let mut cfg = Config::cell(key, Method::TriAccel, 0);
     cfg.t_ctrl = 1;
     let mut ctl = Controller::new(&cfg, &entry);
     let vars: Vec<f32> = (0..n_layers).map(|i| 1e-6 * (i + 1) as f32).collect();
-    quick.run("controller/observe_step", || {
+    report.push(&quick_b.run("controller/observe_step", || {
         ctl.observe_step(black_box(&vars), false);
-    });
+    }));
     let mut step = 0u64;
-    quick.run("controller/control_window", || {
+    report.push(&quick_b.run("controller/control_window", || {
         step += 1;
         black_box(ctl.control_window(step, 0.8, 1.0, |_| true));
-    });
+    }));
 
     // -- memsim accounting ---------------------------------------------------
     let mut sim = VramSim::new(&entry, 0.45, 0.01, 0);
     let codes2: Vec<i32> = (0..n_layers).map(|i| (i % 3) as i32).collect();
-    quick.run("memsim/usage", || {
+    report.push(&quick_b.run("memsim/usage", || {
         black_box(sim.usage(96, &codes2, false));
-    });
-    quick.run("memsim/would_fit", || {
+    }));
+    report.push(&quick_b.run("memsim/would_fit", || {
         black_box(sim.would_fit(128, &codes2, false));
-    });
+    }));
 
-    println!("\n(controller+memsim rows are the per-step control overhead;");
+    let out = std::path::Path::new("BENCH_native.json");
+    match report.write(out) {
+        Ok(()) => println!("\nwrote {} rows to {}", report.len(), out.display()),
+        Err(e) => eprintln!("\nwarning: could not write {}: {e}", out.display()),
+    }
+    println!("(controller+memsim rows are the per-step control overhead;");
     println!(" compare against the train_step rows — expect ≥1000× headroom.)");
 }

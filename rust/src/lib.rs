@@ -35,6 +35,20 @@
 //!
 //! Select at the CLI with `--backend native|pjrt`, or in code via
 //! [`runtime::Engine::native`] / `Engine::pjrt` / [`runtime::Engine::new`].
+//!
+//! ## Performance
+//!
+//! The native backend's compute core runs convolution as fused-qdq
+//! im2col + cache-blocked register-tiled GEMM
+//! (`runtime/native/gemm.rs`), multi-threaded by a deterministic
+//! worker pool (`runtime/native/pool.rs`): `TRIACCEL_THREADS=N` (or
+//! `--threads N` / [`runtime::Engine::native_with_threads`]) changes
+//! wall-clock only — fixed work chunks and ordered reductions keep
+//! training output bit-identical for every thread count. Scratch
+//! comes from a zero-alloc arena (`runtime/native/arena.rs`): a warm
+//! train step performs no buffer allocations. `cargo bench --bench
+//! micro` records the hot-path latencies to `BENCH_native.json` (see
+//! README "Performance" for the schema).
 
 pub mod checkpoint;
 pub mod config;

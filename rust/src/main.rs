@@ -11,6 +11,9 @@
 //! Backend selection: `--backend native` (default — the hermetic
 //! pure-Rust executor, no artifacts needed) or `--backend pjrt`
 //! (`--features pjrt` builds only; reads `--artifacts <dir>`).
+//! `--threads N` pins the native compute core's worker count
+//! (equivalent to `TRIACCEL_THREADS=N`; output is bit-identical for
+//! every value — see README "Performance").
 
 use std::path::PathBuf;
 
@@ -45,10 +48,21 @@ fn run() -> Result<()> {
     }
 }
 
-/// Build the engine from `--backend` / `--artifacts`.
+/// Build the engine from `--backend` / `--artifacts` / `--threads`
+/// (`--threads 0` = auto: `TRIACCEL_THREADS`, else machine parallelism
+/// capped at 8; native results are bit-identical for any count).
 fn engine_from(args: &Args) -> Result<Engine> {
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let backend = args.get_or("backend", "native");
+    let threads: usize = args.parse_or("threads", 0)?;
+    if threads > 0 {
+        anyhow::ensure!(
+            backend == "native",
+            "--threads pins the native compute core's workers; backend `{backend}` ignores it \
+             (drop the flag or use --backend native)"
+        );
+        return Ok(Engine::native_with_threads(threads));
+    }
     Engine::by_name(&backend, &artifacts)
 }
 
@@ -86,6 +100,7 @@ fn compare(args: &Args) -> Result<()> {
     // compatibility — compare needs no backend.
     let _ = args.get("artifacts");
     let _ = args.get("backend");
+    let _ = args.get("threads");
     args.reject_unknown()?;
     let load = |p: &str| -> Result<(f64, f64, f64, f64)> {
         let j = tri_accel::util::json::Json::parse(&std::fs::read_to_string(p)?)

@@ -25,10 +25,23 @@ pub struct Engine {
 
 impl Engine {
     /// The hermetic pure-Rust engine (built-in manifest, no disk IO).
+    /// Worker count comes from `TRIACCEL_THREADS` (default: machine
+    /// parallelism capped at 8); results are bit-identical regardless.
     pub fn native() -> Engine {
         Engine {
             manifest: native::builtin_manifest(),
             backend: Box::new(native::NativeBackend::new()),
+        }
+    }
+
+    /// The native engine with an explicit worker count (the CLI's
+    /// `--threads` flag and the cross-thread determinism tests — an
+    /// env-free hook, so parallel test runs don't race on the process
+    /// environment).
+    pub fn native_with_threads(threads: usize) -> Engine {
+        Engine {
+            manifest: native::builtin_manifest(),
+            backend: Box::new(native::NativeBackend::with_threads(threads)),
         }
     }
 
@@ -96,6 +109,13 @@ mod tests {
         assert_eq!(e.platform(), "native-cpu");
         assert!(e.manifest.model("tiny_cnn_c10").is_ok());
         assert!(e.manifest.model("resnet18_c10").is_err(), "not built in");
+    }
+
+    #[test]
+    fn native_with_threads_serves_same_manifest() {
+        let e = Engine::native_with_threads(2);
+        assert_eq!(e.platform(), "native-cpu");
+        assert!(e.manifest.model("tiny_cnn_c10").is_ok());
     }
 
     #[test]

@@ -1,0 +1,167 @@
+//! Scratch-buffer arena for the native compute core.
+//!
+//! A free-list of reusable `Vec<f32>` (and `Vec<u8>`) buffers: `take`
+//! hands out a zero-filled buffer, preferring the smallest pooled one
+//! whose capacity already fits, and `put` checks it back in. After one
+//! warm-up step per batch bucket every buffer the train/eval/curvature
+//! paths need is resident, so steady-state training performs no buffer
+//! allocations at all — the property pinned by
+//! [`fresh_allocs`](Arena::fresh_allocs) and the zero-alloc test in
+//! `tiny_cnn.rs`.
+//!
+//! Buffers are plain owned `Vec`s, so any number can be live at once
+//! (im2col panels, GEMM partials, forward caches, gradients) with no
+//! borrow gymnastics; discipline is simply that every `take` is paired
+//! with a `put` once the buffer is dead.
+
+/// Best-fit pop from a free list, zero-filled to `len`. Zeroing is a
+/// deliberate simplicity/safety trade: a non-zeroing reuse would need
+/// `unsafe` (`set_len` over possibly-uninit capacity), and the memset
+/// is a single streaming pass — small next to the GEMMs these buffers
+/// feed. The per-element-type pools share this one implementation so
+/// the fit heuristic and alloc accounting can't drift apart.
+fn take_from<T: Copy + Default>(free: &mut Vec<Vec<T>>, fresh: &mut u64, len: usize) -> Vec<T> {
+    let mut best: Option<usize> = None;
+    for (i, b) in free.iter().enumerate() {
+        let better = match best {
+            None => true,
+            Some(j) => b.capacity() < free[j].capacity(),
+        };
+        if b.capacity() >= len && better {
+            best = Some(i);
+        }
+    }
+    let mut v = match best {
+        Some(i) => free.swap_remove(i),
+        None => {
+            *fresh += 1;
+            Vec::with_capacity(len)
+        }
+    };
+    v.clear();
+    v.resize(len, T::default());
+    v
+}
+
+fn put_into<T>(free: &mut Vec<Vec<T>>, v: Vec<T>) {
+    if v.capacity() > 0 {
+        free.push(v);
+    }
+}
+
+/// Reusable scratch buffers for the zero-alloc training hot path.
+#[derive(Debug, Default)]
+pub struct Arena {
+    free: Vec<Vec<f32>>,
+    free_u8: Vec<Vec<u8>>,
+    fresh: u64,
+}
+
+impl Arena {
+    pub fn new() -> Arena {
+        Arena::default()
+    }
+
+    /// Borrow a zero-filled `f32` buffer of exactly `len` elements.
+    /// Reuses the best-fitting pooled buffer (no reallocation when its
+    /// capacity suffices); allocates fresh only on a cold arena.
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        take_from(&mut self.free, &mut self.fresh, len)
+    }
+
+    /// Return a buffer for reuse.
+    pub fn put(&mut self, v: Vec<f32>) {
+        put_into(&mut self.free, v);
+    }
+
+    /// Return a batch of buffers for reuse.
+    pub fn put_all(&mut self, vs: impl IntoIterator<Item = Vec<f32>>) {
+        for v in vs {
+            self.put(v);
+        }
+    }
+
+    /// Borrow a zero-filled byte buffer (max-pool argmax maps).
+    pub fn take_u8(&mut self, len: usize) -> Vec<u8> {
+        take_from(&mut self.free_u8, &mut self.fresh, len)
+    }
+
+    /// Return a byte buffer for reuse.
+    pub fn put_u8(&mut self, v: Vec<u8>) {
+        put_into(&mut self.free_u8, v);
+    }
+
+    /// Buffers ever allocated fresh. Steady-state training must keep
+    /// this flat across steps — the zero-alloc contract.
+    pub fn fresh_allocs(&self) -> u64 {
+        self.fresh
+    }
+
+    /// Buffers currently checked in (leak canary for take/put pairing).
+    pub fn pooled(&self) -> usize {
+        self.free.len() + self.free_u8.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_is_zero_filled_even_after_reuse() {
+        let mut a = Arena::new();
+        let mut v = a.take(8);
+        v.iter_mut().for_each(|x| *x = 7.0);
+        a.put(v);
+        let v2 = a.take(4);
+        assert_eq!(v2, vec![0.0; 4], "reused buffer must be re-zeroed");
+        assert!(v2.capacity() >= 8, "reuses the pooled buffer");
+    }
+
+    #[test]
+    fn warm_arena_stops_allocating() {
+        let mut a = Arena::new();
+        for _ in 0..3 {
+            let x = a.take(100);
+            let y = a.take(50);
+            a.put(x);
+            a.put(y);
+        }
+        let warm = a.fresh_allocs();
+        for _ in 0..10 {
+            let x = a.take(100);
+            let y = a.take(50);
+            let z = a.take(10); // fits inside either pooled buffer
+            a.put(z);
+            a.put(y);
+            a.put(x);
+        }
+        // take(10) grabs the 50-cap buffer (best fit), so the third
+        // concurrent buffer forced exactly one more allocation, after
+        // which the working set is warm.
+        assert!(a.fresh_allocs() <= warm + 1, "steady state must not allocate");
+    }
+
+    #[test]
+    fn best_fit_prefers_smallest_adequate() {
+        let mut a = Arena::new();
+        a.put(Vec::with_capacity(1000));
+        a.put(Vec::with_capacity(10));
+        let v = a.take(5);
+        assert!(v.capacity() < 1000, "must not burn the big buffer on a small ask");
+        assert_eq!(a.fresh_allocs(), 0);
+    }
+
+    #[test]
+    fn byte_pool_is_independent() {
+        let mut a = Arena::new();
+        let b = a.take_u8(16);
+        assert_eq!(b, vec![0u8; 16]);
+        a.put_u8(b);
+        let before = a.fresh_allocs();
+        let b2 = a.take_u8(8);
+        assert_eq!(a.fresh_allocs(), before);
+        a.put_u8(b2);
+        assert_eq!(a.pooled(), 1);
+    }
+}

@@ -1,0 +1,553 @@
+//! High-throughput f32 GEMM core for the native backend, plus the
+//! im2col/col2im pack stage that turns SAME 3×3 convolution into GEMM.
+//!
+//! Kernel structure (the FlashOptim-style restructuring the Tri-Accel
+//! wall-clock claims lean on):
+//! * `B` is packed into `NR`-wide column panels once per call, so the
+//!   micro-kernel streams both operands contiguously;
+//! * a 4×-unrolled register-tiled micro-kernel ([`MR`]×[`NR`]
+//!   accumulators live in registers across the whole K loop — the
+//!   seed's scalar kernels re-loaded/stored the output row once per
+//!   input channel, which was the dominant cost);
+//! * for convolution, im2col itself plays the role of the A-panel pack
+//!   (rows are already contiguous K-major), with the fp16/bf16 qdq
+//!   round-trip fused into the pack instead of materializing a
+//!   quantized activation copy.
+//!
+//! Determinism contract (shared with [`super::pool`]): every output
+//! element accumulates in a fixed order — ascending k within a chunk,
+//! and cross-chunk reductions ([`gemm_at_b`]) combine partials in chunk
+//! index order on the caller thread. Chunk sizes are compile-time
+//! constants, never derived from the thread count, so results are
+//! bit-identical for any `TRIACCEL_THREADS`.
+
+#![allow(clippy::too_many_arguments)]
+
+use super::arena::Arena;
+use super::pool::Pool;
+use super::qdq;
+
+/// Micro-tile rows (the 4× unroll).
+const MR: usize = 4;
+/// Micro-tile columns: one cache-line half / two SSE registers per row.
+const NR: usize = 8;
+/// Output rows per parallel chunk — a fixed multiple of [`MR`], so
+/// chunk boundaries (and therefore bits) ignore the thread count.
+const ROW_CHUNK: usize = 128;
+/// Reduction rows per partial product in [`gemm_at_b`] (fixed).
+const RED_CHUNK: usize = 1024;
+/// Flop threshold below which spawning threads costs more than it buys.
+/// Compared against problem size only — identical for every thread
+/// count, so the serial/parallel decision is itself deterministic.
+const PAR_MIN_FLOPS: usize = 1 << 20;
+/// Element threshold for the copy-bound pack/unpack stages.
+const PAR_MIN_ELEMS: usize = 1 << 19;
+
+#[inline]
+fn panels_of(n: usize) -> usize {
+    n.div_ceil(NR)
+}
+
+/// Pack `b` (k×n row-major) into `NR`-wide column panels, zero-padded
+/// to a multiple of `NR` columns: panel `p` stores `b[.., p*NR..]` as
+/// `k` rows of `NR` contiguous values.
+fn pack_b(b: &[f32], k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), panels_of(n) * k * NR);
+    for p in 0..panels_of(n) {
+        let c0 = p * NR;
+        let cols = (n - c0).min(NR);
+        let dst = &mut out[p * k * NR..(p + 1) * k * NR];
+        for kk in 0..k {
+            dst[kk * NR..kk * NR + cols].copy_from_slice(&b[kk * n + c0..kk * n + c0 + cols]);
+            dst[kk * NR + cols..(kk + 1) * NR].fill(0.0);
+        }
+    }
+}
+
+/// One MR×NR register tile: `acc[i][j] += Σ_k a[i][k] · bp[k*NR+j]`.
+/// Each output element accumulates in ascending-k order — the property
+/// the cross-thread bit-exactness contract relies on (vectorization
+/// across `j` never reorders the per-element k chain).
+#[inline]
+fn micro_kernel(a: [&[f32]; MR], bp: &[f32], k: usize, acc: &mut [[f32; NR]; MR]) {
+    for kk in 0..k {
+        let brow = &bp[kk * NR..kk * NR + NR];
+        let a0 = a[0][kk];
+        let a1 = a[1][kk];
+        let a2 = a[2][kk];
+        let a3 = a[3][kk];
+        for j in 0..NR {
+            let bv = brow[j];
+            acc[0][j] += a0 * bv;
+            acc[1][j] += a1 * bv;
+            acc[2][j] += a2 * bv;
+            acc[3][j] += a3 * bv;
+        }
+    }
+}
+
+/// Macro-kernel over one row block of C (rows `row0..row0+rows` of the
+/// full problem, stored in `c_chunk`).
+fn gemm_rows(
+    a: &[f32],
+    bp: &[f32],
+    c_chunk: &mut [f32],
+    row0: usize,
+    k: usize,
+    n: usize,
+    accumulate: bool,
+) {
+    let rows = c_chunk.len() / n;
+    let panels = panels_of(n);
+    let mut i = 0;
+    while i < rows {
+        let mr = (rows - i).min(MR);
+        // Row slices of A for this tile; tail rows alias row 0 (their
+        // lanes are computed but never stored).
+        let ar: [&[f32]; MR] = std::array::from_fn(|t| {
+            let rr = row0 + i + if t < mr { t } else { 0 };
+            &a[rr * k..rr * k + k]
+        });
+        for p in 0..panels {
+            let c0 = p * NR;
+            let cols = (n - c0).min(NR);
+            let mut acc = [[0f32; NR]; MR];
+            if accumulate {
+                for t in 0..mr {
+                    let base = (i + t) * n + c0;
+                    acc[t][..cols].copy_from_slice(&c_chunk[base..base + cols]);
+                }
+            }
+            micro_kernel(ar, &bp[p * k * NR..(p + 1) * k * NR], k, &mut acc);
+            for t in 0..mr {
+                let base = (i + t) * n + c0;
+                c_chunk[base..base + cols].copy_from_slice(&acc[t][..cols]);
+            }
+        }
+        i += mr;
+    }
+}
+
+/// `C (m×n) = A (m×k) · B (k×n)`, overwriting `c`; with `accumulate`
+/// the product is added onto the existing contents instead (per-element
+/// order: `c_init + a_0·b_0 + a_1·b_1 + …`, which is how the dense
+/// layer preloads its bias). Parallel over fixed [`ROW_CHUNK`] blocks.
+pub fn gemm(
+    pool: &Pool,
+    arena: &mut Arena,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    accumulate: bool,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        if !accumulate {
+            c.fill(0.0);
+        }
+        return;
+    }
+    let mut bp = arena.take(panels_of(n) * k * NR);
+    pack_b(b, k, n, &mut bp);
+    let parallel = 2 * m * k * n >= PAR_MIN_FLOPS;
+    pool.for_each_chunk(c, ROW_CHUNK * n, parallel, |ci, c_chunk| {
+        gemm_rows(a, &bp, c_chunk, ci * ROW_CHUNK, k, n, accumulate);
+    });
+    arena.put(bp);
+}
+
+/// `out (cols×rows) = mᵀ` for `m` stored (rows×cols) row-major.
+pub fn transpose(m: &[f32], rows: usize, cols: usize, out: &mut [f32]) {
+    debug_assert_eq!(m.len(), rows * cols);
+    debug_assert_eq!(out.len(), rows * cols);
+    for r in 0..rows {
+        for c in 0..cols {
+            out[c * rows + r] = m[r * cols + c];
+        }
+    }
+}
+
+/// `C (m×n) = A (m×k) · Bᵀ` with `B` stored (n×k) — the `g · Wᵀ`
+/// backward shape. Implemented as a one-shot transpose into arena
+/// scratch followed by [`gemm`], keeping the packed fast path and the
+/// deterministic row partition.
+pub fn gemm_a_bt(
+    pool: &Pool,
+    arena: &mut Arena,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    accumulate: bool,
+) {
+    debug_assert_eq!(b.len(), n * k);
+    let mut bt = arena.take(k * n);
+    transpose(b, n, k, &mut bt);
+    gemm(pool, arena, a, &bt, c, m, k, n, accumulate);
+    arena.put(bt);
+}
+
+/// `C (ka×n) = Aᵀ · B` with `A` (m×ka) and `B` (m×n) — the
+/// `x_colsᵀ · g` weight-gradient shape, a reduction over the m
+/// (row/pixel) dimension.
+///
+/// Parallel scheme: fixed [`RED_CHUNK`]-row partial products computed
+/// independently (rank-1 updates in ascending m order within a chunk),
+/// then an *ordered* reduction in chunk-index order on the caller
+/// thread. The partial/reduce structure is used even serially, so one
+/// thread and eight threads produce the same bits.
+pub fn gemm_at_b(
+    pool: &Pool,
+    arena: &mut Arena,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    ka: usize,
+    n: usize,
+) {
+    debug_assert_eq!(a.len(), m * ka);
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(c.len(), ka * n);
+    c.fill(0.0);
+    if m == 0 || ka == 0 || n == 0 {
+        return;
+    }
+    let n_chunks = m.div_ceil(RED_CHUNK);
+    let mut partials = arena.take(n_chunks * ka * n);
+    let parallel = 2 * m * ka * n >= PAR_MIN_FLOPS;
+    pool.for_each_chunk(&mut partials, ka * n, parallel, |ci, part| {
+        let lo = ci * RED_CHUNK;
+        let hi = (lo + RED_CHUNK).min(m);
+        for mm in lo..hi {
+            let arow = &a[mm * ka..(mm + 1) * ka];
+            let brow = &b[mm * n..(mm + 1) * n];
+            for (i, &av) in arow.iter().enumerate() {
+                let prow = &mut part[i * n..(i + 1) * n];
+                for (pv, &bv) in prow.iter_mut().zip(brow) {
+                    *pv += av * bv;
+                }
+            }
+        }
+    });
+    // Ordered reduction: chunk-index order, fixed for every thread count.
+    for ci in 0..n_chunks {
+        let part = &partials[ci * ka * n..(ci + 1) * ka * n];
+        for (cv, &pv) in c.iter_mut().zip(part) {
+            *cv += pv;
+        }
+    }
+    arena.put(partials);
+}
+
+/// im2col for SAME-padded 3×3 stride-1 convolution with the precision
+/// round-trip fused into the pack:
+/// `cols[m, (ky*3+kx)*cin + ci] = qdq(x[bi, oy+ky-1, ox+kx-1, ci])`
+/// with `m = (bi*h + oy)*w + ox` and zeros in the padding halo. The
+/// column layout matches the HWIO weight layout, so
+/// `cols · W (9cin×cout)` is exactly `conv3x3_fwd`. One parallel chunk
+/// per image; each chunk owns that image's row block.
+pub fn im2col3x3_qdq(
+    pool: &Pool,
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    code: i32,
+    cols: &mut [f32],
+) {
+    let k9 = 9 * cin;
+    debug_assert_eq!(x.len(), n * h * w * cin);
+    debug_assert_eq!(cols.len(), n * h * w * k9);
+    let parallel = cols.len() >= PAR_MIN_ELEMS;
+    pool.for_each_chunk(cols, h * w * k9, parallel, |bi, img| {
+        for oy in 0..h {
+            for ox in 0..w {
+                let mrow = &mut img[(oy * w + ox) * k9..(oy * w + ox + 1) * k9];
+                for ky in 0..3usize {
+                    let iy = oy as isize + ky as isize - 1;
+                    for kx in 0..3usize {
+                        let ix = ox as isize + kx as isize - 1;
+                        let dst = &mut mrow[(ky * 3 + kx) * cin..(ky * 3 + kx + 1) * cin];
+                        if iy < 0 || iy >= h as isize || ix < 0 || ix >= w as isize {
+                            dst.fill(0.0);
+                        } else {
+                            let base = ((bi * h + iy as usize) * w + ix as usize) * cin;
+                            qdq::qdq_into(&x[base..base + cin], dst, code);
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Gather-form col2im (the adjoint of [`im2col3x3_qdq`]'s layout):
+/// `dx[bi,iy,ix,ci] = Σ_(ky,kx) dcols[(bi*h+oy)*w+ox, (ky*3+kx)*cin+ci]`
+/// over the valid output positions `oy = iy+1-ky`, `ox = ix+1-kx`.
+/// Each `dx` element is written by exactly one chunk with a fixed
+/// (ky,kx) summation order — no scatter races, deterministic bits.
+pub fn col2im3x3(
+    pool: &Pool,
+    dcols: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    dx: &mut [f32],
+) {
+    let k9 = 9 * cin;
+    debug_assert_eq!(dcols.len(), n * h * w * k9);
+    debug_assert_eq!(dx.len(), n * h * w * cin);
+    let parallel = dcols.len() >= PAR_MIN_ELEMS;
+    pool.for_each_chunk(dx, h * w * cin, parallel, |bi, img| {
+        for iy in 0..h {
+            for ix in 0..w {
+                let drow = &mut img[(iy * w + ix) * cin..(iy * w + ix + 1) * cin];
+                drow.fill(0.0);
+                for ky in 0..3usize {
+                    let oy = iy as isize + 1 - ky as isize;
+                    if oy < 0 || oy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..3usize {
+                        let ox = ix as isize + 1 - kx as isize;
+                        if ox < 0 || ox >= w as isize {
+                            continue;
+                        }
+                        let m = (bi * h + oy as usize) * w + ox as usize;
+                        let base = m * k9 + (ky * 3 + kx) * cin;
+                        let src = &dcols[base..base + cin];
+                        for (d, &s) in drow.iter_mut().zip(src) {
+                            *d += s;
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::{FP16, FP32};
+    use crate::util::rng::Rng;
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.next_normal()).collect()
+    }
+
+    fn gemm_naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0f64; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                let av = a[i * k + kk] as f64;
+                for j in 0..n {
+                    c[i * n + j] += av * b[kk * n + j] as f64;
+                }
+            }
+        }
+        c.iter().map(|&v| v as f32).collect()
+    }
+
+    fn close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+            let scale = x.abs().max(y.abs()).max(1.0);
+            assert!((x - y).abs() / scale < tol, "{what}[{i}]: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn gemm_matches_naive_over_odd_shapes() {
+        let mut rng = Rng::new(11);
+        let shapes =
+            [(1usize, 1usize, 1usize), (5, 3, 9), (17, 27, 16), (130, 144, 33), (64, 288, 100)];
+        for &(m, k, n) in &shapes {
+            let a = randv(&mut rng, m * k);
+            let b = randv(&mut rng, k * n);
+            let mut c = vec![0f32; m * n];
+            let pool = Pool::new(1);
+            let mut arena = Arena::new();
+            gemm(&pool, &mut arena, &a, &b, &mut c, m, k, n, false);
+            close(&c, &gemm_naive(&a, &b, m, k, n), 1e-4, &format!("gemm {m}x{k}x{n}"));
+        }
+    }
+
+    #[test]
+    fn gemm_accumulate_adds_onto_preload() {
+        let mut rng = Rng::new(12);
+        let (m, k, n) = (9usize, 7usize, 11usize);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let bias = randv(&mut rng, n);
+        let mut c = vec![0f32; m * n];
+        for r in 0..m {
+            c[r * n..(r + 1) * n].copy_from_slice(&bias);
+        }
+        let pool = Pool::new(1);
+        let mut arena = Arena::new();
+        gemm(&pool, &mut arena, &a, &b, &mut c, m, k, n, true);
+        let plain = gemm_naive(&a, &b, m, k, n);
+        for r in 0..m {
+            for j in 0..n {
+                let want = plain[r * n + j] + bias[j];
+                assert!((c[r * n + j] - want).abs() < 1e-4 * want.abs().max(1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_bits_identical_across_thread_counts() {
+        let mut rng = Rng::new(13);
+        let (m, k, n) = (400usize, 96usize, 40usize); // crosses the parallel threshold
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let run = |threads: usize| {
+            let pool = Pool::new(threads);
+            let mut arena = Arena::new();
+            let mut c = vec![0f32; m * n];
+            gemm(&pool, &mut arena, &a, &b, &mut c, m, k, n, false);
+            c.iter().map(|v| v.to_bits()).collect::<Vec<u32>>()
+        };
+        let base = run(1);
+        for t in [2usize, 4, 8] {
+            assert_eq!(run(t), base, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn at_b_matches_naive_and_is_thread_invariant() {
+        let mut rng = Rng::new(14);
+        let (m, ka, n) = (2500usize, 27usize, 16usize); // > 2 reduction chunks
+        let a = randv(&mut rng, m * ka);
+        let b = randv(&mut rng, m * n);
+        let run = |threads: usize| {
+            let pool = Pool::new(threads);
+            let mut arena = Arena::new();
+            let mut c = vec![0f32; ka * n];
+            gemm_at_b(&pool, &mut arena, &a, &b, &mut c, m, ka, n);
+            c
+        };
+        let c1 = run(1);
+        // naive: c[i,j] = sum_m a[m,i] b[m,j]
+        let mut want = vec![0f64; ka * n];
+        for mm in 0..m {
+            for i in 0..ka {
+                for j in 0..n {
+                    want[i * n + j] += a[mm * ka + i] as f64 * b[mm * n + j] as f64;
+                }
+            }
+        }
+        let wantf: Vec<f32> = want.iter().map(|&v| v as f32).collect();
+        close(&c1, &wantf, 1e-3, "at_b");
+        for t in [2usize, 4] {
+            let ct = run(t);
+            assert_eq!(
+                c1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                ct.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "threads={t}"
+            );
+        }
+    }
+
+    #[test]
+    fn a_bt_matches_naive() {
+        let mut rng = Rng::new(15);
+        let (m, k, n) = (13usize, 10usize, 21usize);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, n * k); // stored n×k
+        let pool = Pool::new(2);
+        let mut arena = Arena::new();
+        let mut c = vec![0f32; m * n];
+        gemm_a_bt(&pool, &mut arena, &a, &b, &mut c, m, k, n, false);
+        let mut want = vec![0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0f64;
+                for kk in 0..k {
+                    s += a[i * k + kk] as f64 * b[j * k + kk] as f64;
+                }
+                want[i * n + j] = s as f32;
+            }
+        }
+        close(&c, &want, 1e-4, "a_bt");
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(16);
+        let (r, c) = (7usize, 5usize);
+        let m = randv(&mut rng, r * c);
+        let mut t = vec![0f32; r * c];
+        transpose(&m, r, c, &mut t);
+        let mut back = vec![0f32; r * c];
+        transpose(&t, c, r, &mut back);
+        assert_eq!(m, back);
+        // t is (c × r): t[cc*r + rr] = m[rr*c + cc]; spot-check (0, 3).
+        assert_eq!(t[3], m[3 * c], "t[0][3] must be m[3][0]");
+    }
+
+    #[test]
+    fn im2col_identity_kernel_reproduces_input() {
+        // cols · e_center must reproduce x (SAME padding sanity).
+        let (n, h, w, cin) = (1usize, 3usize, 3usize, 1usize);
+        let x: Vec<f32> = (1..=9).map(|v| v as f32).collect();
+        let pool = Pool::new(1);
+        let mut cols = vec![0f32; n * h * w * 9 * cin];
+        im2col3x3_qdq(&pool, &x, n, h, w, cin, FP32, &mut cols);
+        // center tap is (ky=1,kx=1) -> column 4.
+        for m in 0..9 {
+            assert_eq!(cols[m * 9 + 4], x[m], "center column");
+        }
+        // top-left output pixel reads the halo for (ky=0,kx=0).
+        assert_eq!(cols[0], 0.0);
+        // and x[0,0] appears at output (1,1) tap (0,0): m=4.
+        assert_eq!(cols[4 * 9], x[0]);
+    }
+
+    #[test]
+    fn im2col_fuses_qdq() {
+        let (n, h, w, cin) = (1usize, 2usize, 2usize, 2usize);
+        let x = vec![1.0002f32, -3.00007, 0.5, 2.0, 1.0, -1.0, 0.25, 65519.9];
+        let pool = Pool::new(1);
+        let mut cols = vec![0f32; n * h * w * 9 * cin];
+        im2col3x3_qdq(&pool, &x, n, h, w, cin, FP16, &mut cols);
+        use crate::runtime::native::qdq::f16_qdq;
+        // center tap of pixel (0,0) is x[0..2] rounded through fp16.
+        assert_eq!(cols[4 * cin], f16_qdq(x[0]));
+        assert_eq!(cols[4 * cin + 1], f16_qdq(x[1]));
+        assert_ne!(cols[4 * cin], x[0], "fp16 rounding must be visible");
+    }
+
+    #[test]
+    fn col2im_is_adjoint_of_im2col() {
+        // <im2col(x), y> == <x, col2im(y)> pins the index maps to each
+        // other (the standard adjoint identity).
+        let mut rng = Rng::new(17);
+        let (n, h, w, cin) = (2usize, 4usize, 3usize, 3usize);
+        let x = randv(&mut rng, n * h * w * cin);
+        let y = randv(&mut rng, n * h * w * 9 * cin);
+        let pool = Pool::new(1);
+        let mut cols = vec![0f32; y.len()];
+        im2col3x3_qdq(&pool, &x, n, h, w, cin, FP32, &mut cols);
+        let mut back = vec![0f32; x.len()];
+        col2im3x3(&pool, &y, n, h, w, cin, &mut back);
+        let lhs: f64 = cols.iter().zip(&y).map(|(&a, &b)| a as f64 * b as f64).sum();
+        let rhs: f64 = x.iter().zip(&back).map(|(&a, &b)| a as f64 * b as f64).sum();
+        assert!((lhs - rhs).abs() < 1e-3 * lhs.abs().max(1.0), "{lhs} vs {rhs}");
+    }
+}

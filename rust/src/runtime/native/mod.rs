@@ -1,23 +1,63 @@
-//! The native reference backend: a pure-Rust executor for the manifest
-//! entry points, needing no artifacts, no Python, and no native deps.
+//! The native backend: a pure-Rust executor for the manifest entry
+//! points, needing no artifacts, no Python, and no native deps.
 //!
 //! It ships its own built-in manifest (the same schema
 //! `python/compile/aot.py` emits), so `Engine::native()` works from a
 //! fresh checkout. Currently implements the `tiny_cnn` architecture —
 //! the CI-speed model the integration tests and quickstart use; larger
 //! models stay on the artifact-driven PJRT backend.
+//!
+//! Compute core (see the "Performance" section of the README):
+//! * [`gemm`] — cache-blocked, register-tiled f32 GEMM plus the
+//!   im2col/col2im pack stage (with fused fp16/bf16 qdq); conv and
+//!   dense both execute on it.
+//! * [`pool`] — deterministic scoped-thread worker pool: fixed work
+//!   chunks + ordered reductions, so results are bit-identical for any
+//!   `TRIACCEL_THREADS` value.
+//! * [`arena`] — scratch-buffer free list; a warm train step performs
+//!   zero buffer allocations.
+//! All three meet in [`Exec`], the per-backend execution context.
 
-mod ops;
+pub mod arena;
+pub mod gemm;
+pub mod ops;
+pub mod pool;
 pub mod qdq;
 mod tiny_cnn;
 
 use std::path::Path;
+use std::sync::Mutex;
 
 use anyhow::Result;
 
+use self::arena::Arena;
+use self::pool::Pool;
 use super::backend::{Backend, ModelState};
 use super::{Batch, EvalResult, StepCtrl, TrainOutputs};
 use crate::manifest::{Manifest, ModelEntry};
+
+/// Execution context for the native compute core: the deterministic
+/// worker pool plus the zero-alloc scratch arena. One `Exec` serializes
+/// one stream of steps; the backend keeps it behind a mutex so the
+/// `Backend` trait's `&self` entry points stay thread-safe.
+#[derive(Debug)]
+pub struct Exec {
+    pub pool: Pool,
+    pub arena: Arena,
+}
+
+impl Exec {
+    /// Context with an explicit worker count.
+    pub fn new(threads: usize) -> Exec {
+        Exec { pool: Pool::new(threads), arena: Arena::new() }
+    }
+
+    /// Context honouring `TRIACCEL_THREADS` (default: machine
+    /// parallelism capped at 8).
+    pub fn from_env() -> Exec {
+        Exec { pool: Pool::from_env(), arena: Arena::new() }
+    }
+}
 
 /// The built-in manifest served by [`builtin_manifest`]. Layer/param
 /// accounting matches `python/compile/models/tiny_cnn.py` exactly
@@ -94,13 +134,33 @@ pub fn builtin_manifest() -> Manifest {
         .expect("built-in manifest is valid by construction")
 }
 
-/// Pure-Rust reference executor.
-#[derive(Debug, Default)]
-pub struct NativeBackend;
+/// Pure-Rust executor over the high-throughput native compute core.
+#[derive(Debug)]
+pub struct NativeBackend {
+    exec: Mutex<Exec>,
+}
 
 impl NativeBackend {
+    /// Backend honouring `TRIACCEL_THREADS`.
     pub fn new() -> NativeBackend {
-        NativeBackend
+        NativeBackend { exec: Mutex::new(Exec::from_env()) }
+    }
+
+    /// Backend with an explicit worker count (test/bench hook — avoids
+    /// racing on the process environment).
+    pub fn with_threads(threads: usize) -> NativeBackend {
+        NativeBackend { exec: Mutex::new(Exec::new(threads)) }
+    }
+
+    /// Worker count this backend computes with.
+    pub fn threads(&self) -> usize {
+        self.exec.lock().unwrap().pool.threads()
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> NativeBackend {
+        NativeBackend::new()
     }
 }
 
@@ -124,7 +184,8 @@ impl Backend for NativeBackend {
         batch: &Batch,
         ctrl: &StepCtrl,
     ) -> Result<TrainOutputs> {
-        tiny_cnn::train_step(entry, st, batch, ctrl)
+        let mut ex = self.exec.lock().unwrap();
+        tiny_cnn::train_step(&mut ex, entry, st, batch, ctrl)
     }
 
     fn eval_batch(
@@ -134,7 +195,8 @@ impl Backend for NativeBackend {
         batch: &Batch,
         codes: &[i32],
     ) -> Result<EvalResult> {
-        tiny_cnn::eval_batch(entry, st, batch, codes)
+        let mut ex = self.exec.lock().unwrap();
+        tiny_cnn::eval_batch(&mut ex, entry, st, batch, codes)
     }
 
     fn curv_step(
@@ -145,7 +207,8 @@ impl Backend for NativeBackend {
         probes: &mut [Vec<f32>],
         codes: &[i32],
     ) -> Result<Vec<f32>> {
-        tiny_cnn::curv_step(entry, st, batch, probes, codes)
+        let mut ex = self.exec.lock().unwrap();
+        tiny_cnn::curv_step(&mut ex, entry, st, batch, probes, codes)
     }
 }
 
@@ -166,6 +229,13 @@ mod tests {
         let e100 = m.model("tiny_cnn_c100").unwrap();
         assert_eq!(e100.num_classes, 100);
         assert_eq!(e100.param_count, 30196);
+    }
+
+    #[test]
+    fn with_threads_pins_the_worker_count() {
+        assert_eq!(NativeBackend::with_threads(3).threads(), 3);
+        assert_eq!(NativeBackend::with_threads(0).threads(), 1, "clamped");
+        assert!(NativeBackend::new().threads() >= 1);
     }
 
     #[test]

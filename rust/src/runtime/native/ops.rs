@@ -9,6 +9,15 @@
 //! Channel reductions (BN statistics, BN backward sums, CE loss mean)
 //! accumulate in f64 for robustness; everything stored is f32.
 //!
+//! Two API tiers:
+//! * `*_into` variants — the hot path: write into caller-provided
+//!   (arena) buffers, allocate nothing, and route the heavy matmuls
+//!   through the tiled [`super::gemm`] core (conv = im2col+GEMM,
+//!   dense = GEMM). This is what `tiny_cnn.rs` drives.
+//! * the original `Vec`-returning signatures — compat/test wrappers
+//!   over the same kernels, using a thread-local scratch [`Exec`] so
+//!   repeated calls (gradchecks, benches) stay warm.
+//!
 //! Loss-scale exactness: every backward op here is *linear* in the
 //! incoming cotangent, so scaling the loss by 2^k scales every gradient
 //! by exactly 2^k in binary floating point — the property the FP32
@@ -16,11 +25,38 @@
 
 #![allow(clippy::too_many_arguments)]
 
+use std::cell::RefCell;
+
+use super::gemm;
+use super::Exec;
+use crate::manifest::FP32;
+
 pub const BN_MOMENTUM: f32 = 0.1;
 pub const BN_EPS: f32 = 1e-5;
 
+/// Channel-block width for the stack-resident f64 accumulators (BN
+/// statistics, GAP sums): wide enough to cover every tiny_cnn layer in
+/// one block, small enough to live in registers/L1. Blocking is
+/// bit-compatible with the former full-width heap accumulators because
+/// per-channel sums are independent and keep their row order.
+const CBLK: usize = 64;
+
+thread_local! {
+    /// Warm scratch for the compat wrappers, so gradchecks and benches
+    /// that call the `Vec`-returning API in a loop don't re-allocate
+    /// im2col panels on every call.
+    static COMPAT: RefCell<Exec> = RefCell::new(Exec::from_env());
+}
+
+fn with_exec<R>(f: impl FnOnce(&mut Exec) -> R) -> R {
+    COMPAT.with(|e| f(&mut e.borrow_mut()))
+}
+
+// ------------------------------------------------------------------ conv
+
 /// SAME-padded 3×3 stride-1 convolution. `x` is NHWC `(n,h,w,cin)`
 /// flat, `wt` is HWIO `(3,3,cin,cout)` flat; returns `(n,h,w,cout)`.
+/// Executes as im2col + tiled GEMM (see [`super::gemm`]).
 pub fn conv3x3_fwd(
     x: &[f32],
     n: usize,
@@ -32,41 +68,21 @@ pub fn conv3x3_fwd(
 ) -> Vec<f32> {
     debug_assert_eq!(x.len(), n * h * w * cin);
     debug_assert_eq!(wt.len(), 9 * cin * cout);
-    let mut out = vec![0f32; n * h * w * cout];
-    for bi in 0..n {
-        for oy in 0..h {
-            for ox in 0..w {
-                let o_base = ((bi * h + oy) * w + ox) * cout;
-                for ky in 0..3usize {
-                    let iy = oy as isize + ky as isize - 1;
-                    if iy < 0 || iy >= h as isize {
-                        continue;
-                    }
-                    for kx in 0..3usize {
-                        let ix = ox as isize + kx as isize - 1;
-                        if ix < 0 || ix >= w as isize {
-                            continue;
-                        }
-                        let x_base = ((bi * h + iy as usize) * w + ix as usize) * cin;
-                        let w_base = (ky * 3 + kx) * cin * cout;
-                        for ci in 0..cin {
-                            let xv = x[x_base + ci];
-                            let wrow = &wt[w_base + ci * cout..w_base + (ci + 1) * cout];
-                            let orow = &mut out[o_base..o_base + cout];
-                            for (o, &wv) in orow.iter_mut().zip(wrow.iter()) {
-                                *o += xv * wv;
-                            }
-                        }
-                    }
-                }
-            }
-        }
-    }
-    out
+    with_exec(|ex| {
+        let m = n * h * w;
+        let k9 = 9 * cin;
+        let mut out = vec![0f32; m * cout];
+        let mut cols = ex.arena.take(m * k9);
+        gemm::im2col3x3_qdq(&ex.pool, x, n, h, w, cin, FP32, &mut cols);
+        gemm::gemm(&ex.pool, &mut ex.arena, &cols, wt, &mut out, m, k9, cout, false);
+        ex.arena.put(cols);
+        out
+    })
 }
 
 /// Backward of [`conv3x3_fwd`]: returns `(dx, dw)` for cotangent `g`
-/// of shape `(n,h,w,cout)`.
+/// of shape `(n,h,w,cout)`. `dw = x_colsᵀ·g` (ordered-reduction GEMM),
+/// `dx = col2im(g·Wᵀ)`.
 pub fn conv3x3_bwd(
     x: &[f32],
     n: usize,
@@ -78,44 +94,24 @@ pub fn conv3x3_bwd(
     g: &[f32],
 ) -> (Vec<f32>, Vec<f32>) {
     debug_assert_eq!(g.len(), n * h * w * cout);
-    let mut dx = vec![0f32; x.len()];
-    let mut dw = vec![0f32; wt.len()];
-    for bi in 0..n {
-        for oy in 0..h {
-            for ox in 0..w {
-                let g_base = ((bi * h + oy) * w + ox) * cout;
-                let grow = &g[g_base..g_base + cout];
-                for ky in 0..3usize {
-                    let iy = oy as isize + ky as isize - 1;
-                    if iy < 0 || iy >= h as isize {
-                        continue;
-                    }
-                    for kx in 0..3usize {
-                        let ix = ox as isize + kx as isize - 1;
-                        if ix < 0 || ix >= w as isize {
-                            continue;
-                        }
-                        let x_base = ((bi * h + iy as usize) * w + ix as usize) * cin;
-                        let w_base = (ky * 3 + kx) * cin * cout;
-                        for ci in 0..cin {
-                            let xv = x[x_base + ci];
-                            let wrow = &wt[w_base + ci * cout..w_base + (ci + 1) * cout];
-                            let dwrow = &mut dw[w_base + ci * cout..w_base + (ci + 1) * cout];
-                            let mut acc = 0f32;
-                            for co in 0..cout {
-                                let gv = grow[co];
-                                dwrow[co] += xv * gv;
-                                acc += wrow[co] * gv;
-                            }
-                            dx[x_base + ci] += acc;
-                        }
-                    }
-                }
-            }
-        }
-    }
-    (dx, dw)
+    with_exec(|ex| {
+        let m = n * h * w;
+        let k9 = 9 * cin;
+        let mut cols = ex.arena.take(m * k9);
+        gemm::im2col3x3_qdq(&ex.pool, x, n, h, w, cin, FP32, &mut cols);
+        let mut dw = vec![0f32; 9 * cin * cout];
+        gemm::gemm_at_b(&ex.pool, &mut ex.arena, &cols, g, &mut dw, m, k9, cout);
+        ex.arena.put(cols);
+        let mut dcols = ex.arena.take(m * k9);
+        gemm::gemm_a_bt(&ex.pool, &mut ex.arena, g, wt, &mut dcols, m, cout, k9, false);
+        let mut dx = vec![0f32; x.len()];
+        gemm::col2im3x3(&ex.pool, &dcols, n, h, w, cin, &mut dx);
+        ex.arena.put(dcols);
+        (dx, dw)
+    })
 }
+
+// -------------------------------------------------------------------- bn
 
 /// Per-channel statistics cached by the BN forward for the backward.
 pub struct BnCache {
@@ -123,10 +119,75 @@ pub struct BnCache {
     pub inv: Vec<f32>, // 1/sqrt(var + eps)
 }
 
-/// BatchNorm forward. `x` is `(rows, c)` flat with `rows = n*h*w`.
-/// In train mode uses batch statistics and returns torch-style updated
-/// running stats; in eval mode normalizes with `(rm, rv)` unchanged.
-/// Returns `(out, new_rm, new_rv, cache)`.
+/// Allocation-free BatchNorm forward. `x` is `(rows, c)` flat with
+/// `rows = n*h*w`; `mean`/`inv` receive the statistics the backward
+/// needs (in eval mode: the running stats). Train mode writes
+/// torch-style updated running stats into `new_rm`/`new_rv`; eval
+/// copies them through unchanged.
+pub fn bn_fwd_into(
+    x: &[f32],
+    rows: usize,
+    c: usize,
+    gamma: &[f32],
+    beta: &[f32],
+    rm: &[f32],
+    rv: &[f32],
+    train: bool,
+    out: &mut [f32],
+    new_rm: &mut [f32],
+    new_rv: &mut [f32],
+    mean: &mut [f32],
+    inv: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), rows * c);
+    debug_assert_eq!(out.len(), rows * c);
+    if train {
+        for c0 in (0..c).step_by(CBLK) {
+            let cb = (c - c0).min(CBLK);
+            let mut sum = [0f64; CBLK];
+            for r in 0..rows {
+                let row = &x[r * c + c0..r * c + c0 + cb];
+                for (s, &v) in sum[..cb].iter_mut().zip(row.iter()) {
+                    *s += v as f64;
+                }
+            }
+            for i in 0..cb {
+                mean[c0 + i] = (sum[i] / rows as f64) as f32;
+            }
+            let mut sq = [0f64; CBLK];
+            for r in 0..rows {
+                let row = &x[r * c + c0..r * c + c0 + cb];
+                for (i, &v) in row.iter().enumerate() {
+                    let d = (v - mean[c0 + i]) as f64;
+                    sq[i] += d * d;
+                }
+            }
+            for i in 0..cb {
+                let var = (sq[i] / rows as f64) as f32;
+                inv[c0 + i] = 1.0 / (var + BN_EPS).sqrt();
+                new_rm[c0 + i] = (1.0 - BN_MOMENTUM) * rm[c0 + i] + BN_MOMENTUM * mean[c0 + i];
+                new_rv[c0 + i] = (1.0 - BN_MOMENTUM) * rv[c0 + i] + BN_MOMENTUM * var;
+            }
+        }
+    } else {
+        mean.copy_from_slice(rm);
+        for (iv, &v) in inv.iter_mut().zip(rv.iter()) {
+            *iv = 1.0 / (v + BN_EPS).sqrt();
+        }
+        new_rm.copy_from_slice(rm);
+        new_rv.copy_from_slice(rv);
+    }
+    for r in 0..rows {
+        for ci in 0..c {
+            out[r * c + ci] = (x[r * c + ci] - mean[ci]) * inv[ci] * gamma[ci] + beta[ci];
+        }
+    }
+}
+
+/// BatchNorm forward (compat wrapper over [`bn_fwd_into`]). In train
+/// mode uses batch statistics and returns torch-style updated running
+/// stats; in eval mode normalizes with `(rm, rv)` unchanged. Returns
+/// `(out, new_rm, new_rv, cache)`.
 pub fn bn_fwd(
     x: &[f32],
     rows: usize,
@@ -137,54 +198,75 @@ pub fn bn_fwd(
     rv: &[f32],
     train: bool,
 ) -> (Vec<f32>, Vec<f32>, Vec<f32>, BnCache) {
-    debug_assert_eq!(x.len(), rows * c);
-    let (mean, var) = if train {
-        let mut sum = vec![0f64; c];
-        for r in 0..rows {
-            for (ci, s) in sum.iter_mut().enumerate() {
-                *s += x[r * c + ci] as f64;
-            }
-        }
-        let mean: Vec<f32> = sum.iter().map(|&s| (s / rows as f64) as f32).collect();
-        let mut sq = vec![0f64; c];
-        for r in 0..rows {
-            for (ci, s) in sq.iter_mut().enumerate() {
-                let d = (x[r * c + ci] - mean[ci]) as f64;
-                *s += d * d;
-            }
-        }
-        let var: Vec<f32> = sq.iter().map(|&s| (s / rows as f64) as f32).collect();
-        (mean, var)
-    } else {
-        (rm.to_vec(), rv.to_vec())
-    };
-    let inv: Vec<f32> = var.iter().map(|&v| 1.0 / (v + BN_EPS).sqrt()).collect();
     let mut out = vec![0f32; rows * c];
-    for r in 0..rows {
-        for ci in 0..c {
-            out[r * c + ci] = (x[r * c + ci] - mean[ci]) * inv[ci] * gamma[ci] + beta[ci];
-        }
-    }
-    let (new_rm, new_rv) = if train {
-        let nrm = rm
-            .iter()
-            .zip(mean.iter())
-            .map(|(&r, &m)| (1.0 - BN_MOMENTUM) * r + BN_MOMENTUM * m)
-            .collect();
-        let nrv = rv
-            .iter()
-            .zip(var.iter())
-            .map(|(&r, &v)| (1.0 - BN_MOMENTUM) * r + BN_MOMENTUM * v)
-            .collect();
-        (nrm, nrv)
-    } else {
-        (rm.to_vec(), rv.to_vec())
-    };
+    let mut new_rm = vec![0f32; c];
+    let mut new_rv = vec![0f32; c];
+    let mut mean = vec![0f32; c];
+    let mut inv = vec![0f32; c];
+    bn_fwd_into(
+        x,
+        rows,
+        c,
+        gamma,
+        beta,
+        rm,
+        rv,
+        train,
+        &mut out,
+        &mut new_rm,
+        &mut new_rv,
+        &mut mean,
+        &mut inv,
+    );
     (out, new_rm, new_rv, BnCache { mean, inv })
 }
 
-/// BatchNorm train-mode backward (batch statistics participate in the
-/// gradient). Returns `(dx, dgamma, dbeta)`.
+/// Allocation-free BN train-mode backward (batch statistics participate
+/// in the gradient). `mean`/`inv` are the forward's cached statistics.
+pub fn bn_bwd_into(
+    x: &[f32],
+    g: &[f32],
+    rows: usize,
+    c: usize,
+    gamma: &[f32],
+    mean: &[f32],
+    inv: &[f32],
+    dx: &mut [f32],
+    dgamma: &mut [f32],
+    dbeta: &mut [f32],
+) {
+    debug_assert_eq!(g.len(), rows * c);
+    for c0 in (0..c).step_by(CBLK) {
+        let cb = (c - c0).min(CBLK);
+        let mut db = [0f64; CBLK];
+        let mut dg = [0f64; CBLK];
+        for r in 0..rows {
+            for i in 0..cb {
+                let ci = c0 + i;
+                let gv = g[r * c + ci] as f64;
+                let xhat = ((x[r * c + ci] - mean[ci]) * inv[ci]) as f64;
+                db[i] += gv;
+                dg[i] += gv * xhat;
+            }
+        }
+        for i in 0..cb {
+            dgamma[c0 + i] = dg[i] as f32;
+            dbeta[c0 + i] = db[i] as f32;
+        }
+    }
+    let nf = rows as f32;
+    for r in 0..rows {
+        for ci in 0..c {
+            let xhat = (x[r * c + ci] - mean[ci]) * inv[ci];
+            let coeff = gamma[ci] * inv[ci] / nf;
+            dx[r * c + ci] =
+                coeff * (nf * g[r * c + ci] - dbeta[ci] - xhat * dgamma[ci]);
+        }
+    }
+}
+
+/// BatchNorm train-mode backward (compat wrapper). Returns
+/// `(dx, dgamma, dbeta)`.
 pub fn bn_bwd(
     x: &[f32],
     g: &[f32],
@@ -193,33 +275,25 @@ pub fn bn_bwd(
     gamma: &[f32],
     cache: &BnCache,
 ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
-    debug_assert_eq!(g.len(), rows * c);
-    let mut dbeta = vec![0f64; c];
-    let mut dgamma = vec![0f64; c];
-    for r in 0..rows {
-        for ci in 0..c {
-            let gv = g[r * c + ci] as f64;
-            let xhat = ((x[r * c + ci] - cache.mean[ci]) * cache.inv[ci]) as f64;
-            dbeta[ci] += gv;
-            dgamma[ci] += gv * xhat;
-        }
-    }
-    let nf = rows as f32;
     let mut dx = vec![0f32; rows * c];
-    for r in 0..rows {
-        for ci in 0..c {
-            let xhat = (x[r * c + ci] - cache.mean[ci]) * cache.inv[ci];
-            let coeff = gamma[ci] * cache.inv[ci] / nf;
-            dx[r * c + ci] = coeff
-                * (nf * g[r * c + ci] - dbeta[ci] as f32 - xhat * dgamma[ci] as f32);
-        }
-    }
-    (
-        dx,
-        dgamma.iter().map(|&v| v as f32).collect(),
-        dbeta.iter().map(|&v| v as f32).collect(),
-    )
+    let mut dgamma = vec![0f32; c];
+    let mut dbeta = vec![0f32; c];
+    bn_bwd_into(
+        x,
+        g,
+        rows,
+        c,
+        gamma,
+        &cache.mean,
+        &cache.inv,
+        &mut dx,
+        &mut dgamma,
+        &mut dbeta,
+    );
+    (dx, dgamma, dbeta)
 }
+
+// ------------------------------------------------------------- relu/pool
 
 /// ReLU forward in place.
 pub fn relu_inplace(x: &mut [f32]) {
@@ -240,13 +314,21 @@ pub fn relu_bwd_inplace(g: &mut [f32], pre: &[f32]) {
     }
 }
 
-/// 2×2 stride-2 max pool. Returns the pooled output and the argmax
-/// index (0..4, scan order (dy,dx)) per output element, first max wins
-/// (matching XLA's select-and-scatter tie-break).
-pub fn maxpool2_fwd(x: &[f32], n: usize, h: usize, w: usize, c: usize) -> (Vec<f32>, Vec<u8>) {
+/// Allocation-free 2×2 stride-2 max pool: writes the pooled output and
+/// the argmax index (0..4, scan order (dy,dx)) per output element,
+/// first max wins (matching XLA's select-and-scatter tie-break).
+pub fn maxpool2_fwd_into(
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    out: &mut [f32],
+    arg: &mut [u8],
+) {
     let (ho, wo) = (h / 2, w / 2);
-    let mut out = vec![0f32; n * ho * wo * c];
-    let mut arg = vec![0u8; n * ho * wo * c];
+    debug_assert_eq!(out.len(), n * ho * wo * c);
+    debug_assert_eq!(arg.len(), n * ho * wo * c);
     for bi in 0..n {
         for oy in 0..ho {
             for ox in 0..wo {
@@ -269,15 +351,32 @@ pub fn maxpool2_fwd(x: &[f32], n: usize, h: usize, w: usize, c: usize) -> (Vec<f
             }
         }
     }
+}
+
+/// 2×2 stride-2 max pool (compat wrapper over [`maxpool2_fwd_into`]).
+pub fn maxpool2_fwd(x: &[f32], n: usize, h: usize, w: usize, c: usize) -> (Vec<f32>, Vec<u8>) {
+    let (ho, wo) = (h / 2, w / 2);
+    let mut out = vec![0f32; n * ho * wo * c];
+    let mut arg = vec![0u8; n * ho * wo * c];
+    maxpool2_fwd_into(x, n, h, w, c, &mut out, &mut arg);
     (out, arg)
 }
 
-/// Backward of [`maxpool2_fwd`]: routes each cotangent to its argmax.
-/// `h`/`w` are the *input* dimensions.
-pub fn maxpool2_bwd(g: &[f32], arg: &[u8], n: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
+/// Allocation-free backward of the max pool: zeroes `dx` and routes
+/// each cotangent to its argmax. `h`/`w` are the *input* dimensions.
+pub fn maxpool2_bwd_into(
+    g: &[f32],
+    arg: &[u8],
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    dx: &mut [f32],
+) {
     let (ho, wo) = (h / 2, w / 2);
     debug_assert_eq!(g.len(), n * ho * wo * c);
-    let mut dx = vec![0f32; n * h * w * c];
+    debug_assert_eq!(dx.len(), n * h * w * c);
+    dx.fill(0.0);
     for bi in 0..n {
         for oy in 0..ho {
             for ox in 0..wo {
@@ -289,33 +388,49 @@ pub fn maxpool2_bwd(g: &[f32], arg: &[u8], n: usize, h: usize, w: usize, c: usiz
             }
         }
     }
+}
+
+/// Backward of [`maxpool2_fwd`] (compat wrapper).
+pub fn maxpool2_bwd(g: &[f32], arg: &[u8], n: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
+    let mut dx = vec![0f32; n * h * w * c];
+    maxpool2_bwd_into(g, arg, n, h, w, c, &mut dx);
     dx
 }
 
-/// Global average pool over the spatial dims: `(n,h,w,c)` -> `(n,c)`.
-pub fn gap_fwd(x: &[f32], n: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
+/// Allocation-free global average pool over the spatial dims:
+/// `(n,h,w,c)` -> `(n,c)`, f64 accumulation per channel.
+pub fn gap_fwd_into(x: &[f32], n: usize, h: usize, w: usize, c: usize, out: &mut [f32]) {
     let hw = h * w;
-    let mut out = vec![0f32; n * c];
+    debug_assert_eq!(out.len(), n * c);
     for bi in 0..n {
-        let mut acc = vec![0f64; c];
-        for p in 0..hw {
-            let base = (bi * hw + p) * c;
-            for (ci, a) in acc.iter_mut().enumerate() {
-                *a += x[base + ci] as f64;
+        for c0 in (0..c).step_by(CBLK) {
+            let cb = (c - c0).min(CBLK);
+            let mut acc = [0f64; CBLK];
+            for p in 0..hw {
+                let base = (bi * hw + p) * c + c0;
+                for (a, &v) in acc[..cb].iter_mut().zip(x[base..base + cb].iter()) {
+                    *a += v as f64;
+                }
+            }
+            for i in 0..cb {
+                out[bi * c + c0 + i] = (acc[i] / hw as f64) as f32;
             }
         }
-        for ci in 0..c {
-            out[bi * c + ci] = (acc[ci] / hw as f64) as f32;
-        }
     }
+}
+
+/// Global average pool (compat wrapper over [`gap_fwd_into`]).
+pub fn gap_fwd(x: &[f32], n: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
+    let mut out = vec![0f32; n * c];
+    gap_fwd_into(x, n, h, w, c, &mut out);
     out
 }
 
-/// Backward of [`gap_fwd`]: broadcast `g/(h*w)` over the spatial dims.
-pub fn gap_bwd(g: &[f32], n: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
+/// Allocation-free backward of the GAP: broadcast `g/(h*w)`.
+pub fn gap_bwd_into(g: &[f32], n: usize, h: usize, w: usize, c: usize, dx: &mut [f32]) {
     let hw = h * w;
     let inv = 1.0 / hw as f32;
-    let mut dx = vec![0f32; n * hw * c];
+    debug_assert_eq!(dx.len(), n * hw * c);
     for bi in 0..n {
         for p in 0..hw {
             let base = (bi * hw + p) * c;
@@ -324,27 +439,31 @@ pub fn gap_bwd(g: &[f32], n: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
             }
         }
     }
+}
+
+/// Backward of [`gap_fwd`] (compat wrapper).
+pub fn gap_bwd(g: &[f32], n: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
+    let mut dx = vec![0f32; n * h * w * c];
+    gap_bwd_into(g, n, h, w, c, &mut dx);
     dx
 }
 
-/// Dense layer forward: `x (n,cin) @ w (cin,cout) + b`, f32 accumulate.
+// ----------------------------------------------------------------- dense
+
+/// Dense layer forward: `x (n,cin) @ w (cin,cout) + b`, f32 accumulate
+/// (bias preloaded, so per-element order matches the fused kernel).
 pub fn dense_fwd(x: &[f32], n: usize, cin: usize, w: &[f32], cout: usize, b: &[f32]) -> Vec<f32> {
-    let mut out = vec![0f32; n * cout];
-    for bi in 0..n {
-        let orow = &mut out[bi * cout..(bi + 1) * cout];
-        orow.copy_from_slice(b);
-        for ci in 0..cin {
-            let xv = x[bi * cin + ci];
-            let wrow = &w[ci * cout..(ci + 1) * cout];
-            for (o, &wv) in orow.iter_mut().zip(wrow.iter()) {
-                *o += xv * wv;
-            }
+    with_exec(|ex| {
+        let mut out = vec![0f32; n * cout];
+        for r in 0..n {
+            out[r * cout..(r + 1) * cout].copy_from_slice(b);
         }
-    }
-    out
+        gemm::gemm(&ex.pool, &mut ex.arena, x, w, &mut out, n, cin, cout, true);
+        out
+    })
 }
 
-/// Dense backward matmuls: `dw = x^T g` and `dx = g w^T`, plus
+/// Dense backward matmuls: `dw = xᵀ g` and `dx = g wᵀ`, plus
 /// `db = sum_rows g`. Matches the `mp_matmul` VJP structure (the
 /// caller quantizes the operands per the layer code before calling).
 pub fn dense_bwd(
@@ -355,37 +474,37 @@ pub fn dense_bwd(
     cout: usize,
     g: &[f32],
 ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
-    let mut dx = vec![0f32; n * cin];
-    let mut dw = vec![0f32; cin * cout];
-    let mut db = vec![0f32; cout];
-    for bi in 0..n {
-        let grow = &g[bi * cout..(bi + 1) * cout];
-        for (d, &gv) in db.iter_mut().zip(grow.iter()) {
-            *d += gv;
-        }
-        for ci in 0..cin {
-            let xv = x[bi * cin + ci];
-            let wrow = &w[ci * cout..(ci + 1) * cout];
-            let dwrow = &mut dw[ci * cout..(ci + 1) * cout];
-            let mut acc = 0f32;
-            for co in 0..cout {
-                dwrow[co] += xv * grow[co];
-                acc += wrow[co] * grow[co];
+    with_exec(|ex| {
+        let mut dx = vec![0f32; n * cin];
+        gemm::gemm_a_bt(&ex.pool, &mut ex.arena, g, w, &mut dx, n, cout, cin, false);
+        let mut dw = vec![0f32; cin * cout];
+        gemm::gemm_at_b(&ex.pool, &mut ex.arena, x, g, &mut dw, n, cin, cout);
+        let mut db = vec![0f32; cout];
+        for bi in 0..n {
+            for (d, &gv) in db.iter_mut().zip(g[bi * cout..(bi + 1) * cout].iter()) {
+                *d += gv;
             }
-            dx[bi * cin + ci] += acc;
         }
-    }
-    (dx, dw, db)
+        (dx, dw, db)
+    })
 }
 
-/// Mean softmax cross-entropy with int labels. Returns
-/// `(loss, correct, dlogits)` where `dlogits = (softmax - onehot)/n`
-/// (the cotangent of the *unscaled* mean loss).
-pub fn softmax_ce(logits: &[f32], y: &[i32], n: usize, classes: usize) -> (f32, i64, Vec<f32>) {
+// --------------------------------------------------------------- softmax
+
+/// Allocation-free mean softmax cross-entropy with int labels: writes
+/// `dlogits = (softmax - onehot)/n` (the cotangent of the *unscaled*
+/// mean loss) and returns `(loss, correct)`.
+pub fn softmax_ce_into(
+    logits: &[f32],
+    y: &[i32],
+    n: usize,
+    classes: usize,
+    dlogits: &mut [f32],
+) -> (f32, i64) {
     debug_assert_eq!(logits.len(), n * classes);
+    debug_assert_eq!(dlogits.len(), n * classes);
     let mut loss_sum = 0f64;
     let mut correct = 0i64;
-    let mut dlogits = vec![0f32; n * classes];
     for bi in 0..n {
         let row = &logits[bi * classes..(bi + 1) * classes];
         let mut m = f32::NEG_INFINITY;
@@ -412,7 +531,15 @@ pub fn softmax_ce(logits: &[f32], y: &[i32], n: usize, classes: usize) -> (f32, 
             *d = (p - if ci == label { 1.0 } else { 0.0 }) / n as f32;
         }
     }
-    ((loss_sum / n as f64) as f32, correct, dlogits)
+    ((loss_sum / n as f64) as f32, correct)
+}
+
+/// Mean softmax cross-entropy (compat wrapper over
+/// [`softmax_ce_into`]). Returns `(loss, correct, dlogits)`.
+pub fn softmax_ce(logits: &[f32], y: &[i32], n: usize, classes: usize) -> (f32, i64, Vec<f32>) {
+    let mut dlogits = vec![0f32; n * classes];
+    let (loss, correct) = softmax_ce_into(logits, y, n, classes, &mut dlogits);
+    (loss, correct, dlogits)
 }
 
 #[cfg(test)]
@@ -533,6 +660,28 @@ mod tests {
     }
 
     #[test]
+    fn bn_blocked_stats_cover_wide_channel_counts() {
+        // c > CBLK exercises the block seam; compare against a direct
+        // per-channel f64 reference.
+        let (rows, c) = (16, CBLK + 3);
+        let mut rng = Rng::new(40);
+        let x = randv(&mut rng, rows * c);
+        let gamma = vec![1f32; c];
+        let beta = vec![0f32; c];
+        let rm = vec![0f32; c];
+        let rv = vec![1f32; c];
+        let (_, _, _, cache) = bn_fwd(&x, rows, c, &gamma, &beta, &rm, &rv, true);
+        for ci in [0usize, CBLK - 1, CBLK, c - 1] {
+            let mut s = 0f64;
+            for r in 0..rows {
+                s += x[r * c + ci] as f64;
+            }
+            let want = (s / rows as f64) as f32;
+            assert!((cache.mean[ci] - want).abs() < 1e-6, "channel {ci}");
+        }
+    }
+
+    #[test]
     fn maxpool_routes_gradient_to_argmax() {
         let (n, h, w, c) = (1, 4, 4, 1);
         let mut x = vec![0f32; 16];
@@ -555,6 +704,15 @@ mod tests {
         let x = vec![2f32, 2.0, 2.0, 2.0];
         let (_, arg) = maxpool2_fwd(&x, 1, 2, 2, 1);
         assert_eq!(arg[0], 0, "ties go to the first scanned element");
+    }
+
+    #[test]
+    fn maxpool_bwd_into_rezeroes_dirty_buffers() {
+        let x = vec![1f32, 2.0, 3.0, 4.0];
+        let (_, arg) = maxpool2_fwd(&x, 1, 2, 2, 1);
+        let mut dx = vec![9f32; 4]; // dirty scratch
+        maxpool2_bwd_into(&[5.0], &arg, 1, 2, 2, 1, &mut dx);
+        assert_eq!(dx, vec![0.0, 0.0, 0.0, 5.0]);
     }
 
     #[test]

@@ -1,0 +1,163 @@
+//! Deterministic worker pool for the native compute core.
+//!
+//! Design contract: **results never depend on the thread count.** Work
+//! is split into *fixed* chunks whose boundaries depend only on the
+//! problem size, each chunk owns a disjoint `&mut` slice of the output,
+//! and any cross-chunk reduction is performed by the caller in chunk
+//! order. The pool only decides *which thread* runs a chunk, never
+//! *what* a chunk computes, so training output is bit-identical for
+//! every `TRIACCEL_THREADS` value — the property the checkpoint-resume
+//! and cross-thread determinism tests pin down.
+//!
+//! Implementation: `std::thread::scope` (no external deps, no unsafe).
+//! Workers drain a mutex-guarded chunk iterator; the lock is held only
+//! to pop the next chunk, never during compute. With one thread (or one
+//! chunk, or `parallel == false`) everything runs inline on the caller
+//! with zero spawn overhead, so the single-thread fast path is exactly
+//! the serial kernel.
+
+use std::sync::Mutex;
+
+/// Hard cap on the auto-detected thread count (explicit
+/// `TRIACCEL_THREADS` may exceed it).
+const AUTO_MAX_THREADS: usize = 8;
+
+/// Parse a `TRIACCEL_THREADS`-style value; `None`/invalid/0 fall back
+/// to the capped machine parallelism.
+pub fn resolve_threads(var: Option<&str>) -> usize {
+    match var.and_then(|s| s.trim().parse::<usize>().ok()) {
+        Some(t) if t >= 1 => t,
+        _ => std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(AUTO_MAX_THREADS),
+    }
+}
+
+/// A fixed-width worker pool over scoped threads.
+#[derive(Debug, Clone)]
+pub struct Pool {
+    threads: usize,
+}
+
+impl Pool {
+    /// A pool with an explicit thread count (clamped to ≥ 1).
+    pub fn new(threads: usize) -> Pool {
+        Pool { threads: threads.max(1) }
+    }
+
+    /// Thread count from `TRIACCEL_THREADS`, else machine parallelism
+    /// capped at 8.
+    pub fn from_env() -> Pool {
+        Pool::new(resolve_threads(std::env::var("TRIACCEL_THREADS").ok().as_deref()))
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Split `data` into fixed `chunk_len`-element chunks and run
+    /// `f(chunk_idx, chunk)` exactly once per chunk with exclusive
+    /// access. Chunk boundaries depend only on `chunk_len`, so output
+    /// written through `data` is identical for every thread count.
+    /// `parallel == false` (or 1 thread, or ≤ 1 chunk) runs inline.
+    pub fn for_each_chunk<T, F>(&self, data: &mut [T], chunk_len: usize, parallel: bool, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        assert!(chunk_len > 0, "chunk_len must be positive");
+        if data.is_empty() {
+            return;
+        }
+        let n_chunks = data.len().div_ceil(chunk_len);
+        if !parallel || self.threads == 1 || n_chunks <= 1 {
+            for (i, c) in data.chunks_mut(chunk_len).enumerate() {
+                f(i, c);
+            }
+            return;
+        }
+        let work = Mutex::new(data.chunks_mut(chunk_len).enumerate());
+        let worker = || loop {
+            // Pop under the lock, release, then compute outside it.
+            let next = work.lock().unwrap().next();
+            match next {
+                Some((i, c)) => f(i, c),
+                None => return,
+            }
+        };
+        let spawned = self.threads.min(n_chunks) - 1;
+        std::thread::scope(|s| {
+            for _ in 0..spawned {
+                s.spawn(&worker);
+            }
+            worker();
+        });
+    }
+}
+
+impl Default for Pool {
+    fn default() -> Pool {
+        Pool::from_env()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_threads_parses_and_falls_back() {
+        assert_eq!(resolve_threads(Some("3")), 3);
+        assert_eq!(resolve_threads(Some(" 12 ")), 12, "explicit values exceed the auto cap");
+        let auto = resolve_threads(None);
+        assert!(auto >= 1 && auto <= AUTO_MAX_THREADS);
+        assert_eq!(resolve_threads(Some("0")), auto, "0 means auto");
+        assert_eq!(resolve_threads(Some("bogus")), auto);
+    }
+
+    #[test]
+    fn every_chunk_runs_exactly_once() {
+        for threads in [1usize, 2, 4, 7] {
+            let pool = Pool::new(threads);
+            let mut data = vec![0u32; 103]; // deliberately not a chunk multiple
+            pool.for_each_chunk(&mut data, 10, true, |i, chunk| {
+                for v in chunk.iter_mut() {
+                    *v += 1 + i as u32;
+                }
+            });
+            for (k, &v) in data.iter().enumerate() {
+                assert_eq!(v, 1 + (k / 10) as u32, "element {k} at threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_boundaries_ignore_thread_count() {
+        let run = |threads: usize| {
+            let pool = Pool::new(threads);
+            let mut data = vec![0f32; 1000];
+            pool.for_each_chunk(&mut data, 64, true, |i, chunk| {
+                // Value depends on (chunk idx, position) only.
+                for (j, v) in chunk.iter_mut().enumerate() {
+                    *v = (i * 1000 + j) as f32 * 0.5;
+                }
+            });
+            data
+        };
+        let base = run(1);
+        for t in [2usize, 3, 4, 8] {
+            assert_eq!(run(t), base, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn serial_flag_runs_inline() {
+        let pool = Pool::new(4);
+        let main_id = std::thread::current().id();
+        let mut data = vec![0u8; 32];
+        pool.for_each_chunk(&mut data, 8, false, |_, _| {
+            assert_eq!(std::thread::current().id(), main_id);
+        });
+    }
+}

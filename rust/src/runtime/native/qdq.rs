@@ -104,11 +104,32 @@ pub fn qdq1(x: f32, code: i32) -> f32 {
 }
 
 /// Quantize-dequantize a slice into a fresh vector.
+///
+/// Compat/test convenience only — it allocates on every call. The hot
+/// path (tiny_cnn forward/backward, the fused im2col pack) uses the
+/// slice-based [`qdq_into`] / [`qdq_inplace`] over arena buffers.
 pub fn qdq(x: &[f32], code: i32) -> Vec<f32> {
+    let mut out = vec![0f32; x.len()];
+    qdq_into(x, &mut out, code);
+    out
+}
+
+/// Quantize-dequantize `src` into `dst` — the allocation-free batch
+/// API. Lengths must match; FP32 degenerates to a plain copy.
+pub fn qdq_into(src: &[f32], dst: &mut [f32], code: i32) {
+    debug_assert_eq!(src.len(), dst.len());
     match code {
-        FP16 => x.iter().map(|&v| f16_qdq(v)).collect(),
-        BF16 => x.iter().map(|&v| bf16_qdq(v)).collect(),
-        _ => x.to_vec(),
+        FP16 => {
+            for (d, &s) in dst.iter_mut().zip(src.iter()) {
+                *d = f16_qdq(s);
+            }
+        }
+        BF16 => {
+            for (d, &s) in dst.iter_mut().zip(src.iter()) {
+                *d = bf16_qdq(s);
+            }
+        }
+        _ => dst.copy_from_slice(src),
     }
 }
 
@@ -184,6 +205,27 @@ mod tests {
         assert_eq!(bf16_qdq(f32::INFINITY), f32::INFINITY);
         assert_eq!(bf16_qdq(f32::NEG_INFINITY), f32::NEG_INFINITY);
         assert!(bf16_qdq(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn qdq_into_matches_vec_api() {
+        let mut rng = Rng::new(11);
+        let src: Vec<f32> = (0..257)
+            .map(|_| rng.next_normal() * 10f32.powi((rng.below(10) as i32) - 5))
+            .collect();
+        for code in [FP16, BF16, FP32] {
+            let want = qdq(&src, code);
+            let mut dst = vec![f32::NAN; src.len()];
+            qdq_into(&src, &mut dst, code);
+            assert_eq!(
+                dst.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "code {code}"
+            );
+            let mut inplace = src.clone();
+            qdq_inplace(&mut inplace, code);
+            assert_eq!(inplace, want, "in-place variant agrees (code {code})");
+        }
     }
 
     #[test]

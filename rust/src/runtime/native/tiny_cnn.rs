@@ -16,6 +16,16 @@
 //!   firing, probe vectors normalized per layer) — the strict-block
 //!   variant of `curv_graph.py`.
 //!
+//! Compute substrate (PR 2): every conv executes as fused-qdq im2col +
+//! tiled GEMM and every dense as GEMM (`gemm.rs`), parallelized by the
+//! deterministic worker pool (`pool.rs`); every scratch buffer — im2col
+//! panels, forward caches, cotangents, gradients, even the BN running-
+//! stat updates — comes from the [`Exec`]'s arena, so a warm train step
+//! performs zero buffer allocations (pinned by the test below). The
+//! only steady-state allocations left are the 4-float stat vectors the
+//! Backend API returns and the parameter clones inside the (amortized)
+//! curvature probe.
+//!
 //! Parameter order (the manifest contract): conv{1,2,3}/w, bn{1,2,3}
 //! gamma+beta interleaved per block, then head/w, head/b. BN state is
 //! [rm, rv] per block, zeros/ones initialized.
@@ -24,8 +34,10 @@
 
 use anyhow::Result;
 
-use super::ops::{self, BnCache};
+use super::gemm;
+use super::ops;
 use super::qdq;
+use super::Exec;
 use crate::manifest::ModelEntry;
 use crate::runtime::backend::ModelState;
 use crate::runtime::{Batch, EvalResult, StepCtrl, TrainOutputs};
@@ -42,32 +54,67 @@ const MOMENTUM: f32 = 0.9;
 /// Number of flat parameter tensors.
 const N_PARAMS: usize = 11;
 
-/// Forward-pass caches consumed by [`backward`].
+/// Forward-pass caches consumed by [`backward`]. Every buffer is
+/// arena-backed; [`release_fwd`] checks them back in.
 struct Fwd {
-    /// Quantized conv inputs, per conv block.
-    xq: Vec<Vec<f32>>,
+    /// Quantized im2col panels per conv block (rows × 9·cin) — both the
+    /// GEMM A-operand and the `x_colsᵀ·g` weight-gradient operand.
+    cols: [Vec<f32>; 3],
     /// Quantized conv weights, per conv block.
-    wq: Vec<Vec<f32>>,
+    wq: [Vec<f32>; 3],
     /// Conv outputs (BN inputs), per conv block.
-    conv_out: Vec<Vec<f32>>,
-    /// BN statistics, per conv block.
-    bn: Vec<BnCache>,
+    conv_out: [Vec<f32>; 3],
+    /// BN batch statistics, per conv block.
+    bn_mean: [Vec<f32>; 3],
+    bn_inv: [Vec<f32>; 3],
     /// BN outputs (ReLU pre-activations), per conv block.
-    bn_out: Vec<Vec<f32>>,
+    bn_out: [Vec<f32>; 3],
     /// Max-pool argmax maps for blocks 0 and 1.
-    arg: Vec<Vec<u8>>,
+    arg: [Vec<u8>; 2],
     /// Quantized dense input / weight.
     head_xq: Vec<f32>,
     head_wq: Vec<f32>,
     /// Cotangent of the (unscaled) mean loss w.r.t. the logits.
     dlogits: Vec<f32>,
-    /// Updated BN running stats (train mode).
-    new_state: Vec<Vec<f32>>,
+    /// Updated BN running stats (train mode), [rm, rv] per block.
+    new_state: [Vec<f32>; 6],
     loss: f32,
     correct: i64,
 }
 
+/// Return every forward cache to the arena.
+fn release_fwd(ex: &mut Exec, fwd: Fwd) {
+    let Fwd {
+        cols,
+        wq,
+        conv_out,
+        bn_mean,
+        bn_inv,
+        bn_out,
+        arg,
+        head_xq,
+        head_wq,
+        dlogits,
+        new_state,
+        ..
+    } = fwd;
+    ex.arena.put_all(cols);
+    ex.arena.put_all(wq);
+    ex.arena.put_all(conv_out);
+    ex.arena.put_all(bn_mean);
+    ex.arena.put_all(bn_inv);
+    ex.arena.put_all(bn_out);
+    for a in arg {
+        ex.arena.put_u8(a);
+    }
+    ex.arena.put(head_xq);
+    ex.arena.put(head_wq);
+    ex.arena.put(dlogits);
+    ex.arena.put_all(new_state);
+}
+
 fn forward(
+    ex: &mut Exec,
     entry: &ModelEntry,
     params: &[Vec<f32>],
     state: &[Vec<f32>],
@@ -78,25 +125,46 @@ fn forward(
     train: bool,
 ) -> Fwd {
     debug_assert_eq!(params.len(), N_PARAMS);
+    let Exec { pool, arena } = ex;
     let classes = entry.num_classes;
-    let mut h = x.to_vec();
+    let mut cols: [Vec<f32>; 3] = Default::default();
+    let mut wq: [Vec<f32>; 3] = Default::default();
+    let mut conv_out: [Vec<f32>; 3] = Default::default();
+    let mut bn_mean: [Vec<f32>; 3] = Default::default();
+    let mut bn_inv: [Vec<f32>; 3] = Default::default();
+    let mut bn_out: [Vec<f32>; 3] = Default::default();
+    let mut arg: [Vec<u8>; 2] = Default::default();
+    let mut new_state: [Vec<f32>; 6] = Default::default();
+
+    // `cur` owns the activation flowing between blocks (None = batch.x).
+    let mut cur: Option<Vec<f32>> = None;
     let mut cin = 3usize;
-    let mut xq_v = Vec::with_capacity(3);
-    let mut wq_v = Vec::with_capacity(3);
-    let mut conv_v = Vec::with_capacity(3);
-    let mut bn_v = Vec::with_capacity(3);
-    let mut bn_out_v = Vec::with_capacity(3);
-    let mut arg_v = Vec::with_capacity(2);
-    let mut new_state = Vec::with_capacity(6);
     for li in 0..3 {
         let dim = DIMS[li];
         let cout = CHANNELS[li];
         let code = codes[li];
-        let hq = qdq::qdq(&h, code);
-        let wq = qdq::qdq(&params[li * 3], code);
-        let conv = ops::conv3x3_fwd(&hq, n, dim, dim, cin, &wq, cout);
         let rows = n * dim * dim;
-        let (bn_out, nrm, nrv, cache) = ops::bn_fwd(
+        let k9 = 9 * cin;
+
+        // im2col with the qdq round-trip fused into the pack — the only
+        // place input activations are rounded, and no quantized copy of
+        // the activation tensor is ever materialized.
+        let mut c_buf = arena.take(rows * k9);
+        {
+            let src: &[f32] = cur.as_deref().unwrap_or(x);
+            gemm::im2col3x3_qdq(pool, src, n, dim, dim, cin, code, &mut c_buf);
+        }
+        let mut w_buf = arena.take(9 * cin * cout);
+        qdq::qdq_into(&params[li * 3], &mut w_buf, code);
+        let mut conv = arena.take(rows * cout);
+        gemm::gemm(pool, arena, &c_buf, &w_buf, &mut conv, rows, k9, cout, false);
+
+        let mut bnout = arena.take(rows * cout);
+        let mut nrm = arena.take(cout);
+        let mut nrv = arena.take(cout);
+        let mut mean = arena.take(cout);
+        let mut inv = arena.take(cout);
+        ops::bn_fwd_into(
             &conv,
             rows,
             cout,
@@ -105,37 +173,71 @@ fn forward(
             &state[li * 2],
             &state[li * 2 + 1],
             train,
+            &mut bnout,
+            &mut nrm,
+            &mut nrv,
+            &mut mean,
+            &mut inv,
         );
-        new_state.push(nrm);
-        new_state.push(nrv);
-        let mut r = bn_out.clone();
+        new_state[li * 2] = nrm;
+        new_state[li * 2 + 1] = nrv;
+
+        // ReLU on a copy — bn_out stays cached as the pre-activation.
+        let mut r = arena.take(rows * cout);
+        r.copy_from_slice(&bnout);
         ops::relu_inplace(&mut r);
-        if li < 2 {
-            let (pool, arg) = ops::maxpool2_fwd(&r, n, dim, dim, cout);
-            arg_v.push(arg);
-            h = pool;
+        let next = if li < 2 {
+            let (ho, wo) = (dim / 2, dim / 2);
+            let mut p_out = arena.take(n * ho * wo * cout);
+            let mut a_buf = arena.take_u8(n * ho * wo * cout);
+            ops::maxpool2_fwd_into(&r, n, dim, dim, cout, &mut p_out, &mut a_buf);
+            arg[li] = a_buf;
+            p_out
         } else {
-            h = ops::gap_fwd(&r, n, dim, dim, cout);
+            let mut g_out = arena.take(n * cout);
+            ops::gap_fwd_into(&r, n, dim, dim, cout, &mut g_out);
+            g_out
+        };
+        arena.put(r);
+        if let Some(old) = cur.take() {
+            arena.put(old);
         }
-        xq_v.push(hq);
-        wq_v.push(wq);
-        conv_v.push(conv);
-        bn_v.push(cache);
-        bn_out_v.push(bn_out);
+        cur = Some(next);
+
+        cols[li] = c_buf;
+        wq[li] = w_buf;
+        conv_out[li] = conv;
+        bn_mean[li] = mean;
+        bn_inv[li] = inv;
+        bn_out[li] = bnout;
         cin = cout;
     }
+
+    // Dense head: bias-preloaded GEMM (mp_matmul operand quantization).
     let code = codes[3];
-    let head_xq = qdq::qdq(&h, code);
-    let head_wq = qdq::qdq(&params[9], code);
-    let logits = ops::dense_fwd(&head_xq, n, FEATURES, &head_wq, classes, &params[10]);
-    let (loss, correct, dlogits) = ops::softmax_ce(&logits, y, n, classes);
+    let h_act = cur.take().expect("three conv blocks ran");
+    let mut head_xq = arena.take(n * FEATURES);
+    qdq::qdq_into(&h_act, &mut head_xq, code);
+    arena.put(h_act);
+    let mut head_wq = arena.take(params[9].len());
+    qdq::qdq_into(&params[9], &mut head_wq, code);
+    let mut logits = arena.take(n * classes);
+    for r in 0..n {
+        logits[r * classes..(r + 1) * classes].copy_from_slice(&params[10]);
+    }
+    gemm::gemm(pool, arena, &head_xq, &head_wq, &mut logits, n, FEATURES, classes, true);
+    let mut dlogits = arena.take(n * classes);
+    let (loss, correct) = ops::softmax_ce_into(&logits, y, n, classes, &mut dlogits);
+    arena.put(logits);
+
     Fwd {
-        xq: xq_v,
-        wq: wq_v,
-        conv_out: conv_v,
-        bn: bn_v,
-        bn_out: bn_out_v,
-        arg: arg_v,
+        cols,
+        wq,
+        conv_out,
+        bn_mean,
+        bn_inv,
+        bn_out,
+        arg,
         head_xq,
         head_wq,
         dlogits,
@@ -147,31 +249,42 @@ fn forward(
 
 /// Reverse pass: returns the 11 parameter gradients of the *unscaled*
 /// mean loss (the loss-scale round-trip is exact for 2^k scales).
+/// Gradients are arena buffers; the caller checks them back in.
 fn backward(
+    ex: &mut Exec,
     entry: &ModelEntry,
     fwd: &Fwd,
     params: &[Vec<f32>],
     codes: &[i32],
     loss_scale: f32,
     n: usize,
-) -> Vec<Vec<f32>> {
+) -> [Vec<f32>; N_PARAMS] {
+    let Exec { pool, arena } = ex;
     let classes = entry.num_classes;
-    let mut grads: Vec<Vec<f32>> = vec![Vec::new(); N_PARAMS];
+    let mut grads: [Vec<f32>; N_PARAMS] = Default::default();
 
     // Seed with the cotangent of the scaled loss.
-    let g_logits: Vec<f32> = fwd.dlogits.iter().map(|&v| v * loss_scale).collect();
+    let mut g_logits = arena.take(n * classes);
+    for (d, &v) in g_logits.iter_mut().zip(fwd.dlogits.iter()) {
+        *d = v * loss_scale;
+    }
 
     // Dense head (mp_matmul VJP): dx/dw see the quantized cotangent,
     // the bias grad sits outside the kernel and sees the raw one.
-    let gq = qdq::qdq(&g_logits, codes[3]);
-    let (dx_head, dw_head, _) =
-        ops::dense_bwd(&fwd.head_xq, n, FEATURES, &fwd.head_wq, classes, &gq);
-    let mut db = vec![0f32; classes];
+    let mut gq = arena.take(n * classes);
+    qdq::qdq_into(&g_logits, &mut gq, codes[3]);
+    let mut dx_head = arena.take(n * FEATURES);
+    gemm::gemm_a_bt(pool, arena, &gq, &fwd.head_wq, &mut dx_head, n, classes, FEATURES, false);
+    let mut dw_head = arena.take(FEATURES * classes);
+    gemm::gemm_at_b(pool, arena, &fwd.head_xq, &gq, &mut dw_head, n, FEATURES, classes);
+    arena.put(gq);
+    let mut db = arena.take(classes);
     for bi in 0..n {
-        for (co, d) in db.iter_mut().enumerate() {
-            *d += g_logits[bi * classes + co];
+        for (d, &v) in db.iter_mut().zip(g_logits[bi * classes..(bi + 1) * classes].iter()) {
+            *d += v;
         }
     }
+    arena.put(g_logits);
     grads[9] = dw_head;
     grads[10] = db;
 
@@ -180,29 +293,62 @@ fn backward(
         let dim = DIMS[li];
         let cout = CHANNELS[li];
         let cin = if li == 0 { 3 } else { CHANNELS[li - 1] };
-        let mut gs = if li == 2 {
-            ops::gap_bwd(&g, n, dim, dim, cout)
-        } else {
-            ops::maxpool2_bwd(&g, &fwd.arg[li], n, dim, dim, cout)
-        };
-        ops::relu_bwd_inplace(&mut gs, &fwd.bn_out[li]);
         let rows = n * dim * dim;
-        let (dxbn, dgamma, dbeta) = ops::bn_bwd(
+        let k9 = 9 * cin;
+
+        let mut gs = arena.take(rows * cout);
+        if li == 2 {
+            ops::gap_bwd_into(&g, n, dim, dim, cout, &mut gs);
+        } else {
+            ops::maxpool2_bwd_into(&g, &fwd.arg[li], n, dim, dim, cout, &mut gs);
+        }
+        arena.put(g);
+        ops::relu_bwd_inplace(&mut gs, &fwd.bn_out[li]);
+
+        let mut dxbn = arena.take(rows * cout);
+        let mut dgamma = arena.take(cout);
+        let mut dbeta = arena.take(cout);
+        ops::bn_bwd_into(
             &fwd.conv_out[li],
             &gs,
             rows,
             cout,
             &params[li * 3 + 1],
-            &fwd.bn[li],
+            &fwd.bn_mean[li],
+            &fwd.bn_inv[li],
+            &mut dxbn,
+            &mut dgamma,
+            &mut dbeta,
         );
-        let (dxq, dwq) =
-            ops::conv3x3_bwd(&fwd.xq[li], n, dim, dim, cin, &fwd.wq[li], cout, &dxbn);
-        // qdq VJP: cotangents are rounded to the layer's precision.
-        grads[li * 3] = qdq::qdq(&dwq, codes[li]);
+        arena.put(gs);
+
+        // Conv backward: dw = x_colsᵀ·g (ordered-reduction GEMM), then
+        // dx = col2im(g·Wᵀ); qdq VJP rounds both outgoing cotangents.
+        let mut dw = arena.take(k9 * cout);
+        gemm::gemm_at_b(pool, arena, &fwd.cols[li], &dxbn, &mut dw, rows, k9, cout);
+        qdq::qdq_inplace(&mut dw, codes[li]);
+        g = if li == 0 {
+            // The cotangent w.r.t. the input images is never consumed —
+            // skip its GEMM + col2im entirely (the seed kernels paid
+            // for it on every step).
+            arena.put(dxbn);
+            Vec::new()
+        } else {
+            let mut dcols = arena.take(rows * k9);
+            gemm::gemm_a_bt(pool, arena, &dxbn, &fwd.wq[li], &mut dcols, rows, cout, k9, false);
+            arena.put(dxbn);
+            let mut dx = arena.take(rows * cin);
+            gemm::col2im3x3(pool, &dcols, n, dim, dim, cin, &mut dx);
+            arena.put(dcols);
+            qdq::qdq_inplace(&mut dx, codes[li]);
+            dx
+        };
+
+        grads[li * 3] = dw;
         grads[li * 3 + 1] = dgamma;
         grads[li * 3 + 2] = dbeta;
-        g = qdq::qdq(&dxq, codes[li]);
     }
+    arena.put(g); // empty after block 0 (zero-capacity puts are no-ops)
 
     // Unscale (exact for power-of-two loss scales).
     let inv = 1.0 / loss_scale;
@@ -295,14 +441,25 @@ pub fn init(entry: &ModelEntry, seed: i32) -> Result<ModelState> {
 
 /// One fused SGD+momentum training step (train_graph.py semantics).
 pub fn train_step(
+    ex: &mut Exec,
     entry: &ModelEntry,
     st: &mut ModelState,
     batch: &Batch,
     ctrl: &StepCtrl,
 ) -> Result<TrainOutputs> {
     let n = batch.n;
-    let fwd = forward(entry, &st.params, &st.state, &batch.x, &batch.y, n, &ctrl.codes, true);
-    let grads = backward(entry, &fwd, &st.params, &ctrl.codes, ctrl.loss_scale, n);
+    let mut fwd = forward(
+        ex,
+        entry,
+        &st.params,
+        &st.state,
+        &batch.x,
+        &batch.y,
+        n,
+        &ctrl.codes,
+        true,
+    );
+    let grads = backward(ex, entry, &fwd, &st.params, &ctrl.codes, ctrl.loss_scale, n);
     let overflow = grads.iter().any(|g| g.iter().any(|v| !v.is_finite()));
     let (grad_var, grad_norm) = layer_stats(entry, &grads);
 
@@ -328,52 +485,60 @@ pub fn train_step(
         }
     }
     if !overflow {
-        st.state = fwd.new_state;
+        // Swap the arena-backed running stats in; the displaced old
+        // state vectors ride back to the arena through `new_state`.
+        for (dst, src) in st.state.iter_mut().zip(fwd.new_state.iter_mut()) {
+            std::mem::swap(dst, src);
+        }
     }
-    Ok(TrainOutputs {
-        loss: fwd.loss,
-        correct: fwd.correct,
-        grad_var,
-        grad_norm,
-        overflow,
-    })
+    let (loss, correct) = (fwd.loss, fwd.correct);
+    ex.arena.put_all(grads);
+    release_fwd(ex, fwd);
+    Ok(TrainOutputs { loss, correct, grad_var, grad_norm, overflow })
 }
 
 /// Eval with running-stat BN (codes honoured, state untouched).
 pub fn eval_batch(
+    ex: &mut Exec,
     entry: &ModelEntry,
     st: &ModelState,
     batch: &Batch,
     codes: &[i32],
 ) -> Result<EvalResult> {
-    let fwd = forward(entry, &st.params, &st.state, &batch.x, &batch.y, batch.n, codes, false);
-    Ok(EvalResult {
-        loss: fwd.loss,
-        correct: fwd.correct,
-        total: batch.n,
-    })
+    let fwd = forward(ex, entry, &st.params, &st.state, &batch.x, &batch.y, batch.n, codes, false);
+    let (loss, correct) = (fwd.loss, fwd.correct);
+    release_fwd(ex, fwd);
+    Ok(EvalResult { loss, correct, total: batch.n })
 }
 
 /// Relative step size of the central-difference HVP probe.
 const FD_EPS_REL: f64 = 1e-2;
 
-/// Gradients of the unscaled train-mode loss at `params`.
+/// Gradients of the unscaled train-mode loss at `params` (arena-backed;
+/// the caller returns them).
 fn grad_at(
+    ex: &mut Exec,
     entry: &ModelEntry,
     params: &[Vec<f32>],
     state: &[Vec<f32>],
     batch: &Batch,
     codes: &[i32],
-) -> Vec<Vec<f32>> {
-    let fwd = forward(entry, params, state, &batch.x, &batch.y, batch.n, codes, true);
-    backward(entry, &fwd, params, codes, 1.0, batch.n)
+) -> [Vec<f32>; N_PARAMS] {
+    let fwd = forward(ex, entry, params, state, &batch.x, &batch.y, batch.n, codes, true);
+    let grads = backward(ex, entry, &fwd, params, codes, 1.0, batch.n);
+    release_fwd(ex, fwd);
+    grads
 }
 
 /// One amortized power-iteration step per precision layer:
 /// block-diagonal HVP `H_l u_l` via a per-layer central difference of
 /// the gradient, Rayleigh quotient `λ_l`, and normalized next probe
 /// written back into `probes` (curv_graph.py strict-block semantics).
+/// The two perturbed parameter sets are plain clones — the parameter
+/// footprint is tiny next to the activation scratch, and curvature
+/// fires on the amortized control cadence, not every step.
 pub fn curv_step(
+    ex: &mut Exec,
     entry: &ModelEntry,
     st: &ModelState,
     batch: &Batch,
@@ -414,8 +579,8 @@ pub fn curv_step(
                 pm[i][k] -= d;
             }
         }
-        let gp = grad_at(entry, &pp, &st.state, batch, codes);
-        let gm = grad_at(entry, &pm, &st.state, batch, codes);
+        let gp = grad_at(ex, entry, &pp, &st.state, batch, codes);
+        let gm = grad_at(ex, entry, &pm, &st.state, batch, codes);
 
         let inv2e = 1.0 / (2.0 * eps);
         let mut num = 0f64;
@@ -423,11 +588,10 @@ pub fn curv_step(
         let mut hn2 = 0f64;
         let mut hu: Vec<(usize, Vec<f32>)> = Vec::with_capacity(idxs.len());
         for &i in &idxs {
-            let h: Vec<f32> = gp[i]
-                .iter()
-                .zip(gm[i].iter())
-                .map(|(&a, &b)| (a - b) * inv2e)
-                .collect();
+            let mut h = ex.arena.take(gp[i].len());
+            for (hv, (&a, &b)) in h.iter_mut().zip(gp[i].iter().zip(gm[i].iter())) {
+                *hv = (a - b) * inv2e;
+            }
             for (k, &hv) in h.iter().enumerate() {
                 num += probes[i][k] as f64 * hv as f64;
                 den += (probes[i][k] as f64) * (probes[i][k] as f64);
@@ -438,8 +602,13 @@ pub fn curv_step(
         let hn = hn2.sqrt() + 1e-12;
         lambdas[li] = (num / (den + 1e-12)) as f32;
         for (i, h) in hu {
-            probes[i] = h.iter().map(|&v| (v as f64 / hn) as f32).collect();
+            for (p, &hv) in probes[i].iter_mut().zip(h.iter()) {
+                *p = (hv as f64 / hn) as f32;
+            }
+            ex.arena.put(h);
         }
+        ex.arena.put_all(gp);
+        ex.arena.put_all(gm);
     }
     Ok(lambdas)
 }
@@ -447,7 +616,7 @@ pub fn curv_step(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::manifest::{FP16, FP32};
+    use crate::manifest::{BF16, FP16, FP32};
     use crate::runtime::native::builtin_manifest;
 
     fn entry() -> ModelEntry {
@@ -484,12 +653,16 @@ mod tests {
     #[test]
     fn whole_model_gradcheck_fp32() {
         let e = entry();
+        let mut ex = Exec::from_env();
         let mut st = init(&e, 7).unwrap();
         let b = rand_batch(4, 1);
         let codes = vec![FP32; 4];
-        let grads = grad_at(&e, &st.params, &st.state, &b, &codes);
-        let loss_at = |params: &[Vec<f32>], st: &ModelState| -> f64 {
-            forward(&e, params, &st.state, &b.x, &b.y, b.n, &codes, true).loss as f64
+        let grads = grad_at(&mut ex, &e, &st.params, &st.state, &b, &codes);
+        let loss_at = |ex: &mut Exec, params: &[Vec<f32>], st: &ModelState| -> f64 {
+            let fwd = forward(ex, &e, params, &st.state, &b.x, &b.y, b.n, &codes, true);
+            let loss = fwd.loss as f64;
+            release_fwd(ex, fwd);
+            loss
         };
         let mut rng = Rng::new(0xFD);
         // Spot-check a few components of every parameter tensor.
@@ -499,9 +672,9 @@ mod tests {
                 let eps = 5e-3f32;
                 let orig = st.params[pi][k];
                 st.params[pi][k] = orig + eps;
-                let lp = loss_at(&st.params, &st);
+                let lp = loss_at(&mut ex, &st.params, &st);
                 st.params[pi][k] = orig - eps;
-                let lm = loss_at(&st.params, &st);
+                let lm = loss_at(&mut ex, &st.params, &st);
                 st.params[pi][k] = orig;
                 let numeric = ((lp - lm) / (2.0 * eps as f64)) as f32;
                 let analytic = grads[pi][k];
@@ -518,6 +691,7 @@ mod tests {
     #[test]
     fn overfits_one_batch() {
         let e = entry();
+        let mut ex = Exec::from_env();
         let mut st = init(&e, 1).unwrap();
         let b = rand_batch(8, 5);
         let ctrl = StepCtrl::uniform(4, FP32, 0.1, 0.0);
@@ -530,7 +704,7 @@ mod tests {
             overflow: false,
         };
         for step in 0..40 {
-            last = train_step(&e, &mut st, &b, &ctrl).unwrap();
+            last = train_step(&mut ex, &e, &mut st, &b, &ctrl).unwrap();
             if step == 0 {
                 first = last.loss;
             }
@@ -546,19 +720,20 @@ mod tests {
     #[test]
     fn overflow_masks_the_update() {
         let e = entry();
+        let mut ex = Exec::from_env();
         let mut st = init(&e, 2).unwrap();
         let before = st.clone();
         let b = rand_batch(8, 9);
         let mut ctrl = StepCtrl::uniform(4, FP16, 0.05, 0.0);
         ctrl.loss_scale = 1e30; // cotangents overflow binary16 -> inf
-        let out = train_step(&e, &mut st, &b, &ctrl).unwrap();
+        let out = train_step(&mut ex, &e, &mut st, &b, &ctrl).unwrap();
         assert!(out.overflow, "1e30 scale through fp16 must overflow");
         assert_eq!(st.params, before.params, "params held on overflow");
         assert_eq!(st.mom, before.mom, "momentum held on overflow");
         assert_eq!(st.state, before.state, "BN state held on overflow");
         // A sane scale on the same batch recovers immediately.
         ctrl.loss_scale = 1024.0;
-        let ok = train_step(&e, &mut st, &b, &ctrl).unwrap();
+        let ok = train_step(&mut ex, &e, &mut st, &b, &ctrl).unwrap();
         assert!(!ok.overflow);
         assert_ne!(st.params, before.params, "clean step updates params");
     }
@@ -566,15 +741,68 @@ mod tests {
     #[test]
     fn grad_stats_have_layer_arity_and_scale() {
         let e = entry();
+        let mut ex = Exec::from_env();
         let mut st = init(&e, 4).unwrap();
         let b = rand_batch(16, 2);
         let ctrl = StepCtrl::uniform(4, FP32, 0.05, 5e-4);
-        let out = train_step(&e, &mut st, &b, &ctrl).unwrap();
+        let out = train_step(&mut ex, &e, &mut st, &b, &ctrl).unwrap();
         assert_eq!(out.grad_var.len(), 4);
         assert_eq!(out.grad_norm.len(), 4);
         assert!(out.grad_var.iter().all(|v| v.is_finite() && *v >= 0.0));
         assert!(out.grad_norm.iter().all(|v| v.is_finite() && *v >= 0.0));
         // The dense head sees the largest per-element gradients at init.
         assert!(out.grad_var[3] > out.grad_var[1]);
+    }
+
+    #[test]
+    fn warm_train_step_performs_zero_buffer_allocs() {
+        let e = entry();
+        let mut ex = Exec::from_env();
+        let mut st = init(&e, 6).unwrap();
+        let b = rand_batch(16, 13);
+        let ctrl = StepCtrl::uniform(4, BF16, 0.05, 5e-4);
+        for _ in 0..2 {
+            train_step(&mut ex, &e, &mut st, &b, &ctrl).unwrap();
+        }
+        let warm_allocs = ex.arena.fresh_allocs();
+        let warm_pooled = ex.arena.pooled();
+        for _ in 0..4 {
+            train_step(&mut ex, &e, &mut st, &b, &ctrl).unwrap();
+            assert_eq!(
+                ex.arena.fresh_allocs(),
+                warm_allocs,
+                "steady-state train step allocated a buffer"
+            );
+            assert_eq!(
+                ex.arena.pooled(),
+                warm_pooled,
+                "buffer leak: a take without a matching put"
+            );
+        }
+    }
+
+    #[test]
+    fn train_bits_identical_across_thread_counts() {
+        let e = entry();
+        let b = rand_batch(16, 21);
+        let run = |threads: usize| {
+            let mut ex = Exec::new(threads);
+            let mut st = init(&e, 9).unwrap();
+            let mut ctrl = StepCtrl::uniform(4, FP32, 0.05, 5e-4);
+            ctrl.codes = vec![FP16, BF16, FP32, BF16];
+            let mut trace = Vec::new();
+            for _ in 0..3 {
+                let out = train_step(&mut ex, &e, &mut st, &b, &ctrl).unwrap();
+                trace.push(out.loss.to_bits());
+                trace.extend(out.grad_var.iter().map(|v| v.to_bits()));
+            }
+            for p in &st.params {
+                trace.extend(p.iter().map(|v| v.to_bits()));
+            }
+            trace
+        };
+        let t1 = run(1);
+        assert_eq!(t1, run(2), "2 threads must match 1");
+        assert_eq!(t1, run(4), "4 threads must match 1");
     }
 }

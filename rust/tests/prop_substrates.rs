@@ -269,6 +269,75 @@ fn prop_checkpoint_roundtrip_any_shapes() {
     });
 }
 
+// ------------------------------------------------- thread determinism
+
+/// Train 3 steps on the native backend with 1, 2, and 4 worker threads
+/// and require bit-identical losses, grad stats, parameters, and
+/// controller state. This is the contract the deterministic worker
+/// pool (`runtime/native/pool.rs`) guarantees: fixed work chunks +
+/// ordered reductions, so `TRIACCEL_THREADS` is a pure performance
+/// knob. Each case runs 9 full train steps, so it draws a fixed small
+/// case count instead of PROP_CASES; the failing seed is printed.
+#[test]
+fn prop_train_bit_identical_across_thread_counts() {
+    use tri_accel::config::{Config, Method};
+    use tri_accel::coordinator::Controller;
+    use tri_accel::runtime::{Batch, Engine, Session, StepCtrl};
+
+    let precisions = [FP16, BF16, FP32];
+    for case in 0..6u64 {
+        let mut rng = Rng::stream(0xD17E, case);
+        let seed = rng.below(1000) as i32;
+        let codes: Vec<i32> = (0..4)
+            .map(|_| precisions[small_usize(&mut rng, 0, 2)])
+            .collect();
+        let lr = uniform(&mut rng, 0.01, 0.1) as f32;
+        let loss_scale = [1.0f32, 256.0, 65536.0][small_usize(&mut rng, 0, 2)];
+        let n = 16usize;
+        let mut brng = Rng::stream(0xBA7C4, case);
+        let x: Vec<f32> = (0..n * 32 * 32 * 3).map(|_| brng.next_normal()).collect();
+        let y: Vec<i32> = (0..n).map(|_| brng.below(10) as i32).collect();
+        let batch = Batch::new(x, y);
+
+        let run = |threads: usize| -> Vec<u64> {
+            let engine = Engine::native_with_threads(threads);
+            let mut s = Session::init(&engine, "tiny_cnn_c10", seed).unwrap();
+            let entry = s.entry.clone();
+            let cfg = Config::cell("tiny_cnn_c10", Method::TriAccel, seed as u64);
+            let mut ctl = Controller::new(&cfg, &entry);
+            let mut ctrl = StepCtrl::uniform(4, FP32, lr, 5e-4);
+            ctrl.codes = codes.clone();
+            ctrl.loss_scale = loss_scale;
+            let mut trace: Vec<u64> = Vec::new();
+            for _ in 0..3 {
+                let out = s.train_step(&batch, &ctrl).unwrap();
+                ctl.observe_step(&out.grad_var, out.overflow);
+                trace.push(out.loss.to_bits() as u64);
+                trace.push(out.overflow as u64);
+                trace.extend(out.grad_var.iter().map(|v| v.to_bits() as u64));
+                trace.extend(out.grad_norm.iter().map(|v| v.to_bits() as u64));
+            }
+            for p in s.params_host().unwrap() {
+                trace.extend(p.iter().map(|v| v.to_bits() as u64));
+            }
+            for (_, vals) in ctl.export_state() {
+                trace.extend(vals.iter().map(|v| v.to_bits()));
+            }
+            trace
+        };
+
+        let t1 = run(1);
+        for threads in [2usize, 4] {
+            assert_eq!(
+                t1,
+                run(threads),
+                "case {case} (seed {seed}, codes {codes:?}): \
+                 {threads}-thread run diverged from 1-thread"
+            );
+        }
+    }
+}
+
 // ---------------------------------------------------------- qdq kernels
 
 #[test]
