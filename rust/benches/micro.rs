@@ -95,6 +95,33 @@ fn main() {
             black_box(ops::conv3x3_bwd(&x, n, h, w, cin, &wt, cout, &g));
         }));
     }
+    {
+        // Graph-grid kernels (resnet_mini / effnet_lite shapes): the
+        // stride-2 downsampling conv, the 1×1 shortcut/pointwise conv,
+        // and the depthwise conv — kernel regressions fail fast here.
+        let (n, h, w, cin, cout) = (16usize, 32usize, 32usize, 8usize, 16usize);
+        let (ho, wo) = (h / 2, w / 2);
+        let mut rng = Rng::new(0xC2);
+        let x: Vec<f32> = (0..n * h * w * cin).map(|_| rng.next_normal()).collect();
+        let wt3: Vec<f32> = (0..9 * cin * cout).map(|_| rng.next_normal()).collect();
+        let gs2: Vec<f32> = (0..n * ho * wo * cout).map(|_| rng.next_normal()).collect();
+        report.push(&quick_b.run("conv3x3s2_fwd+bwd(B=16, 32x32x8->16x16x16)", || {
+            black_box(ops::conv_fwd(&x, n, h, w, cin, &wt3, cout, 3, 2));
+            black_box(ops::conv_bwd(&x, n, h, w, cin, &wt3, cout, 3, 2, &gs2));
+        }));
+        let wt1: Vec<f32> = (0..cin * cout).map(|_| rng.next_normal()).collect();
+        let g1: Vec<f32> = (0..n * h * w * cout).map(|_| rng.next_normal()).collect();
+        report.push(&quick_b.run("conv1x1_fwd+bwd(B=16, 32x32x8->16)", || {
+            black_box(ops::conv_fwd(&x, n, h, w, cin, &wt1, cout, 1, 1));
+            black_box(ops::conv_bwd(&x, n, h, w, cin, &wt1, cout, 1, 1, &g1));
+        }));
+        let wtd: Vec<f32> = (0..9 * cin).map(|_| rng.next_normal()).collect();
+        let gd: Vec<f32> = (0..n * h * w * cin).map(|_| rng.next_normal()).collect();
+        report.push(&quick_b.run("dwconv3x3_fwd+bwd(B=16, 32x32x8)", || {
+            black_box(ops::dwconv_fwd(&x, n, h, w, cin, 3, 1, &wtd));
+            black_box(ops::dwconv_bwd(&x, n, h, w, cin, 3, 1, &wtd, &gd));
+        }));
+    }
 
     // -- data pipeline ----------------------------------------------------
     let ds = SyntheticCifar::new(10, 4096, true, 0);
@@ -113,6 +140,17 @@ fn main() {
         let ctrl = StepCtrl::uniform(n_layers, BF16, 0.05, 5e-4);
         report.push(&heavy.run(&format!("train_step(B={b}, bf16)"), || {
             black_box(session.train_step(&batch, &ctrl).unwrap());
+        }));
+    }
+
+    // -- graph-grid architectures: one train-step row each ------------------
+    for key in ["resnet_mini_c10", "effnet_lite_c10"] {
+        let e = engine.manifest.model(key).unwrap().clone();
+        let mut s = Session::init(&engine, key, 0).unwrap();
+        let batch = it.next_batch(32).unwrap();
+        let ctrl = StepCtrl::uniform(e.num_layers, BF16, 0.05, 5e-4);
+        report.push(&heavy.run(&format!("train_step({key}, B=32, bf16)"), || {
+            black_box(s.train_step(&batch, &ctrl).unwrap());
         }));
     }
 

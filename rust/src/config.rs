@@ -60,7 +60,10 @@ impl Ablation {
 #[derive(Debug, Clone)]
 pub struct Config {
     // -- workload ---------------------------------------------------------
-    pub model_key: String, // manifest key, e.g. "resnet18_c10"
+    /// Manifest key. The native backend serves the built-in grid
+    /// (`tiny_cnn`/`resnet_mini`/`effnet_lite` × `_c10`/`_c100`);
+    /// artifact backends add their own (e.g. `resnet18_c10`).
+    pub model_key: String,
     pub method: Method,
     pub ablation: Ablation,
     pub seed: u64,

@@ -279,6 +279,7 @@ mod tests {
                 })
                 .collect(),
             params: vec![],
+            nodes: vec![],
             state_shapes: vec![],
             train_buckets: vec![16, 32, 64, 96, 128],
             eval_buckets: vec![128],

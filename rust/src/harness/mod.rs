@@ -227,6 +227,24 @@ pub fn headline(fp32: &CellResult, tri: &CellResult) -> String {
     )
 }
 
+/// Validate CLI-supplied model keys against the engine's manifest
+/// before any session spins up — unknown keys fail at argument-parse
+/// time with the supported-model list instead of deep inside a
+/// manifest lookup mid-run.
+pub fn validate_models(engine: &Engine, keys: &[&str]) -> Result<()> {
+    for key in keys {
+        if !engine.manifest.models.contains_key(*key) {
+            let supported: Vec<&str> =
+                engine.manifest.models.keys().map(|s| s.as_str()).collect();
+            anyhow::bail!(
+                "unknown model `{key}` — supported models: {}",
+                supported.join(", ")
+            );
+        }
+    }
+    Ok(())
+}
+
 /// Sanity used by tests: a VramSim-backed budget check that the elastic
 /// controller's ladder can actually express (at least two buckets fit).
 pub fn ladder_headroom(engine: &Engine, model_key: &str, budget_gb: f64) -> Result<usize> {

@@ -3,7 +3,7 @@
 //! Subcommands:
 //!   info                          backend + model inventory
 //!   train   [--model K] [--method M] [--epochs N] [--set k=v ...]
-//!   table1  [--models a,b] [--seeds 0,1,2] [--steps N] [--epochs N]
+//!   table1  [--models a,b] [--seeds 0,1,2] [--steps N] [--epochs N] [--smoke]
 //!   table2  [--model K]    [--seeds 0,1,2] [--steps N] [--epochs N]
 //!   fig     [--model K]    [--seed S]      [--steps N] [--epochs N]
 //!   compare --a run.json --b run.json
@@ -77,18 +77,24 @@ fn all_models(engine: &Engine) -> String {
         .join(",")
 }
 
-/// `--model` with the manifest's first entry as the default.
+/// `--model` defaulting to the CI-speed model when the manifest serves
+/// it (the BTreeMap's first key would otherwise drift as the built-in
+/// grid grows — e.g. to effnet_lite_c10), else the first entry.
 fn model_or_first(args: &Args, engine: &Engine) -> Result<String> {
-    match args.get("model") {
-        Some(m) => Ok(m.to_string()),
-        None => Ok(engine
-            .manifest
-            .models
-            .keys()
-            .next()
-            .context("empty manifest")?
-            .clone()),
+    if let Some(m) = args.get("model") {
+        return Ok(m.to_string());
     }
+    let default = Config::default().model_key;
+    if engine.manifest.models.contains_key(&default) {
+        return Ok(default);
+    }
+    Ok(engine
+        .manifest
+        .models
+        .keys()
+        .next()
+        .context("empty manifest")?
+        .clone())
 }
 
 /// Compare two run JSONs written by `train` (`runs/<tag>.json`): final
@@ -187,6 +193,7 @@ fn config_from(args: &Args) -> Result<Config> {
 fn train(args: &Args) -> Result<()> {
     let engine = engine_from(args)?;
     let cfg = config_from(args)?;
+    harness::validate_models(&engine, &[cfg.model_key.as_str()])?;
     let out_dir = PathBuf::from(args.get_or("out", "runs"));
     let quiet = args.flag("quiet");
     let save_ckpt = args.get("save-ckpt").map(PathBuf::from);
@@ -255,16 +262,30 @@ fn budget_tweak(args: &Args) -> Result<impl Fn(&mut Config)> {
 
 fn table1(args: &Args) -> Result<()> {
     let engine = engine_from(args)?;
+    // `--smoke`: the CI fast path — 1 seed, a couple of steps, the full
+    // built-in architecture grid. Explicit --steps/--epochs/--seeds
+    // still win over the smoke defaults.
+    let smoke = args.flag("smoke");
     let models = match args.get("models") {
         Some(m) => m.to_string(),
         None => all_models(&engine),
     };
-    let seeds = parse_seeds(args)?;
-    let tweak = budget_tweak(args)?;
+    let explicit_seeds = args.get("seeds").is_some();
+    let mut seeds = parse_seeds(args)?;
+    if smoke && !explicit_seeds {
+        seeds.truncate(1);
+    }
+    let steps: usize = args.parse_or("steps", if smoke { 2 } else { 60 })?;
+    let epochs: usize = args.parse_or("epochs", if smoke { 1 } else { 3 })?;
+    let tweak = harness::quick_budget(steps, epochs);
     args.reject_unknown()?;
     let keys: Vec<&str> = models.split(',').collect();
+    harness::validate_models(&engine, &keys)?;
     let rows = harness::table1(&engine, &keys, &seeds, &tweak)?;
-    println!("== Table 1 (reduced budget; shape comparison vs paper) ==");
+    println!(
+        "== Table 1 ({}; shape comparison vs paper) ==",
+        if smoke { "smoke budget" } else { "reduced budget" }
+    );
     harness::print_table1(&rows);
     for chunk in rows.chunks(3) {
         println!("{} — {}", chunk[0].model_key, harness::headline(&chunk[0], &chunk[2]));
@@ -278,6 +299,7 @@ fn table2(args: &Args) -> Result<()> {
     let seeds = parse_seeds(args)?;
     let tweak = budget_tweak(args)?;
     args.reject_unknown()?;
+    harness::validate_models(&engine, &[model.as_str()])?;
     let rows = harness::table2(&engine, &model, &seeds, &tweak)?;
     println!("== Table 2 ablation — {model} ==");
     harness::print_table2(&rows);
@@ -290,6 +312,7 @@ fn fig(args: &Args) -> Result<()> {
     let seed: u64 = args.parse_or("seed", 0)?;
     let tweak = budget_tweak(args)?;
     args.reject_unknown()?;
+    harness::validate_models(&engine, &[model.as_str()])?;
     let t = harness::fig_adaptive(&engine, &model, seed, &tweak)?;
     println!("== adaptive behaviour — {model} seed {seed} ==");
     println!("epoch, eff_score, fp16, bf16, fp32");

@@ -48,6 +48,45 @@ pub struct ParamSpec {
     pub elems: usize,
 }
 
+/// Sentinel input index: the node reads the batch images, not another
+/// node's output.
+pub const NODE_INPUT_IMAGE: i64 = -1;
+
+/// One typed operation of a model's layer graph. Parameter fields are
+/// indices into [`ModelEntry::params`]; `layer` is the precision-layer
+/// index the op's compute precision comes from; `state` (BN) is the
+/// index of the running-mean vector in the state list (running variance
+/// is `state + 1`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum NodeOp {
+    /// SAME-padded k×k convolution with stride `stride` (pad = (k-1)/2
+    /// on every side; 1×1 convs have no padding).
+    Conv { k: usize, stride: usize, w: usize, layer: usize },
+    /// Depthwise SAME-padded k×k convolution (one filter per channel).
+    DwConv { k: usize, stride: usize, w: usize, layer: usize },
+    /// BatchNorm (batch stats in train mode, running stats in eval).
+    Bn { gamma: usize, beta: usize, state: usize },
+    Relu,
+    /// 2×2 stride-2 max pool.
+    MaxPool2,
+    /// Global average pool over the spatial dims.
+    Gap,
+    /// Dense head over (n, features) activations.
+    Dense { w: usize, b: usize, layer: usize },
+    /// Residual add: `out = input + nodes[rhs]` (same shape).
+    Add { rhs: usize },
+    /// Terminal mean softmax cross-entropy over the logits.
+    SoftmaxCe,
+}
+
+/// A node of the layer graph: the op plus the index of the node whose
+/// output it consumes ([`NODE_INPUT_IMAGE`] = the batch images).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NodeSpec {
+    pub op: NodeOp,
+    pub input: i64,
+}
+
 #[derive(Debug, Clone)]
 pub struct ModelEntry {
     pub key: String,
@@ -57,6 +96,10 @@ pub struct ModelEntry {
     pub param_count: usize,
     pub layers: Vec<LayerSpec>,
     pub params: Vec<ParamSpec>,
+    /// The typed layer graph the native executor walks. Empty for
+    /// artifact-only entries (the PJRT backend runs compiled HLO and
+    /// never consults it).
+    pub nodes: Vec<NodeSpec>,
     pub state_shapes: Vec<Vec<usize>>,
     pub train_buckets: Vec<usize>,
     pub eval_buckets: Vec<usize>,
@@ -159,6 +202,16 @@ impl Manifest {
                 })
             })
             .collect::<Result<Vec<_>>>()?;
+        let nodes = match m.get("graph") {
+            None => Vec::new(),
+            Some(g) => g
+                .as_arr()
+                .context("graph")?
+                .iter()
+                .enumerate()
+                .map(|(i, nd)| Self::parse_node(key, i, nd))
+                .collect::<Result<Vec<_>>>()?,
+        };
         let state_shapes = m
             .req("state_shapes")?
             .as_arr()
@@ -192,6 +245,7 @@ impl Manifest {
             param_count: usize_of(m.req("param_count")?, "param_count")?,
             layers,
             params,
+            nodes,
             state_shapes,
             train_buckets: buckets("train_buckets")?,
             eval_buckets: buckets("eval_buckets")?,
@@ -206,7 +260,106 @@ impl Manifest {
             entry.params.iter().map(|p| p.elems).sum::<usize>() == entry.param_count,
             "{key}: param count mismatch"
         );
+        Self::validate_graph(key, &entry)?;
         Ok(entry)
+    }
+
+    fn parse_node(key: &str, idx: usize, nd: &Json) -> Result<NodeSpec> {
+        let ctx = |what: &str| format!("{key}: graph[{idx}] {what}");
+        let usz = |field: &str| -> Result<usize> {
+            nd.req(field)?.as_usize().with_context(|| ctx(field))
+        };
+        let op = nd.req("op")?.as_str().with_context(|| ctx("op"))?;
+        let op = match op {
+            "conv" => NodeOp::Conv {
+                k: usz("k")?,
+                stride: usz("stride")?,
+                w: usz("w")?,
+                layer: usz("layer")?,
+            },
+            "dwconv" => NodeOp::DwConv {
+                k: usz("k")?,
+                stride: usz("stride")?,
+                w: usz("w")?,
+                layer: usz("layer")?,
+            },
+            "bn" => NodeOp::Bn { gamma: usz("gamma")?, beta: usz("beta")?, state: usz("state")? },
+            "relu" => NodeOp::Relu,
+            "maxpool2" => NodeOp::MaxPool2,
+            "gap" => NodeOp::Gap,
+            "dense" => NodeOp::Dense { w: usz("w")?, b: usz("b")?, layer: usz("layer")? },
+            "add" => NodeOp::Add { rhs: usz("rhs")? },
+            "softmax_ce" => NodeOp::SoftmaxCe,
+            other => anyhow::bail!("{}", ctx(&format!("unknown op `{other}`"))),
+        };
+        let input = match nd.get("in") {
+            None => idx as i64 - 1, // default: the previous node
+            Some(v) => v.as_i64().with_context(|| ctx("in"))?,
+        };
+        Ok(NodeSpec { op, input })
+    }
+
+    /// Structural validation of the layer graph: every index in range,
+    /// inputs strictly earlier than the node (the executor walks the
+    /// list forward once), and the loss node terminal-only.
+    fn validate_graph(key: &str, e: &ModelEntry) -> Result<()> {
+        let n = e.nodes.len();
+        for (i, nd) in e.nodes.iter().enumerate() {
+            let ctx = |what: &str| format!("{key}: graph[{i}]: {what}");
+            anyhow::ensure!(
+                nd.input >= NODE_INPUT_IMAGE && nd.input < i as i64,
+                "{}",
+                ctx("input must be an earlier node or the image (-1)")
+            );
+            let param_ok = |p: usize| -> Result<()> {
+                anyhow::ensure!(p < e.params.len(), "{}", ctx("param index out of range"));
+                Ok(())
+            };
+            let layer_ok = |l: usize| -> Result<()> {
+                anyhow::ensure!(l < e.num_layers, "{}", ctx("layer index out of range"));
+                Ok(())
+            };
+            match nd.op {
+                NodeOp::Conv { k, stride, w, layer }
+                | NodeOp::DwConv { k, stride, w, layer } => {
+                    anyhow::ensure!(
+                        k >= 1 && k % 2 == 1 && stride >= 1,
+                        "{}",
+                        ctx("conv needs odd k >= 1 and stride >= 1")
+                    );
+                    param_ok(w)?;
+                    layer_ok(layer)?;
+                }
+                NodeOp::Bn { gamma, beta, state } => {
+                    param_ok(gamma)?;
+                    param_ok(beta)?;
+                    anyhow::ensure!(
+                        state + 2 <= e.state_shapes.len(),
+                        "{}",
+                        ctx("bn needs state slots [rm, rv]")
+                    );
+                }
+                NodeOp::Dense { w, b, layer } => {
+                    param_ok(w)?;
+                    param_ok(b)?;
+                    layer_ok(layer)?;
+                }
+                NodeOp::Add { rhs } => {
+                    anyhow::ensure!(rhs < i, "{}", ctx("add rhs must be an earlier node"));
+                }
+                NodeOp::Relu | NodeOp::MaxPool2 | NodeOp::Gap => {}
+                NodeOp::SoftmaxCe => {
+                    anyhow::ensure!(i + 1 == n, "{}", ctx("softmax_ce must be the last node"));
+                }
+            }
+        }
+        if n > 0 {
+            anyhow::ensure!(
+                matches!(e.nodes[n - 1].op, NodeOp::SoftmaxCe),
+                "{key}: graph must end in softmax_ce"
+            );
+        }
+        Ok(())
     }
 
     pub fn model(&self, key: &str) -> Result<&ModelEntry> {
@@ -264,6 +417,72 @@ mod tests {
     fn count_mismatch_rejected() {
         let bad = MINI.replace(r#""param_count":6"#, r#""param_count":7"#);
         assert!(Manifest::parse(&bad, Path::new("/tmp")).is_err());
+    }
+
+    const GRAPHED: &str = r#"{
+      "precision_codes": {"fp16":0,"bf16":1,"fp32":2},
+      "models": {
+        "g_c10": {
+          "model":"g","num_classes":10,"num_layers":2,"param_count":158,
+          "layers":[
+            {"name":"c","kind":"conv","param_elems":108,"act_elems":1024,"flops":110592},
+            {"name":"h","kind":"dense","param_elems":40,"act_elems":10,"flops":40}
+          ],
+          "params":[
+            {"name":"c/w","shape":[3,3,3,4],"layer_idx":0,"elems":108},
+            {"name":"h/w","shape":[4,10],"layer_idx":1,"elems":40},
+            {"name":"h/b","shape":[10],"layer_idx":-1,"elems":10}
+          ],
+          "graph":[
+            {"op":"conv","k":3,"stride":1,"w":0,"layer":0,"in":-1},
+            {"op":"relu"},
+            {"op":"gap"},
+            {"op":"dense","w":1,"b":2,"layer":1},
+            {"op":"softmax_ce"}
+          ],
+          "state_shapes":[],
+          "train_buckets":[16],"eval_buckets":[16],"curv_batch":16,
+          "artifacts":{}
+        }
+      }
+    }"#;
+
+    #[test]
+    fn graph_schema_parses_and_defaults_inputs() {
+        let m = Manifest::parse(GRAPHED, Path::new("/x")).unwrap();
+        let e = m.model("g_c10").unwrap();
+        assert_eq!(e.nodes.len(), 5);
+        assert_eq!(e.nodes[0].input, NODE_INPUT_IMAGE, "explicit in:-1");
+        assert_eq!(e.nodes[1].input, 0, "default input is the previous node");
+        assert!(matches!(e.nodes[0].op, NodeOp::Conv { k: 3, stride: 1, w: 0, layer: 0 }));
+        assert!(matches!(e.nodes[3].op, NodeOp::Dense { w: 1, b: 2, layer: 1 }));
+        assert!(matches!(e.nodes[4].op, NodeOp::SoftmaxCe));
+    }
+
+    #[test]
+    fn graph_validation_rejects_bad_indices() {
+        // Forward reference: add pulling from a later node.
+        let bad = GRAPHED.replace(r#"{"op":"relu"}"#, r#"{"op":"add","rhs":3}"#);
+        assert!(Manifest::parse(&bad, Path::new("/x")).is_err(), "forward add rhs");
+        // Param index out of range.
+        let bad = GRAPHED.replace(r#""op":"dense","w":1"#, r#""op":"dense","w":9"#);
+        assert!(Manifest::parse(&bad, Path::new("/x")).is_err(), "param idx");
+        // Loss node must be terminal.
+        let bad = GRAPHED.replace(r#"{"op":"relu"}"#, r#"{"op":"softmax_ce"}"#);
+        assert!(Manifest::parse(&bad, Path::new("/x")).is_err(), "mid-graph loss");
+        // Graph must end in the loss node.
+        let bad = GRAPHED.replace(r#",
+            {"op":"softmax_ce"}"#, "");
+        assert!(Manifest::parse(&bad, Path::new("/x")).is_err(), "missing loss");
+        // Even kernels are rejected (SAME padding needs odd k).
+        let bad = GRAPHED.replace(r#""op":"conv","k":3"#, r#""op":"conv","k":2"#);
+        assert!(Manifest::parse(&bad, Path::new("/x")).is_err(), "even k");
+    }
+
+    #[test]
+    fn graphless_entries_stay_valid() {
+        let m = Manifest::parse(MINI, Path::new("/tmp/a")).unwrap();
+        assert!(m.model("m_c10").unwrap().nodes.is_empty());
     }
 
     #[test]

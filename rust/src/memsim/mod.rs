@@ -52,7 +52,13 @@ pub struct VramSim {
     layer_param_elems: Vec<usize>,
     layer_act_elems: Vec<usize>,
     state_elems: usize,
-    max_layer_act_elems: usize,
+    /// Workspace sizing units: the largest per-sample layer tile,
+    /// weighted by kind — depthwise convs run direct (no shared im2col
+    /// panel) and materialize a quantized input copy alongside the
+    /// output tile, so they charge 2× their activation extent; im2col
+    /// kinds (conv/dense) share the GEMM workspace already counted at
+    /// 1×.
+    ws_units: f64,
     last: f64,
     peak: f64,
     oom_events: u64,
@@ -68,7 +74,11 @@ impl VramSim {
             layer_param_elems: entry.layers.iter().map(|l| l.param_elems).collect(),
             layer_act_elems: entry.layers.iter().map(|l| l.act_elems).collect(),
             state_elems: entry.state_elems(),
-            max_layer_act_elems: entry.layers.iter().map(|l| l.act_elems).max().unwrap_or(0),
+            ws_units: entry
+                .layers
+                .iter()
+                .map(|l| l.act_elems as f64 * if l.kind == "dwconv" { 2.0 } else { 1.0 })
+                .fold(0.0, f64::max),
             last: BASE_OVERHEAD_BYTES / GIB,
             peak: BASE_OVERHEAD_BYTES / GIB,
             oom_events: 0,
@@ -110,8 +120,9 @@ impl VramSim {
         grads += f(bn_elems, 4);
 
         // Workspace: conv scratch ~ one layer's input+output tile at the
-        // live precision, plus the loss/reduction buffers.
-        let ws_bytes = self.max_layer_act_elems as f64
+        // live precision, plus the loss/reduction buffers (kind-weighted
+        // — see `ws_units`).
+        let ws_bytes = self.ws_units
             * b as f64
             * codes.iter().map(|&c| precision_bytes(c)).max().unwrap_or(4) as f64;
         let workspace = ws_bytes * 0.5;
@@ -262,6 +273,7 @@ mod tests {
                 },
             ],
             params: vec![],
+            nodes: vec![],
             state_shapes: vec![],
             train_buckets: vec![32, 64],
             eval_buckets: vec![16],
@@ -347,6 +359,7 @@ mod tests {
             param_count: 11_200_000,
             layers,
             params: vec![],
+            nodes: vec![],
             state_shapes: vec![],
             train_buckets: vec![32, 96],
             eval_buckets: vec![16],
@@ -370,6 +383,26 @@ mod tests {
             "probe surfaced in the peak: tri {} vs amp {amp_peak}",
             tri.peak_gb()
         );
+    }
+
+    #[test]
+    fn dwconv_layers_charge_wider_workspace() {
+        // Two entries identical except the dominant layer's kind: the
+        // depthwise variant runs direct (quantized input copy + output
+        // tile), so its workspace — and only its workspace — doubles.
+        let mk = |kind: &str| {
+            let mut e = toy_entry();
+            e.layers[0].kind = kind.into();
+            e
+        };
+        let mut conv = VramSim::new(&mk("conv"), 10.0, 0.0, 0);
+        let mut dw = VramSim::new(&mk("dwconv"), 10.0, 0.0, 0);
+        let codes = [BF16, BF16];
+        let uc = conv.usage(64, &codes, false);
+        let ud = dw.usage(64, &codes, false);
+        assert!((ud.workspace_gb - 2.0 * uc.workspace_gb).abs() < 1e-12);
+        assert_eq!(uc.activations_gb, ud.activations_gb, "acts unchanged");
+        assert!(ud.total_gb > uc.total_gb);
     }
 
     #[test]

@@ -3,10 +3,12 @@
 //! * [`backend`] — the [`Backend`] trait: the four manifest entry
 //!   points (`init`, `train_b{n}`, `eval_b{n}`, `curv`) over host `f32`
 //!   vectors, plus [`ModelState`].
-//! * [`native`] — the default pure-Rust reference executor (tiny-CNN
-//!   forward/backward, qdq precision emulation, loss-scaled SGD,
-//!   grad stats, FD power-iteration curvature) with a built-in
-//!   manifest. Hermetic: no artifacts, no Python, no native deps.
+//! * [`native`] — the default pure-Rust executor: a manifest-driven
+//!   layer-graph walker (conv/dwconv/bn/relu/pool/residual/dense
+//!   forward+backward, qdq precision emulation, loss-scaled SGD, grad
+//!   stats, FD power-iteration curvature) with a built-in manifest
+//!   covering tiny_cnn/resnet_mini/effnet_lite ×{c10,c100}. Hermetic:
+//!   no artifacts, no Python, no native deps.
 //! * `pjrt` (`--features pjrt`) — the PJRT/XLA executor that loads AOT
 //!   HLO artifacts (`make artifacts`) and runs them on the CPU PJRT
 //!   client. The only module that touches the external `xla` crate.

@@ -251,36 +251,49 @@ pub fn gemm_at_b(
     arena.put(partials);
 }
 
-/// im2col for SAME-padded 3×3 stride-1 convolution with the precision
+/// Output side length of a SAME-padded stride-`s` convolution:
+/// `ceil(h / s)` (pad = (k-1)/2 on every side, torch-style symmetric).
+#[inline]
+pub fn conv_out_dim(h: usize, stride: usize) -> usize {
+    h.div_ceil(stride)
+}
+
+/// im2col for SAME-padded k×k stride-`s` convolution with the precision
 /// round-trip fused into the pack:
-/// `cols[m, (ky*3+kx)*cin + ci] = qdq(x[bi, oy+ky-1, ox+kx-1, ci])`
-/// with `m = (bi*h + oy)*w + ox` and zeros in the padding halo. The
-/// column layout matches the HWIO weight layout, so
-/// `cols · W (9cin×cout)` is exactly `conv3x3_fwd`. One parallel chunk
-/// per image; each chunk owns that image's row block.
-pub fn im2col3x3_qdq(
+/// `cols[m, (ky*k+kx)*cin + ci] = qdq(x[bi, oy*s+ky-p, ox*s+kx-p, ci])`
+/// with `m = (bi*ho + oy)*wo + ox`, `p = (k-1)/2`, and zeros in the
+/// padding halo. The column layout matches the HWIO weight layout, so
+/// `cols · W (k²cin×cout)` is exactly the convolution. One parallel
+/// chunk per image; each chunk owns that image's row block. For
+/// `k = 3, stride = 1` this is bit-identical to the pre-graph
+/// `im2col3x3_qdq` pack (same loop order, same slices).
+pub fn im2col_qdq(
     pool: &Pool,
     x: &[f32],
     n: usize,
     h: usize,
     w: usize,
     cin: usize,
+    k: usize,
+    stride: usize,
     code: i32,
     cols: &mut [f32],
 ) {
-    let k9 = 9 * cin;
+    let kk = k * k * cin;
+    let pad = (k - 1) / 2;
+    let (ho, wo) = (conv_out_dim(h, stride), conv_out_dim(w, stride));
     debug_assert_eq!(x.len(), n * h * w * cin);
-    debug_assert_eq!(cols.len(), n * h * w * k9);
+    debug_assert_eq!(cols.len(), n * ho * wo * kk);
     let parallel = cols.len() >= PAR_MIN_ELEMS;
-    pool.for_each_chunk(cols, h * w * k9, parallel, |bi, img| {
-        for oy in 0..h {
-            for ox in 0..w {
-                let mrow = &mut img[(oy * w + ox) * k9..(oy * w + ox + 1) * k9];
-                for ky in 0..3usize {
-                    let iy = oy as isize + ky as isize - 1;
-                    for kx in 0..3usize {
-                        let ix = ox as isize + kx as isize - 1;
-                        let dst = &mut mrow[(ky * 3 + kx) * cin..(ky * 3 + kx + 1) * cin];
+    pool.for_each_chunk(cols, ho * wo * kk, parallel, |bi, img| {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let mrow = &mut img[(oy * wo + ox) * kk..(oy * wo + ox + 1) * kk];
+                for ky in 0..k {
+                    let iy = (oy * stride + ky) as isize - pad as isize;
+                    for kx in 0..k {
+                        let ix = (ox * stride + kx) as isize - pad as isize;
+                        let dst = &mut mrow[(ky * k + kx) * cin..(ky * k + kx + 1) * cin];
                         if iy < 0 || iy >= h as isize || ix < 0 || ix >= w as isize {
                             dst.fill(0.0);
                         } else {
@@ -294,22 +307,41 @@ pub fn im2col3x3_qdq(
     });
 }
 
-/// Gather-form col2im (the adjoint of [`im2col3x3_qdq`]'s layout):
-/// `dx[bi,iy,ix,ci] = Σ_(ky,kx) dcols[(bi*h+oy)*w+ox, (ky*3+kx)*cin+ci]`
-/// over the valid output positions `oy = iy+1-ky`, `ox = ix+1-kx`.
-/// Each `dx` element is written by exactly one chunk with a fixed
-/// (ky,kx) summation order — no scatter races, deterministic bits.
-pub fn col2im3x3(
+/// Compat wrapper: the 3×3 stride-1 pack (the tiny_cnn shape).
+pub fn im2col3x3_qdq(
+    pool: &Pool,
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    code: i32,
+    cols: &mut [f32],
+) {
+    im2col_qdq(pool, x, n, h, w, cin, 3, 1, code, cols);
+}
+
+/// Gather-form col2im (the adjoint of [`im2col_qdq`]'s layout):
+/// `dx[bi,iy,ix,ci] = Σ_(ky,kx) dcols[(bi*ho+oy)*wo+ox, (ky*k+kx)*cin+ci]`
+/// over the valid output positions `oy = (iy+p-ky)/s`,
+/// `ox = (ix+p-kx)/s` (only when the division is exact). Each `dx`
+/// element is written by exactly one chunk with a fixed (ky,kx)
+/// summation order — no scatter races, deterministic bits.
+pub fn col2im(
     pool: &Pool,
     dcols: &[f32],
     n: usize,
     h: usize,
     w: usize,
     cin: usize,
+    k: usize,
+    stride: usize,
     dx: &mut [f32],
 ) {
-    let k9 = 9 * cin;
-    debug_assert_eq!(dcols.len(), n * h * w * k9);
+    let kk = k * k * cin;
+    let pad = (k - 1) / 2;
+    let (ho, wo) = (conv_out_dim(h, stride), conv_out_dim(w, stride));
+    debug_assert_eq!(dcols.len(), n * ho * wo * kk);
     debug_assert_eq!(dx.len(), n * h * w * cin);
     let parallel = dcols.len() >= PAR_MIN_ELEMS;
     pool.for_each_chunk(dx, h * w * cin, parallel, |bi, img| {
@@ -317,18 +349,26 @@ pub fn col2im3x3(
             for ix in 0..w {
                 let drow = &mut img[(iy * w + ix) * cin..(iy * w + ix + 1) * cin];
                 drow.fill(0.0);
-                for ky in 0..3usize {
-                    let oy = iy as isize + 1 - ky as isize;
-                    if oy < 0 || oy >= h as isize {
+                for ky in 0..k {
+                    let t = iy + pad;
+                    if t < ky || (t - ky) % stride != 0 {
                         continue;
                     }
-                    for kx in 0..3usize {
-                        let ox = ix as isize + 1 - kx as isize;
-                        if ox < 0 || ox >= w as isize {
+                    let oy = (t - ky) / stride;
+                    if oy >= ho {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let u = ix + pad;
+                        if u < kx || (u - kx) % stride != 0 {
                             continue;
                         }
-                        let m = (bi * h + oy as usize) * w + ox as usize;
-                        let base = m * k9 + (ky * 3 + kx) * cin;
+                        let ox = (u - kx) / stride;
+                        if ox >= wo {
+                            continue;
+                        }
+                        let m = (bi * ho + oy) * wo + ox;
+                        let base = m * kk + (ky * k + kx) * cin;
                         let src = &dcols[base..base + cin];
                         for (d, &s) in drow.iter_mut().zip(src) {
                             *d += s;
@@ -338,6 +378,19 @@ pub fn col2im3x3(
             }
         }
     });
+}
+
+/// Compat wrapper: the 3×3 stride-1 unpack.
+pub fn col2im3x3(
+    pool: &Pool,
+    dcols: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    dx: &mut [f32],
+) {
+    col2im(pool, dcols, n, h, w, cin, 3, 1, dx);
 }
 
 #[cfg(test)]
@@ -531,6 +584,85 @@ mod tests {
         assert_eq!(cols[4 * cin], f16_qdq(x[0]));
         assert_eq!(cols[4 * cin + 1], f16_qdq(x[1]));
         assert_ne!(cols[4 * cin], x[0], "fp16 rounding must be visible");
+    }
+
+    #[test]
+    fn strided_im2col_subsamples_and_pads() {
+        // h=4, k=3, s=2 → ho=2; output (0,0) center tap reads x[0,0],
+        // output (1,1) center tap reads x[2,2].
+        let (n, h, w, cin) = (1usize, 4usize, 4usize, 1usize);
+        let x: Vec<f32> = (0..16).map(|v| v as f32).collect();
+        let pool = Pool::new(1);
+        let ho = conv_out_dim(h, 2);
+        assert_eq!(ho, 2);
+        let mut cols = vec![0f32; n * ho * ho * 9 * cin];
+        im2col_qdq(&pool, &x, n, h, w, cin, 3, 2, FP32, &mut cols);
+        assert_eq!(cols[4], x[0], "out (0,0) center tap");
+        assert_eq!(cols[(ho + 1) * 9 + 4], x[2 * w + 2], "out (1,1) center tap");
+        assert_eq!(cols[0], 0.0, "out (0,0) corner tap reads the halo");
+    }
+
+    #[test]
+    fn conv1x1_im2col_is_a_channel_copy() {
+        let (n, h, w, cin) = (1usize, 3usize, 3usize, 2usize);
+        let mut rng = Rng::new(18);
+        let x = randv(&mut rng, n * h * w * cin);
+        let pool = Pool::new(1);
+        let mut cols = vec![0f32; x.len()];
+        im2col_qdq(&pool, &x, n, h, w, cin, 1, 1, FP32, &mut cols);
+        assert_eq!(cols, x, "k=1 s=1 pack is the identity");
+        // stride-2 1×1 subsamples the grid.
+        let ho = conv_out_dim(h, 2);
+        let mut sub = vec![0f32; n * ho * ho * cin];
+        im2col_qdq(&pool, &x, n, h, w, cin, 1, 2, FP32, &mut sub);
+        assert_eq!(&sub[0..cin], &x[0..cin]);
+        assert_eq!(&sub[cin..2 * cin], &x[2 * cin..3 * cin], "(0,1) reads x[0,2]");
+    }
+
+    #[test]
+    fn general_wrappers_match_3x3_path_bitwise() {
+        let mut rng = Rng::new(19);
+        let (n, h, w, cin) = (2usize, 5usize, 4usize, 3usize);
+        let x = randv(&mut rng, n * h * w * cin);
+        let y = randv(&mut rng, n * h * w * 9 * cin);
+        let pool = Pool::new(1);
+        let mut a = vec![0f32; y.len()];
+        let mut b = vec![0f32; y.len()];
+        im2col3x3_qdq(&pool, &x, n, h, w, cin, FP16, &mut a);
+        im2col_qdq(&pool, &x, n, h, w, cin, 3, 1, FP16, &mut b);
+        assert_eq!(a, b, "wrapper must be the same pack");
+        let mut da = vec![0f32; x.len()];
+        let mut db = vec![0f32; x.len()];
+        col2im3x3(&pool, &y, n, h, w, cin, &mut da);
+        col2im(&pool, &y, n, h, w, cin, 3, 1, &mut db);
+        assert_eq!(
+            da.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            db.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn col2im_is_adjoint_of_strided_im2col() {
+        // <im2col(x), y> == <x, col2im(y)> for every (k, stride) the
+        // model grid uses — pins the strided index maps to each other.
+        let mut rng = Rng::new(20);
+        for &(k, s) in &[(3usize, 2usize), (1, 1), (1, 2), (5, 1)] {
+            let (n, h, w, cin) = (2usize, 6usize, 5usize, 3usize);
+            let (ho, wo) = (conv_out_dim(h, s), conv_out_dim(w, s));
+            let x = randv(&mut rng, n * h * w * cin);
+            let y = randv(&mut rng, n * ho * wo * k * k * cin);
+            let pool = Pool::new(1);
+            let mut cols = vec![0f32; y.len()];
+            im2col_qdq(&pool, &x, n, h, w, cin, k, s, FP32, &mut cols);
+            let mut back = vec![0f32; x.len()];
+            col2im(&pool, &y, n, h, w, cin, k, s, &mut back);
+            let lhs: f64 = cols.iter().zip(&y).map(|(&a, &b)| a as f64 * b as f64).sum();
+            let rhs: f64 = x.iter().zip(&back).map(|(&a, &b)| a as f64 * b as f64).sum();
+            assert!(
+                (lhs - rhs).abs() < 1e-3 * lhs.abs().max(1.0),
+                "k={k} s={s}: {lhs} vs {rhs}"
+            );
+        }
     }
 
     #[test]

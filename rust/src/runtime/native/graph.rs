@@ -1,0 +1,1327 @@
+//! Manifest-driven layer-graph executor for the native backend.
+//!
+//! Every native model is a typed node list ([`crate::manifest::NodeSpec`])
+//! the manifest carries: conv k×k (any stride), 1×1 conv, depthwise
+//! conv, BatchNorm, ReLU, 2×2 max pool, global average pool, residual
+//! add, dense head, and a terminal softmax cross-entropy. The executor
+//! walks the list forward (caching what each op's VJP needs) and in
+//! reverse (cotangent buffers per node, accumulated at residual forks),
+//! with the PR-2 compute core threaded through every node: convs run as
+//! fused-qdq im2col + tiled GEMM, depthwise convs as direct fixed-order
+//! kernels, every scratch buffer comes from the [`Exec`] arena (a warm
+//! train step performs zero *scratch-buffer* allocations; the per-call
+//! [`Plan`] bookkeeping is a handful of tiny vecs, negligible next to
+//! one conv), and all parallelism
+//! goes through the deterministic worker pool — output is bit-identical
+//! for every `TRIACCEL_THREADS` value.
+//!
+//! Semantics (unchanged from the hand-written tiny_cnn executor, which
+//! this replaces bit-compatibly — pinned by `tests/golden_trace.rs`):
+//! * forward: conv/dense consume the precision code of their layer
+//!   (weights + input activations rounded through qdq, BN always fp32);
+//! * backward: Pallas-kernel VJP contract — cotangents leaving a
+//!   precision layer are re-quantized at that layer's code;
+//! * train step: loss-scaled grads, overflow detection (any non-finite
+//!   grad skips the whole update and holds BN state), per-layer
+//!   grad-variance/norm stats, fused SGD+momentum with weight decay and
+//!   per-layer LR scales;
+//! * curv step: block-diagonal Hessian-vector products via per-layer
+//!   central differences of the gradient (one power-iteration step per
+//!   firing), the strict-block variant of `curv_graph.py`.
+//!
+//! Shape inference happens once per call in [`Plan::build`]: node input
+//! dims are propagated from the 32×32×3 batch images and validated
+//! against every parameter shape, so a malformed manifest fails loudly
+//! before any compute.
+
+#![allow(clippy::too_many_arguments)]
+
+use anyhow::Result;
+
+use super::arena::Arena;
+use super::gemm;
+use super::ops;
+use super::qdq;
+use super::Exec;
+use crate::manifest::{ModelEntry, NodeOp, NODE_INPUT_IMAGE};
+use crate::runtime::backend::ModelState;
+use crate::runtime::{Batch, EvalResult, StepCtrl, TrainOutputs};
+use crate::util::rng::Rng;
+
+/// Batch images are CIFAR-shaped (the [`Batch`] contract).
+const INPUT_H: usize = 32;
+const INPUT_W: usize = 32;
+const INPUT_C: usize = 3;
+
+/// SGD momentum (kernels/ref.py::SGD_MOMENTUM).
+const MOMENTUM: f32 = 0.9;
+
+/// Spatial/channel extent of one node's activation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Dims {
+    h: usize,
+    w: usize,
+    c: usize,
+}
+
+impl Dims {
+    fn elems(&self, n: usize) -> usize {
+        n * self.h * self.w * self.c
+    }
+}
+
+/// Per-node shape plan: the node's input and output extents.
+struct NodePlan {
+    din: Dims,
+    dout: Dims,
+}
+
+/// The validated execution plan for one model entry.
+struct Plan {
+    nd: Vec<NodePlan>,
+}
+
+impl Plan {
+    /// Infer and validate every node's shapes against the manifest's
+    /// parameter/state tables. Also checks the structural invariants
+    /// the executor relies on: every parameter owned by exactly one
+    /// node, every BN state slot by exactly one BN node, and every
+    /// non-terminal node's output consumed by someone.
+    fn build(entry: &ModelEntry) -> Result<Plan> {
+        anyhow::ensure!(
+            !entry.nodes.is_empty(),
+            "model `{}` has no layer graph (artifact-only entry)",
+            entry.key
+        );
+        let img = Dims { h: INPUT_H, w: INPUT_W, c: INPUT_C };
+        let mut nd: Vec<NodePlan> = Vec::with_capacity(entry.nodes.len());
+        let mut param_used = vec![false; entry.params.len()];
+        let mut state_used = vec![false; entry.state_shapes.len()];
+        let mut out_used = vec![false; entry.nodes.len()];
+        let mut claim_param = |w: usize, what: &str| -> Result<()> {
+            anyhow::ensure!(
+                !std::mem::replace(&mut param_used[w], true),
+                "{}: param {w} ({what}) claimed by two nodes",
+                entry.key
+            );
+            Ok(())
+        };
+        for (i, node) in entry.nodes.iter().enumerate() {
+            let ctx = |what: &str| format!("{}: graph[{i}]: {what}", entry.key);
+            // Index sanity for hand-built entries (the manifest parser
+            // already validates what it loads).
+            match node.op {
+                NodeOp::Conv { w, layer, .. }
+                | NodeOp::DwConv { w, layer, .. }
+                | NodeOp::Dense { w, layer, .. } => {
+                    anyhow::ensure!(
+                        w < entry.params.len() && layer < entry.num_layers,
+                        "{}",
+                        ctx("param/layer index out of range")
+                    );
+                }
+                NodeOp::Bn { gamma, beta, state } => {
+                    anyhow::ensure!(
+                        gamma < entry.params.len()
+                            && beta < entry.params.len()
+                            && state + 2 <= entry.state_shapes.len(),
+                        "{}",
+                        ctx("bn param/state index out of range")
+                    );
+                }
+                _ => {}
+            }
+            if let NodeOp::Dense { b, .. } = node.op {
+                anyhow::ensure!(b < entry.params.len(), "{}", ctx("bias index out of range"));
+            }
+            let din = if node.input == NODE_INPUT_IMAGE {
+                // Only the conv kinds may read the images directly (the
+                // backward's pre-activation/argmax caching assumes every
+                // other op's input is a cached node output).
+                anyhow::ensure!(
+                    matches!(node.op, NodeOp::Conv { .. } | NodeOp::DwConv { .. }),
+                    "{}: graph[{i}]: only conv/dwconv may read the image input",
+                    entry.key
+                );
+                img
+            } else {
+                anyhow::ensure!(
+                    node.input >= 0 && (node.input as usize) < i,
+                    "{}",
+                    ctx("input must be an earlier node")
+                );
+                out_used[node.input as usize] = true;
+                nd[node.input as usize].dout
+            };
+            let dout = match node.op {
+                NodeOp::Conv { k, stride, w, .. } => {
+                    let spec = &entry.params[w];
+                    anyhow::ensure!(
+                        spec.shape.len() == 4
+                            && spec.shape[0] == k
+                            && spec.shape[1] == k
+                            && spec.shape[2] == din.c,
+                        "{}",
+                        ctx(&format!(
+                            "conv weight `{}` shape {:?} != [{k},{k},{},cout]",
+                            spec.name, spec.shape, din.c
+                        ))
+                    );
+                    claim_param(w, "conv/w")?;
+                    Dims {
+                        h: gemm::conv_out_dim(din.h, stride),
+                        w: gemm::conv_out_dim(din.w, stride),
+                        c: spec.shape[3],
+                    }
+                }
+                NodeOp::DwConv { k, stride, w, .. } => {
+                    let spec = &entry.params[w];
+                    anyhow::ensure!(
+                        spec.shape == [k, k, 1, din.c],
+                        "{}",
+                        ctx(&format!(
+                            "dwconv weight `{}` shape {:?} != [{k},{k},1,{}]",
+                            spec.name, spec.shape, din.c
+                        ))
+                    );
+                    claim_param(w, "dwconv/w")?;
+                    Dims {
+                        h: gemm::conv_out_dim(din.h, stride),
+                        w: gemm::conv_out_dim(din.w, stride),
+                        c: din.c,
+                    }
+                }
+                NodeOp::Bn { gamma, beta, state } => {
+                    for (p, what) in [(gamma, "gamma"), (beta, "beta")] {
+                        anyhow::ensure!(
+                            entry.params[p].elems == din.c,
+                            "{}",
+                            ctx(&format!("bn {what} arity != {} channels", din.c))
+                        );
+                        claim_param(p, what)?;
+                    }
+                    for s in [state, state + 1] {
+                        anyhow::ensure!(
+                            entry.state_shapes[s].iter().product::<usize>() == din.c,
+                            "{}",
+                            ctx("bn state arity != channels")
+                        );
+                        anyhow::ensure!(
+                            !std::mem::replace(&mut state_used[s], true),
+                            "{}",
+                            ctx("bn state slot claimed twice")
+                        );
+                    }
+                    din
+                }
+                NodeOp::Relu => din,
+                NodeOp::MaxPool2 => {
+                    anyhow::ensure!(
+                        din.h % 2 == 0 && din.w % 2 == 0,
+                        "{}",
+                        ctx("maxpool2 needs even spatial dims")
+                    );
+                    Dims { h: din.h / 2, w: din.w / 2, c: din.c }
+                }
+                NodeOp::Gap => Dims { h: 1, w: 1, c: din.c },
+                NodeOp::Dense { w, b, .. } => {
+                    anyhow::ensure!(
+                        din.h == 1 && din.w == 1,
+                        "{}",
+                        ctx("dense needs pooled (1×1) input")
+                    );
+                    let spec = &entry.params[w];
+                    anyhow::ensure!(
+                        spec.shape.len() == 2 && spec.shape[0] == din.c,
+                        "{}",
+                        ctx(&format!(
+                            "dense weight `{}` shape {:?} != [{}, classes]",
+                            spec.name, spec.shape, din.c
+                        ))
+                    );
+                    let classes = spec.shape[1];
+                    anyhow::ensure!(
+                        entry.params[b].elems == classes,
+                        "{}",
+                        ctx("dense bias arity != classes")
+                    );
+                    claim_param(w, "dense/w")?;
+                    claim_param(b, "dense/b")?;
+                    Dims { h: 1, w: 1, c: classes }
+                }
+                NodeOp::Add { rhs } => {
+                    anyhow::ensure!(rhs < i, "{}", ctx("add rhs must be an earlier node"));
+                    out_used[rhs] = true;
+                    anyhow::ensure!(
+                        nd[rhs].dout == din,
+                        "{}",
+                        ctx("residual add branches disagree on shape")
+                    );
+                    din
+                }
+                NodeOp::SoftmaxCe => {
+                    anyhow::ensure!(
+                        i + 1 == entry.nodes.len(),
+                        "{}",
+                        ctx("softmax_ce must be the terminal node")
+                    );
+                    anyhow::ensure!(
+                        din.h == 1 && din.w == 1 && din.c == entry.num_classes,
+                        "{}",
+                        ctx("loss input must be (1×1, num_classes) logits")
+                    );
+                    din
+                }
+            };
+            nd.push(NodePlan { din, dout });
+        }
+        for (w, used) in param_used.iter().enumerate() {
+            anyhow::ensure!(
+                used,
+                "{}: param {w} (`{}`) not referenced by the graph",
+                entry.key,
+                entry.params[w].name
+            );
+        }
+        for (s, used) in state_used.iter().enumerate() {
+            anyhow::ensure!(used, "{}: state slot {s} not owned by any bn node", entry.key);
+        }
+        for (i, used) in out_used.iter().enumerate().take(entry.nodes.len() - 1) {
+            anyhow::ensure!(used, "{}: node {i}'s output is never consumed", entry.key);
+        }
+        // The executor seeds the backward from the loss node; a graph
+        // without one would silently eval to loss 0 and panic in train.
+        anyhow::ensure!(
+            matches!(entry.nodes.last().expect("non-empty").op, NodeOp::SoftmaxCe),
+            "{}: graph must end in a softmax_ce loss node",
+            entry.key
+        );
+        Ok(Plan { nd })
+    }
+}
+
+/// Per-node forward caches the backward consumes. All buffers are
+/// arena-backed; [`release_fwd`] checks them back in.
+enum Aux {
+    None,
+    /// Quantized im2col panels + quantized weights.
+    Conv { cols: Vec<f32>, wq: Vec<f32> },
+    /// Quantized input copy + quantized weights.
+    DwConv { xq: Vec<f32>, wq: Vec<f32> },
+    /// Batch statistics (running stats in eval mode).
+    Bn { mean: Vec<f32>, inv: Vec<f32> },
+    /// Max-pool argmax map.
+    Pool { arg: Vec<u8> },
+    /// Quantized dense input / weight.
+    Dense { xq: Vec<f32>, wq: Vec<f32> },
+}
+
+struct NodeCache {
+    /// Output activation (empty for the terminal loss node).
+    act: Vec<f32>,
+    aux: Aux,
+}
+
+struct Fwd {
+    caches: Vec<NodeCache>,
+    /// Updated BN running stats (train mode), indexed like `st.state`.
+    new_state: Vec<Vec<f32>>,
+    /// Cotangent of the (unscaled) mean loss w.r.t. the logits.
+    dlogits: Vec<f32>,
+    loss: f32,
+    correct: i64,
+}
+
+/// Return every forward cache to the arena.
+fn release_fwd(ex: &mut Exec, fwd: Fwd) {
+    let Fwd { caches, new_state, dlogits, .. } = fwd;
+    for c in caches {
+        ex.arena.put(c.act);
+        match c.aux {
+            Aux::None => {}
+            Aux::Conv { cols, wq } => {
+                ex.arena.put(cols);
+                ex.arena.put(wq);
+            }
+            Aux::DwConv { xq, wq } => {
+                ex.arena.put(xq);
+                ex.arena.put(wq);
+            }
+            Aux::Bn { mean, inv } => {
+                ex.arena.put(mean);
+                ex.arena.put(inv);
+            }
+            Aux::Pool { arg } => ex.arena.put_u8(arg),
+            Aux::Dense { xq, wq } => {
+                ex.arena.put(xq);
+                ex.arena.put(wq);
+            }
+        }
+    }
+    ex.arena.put_all(new_state);
+    ex.arena.put(dlogits);
+}
+
+fn forward(
+    ex: &mut Exec,
+    entry: &ModelEntry,
+    plan: &Plan,
+    params: &[Vec<f32>],
+    state: &[Vec<f32>],
+    x: &[f32],
+    y: &[i32],
+    n: usize,
+    codes: &[i32],
+    train: bool,
+) -> Fwd {
+    let Exec { pool, arena } = ex;
+    let mut caches: Vec<NodeCache> = Vec::with_capacity(entry.nodes.len());
+    let mut new_state: Vec<Vec<f32>> = (0..entry.state_shapes.len()).map(|_| Vec::new()).collect();
+    let mut dlogits = Vec::new();
+    let mut loss = 0f32;
+    let mut correct = 0i64;
+
+    for (i, node) in entry.nodes.iter().enumerate() {
+        let p = &plan.nd[i];
+        let (din, dout) = (p.din, p.dout);
+        let src: &[f32] = if node.input == NODE_INPUT_IMAGE {
+            x
+        } else {
+            &caches[node.input as usize].act
+        };
+        let cache = match node.op {
+            NodeOp::Conv { k, stride, w, layer } => {
+                let code = codes[layer];
+                let rows = n * dout.h * dout.w;
+                let kk = k * k * din.c;
+                // im2col with the qdq round-trip fused into the pack —
+                // the only place input activations are rounded; no
+                // quantized activation copy is materialized.
+                let mut cols = arena.take(rows * kk);
+                gemm::im2col_qdq(pool, src, n, din.h, din.w, din.c, k, stride, code, &mut cols);
+                let mut wq = arena.take(params[w].len());
+                qdq::qdq_into(&params[w], &mut wq, code);
+                let mut out = arena.take(rows * dout.c);
+                gemm::gemm(pool, arena, &cols, &wq, &mut out, rows, kk, dout.c, false);
+                NodeCache { act: out, aux: Aux::Conv { cols, wq } }
+            }
+            NodeOp::DwConv { k, stride, w, layer } => {
+                let code = codes[layer];
+                // Depthwise runs direct (no im2col), so the quantized
+                // input copy is materialized once for fwd + dw-bwd use.
+                let mut xq = arena.take(din.elems(n));
+                qdq::qdq_into(src, &mut xq, code);
+                let mut wq = arena.take(params[w].len());
+                qdq::qdq_into(&params[w], &mut wq, code);
+                let mut out = arena.take(dout.elems(n));
+                ops::dwconv_fwd_into(pool, &xq, n, din.h, din.w, din.c, k, stride, &wq, &mut out);
+                NodeCache { act: out, aux: Aux::DwConv { xq, wq } }
+            }
+            NodeOp::Bn { gamma, beta, state: st } => {
+                let rows = n * din.h * din.w;
+                let c = din.c;
+                let mut out = arena.take(rows * c);
+                let mut nrm = arena.take(c);
+                let mut nrv = arena.take(c);
+                let mut mean = arena.take(c);
+                let mut inv = arena.take(c);
+                ops::bn_fwd_into(
+                    src,
+                    rows,
+                    c,
+                    &params[gamma],
+                    &params[beta],
+                    &state[st],
+                    &state[st + 1],
+                    train,
+                    &mut out,
+                    &mut nrm,
+                    &mut nrv,
+                    &mut mean,
+                    &mut inv,
+                );
+                new_state[st] = nrm;
+                new_state[st + 1] = nrv;
+                NodeCache { act: out, aux: Aux::Bn { mean, inv } }
+            }
+            NodeOp::Relu => {
+                // ReLU on a copy — the input stays cached as the
+                // pre-activation the backward masks against.
+                let mut out = arena.take(din.elems(n));
+                out.copy_from_slice(src);
+                ops::relu_inplace(&mut out);
+                NodeCache { act: out, aux: Aux::None }
+            }
+            NodeOp::MaxPool2 => {
+                let mut out = arena.take(dout.elems(n));
+                let mut arg = arena.take_u8(dout.elems(n));
+                ops::maxpool2_fwd_into(src, n, din.h, din.w, din.c, &mut out, &mut arg);
+                NodeCache { act: out, aux: Aux::Pool { arg } }
+            }
+            NodeOp::Gap => {
+                let mut out = arena.take(n * din.c);
+                ops::gap_fwd_into(src, n, din.h, din.w, din.c, &mut out);
+                NodeCache { act: out, aux: Aux::None }
+            }
+            NodeOp::Dense { w, b, layer } => {
+                let code = codes[layer];
+                let (features, classes) = (din.c, dout.c);
+                let mut xq = arena.take(n * features);
+                qdq::qdq_into(src, &mut xq, code);
+                let mut wq = arena.take(params[w].len());
+                qdq::qdq_into(&params[w], &mut wq, code);
+                // Bias-preloaded GEMM (mp_matmul operand quantization).
+                let mut out = arena.take(n * classes);
+                for r in 0..n {
+                    out[r * classes..(r + 1) * classes].copy_from_slice(&params[b]);
+                }
+                gemm::gemm(pool, arena, &xq, &wq, &mut out, n, features, classes, true);
+                NodeCache { act: out, aux: Aux::Dense { xq, wq } }
+            }
+            NodeOp::Add { rhs } => {
+                let rhs_act = &caches[rhs].act;
+                let mut out = arena.take(din.elems(n));
+                for ((o, &a), &b) in out.iter_mut().zip(src.iter()).zip(rhs_act.iter()) {
+                    *o = a + b;
+                }
+                NodeCache { act: out, aux: Aux::None }
+            }
+            NodeOp::SoftmaxCe => {
+                let classes = din.c;
+                let mut dl = arena.take(n * classes);
+                let (l, corr) = ops::softmax_ce_into(src, y, n, classes, &mut dl);
+                dlogits = dl;
+                loss = l;
+                correct = corr;
+                NodeCache { act: Vec::new(), aux: Aux::None }
+            }
+        };
+        caches.push(cache);
+    }
+
+    Fwd { caches, new_state, dlogits, loss, correct }
+}
+
+/// Hand a cotangent buffer to `grad[input]`: moved when the slot is
+/// empty (the common single-consumer chain — value-exact), accumulated
+/// when a residual fork already deposited one. Cotangents aimed at the
+/// batch images are dropped (never consumed — the stem conv skips that
+/// GEMM entirely).
+fn send(arena: &mut Arena, grad: &mut [Option<Vec<f32>>], input: i64, buf: Vec<f32>) {
+    if input == NODE_INPUT_IMAGE {
+        arena.put(buf);
+        return;
+    }
+    let slot = &mut grad[input as usize];
+    if let Some(acc) = slot {
+        for (a, &b) in acc.iter_mut().zip(buf.iter()) {
+            *a += b;
+        }
+        arena.put(buf);
+    } else {
+        *slot = Some(buf);
+    }
+}
+
+/// Reverse pass: returns the parameter gradients of the *unscaled* mean
+/// loss (the loss-scale round-trip is exact for 2^k scales). Gradients
+/// are arena buffers; the caller checks them back in.
+fn backward(
+    ex: &mut Exec,
+    entry: &ModelEntry,
+    plan: &Plan,
+    fwd: &Fwd,
+    params: &[Vec<f32>],
+    codes: &[i32],
+    loss_scale: f32,
+    n: usize,
+) -> Vec<Vec<f32>> {
+    let Exec { pool, arena } = ex;
+    let mut grads: Vec<Vec<f32>> = (0..params.len()).map(|_| Vec::new()).collect();
+    let mut grad: Vec<Option<Vec<f32>>> = (0..entry.nodes.len()).map(|_| None).collect();
+
+    for (i, node) in entry.nodes.iter().enumerate().rev() {
+        let p = &plan.nd[i];
+        let (din, dout) = (p.din, p.dout);
+        if let NodeOp::SoftmaxCe = node.op {
+            // Seed with the cotangent of the scaled loss.
+            let mut g = arena.take(n * din.c);
+            for (d, &v) in g.iter_mut().zip(fwd.dlogits.iter()) {
+                *d = v * loss_scale;
+            }
+            send(arena, &mut grad, node.input, g);
+            continue;
+        }
+        let mut g = grad[i].take().expect("consumed node has a cotangent");
+        match node.op {
+            NodeOp::Conv { k, stride, w, layer } => {
+                let code = codes[layer];
+                let (cols, wq) = match &fwd.caches[i].aux {
+                    Aux::Conv { cols, wq } => (cols, wq),
+                    _ => unreachable!("conv node caches conv aux"),
+                };
+                let rows = n * dout.h * dout.w;
+                let kk = k * k * din.c;
+                // dw = x_colsᵀ·g (ordered-reduction GEMM), then
+                // dx = col2im(g·Wᵀ); qdq VJP rounds both cotangents.
+                let mut dw = arena.take(kk * dout.c);
+                gemm::gemm_at_b(pool, arena, cols, &g, &mut dw, rows, kk, dout.c);
+                qdq::qdq_inplace(&mut dw, code);
+                grads[w] = dw;
+                if node.input == NODE_INPUT_IMAGE {
+                    // The cotangent w.r.t. the images is never consumed
+                    // — skip its GEMM + col2im entirely.
+                    arena.put(g);
+                } else {
+                    let mut dcols = arena.take(rows * kk);
+                    gemm::gemm_a_bt(pool, arena, &g, wq, &mut dcols, rows, dout.c, kk, false);
+                    arena.put(g);
+                    let mut dx = arena.take(din.elems(n));
+                    gemm::col2im(pool, &dcols, n, din.h, din.w, din.c, k, stride, &mut dx);
+                    arena.put(dcols);
+                    qdq::qdq_inplace(&mut dx, code);
+                    send(arena, &mut grad, node.input, dx);
+                }
+            }
+            NodeOp::DwConv { k, stride, w, layer } => {
+                let code = codes[layer];
+                let (xq, wq) = match &fwd.caches[i].aux {
+                    Aux::DwConv { xq, wq } => (xq, wq),
+                    _ => unreachable!("dwconv node caches dwconv aux"),
+                };
+                let mut dw = arena.take(k * k * din.c);
+                ops::dwconv_dw_into(xq, &g, n, din.h, din.w, din.c, k, stride, &mut dw);
+                qdq::qdq_inplace(&mut dw, code);
+                grads[w] = dw;
+                if node.input == NODE_INPUT_IMAGE {
+                    arena.put(g);
+                } else {
+                    let mut dx = arena.take(din.elems(n));
+                    ops::dwconv_dx_into(pool, &g, wq, n, din.h, din.w, din.c, k, stride, &mut dx);
+                    arena.put(g);
+                    qdq::qdq_inplace(&mut dx, code);
+                    send(arena, &mut grad, node.input, dx);
+                }
+            }
+            NodeOp::Bn { gamma, beta, state: _ } => {
+                let (mean, inv) = match &fwd.caches[i].aux {
+                    Aux::Bn { mean, inv } => (mean, inv),
+                    _ => unreachable!("bn node caches bn aux"),
+                };
+                let rows = n * din.h * din.w;
+                let c = din.c;
+                let conv_out: &[f32] = if node.input == NODE_INPUT_IMAGE {
+                    unreachable!("bn never reads the images directly")
+                } else {
+                    &fwd.caches[node.input as usize].act
+                };
+                let mut dx = arena.take(rows * c);
+                let mut dgamma = arena.take(c);
+                let mut dbeta = arena.take(c);
+                ops::bn_bwd_into(
+                    conv_out,
+                    &g,
+                    rows,
+                    c,
+                    &params[gamma],
+                    mean,
+                    inv,
+                    &mut dx,
+                    &mut dgamma,
+                    &mut dbeta,
+                );
+                arena.put(g);
+                grads[gamma] = dgamma;
+                grads[beta] = dbeta;
+                send(arena, &mut grad, node.input, dx);
+            }
+            NodeOp::Relu => {
+                let pre: &[f32] = &fwd.caches[node.input as usize].act;
+                ops::relu_bwd_inplace(&mut g, pre);
+                send(arena, &mut grad, node.input, g);
+            }
+            NodeOp::MaxPool2 => {
+                let arg = match &fwd.caches[i].aux {
+                    Aux::Pool { arg } => arg,
+                    _ => unreachable!("pool node caches its argmax"),
+                };
+                let mut dx = arena.take(din.elems(n));
+                ops::maxpool2_bwd_into(&g, arg, n, din.h, din.w, din.c, &mut dx);
+                arena.put(g);
+                send(arena, &mut grad, node.input, dx);
+            }
+            NodeOp::Gap => {
+                let mut dx = arena.take(din.elems(n));
+                ops::gap_bwd_into(&g, n, din.h, din.w, din.c, &mut dx);
+                arena.put(g);
+                send(arena, &mut grad, node.input, dx);
+            }
+            NodeOp::Dense { w, b, layer } => {
+                let code = codes[layer];
+                let (xq, wq) = match &fwd.caches[i].aux {
+                    Aux::Dense { xq, wq } => (xq, wq),
+                    _ => unreachable!("dense node caches dense aux"),
+                };
+                let (features, classes) = (din.c, dout.c);
+                // mp_matmul VJP: dx/dw see the quantized cotangent, the
+                // bias grad sits outside the kernel and sees the raw one.
+                let mut gq = arena.take(n * classes);
+                qdq::qdq_into(&g, &mut gq, code);
+                let mut dx = arena.take(n * features);
+                gemm::gemm_a_bt(pool, arena, &gq, wq, &mut dx, n, classes, features, false);
+                let mut dw = arena.take(features * classes);
+                gemm::gemm_at_b(pool, arena, xq, &gq, &mut dw, n, features, classes);
+                arena.put(gq);
+                let mut db = arena.take(classes);
+                for bi in 0..n {
+                    for (d, &v) in db.iter_mut().zip(g[bi * classes..(bi + 1) * classes].iter()) {
+                        *d += v;
+                    }
+                }
+                arena.put(g);
+                grads[w] = dw;
+                grads[b] = db;
+                send(arena, &mut grad, node.input, dx);
+            }
+            NodeOp::Add { rhs } => {
+                // The residual add copies the cotangent to both
+                // branches unchanged.
+                let mut side = arena.take(g.len());
+                side.copy_from_slice(&g);
+                send(arena, &mut grad, rhs as i64, side);
+                send(arena, &mut grad, node.input, g);
+            }
+            NodeOp::SoftmaxCe => unreachable!("handled above"),
+        }
+    }
+
+    // Unscale (exact for power-of-two loss scales).
+    let inv = 1.0 / loss_scale;
+    for gvec in grads.iter_mut() {
+        for v in gvec.iter_mut() {
+            *v *= inv;
+        }
+    }
+    grads
+}
+
+/// Per-precision-layer (variance, Σg²) of the parameter gradients,
+/// mirroring `train_graph._per_layer_grad_stats`. NaN/inf gradients
+/// propagate into the stats (the controller ignores non-finite values).
+fn layer_stats(entry: &ModelEntry, grads: &[Vec<f32>]) -> (Vec<f32>, Vec<f32>) {
+    let l_count = entry.num_layers;
+    let mut sum = vec![0f64; l_count];
+    let mut sq = vec![0f64; l_count];
+    let mut count = vec![0usize; l_count];
+    for (spec, g) in entry.params.iter().zip(grads) {
+        if spec.layer_idx < 0 {
+            continue;
+        }
+        let li = spec.layer_idx as usize;
+        for &v in g {
+            sum[li] += v as f64;
+            sq[li] += (v as f64) * (v as f64);
+        }
+        count[li] += g.len();
+    }
+    let mut var = Vec::with_capacity(l_count);
+    let mut norm = Vec::with_capacity(l_count);
+    for li in 0..l_count {
+        let cnt = count[li].max(1) as f64;
+        let mean = sum[li] / cnt;
+        let raw = sq[li] / cnt - mean * mean;
+        // Clamp round-off below zero but let NaN through (overflow
+        // steps must not report a fake zero variance).
+        let v = if raw.is_nan() { f64::NAN } else { raw.max(0.0) };
+        var.push(v as f32);
+        norm.push(sq[li] as f32);
+    }
+    (var, norm)
+}
+
+/// Seed-deterministic parameter/state materialization (he-normal convs
+/// — depthwise fan-in is k² via the [k,k,1,c] shape — kaiming-uniform
+/// dense, unit gammas, zero betas/bias; BN running stats start at
+/// (0, 1)). Each tensor draws from its own RNG stream, so the init is
+/// independent of evaluation order.
+pub fn init(entry: &ModelEntry, seed: i32) -> Result<ModelState> {
+    Plan::build(entry)?; // validate the graph before materializing
+    let base = seed as i64 as u64;
+    let mut params = Vec::with_capacity(entry.params.len());
+    for (i, spec) in entry.params.iter().enumerate() {
+        let mut rng = Rng::stream(base, 0x1817 ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let v: Vec<f32> = if spec.shape.len() == 4 {
+            // conv kernel: he_normal, fan_in = k*k*cin.
+            let fan_in = (spec.shape[0] * spec.shape[1] * spec.shape[2]).max(1);
+            let s = (2.0 / fan_in as f64).sqrt() as f32;
+            (0..spec.elems).map(|_| rng.next_normal() * s).collect()
+        } else if spec.shape.len() == 2 {
+            // dense kernel: uniform(-1/sqrt(fan_in), 1/sqrt(fan_in)).
+            let bound = 1.0 / (spec.shape[0].max(1) as f32).sqrt();
+            (0..spec.elems)
+                .map(|_| -bound + rng.next_f32() * (2.0 * bound))
+                .collect()
+        } else if spec.name.ends_with("gamma") {
+            vec![1.0; spec.elems]
+        } else {
+            vec![0.0; spec.elems] // beta / bias
+        };
+        params.push(v);
+    }
+    let mom = entry.params.iter().map(|p| vec![0f32; p.elems]).collect();
+    // BN state interleaves [running_mean, running_var] per block.
+    let state = entry
+        .state_shapes
+        .iter()
+        .enumerate()
+        .map(|(i, shape)| {
+            let elems: usize = shape.iter().product();
+            if i % 2 == 0 {
+                vec![0f32; elems]
+            } else {
+                vec![1f32; elems]
+            }
+        })
+        .collect();
+    Ok(ModelState { params, mom, state })
+}
+
+/// One fused SGD+momentum training step (train_graph.py semantics).
+pub fn train_step(
+    ex: &mut Exec,
+    entry: &ModelEntry,
+    st: &mut ModelState,
+    batch: &Batch,
+    ctrl: &StepCtrl,
+) -> Result<TrainOutputs> {
+    let plan = Plan::build(entry)?;
+    let n = batch.n;
+    let mut fwd = forward(
+        ex,
+        entry,
+        &plan,
+        &st.params,
+        &st.state,
+        &batch.x,
+        &batch.y,
+        n,
+        &ctrl.codes,
+        true,
+    );
+    let grads = backward(ex, entry, &plan, &fwd, &st.params, &ctrl.codes, ctrl.loss_scale, n);
+    let overflow = grads.iter().any(|g| g.iter().any(|v| !v.is_finite()));
+    let (grad_var, grad_norm) = layer_stats(entry, &grads);
+
+    // Fused update with the overflow gate as a runtime mask: an
+    // overflowed step leaves params, momentum, and BN state untouched.
+    let mask = if overflow { 0f32 } else { 1f32 };
+    for (i, spec) in entry.params.iter().enumerate() {
+        let scale = if spec.layer_idx >= 0 {
+            ctrl.lr_scales[spec.layer_idx as usize]
+        } else {
+            1.0
+        };
+        let lr_eff = ctrl.lr * scale;
+        let p = &mut st.params[i];
+        let m = &mut st.mom[i];
+        let g = &grads[i];
+        for k in 0..p.len() {
+            let g_eff = (g[k] + ctrl.weight_decay * p[k]) * mask;
+            let m_new = MOMENTUM * m[k] + g_eff;
+            let m_out = if mask > 0.5 { m_new } else { m[k] };
+            p[k] -= lr_eff * mask * m_out;
+            m[k] = m_out;
+        }
+    }
+    if !overflow {
+        // Swap the arena-backed running stats in; the displaced old
+        // state vectors ride back to the arena through `new_state`.
+        for (dst, src) in st.state.iter_mut().zip(fwd.new_state.iter_mut()) {
+            std::mem::swap(dst, src);
+        }
+    }
+    let (loss, correct) = (fwd.loss, fwd.correct);
+    ex.arena.put_all(grads);
+    release_fwd(ex, fwd);
+    Ok(TrainOutputs { loss, correct, grad_var, grad_norm, overflow })
+}
+
+/// Eval with running-stat BN (codes honoured, state untouched).
+pub fn eval_batch(
+    ex: &mut Exec,
+    entry: &ModelEntry,
+    st: &ModelState,
+    batch: &Batch,
+    codes: &[i32],
+) -> Result<EvalResult> {
+    let plan = Plan::build(entry)?;
+    let fwd = forward(
+        ex,
+        entry,
+        &plan,
+        &st.params,
+        &st.state,
+        &batch.x,
+        &batch.y,
+        batch.n,
+        codes,
+        false,
+    );
+    let (loss, correct) = (fwd.loss, fwd.correct);
+    release_fwd(ex, fwd);
+    Ok(EvalResult { loss, correct, total: batch.n })
+}
+
+/// Relative step size of the central-difference HVP probe.
+const FD_EPS_REL: f64 = 1e-2;
+
+/// Gradients of the unscaled train-mode loss at `params` (arena-backed;
+/// the caller returns them).
+fn grad_at(
+    ex: &mut Exec,
+    entry: &ModelEntry,
+    plan: &Plan,
+    params: &[Vec<f32>],
+    state: &[Vec<f32>],
+    batch: &Batch,
+    codes: &[i32],
+) -> Vec<Vec<f32>> {
+    let fwd = forward(
+        ex,
+        entry,
+        plan,
+        params,
+        state,
+        &batch.x,
+        &batch.y,
+        batch.n,
+        codes,
+        true,
+    );
+    let grads = backward(ex, entry, plan, &fwd, params, codes, 1.0, batch.n);
+    release_fwd(ex, fwd);
+    grads
+}
+
+/// Train-mode loss and parameter gradients at `st` — the whole-model
+/// finite-difference gradcheck hook (`tests/prop_substrates.rs`).
+/// Returned gradients are fresh vectors (the arena stays balanced).
+pub fn loss_and_grads(
+    ex: &mut Exec,
+    entry: &ModelEntry,
+    st: &ModelState,
+    batch: &Batch,
+    codes: &[i32],
+) -> Result<(f32, Vec<Vec<f32>>)> {
+    let plan = Plan::build(entry)?;
+    let fwd = forward(
+        ex,
+        entry,
+        &plan,
+        &st.params,
+        &st.state,
+        &batch.x,
+        &batch.y,
+        batch.n,
+        codes,
+        true,
+    );
+    let loss = fwd.loss;
+    let grads = backward(ex, entry, &plan, &fwd, &st.params, codes, 1.0, batch.n);
+    release_fwd(ex, fwd);
+    let out: Vec<Vec<f32>> = grads.iter().map(|g| g.to_vec()).collect();
+    ex.arena.put_all(grads);
+    Ok((loss, out))
+}
+
+/// Train-mode loss at `params` (the FD probe the gradchecks drive).
+pub fn loss_at(
+    ex: &mut Exec,
+    entry: &ModelEntry,
+    params: &[Vec<f32>],
+    state: &[Vec<f32>],
+    batch: &Batch,
+    codes: &[i32],
+) -> Result<f32> {
+    let plan = Plan::build(entry)?;
+    let fwd = forward(
+        ex,
+        entry,
+        &plan,
+        params,
+        state,
+        &batch.x,
+        &batch.y,
+        batch.n,
+        codes,
+        true,
+    );
+    let loss = fwd.loss;
+    release_fwd(ex, fwd);
+    Ok(loss)
+}
+
+/// One amortized power-iteration step per precision layer:
+/// block-diagonal HVP `H_l u_l` via a per-layer central difference of
+/// the gradient, Rayleigh quotient `λ_l`, and normalized next probe
+/// written back into `probes` (curv_graph.py strict-block semantics).
+/// The two perturbed parameter sets are plain clones — the parameter
+/// footprint is tiny next to the activation scratch, and curvature
+/// fires on the amortized control cadence, not every step.
+pub fn curv_step(
+    ex: &mut Exec,
+    entry: &ModelEntry,
+    st: &ModelState,
+    batch: &Batch,
+    probes: &mut [Vec<f32>],
+    codes: &[i32],
+) -> Result<Vec<f32>> {
+    let plan = Plan::build(entry)?;
+    let l_count = entry.num_layers;
+    let mut lambdas = vec![0f32; l_count];
+    for li in 0..l_count {
+        let idxs: Vec<usize> = entry
+            .params
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.layer_idx == li as i64)
+            .map(|(i, _)| i)
+            .collect();
+        let un: f64 = idxs
+            .iter()
+            .map(|&i| probes[i].iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>())
+            .sum::<f64>()
+            .sqrt();
+        if un < 1e-12 {
+            continue; // degenerate probe — λ stays 0, probe untouched
+        }
+        let tn: f64 = idxs
+            .iter()
+            .map(|&i| st.params[i].iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>())
+            .sum::<f64>()
+            .sqrt();
+        let eps = (FD_EPS_REL * (tn + 1.0) / un) as f32;
+
+        let mut pp = st.params.clone();
+        let mut pm = st.params.clone();
+        for &i in &idxs {
+            for k in 0..pp[i].len() {
+                let d = eps * probes[i][k];
+                pp[i][k] += d;
+                pm[i][k] -= d;
+            }
+        }
+        let gp = grad_at(ex, entry, &plan, &pp, &st.state, batch, codes);
+        let gm = grad_at(ex, entry, &plan, &pm, &st.state, batch, codes);
+
+        let inv2e = 1.0 / (2.0 * eps);
+        let mut num = 0f64;
+        let mut den = 0f64;
+        let mut hn2 = 0f64;
+        let mut hu: Vec<(usize, Vec<f32>)> = Vec::with_capacity(idxs.len());
+        for &i in &idxs {
+            let mut h = ex.arena.take(gp[i].len());
+            for (hv, (&a, &b)) in h.iter_mut().zip(gp[i].iter().zip(gm[i].iter())) {
+                *hv = (a - b) * inv2e;
+            }
+            for (k, &hv) in h.iter().enumerate() {
+                num += probes[i][k] as f64 * hv as f64;
+                den += (probes[i][k] as f64) * (probes[i][k] as f64);
+                hn2 += (hv as f64) * (hv as f64);
+            }
+            hu.push((i, h));
+        }
+        let hn = hn2.sqrt() + 1e-12;
+        lambdas[li] = (num / (den + 1e-12)) as f32;
+        for (i, h) in hu {
+            for (p, &hv) in probes[i].iter_mut().zip(h.iter()) {
+                *p = (hv as f64 / hn) as f32;
+            }
+            ex.arena.put(h);
+        }
+        ex.arena.put_all(gp);
+        ex.arena.put_all(gm);
+    }
+    Ok(lambdas)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::{BF16, FP16, FP32};
+    use crate::runtime::native::builtin_manifest;
+
+    const GRID: [&str; 3] = ["tiny_cnn_c10", "resnet_mini_c10", "effnet_lite_c10"];
+
+    fn entry(key: &str) -> ModelEntry {
+        builtin_manifest().model(key).unwrap().clone()
+    }
+
+    fn rand_batch(n: usize, classes: u64, seed: u64) -> Batch {
+        let mut rng = Rng::new(seed);
+        let x: Vec<f32> = (0..n * 32 * 32 * 3).map(|_| rng.next_normal()).collect();
+        let y: Vec<i32> = (0..n).map(|_| rng.below(classes) as i32).collect();
+        Batch::new(x, y)
+    }
+
+    #[test]
+    fn init_shapes_match_manifest_for_every_model() {
+        for key in GRID {
+            let e = entry(key);
+            let st = init(&e, 3).unwrap();
+            assert_eq!(st.params.len(), e.params.len(), "{key}");
+            for (p, spec) in st.params.iter().zip(&e.params) {
+                assert_eq!(p.len(), spec.elems, "{key}: {}", spec.name);
+            }
+            assert_eq!(st.state.len(), e.state_shapes.len(), "{key}");
+            // gammas one, betas zero, running stats (0, 1).
+            for (i, spec) in e.params.iter().enumerate() {
+                if spec.name.ends_with("gamma") {
+                    assert!(st.params[i].iter().all(|&v| v == 1.0), "{key}: {}", spec.name);
+                }
+                if spec.name.ends_with("beta") {
+                    assert!(st.params[i].iter().all(|&v| v == 0.0), "{key}: {}", spec.name);
+                }
+            }
+            assert!(st.state[0].iter().all(|&v| v == 0.0), "{key}: rm");
+            assert!(st.state[1].iter().all(|&v| v == 1.0), "{key}: rv");
+            // conv weights have he-normal-ish spread.
+            let norm: f64 = st.params[0].iter().map(|&v| (v as f64).powi(2)).sum::<f64>();
+            assert!(norm > 0.1 && norm < 1000.0, "{key}: stem norm² {norm}");
+        }
+    }
+
+    #[test]
+    fn whole_model_gradcheck_fp32() {
+        let e = entry("tiny_cnn_c10");
+        let mut ex = Exec::from_env();
+        let mut st = init(&e, 7).unwrap();
+        let b = rand_batch(4, 10, 1);
+        let codes = vec![FP32; e.num_layers];
+        let (_, grads) = loss_and_grads(&mut ex, &e, &st, &b, &codes).unwrap();
+        let mut rng = Rng::new(0xFD);
+        // Spot-check a few components of every parameter tensor.
+        for pi in 0..st.params.len() {
+            for _ in 0..4 {
+                let k = rng.below(st.params[pi].len() as u64) as usize;
+                let eps = 5e-3f32;
+                let orig = st.params[pi][k];
+                st.params[pi][k] = orig + eps;
+                let lp = loss_at(&mut ex, &e, &st.params, &st.state, &b, &codes).unwrap() as f64;
+                st.params[pi][k] = orig - eps;
+                let lm = loss_at(&mut ex, &e, &st.params, &st.state, &b, &codes).unwrap() as f64;
+                st.params[pi][k] = orig;
+                let numeric = ((lp - lm) / (2.0 * eps as f64)) as f32;
+                let analytic = grads[pi][k];
+                let diff = (numeric - analytic).abs();
+                let scale = numeric.abs().max(analytic.abs()).max(3e-2);
+                assert!(
+                    diff / scale < 0.15,
+                    "param {pi}[{k}]: numeric {numeric} vs analytic {analytic}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn overfits_one_batch() {
+        let e = entry("tiny_cnn_c10");
+        let mut ex = Exec::from_env();
+        let mut st = init(&e, 1).unwrap();
+        let b = rand_batch(8, 10, 5);
+        let ctrl = StepCtrl::uniform(4, FP32, 0.1, 0.0);
+        let mut first = 0f32;
+        let mut last = TrainOutputs {
+            loss: 0.0,
+            correct: 0,
+            grad_var: vec![],
+            grad_norm: vec![],
+            overflow: false,
+        };
+        for step in 0..40 {
+            last = train_step(&mut ex, &e, &mut st, &b, &ctrl).unwrap();
+            if step == 0 {
+                first = last.loss;
+            }
+        }
+        assert!(
+            last.loss < 0.5 && last.loss < first * 0.5,
+            "no memorization: {first} -> {}",
+            last.loss
+        );
+        assert_eq!(last.correct, 8, "one batch must be memorized");
+    }
+
+    #[test]
+    fn new_architectures_train_and_eval() {
+        // resnet_mini and effnet_lite: loss is finite, a few steps
+        // reduce it on a fixed batch, eval runs on the updated state,
+        // and every residual/downsample/depthwise parameter receives a
+        // finite gradient (the fork-accumulation path included).
+        for key in ["resnet_mini_c10", "effnet_lite_c10"] {
+            let e = entry(key);
+            let mut ex = Exec::from_env();
+            let mut st = init(&e, 2).unwrap();
+            let b = rand_batch(8, 10, 11);
+            let codes = vec![FP32; e.num_layers];
+            let (_, grads) = loss_and_grads(&mut ex, &e, &st, &b, &codes).unwrap();
+            for (g, spec) in grads.iter().zip(&e.params) {
+                assert!(
+                    g.iter().all(|v| v.is_finite()),
+                    "{key}: {} grad non-finite",
+                    spec.name
+                );
+                let norm: f64 = g.iter().map(|&v| (v as f64).powi(2)).sum();
+                assert!(norm > 0.0, "{key}: {} grad identically zero", spec.name);
+            }
+            let ctrl = StepCtrl::uniform(e.num_layers, FP32, 0.05, 0.0);
+            let mut first = 0f32;
+            let mut last = 0f32;
+            for step in 0..25 {
+                let out = train_step(&mut ex, &e, &mut st, &b, &ctrl).unwrap();
+                assert!(out.loss.is_finite(), "{key} step {step}");
+                if step == 0 {
+                    first = out.loss;
+                }
+                last = out.loss;
+            }
+            assert!(last < first * 0.6, "{key}: no learning: {first} -> {last}");
+            let ev = eval_batch(&mut ex, &e, &st, &rand_batch(16, 10, 12), &codes).unwrap();
+            assert!(ev.loss.is_finite() && ev.total == 16, "{key}");
+        }
+    }
+
+    #[test]
+    fn overflow_masks_the_update() {
+        let e = entry("tiny_cnn_c10");
+        let mut ex = Exec::from_env();
+        let mut st = init(&e, 2).unwrap();
+        let before = st.clone();
+        let b = rand_batch(8, 10, 9);
+        let mut ctrl = StepCtrl::uniform(4, FP16, 0.05, 0.0);
+        ctrl.loss_scale = 1e30; // cotangents overflow binary16 -> inf
+        let out = train_step(&mut ex, &e, &mut st, &b, &ctrl).unwrap();
+        assert!(out.overflow, "1e30 scale through fp16 must overflow");
+        assert_eq!(st.params, before.params, "params held on overflow");
+        assert_eq!(st.mom, before.mom, "momentum held on overflow");
+        assert_eq!(st.state, before.state, "BN state held on overflow");
+        // A sane scale on the same batch recovers immediately.
+        ctrl.loss_scale = 1024.0;
+        let ok = train_step(&mut ex, &e, &mut st, &b, &ctrl).unwrap();
+        assert!(!ok.overflow);
+        assert_ne!(st.params, before.params, "clean step updates params");
+    }
+
+    #[test]
+    fn grad_stats_have_layer_arity_and_scale() {
+        let e = entry("tiny_cnn_c10");
+        let mut ex = Exec::from_env();
+        let mut st = init(&e, 4).unwrap();
+        let b = rand_batch(16, 10, 2);
+        let ctrl = StepCtrl::uniform(4, FP32, 0.05, 5e-4);
+        let out = train_step(&mut ex, &e, &mut st, &b, &ctrl).unwrap();
+        assert_eq!(out.grad_var.len(), 4);
+        assert_eq!(out.grad_norm.len(), 4);
+        assert!(out.grad_var.iter().all(|v| v.is_finite() && *v >= 0.0));
+        assert!(out.grad_norm.iter().all(|v| v.is_finite() && *v >= 0.0));
+        // The dense head sees the largest per-element gradients at init.
+        assert!(out.grad_var[3] > out.grad_var[1]);
+    }
+
+    #[test]
+    fn warm_train_step_performs_zero_buffer_allocs() {
+        for key in GRID {
+            let e = entry(key);
+            let mut ex = Exec::from_env();
+            let mut st = init(&e, 6).unwrap();
+            let b = rand_batch(16, 10, 13);
+            let ctrl = StepCtrl::uniform(e.num_layers, BF16, 0.05, 5e-4);
+            // Three warm-up steps: the graph path's working set is
+            // larger than the old hardcoded executor's, so give the
+            // best-fit free list one extra step to reach its fixpoint.
+            for _ in 0..3 {
+                train_step(&mut ex, &e, &mut st, &b, &ctrl).unwrap();
+            }
+            let warm_allocs = ex.arena.fresh_allocs();
+            let warm_pooled = ex.arena.pooled();
+            for _ in 0..3 {
+                train_step(&mut ex, &e, &mut st, &b, &ctrl).unwrap();
+                assert_eq!(
+                    ex.arena.fresh_allocs(),
+                    warm_allocs,
+                    "{key}: steady-state train step allocated a buffer"
+                );
+                assert_eq!(
+                    ex.arena.pooled(),
+                    warm_pooled,
+                    "{key}: buffer leak — a take without a matching put"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn train_bits_identical_across_thread_counts() {
+        let e = entry("tiny_cnn_c10");
+        let b = rand_batch(16, 10, 21);
+        let run = |threads: usize| {
+            let mut ex = Exec::new(threads);
+            let mut st = init(&e, 9).unwrap();
+            let mut ctrl = StepCtrl::uniform(4, FP32, 0.05, 5e-4);
+            ctrl.codes = vec![FP16, BF16, FP32, BF16];
+            let mut trace = Vec::new();
+            for _ in 0..3 {
+                let out = train_step(&mut ex, &e, &mut st, &b, &ctrl).unwrap();
+                trace.push(out.loss.to_bits());
+                trace.extend(out.grad_var.iter().map(|v| v.to_bits()));
+            }
+            for p in &st.params {
+                trace.extend(p.iter().map(|v| v.to_bits()));
+            }
+            trace
+        };
+        let t1 = run(1);
+        assert_eq!(t1, run(2), "2 threads must match 1");
+        assert_eq!(t1, run(4), "4 threads must match 1");
+    }
+
+    #[test]
+    fn graphless_entries_are_rejected_loudly() {
+        let mut e = entry("tiny_cnn_c10");
+        e.nodes.clear();
+        assert!(init(&e, 0).is_err(), "no graph, no plan");
+        let mut bad = entry("resnet_mini_c10");
+        // Corrupt a conv weight shape: the plan must catch it.
+        if let NodeOp::Conv { w, .. } = bad.nodes[0].op {
+            bad.params[w].shape[2] = 5;
+        }
+        assert!(init(&bad, 0).is_err(), "shape mismatch must fail the plan");
+        let mut lossless = entry("tiny_cnn_c10");
+        lossless.nodes.pop();
+        assert!(init(&lossless, 0).is_err(), "a graph without its loss node is rejected");
+    }
+
+    #[test]
+    fn curv_step_returns_layer_lambdas_for_new_models() {
+        let e = entry("effnet_lite_c10");
+        let mut ex = Exec::from_env();
+        let st = init(&e, 3).unwrap();
+        let b = rand_batch(e.curv_batch, 10, 17);
+        let codes = vec![FP32; e.num_layers];
+        let mut rng = Rng::new(0xAB);
+        let mut probes: Vec<Vec<f32>> = e
+            .params
+            .iter()
+            .map(|p| {
+                if p.layer_idx >= 0 {
+                    (0..p.elems).map(|_| rng.next_normal()).collect()
+                } else {
+                    vec![0f32; p.elems]
+                }
+            })
+            .collect();
+        let lam = curv_step(&mut ex, &e, &st, &b, &mut probes, &codes).unwrap();
+        assert_eq!(lam.len(), e.num_layers);
+        assert!(lam.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,436 @@
+//! Built-in model definitions for the native backend.
+//!
+//! Each model is assembled by [`GraphBuilder`], which tracks activation
+//! shapes while appending nodes and emits the manifest JSON — layer
+//! table, parameter table, state shapes, and the typed layer graph —
+//! with every derived count (param_elems, act_elems, MACs, param_count)
+//! computed from the same shape walk the executor will re-validate, so
+//! the tables can never drift from the graph.
+//!
+//! The grid (paper Table 1 shape, hermetic):
+//! * `tiny_cnn` — the CI-speed stack: [conv3×3 → BN → ReLU → pool]×2 →
+//!   conv3×3 → BN → ReLU → GAP → dense. Bit-compatible with the
+//!   pre-graph hand-written executor (`tests/golden_trace.rs`).
+//! * `resnet_mini` — CIFAR-style residual net standing in for the
+//!   paper's ResNet-18: stem + three residual stages (8→16→32 channels,
+//!   stride-2 downsampling with 1×1-conv shortcuts) → GAP → dense.
+//! * `effnet_lite` — depthwise-separable net standing in for
+//!   EfficientNet-B0: stem + three [dw3×3 → BN → ReLU → pw1×1 → BN]
+//!   blocks (one residual) + 1×1 head conv → GAP → dense.
+//!
+//! Every model ships as `<name>_c10` and `<name>_c100`.
+
+use std::fmt::Write as _;
+
+/// A saved position in the graph walk (node index + activation shape),
+/// used to branch residual paths and to name `add` operands.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct Pos {
+    idx: i64,
+    h: usize,
+    w: usize,
+    c: usize,
+}
+
+/// Shape-tracking builder: appends typed nodes, derives the layer /
+/// param / state tables, and renders one manifest model entry.
+pub(crate) struct GraphBuilder {
+    model: String,
+    classes: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    prev: i64,
+    next_layer: usize,
+    next_state: usize,
+    layers: Vec<String>,
+    params: Vec<String>,
+    nodes: Vec<String>,
+    state_shapes: Vec<String>,
+    param_count: usize,
+}
+
+fn out_dim(h: usize, stride: usize) -> usize {
+    h.div_ceil(stride)
+}
+
+impl GraphBuilder {
+    pub(crate) fn new(model: &str, classes: usize) -> GraphBuilder {
+        GraphBuilder {
+            model: model.to_string(),
+            classes,
+            h: 32,
+            w: 32,
+            c: 3,
+            prev: -1,
+            next_layer: 0,
+            next_state: 0,
+            layers: Vec::new(),
+            params: Vec::new(),
+            nodes: Vec::new(),
+            state_shapes: Vec::new(),
+            param_count: 0,
+        }
+    }
+
+    /// Current position (for residual branches).
+    pub(crate) fn here(&self) -> Pos {
+        Pos { idx: self.prev, h: self.h, w: self.w, c: self.c }
+    }
+
+    /// Rewind the walk to a saved position (start of a side branch).
+    pub(crate) fn goto(&mut self, p: Pos) {
+        self.prev = p.idx;
+        self.h = p.h;
+        self.w = p.w;
+        self.c = p.c;
+    }
+
+    fn push_param(&mut self, name: &str, shape: &[usize], layer_idx: i64) -> usize {
+        let elems: usize = shape.iter().product();
+        let dims: Vec<String> = shape.iter().map(|d| d.to_string()).collect();
+        self.params.push(format!(
+            r#"{{"name":"{name}","shape":[{}],"layer_idx":{layer_idx},"elems":{elems}}}"#,
+            dims.join(",")
+        ));
+        self.param_count += elems;
+        self.params.len() - 1
+    }
+
+    fn push_layer(&mut self, name: &str, kind: &str, param_elems: usize, act: usize, flops: usize) -> usize {
+        self.layers.push(format!(
+            r#"{{"name":"{name}","kind":"{kind}","param_elems":{param_elems},"act_elems":{act},"flops":{flops}}}"#
+        ));
+        let li = self.next_layer;
+        self.next_layer += 1;
+        li
+    }
+
+    fn push_node(&mut self, body: String) {
+        self.nodes.push(body);
+        self.prev = self.nodes.len() as i64 - 1;
+    }
+
+    /// SAME k×k stride-`s` convolution to `cout` channels — one
+    /// precision layer.
+    pub(crate) fn conv(&mut self, name: &str, k: usize, stride: usize, cout: usize) {
+        let (ho, wo) = (out_dim(self.h, stride), out_dim(self.w, stride));
+        let w = self.push_param(&format!("{name}/w"), &[k, k, self.c, cout], self.next_layer as i64);
+        let li = self.push_layer(
+            name,
+            "conv",
+            k * k * self.c * cout,
+            ho * wo * cout,
+            k * k * self.c * cout * ho * wo,
+        );
+        let input = self.prev;
+        self.push_node(format!(
+            r#"{{"op":"conv","k":{k},"stride":{stride},"w":{w},"layer":{li},"in":{input}}}"#
+        ));
+        self.h = ho;
+        self.w = wo;
+        self.c = cout;
+    }
+
+    /// SAME depthwise k×k stride-`s` convolution — one precision layer.
+    pub(crate) fn dwconv(&mut self, name: &str, k: usize, stride: usize) {
+        let (ho, wo) = (out_dim(self.h, stride), out_dim(self.w, stride));
+        let c = self.c;
+        let w = self.push_param(&format!("{name}/w"), &[k, k, 1, c], self.next_layer as i64);
+        let li = self.push_layer(name, "dwconv", k * k * c, ho * wo * c, k * k * c * ho * wo);
+        let input = self.prev;
+        self.push_node(format!(
+            r#"{{"op":"dwconv","k":{k},"stride":{stride},"w":{w},"layer":{li},"in":{input}}}"#
+        ));
+        self.h = ho;
+        self.w = wo;
+    }
+
+    /// BatchNorm over the current channels (fp32-only params + two
+    /// running-stat state slots).
+    pub(crate) fn bn(&mut self, name: &str) {
+        let c = self.c;
+        let gamma = self.push_param(&format!("{name}/gamma"), &[c], -1);
+        let beta = self.push_param(&format!("{name}/beta"), &[c], -1);
+        let state = self.next_state;
+        self.state_shapes.push(format!("[{c}]"));
+        self.state_shapes.push(format!("[{c}]"));
+        self.next_state += 2;
+        let input = self.prev;
+        self.push_node(format!(
+            r#"{{"op":"bn","gamma":{gamma},"beta":{beta},"state":{state},"in":{input}}}"#
+        ));
+    }
+
+    pub(crate) fn relu(&mut self) {
+        let input = self.prev;
+        self.push_node(format!(r#"{{"op":"relu","in":{input}}}"#));
+    }
+
+    pub(crate) fn maxpool2(&mut self) {
+        let input = self.prev;
+        self.push_node(format!(r#"{{"op":"maxpool2","in":{input}}}"#));
+        self.h /= 2;
+        self.w /= 2;
+    }
+
+    pub(crate) fn gap(&mut self) {
+        let input = self.prev;
+        self.push_node(format!(r#"{{"op":"gap","in":{input}}}"#));
+        self.h = 1;
+        self.w = 1;
+    }
+
+    /// Residual add of the branch ending at `rhs` onto the current path.
+    pub(crate) fn add(&mut self, rhs: Pos) {
+        assert_eq!((self.h, self.w, self.c), (rhs.h, rhs.w, rhs.c), "residual shape");
+        let input = self.prev;
+        self.push_node(format!(r#"{{"op":"add","rhs":{},"in":{input}}}"#, rhs.idx));
+    }
+
+    /// Dense head to `classes` logits — one precision layer.
+    pub(crate) fn dense(&mut self, name: &str) {
+        assert_eq!((self.h, self.w), (1, 1), "dense needs pooled input");
+        let (features, classes) = (self.c, self.classes);
+        let w = self.push_param(&format!("{name}/w"), &[features, classes], self.next_layer as i64);
+        let b = self.push_param(&format!("{name}/b"), &[classes], -1);
+        let li = self.push_layer(name, "dense", features * classes, classes, features * classes);
+        let input = self.prev;
+        self.push_node(format!(
+            r#"{{"op":"dense","w":{w},"b":{b},"layer":{li},"in":{input}}}"#
+        ));
+        self.c = classes;
+    }
+
+    /// Append the terminal loss node and render the model entry JSON.
+    pub(crate) fn finish(mut self, curv_batch: usize) -> String {
+        let input = self.prev;
+        self.push_node(format!(r#"{{"op":"softmax_ce","in":{input}}}"#));
+        let mut s = String::new();
+        let _ = write!(
+            s,
+            r#"{{
+      "model": "{}",
+      "num_classes": {},
+      "num_layers": {},
+      "param_count": {},
+      "layers": [{}],
+      "params": [{}],
+      "graph": [{}],
+      "state_shapes": [{}],
+      "train_buckets": [16, 32, 64, 96, 128],
+      "eval_buckets": [16, 128],
+      "curv_batch": {curv_batch},
+      "artifacts": {{}}
+    }}"#,
+            self.model,
+            self.classes,
+            self.next_layer,
+            self.param_count,
+            self.layers.join(","),
+            self.params.join(","),
+            self.nodes.join(","),
+            self.state_shapes.join(","),
+        );
+        s
+    }
+}
+
+/// The CI-speed stack — the same architecture (and parameter table) the
+/// hand-written pre-graph executor implemented.
+fn tiny_cnn(classes: usize) -> String {
+    let mut g = GraphBuilder::new("tiny_cnn", classes);
+    for (i, &ch) in [16usize, 32, 64].iter().enumerate() {
+        g.conv(&format!("conv{}", i + 1), 3, 1, ch);
+        g.bn(&format!("bn{}", i + 1));
+        g.relu();
+        if i < 2 {
+            g.maxpool2();
+        }
+    }
+    g.gap();
+    g.dense("head");
+    g.finish(32)
+}
+
+/// One residual basic block: conv3×3(s) → BN → ReLU → conv3×3 → BN,
+/// plus a 1×1-conv + BN shortcut whenever the shape changes, joined by
+/// a residual add and a trailing ReLU (He et al., CIFAR variant).
+fn basic_block(g: &mut GraphBuilder, name: &str, features: usize, stride: usize) {
+    let block_in = g.here();
+    g.conv(&format!("{name}/conv1"), 3, stride, features);
+    g.bn(&format!("{name}/bn1"));
+    g.relu();
+    g.conv(&format!("{name}/conv2"), 3, 1, features);
+    g.bn(&format!("{name}/bn2"));
+    let main = g.here();
+    let identity = if stride != 1 || block_in.c != features {
+        g.goto(block_in);
+        g.conv(&format!("{name}/down"), 1, stride, features);
+        g.bn(&format!("{name}/bn_down"));
+        g.here()
+    } else {
+        block_in
+    };
+    g.goto(main);
+    g.add(identity);
+    g.relu();
+}
+
+/// CIFAR-style residual net (the paper's ResNet-18 scaled to the
+/// CPU-trainable grid): stem + stages (8, s1)(16, s2)(32, s2).
+fn resnet_mini(classes: usize) -> String {
+    let mut g = GraphBuilder::new("resnet_mini", classes);
+    g.conv("stem", 3, 1, 8);
+    g.bn("bn_stem");
+    g.relu();
+    basic_block(&mut g, "s1b", 8, 1);
+    basic_block(&mut g, "s2b", 16, 2);
+    basic_block(&mut g, "s3b", 32, 2);
+    g.gap();
+    g.dense("head");
+    g.finish(32)
+}
+
+/// One depthwise-separable block: dw3×3(s) → BN → ReLU → pw1×1 → BN,
+/// with a residual add when the shape is preserved (EfficientNet-lite
+/// MBConv without expansion/SE, per the python reference's scaling).
+fn sep_block(g: &mut GraphBuilder, name: &str, features: usize, stride: usize) {
+    let block_in = g.here();
+    g.dwconv(&format!("{name}/dw"), 3, stride);
+    g.bn(&format!("{name}/bn_dw"));
+    g.relu();
+    g.conv(&format!("{name}/pw"), 1, 1, features);
+    g.bn(&format!("{name}/bn_pw"));
+    if stride == 1 && block_in.c == features {
+        g.add(block_in);
+    }
+}
+
+/// Depthwise-separable net (EfficientNet-B0's ingredients at the
+/// CPU-trainable grid): stem + blocks (24, s2)(24, s1 residual)(40, s2)
+/// + 1×1 head conv.
+fn effnet_lite(classes: usize) -> String {
+    let mut g = GraphBuilder::new("effnet_lite", classes);
+    g.conv("stem", 3, 1, 16);
+    g.bn("bn_stem");
+    g.relu();
+    sep_block(&mut g, "b1", 24, 2);
+    sep_block(&mut g, "b2", 24, 1);
+    sep_block(&mut g, "b3", 40, 2);
+    g.conv("head_conv", 1, 1, 64);
+    g.bn("bn_head");
+    g.relu();
+    g.gap();
+    g.dense("head");
+    g.finish(32)
+}
+
+/// Render the full built-in manifest: every architecture × {c10, c100}.
+pub(crate) fn builtin_manifest_json() -> String {
+    let builders: [(&str, fn(usize) -> String); 3] =
+        [("tiny_cnn", tiny_cnn), ("resnet_mini", resnet_mini), ("effnet_lite", effnet_lite)];
+    let mut entries = Vec::new();
+    for (name, build) in builders {
+        for classes in [10usize, 100] {
+            entries.push(format!(r#""{name}_c{classes}": {}"#, build(classes)));
+        }
+    }
+    format!(
+        r#"{{
+  "precision_codes": {{"fp16": 0, "bf16": 1, "fp32": 2}},
+  "models": {{
+    {}
+  }}
+}}"#,
+        entries.join(",\n    ")
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::Manifest;
+    use std::path::Path;
+
+    #[test]
+    fn builder_json_parses_for_every_builtin() {
+        let m = Manifest::parse(&builtin_manifest_json(), Path::new("builtin")).unwrap();
+        assert_eq!(m.models.len(), 6);
+        for name in ["tiny_cnn", "resnet_mini", "effnet_lite"] {
+            for classes in [10usize, 100] {
+                let e = m.model(&format!("{name}_c{classes}")).unwrap();
+                assert_eq!(e.model, name);
+                assert_eq!(e.num_classes, classes);
+                assert!(!e.nodes.is_empty(), "{name}: graph present");
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_cnn_tables_match_the_pre_graph_manifest() {
+        // The exact numbers the hand-written executor's manifest
+        // carried — the builder must regenerate them (param order,
+        // layer accounting, state shapes all included).
+        let m = Manifest::parse(&builtin_manifest_json(), Path::new("builtin")).unwrap();
+        let e = m.model("tiny_cnn_c10").unwrap();
+        assert_eq!(e.num_layers, 4);
+        assert_eq!(e.param_count, 24346);
+        assert_eq!(e.layers.iter().map(|l| l.flops).collect::<Vec<_>>(), vec![
+            442368, 1179648, 1179648, 640
+        ]);
+        assert_eq!(e.layers.iter().map(|l| l.act_elems).collect::<Vec<_>>(), vec![
+            16384, 8192, 4096, 10
+        ]);
+        let names: Vec<&str> = e.params.iter().map(|p| p.name.as_str()).collect();
+        assert_eq!(names, vec![
+            "conv1/w", "bn1/gamma", "bn1/beta", "conv2/w", "bn2/gamma", "bn2/beta",
+            "conv3/w", "bn3/gamma", "bn3/beta", "head/w", "head/b"
+        ]);
+        assert_eq!(e.state_shapes, vec![
+            vec![16], vec![16], vec![32], vec![32], vec![64], vec![64]
+        ]);
+        let e100 = m.model("tiny_cnn_c100").unwrap();
+        assert_eq!(e100.param_count, 30196);
+    }
+
+    #[test]
+    fn resnet_mini_has_downsample_shortcuts_and_ten_layers() {
+        let m = Manifest::parse(&builtin_manifest_json(), Path::new("builtin")).unwrap();
+        let e = m.model("resnet_mini_c10").unwrap();
+        assert_eq!(e.num_layers, 10, "stem + 2+3+3 block convs + head");
+        let kinds: Vec<&str> = e.layers.iter().map(|l| l.kind.as_str()).collect();
+        assert!(kinds.iter().all(|&k| k == "conv" || k == "dense"));
+        // The two downsample shortcuts are 1×1 convs.
+        let down: Vec<&crate::manifest::ParamSpec> =
+            e.params.iter().filter(|p| p.name.ends_with("down/w")).collect();
+        assert_eq!(down.len(), 2);
+        assert_eq!(down[0].shape, vec![1, 1, 8, 16]);
+        assert_eq!(down[1].shape, vec![1, 1, 16, 32]);
+        // Residual adds present.
+        let adds = e
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, crate::manifest::NodeOp::Add { .. }))
+            .count();
+        assert_eq!(adds, 3, "one residual join per stage");
+    }
+
+    #[test]
+    fn effnet_lite_is_depthwise_separable_with_one_residual() {
+        let m = Manifest::parse(&builtin_manifest_json(), Path::new("builtin")).unwrap();
+        let e = m.model("effnet_lite_c10").unwrap();
+        assert_eq!(e.num_layers, 9);
+        let dw = e.layers.iter().filter(|l| l.kind == "dwconv").count();
+        assert_eq!(dw, 3, "one depthwise conv per block");
+        let adds = e
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, crate::manifest::NodeOp::Add { .. }))
+            .count();
+        assert_eq!(adds, 1, "only the shape-preserving block is residual");
+        // Depthwise weights use the [k,k,1,c] shape (fan_in = k²).
+        let b2dw = e.params.iter().find(|p| p.name == "b2/dw/w").unwrap();
+        assert_eq!(b2dw.shape, vec![3, 3, 1, 24]);
+    }
+}

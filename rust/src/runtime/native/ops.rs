@@ -54,9 +54,71 @@ fn with_exec<R>(f: impl FnOnce(&mut Exec) -> R) -> R {
 
 // ------------------------------------------------------------------ conv
 
-/// SAME-padded 3×3 stride-1 convolution. `x` is NHWC `(n,h,w,cin)`
-/// flat, `wt` is HWIO `(3,3,cin,cout)` flat; returns `(n,h,w,cout)`.
-/// Executes as im2col + tiled GEMM (see [`super::gemm`]).
+/// SAME-padded k×k stride-`s` convolution. `x` is NHWC `(n,h,w,cin)`
+/// flat, `wt` is HWIO `(k,k,cin,cout)` flat; returns `(n,ho,wo,cout)`
+/// with `ho = ceil(h/s)`. Executes as im2col + tiled GEMM.
+pub fn conv_fwd(
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    wt: &[f32],
+    cout: usize,
+    k: usize,
+    stride: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(x.len(), n * h * w * cin);
+    debug_assert_eq!(wt.len(), k * k * cin * cout);
+    with_exec(|ex| {
+        let (ho, wo) = (gemm::conv_out_dim(h, stride), gemm::conv_out_dim(w, stride));
+        let m = n * ho * wo;
+        let kk = k * k * cin;
+        let mut out = vec![0f32; m * cout];
+        let mut cols = ex.arena.take(m * kk);
+        gemm::im2col_qdq(&ex.pool, x, n, h, w, cin, k, stride, FP32, &mut cols);
+        gemm::gemm(&ex.pool, &mut ex.arena, &cols, wt, &mut out, m, kk, cout, false);
+        ex.arena.put(cols);
+        out
+    })
+}
+
+/// Backward of [`conv_fwd`]: returns `(dx, dw)` for cotangent `g` of
+/// shape `(n,ho,wo,cout)`. `dw = x_colsᵀ·g` (ordered-reduction GEMM),
+/// `dx = col2im(g·Wᵀ)`.
+pub fn conv_bwd(
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    wt: &[f32],
+    cout: usize,
+    k: usize,
+    stride: usize,
+    g: &[f32],
+) -> (Vec<f32>, Vec<f32>) {
+    let (ho, wo) = (gemm::conv_out_dim(h, stride), gemm::conv_out_dim(w, stride));
+    debug_assert_eq!(g.len(), n * ho * wo * cout);
+    with_exec(|ex| {
+        let m = n * ho * wo;
+        let kk = k * k * cin;
+        let mut cols = ex.arena.take(m * kk);
+        gemm::im2col_qdq(&ex.pool, x, n, h, w, cin, k, stride, FP32, &mut cols);
+        let mut dw = vec![0f32; k * k * cin * cout];
+        gemm::gemm_at_b(&ex.pool, &mut ex.arena, &cols, g, &mut dw, m, kk, cout);
+        ex.arena.put(cols);
+        let mut dcols = ex.arena.take(m * kk);
+        gemm::gemm_a_bt(&ex.pool, &mut ex.arena, g, wt, &mut dcols, m, cout, kk, false);
+        let mut dx = vec![0f32; x.len()];
+        gemm::col2im(&ex.pool, &dcols, n, h, w, cin, k, stride, &mut dx);
+        ex.arena.put(dcols);
+        (dx, dw)
+    })
+}
+
+/// SAME-padded 3×3 stride-1 convolution (compat wrapper over
+/// [`conv_fwd`] — the tiny_cnn shape).
 pub fn conv3x3_fwd(
     x: &[f32],
     n: usize,
@@ -66,23 +128,10 @@ pub fn conv3x3_fwd(
     wt: &[f32],
     cout: usize,
 ) -> Vec<f32> {
-    debug_assert_eq!(x.len(), n * h * w * cin);
-    debug_assert_eq!(wt.len(), 9 * cin * cout);
-    with_exec(|ex| {
-        let m = n * h * w;
-        let k9 = 9 * cin;
-        let mut out = vec![0f32; m * cout];
-        let mut cols = ex.arena.take(m * k9);
-        gemm::im2col3x3_qdq(&ex.pool, x, n, h, w, cin, FP32, &mut cols);
-        gemm::gemm(&ex.pool, &mut ex.arena, &cols, wt, &mut out, m, k9, cout, false);
-        ex.arena.put(cols);
-        out
-    })
+    conv_fwd(x, n, h, w, cin, wt, cout, 3, 1)
 }
 
-/// Backward of [`conv3x3_fwd`]: returns `(dx, dw)` for cotangent `g`
-/// of shape `(n,h,w,cout)`. `dw = x_colsᵀ·g` (ordered-reduction GEMM),
-/// `dx = col2im(g·Wᵀ)`.
+/// Backward of [`conv3x3_fwd`] (compat wrapper over [`conv_bwd`]).
 pub fn conv3x3_bwd(
     x: &[f32],
     n: usize,
@@ -93,20 +142,203 @@ pub fn conv3x3_bwd(
     cout: usize,
     g: &[f32],
 ) -> (Vec<f32>, Vec<f32>) {
-    debug_assert_eq!(g.len(), n * h * w * cout);
+    conv_bwd(x, n, h, w, cin, wt, cout, 3, 1, g)
+}
+
+// --------------------------------------------------------------- dwconv
+
+/// SAME-padded depthwise k×k stride-`s` convolution: one k×k filter per
+/// channel, no cross-channel mixing. `x` is NHWC `(n,h,w,c)` flat, `wt`
+/// is `(k,k,1,c)` flat (tap-major: `wt[(ky*k+kx)*c + ci]`); writes
+/// `(n,ho,wo,c)`. Direct accumulation in fixed ascending tap order —
+/// too few MACs per output to be worth the im2col detour, and the fixed
+/// order keeps the cross-thread bit-identity contract. One parallel
+/// chunk per image.
+pub fn dwconv_fwd_into(
+    pool: &super::pool::Pool,
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+    wt: &[f32],
+    out: &mut [f32],
+) {
+    let pad = (k - 1) / 2;
+    let (ho, wo) = (gemm::conv_out_dim(h, stride), gemm::conv_out_dim(w, stride));
+    debug_assert_eq!(x.len(), n * h * w * c);
+    debug_assert_eq!(wt.len(), k * k * c);
+    debug_assert_eq!(out.len(), n * ho * wo * c);
+    let parallel = out.len() * k * k >= 1 << 19;
+    pool.for_each_chunk(out, ho * wo * c, parallel, |bi, img| {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let orow = &mut img[(oy * wo + ox) * c..(oy * wo + ox + 1) * c];
+                orow.fill(0.0);
+                for ky in 0..k {
+                    let iy = (oy * stride + ky) as isize - pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = (ox * stride + kx) as isize - pad as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let xrow =
+                            &x[((bi * h + iy as usize) * w + ix as usize) * c..][..c];
+                        let wrow = &wt[(ky * k + kx) * c..(ky * k + kx + 1) * c];
+                        for ((o, &xv), &wv) in orow.iter_mut().zip(xrow).zip(wrow) {
+                            *o += xv * wv;
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Weight gradient of the depthwise conv: `dw[(ky,kx),ci] = Σ_pixels
+/// x[iy,ix,ci]·g[oy,ox,ci]`. Runs serially on the caller in ascending
+/// (image, pixel, tap) order — the tensor is tiny (k²·c) and a serial
+/// ordered reduction is trivially thread-count invariant.
+pub fn dwconv_dw_into(
+    x: &[f32],
+    g: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+    dw: &mut [f32],
+) {
+    let pad = (k - 1) / 2;
+    let (ho, wo) = (gemm::conv_out_dim(h, stride), gemm::conv_out_dim(w, stride));
+    debug_assert_eq!(g.len(), n * ho * wo * c);
+    debug_assert_eq!(dw.len(), k * k * c);
+    dw.fill(0.0);
+    for bi in 0..n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let grow = &g[((bi * ho + oy) * wo + ox) * c..][..c];
+                for ky in 0..k {
+                    let iy = (oy * stride + ky) as isize - pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = (ox * stride + kx) as isize - pad as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let xrow =
+                            &x[((bi * h + iy as usize) * w + ix as usize) * c..][..c];
+                        let drow = &mut dw[(ky * k + kx) * c..(ky * k + kx + 1) * c];
+                        for ((d, &xv), &gv) in drow.iter_mut().zip(xrow).zip(grow) {
+                            *d += xv * gv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Input gradient of the depthwise conv, gather form (the adjoint of
+/// [`dwconv_fwd_into`]): each `dx` element sums its contributing output
+/// positions in fixed tap order. One parallel chunk per image, no
+/// scatter races.
+pub fn dwconv_dx_into(
+    pool: &super::pool::Pool,
+    g: &[f32],
+    wt: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+    dx: &mut [f32],
+) {
+    let pad = (k - 1) / 2;
+    let (ho, wo) = (gemm::conv_out_dim(h, stride), gemm::conv_out_dim(w, stride));
+    debug_assert_eq!(g.len(), n * ho * wo * c);
+    debug_assert_eq!(dx.len(), n * h * w * c);
+    let parallel = dx.len() * k * k >= 1 << 19;
+    pool.for_each_chunk(dx, h * w * c, parallel, |bi, img| {
+        for iy in 0..h {
+            for ix in 0..w {
+                let drow = &mut img[(iy * w + ix) * c..(iy * w + ix + 1) * c];
+                drow.fill(0.0);
+                for ky in 0..k {
+                    let t = iy + pad;
+                    if t < ky || (t - ky) % stride != 0 {
+                        continue;
+                    }
+                    let oy = (t - ky) / stride;
+                    if oy >= ho {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let u = ix + pad;
+                        if u < kx || (u - kx) % stride != 0 {
+                            continue;
+                        }
+                        let ox = (u - kx) / stride;
+                        if ox >= wo {
+                            continue;
+                        }
+                        let grow = &g[((bi * ho + oy) * wo + ox) * c..][..c];
+                        let wrow = &wt[(ky * k + kx) * c..(ky * k + kx + 1) * c];
+                        for ((d, &gv), &wv) in drow.iter_mut().zip(grow).zip(wrow) {
+                            *d += gv * wv;
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Depthwise conv (compat wrapper over [`dwconv_fwd_into`]).
+pub fn dwconv_fwd(
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+    wt: &[f32],
+) -> Vec<f32> {
     with_exec(|ex| {
-        let m = n * h * w;
-        let k9 = 9 * cin;
-        let mut cols = ex.arena.take(m * k9);
-        gemm::im2col3x3_qdq(&ex.pool, x, n, h, w, cin, FP32, &mut cols);
-        let mut dw = vec![0f32; 9 * cin * cout];
-        gemm::gemm_at_b(&ex.pool, &mut ex.arena, &cols, g, &mut dw, m, k9, cout);
-        ex.arena.put(cols);
-        let mut dcols = ex.arena.take(m * k9);
-        gemm::gemm_a_bt(&ex.pool, &mut ex.arena, g, wt, &mut dcols, m, cout, k9, false);
+        let (ho, wo) = (gemm::conv_out_dim(h, stride), gemm::conv_out_dim(w, stride));
+        let mut out = vec![0f32; n * ho * wo * c];
+        dwconv_fwd_into(&ex.pool, x, n, h, w, c, k, stride, wt, &mut out);
+        out
+    })
+}
+
+/// Backward of [`dwconv_fwd`] (compat wrapper): returns `(dx, dw)`.
+pub fn dwconv_bwd(
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+    wt: &[f32],
+    g: &[f32],
+) -> (Vec<f32>, Vec<f32>) {
+    with_exec(|ex| {
+        let mut dw = vec![0f32; k * k * c];
+        dwconv_dw_into(x, g, n, h, w, c, k, stride, &mut dw);
         let mut dx = vec![0f32; x.len()];
-        gemm::col2im3x3(&ex.pool, &dcols, n, h, w, cin, &mut dx);
-        ex.arena.put(dcols);
+        dwconv_dx_into(&ex.pool, g, wt, n, h, w, c, k, stride, &mut dx);
         (dx, dw)
     })
 }
@@ -607,6 +839,90 @@ mod tests {
         gradcheck("conv/dw", &mut wt, &dw, |ws| {
             wsum(&conv3x3_fwd(&x2, n, h, w, cin, ws, cout)).0
         });
+    }
+
+    #[test]
+    fn strided_conv_gradcheck() {
+        let (n, h, w, cin, cout, k, s) = (2, 6, 6, 3, 4, 3, 2);
+        let mut rng = Rng::new(21);
+        let mut x = randv(&mut rng, n * h * w * cin);
+        let mut wt = randv(&mut rng, k * k * cin * cout);
+        let out = conv_fwd(&x, n, h, w, cin, &wt, cout, k, s);
+        assert_eq!(out.len(), n * 3 * 3 * cout, "ceil(6/2) = 3 output side");
+        let (_, g) = wsum(&out);
+        let (dx, dw) = conv_bwd(&x, n, h, w, cin, &wt, cout, k, s, &g);
+        let wt2 = wt.clone();
+        gradcheck("sconv/dx", &mut x, &dx, |xs| {
+            wsum(&conv_fwd(xs, n, h, w, cin, &wt2, cout, k, s)).0
+        });
+        let x2 = x.clone();
+        gradcheck("sconv/dw", &mut wt, &dw, |ws| {
+            wsum(&conv_fwd(&x2, n, h, w, cin, ws, cout, k, s)).0
+        });
+    }
+
+    #[test]
+    fn conv1x1_gradcheck_and_strided_identity() {
+        let (n, h, w, cin, cout) = (2, 4, 4, 3, 5);
+        let mut rng = Rng::new(22);
+        let mut x = randv(&mut rng, n * h * w * cin);
+        let mut wt = randv(&mut rng, cin * cout);
+        let out = conv_fwd(&x, n, h, w, cin, &wt, cout, 1, 1);
+        let (_, g) = wsum(&out);
+        let (dx, dw) = conv_bwd(&x, n, h, w, cin, &wt, cout, 1, 1, &g);
+        let wt2 = wt.clone();
+        gradcheck("pw/dx", &mut x, &dx, |xs| {
+            wsum(&conv_fwd(xs, n, h, w, cin, &wt2, cout, 1, 1)).0
+        });
+        let x2 = x.clone();
+        gradcheck("pw/dw", &mut wt, &dw, |ws| {
+            wsum(&conv_fwd(&x2, n, h, w, cin, ws, cout, 1, 1)).0
+        });
+        // Stride-2 1×1 with an identity-ish kernel subsamples the grid.
+        let mut eye = vec![0f32; cin * cin];
+        for i in 0..cin {
+            eye[i * cin + i] = 1.0;
+        }
+        let sub = conv_fwd(&x, n, h, w, cin, &eye, cin, 1, 2);
+        assert_eq!(&sub[0..cin], &x[0..cin], "out (0,0) is x[0,0]");
+        assert_eq!(&sub[cin..2 * cin], &x[2 * cin..3 * cin], "out (0,1) is x[0,2]");
+    }
+
+    #[test]
+    fn dwconv_gradcheck_both_strides() {
+        for s in [1usize, 2] {
+            let (n, h, w, c, k) = (2, 4, 4, 3, 3);
+            let mut rng = Rng::new(23 + s as u64);
+            let mut x = randv(&mut rng, n * h * w * c);
+            let mut wt = randv(&mut rng, k * k * c);
+            let out = dwconv_fwd(&x, n, h, w, c, k, s, &wt);
+            let (_, g) = wsum(&out);
+            let (dx, dw) = dwconv_bwd(&x, n, h, w, c, k, s, &wt, &g);
+            let wt2 = wt.clone();
+            gradcheck("dw/dx", &mut x, &dx, |xs| {
+                wsum(&dwconv_fwd(xs, n, h, w, c, k, s, &wt2)).0
+            });
+            let x2 = x.clone();
+            gradcheck("dw/dw", &mut wt, &dw, |ws| {
+                wsum(&dwconv_fwd(&x2, n, h, w, c, k, s, ws)).0
+            });
+        }
+    }
+
+    #[test]
+    fn dwconv_does_not_mix_channels() {
+        // A filter that is zero on channel 1 must zero channel 1's
+        // output while leaving channel 0 a pure channel-0 function.
+        let (n, h, w, c, k) = (1, 3, 3, 2, 3);
+        let mut rng = Rng::new(25);
+        let x = randv(&mut rng, n * h * w * c);
+        let mut wt = vec![0f32; k * k * c];
+        wt[4 * c] = 2.0; // center tap, channel 0 only
+        let out = dwconv_fwd(&x, n, h, w, c, k, 1, &wt);
+        for p in 0..h * w {
+            assert_eq!(out[p * c], 2.0 * x[p * c], "channel 0 is scaled");
+            assert_eq!(out[p * c + 1], 0.0, "channel 1 untouched");
+        }
     }
 
     #[test]

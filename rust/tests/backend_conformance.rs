@@ -4,7 +4,9 @@
 //!
 //! Covers: determinism across same-seed runs, train/eval/curv IO
 //! arities matching the manifest contract, overflow-flag behaviour
-//! under an absurd loss scale, and probe persistence semantics.
+//! under an absurd loss scale, and probe persistence semantics — run
+//! over the whole graph-executor model grid (tiny_cnn, resnet_mini,
+//! effnet_lite), not just the CI-speed model.
 
 use tri_accel::manifest::{FP16, FP32};
 use tri_accel::runtime::backend::Backend;
@@ -13,6 +15,8 @@ use tri_accel::runtime::{Batch, Engine, Session, StepCtrl};
 use tri_accel::util::rng::Rng;
 
 const MODEL: &str = "tiny_cnn_c10";
+/// The full native model grid the conformance contract covers.
+const GRID: [&str; 3] = ["tiny_cnn_c10", "resnet_mini_c10", "effnet_lite_c10"];
 
 fn engine() -> Engine {
     Engine::native()
@@ -28,158 +32,173 @@ fn rand_batch(n: usize, seed: u64) -> Batch {
 #[test]
 fn init_matches_manifest_shapes() {
     let m = builtin_manifest();
-    let entry = m.model(MODEL).unwrap();
     let b = NativeBackend::new();
-    let st = b.init(entry, 0).unwrap();
-    assert_eq!(st.params.len(), entry.params.len());
-    assert_eq!(st.mom.len(), entry.params.len());
-    assert_eq!(st.state.len(), entry.state_shapes.len());
-    for (p, spec) in st.params.iter().zip(&entry.params) {
-        assert_eq!(p.len(), spec.elems, "{}", spec.name);
+    for model in GRID {
+        let entry = m.model(model).unwrap();
+        let st = b.init(entry, 0).unwrap();
+        assert_eq!(st.params.len(), entry.params.len(), "{model}");
+        assert_eq!(st.mom.len(), entry.params.len(), "{model}");
+        assert_eq!(st.state.len(), entry.state_shapes.len(), "{model}");
+        for (p, spec) in st.params.iter().zip(&entry.params) {
+            assert_eq!(p.len(), spec.elems, "{model}: {}", spec.name);
+        }
+        for (m_, spec) in st.mom.iter().zip(&entry.params) {
+            assert_eq!(m_.len(), spec.elems, "{model}");
+            assert!(m_.iter().all(|&v| v == 0.0), "{model}: momentum starts at zero");
+        }
+        for (s, shape) in st.state.iter().zip(&entry.state_shapes) {
+            assert_eq!(s.len(), shape.iter().product::<usize>(), "{model}");
+        }
+        let total: usize = st.params.iter().map(|p| p.len()).sum();
+        assert_eq!(total, entry.param_count, "{model}: param_count contract");
     }
-    for (m_, spec) in st.mom.iter().zip(&entry.params) {
-        assert_eq!(m_.len(), spec.elems);
-        assert!(m_.iter().all(|&v| v == 0.0), "momentum starts at zero");
-    }
-    for (s, shape) in st.state.iter().zip(&entry.state_shapes) {
-        assert_eq!(s.len(), shape.iter().product::<usize>());
-    }
-    let total: usize = st.params.iter().map(|p| p.len()).sum();
-    assert_eq!(total, entry.param_count, "param_count contract");
 }
 
 #[test]
 fn same_seed_runs_are_bit_identical_end_to_end() {
     let e = engine();
-    let run = || {
-        let mut s = Session::init(&e, MODEL, 42).unwrap();
-        let n = s.num_layers();
-        let ctrl = StepCtrl::uniform(n, FP32, 0.05, 5e-4);
-        let mut trace = Vec::new();
-        for i in 0..4 {
-            let b = rand_batch(16, 10 + i);
-            let out = s.train_step(&b, &ctrl).unwrap();
-            trace.push((out.loss, out.correct, out.grad_var, out.grad_norm));
-        }
-        let eval = s
-            .eval_batch(&rand_batch(16, 99), &vec![FP32; s.num_layers()])
-            .unwrap();
-        let lam = s
-            .curv_step(&rand_batch(s.entry.curv_batch, 7), &vec![FP32; s.num_layers()], 13)
-            .unwrap();
-        (trace, eval.loss, eval.correct, lam, s.params_host().unwrap())
-    };
-    let a = run();
-    let b = run();
-    assert_eq!(a.0, b.0, "train trace");
-    assert_eq!(a.1, b.1, "eval loss");
-    assert_eq!(a.2, b.2, "eval correct");
-    assert_eq!(a.3, b.3, "lambdas");
-    assert_eq!(a.4, b.4, "final params");
+    for model in GRID {
+        let run = || {
+            let mut s = Session::init(&e, model, 42).unwrap();
+            let n = s.num_layers();
+            let ctrl = StepCtrl::uniform(n, FP32, 0.05, 5e-4);
+            let mut trace = Vec::new();
+            for i in 0..4 {
+                let b = rand_batch(16, 10 + i);
+                let out = s.train_step(&b, &ctrl).unwrap();
+                trace.push((out.loss, out.correct, out.grad_var, out.grad_norm));
+            }
+            let eval = s
+                .eval_batch(&rand_batch(16, 99), &vec![FP32; s.num_layers()])
+                .unwrap();
+            let lam = s
+                .curv_step(&rand_batch(s.entry.curv_batch, 7), &vec![FP32; s.num_layers()], 13)
+                .unwrap();
+            (trace, eval.loss, eval.correct, lam, s.params_host().unwrap())
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.0, b.0, "{model}: train trace");
+        assert_eq!(a.1, b.1, "{model}: eval loss");
+        assert_eq!(a.2, b.2, "{model}: eval correct");
+        assert_eq!(a.3, b.3, "{model}: lambdas");
+        assert_eq!(a.4, b.4, "{model}: final params");
+    }
 }
 
 #[test]
 fn io_arities_match_manifest_contract() {
     let e = engine();
-    let entry = e.manifest.model(MODEL).unwrap().clone();
-    let mut s = Session::init(&e, MODEL, 0).unwrap();
-    let l = entry.num_layers;
+    for model in GRID {
+        let entry = e.manifest.model(model).unwrap().clone();
+        let mut s = Session::init(&e, model, 0).unwrap();
+        let l = entry.num_layers;
 
-    // train: grad_var/grad_norm are per precision layer.
-    let out = s
-        .train_step(&rand_batch(16, 1), &StepCtrl::uniform(l, FP32, 0.05, 0.0))
-        .unwrap();
-    assert_eq!(out.grad_var.len(), l);
-    assert_eq!(out.grad_norm.len(), l);
-
-    // eval: total mirrors the batch; works for every advertised bucket.
-    for &bucket in &entry.eval_buckets {
-        let r = s
-            .eval_batch(&rand_batch(bucket, 2), &vec![FP32; l])
+        // train: grad_var/grad_norm are per precision layer.
+        let out = s
+            .train_step(&rand_batch(16, 1), &StepCtrl::uniform(l, FP32, 0.05, 0.0))
             .unwrap();
-        assert_eq!(r.total, bucket);
+        assert_eq!(out.grad_var.len(), l, "{model}");
+        assert_eq!(out.grad_norm.len(), l, "{model}");
+
+        // eval: total mirrors the batch; works for every advertised bucket.
+        for &bucket in &entry.eval_buckets {
+            let r = s.eval_batch(&rand_batch(bucket, 2), &vec![FP32; l]).unwrap();
+            assert_eq!(r.total, bucket, "{model}");
+        }
+
+        // curv: lambdas are per precision layer, only at curv_batch.
+        let lam = s
+            .curv_step(&rand_batch(entry.curv_batch, 3), &vec![FP32; l], 5)
+            .unwrap();
+        assert_eq!(lam.len(), l, "{model}");
+        assert!(
+            s.curv_step(&rand_batch(16, 3), &vec![FP32; l], 5).is_err(),
+            "{model}: wrong curvature batch size must be rejected"
+        );
+
+        // arity violations are loud.
+        assert!(s
+            .train_step(&rand_batch(16, 1), &StepCtrl::uniform(l + 1, FP32, 0.05, 0.0))
+            .is_err());
+        assert!(s.eval_batch(&rand_batch(16, 1), &vec![FP32; l + 1]).is_err());
     }
-
-    // curv: lambdas are per precision layer, only at curv_batch.
-    let lam = s
-        .curv_step(&rand_batch(entry.curv_batch, 3), &vec![FP32; l], 5)
-        .unwrap();
-    assert_eq!(lam.len(), l);
-    assert!(s
-        .curv_step(&rand_batch(16, 3), &vec![FP32; l], 5)
-        .is_err(), "wrong curvature batch size must be rejected");
-
-    // arity violations are loud.
-    assert!(s
-        .train_step(&rand_batch(16, 1), &StepCtrl::uniform(l + 1, FP32, 0.05, 0.0))
-        .is_err());
-    assert!(s.eval_batch(&rand_batch(16, 1), &vec![FP32; l + 1]).is_err());
 }
 
 #[test]
 fn every_train_bucket_executes() {
     let e = engine();
-    let entry = e.manifest.model(MODEL).unwrap().clone();
-    let mut s = Session::init(&e, MODEL, 0).unwrap();
-    let ctrl = StepCtrl::uniform(entry.num_layers, FP32, 0.01, 0.0);
-    for &bucket in &entry.train_buckets {
-        let out = s.train_step(&rand_batch(bucket, bucket as u64), &ctrl).unwrap();
-        assert!(out.loss.is_finite(), "bucket {bucket}");
+    for model in GRID {
+        let entry = e.manifest.model(model).unwrap().clone();
+        let mut s = Session::init(&e, model, 0).unwrap();
+        let ctrl = StepCtrl::uniform(entry.num_layers, FP32, 0.01, 0.0);
+        for &bucket in &entry.train_buckets {
+            let out = s.train_step(&rand_batch(bucket, bucket as u64), &ctrl).unwrap();
+            assert!(out.loss.is_finite(), "{model}: bucket {bucket}");
+        }
     }
 }
 
 #[test]
 fn overflow_fires_and_masks_under_absurd_loss_scale() {
     let e = engine();
-    let mut s = Session::init(&e, MODEL, 6).unwrap();
-    let n = s.num_layers();
-    let before = s.params_host().unwrap();
-    let b = rand_batch(16, 4);
-    // FP16 layers + a loss scale far beyond binary16 range: the scaled
-    // cotangents quantize to ±inf, the unscaled grads are non-finite,
-    // and the whole update must be skipped.
-    let mut ctrl = StepCtrl::uniform(n, FP16, 0.05, 0.0);
-    ctrl.loss_scale = 1e30;
-    let out = s.train_step(&b, &ctrl).unwrap();
-    assert!(out.overflow, "overflow flag must fire");
-    assert_eq!(s.params_host().unwrap(), before, "update must be masked");
-    // grad stats of a poisoned step are non-finite, never fake zeros.
-    assert!(out.grad_var.iter().any(|v| !v.is_finite()));
+    for model in GRID {
+        let mut s = Session::init(&e, model, 6).unwrap();
+        let n = s.num_layers();
+        let before = s.params_host().unwrap();
+        let b = rand_batch(16, 4);
+        // FP16 layers + a loss scale far beyond binary16 range: the
+        // scaled cotangents quantize to ±inf, the unscaled grads are
+        // non-finite, and the whole update must be skipped.
+        let mut ctrl = StepCtrl::uniform(n, FP16, 0.05, 0.0);
+        ctrl.loss_scale = 1e30;
+        let out = s.train_step(&b, &ctrl).unwrap();
+        assert!(out.overflow, "{model}: overflow flag must fire");
+        assert_eq!(s.params_host().unwrap(), before, "{model}: update must be masked");
+        // grad stats of a poisoned step are non-finite, never fake zeros.
+        assert!(out.grad_var.iter().any(|v| !v.is_finite()), "{model}");
 
-    // The same batch at a sane scale trains normally.
-    ctrl.loss_scale = 1024.0;
-    let ok = s.train_step(&b, &ctrl).unwrap();
-    assert!(!ok.overflow);
-    assert_ne!(s.params_host().unwrap(), before);
+        // The same batch at a sane scale trains normally.
+        ctrl.loss_scale = 1024.0;
+        let ok = s.train_step(&b, &ctrl).unwrap();
+        assert!(!ok.overflow, "{model}");
+        assert_ne!(s.params_host().unwrap(), before, "{model}");
+    }
 }
 
 #[test]
 fn probes_persist_and_reset_deterministically() {
     let e = engine();
-    let mut s = Session::init(&e, MODEL, 0).unwrap();
-    let codes = vec![FP32; s.num_layers()];
-    let b = rand_batch(s.entry.curv_batch, 8);
-    let l0 = s.curv_step(&b, &codes, 21).unwrap();
-    let l1 = s.curv_step(&b, &codes, 21).unwrap();
-    // The probe moved toward the dominant eigenvector, so successive
-    // Rayleigh quotients differ (power iteration is progressing).
-    assert_ne!(l0, l1, "probes must persist across firings");
-    s.reset_probes();
-    let l0_again = s.curv_step(&b, &codes, 21).unwrap();
-    assert_eq!(l0, l0_again, "reset restarts the same seeded iteration");
+    // tiny_cnn plus the depthwise architecture (the curvature path's
+    // most distinct backward); resnet is covered by the arity test.
+    for model in [MODEL, "effnet_lite_c10"] {
+        let mut s = Session::init(&e, model, 0).unwrap();
+        let codes = vec![FP32; s.num_layers()];
+        let b = rand_batch(s.entry.curv_batch, 8);
+        let l0 = s.curv_step(&b, &codes, 21).unwrap();
+        let l1 = s.curv_step(&b, &codes, 21).unwrap();
+        // The probe moved toward the dominant eigenvector, so successive
+        // Rayleigh quotients differ (power iteration is progressing).
+        assert_ne!(l0, l1, "{model}: probes must persist across firings");
+        s.reset_probes();
+        let l0_again = s.curv_step(&b, &codes, 21).unwrap();
+        assert_eq!(l0, l0_again, "{model}: reset restarts the same seeded iteration");
+    }
 }
 
 #[test]
 fn eval_does_not_mutate_state() {
     let e = engine();
-    let mut s = Session::init(&e, MODEL, 9).unwrap();
-    let n = s.num_layers();
-    // Train once so BN running stats are non-trivial.
-    s.train_step(&rand_batch(16, 1), &StepCtrl::uniform(n, FP32, 0.05, 0.0))
-        .unwrap();
-    let params = s.params_host().unwrap();
-    let r1 = s.eval_batch(&rand_batch(16, 2), &vec![FP32; n]).unwrap();
-    let r2 = s.eval_batch(&rand_batch(16, 2), &vec![FP32; n]).unwrap();
-    assert_eq!(r1.loss, r2.loss, "eval must be a pure function");
-    assert_eq!(s.params_host().unwrap(), params);
+    for model in GRID {
+        let mut s = Session::init(&e, model, 9).unwrap();
+        let n = s.num_layers();
+        // Train once so BN running stats are non-trivial.
+        s.train_step(&rand_batch(16, 1), &StepCtrl::uniform(n, FP32, 0.05, 0.0))
+            .unwrap();
+        let params = s.params_host().unwrap();
+        let r1 = s.eval_batch(&rand_batch(16, 2), &vec![FP32; n]).unwrap();
+        let r2 = s.eval_batch(&rand_batch(16, 2), &vec![FP32; n]).unwrap();
+        assert_eq!(r1.loss, r2.loss, "{model}: eval must be a pure function");
+        assert_eq!(s.params_host().unwrap(), params, "{model}");
+    }
 }

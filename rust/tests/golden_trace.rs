@@ -1,0 +1,420 @@
+//! Golden-trace regression: the manifest-driven graph executor must be
+//! **bit-identical** to the pre-refactor hand-written `tiny_cnn`
+//! executor it replaced.
+//!
+//! The reference below is the PR-2 `runtime/native/tiny_cnn.rs`
+//! forward/backward/train-step reproduced verbatim against the public
+//! kernel APIs (`gemm`, `ops`, `qdq` — the exact kernels both
+//! executors share). A 20-step mixed-precision training run is
+//! compared step by step: loss, overflow flag, per-layer grad
+//! variance/norms, parameters, momentum, and BN state must match to
+//! the bit, and the FNV-1a digests of the two full traces must agree.
+//! Any reordering of a reduction, a changed quantization point, or a
+//! dropped cache in the graph path fails loudly here.
+
+use tri_accel::manifest::{ModelEntry, BF16, FP16, FP32};
+use tri_accel::runtime::backend::{Backend, ModelState};
+use tri_accel::runtime::native::{builtin_manifest, gemm, ops, qdq, Exec, NativeBackend};
+use tri_accel::runtime::{Batch, StepCtrl};
+use tri_accel::util::rng::Rng;
+
+// ------------------------------------------------------------------
+// The pre-refactor executor, verbatim (hardcoded tiny_cnn geometry).
+// ------------------------------------------------------------------
+
+const CHANNELS: [usize; 3] = [16, 32, 64];
+const DIMS: [usize; 3] = [32, 16, 8];
+const FEATURES: usize = 64;
+const MOMENTUM: f32 = 0.9;
+const N_PARAMS: usize = 11;
+
+struct RefFwd {
+    cols: [Vec<f32>; 3],
+    wq: [Vec<f32>; 3],
+    conv_out: [Vec<f32>; 3],
+    bn_cache: Vec<ops::BnCache>,
+    bn_out: [Vec<f32>; 3],
+    arg: [Vec<u8>; 2],
+    head_xq: Vec<f32>,
+    head_wq: Vec<f32>,
+    dlogits: Vec<f32>,
+    new_state: [Vec<f32>; 6],
+    loss: f32,
+    correct: i64,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn ref_forward(
+    ex: &mut Exec,
+    entry: &ModelEntry,
+    params: &[Vec<f32>],
+    state: &[Vec<f32>],
+    x: &[f32],
+    y: &[i32],
+    n: usize,
+    codes: &[i32],
+    train: bool,
+) -> RefFwd {
+    let classes = entry.num_classes;
+    let mut cols: [Vec<f32>; 3] = Default::default();
+    let mut wq: [Vec<f32>; 3] = Default::default();
+    let mut conv_out: [Vec<f32>; 3] = Default::default();
+    let mut bn_cache: Vec<ops::BnCache> = Vec::new();
+    let mut bn_out: [Vec<f32>; 3] = Default::default();
+    let mut arg: [Vec<u8>; 2] = Default::default();
+    let mut new_state: [Vec<f32>; 6] = Default::default();
+
+    let mut cur: Option<Vec<f32>> = None;
+    let mut cin = 3usize;
+    for li in 0..3 {
+        let dim = DIMS[li];
+        let cout = CHANNELS[li];
+        let code = codes[li];
+        let rows = n * dim * dim;
+        let k9 = 9 * cin;
+
+        let mut c_buf = vec![0f32; rows * k9];
+        {
+            let src: &[f32] = cur.as_deref().unwrap_or(x);
+            gemm::im2col3x3_qdq(&ex.pool, src, n, dim, dim, cin, code, &mut c_buf);
+        }
+        let w_buf = qdq::qdq(&params[li * 3], code);
+        let mut conv = vec![0f32; rows * cout];
+        gemm::gemm(&ex.pool, &mut ex.arena, &c_buf, &w_buf, &mut conv, rows, k9, cout, false);
+
+        let (bnout, nrm, nrv, cache) = ops::bn_fwd(
+            &conv,
+            rows,
+            cout,
+            &params[li * 3 + 1],
+            &params[li * 3 + 2],
+            &state[li * 2],
+            &state[li * 2 + 1],
+            train,
+        );
+        new_state[li * 2] = nrm;
+        new_state[li * 2 + 1] = nrv;
+
+        let mut r = bnout.clone();
+        ops::relu_inplace(&mut r);
+        let next = if li < 2 {
+            let (p_out, a_buf) = ops::maxpool2_fwd(&r, n, dim, dim, cout);
+            arg[li] = a_buf;
+            p_out
+        } else {
+            ops::gap_fwd(&r, n, dim, dim, cout)
+        };
+        cur = Some(next);
+
+        cols[li] = c_buf;
+        wq[li] = w_buf;
+        conv_out[li] = conv;
+        bn_cache.push(cache);
+        bn_out[li] = bnout;
+        cin = cout;
+    }
+
+    let code = codes[3];
+    let h_act = cur.take().expect("three conv blocks ran");
+    let head_xq = qdq::qdq(&h_act, code);
+    let head_wq = qdq::qdq(&params[9], code);
+    let mut logits = vec![0f32; n * classes];
+    for r in 0..n {
+        logits[r * classes..(r + 1) * classes].copy_from_slice(&params[10]);
+    }
+    gemm::gemm(&ex.pool, &mut ex.arena, &head_xq, &head_wq, &mut logits, n, FEATURES, classes, true);
+    let (loss, correct, dlogits) = ops::softmax_ce(&logits, y, n, classes);
+
+    RefFwd {
+        cols,
+        wq,
+        conv_out,
+        bn_cache,
+        bn_out,
+        arg,
+        head_xq,
+        head_wq,
+        dlogits,
+        new_state,
+        loss,
+        correct,
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn ref_backward(
+    ex: &mut Exec,
+    entry: &ModelEntry,
+    fwd: &RefFwd,
+    params: &[Vec<f32>],
+    codes: &[i32],
+    loss_scale: f32,
+    n: usize,
+) -> Vec<Vec<f32>> {
+    let classes = entry.num_classes;
+    let mut grads: Vec<Vec<f32>> = (0..N_PARAMS).map(|_| Vec::new()).collect();
+
+    let mut g_logits = vec![0f32; n * classes];
+    for (d, &v) in g_logits.iter_mut().zip(fwd.dlogits.iter()) {
+        *d = v * loss_scale;
+    }
+
+    let gq = qdq::qdq(&g_logits, codes[3]);
+    let mut dx_head = vec![0f32; n * FEATURES];
+    gemm::gemm_a_bt(&ex.pool, &mut ex.arena, &gq, &fwd.head_wq, &mut dx_head, n, classes, FEATURES, false);
+    let mut dw_head = vec![0f32; FEATURES * classes];
+    gemm::gemm_at_b(&ex.pool, &mut ex.arena, &fwd.head_xq, &gq, &mut dw_head, n, FEATURES, classes);
+    let mut db = vec![0f32; classes];
+    for bi in 0..n {
+        for (d, &v) in db.iter_mut().zip(g_logits[bi * classes..(bi + 1) * classes].iter()) {
+            *d += v;
+        }
+    }
+    grads[9] = dw_head;
+    grads[10] = db;
+
+    let mut g = dx_head;
+    for li in (0..3).rev() {
+        let dim = DIMS[li];
+        let cout = CHANNELS[li];
+        let cin = if li == 0 { 3 } else { CHANNELS[li - 1] };
+        let rows = n * dim * dim;
+        let k9 = 9 * cin;
+
+        let mut gs = if li == 2 {
+            ops::gap_bwd(&g, n, dim, dim, cout)
+        } else {
+            ops::maxpool2_bwd(&g, &fwd.arg[li], n, dim, dim, cout)
+        };
+        ops::relu_bwd_inplace(&mut gs, &fwd.bn_out[li]);
+
+        let (dxbn, dgamma, dbeta) =
+            ops::bn_bwd(&fwd.conv_out[li], &gs, rows, cout, &params[li * 3 + 1], &fwd.bn_cache[li]);
+
+        let mut dw = vec![0f32; k9 * cout];
+        gemm::gemm_at_b(&ex.pool, &mut ex.arena, &fwd.cols[li], &dxbn, &mut dw, rows, k9, cout);
+        qdq::qdq_inplace(&mut dw, codes[li]);
+        g = if li == 0 {
+            Vec::new()
+        } else {
+            let mut dcols = vec![0f32; rows * k9];
+            gemm::gemm_a_bt(&ex.pool, &mut ex.arena, &dxbn, &fwd.wq[li], &mut dcols, rows, cout, k9, false);
+            let mut dx = vec![0f32; rows * cin];
+            gemm::col2im3x3(&ex.pool, &dcols, n, dim, dim, cin, &mut dx);
+            qdq::qdq_inplace(&mut dx, codes[li]);
+            dx
+        };
+
+        grads[li * 3] = dw;
+        grads[li * 3 + 1] = dgamma;
+        grads[li * 3 + 2] = dbeta;
+    }
+
+    let inv = 1.0 / loss_scale;
+    for gvec in grads.iter_mut() {
+        for v in gvec.iter_mut() {
+            *v *= inv;
+        }
+    }
+    grads
+}
+
+fn ref_layer_stats(entry: &ModelEntry, grads: &[Vec<f32>]) -> (Vec<f32>, Vec<f32>) {
+    let l_count = entry.num_layers;
+    let mut sum = vec![0f64; l_count];
+    let mut sq = vec![0f64; l_count];
+    let mut count = vec![0usize; l_count];
+    for (spec, g) in entry.params.iter().zip(grads) {
+        if spec.layer_idx < 0 {
+            continue;
+        }
+        let li = spec.layer_idx as usize;
+        for &v in g {
+            sum[li] += v as f64;
+            sq[li] += (v as f64) * (v as f64);
+        }
+        count[li] += g.len();
+    }
+    let mut var = Vec::with_capacity(l_count);
+    let mut norm = Vec::with_capacity(l_count);
+    for li in 0..l_count {
+        let cnt = count[li].max(1) as f64;
+        let mean = sum[li] / cnt;
+        let raw = sq[li] / cnt - mean * mean;
+        let v = if raw.is_nan() { f64::NAN } else { raw.max(0.0) };
+        var.push(v as f32);
+        norm.push(sq[li] as f32);
+    }
+    (var, norm)
+}
+
+struct RefOut {
+    loss: f32,
+    correct: i64,
+    grad_var: Vec<f32>,
+    grad_norm: Vec<f32>,
+    overflow: bool,
+}
+
+fn ref_train_step(
+    ex: &mut Exec,
+    entry: &ModelEntry,
+    st: &mut ModelState,
+    batch: &Batch,
+    ctrl: &StepCtrl,
+) -> RefOut {
+    let n = batch.n;
+    let mut fwd = ref_forward(
+        ex,
+        entry,
+        &st.params,
+        &st.state,
+        &batch.x,
+        &batch.y,
+        n,
+        &ctrl.codes,
+        true,
+    );
+    let grads = ref_backward(ex, entry, &fwd, &st.params, &ctrl.codes, ctrl.loss_scale, n);
+    let overflow = grads.iter().any(|g| g.iter().any(|v| !v.is_finite()));
+    let (grad_var, grad_norm) = ref_layer_stats(entry, &grads);
+
+    let mask = if overflow { 0f32 } else { 1f32 };
+    for (i, spec) in entry.params.iter().enumerate() {
+        let scale = if spec.layer_idx >= 0 {
+            ctrl.lr_scales[spec.layer_idx as usize]
+        } else {
+            1.0
+        };
+        let lr_eff = ctrl.lr * scale;
+        let p = &mut st.params[i];
+        let m = &mut st.mom[i];
+        let g = &grads[i];
+        for k in 0..p.len() {
+            let g_eff = (g[k] + ctrl.weight_decay * p[k]) * mask;
+            let m_new = MOMENTUM * m[k] + g_eff;
+            let m_out = if mask > 0.5 { m_new } else { m[k] };
+            p[k] -= lr_eff * mask * m_out;
+            m[k] = m_out;
+        }
+    }
+    if !overflow {
+        for (dst, src) in st.state.iter_mut().zip(fwd.new_state.iter_mut()) {
+            std::mem::swap(dst, src);
+        }
+    }
+    RefOut { loss: fwd.loss, correct: fwd.correct, grad_var, grad_norm, overflow }
+}
+
+// ------------------------------------------------------------------
+// The golden-trace comparison.
+// ------------------------------------------------------------------
+
+fn rand_batch(n: usize, seed: u64) -> Batch {
+    let mut rng = Rng::new(seed);
+    let x: Vec<f32> = (0..n * 32 * 32 * 3).map(|_| rng.next_normal()).collect();
+    let y: Vec<i32> = (0..n).map(|_| rng.below(10) as i32).collect();
+    Batch::new(x, y)
+}
+
+fn fnv1a(trace: &[u64]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &v in trace {
+        for byte in v.to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    h
+}
+
+fn push_state(trace: &mut Vec<u64>, st: &ModelState) {
+    for group in [&st.params, &st.mom, &st.state] {
+        for t in group {
+            trace.extend(t.iter().map(|v| v.to_bits() as u64));
+        }
+    }
+}
+
+#[test]
+fn graph_executor_is_bit_identical_to_pre_refactor_tiny_cnn() {
+    let manifest = builtin_manifest();
+    let entry = manifest.model("tiny_cnn_c10").unwrap().clone();
+    let backend = NativeBackend::with_threads(2);
+    let mut st_graph = backend.init(&entry, 11).unwrap();
+    let mut st_ref = st_graph.clone();
+    let mut ex = Exec::new(2);
+
+    // Mixed precision schedule cycling every paper-relevant regime,
+    // with non-trivial lr scales, weight decay, and a loss scale.
+    let schedules: [[i32; 4]; 4] = [
+        [FP16, BF16, FP32, BF16],
+        [BF16, BF16, BF16, FP32],
+        [FP32, FP32, FP32, FP32],
+        [FP16, FP16, BF16, FP16],
+    ];
+    let mut trace_graph: Vec<u64> = Vec::new();
+    let mut trace_ref: Vec<u64> = Vec::new();
+
+    for step in 0..20u64 {
+        let batch = rand_batch(16, 100 + step);
+        let mut ctrl = StepCtrl::uniform(4, FP32, 0.05, 5e-4);
+        ctrl.codes = schedules[(step % 4) as usize].to_vec();
+        ctrl.loss_scale = 256.0;
+        ctrl.lr_scales = vec![1.0, 0.5, 1.5, 1.0];
+
+        let og = backend.train_step(&entry, &mut st_graph, &batch, &ctrl).unwrap();
+        let or = ref_train_step(&mut ex, &entry, &mut st_ref, &batch, &ctrl);
+
+        assert_eq!(og.loss.to_bits(), or.loss.to_bits(), "step {step}: loss");
+        assert_eq!(og.correct, or.correct, "step {step}: correct");
+        assert_eq!(og.overflow, or.overflow, "step {step}: overflow");
+        for li in 0..4 {
+            assert_eq!(
+                og.grad_var[li].to_bits(),
+                or.grad_var[li].to_bits(),
+                "step {step}: grad_var[{li}]"
+            );
+            assert_eq!(
+                og.grad_norm[li].to_bits(),
+                or.grad_norm[li].to_bits(),
+                "step {step}: grad_norm[{li}]"
+            );
+        }
+        assert_eq!(st_graph, st_ref, "step {step}: params/momentum/BN state diverged");
+
+        for (trace, loss, gv, gn) in [
+            (&mut trace_graph, og.loss, &og.grad_var, &og.grad_norm),
+            (&mut trace_ref, or.loss, &or.grad_var, &or.grad_norm),
+        ] {
+            trace.push(loss.to_bits() as u64);
+            trace.extend(gv.iter().map(|v| v.to_bits() as u64));
+            trace.extend(gn.iter().map(|v| v.to_bits() as u64));
+        }
+    }
+    push_state(&mut trace_graph, &st_graph);
+    push_state(&mut trace_ref, &st_ref);
+    assert_eq!(
+        fnv1a(&trace_graph),
+        fnv1a(&trace_ref),
+        "golden-trace digest mismatch after 20 steps"
+    );
+
+    // Eval parity on the trained state (running-stat BN path).
+    let eb = rand_batch(16, 999);
+    let codes = vec![FP32; 4];
+    let ev = backend.eval_batch(&entry, &st_graph, &eb, &codes).unwrap();
+    let rf = ref_forward(
+        &mut ex,
+        &entry,
+        &st_ref.params,
+        &st_ref.state,
+        &eb.x,
+        &eb.y,
+        eb.n,
+        &codes,
+        false,
+    );
+    assert_eq!(ev.loss.to_bits(), rf.loss.to_bits(), "eval loss");
+    assert_eq!(ev.correct, rf.correct, "eval correct");
+}

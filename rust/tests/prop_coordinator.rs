@@ -28,6 +28,7 @@ fn entry(num_layers: usize, buckets: Vec<usize>) -> ModelEntry {
             })
             .collect(),
         params: vec![],
+        nodes: vec![],
         state_shapes: vec![],
         train_buckets: buckets,
         eval_buckets: vec![16],

@@ -30,6 +30,7 @@ fn random_entry(rng: &mut Rng) -> ModelEntry {
             })
             .collect(),
         params: vec![],
+        nodes: vec![],
         state_shapes: vec![],
         train_buckets: vec![16, 32, 64, 96, 128],
         eval_buckets: vec![16],
@@ -269,6 +270,245 @@ fn prop_checkpoint_roundtrip_any_shapes() {
     });
 }
 
+// ------------------------------------------- graph-executor gradients
+
+/// Central-difference check of `analytic` against the scalar map `f`
+/// at randomly probed components (FD noise tolerances tuned for f32
+/// forwards, matching the in-crate op gradchecks).
+fn fd_probe(
+    rng: &mut Rng,
+    inputs: &mut [f32],
+    analytic: &[f32],
+    checks: usize,
+    mut f: impl FnMut(&[f32]) -> f64,
+) -> Result<(), String> {
+    for _ in 0..checks {
+        let i = rng.below(inputs.len() as u64) as usize;
+        let eps = 3e-2f32;
+        let orig = inputs[i];
+        inputs[i] = orig + eps;
+        let lp = f(inputs);
+        inputs[i] = orig - eps;
+        let lm = f(inputs);
+        inputs[i] = orig;
+        let numeric = ((lp - lm) / (2.0 * eps as f64)) as f32;
+        let diff = (numeric - analytic[i]).abs();
+        let scale = numeric.abs().max(analytic[i].abs()).max(3e-2);
+        if diff / scale >= 0.07 {
+            return Err(format!("[{i}]: numeric {numeric} vs analytic {}", analytic[i]));
+        }
+    }
+    Ok(())
+}
+
+/// Fixed-weight scalar loss so cotangents are non-trivial but known.
+fn wsum(v: &[f32]) -> (f64, Vec<f32>) {
+    let mut l = 0f64;
+    let mut g = vec![0f32; v.len()];
+    for (i, &x) in v.iter().enumerate() {
+        let wgt = ((i % 7) as f32 - 3.0) * 0.25;
+        l += (x * wgt) as f64;
+        g[i] = wgt;
+    }
+    (l, g)
+}
+
+fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.next_normal()).collect()
+}
+
+#[test]
+fn prop_fd_strided_conv() {
+    use tri_accel::runtime::native::ops;
+    check("stride-2 conv backward matches finite differences", |rng| {
+        let (n, h, w) = (small_usize(rng, 1, 2), 2 * small_usize(rng, 2, 3), 2 * small_usize(rng, 2, 3));
+        let (cin, cout) = (small_usize(rng, 1, 3), small_usize(rng, 1, 4));
+        let mut x = randv(rng, n * h * w * cin);
+        let mut wt = randv(rng, 9 * cin * cout);
+        let out = ops::conv_fwd(&x, n, h, w, cin, &wt, cout, 3, 2);
+        let (_, g) = wsum(&out);
+        let (dx, dw) = ops::conv_bwd(&x, n, h, w, cin, &wt, cout, 3, 2, &g);
+        let wt2 = wt.clone();
+        fd_probe(rng, &mut x, &dx, 6, |xs| {
+            wsum(&ops::conv_fwd(xs, n, h, w, cin, &wt2, cout, 3, 2)).0
+        })
+        .map_err(|e| format!("dx{e}"))?;
+        let x2 = x.clone();
+        fd_probe(rng, &mut wt, &dw, 6, |ws| {
+            wsum(&ops::conv_fwd(&x2, n, h, w, cin, ws, cout, 3, 2)).0
+        })
+        .map_err(|e| format!("dw{e}"))
+    });
+}
+
+#[test]
+fn prop_fd_conv1x1() {
+    use tri_accel::runtime::native::ops;
+    check("1×1 conv backward matches finite differences", |rng| {
+        let (n, h, w) = (small_usize(rng, 1, 2), small_usize(rng, 3, 5), small_usize(rng, 3, 5));
+        let (cin, cout) = (small_usize(rng, 1, 4), small_usize(rng, 1, 4));
+        let stride = small_usize(rng, 1, 2);
+        let mut x = randv(rng, n * h * w * cin);
+        let mut wt = randv(rng, cin * cout);
+        let out = ops::conv_fwd(&x, n, h, w, cin, &wt, cout, 1, stride);
+        let (_, g) = wsum(&out);
+        let (dx, dw) = ops::conv_bwd(&x, n, h, w, cin, &wt, cout, 1, stride, &g);
+        let wt2 = wt.clone();
+        fd_probe(rng, &mut x, &dx, 6, |xs| {
+            wsum(&ops::conv_fwd(xs, n, h, w, cin, &wt2, cout, 1, stride)).0
+        })
+        .map_err(|e| format!("dx{e}"))?;
+        let x2 = x.clone();
+        fd_probe(rng, &mut wt, &dw, 6, |ws| {
+            wsum(&ops::conv_fwd(&x2, n, h, w, cin, ws, cout, 1, stride)).0
+        })
+        .map_err(|e| format!("dw{e}"))
+    });
+}
+
+#[test]
+fn prop_fd_depthwise_conv() {
+    use tri_accel::runtime::native::ops;
+    check("depthwise conv backward matches finite differences", |rng| {
+        let (n, c) = (small_usize(rng, 1, 2), small_usize(rng, 1, 4));
+        let (h, w) = (2 * small_usize(rng, 2, 3), 2 * small_usize(rng, 2, 3));
+        let stride = small_usize(rng, 1, 2);
+        let mut x = randv(rng, n * h * w * c);
+        let mut wt = randv(rng, 9 * c);
+        let out = ops::dwconv_fwd(&x, n, h, w, c, 3, stride, &wt);
+        let (_, g) = wsum(&out);
+        let (dx, dw) = ops::dwconv_bwd(&x, n, h, w, c, 3, stride, &wt, &g);
+        let wt2 = wt.clone();
+        fd_probe(rng, &mut x, &dx, 6, |xs| {
+            wsum(&ops::dwconv_fwd(xs, n, h, w, c, 3, stride, &wt2)).0
+        })
+        .map_err(|e| format!("dx{e}"))?;
+        let x2 = x.clone();
+        fd_probe(rng, &mut wt, &dw, 6, |ws| {
+            wsum(&ops::dwconv_fwd(&x2, n, h, w, c, 3, stride, ws)).0
+        })
+        .map_err(|e| format!("dw{e}"))
+    });
+}
+
+/// A minimal residual graph (conv → relu → conv → add → gap → dense):
+/// the relu output forks into both the second conv and the residual
+/// add, so this pins the executor's cotangent accumulation at joins.
+const RES_TOY: &str = r#"{
+  "precision_codes": {"fp16":0,"bf16":1,"fp32":2},
+  "models": {
+    "res_toy_c10": {
+      "model":"res_toy","num_classes":10,"num_layers":3,"param_count":734,
+      "layers":[
+        {"name":"stem","kind":"conv","param_elems":108,"act_elems":4096,"flops":110592},
+        {"name":"c2","kind":"conv","param_elems":576,"act_elems":4096,"flops":147456},
+        {"name":"head","kind":"dense","param_elems":40,"act_elems":10,"flops":40}
+      ],
+      "params":[
+        {"name":"stem/w","shape":[3,3,3,4],"layer_idx":0,"elems":108},
+        {"name":"c2/w","shape":[3,3,4,4],"layer_idx":1,"elems":576},
+        {"name":"head/w","shape":[4,10],"layer_idx":2,"elems":40},
+        {"name":"head/b","shape":[10],"layer_idx":-1,"elems":10}
+      ],
+      "graph":[
+        {"op":"conv","k":3,"stride":1,"w":0,"layer":0,"in":-1},
+        {"op":"relu","in":0},
+        {"op":"conv","k":3,"stride":1,"w":1,"layer":1,"in":1},
+        {"op":"add","rhs":1,"in":2},
+        {"op":"gap","in":3},
+        {"op":"dense","w":2,"b":3,"layer":2,"in":4},
+        {"op":"softmax_ce","in":5}
+      ],
+      "state_shapes":[],
+      "train_buckets":[16],"eval_buckets":[16],"curv_batch":16,
+      "artifacts":{}
+    }
+  }
+}"#;
+
+fn cifar_batch(n: usize, classes: u64, seed: u64) -> tri_accel::runtime::Batch {
+    let mut rng = Rng::new(seed);
+    let x: Vec<f32> = (0..n * 32 * 32 * 3).map(|_| rng.next_normal()).collect();
+    let y: Vec<i32> = (0..n).map(|_| rng.below(classes) as i32).collect();
+    tri_accel::runtime::Batch::new(x, y)
+}
+
+#[test]
+fn residual_add_gradients_match_finite_differences() {
+    use tri_accel::manifest::Manifest;
+    use tri_accel::runtime::native::{graph, Exec};
+    let m = Manifest::parse(RES_TOY, std::path::Path::new("/toy")).unwrap();
+    let entry = m.model("res_toy_c10").unwrap().clone();
+    let mut ex = Exec::new(1);
+    let mut st = graph::init(&entry, 5).unwrap();
+    let b = cifar_batch(2, 10, 3);
+    let codes = vec![FP32; entry.num_layers];
+    let (_, grads) = graph::loss_and_grads(&mut ex, &entry, &st, &b, &codes).unwrap();
+    let mut rng = Rng::new(0xADD);
+    // Probe every parameter tensor — the residual fork touches all of
+    // them (stem/w sits upstream of both branches).
+    for pi in 0..st.params.len() {
+        for _ in 0..4 {
+            let k = rng.below(st.params[pi].len() as u64) as usize;
+            let eps = 5e-3f32;
+            let orig = st.params[pi][k];
+            st.params[pi][k] = orig + eps;
+            let lp = graph::loss_at(&mut ex, &entry, &st.params, &st.state, &b, &codes).unwrap()
+                as f64;
+            st.params[pi][k] = orig - eps;
+            let lm = graph::loss_at(&mut ex, &entry, &st.params, &st.state, &b, &codes).unwrap()
+                as f64;
+            st.params[pi][k] = orig;
+            let numeric = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            let analytic = grads[pi][k];
+            let diff = (numeric - analytic).abs();
+            let scale = numeric.abs().max(analytic.abs()).max(3e-2);
+            assert!(
+                diff / scale < 0.15,
+                "param {pi}[{k}]: numeric {numeric} vs analytic {analytic}"
+            );
+        }
+    }
+}
+
+#[test]
+fn resnet_mini_whole_model_gradcheck_fp32() {
+    use tri_accel::runtime::native::{builtin_manifest, graph, Exec};
+    let entry = builtin_manifest().model("resnet_mini_c10").unwrap().clone();
+    let mut ex = Exec::from_env();
+    let mut st = graph::init(&entry, 7).unwrap();
+    let b = cifar_batch(2, 10, 1);
+    let codes = vec![FP32; entry.num_layers];
+    let (_, grads) = graph::loss_and_grads(&mut ex, &entry, &st, &b, &codes).unwrap();
+    let mut rng = Rng::new(0xFD);
+    // Spot-check components of every parameter tensor — stem, both
+    // residual-branch convs, the 1×1 downsample shortcuts, BN affine
+    // params, and the head all get probed.
+    for pi in 0..st.params.len() {
+        for _ in 0..3 {
+            let k = rng.below(st.params[pi].len() as u64) as usize;
+            let eps = 5e-3f32;
+            let orig = st.params[pi][k];
+            st.params[pi][k] = orig + eps;
+            let lp = graph::loss_at(&mut ex, &entry, &st.params, &st.state, &b, &codes).unwrap()
+                as f64;
+            st.params[pi][k] = orig - eps;
+            let lm = graph::loss_at(&mut ex, &entry, &st.params, &st.state, &b, &codes).unwrap()
+                as f64;
+            st.params[pi][k] = orig;
+            let numeric = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            let analytic = grads[pi][k];
+            let diff = (numeric - analytic).abs();
+            let scale = numeric.abs().max(analytic.abs()).max(3e-2);
+            assert!(
+                diff / scale < 0.15,
+                "{}[{k}]: numeric {numeric} vs analytic {analytic}",
+                entry.params[pi].name
+            );
+        }
+    }
+}
+
 // ------------------------------------------------- thread determinism
 
 /// Train 3 steps on the native backend with 1, 2, and 4 worker threads
@@ -334,6 +574,71 @@ fn prop_train_bit_identical_across_thread_counts() {
                 "case {case} (seed {seed}, codes {codes:?}): \
                  {threads}-thread run diverged from 1-thread"
             );
+        }
+    }
+}
+
+/// Same contract over the graph-executor model grid: resnet_mini
+/// (residual forks, strided + 1×1 convs) and effnet_lite (depthwise
+/// convs) must also be bit-identical across 1/2/4 worker threads,
+/// controller state included.
+#[test]
+fn prop_graph_models_bit_identical_across_thread_counts() {
+    use tri_accel::config::{Config, Method};
+    use tri_accel::coordinator::Controller;
+    use tri_accel::runtime::{Batch, Engine, Session, StepCtrl};
+
+    let precisions = [FP16, BF16, FP32];
+    for model in ["resnet_mini_c10", "effnet_lite_c10"] {
+        for case in 0..2u64 {
+            let mut rng = Rng::stream(0x6AF, case);
+            let seed = rng.below(1000) as i32;
+            let n = 16usize;
+            let mut brng = Rng::stream(0x6BA7C4, case);
+            let x: Vec<f32> = (0..n * 32 * 32 * 3).map(|_| brng.next_normal()).collect();
+            let y: Vec<i32> = (0..n).map(|_| brng.below(10) as i32).collect();
+            let batch = Batch::new(x, y);
+            let lr = uniform(&mut rng, 0.01, 0.1) as f32;
+            let codes_rng = Rng::stream(0x6C0DE, case);
+
+            let run = |threads: usize| -> Vec<u64> {
+                let engine = Engine::native_with_threads(threads);
+                let mut s = Session::init(&engine, model, seed).unwrap();
+                let entry = s.entry.clone();
+                let l = entry.num_layers;
+                let mut crng = codes_rng.clone();
+                let codes: Vec<i32> =
+                    (0..l).map(|_| precisions[small_usize(&mut crng, 0, 2)]).collect();
+                let cfg = Config::cell(model, Method::TriAccel, seed as u64);
+                let mut ctl = Controller::new(&cfg, &entry);
+                let mut ctrl = StepCtrl::uniform(l, FP32, lr, 5e-4);
+                ctrl.codes = codes;
+                ctrl.loss_scale = 256.0;
+                let mut trace: Vec<u64> = Vec::new();
+                for _ in 0..2 {
+                    let out = s.train_step(&batch, &ctrl).unwrap();
+                    ctl.observe_step(&out.grad_var, out.overflow);
+                    trace.push(out.loss.to_bits() as u64);
+                    trace.extend(out.grad_var.iter().map(|v| v.to_bits() as u64));
+                    trace.extend(out.grad_norm.iter().map(|v| v.to_bits() as u64));
+                }
+                for p in s.params_host().unwrap() {
+                    trace.extend(p.iter().map(|v| v.to_bits() as u64));
+                }
+                for (_, vals) in ctl.export_state() {
+                    trace.extend(vals.iter().map(|v| v.to_bits()));
+                }
+                trace
+            };
+
+            let t1 = run(1);
+            for threads in [2usize, 4] {
+                assert_eq!(
+                    t1,
+                    run(threads),
+                    "{model} case {case}: {threads}-thread run diverged from 1-thread"
+                );
+            }
         }
     }
 }
