@@ -9,6 +9,7 @@ use anyhow::Result;
 
 use tri_accel::config::{Config, Method};
 use tri_accel::memsim::MemoryMonitor;
+use tri_accel::policy::BatchPolicy;
 use tri_accel::runtime::Engine;
 use tri_accel::train::Trainer;
 
@@ -41,13 +42,12 @@ fn main() -> Result<()> {
             .map(|(s, b)| format!("@{s}→{b}"))
             .collect();
         println!(
-            "budget {:>9} ({:.3}GB): peak {:.4}GB  util {:>5.1}%  moves {}  vetoes {}  OOM {}  trace [{}]",
+            "budget {:>9} ({:.3}GB): peak {:.4}GB  util {:>5.1}%  ladder decisions {}  OOM {}  trace [{}]",
             label,
             budget_gb,
             tr.memsim.peak_gb(),
             100.0 * tr.memsim.peak_gb() / tr.memsim.mem_max_gb(),
-            tr.controller.batch.moves(),
-            tr.controller.batch.vetoes(),
+            tr.controller.batch.decisions(),
             tr.metrics.oom_events,
             trace.join(" ")
         );

@@ -8,6 +8,7 @@ use anyhow::Result;
 
 use tri_accel::config::{Config, Method};
 use tri_accel::manifest::precision_name;
+use tri_accel::policy::{CurvaturePolicy, PrecisionPolicy};
 use tri_accel::runtime::Engine;
 use tri_accel::train::Trainer;
 
@@ -49,8 +50,9 @@ fn main() -> Result<()> {
         }
     }
 
-    let (lo, hi) = tr.controller.precision.thresholds();
-    println!("\ncalibrated thresholds: τ_low={lo:.3e} τ_high={hi:.3e}");
+    if let Some((lo, hi)) = tr.controller.precision.thresholds() {
+        println!("\ncalibrated thresholds: τ_low={lo:.3e} τ_high={hi:.3e}");
+    }
     println!(
         "transitions {}  curvature firings {}  promotions {}  λ = {:?}",
         tr.controller.precision.transitions(),

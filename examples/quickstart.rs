@@ -10,6 +10,7 @@ use anyhow::Result;
 
 use tri_accel::config::{Config, Method};
 use tri_accel::manifest::precision_name;
+use tri_accel::policy::{BatchPolicy, PrecisionPolicy};
 use tri_accel::runtime::Engine;
 use tri_accel::train::Trainer;
 
@@ -33,7 +34,7 @@ fn main() -> Result<()> {
     println!(
         "model: {} layers, buckets {:?}",
         tr.session.num_layers(),
-        tr.controller.batch.buckets()
+        tr.controller.batch.ladder()
     );
 
     for epoch in 0..3 {
@@ -52,10 +53,10 @@ fn main() -> Result<()> {
         s.test_acc_pct, s.modeled_s_per_epoch, s.wall_s_per_epoch, s.peak_vram_gb, s.eff_score
     );
     println!(
-        "controller: {} precision transitions, {} promotions, {} batch moves, {} OOM events",
+        "controller: {} precision transitions, {} promotions, {} batch decisions, {} OOM events",
         tr.controller.precision.transitions(),
         tr.metrics.promotions,
-        tr.controller.batch.moves(),
+        tr.controller.batch.decisions(),
         tr.metrics.oom_events
     );
     Ok(())

@@ -16,8 +16,10 @@ use tri_accel::coordinator::Controller;
 use tri_accel::data::{synthetic::SyntheticCifar, BatchIter};
 use tri_accel::manifest::{BF16, FP16, FP32};
 use tri_accel::memsim::VramSim;
+use tri_accel::policy::registry;
 use tri_accel::runtime::native::{arena::Arena, gemm, ops, pool::Pool};
 use tri_accel::runtime::{Engine, Session, StepCtrl};
+use tri_accel::train::Trainer;
 use tri_accel::util::bench::{black_box, BenchReport, Bencher};
 use tri_accel::util::rng::Rng;
 
@@ -187,6 +189,48 @@ fn main() {
         step += 1;
         black_box(ctl.control_window(step, 0.8, 1.0, |_| true));
     }));
+
+    // -- per-method policy-decision counts (registry sweep) ------------------
+    // A short fixed-budget run per registry method; the decision
+    // counters land in BENCH_native.json metadata so the cross-PR
+    // bench trajectory captures control-plane overhead per method.
+    for method_key in ["fp32", "amp_static", "tri_accel", "greedy_batch"] {
+        let spec = registry::resolve(method_key).unwrap();
+        let mut cfg = Config::cell(key, spec.family, 0);
+        registry::apply(&mut cfg, spec);
+        cfg.epochs = 1;
+        cfg.steps_per_epoch = Some(10);
+        cfg.train_examples = 256;
+        cfg.eval_examples = 128;
+        cfg.batch_init = 16;
+        cfg.t_ctrl = 2;
+        cfg.t_curv = 5;
+        cfg.curv_warmup = 1;
+        cfg.batch_cooldown = 2;
+        cfg.warmup_epochs = 0;
+        cfg.mem_budget_gb = 0.06;
+        cfg.mem_noise = 0.0;
+        let mut tr = Trainer::new(&engine, cfg).unwrap();
+        tr.run_epoch(0).unwrap();
+        let c = tr.controller.counts();
+        report.meta_num(&format!("policy/{method_key}/windows"), c.windows as f64);
+        report.meta_num(
+            &format!("policy/{method_key}/precision_transitions"),
+            c.precision_transitions as f64,
+        );
+        report.meta_num(
+            &format!("policy/{method_key}/batch_decisions"),
+            c.batch_decisions as f64,
+        );
+        report.meta_num(
+            &format!("policy/{method_key}/curv_firings"),
+            c.curv_firings as f64,
+        );
+        println!(
+            "policy decisions [{method_key:<12}] windows {:>3}  precision {:>3}  batch {:>3}  curv {:>3}",
+            c.windows, c.precision_transitions, c.batch_decisions, c.curv_firings
+        );
+    }
 
     // -- memsim accounting ---------------------------------------------------
     let mut sim = VramSim::new(&entry, 0.45, 0.01, 0);

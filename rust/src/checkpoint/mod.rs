@@ -7,6 +7,7 @@
 //!
 //! ```text
 //! magic "TRIACCEL"  u32 version  u32 model_key_len  model_key bytes
+//! (v3) u32 method_len  method bytes  u64 graph_digest
 //! u64 step  u32 n_tensors  then per tensor:
 //!   u32 name_len  name  u32 ndim  u64 dims[ndim]  f32 data[prod(dims)]
 //! (v2) u32 n_ctrl  then per entry:
@@ -17,11 +18,22 @@
 //! Tensors are stored by *role/index* name (`param/3`, `mom/3`,
 //! `state/1`, `probe/3`), validated against the manifest on load —
 //! loading a checkpoint into a different model is an error, not a
-//! crash. The v2 `ctrl` section holds the Tri-Accel controller state
-//! (precision codes + variance EMAs, curvature EMAs, loss scale,
-//! batch-ladder position) as named f64 vectors, so a resumed run
-//! continues with the policy the saved run had, not the defaults.
-//! Version-1 files (no ctrl section) still load, with empty `ctrl`.
+//! crash. The `ctrl` section (v2+) holds the control-plane policy
+//! state (precision codes + variance EMAs, curvature EMAs, loss scale,
+//! batch-ladder position) as named f64 vectors — namespaced
+//! `policy/<name>/…` since the policy refactor, with the legacy
+//! un-namespaced keys still importable — so a resumed run continues
+//! with the policy the saved run had, not the defaults.
+//!
+//! The v3 header additionally pins *compatibility*: `method` is the
+//! registry key the run trained with (resuming under a different
+//! method is an error — policy state is not transferable), and
+//! `graph_digest` fingerprints the manifest entry's geometry and node
+//! graph ([`crate::manifest::ModelEntry::digest`]) so a checkpoint
+//! written before a model definition changed fails loudly at load
+//! instead of as a downstream shape/state mismatch. Version-1 files
+//! (no ctrl section) and version-2 files (no compat header) still
+//! load, with empty `ctrl` / empty method / zero digest.
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -29,7 +41,7 @@ use std::path::Path;
 use anyhow::{Context, Result};
 
 const MAGIC: &[u8; 8] = b"TRIACCEL";
-const VERSION: u32 = 2;
+const VERSION: u32 = 3;
 
 #[derive(Debug, Clone)]
 pub struct Tensor {
@@ -41,6 +53,12 @@ pub struct Tensor {
 #[derive(Debug, Clone)]
 pub struct Checkpoint {
     pub model_key: String,
+    /// Registry method key the run trained with ("" for v1/v2 files —
+    /// no method check possible).
+    pub method_key: String,
+    /// [`crate::manifest::ModelEntry::digest`] of the model the run
+    /// trained on (0 for v1/v2 files — no graph check possible).
+    pub graph_digest: u64,
     pub step: u64,
     pub tensors: Vec<Tensor>,
     /// Controller state: named f64 vectors (empty for v1 files and for
@@ -49,7 +67,8 @@ pub struct Checkpoint {
 }
 
 /// FNV-1a over a byte stream (substrate — no crc crates offline).
-fn fnv1a(bytes: &[u8]) -> u64 {
+/// Shared with [`crate::manifest::ModelEntry::digest`].
+pub(crate) fn fnv1a(bytes: &[u8]) -> u64 {
     let mut h: u64 = 0xcbf29ce484222325;
     for &b in bytes {
         h ^= b as u64;
@@ -66,6 +85,10 @@ impl Checkpoint {
         let key = self.model_key.as_bytes();
         buf.extend_from_slice(&(key.len() as u32).to_le_bytes());
         buf.extend_from_slice(key);
+        let method = self.method_key.as_bytes();
+        buf.extend_from_slice(&(method.len() as u32).to_le_bytes());
+        buf.extend_from_slice(method);
+        buf.extend_from_slice(&self.graph_digest.to_le_bytes());
         buf.extend_from_slice(&self.step.to_le_bytes());
         buf.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
         for t in &self.tensors {
@@ -122,11 +145,19 @@ impl Checkpoint {
         anyhow::ensure!(r.take(8)? == MAGIC, "bad magic — not a Tri-Accel checkpoint");
         let version = r.u32()?;
         anyhow::ensure!(
-            version == 1 || version == VERSION,
+            (1..=VERSION).contains(&version),
             "unsupported checkpoint version {version}"
         );
         let key_len = r.u32()? as usize;
         let model_key = String::from_utf8(r.take(key_len)?.to_vec()).context("model key utf8")?;
+        let (method_key, graph_digest) = if version >= 3 {
+            let method_len = r.u32()? as usize;
+            let method =
+                String::from_utf8(r.take(method_len)?.to_vec()).context("method key utf8")?;
+            (method, r.u64()?)
+        } else {
+            (String::new(), 0)
+        };
         let step = r.u64()?;
         let n = r.u32()? as usize;
         let mut tensors = Vec::with_capacity(n);
@@ -164,7 +195,7 @@ impl Checkpoint {
             }
         }
         anyhow::ensure!(r.i == body.len(), "trailing bytes in checkpoint");
-        Ok(Checkpoint { model_key, step, tensors, ctrl })
+        Ok(Checkpoint { model_key, method_key, graph_digest, step, tensors, ctrl })
     }
 
     pub fn tensor(&self, name: &str) -> Result<&Tensor> {
@@ -204,6 +235,8 @@ mod tests {
     fn sample() -> Checkpoint {
         Checkpoint {
             model_key: "tiny_cnn_c10".into(),
+            method_key: "tri_accel".into(),
+            graph_digest: 0xDEAD_BEEF_CAFE_F00D,
             step: 1234,
             tensors: vec![
                 Tensor { name: "param/0".into(), dims: vec![2, 3], data: vec![1.0, -2.5, 3.0, 0.0, 5.5, -6.25] },
@@ -228,6 +261,8 @@ mod tests {
         c.save(&p).unwrap();
         let d = Checkpoint::load(&p).unwrap();
         assert_eq!(d.model_key, c.model_key);
+        assert_eq!(d.method_key, "tri_accel");
+        assert_eq!(d.graph_digest, 0xDEAD_BEEF_CAFE_F00D);
         assert_eq!(d.step, 1234);
         assert_eq!(d.tensors.len(), 3);
         for (a, b) in c.tensors.iter().zip(&d.tensors) {
@@ -265,7 +300,40 @@ mod tests {
         assert_eq!(c.model_key, "m");
         assert_eq!(c.step, 7);
         assert!(c.ctrl.is_empty());
+        assert!(c.method_key.is_empty() && c.graph_digest == 0, "v1: no compat header");
         assert_eq!(c.tensors[0].data, vec![1.5, -2.0]);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn v2_files_load_without_compat_header() {
+        // Hand-build a version-2 byte stream: ctrl section present, no
+        // method/digest header.
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&2u32.to_le_bytes());
+        let key = b"m2";
+        buf.extend_from_slice(&(key.len() as u32).to_le_bytes());
+        buf.extend_from_slice(key);
+        buf.extend_from_slice(&11u64.to_le_bytes());
+        buf.extend_from_slice(&0u32.to_le_bytes()); // no tensors
+        buf.extend_from_slice(&1u32.to_le_bytes()); // one ctrl entry
+        let name = b"scaler/state";
+        buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        buf.extend_from_slice(name);
+        buf.extend_from_slice(&3u32.to_le_bytes());
+        for v in [512.0f64, 4.0, 1.0] {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        let crc = fnv1a(&buf);
+        buf.extend_from_slice(&crc.to_le_bytes());
+        let p = tmp("v2");
+        std::fs::write(&p, &buf).unwrap();
+        let c = Checkpoint::load(&p).unwrap();
+        assert_eq!(c.model_key, "m2");
+        assert_eq!(c.step, 11);
+        assert!(c.method_key.is_empty() && c.graph_digest == 0);
+        assert_eq!(c.ctrl, vec![("scaler/state".to_string(), vec![512.0, 4.0, 1.0])]);
         std::fs::remove_file(&p).ok();
     }
 

@@ -21,12 +21,17 @@ pub enum Method {
 }
 
 impl Method {
+    /// Parse one of the three Table-1 *family* names. CLI method
+    /// selection goes through the registry instead
+    /// (`Config::set("method", …)` → [`crate::policy::registry`]),
+    /// which also accepts the composed methods and prints the full
+    /// registry on unknown names.
     pub fn parse(s: &str) -> Result<Method> {
         Ok(match s {
             "fp32" => Method::Fp32,
             "amp" | "amp_static" => Method::AmpStatic,
             "tri_accel" | "tri-accel" | "triaccel" => Method::TriAccel,
-            _ => anyhow::bail!("unknown method `{s}` (fp32|amp|tri_accel)"),
+            _ => anyhow::bail!("unknown method family `{s}` (fp32|amp|tri_accel)"),
         })
     }
 
@@ -40,7 +45,7 @@ impl Method {
 }
 
 /// Component toggles for the Table-2 ablation rows.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Ablation {
     pub dynamic_precision: bool,
     pub dynamic_batch: bool,
@@ -66,6 +71,12 @@ pub struct Config {
     pub model_key: String,
     pub method: Method,
     pub ablation: Ablation,
+    /// Precision pin for the non-adaptive precision policy: `None` =
+    /// the family default (FP32 baseline pins FP32, otherwise BF16).
+    /// Set by registry specs (e.g. `amp_dynamic` pins FP16) or
+    /// `--set pin=fp16|bf16|fp32|auto`; ignored when dynamic precision
+    /// is active.
+    pub pin_override: Option<i32>,
     pub seed: u64,
     pub epochs: usize,
     /// Steps per epoch; None = full pass over the training set.
@@ -111,6 +122,11 @@ pub struct Config {
     /// around the workload, scaled per model.
     pub mem_budget_gb: f64,
     pub mem_noise: f64,     // allocator transient noise fraction
+    /// Time-varying budget trace (`memsim::BudgetTrace` spec): "const"
+    /// (default), "step:FRAC@STEP", "ramp:START:END:FLOOR", or
+    /// "saw:PERIOD:DEPTH" — the VRAM-pressure scenarios a co-tenant or
+    /// shrinking allocation imposes on the elastic controller.
+    pub mem_trace: String,
 
     // -- loss scaling --------------------------------------------------------
     pub init_loss_scale: f32,
@@ -125,6 +141,7 @@ impl Default for Config {
             model_key: "tiny_cnn_c10".into(),
             method: Method::TriAccel,
             ablation: Ablation::full(),
+            pin_override: None,
             seed: 0,
             epochs: 2,
             steps_per_epoch: None,
@@ -149,6 +166,7 @@ impl Default for Config {
             batch_cooldown: 30,
             mem_budget_gb: 0.45,
             mem_noise: 0.01,
+            mem_trace: "const".into(),
             init_loss_scale: 1024.0,
             loss_scale_growth_interval: 200,
         }
@@ -176,7 +194,16 @@ impl Config {
         let mut cfg = Config::default();
         let j = Json::parse(&text).context("config json")?;
         let obj = j.as_obj().context("config must be a JSON object")?;
+        // `method` resolves through the registry and resets the
+        // ablation/pin fields; apply it first so explicit per-field
+        // keys in the same file win regardless of JSON key order.
+        if let Some(v) = obj.get("method") {
+            cfg.set("method", &json_to_str(v))?;
+        }
         for (k, v) in obj {
+            if k.as_str() == "method" {
+                continue;
+            }
             cfg.set(k, &json_to_str(v))?;
         }
         Ok(cfg)
@@ -191,7 +218,19 @@ impl Config {
         }
         match key {
             "model_key" => self.model_key = val.to_string(),
-            "method" => self.method = Method::parse(val)?,
+            "method" => {
+                let spec = crate::policy::registry::resolve(val)?;
+                crate::policy::registry::apply(self, spec);
+            }
+            "pin" => {
+                self.pin_override = match val {
+                    "auto" | "none" => None,
+                    "fp16" => Some(crate::manifest::FP16),
+                    "bf16" => Some(crate::manifest::BF16),
+                    "fp32" => Some(crate::manifest::FP32),
+                    _ => anyhow::bail!("pin must be auto|fp16|bf16|fp32, got `{val}`"),
+                }
+            }
             "seed" => self.seed = num!(),
             "epochs" => self.epochs = num!(),
             "steps_per_epoch" => {
@@ -218,6 +257,7 @@ impl Config {
             "batch_cooldown" => self.batch_cooldown = num!(),
             "mem_budget_gb" => self.mem_budget_gb = num!(),
             "mem_noise" => self.mem_noise = num!(),
+            "mem_trace" => self.mem_trace = val.to_string(),
             "init_loss_scale" => self.init_loss_scale = num!(),
             "loss_scale_growth_interval" => self.loss_scale_growth_interval = num!(),
             "dynamic_precision" => self.ablation.dynamic_precision = parse_bool(val)?,
@@ -237,6 +277,8 @@ impl Config {
         );
         anyhow::ensure!(self.mem_budget_gb >= 0.0, "mem_budget_gb >= 0 (0 = auto)");
         anyhow::ensure!(self.batch_init > 0 && self.epochs > 0, "positive sizes");
+        crate::memsim::BudgetTrace::parse(&self.mem_trace)
+            .context("mem_trace spec")?;
         Ok(())
     }
 }
@@ -299,5 +341,38 @@ mod tests {
         assert_eq!(Method::parse("fp32").unwrap().name(), "FP32 Baseline");
         assert_eq!(Method::parse("tri-accel").unwrap(), Method::TriAccel);
         assert!(Method::parse("adam").is_err());
+    }
+
+    #[test]
+    fn method_key_resolves_registry_compositions() {
+        let mut c = Config::default();
+        c.set("method", "greedy_batch").unwrap();
+        assert_eq!(c.method, Method::TriAccel);
+        assert!(!c.ablation.dynamic_precision, "elasticity-only: precision pinned");
+        assert!(c.ablation.dynamic_batch && !c.ablation.curvature);
+        c.set("method", "amp_dynamic").unwrap();
+        assert_eq!(c.method, Method::AmpStatic);
+        assert_eq!(c.pin_override, Some(crate::manifest::FP16));
+        let err = c.set("method", "sgd").unwrap_err().to_string();
+        assert!(err.contains("tri_accel_nocurv"), "unknown method lists registry: {err}");
+    }
+
+    #[test]
+    fn pin_key_parses_codes() {
+        let mut c = Config::default();
+        c.set("pin", "fp16").unwrap();
+        assert_eq!(c.pin_override, Some(crate::manifest::FP16));
+        c.set("pin", "auto").unwrap();
+        assert_eq!(c.pin_override, None);
+        assert!(c.set("pin", "int8").is_err());
+    }
+
+    #[test]
+    fn mem_trace_validated() {
+        let mut c = Config::default();
+        c.set("mem_trace", "step:0.6@100").unwrap();
+        c.validate().unwrap();
+        c.mem_trace = "wobble:9".into();
+        assert!(c.validate().is_err());
     }
 }

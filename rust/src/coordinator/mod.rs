@@ -1,39 +1,28 @@
-//! The paper's contribution: the unified Tri-Accel control loop (§3.4)
-//! and its three interlocking controllers.
-//!
-//! * [`precision`] — §3.1 precision-adaptive updates: per-layer EMA of
-//!   gradient variance → {FP16, BF16, FP32} codes, plus dynamic loss
-//!   scaling for the FP16 leg.
-//! * [`curvature`] — §3.2 sparse second-order signals: amortized power
-//!   iteration scheduling, per-layer step-size scaling
-//!   `η_l = η₀ / (1 + α·λ_max)`, and precision promotion.
-//! * [`batch`] — §3.3 memory-elastic batch scaling: the VRAM feedback
-//!   controller snapped to the AOT bucket ladder.
-//! * [`control`] — §3.4 the closed loop that wires them together on a
-//!   `T_ctrl` cadence.
-//!
-//! All controllers are pure state machines over scalars/vectors — no XLA
-//! types — so they are unit- and property-testable in isolation; the
-//! trainer (`crate::train`) feeds them measurements from the runtime and
-//! the VRAM simulator.
+//! Compatibility facade: the Tri-Accel control loop moved to
+//! [`crate::policy`], where the three §3 controllers are composable
+//! [`crate::policy::PrecisionPolicy`] / [`crate::policy::CurvaturePolicy`]
+//! / [`crate::policy::BatchPolicy`] implementations behind a generic
+//! [`crate::policy::ControlPlane`]. These re-exports keep the original
+//! paths (`coordinator::Controller`, `coordinator::precision::…`)
+//! compiling; new code should import from `crate::policy` directly.
 
-pub mod batch;
-pub mod control;
-pub mod curvature;
-pub mod precision;
-
-pub use batch::BatchController;
-pub use control::{ControlDecision, Controller};
-pub use curvature::CurvatureScheduler;
-pub use precision::{LossScaler, PrecisionController};
-
-/// Find a named state vector in a checkpoint's controller section.
-pub(crate) fn ckpt_lookup<'a>(
-    kv: &'a [(String, Vec<f64>)],
-    name: &str,
-) -> anyhow::Result<&'a Vec<f64>> {
-    kv.iter()
-        .find(|(k, _)| k == name)
-        .map(|(_, v)| v)
-        .ok_or_else(|| anyhow::anyhow!("checkpoint missing `{name}`"))
+pub mod batch {
+    pub use crate::policy::batch::*;
 }
+
+pub mod control {
+    pub use crate::policy::plane::*;
+}
+
+pub mod curvature {
+    pub use crate::policy::curvature::*;
+}
+
+pub mod precision {
+    pub use crate::policy::precision::*;
+}
+
+pub use crate::policy::{
+    BatchController, ControlDecision, Controller, CurvatureScheduler, LossScaler,
+    PrecisionController,
+};

@@ -227,6 +227,106 @@ pub fn headline(fp32: &CellResult, tri: &CellResult) -> String {
     )
 }
 
+/// Aggregate of one (model, method, trace) pressure cell over seeds:
+/// how a method behaves when the budget moves under it.
+#[derive(Debug, Clone)]
+pub struct PressureCell {
+    pub method_key: String,
+    pub label: String,
+    pub acc: Welford,
+    pub peak_gb: Welford,
+    pub score: Welford,
+    /// Simulated OOMs across seeds (a real static-batch run would have
+    /// crashed at the first one).
+    pub oom_events: u64,
+    /// Batch-policy decisions (moves + vetoes) across seeds.
+    pub batch_decisions: u64,
+    /// Smallest batch the run was squeezed to (min over seeds).
+    pub min_batch: usize,
+}
+
+/// The VRAM-pressure scenario sweep (ROADMAP "as many scenarios as you
+/// can imagine"): run each registry method under a time-varying budget
+/// trace and report survival metrics. This is the stress test the
+/// paper's memory-elastic claim (§3.3) implies but Table 1/2 never
+/// exercises: the static baselines keep B and accumulate simulated
+/// OOMs; the elastic methods shed batch and finish inside the budget.
+pub fn pressure(
+    engine: &Engine,
+    model_key: &str,
+    method_keys: &[&str],
+    seeds: &[u64],
+    trace: &str,
+    tweak: &dyn Fn(&mut Config),
+) -> Result<Vec<PressureCell>> {
+    // Fail on a bad trace or a bad method key before any training
+    // burns time — a typo in the last method must not discard minutes
+    // of earlier cells.
+    crate::memsim::BudgetTrace::parse(trace)?;
+    let specs: Vec<&crate::policy::MethodSpec> = method_keys
+        .iter()
+        .map(|k| crate::policy::registry::resolve(k.trim()))
+        .collect::<Result<_>>()?;
+    let mut rows = Vec::new();
+    for spec in specs {
+        let mut cell = PressureCell {
+            method_key: spec.key.to_string(),
+            label: spec.label.to_string(),
+            acc: Welford::default(),
+            peak_gb: Welford::default(),
+            score: Welford::default(),
+            oom_events: 0,
+            batch_decisions: 0,
+            min_batch: usize::MAX,
+        };
+        for &seed in seeds {
+            let mut cfg = Config::cell(model_key, spec.family, seed);
+            crate::policy::registry::apply(&mut cfg, spec);
+            tweak(&mut cfg);
+            cfg.mem_trace = trace.to_string();
+            let mut tr = Trainer::new(engine, cfg)?;
+            let s = tr.run()?;
+            cell.acc.push(s.test_acc_pct);
+            cell.peak_gb.push(s.peak_vram_gb);
+            cell.score.push(s.eff_score);
+            cell.oom_events += tr.metrics.oom_events;
+            cell.batch_decisions += tr.metrics.batch_decisions;
+            let run_min = tr
+                .metrics
+                .batch_trace
+                .iter()
+                .map(|&(_, b)| b)
+                .min()
+                .unwrap_or(0);
+            cell.min_batch = cell.min_batch.min(run_min);
+        }
+        rows.push(cell);
+    }
+    Ok(rows)
+}
+
+/// Pretty-print the pressure sweep (one row per method).
+pub fn print_pressure(rows: &[PressureCell], trace: &str) {
+    println!(
+        "{:<18} {:>12} {:>10} {:>6} {:>7} {:>7} {:>8}   (trace {trace})",
+        "Method", "Acc(%)", "VRAM(GB)", "OOMs", "B_min", "Decs", "Score"
+    );
+    for r in rows {
+        let min_b = if r.min_batch == usize::MAX { 0 } else { r.min_batch };
+        let acc = format!("{:.1}±{:.2}", r.acc.mean(), r.acc.std());
+        println!(
+            "{:<18} {:>12} {:>10.4} {:>6} {:>7} {:>7} {:>8.2}",
+            r.label,
+            acc,
+            r.peak_gb.mean(),
+            r.oom_events,
+            min_b,
+            r.batch_decisions,
+            r.score.mean(),
+        );
+    }
+}
+
 /// Validate CLI-supplied model keys against the engine's manifest
 /// before any session spins up — unknown keys fail at argument-parse
 /// time with the supported-model list instead of deep inside a

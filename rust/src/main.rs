@@ -2,11 +2,17 @@
 //!
 //! Subcommands:
 //!   info                          backend + model inventory
-//!   train   [--model K] [--method M] [--epochs N] [--set k=v ...]
-//!   table1  [--models a,b] [--seeds 0,1,2] [--steps N] [--epochs N] [--smoke]
-//!   table2  [--model K]    [--seeds 0,1,2] [--steps N] [--epochs N]
-//!   fig     [--model K]    [--seed S]      [--steps N] [--epochs N]
+//!   train    [--model K] [--method M] [--epochs N] [--set k=v ...]
+//!   table1   [--models a,b] [--seeds 0,1,2] [--steps N] [--epochs N] [--smoke]
+//!   table2   [--model K]    [--seeds 0,1,2] [--steps N] [--epochs N]
+//!   fig      [--model K]    [--seed S]      [--steps N] [--epochs N]
+//!   pressure [--model K] [--methods a,b] [--trace SPEC] [--smoke]
 //!   compare --a run.json --b run.json
+//!
+//! Global flags: `--list-models` (manifest inventory) and
+//! `--list-methods` (the method registry) print and exit. `--method`
+//! accepts any registry key (`--list-methods`), not just the paper's
+//! three columns.
 //!
 //! Backend selection: `--backend native` (default — the hermetic
 //! pure-Rust executor, no artifacts needed) or `--backend pjrt`
@@ -19,9 +25,10 @@ use std::path::PathBuf;
 
 use anyhow::{Context, Result};
 
-use tri_accel::config::{Config, Method};
+use tri_accel::config::Config;
 use tri_accel::harness;
 use tri_accel::metrics::PrecisionMix;
+use tri_accel::policy::registry;
 use tri_accel::runtime::Engine;
 use tri_accel::train::Trainer;
 use tri_accel::util::args::Args;
@@ -35,17 +42,66 @@ fn main() {
 
 fn run() -> Result<()> {
     let args = Args::from_env()?;
+    // Registry/inventory flags short-circuit any subcommand: print and
+    // exit so scripts can discover what a build serves.
+    if args.flag("list-methods") {
+        return list_methods();
+    }
+    if args.flag("list-models") {
+        let engine = engine_from(&args)?;
+        return list_models(&engine);
+    }
     match args.subcommand.as_deref() {
         Some("info") => info(&args),
         Some("train") | None => train(&args),
         Some("table1") => table1(&args),
         Some("table2") => table2(&args),
         Some("fig") => fig(&args),
+        Some("pressure") => pressure(&args),
         Some("compare") => compare(&args),
         Some(other) => {
-            anyhow::bail!("unknown subcommand `{other}` (info|train|table1|table2|fig|compare)")
+            anyhow::bail!(
+                "unknown subcommand `{other}` (info|train|table1|table2|fig|pressure|compare)"
+            )
         }
     }
+}
+
+/// `--list-methods`: the method registry — every named policy
+/// composition `--method` accepts.
+fn list_methods() -> Result<()> {
+    println!(
+        "{:<18} {:<20} {:<11} {:<28} description",
+        "key", "label", "family", "policies (prec/batch/curv)"
+    );
+    for s in registry::registry() {
+        let prec = if s.ablation.dynamic_precision { "adaptive" } else { "pinned" };
+        let batch = if s.ablation.dynamic_batch { "elastic" } else { "fixed" };
+        let curv = if s.ablation.curvature { "probed" } else { "off" };
+        let policies = format!("{prec}/{batch}/{curv}");
+        let key = if s.aliases.is_empty() {
+            s.key.to_string()
+        } else {
+            format!("{} ({})", s.key, s.aliases.join("|"))
+        };
+        println!(
+            "{:<18} {:<20} {:<11} {:<28} {}",
+            key,
+            s.label,
+            s.family.name(),
+            policies,
+            s.about
+        );
+    }
+    Ok(())
+}
+
+/// `--list-models`: the engine manifest's model inventory.
+fn list_models(engine: &Engine) -> Result<()> {
+    for key in engine.manifest.models.keys() {
+        println!("{key}");
+    }
+    Ok(())
 }
 
 /// Build the engine from `--backend` / `--artifacts` / `--threads`
@@ -170,7 +226,9 @@ fn config_from(args: &Args) -> Result<Config> {
         cfg.model_key = m.to_string();
     }
     if let Some(m) = args.get("method") {
-        cfg.method = Method::parse(m)?;
+        // Registry-resolved: any named composition, and unknown names
+        // print the full registry.
+        cfg.set("method", m)?;
     }
     cfg.epochs = args.parse_or("epochs", cfg.epochs)?;
     cfg.seed = args.parse_or("seed", cfg.seed)?;
@@ -200,16 +258,13 @@ fn train(args: &Args) -> Result<()> {
     let resume = args.get("resume").map(PathBuf::from);
     args.reject_unknown()?;
 
-    let tag = format!(
-        "{}_{}_s{}",
-        cfg.model_key,
-        cfg.method.name().replace([' ', '(', ')'], "").to_lowercase(),
-        cfg.seed
-    );
+    let method_key = registry::effective_key(&cfg);
+    let tag = format!("{}_{}_s{}", cfg.model_key, method_key, cfg.seed);
     println!(
-        "training {} with {} on {} — {} epochs, seed {}",
+        "training {} with {} ({}) on {} — {} epochs, seed {}",
         cfg.model_key,
         cfg.method.name(),
+        method_key,
         engine.platform(),
         cfg.epochs,
         cfg.seed
@@ -303,6 +358,51 @@ fn table2(args: &Args) -> Result<()> {
     let rows = harness::table2(&engine, &model, &seeds, &tweak)?;
     println!("== Table 2 ablation — {model} ==");
     harness::print_table2(&rows);
+    Ok(())
+}
+
+/// The VRAM-pressure scenario: sweep methods under a time-varying
+/// budget trace (default: a ramp that squeezes the budget to 55% over
+/// the middle half of the run). `--smoke` is the CI fast path — one
+/// seed, two registry-composed methods, a short trace.
+fn pressure(args: &Args) -> Result<()> {
+    let engine = engine_from(args)?;
+    let model = model_or_first(args, &engine)?;
+    let smoke = args.flag("smoke");
+    let methods = args.get_or(
+        "methods",
+        if smoke {
+            // Two registry compositions beyond the paper's columns: a
+            // static FP16 method (accumulates OOMs) vs elasticity-only
+            // (sheds batch) — the pressure contrast in miniature.
+            "amp_dynamic,greedy_batch"
+        } else {
+            "fp32,amp_static,amp_dynamic,greedy_batch,tri_accel"
+        },
+    );
+    let explicit_seeds = args.get("seeds").is_some();
+    let mut seeds = parse_seeds(args)?;
+    if smoke && !explicit_seeds {
+        seeds.truncate(1);
+    }
+    let steps: usize = args.parse_or("steps", if smoke { 24 } else { 60 })?;
+    let epochs: usize = args.parse_or("epochs", if smoke { 1 } else { 3 })?;
+    let total = (steps * epochs) as u64;
+    // Default: budget ramps down to 55% across the middle half of the
+    // run — late enough that every method trains at full budget first,
+    // early enough that the squeeze dominates the tail. Degenerate
+    // step budgets still get a valid (start < end) ramp.
+    let ramp_start = total / 4;
+    let ramp_end = ((3 * total) / 4).max(ramp_start + 1);
+    let default_trace = format!("ramp:{ramp_start}:{ramp_end}:0.55");
+    let trace = args.get_or("trace", &default_trace);
+    let tweak = harness::quick_budget(steps, epochs);
+    args.reject_unknown()?;
+    harness::validate_models(&engine, &[model.as_str()])?;
+    let keys: Vec<&str> = methods.split(',').collect();
+    let rows = harness::pressure(&engine, &model, &keys, &seeds, &trace, &tweak)?;
+    println!("== VRAM pressure — {model} ({} seed(s)) ==", seeds.len());
+    harness::print_pressure(&rows, &trace);
     Ok(())
 }
 

@@ -128,6 +128,33 @@ impl ModelEntry {
     pub fn state_elems(&self) -> usize {
         self.state_shapes.iter().map(|s| s.iter().product::<usize>()).sum()
     }
+
+    /// FNV-1a fingerprint of the model's *definition* — architecture
+    /// name, classes, layer table, parameter shapes, node graph, state
+    /// shapes, bucket ladders, curvature batch. Stored in checkpoint
+    /// headers (v3+) so resuming against a changed model definition
+    /// fails at load with a clear error instead of as a downstream
+    /// shape/state mismatch. Artifact paths are deliberately excluded:
+    /// relocating artifacts does not change the graph.
+    pub fn digest(&self) -> u64 {
+        // The derived Debug formatting of the typed specs is a stable,
+        // total description of the geometry; hashing it avoids a
+        // hand-rolled (and drift-prone) field-by-field serializer.
+        let desc = format!(
+            "{}|{}|{}|{:?}|{:?}|{:?}|{:?}|{:?}|{:?}|{}",
+            self.model,
+            self.num_classes,
+            self.num_layers,
+            self.layers,
+            self.params,
+            self.nodes,
+            self.state_shapes,
+            self.train_buckets,
+            self.eval_buckets,
+            self.curv_batch,
+        );
+        crate::checkpoint::fnv1a(desc.as_bytes())
+    }
 }
 
 #[derive(Debug)]
@@ -491,5 +518,23 @@ mod tests {
         assert_eq!(precision_bytes(FP16), 2);
         assert_eq!(precision_bytes(BF16), 2);
         assert_eq!(precision_bytes(FP32), 4);
+    }
+
+    #[test]
+    fn digest_tracks_definition_not_location() {
+        let m = Manifest::parse(GRAPHED, Path::new("/tmp/a")).unwrap();
+        let e = m.model("g_c10").unwrap();
+        assert_eq!(e.digest(), e.digest(), "deterministic");
+        // Same manifest parsed from a different artifact root: same graph.
+        let m2 = Manifest::parse(GRAPHED, Path::new("/somewhere/else")).unwrap();
+        assert_eq!(e.digest(), m2.model("g_c10").unwrap().digest());
+        // A changed layer table changes the digest.
+        let mut altered = e.clone();
+        altered.layers[0].param_elems += 1;
+        assert_ne!(e.digest(), altered.digest());
+        // A changed node graph changes the digest.
+        let mut rewired = e.clone();
+        rewired.nodes.pop();
+        assert_ne!(e.digest(), rewired.digest());
     }
 }

@@ -26,6 +26,115 @@ pub trait MemoryMonitor {
 
 const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
 
+/// A time-varying budget: the VRAM-pressure scenarios. `MemMax` is no
+/// longer necessarily a constant — a co-tenant spinning up, a shrinking
+/// cgroup allocation, or a periodic neighbor all move the ceiling the
+/// §3.3 controller must live under. The trace multiplies the base
+/// budget by a step-indexed factor in (0, 1].
+#[derive(Debug, Clone, PartialEq)]
+pub enum BudgetTrace {
+    /// Fixed budget (the paper's strict single-GPU setting).
+    Constant,
+    /// Step function: full budget before `at`, `frac`·budget from `at`
+    /// on — a co-tenant that arrives and stays.
+    Step { at: u64, frac: f64 },
+    /// Linear shrink from 1.0 at `start` to `floor` at `end` (clamped
+    /// after) — a draining allocation.
+    Ramp { start: u64, end: u64, floor: f64 },
+    /// Sawtooth contention: a periodic co-tenant that claims memory
+    /// linearly over each period, then releases. Factor falls from 1.0
+    /// toward `1 - depth` across each `period`-step cycle.
+    Sawtooth { period: u64, depth: f64 },
+}
+
+impl BudgetTrace {
+    /// Parse a trace spec: `const` | `step:FRAC@STEP` |
+    /// `ramp:START:END:FLOOR` | `saw:PERIOD:DEPTH`.
+    pub fn parse(spec: &str) -> anyhow::Result<BudgetTrace> {
+        let t = match spec {
+            "" | "const" | "none" => BudgetTrace::Constant,
+            s if s.starts_with("step:") => {
+                let body = &s[5..];
+                let (frac, at) = body
+                    .split_once('@')
+                    .ok_or_else(|| anyhow::anyhow!("step trace wants FRAC@STEP, got `{body}`"))?;
+                BudgetTrace::Step {
+                    at: at.parse().map_err(|_| anyhow::anyhow!("bad step `{at}`"))?,
+                    frac: frac.parse().map_err(|_| anyhow::anyhow!("bad frac `{frac}`"))?,
+                }
+            }
+            s if s.starts_with("ramp:") => {
+                let parts: Vec<&str> = s[5..].split(':').collect();
+                anyhow::ensure!(parts.len() == 3, "ramp trace wants START:END:FLOOR");
+                BudgetTrace::Ramp {
+                    start: parts[0].parse().map_err(|_| anyhow::anyhow!("bad start"))?,
+                    end: parts[1].parse().map_err(|_| anyhow::anyhow!("bad end"))?,
+                    floor: parts[2].parse().map_err(|_| anyhow::anyhow!("bad floor"))?,
+                }
+            }
+            s if s.starts_with("saw:") => {
+                let parts: Vec<&str> = s[4..].split(':').collect();
+                anyhow::ensure!(parts.len() == 2, "saw trace wants PERIOD:DEPTH");
+                BudgetTrace::Sawtooth {
+                    period: parts[0].parse().map_err(|_| anyhow::anyhow!("bad period"))?,
+                    depth: parts[1].parse().map_err(|_| anyhow::anyhow!("bad depth"))?,
+                }
+            }
+            other => anyhow::bail!(
+                "unknown budget trace `{other}` (const|step:FRAC@STEP|ramp:START:END:FLOOR|saw:PERIOD:DEPTH)"
+            ),
+        };
+        t.validate()?;
+        Ok(t)
+    }
+
+    fn validate(&self) -> anyhow::Result<()> {
+        match *self {
+            BudgetTrace::Constant => {}
+            BudgetTrace::Step { frac, .. } => {
+                anyhow::ensure!(frac > 0.0 && frac <= 1.0, "step frac in (0,1]");
+            }
+            BudgetTrace::Ramp { start, end, floor } => {
+                anyhow::ensure!(start < end, "ramp start < end");
+                anyhow::ensure!(floor > 0.0 && floor <= 1.0, "ramp floor in (0,1]");
+            }
+            BudgetTrace::Sawtooth { period, depth } => {
+                anyhow::ensure!(period > 0, "saw period > 0");
+                anyhow::ensure!((0.0..1.0).contains(&depth), "saw depth in [0,1)");
+            }
+        }
+        Ok(())
+    }
+
+    /// Budget multiplier at `step`, in (0, 1].
+    pub fn factor(&self, step: u64) -> f64 {
+        match *self {
+            BudgetTrace::Constant => 1.0,
+            BudgetTrace::Step { at, frac } => {
+                if step >= at {
+                    frac
+                } else {
+                    1.0
+                }
+            }
+            BudgetTrace::Ramp { start, end, floor } => {
+                if step <= start {
+                    1.0
+                } else if step >= end {
+                    floor
+                } else {
+                    let t = (step - start) as f64 / (end - start) as f64;
+                    1.0 + t * (floor - 1.0)
+                }
+            }
+            BudgetTrace::Sawtooth { period, depth } => {
+                let phase = (step % period) as f64 / period as f64;
+                1.0 - depth * phase
+            }
+        }
+    }
+}
+
 /// Fixed runtime overhead: context, cuDNN/Triton handles, streams.
 const BASE_OVERHEAD_BYTES: f64 = 48.0 * 1024.0 * 1024.0;
 /// Allocator block rounding / fragmentation factor.
@@ -44,7 +153,12 @@ pub struct StepUsage {
 }
 
 pub struct VramSim {
+    /// Base budget; the live `MemMax` is `budget_gb · trace.factor(step)`.
     budget_gb: f64,
+    trace: BudgetTrace,
+    /// Current trainer step (drives the trace). Advanced by
+    /// [`Self::set_step`]; constant traces ignore it.
+    step: u64,
     noise_frac: f64,
     rng: Rng,
     // static per-model quantities (elements)
@@ -68,6 +182,8 @@ impl VramSim {
     pub fn new(entry: &ModelEntry, budget_gb: f64, noise_frac: f64, seed: u64) -> VramSim {
         VramSim {
             budget_gb,
+            trace: BudgetTrace::Constant,
+            step: 0,
             noise_frac,
             rng: Rng::stream(seed, 0x4D454D),
             param_elems_total: entry.param_count,
@@ -153,10 +269,30 @@ impl VramSim {
         if u.total_gb > self.peak {
             self.peak = u.total_gb;
         }
-        if u.total_gb > self.budget_gb {
+        if u.total_gb > self.mem_max_gb() {
             self.oom_events += 1;
         }
         u
+    }
+
+    /// Advance the budget trace to the trainer's current step. Constant
+    /// traces (the default, and every paper table) are unaffected.
+    pub fn set_step(&mut self, step: u64) {
+        self.step = step;
+    }
+
+    /// Install a time-varying budget trace (VRAM-pressure scenarios).
+    pub fn set_trace(&mut self, trace: BudgetTrace) {
+        self.trace = trace;
+    }
+
+    pub fn trace(&self) -> &BudgetTrace {
+        &self.trace
+    }
+
+    /// The base (trace-free) budget.
+    pub fn base_budget_gb(&self) -> f64 {
+        self.budget_gb
     }
 
     /// Would a step at (b, codes) exceed the budget? Used by the batch
@@ -183,7 +319,7 @@ impl VramSim {
         self.peak = saved.1;
         self.oom_events = saved.2;
         self.rng = saved.3;
-        u.total_gb <= self.budget_gb * frac
+        u.total_gb <= self.mem_max_gb() * frac
     }
 
     pub fn oom_events(&self) -> u64 {
@@ -201,7 +337,10 @@ impl MemoryMonitor for VramSim {
     }
 
     fn mem_max_gb(&self) -> f64 {
-        self.budget_gb
+        match self.trace {
+            BudgetTrace::Constant => self.budget_gb,
+            _ => self.budget_gb * self.trace.factor(self.step),
+        }
     }
 
     fn peak_gb(&self) -> f64 {
@@ -403,6 +542,58 @@ mod tests {
         assert!((ud.workspace_gb - 2.0 * uc.workspace_gb).abs() < 1e-12);
         assert_eq!(uc.activations_gb, ud.activations_gb, "acts unchanged");
         assert!(ud.total_gb > uc.total_gb);
+    }
+
+    #[test]
+    fn budget_trace_parse_and_factor() {
+        assert_eq!(BudgetTrace::parse("const").unwrap(), BudgetTrace::Constant);
+        let st = BudgetTrace::parse("step:0.6@100").unwrap();
+        assert_eq!(st, BudgetTrace::Step { at: 100, frac: 0.6 });
+        assert_eq!(st.factor(99), 1.0);
+        assert_eq!(st.factor(100), 0.6);
+        let ramp = BudgetTrace::parse("ramp:10:20:0.5").unwrap();
+        assert_eq!(ramp.factor(10), 1.0);
+        assert!((ramp.factor(15) - 0.75).abs() < 1e-12);
+        assert_eq!(ramp.factor(25), 0.5);
+        let saw = BudgetTrace::parse("saw:10:0.4").unwrap();
+        assert_eq!(saw.factor(0), 1.0);
+        assert!((saw.factor(5) - 0.8).abs() < 1e-12);
+        assert_eq!(saw.factor(10), 1.0, "period boundary releases");
+        for bad in ["step:1.5@4", "ramp:9:9:0.5", "saw:0:0.2", "wobble", "saw:5:1.0"] {
+            assert!(BudgetTrace::parse(bad).is_err(), "`{bad}` must be rejected");
+        }
+    }
+
+    #[test]
+    fn trace_moves_mem_max_and_ooms() {
+        let e = toy_entry();
+        let mut sim = VramSim::new(&e, 1.0, 0.0, 0);
+        sim.set_trace(BudgetTrace::parse("step:0.01@50").unwrap());
+        sim.set_step(0);
+        assert_eq!(sim.mem_max_gb(), 1.0);
+        let u = sim.usage(32, &[FP32, FP32], false);
+        assert_eq!(sim.oom_events(), 0, "fits the full budget ({} GB)", u.total_gb);
+        sim.set_step(50);
+        assert!((sim.mem_max_gb() - 0.01).abs() < 1e-12);
+        sim.usage(32, &[FP32, FP32], false);
+        assert_eq!(sim.oom_events(), 1, "same step OOMs under the squeezed budget");
+        assert!(!sim.would_fit(32, &[FP32, FP32], false));
+    }
+
+    #[test]
+    fn constant_trace_is_bit_identical_to_untraced() {
+        let e = toy_entry();
+        let mut a = VramSim::new(&e, 0.5, 0.01, 7);
+        let mut b = VramSim::new(&e, 0.5, 0.01, 7);
+        b.set_trace(BudgetTrace::Constant);
+        for step in 0..20u64 {
+            b.set_step(step);
+            let ua = a.usage(32, &[BF16, FP16], step % 5 == 0);
+            let ub = b.usage(32, &[BF16, FP16], step % 5 == 0);
+            assert_eq!(ua.total_gb.to_bits(), ub.total_gb.to_bits());
+        }
+        assert_eq!(a.peak_gb().to_bits(), b.peak_gb().to_bits());
+        assert_eq!(a.oom_events(), b.oom_events());
     }
 
     #[test]

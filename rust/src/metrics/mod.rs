@@ -91,6 +91,10 @@ pub struct RunMetrics {
     pub overflows: u64,
     pub oom_events: u64,
     pub curv_firings: u64,
+    /// §3.4 control windows evaluated (policy-decision telemetry).
+    pub ctrl_windows: u64,
+    /// Batch-policy moves + vetoes decided (0 for static baselines).
+    pub batch_decisions: u64,
 }
 
 impl RunMetrics {
@@ -215,6 +219,8 @@ impl RunMetrics {
         counters.insert("overflows".into(), Json::Num(self.overflows as f64));
         counters.insert("oom_events".into(), Json::Num(self.oom_events as f64));
         counters.insert("curv_firings".into(), Json::Num(self.curv_firings as f64));
+        counters.insert("ctrl_windows".into(), Json::Num(self.ctrl_windows as f64));
+        counters.insert("batch_decisions".into(), Json::Num(self.batch_decisions as f64));
         obj.insert("counters".into(), Json::Obj(counters));
         Json::Obj(obj)
     }

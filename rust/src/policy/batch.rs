@@ -14,6 +14,13 @@
 //! is vetoed by a predictive `would_fit` check so the controller never
 //! *causes* the OOM it exists to avoid. A cooldown between moves damps
 //! oscillation from allocator noise.
+//!
+//! Two [`BatchPolicy`](super::BatchPolicy) impls live here:
+//! [`BatchController`] (the feedback rule above) and [`FixedBatch`]
+//! (the static baselines — B snapped to the ladder once, then held;
+//! a real run at that size would simply OOM under pressure).
+
+use super::{ckpt_lookup, BatchPolicy};
 
 /// Outcome of one controller decision (telemetry / tests).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -43,6 +50,16 @@ impl BatchConfig {
     }
 }
 
+/// Snap `init` onto the ascending ladder: largest bucket ≤ init, else
+/// the smallest bucket. Shared by both batch policies so the static
+/// baselines and the elastic controller start at the same B.
+fn snap(buckets: &mut Vec<usize>, init: usize) -> usize {
+    assert!(!buckets.is_empty(), "no train buckets");
+    buckets.sort_unstable();
+    buckets.dedup();
+    buckets.iter().rposition(|&b| b <= init).unwrap_or(0)
+}
+
 pub struct BatchController {
     cfg: BatchConfig,
     /// Ascending AOT bucket ladder.
@@ -58,13 +75,7 @@ impl BatchController {
     /// `buckets` must be the model's AOT train buckets; `init` snaps to
     /// the nearest bucket ≤ init (paper's initial batch size 96).
     pub fn new(mut buckets: Vec<usize>, init: usize, cfg: BatchConfig) -> BatchController {
-        assert!(!buckets.is_empty(), "no train buckets");
-        buckets.sort_unstable();
-        buckets.dedup();
-        let idx = buckets
-            .iter()
-            .rposition(|&b| b <= init)
-            .unwrap_or(0);
+        let idx = snap(&mut buckets, init);
         BatchController { cfg, buckets, idx, last_move_step: 0, moves: 0, vetoes: 0 }
     }
 
@@ -142,7 +153,7 @@ impl BatchController {
     /// batch size.
     pub fn export_state(&self) -> Vec<(String, Vec<f64>)> {
         vec![(
-            "batch/state".into(),
+            "policy/batch.elastic/state".into(),
             vec![
                 self.current() as f64,
                 self.last_move_step as f64,
@@ -152,9 +163,10 @@ impl BatchController {
         )]
     }
 
-    /// Restore state written by [`Self::export_state`].
+    /// Restore state written by [`Self::export_state`] (or the legacy
+    /// `batch/state` key of pre-policy checkpoints).
     pub fn import_state(&mut self, kv: &[(String, Vec<f64>)]) -> anyhow::Result<()> {
-        let v = super::ckpt_lookup(kv, "batch/state")?;
+        let v = ckpt_lookup(kv, &["policy/batch.elastic/state", "batch/state"])?;
         anyhow::ensure!(v.len() == 4, "batch state arity");
         let bucket = v[0] as usize;
         let idx = self
@@ -171,6 +183,107 @@ impl BatchController {
         self.last_move_step = v[1] as u64;
         self.moves = v[2] as u64;
         self.vetoes = v[3] as u64;
+        Ok(())
+    }
+}
+
+impl BatchPolicy for BatchController {
+    fn name(&self) -> &'static str {
+        "batch.elastic"
+    }
+
+    fn elastic(&self) -> bool {
+        true
+    }
+
+    fn update(
+        &mut self,
+        step: u64,
+        mem_used: f64,
+        mem_max: f64,
+        fits: &mut dyn FnMut(usize) -> bool,
+    ) -> BatchMove {
+        BatchController::update(self, step, mem_used, mem_max, |b| fits(b))
+    }
+
+    fn force_shrink(&mut self, step: u64) -> bool {
+        BatchController::force_shrink(self, step)
+    }
+
+    fn current(&self) -> usize {
+        BatchController::current(self)
+    }
+
+    fn decisions(&self) -> u64 {
+        self.moves + self.vetoes
+    }
+
+    fn ladder(&self) -> Vec<usize> {
+        self.buckets.clone()
+    }
+
+    fn export_state(&self) -> Vec<(String, Vec<f64>)> {
+        BatchController::export_state(self)
+    }
+
+    fn import_state(&mut self, kv: &[(String, Vec<f64>)]) -> anyhow::Result<()> {
+        BatchController::import_state(self, kv)
+    }
+}
+
+/// Static batch: snapped onto the ladder once, then held regardless of
+/// memory pressure — the paper's baselines, which keep B fixed and
+/// simply OOM. Stateless (B is derived from config + ladder), so it
+/// exports nothing and ignores any batch state a checkpoint carries
+/// (matching the pre-policy controller, which skipped the batch import
+/// when the elastic path was off).
+pub struct FixedBatch {
+    b: usize,
+}
+
+impl FixedBatch {
+    pub fn new(mut buckets: Vec<usize>, init: usize) -> FixedBatch {
+        let idx = snap(&mut buckets, init);
+        FixedBatch { b: buckets[idx] }
+    }
+}
+
+impl BatchPolicy for FixedBatch {
+    fn name(&self) -> &'static str {
+        "batch.fixed"
+    }
+
+    fn elastic(&self) -> bool {
+        false
+    }
+
+    fn update(
+        &mut self,
+        _step: u64,
+        _mem_used: f64,
+        _mem_max: f64,
+        _fits: &mut dyn FnMut(usize) -> bool,
+    ) -> BatchMove {
+        BatchMove::Hold
+    }
+
+    fn force_shrink(&mut self, _step: u64) -> bool {
+        false
+    }
+
+    fn current(&self) -> usize {
+        self.b
+    }
+
+    fn decisions(&self) -> u64 {
+        0
+    }
+
+    fn export_state(&self) -> Vec<(String, Vec<f64>)> {
+        Vec::new()
+    }
+
+    fn import_state(&mut self, _kv: &[(String, Vec<f64>)]) -> anyhow::Result<()> {
         Ok(())
     }
 }
@@ -270,5 +383,36 @@ mod tests {
     fn ladder_deduped_and_sorted() {
         let c = BatchController::new(vec![96, 16, 96, 32], 96, cfg());
         assert_eq!(c.buckets(), &[16, 32, 96]);
+    }
+
+    #[test]
+    fn fixed_batch_snaps_like_elastic_and_holds() {
+        let mut f = FixedBatch::new(vec![16, 32, 64], 96);
+        assert_eq!(BatchPolicy::current(&f), 64, "same snap as the controller");
+        let mut fits = |_: usize| true;
+        assert_eq!(f.update(10, 0.1, 1.0, &mut fits), BatchMove::Hold);
+        assert_eq!(f.update(20, 2.0, 1.0, &mut fits), BatchMove::Hold);
+        assert!(!BatchPolicy::force_shrink(&mut f, 5));
+        assert_eq!(BatchPolicy::current(&f), 64);
+        assert!(BatchPolicy::export_state(&f).is_empty());
+        f.import_state(&[("batch/state".into(), vec![32.0, 0.0, 0.0, 0.0])]).unwrap();
+        assert_eq!(BatchPolicy::current(&f), 64, "checkpoint batch state ignored");
+    }
+
+    #[test]
+    fn elastic_state_roundtrips_with_legacy_keys() {
+        let mut c = ctl();
+        c.update(10, 0.5, 1.0, |_| true);
+        c.update(17, 0.5, 1.0, |_| false);
+        let saved = BatchController::export_state(&c);
+        assert_eq!(saved[0].0, "policy/batch.elastic/state");
+        let legacy = vec![("batch/state".to_string(), saved[0].1.clone())];
+        for kv in [&saved, &legacy] {
+            let mut fresh = ctl();
+            fresh.import_state(kv).unwrap();
+            assert_eq!(fresh.current(), c.current());
+            assert_eq!(fresh.moves(), c.moves());
+            assert_eq!(fresh.vetoes(), c.vetoes());
+        }
     }
 }

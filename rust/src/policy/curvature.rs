@@ -12,8 +12,15 @@
 //!   `η_l = η₀ / (1 + α·max λ)` (§3.2, "Step size scaling"),
 //! * flags layers whose λ exceeds τ_curv for precision promotion
 //!   (§3.2, "Precision promotion").
+//!
+//! Two [`CurvaturePolicy`](super::CurvaturePolicy) impls live here:
+//! [`CurvatureScheduler`] (the amortized probe loop above) and
+//! [`NoCurvature`] (baselines / the curvature-off ablation — never
+//! due, unit LR scales, no promotions).
 
 use crate::util::stats::Ema;
+
+use super::{ckpt_lookup, CurvaturePolicy};
 
 #[derive(Debug, Clone)]
 pub struct CurvatureConfig {
@@ -141,17 +148,18 @@ impl CurvatureScheduler {
             steps.push(s as f64);
         }
         vec![
-            ("curvature/lam_values".into(), vals),
-            ("curvature/lam_steps".into(), steps),
-            ("curvature/counters".into(), vec![self.firings as f64, self.rejected as f64]),
+            (key("lam_values"), vals),
+            (key("lam_steps"), steps),
+            (key("counters"), vec![self.firings as f64, self.rejected as f64]),
         ]
     }
 
-    /// Restore state written by [`Self::export_state`].
+    /// Restore state written by [`Self::export_state`] (or the legacy
+    /// `curvature/…` keys of pre-policy checkpoints).
     pub fn import_state(&mut self, kv: &[(String, Vec<f64>)]) -> anyhow::Result<()> {
-        let vals = super::ckpt_lookup(kv, "curvature/lam_values")?;
-        let steps = super::ckpt_lookup(kv, "curvature/lam_steps")?;
-        let counters = super::ckpt_lookup(kv, "curvature/counters")?;
+        let vals = ckpt_lookup(kv, &[&key("lam_values"), "curvature/lam_values"])?;
+        let steps = ckpt_lookup(kv, &[&key("lam_steps"), "curvature/lam_steps"])?;
+        let counters = ckpt_lookup(kv, &[&key("counters"), "curvature/counters"])?;
         anyhow::ensure!(
             vals.len() == self.lambdas.len() && steps.len() == self.lambdas.len(),
             "curvature state arity mismatch ({} layers)",
@@ -163,6 +171,97 @@ impl CurvatureScheduler {
         }
         self.firings = counters[0] as u64;
         self.rejected = counters[1] as u64;
+        Ok(())
+    }
+}
+
+const NAME: &str = "curvature.amortized";
+
+fn key(field: &str) -> String {
+    format!("policy/{NAME}/{field}")
+}
+
+impl CurvaturePolicy for CurvatureScheduler {
+    fn name(&self) -> &'static str {
+        NAME
+    }
+
+    fn active(&self) -> bool {
+        true
+    }
+
+    fn due(&self, step: u64) -> bool {
+        CurvatureScheduler::due(self, step)
+    }
+
+    fn observe(&mut self, lambdas: &[f32]) -> Vec<usize> {
+        CurvatureScheduler::observe(self, lambdas)
+    }
+
+    fn lr_scales(&self, num_layers: usize) -> Vec<f32> {
+        debug_assert_eq!(num_layers, self.lambdas.len(), "lr_scales arity");
+        CurvatureScheduler::lr_scales(self)
+    }
+
+    fn promotions(&self) -> Vec<usize> {
+        CurvatureScheduler::promotions(self)
+    }
+
+    fn firings(&self) -> u64 {
+        CurvatureScheduler::firings(self)
+    }
+
+    fn lambdas(&self) -> Vec<f64> {
+        CurvatureScheduler::lambdas(self)
+    }
+
+    fn export_state(&self) -> Vec<(String, Vec<f64>)> {
+        CurvatureScheduler::export_state(self)
+    }
+
+    fn import_state(&mut self, kv: &[(String, Vec<f64>)]) -> anyhow::Result<()> {
+        CurvatureScheduler::import_state(self, kv)
+    }
+}
+
+/// Curvature disabled: the baselines and the curvature-off ablation.
+/// Never due, unit LR scales, no promotions, no state.
+pub struct NoCurvature;
+
+impl CurvaturePolicy for NoCurvature {
+    fn name(&self) -> &'static str {
+        "curvature.off"
+    }
+
+    fn active(&self) -> bool {
+        false
+    }
+
+    fn due(&self, _step: u64) -> bool {
+        false
+    }
+
+    fn observe(&mut self, _lambdas: &[f32]) -> Vec<usize> {
+        Vec::new()
+    }
+
+    fn lr_scales(&self, num_layers: usize) -> Vec<f32> {
+        vec![1.0; num_layers]
+    }
+
+    fn promotions(&self) -> Vec<usize> {
+        Vec::new()
+    }
+
+    fn firings(&self) -> u64 {
+        0
+    }
+
+    fn export_state(&self) -> Vec<(String, Vec<f64>)> {
+        Vec::new()
+    }
+
+    fn import_state(&mut self, _kv: &[(String, Vec<f64>)]) -> anyhow::Result<()> {
         Ok(())
     }
 }
@@ -251,5 +350,39 @@ mod tests {
         cs.observe(&[0.0]);
         let lam = cs.lambda(0);
         assert!(lam > 0.0 && lam < 10.0, "smoothed, got {lam}");
+    }
+
+    #[test]
+    fn no_curvature_is_inert() {
+        let mut nc = NoCurvature;
+        assert!(!nc.active());
+        assert!(!CurvaturePolicy::due(&nc, 200));
+        assert!(CurvaturePolicy::observe(&mut nc, &[1.0, 2.0]).is_empty());
+        assert_eq!(CurvaturePolicy::lr_scales(&nc, 3), vec![1.0; 3]);
+        assert!(CurvaturePolicy::promotions(&nc).is_empty());
+        assert!(CurvaturePolicy::export_state(&nc).is_empty());
+        nc.import_state(&[]).unwrap();
+    }
+
+    #[test]
+    fn scheduler_state_roundtrips_with_legacy_keys() {
+        let mut cs = CurvatureScheduler::new(2, cfg());
+        cs.observe(&[3.0, f32::NAN]);
+        cs.observe(&[2.0, 1.0]);
+        let saved = CurvatureScheduler::export_state(&cs);
+        assert!(saved.iter().all(|(k, _)| k.starts_with("policy/curvature.amortized/")));
+        let legacy: Vec<(String, Vec<f64>)> = saved
+            .iter()
+            .map(|(k, v)| {
+                (k.replace("policy/curvature.amortized/", "curvature/"), v.clone())
+            })
+            .collect();
+        for kv in [&saved, &legacy] {
+            let mut fresh = CurvatureScheduler::new(2, cfg());
+            fresh.import_state(kv).unwrap();
+            assert_eq!(fresh.lambdas(), cs.lambdas());
+            assert_eq!(fresh.firings(), cs.firings());
+            assert_eq!(fresh.rejected(), cs.rejected());
+        }
     }
 }

@@ -1,0 +1,154 @@
+//! The policy subsystem — the paper's control plane (§3) decomposed
+//! into three composable policy traits plus the closed loop that runs
+//! them on the `T_ctrl` cadence.
+//!
+//! * [`PrecisionPolicy`] — §3.1: owns the per-layer precision codes.
+//!   Canonical impls: [`PrecisionController`] (variance-EMA adaptive)
+//!   and [`PinnedPrecision`] (the FP32 / static-AMP baselines).
+//! * [`CurvaturePolicy`] — §3.2: probe scheduling, λ smoothing,
+//!   per-layer LR scales, precision-promotion flags. Canonical impls:
+//!   [`CurvatureScheduler`] (amortized power iteration) and
+//!   [`NoCurvature`] (baselines / curvature-off ablation).
+//! * [`BatchPolicy`] — §3.3: the batch size B(t) on the AOT bucket
+//!   ladder. Canonical impls: [`BatchController`] (VRAM feedback) and
+//!   [`FixedBatch`] (the static baselines, which keep B and OOM).
+//! * [`plane::ControlPlane`] — §3.4: composes any policy triple (plus
+//!   the shared [`LossScaler`]) and mediates their interdependencies.
+//!   The trainer talks to it only through the observation/decision
+//!   surface ([`plane::StepPlan`], [`plane::ControlDecision`]).
+//! * [`registry`] — named method specs (`fp32`, `amp_static`,
+//!   `tri_accel`, `tri_accel_nocurv`, `amp_dynamic`, `greedy_batch`,
+//!   …) resolved at arg-parse time into a policy composition. The
+//!   Table-2 ablation flags are re-expressed as registry compositions.
+//!
+//! Every policy is a pure state machine over scalars/vectors — no
+//! backend types — and must round-trip through `export_state` /
+//! `import_state` *mid-control-window*: importing a snapshot taken at
+//! an arbitrary step leaves all subsequent decisions bit-identical
+//! (property-tested in `tests/prop_policy.rs`). Exported state is
+//! namespaced per policy (`policy/<name>/<field>`); imports fall back
+//! to the pre-policy legacy keys (`precision/…`, `curvature/…`,
+//! `batch/state`, `scaler/state`, `controller/windows`) so existing
+//! checkpoints still load.
+
+pub mod batch;
+pub mod curvature;
+pub mod plane;
+pub mod precision;
+pub mod registry;
+
+pub use batch::{BatchController, BatchMove, FixedBatch};
+pub use curvature::{CurvatureScheduler, NoCurvature};
+pub use plane::{ControlDecision, ControlPlane, PolicyCounts, StepPlan};
+pub use precision::{LossScaler, PinnedPrecision, PrecisionController};
+pub use registry::MethodSpec;
+
+/// The historical name: the §3.4 unified controller is now the policy
+/// plane. Kept as an alias so call sites and tests read either way.
+pub type Controller = ControlPlane;
+
+/// §3.1 precision policy: owns the per-layer precision codes p_l(t).
+pub trait PrecisionPolicy {
+    /// Stable id used to namespace checkpoint state (`policy/<name>/…`).
+    fn name(&self) -> &'static str;
+    /// Per-step gradient-variance ingest (cheap; every step).
+    fn observe(&mut self, grad_var: &[f32]);
+    /// Recompute codes on the `T_ctrl` cadence; true if any changed.
+    fn control_window(&mut self) -> bool;
+    /// §3.2 promotion: pin layer `l` to FP32. Returns true if the
+    /// policy honors promotions (adaptive), false if it ignores them.
+    fn promote(&mut self, l: usize) -> bool;
+    /// Does this policy move codes in response to observations? The
+    /// plane gates the curvature→precision coupling on this.
+    fn adaptive(&self) -> bool;
+    fn codes(&self) -> &[i32];
+    fn num_layers(&self) -> usize;
+    /// Telemetry: code changes applied so far.
+    fn transitions(&self) -> u64;
+    /// Telemetry: per-layer variance estimates, if the policy keeps
+    /// any (empty for pinned policies).
+    fn variances(&self) -> Vec<f64> {
+        Vec::new()
+    }
+    /// Telemetry: the (τ_low, τ_high) thresholds, if the policy uses
+    /// them.
+    fn thresholds(&self) -> Option<(f64, f64)> {
+        None
+    }
+    fn export_state(&self) -> Vec<(String, Vec<f64>)>;
+    fn import_state(&mut self, kv: &[(String, Vec<f64>)]) -> anyhow::Result<()>;
+}
+
+/// §3.2 curvature policy: probe cadence and consumption of λ.
+pub trait CurvaturePolicy {
+    fn name(&self) -> &'static str;
+    /// Does this policy probe at all? (Gates probe memory accounting.)
+    fn active(&self) -> bool;
+    /// Should the trainer run a curvature probe at `step`?
+    fn due(&self, step: u64) -> bool;
+    /// Ingest per-layer Rayleigh quotients; returns layers whose probe
+    /// vectors must be reset (non-finite λ).
+    fn observe(&mut self, lambdas: &[f32]) -> Vec<usize>;
+    /// Per-layer LR scales; `num_layers` ones when inactive/cold.
+    fn lr_scales(&self, num_layers: usize) -> Vec<f32>;
+    /// Layers flagged for precision promotion this window.
+    fn promotions(&self) -> Vec<usize>;
+    /// Telemetry: probes ingested so far.
+    fn firings(&self) -> u64;
+    /// Telemetry: smoothed per-layer λ estimates (empty when off).
+    fn lambdas(&self) -> Vec<f64> {
+        Vec::new()
+    }
+    fn export_state(&self) -> Vec<(String, Vec<f64>)>;
+    fn import_state(&mut self, kv: &[(String, Vec<f64>)]) -> anyhow::Result<()>;
+}
+
+/// §3.3 batch policy: B(t) on the bucket ladder.
+pub trait BatchPolicy {
+    fn name(&self) -> &'static str;
+    /// Does B(t) respond to memory pressure?
+    fn elastic(&self) -> bool;
+    /// One §3.3 decision (`fits` is the predictive OOM veto).
+    fn update(
+        &mut self,
+        step: u64,
+        mem_used: f64,
+        mem_max: f64,
+        fits: &mut dyn FnMut(usize) -> bool,
+    ) -> BatchMove;
+    /// Emergency shrink on an actual OOM signal; true if B moved.
+    fn force_shrink(&mut self, step: u64) -> bool;
+    fn current(&self) -> usize;
+    /// Telemetry: moves + vetoes decided so far.
+    fn decisions(&self) -> u64;
+    /// The bucket ladder B(t) can live on (a fixed policy's ladder is
+    /// the single bucket it holds).
+    fn ladder(&self) -> Vec<usize> {
+        vec![self.current()]
+    }
+    fn export_state(&self) -> Vec<(String, Vec<f64>)>;
+    fn import_state(&mut self, kv: &[(String, Vec<f64>)]) -> anyhow::Result<()>;
+}
+
+/// Find a named state vector, trying keys in order (first the policy's
+/// namespaced key, then the pre-policy legacy key).
+pub(crate) fn ckpt_lookup<'a>(
+    kv: &'a [(String, Vec<f64>)],
+    keys: &[&str],
+) -> anyhow::Result<&'a Vec<f64>> {
+    ckpt_lookup_opt(kv, keys)
+        .ok_or_else(|| anyhow::anyhow!("checkpoint missing `{}`", keys[0]))
+}
+
+/// Optional variant of [`ckpt_lookup`].
+pub(crate) fn ckpt_lookup_opt<'a>(
+    kv: &'a [(String, Vec<f64>)],
+    keys: &[&str],
+) -> Option<&'a Vec<f64>> {
+    for key in keys {
+        if let Some((_, v)) = kv.iter().find(|(k, _)| k == key) {
+            return Some(v);
+        }
+    }
+    None
+}

@@ -1,0 +1,688 @@
+//! §3.4 Unified Control Loop — the closed loop that couples the three
+//! policies on a `T_ctrl` cadence:
+//!
+//! 1. collect per-layer gradient variance (every step, cheap EMA) and
+//!    curvature (every `T_curv`, via the AOT curv graph);
+//! 2. adjust precision allocations p_l(t);
+//! 3. adapt per-layer learning rates from curvature;
+//! 4. update batch size B(t) from the VRAM signal.
+//!
+//! The interdependencies the paper calls out are all mediated here:
+//! curvature promotes precision ([`CurvaturePolicy::promotions`] →
+//! [`PrecisionPolicy::promote`], gated on the precision policy being
+//! adaptive), precision changes the memory model's input (codes),
+//! memory drives batch size, and batch size feeds back into
+//! gradient-variance statistics through the next steps' training.
+//!
+//! Unlike the pre-policy controller — which hardwired the three §3
+//! state machines and gated them with method/ablation booleans — the
+//! plane composes *any* policy triple. The method registry
+//! ([`super::registry`]) names the useful compositions; the paper's
+//! baselines fall out as `{pinned precision, no curvature, fixed
+//! batch}`. The trainer talks to the plane only through the
+//! observation/decision surface: [`ControlPlane::plan_step`] →
+//! [`ControlPlane::observe_step`] / [`ControlPlane::observe_curvature`]
+//! / [`ControlPlane::oom_event`] → [`ControlPlane::control_window`].
+
+use crate::config::{Ablation, Config, Method};
+use crate::manifest::{ModelEntry, BF16, FP16, FP32};
+
+use super::batch::{BatchConfig, BatchController, BatchMove, FixedBatch};
+use super::curvature::{CurvatureConfig, CurvatureScheduler, NoCurvature};
+use super::precision::{LossScaler, PinnedPrecision, PrecisionConfig, PrecisionController};
+use super::{ckpt_lookup_opt, BatchPolicy, CurvaturePolicy, PrecisionPolicy};
+
+/// What one control window decided (telemetry / tests / traces).
+#[derive(Debug, Clone)]
+pub struct ControlDecision {
+    pub step: u64,
+    pub precision_changed: bool,
+    pub promotions: Vec<usize>,
+    pub batch_move: BatchMove,
+    pub batch_size: usize,
+    pub loss_scale: f32,
+}
+
+/// Everything the trainer needs to issue one optimizer step — the
+/// decision half of the plane's observation/decision interface.
+#[derive(Debug, Clone)]
+pub struct StepPlan {
+    pub batch_size: usize,
+    pub codes: Vec<i32>,
+    pub lr_scales: Vec<f32>,
+    pub loss_scale: f32,
+    /// Should the trainer run a curvature probe at this step?
+    pub curvature_due: bool,
+}
+
+/// Per-policy decision counters (the "negligible overhead" telemetry
+/// recorded into `BENCH_native.json`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PolicyCounts {
+    pub windows: u64,
+    pub precision_transitions: u64,
+    pub batch_decisions: u64,
+    pub curv_firings: u64,
+    pub scaler_overflows: u64,
+}
+
+/// The §3.4 plane: a policy triple + the shared loss scaler on the
+/// `T_ctrl` cadence.
+pub struct ControlPlane {
+    /// Table-1 family (metrics rows file under this).
+    pub method: Method,
+    /// Normalized ablation toggles (telemetry; non-TriAccel families
+    /// report all-off, matching the composition actually built).
+    pub ablation: Ablation,
+    pub precision: Box<dyn PrecisionPolicy>,
+    pub curvature: Box<dyn CurvaturePolicy>,
+    pub batch: Box<dyn BatchPolicy>,
+    pub scaler: LossScaler,
+    t_ctrl: u64,
+    windows: u64,
+}
+
+impl ControlPlane {
+    /// Compose the policy triple a config describes. The paper's three
+    /// methods resolve to exactly the pre-policy controller's behavior
+    /// (bit-identical trajectories); registry methods additionally
+    /// honor `pin_override` on the pinned-precision paths.
+    pub fn new(cfg: &Config, entry: &ModelEntry) -> ControlPlane {
+        let ablation = match cfg.method {
+            Method::TriAccel => cfg.ablation,
+            _ => Ablation::none(),
+        };
+        let adaptive = cfg.method == Method::TriAccel && ablation.dynamic_precision;
+        let precision: Box<dyn PrecisionPolicy> = if adaptive {
+            Box::new(PrecisionController::new(
+                entry.num_layers,
+                PrecisionConfig::from_cfg(cfg),
+            ))
+        } else {
+            let code = cfg.pin_override.unwrap_or(match cfg.method {
+                Method::Fp32 => FP32,
+                _ => BF16,
+            });
+            Box::new(PinnedPrecision::new(entry.num_layers, code))
+        };
+        let curvature: Box<dyn CurvaturePolicy> =
+            if cfg.method == Method::TriAccel && ablation.curvature {
+                Box::new(CurvatureScheduler::new(
+                    entry.num_layers,
+                    CurvatureConfig::from_cfg(cfg),
+                ))
+            } else {
+                Box::new(NoCurvature)
+            };
+        let batch: Box<dyn BatchPolicy> =
+            if cfg.method == Method::TriAccel && ablation.dynamic_batch {
+                Box::new(BatchController::new(
+                    entry.train_buckets.clone(),
+                    cfg.batch_init,
+                    BatchConfig::from_cfg(cfg),
+                ))
+            } else {
+                Box::new(FixedBatch::new(entry.train_buckets.clone(), cfg.batch_init))
+            };
+        // The scaler exists wherever sub-FP32 compute can: only the
+        // pure-FP32 baseline runs without one.
+        let all_fp32 = cfg.method == Method::Fp32 && cfg.pin_override.unwrap_or(FP32) == FP32;
+        let scaler = if all_fp32 {
+            LossScaler::disabled()
+        } else {
+            LossScaler::new(cfg.init_loss_scale, cfg.loss_scale_growth_interval)
+        };
+        ControlPlane {
+            method: cfg.method,
+            ablation,
+            precision,
+            curvature,
+            batch,
+            scaler,
+            t_ctrl: cfg.t_ctrl.max(1),
+            windows: 0,
+        }
+    }
+
+    /// The decision bundle for one optimizer step at `step`.
+    pub fn plan_step(&self, step: u64) -> StepPlan {
+        StepPlan {
+            batch_size: self.batch.current(),
+            codes: self.codes(),
+            lr_scales: self.lr_scales(),
+            loss_scale: self.loss_scale(),
+            curvature_due: self.curvature_due(step),
+        }
+    }
+
+    /// Is the memory-elastic batch path active (vs the paper's static
+    /// baselines, which keep B fixed and simply OOM)?
+    pub fn batch_active(&self) -> bool {
+        self.batch.elastic()
+    }
+
+    /// Is the curvature probe path active? (Gates the probe's memory
+    /// accounting in the fit predictor.)
+    pub fn curvature_active(&self) -> bool {
+        self.curvature.active()
+    }
+
+    /// Per-step ingest: gradient variance + overflow flag from the train
+    /// graph. O(L); runs every step.
+    pub fn observe_step(&mut self, grad_var: &[f32], overflow: bool) {
+        self.precision.observe(grad_var);
+        // The scaler only matters while FP16 layers exist: BF16 shares
+        // FP32's exponent range, so its overflow-free steps must not
+        // grow the scale — a BF16-only run would otherwise ratchet the
+        // scale to the cap while `loss_scale()` feeds 1.0 to the graph,
+        // and a later FP16 demotion would inherit that absurd scale and
+        // churn overflows until it halves back down. (The scaler itself
+        // additionally clamps to [1, 65536].)
+        if self.has_fp16_layers() {
+            self.scaler.update(overflow);
+        }
+    }
+
+    fn has_fp16_layers(&self) -> bool {
+        self.precision.codes().contains(&FP16)
+    }
+
+    /// Should the trainer run a curvature probe at this step?
+    pub fn curvature_due(&self, step: u64) -> bool {
+        self.curvature.due(step)
+    }
+
+    /// Ingest probe results; returns layers whose probe vectors must be
+    /// reset (non-finite λ).
+    pub fn observe_curvature(&mut self, lambdas: &[f32]) -> Vec<usize> {
+        self.curvature.observe(lambdas)
+    }
+
+    /// An actual (simulated or real) OOM happened at `step`: the
+    /// elastic policy sheds one bucket immediately; static baselines
+    /// hold (and a real run would have crashed). True if B moved.
+    pub fn oom_event(&mut self, step: u64) -> bool {
+        self.batch.force_shrink(step)
+    }
+
+    /// Is `step` a control-window boundary (§3.4 cadence)?
+    pub fn window_due(&self, step: u64) -> bool {
+        step > 0 && step % self.t_ctrl == 0
+    }
+
+    /// One §3.4 control window. `mem_used`/`mem_max` from the memory
+    /// monitor; `fits(b)` is the predictive OOM check for a candidate
+    /// batch size *under the current precision codes*.
+    pub fn control_window<F: FnMut(usize) -> bool>(
+        &mut self,
+        step: u64,
+        mem_used: f64,
+        mem_max: f64,
+        mut fits: F,
+    ) -> ControlDecision {
+        self.windows += 1;
+
+        // (2) precision from variance; (3) promotion from curvature.
+        // Promotions only flow when the precision policy is adaptive —
+        // a pinned policy's codes are part of the method definition.
+        let mut promotions = Vec::new();
+        let mut precision_changed = false;
+        if self.precision.adaptive() {
+            precision_changed = self.precision.control_window();
+            promotions = self.curvature.promotions();
+            for &l in &promotions {
+                self.precision.promote(l);
+                precision_changed = true;
+            }
+        }
+
+        // (4) batch from memory.
+        let batch_move = self.batch.update(step, mem_used, mem_max, &mut fits);
+
+        ControlDecision {
+            step,
+            precision_changed,
+            promotions,
+            batch_move,
+            batch_size: self.batch.current(),
+            loss_scale: self.scaler.scale(),
+        }
+    }
+
+    /// The per-layer precision codes fed to the train executable.
+    pub fn codes(&self) -> Vec<i32> {
+        self.precision.codes().to_vec()
+    }
+
+    /// Per-layer LR scales; all-ones unless curvature is active+warm.
+    pub fn lr_scales(&self) -> Vec<f32> {
+        self.curvature.lr_scales(self.precision.num_layers())
+    }
+
+    /// The loss scale fed to the train executable. FP16 layers need a
+    /// real scale; BF16/FP32-only runs use whatever the scaler holds
+    /// (the graph divides it back out, so it is value-neutral).
+    pub fn loss_scale(&self) -> f32 {
+        if self.has_fp16_layers() {
+            self.scaler.scale()
+        } else {
+            1.0
+        }
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch.current()
+    }
+
+    pub fn windows(&self) -> u64 {
+        self.windows
+    }
+
+    /// Per-policy decision counters (controller-overhead telemetry).
+    pub fn counts(&self) -> PolicyCounts {
+        PolicyCounts {
+            windows: self.windows,
+            precision_transitions: self.precision.transitions(),
+            batch_decisions: self.batch.decisions(),
+            curv_firings: self.curvature.firings(),
+            scaler_overflows: self.scaler.overflows(),
+        }
+    }
+
+    /// Serialize every policy's state for checkpointing, namespaced
+    /// per policy (`policy/<name>/…`), so a resumed run continues
+    /// exactly where the saved one stopped (precision codes + variance
+    /// EMAs, curvature EMAs, loss-scaler value, batch-ladder position
+    /// and cooldown anchor).
+    pub fn export_state(&self) -> Vec<(String, Vec<f64>)> {
+        let mut out = vec![("policy/plane/windows".to_string(), vec![self.windows as f64])];
+        out.extend(self.precision.export_state());
+        out.extend(self.curvature.export_state());
+        out.extend(self.batch.export_state());
+        out.extend(self.scaler.export_state());
+        out
+    }
+
+    /// Restore state written by [`Self::export_state`], or by the
+    /// pre-policy controller (legacy un-namespaced keys). The composed
+    /// policies stay authoritative over what is state vs definition: a
+    /// pinned precision policy keeps its pin (it only validates
+    /// geometry), a fixed batch policy ignores saved ladder positions —
+    /// exactly as the pre-policy controller re-applied pins after
+    /// import and skipped the batch import when the elastic path was
+    /// off.
+    pub fn import_state(&mut self, kv: &[(String, Vec<f64>)]) -> anyhow::Result<()> {
+        if let Some(v) = ckpt_lookup_opt(kv, &["policy/plane/windows", "controller/windows"])
+        {
+            anyhow::ensure!(v.len() == 1, "plane windows arity");
+            self.windows = v[0] as u64;
+        }
+        self.precision.import_state(kv)?;
+        self.curvature.import_state(kv)?;
+        self.batch.import_state(kv)?;
+        self.scaler.import_state(kv)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::LayerSpec;
+    use std::collections::BTreeMap;
+
+    fn entry(num_layers: usize) -> ModelEntry {
+        ModelEntry {
+            key: "toy_c10".into(),
+            model: "toy".into(),
+            num_classes: 10,
+            num_layers,
+            param_count: 0,
+            layers: (0..num_layers)
+                .map(|i| LayerSpec {
+                    name: format!("l{i}"),
+                    kind: "conv".into(),
+                    param_elems: 1000,
+                    act_elems: 100,
+                    flops: 10_000,
+                })
+                .collect(),
+            params: vec![],
+            nodes: vec![],
+            state_shapes: vec![],
+            train_buckets: vec![16, 32, 64, 96, 128],
+            eval_buckets: vec![128],
+            curv_batch: 32,
+            artifacts: BTreeMap::new(),
+        }
+    }
+
+    fn cfg(method: Method) -> Config {
+        let mut c = Config::default();
+        c.method = method;
+        c.t_ctrl = 10;
+        c.t_curv = 20;
+        c.auto_threshold = false;
+        c.tau_low = 1e-6;
+        c.tau_high = 1e-3;
+        c.batch_cooldown = 0;
+        c
+    }
+
+    #[test]
+    fn fp32_baseline_is_static() {
+        let mut ctl = ControlPlane::new(&cfg(Method::Fp32), &entry(3));
+        assert_eq!(ctl.codes(), vec![FP32, FP32, FP32]);
+        assert!(!ctl.curvature_due(200));
+        ctl.observe_step(&[1e-9, 1e-9, 1e-9], false);
+        let d = ctl.control_window(10, 0.1, 1.0, |_| true);
+        assert!(!d.precision_changed);
+        assert_eq!(d.batch_move, BatchMove::Hold);
+        assert_eq!(ctl.loss_scale(), 1.0);
+        assert_eq!(ctl.lr_scales(), vec![1.0; 3]);
+    }
+
+    #[test]
+    fn amp_static_is_uniform_bf16_fixed_batch() {
+        let mut ctl = ControlPlane::new(&cfg(Method::AmpStatic), &entry(2));
+        assert_eq!(ctl.codes(), vec![BF16, BF16]);
+        for s in 1..=50 {
+            ctl.observe_step(&[1e-9, 1.0], false);
+            if ctl.window_due(s) {
+                ctl.control_window(s, 0.1, 1.0, |_| true);
+            }
+        }
+        assert_eq!(ctl.codes(), vec![BF16, BF16], "static policy never moves");
+        assert_eq!(ctl.batch_size(), 96);
+    }
+
+    #[test]
+    fn tri_accel_adapts_precision_per_layer() {
+        let mut ctl = ControlPlane::new(&cfg(Method::TriAccel), &entry(2));
+        for s in 1..=60 {
+            ctl.observe_step(&[1e-9, 1.0], false);
+            if ctl.window_due(s) {
+                ctl.control_window(s, 0.8, 1.0, |_| true);
+            }
+        }
+        assert_eq!(ctl.codes(), vec![FP16, FP32], "low-var down, high-var up");
+    }
+
+    #[test]
+    fn tri_accel_grows_batch_when_memory_free() {
+        let mut ctl = ControlPlane::new(&cfg(Method::TriAccel), &entry(1));
+        assert_eq!(ctl.batch_size(), 96);
+        let d = ctl.control_window(10, 0.2, 1.0, |_| true);
+        assert_eq!(d.batch_move, BatchMove::Grow);
+        assert_eq!(ctl.batch_size(), 128);
+    }
+
+    #[test]
+    fn ablation_flags_gate_components() {
+        let mut c = cfg(Method::TriAccel);
+        c.ablation.dynamic_precision = false;
+        let mut ctl = ControlPlane::new(&c, &entry(2));
+        for s in 1..=60 {
+            ctl.observe_step(&[1e-9, 1.0], false);
+            if ctl.window_due(s) {
+                ctl.control_window(s, 0.2, 1.0, |_| true);
+            }
+        }
+        assert_eq!(ctl.codes(), vec![BF16, BF16], "precision off → pinned");
+        assert_eq!(ctl.batch_size(), 128, "batch still elastic");
+
+        let mut c2 = cfg(Method::TriAccel);
+        c2.ablation.dynamic_batch = false;
+        let mut ctl2 = ControlPlane::new(&c2, &entry(2));
+        let d = ctl2.control_window(10, 0.1, 1.0, |_| true);
+        assert_eq!(d.batch_move, BatchMove::Hold, "batch off → fixed");
+    }
+
+    #[test]
+    fn curvature_promotion_flows_into_precision() {
+        let mut c = cfg(Method::TriAccel);
+        c.tau_curv = 5.0;
+        c.curv_warmup = 1;
+        let mut ctl = ControlPlane::new(&c, &entry(2));
+        // Drive both layers to FP16 first.
+        for s in 1..=40 {
+            ctl.observe_step(&[1e-9, 1e-9], false);
+            if ctl.window_due(s) {
+                ctl.control_window(s, 0.8, 1.0, |_| true);
+            }
+        }
+        assert_eq!(ctl.codes(), vec![FP16, FP16]);
+        assert!(ctl.curvature_due(40), "t_curv=20 divides 40");
+        ctl.observe_curvature(&[0.1, 50.0]);
+        let d = ctl.control_window(50, 0.8, 1.0, |_| true);
+        assert_eq!(d.promotions, vec![1]);
+        assert_eq!(ctl.codes()[1], FP32, "steep layer promoted");
+        assert_eq!(ctl.codes()[0], FP16, "flat layer untouched");
+    }
+
+    #[test]
+    fn promotions_do_not_reach_pinned_precision() {
+        // Curvature on, dynamic precision off: the probe path runs (LR
+        // scales move) but the pinned codes must not — the pre-policy
+        // controller gated the promotion flow on the adaptive path.
+        let mut c = cfg(Method::TriAccel);
+        c.ablation.dynamic_precision = false;
+        c.tau_curv = 5.0;
+        c.curv_warmup = 1;
+        let mut ctl = ControlPlane::new(&c, &entry(2));
+        ctl.observe_curvature(&[60.0, 60.0]);
+        let d = ctl.control_window(10, 0.8, 1.0, |_| true);
+        assert!(d.promotions.is_empty(), "pinned policy reports no promotions");
+        assert_eq!(ctl.codes(), vec![BF16, BF16]);
+        assert!(ctl.lr_scales().iter().all(|&s| s < 1.0), "curvature still scales LR");
+    }
+
+    #[test]
+    fn loss_scale_only_applies_with_fp16_layers() {
+        let ctl = ControlPlane::new(&cfg(Method::AmpStatic), &entry(1));
+        // BF16-only: graph receives neutral scale.
+        assert_eq!(ctl.loss_scale(), 1.0);
+        let mut c = cfg(Method::TriAccel);
+        c.init_loss_scale = 512.0;
+        let mut ctl2 = ControlPlane::new(&c, &entry(1));
+        for s in 1..=30 {
+            ctl2.observe_step(&[1e-9], false);
+            if ctl2.window_due(s) {
+                ctl2.control_window(s, 0.8, 1.0, |_| true);
+            }
+        }
+        assert_eq!(ctl2.codes(), vec![FP16]);
+        assert_eq!(ctl2.loss_scale(), 512.0);
+        // Overflow halves it.
+        ctl2.observe_step(&[1e-9], true);
+        assert_eq!(ctl2.loss_scale(), 256.0);
+    }
+
+    #[test]
+    fn bf16_only_run_never_moves_the_scale() {
+        // The satellite bug: BF16 layers used to count as "half", so a
+        // BF16-only run doubled the scale every growth interval while
+        // feeding 1.0 to the graph — a later FP16 demotion then started
+        // at an absurd scale. Scaler updates are now FP16-gated.
+        let mut c = cfg(Method::AmpStatic);
+        c.loss_scale_growth_interval = 2;
+        c.init_loss_scale = 1024.0;
+        let mut ctl = ControlPlane::new(&c, &entry(2));
+        for _ in 0..50 {
+            ctl.observe_step(&[1e-9, 1e-9], false);
+        }
+        assert_eq!(ctl.scaler.scale(), 1024.0, "BF16-only must not grow the scale");
+        assert_eq!(ctl.loss_scale(), 1.0);
+    }
+
+    #[test]
+    fn fp16_layers_drive_the_scaler() {
+        let mut c = cfg(Method::TriAccel);
+        c.loss_scale_growth_interval = 3;
+        c.init_loss_scale = 512.0;
+        let mut ctl = ControlPlane::new(&c, &entry(1));
+        // Drive the single layer to FP16.
+        for s in 1..=30 {
+            ctl.observe_step(&[1e-9], false);
+            if ctl.window_due(s) {
+                ctl.control_window(s, 0.8, 1.0, |_| true);
+            }
+        }
+        assert_eq!(ctl.codes(), vec![FP16]);
+        let s0 = ctl.scaler.scale();
+        for _ in 0..3 {
+            ctl.observe_step(&[1e-9], false);
+        }
+        assert_eq!(ctl.scaler.scale(), s0 * 2.0, "clean FP16 steps grow the scale");
+        assert!(ctl.scaler.scale() <= 65536.0);
+    }
+
+    #[test]
+    fn pinned_fp16_composition_drives_the_scaler_from_step_one() {
+        // The amp_dynamic registry method: uniform FP16, loss-scale
+        // driven. No adaptation phase — the scaler is live immediately.
+        let mut c = cfg(Method::AmpStatic);
+        c.pin_override = Some(FP16);
+        c.init_loss_scale = 1024.0;
+        c.loss_scale_growth_interval = 4;
+        let mut ctl = ControlPlane::new(&c, &entry(2));
+        assert_eq!(ctl.codes(), vec![FP16, FP16]);
+        assert_eq!(ctl.loss_scale(), 1024.0);
+        ctl.observe_step(&[1e-9, 1e-9], true);
+        assert_eq!(ctl.loss_scale(), 512.0, "overflow halves the live scale");
+        for _ in 0..4 {
+            ctl.observe_step(&[1e-9, 1e-9], false);
+        }
+        assert_eq!(ctl.loss_scale(), 1024.0, "clean streak doubles it back");
+        assert_eq!(ctl.batch_size(), 96, "batch stays fixed");
+    }
+
+    #[test]
+    fn plan_step_matches_the_piecewise_getters() {
+        let mut ctl = ControlPlane::new(&cfg(Method::TriAccel), &entry(2));
+        for s in 1..=20 {
+            ctl.observe_step(&[1e-9, 1.0], false);
+            if ctl.window_due(s) {
+                ctl.control_window(s, 0.2, 1.0, |_| true);
+            }
+        }
+        let plan = ctl.plan_step(20);
+        assert_eq!(plan.batch_size, ctl.batch_size());
+        assert_eq!(plan.codes, ctl.codes());
+        assert_eq!(plan.lr_scales, ctl.lr_scales());
+        assert_eq!(plan.loss_scale, ctl.loss_scale());
+        assert_eq!(plan.curvature_due, ctl.curvature_due(20));
+        assert_eq!(ctl.plan_step(19).curvature_due, ctl.curvature_due(19));
+    }
+
+    #[test]
+    fn controller_state_roundtrips() {
+        let mut c = cfg(Method::TriAccel);
+        c.tau_curv = 5.0;
+        c.curv_warmup = 1;
+        let mut ctl = ControlPlane::new(&c, &entry(3));
+        for s in 1..=45 {
+            ctl.observe_step(&[1e-9, 1e-4, 1.0], s % 13 == 0);
+            if s % 20 == 0 {
+                ctl.observe_curvature(&[0.5, 2.0, 10.0]);
+            }
+            if ctl.window_due(s) {
+                ctl.control_window(s, 0.85, 1.0, |_| true);
+            }
+        }
+        let saved = ctl.export_state();
+        let mut fresh = ControlPlane::new(&c, &entry(3));
+        fresh.import_state(&saved).unwrap();
+        assert_eq!(fresh.codes(), ctl.codes());
+        assert_eq!(fresh.batch_size(), ctl.batch_size());
+        assert_eq!(fresh.scaler.scale(), ctl.scaler.scale());
+        assert_eq!(fresh.lr_scales(), ctl.lr_scales());
+        assert_eq!(fresh.windows(), ctl.windows());
+        assert_eq!(fresh.precision.transitions(), ctl.precision.transitions());
+        // Continued evolution must match step for step.
+        for s in 46..=60 {
+            ctl.observe_step(&[1e-9, 1e-4, 1.0], false);
+            fresh.observe_step(&[1e-9, 1e-4, 1.0], false);
+            if ctl.window_due(s) {
+                let a = ctl.control_window(s, 0.5, 1.0, |_| true);
+                let b = fresh.control_window(s, 0.5, 1.0, |_| true);
+                assert_eq!(a.batch_size, b.batch_size);
+                assert_eq!(a.loss_scale, b.loss_scale);
+            }
+            assert_eq!(ctl.codes(), fresh.codes());
+        }
+        // A mismatched geometry is rejected loudly.
+        let mut wrong = ControlPlane::new(&c, &entry(2));
+        assert!(wrong.import_state(&saved).is_err());
+    }
+
+    #[test]
+    fn legacy_unnamespaced_state_imports() {
+        // A pre-policy (v2 checkpoint) controller section: the same
+        // vectors under the old keys must restore the same plane.
+        let mut c = cfg(Method::TriAccel);
+        c.curv_warmup = 1;
+        let mut ctl = ControlPlane::new(&c, &entry(2));
+        for s in 1..=30 {
+            ctl.observe_step(&[1e-9, 1e-2], false);
+            if s % 10 == 0 {
+                ctl.observe_curvature(&[1.0, 2.0]);
+            }
+            if ctl.window_due(s) {
+                ctl.control_window(s, 0.8, 1.0, |_| true);
+            }
+        }
+        let legacy: Vec<(String, Vec<f64>)> = ctl
+            .export_state()
+            .into_iter()
+            .map(|(k, v)| {
+                let k = k
+                    .replace("policy/plane/windows", "controller/windows")
+                    .replace("policy/precision.adaptive/", "precision/")
+                    .replace("policy/curvature.amortized/", "curvature/")
+                    .replace("policy/batch.elastic/state", "batch/state")
+                    .replace("policy/scaler/state", "scaler/state");
+                (k, v)
+            })
+            .collect();
+        let mut fresh = ControlPlane::new(&c, &entry(2));
+        fresh.import_state(&legacy).unwrap();
+        assert_eq!(fresh.codes(), ctl.codes());
+        assert_eq!(fresh.batch_size(), ctl.batch_size());
+        assert_eq!(fresh.windows(), ctl.windows());
+        assert_eq!(fresh.scaler.scale(), ctl.scaler.scale());
+        assert_eq!(fresh.lr_scales(), ctl.lr_scales());
+    }
+
+    #[test]
+    fn counts_track_policy_decisions() {
+        let mut ctl = ControlPlane::new(&cfg(Method::TriAccel), &entry(2));
+        for s in 1..=40 {
+            ctl.observe_step(&[1e-9, 1.0], false);
+            if ctl.window_due(s) {
+                ctl.control_window(s, 0.2, 1.0, |_| true);
+            }
+        }
+        let c = ctl.counts();
+        assert_eq!(c.windows, 4);
+        assert!(c.precision_transitions > 0, "codes moved");
+        assert!(c.batch_decisions > 0, "batch grew");
+        // Static baseline: everything zero except windows.
+        let mut base = ControlPlane::new(&cfg(Method::Fp32), &entry(2));
+        base.control_window(10, 0.2, 1.0, |_| true);
+        let b = base.counts();
+        assert_eq!(b.windows, 1);
+        assert_eq!(b.precision_transitions, 0);
+        assert_eq!(b.batch_decisions, 0);
+        assert_eq!(b.curv_firings, 0);
+    }
+
+    #[test]
+    fn window_cadence() {
+        let ctl = ControlPlane::new(&cfg(Method::TriAccel), &entry(1));
+        assert!(!ctl.window_due(0));
+        assert!(ctl.window_due(10));
+        assert!(!ctl.window_due(15));
+        assert!(ctl.window_due(20));
+    }
+}

@@ -28,9 +28,16 @@
 //! Curvature promotion (§3.2 "precision promotion") enters through
 //! [`PrecisionController::promote`]: promoted layers are pinned to FP32
 //! for a configurable number of windows regardless of variance.
+//!
+//! Two [`PrecisionPolicy`](super::PrecisionPolicy) impls live here:
+//! [`PrecisionController`] (the adaptive rule above) and
+//! [`PinnedPrecision`] (a constant code vector — the FP32 / static-AMP
+//! baselines and the precision-off ablation).
 
 use crate::manifest::{BF16, FP16, FP32};
 use crate::util::stats::Ema;
+
+use super::{ckpt_lookup, ckpt_lookup_opt, PrecisionPolicy};
 
 /// Relative dead-band applied around τ when deciding to *leave* the
 /// current precision (enter thresholds are the paper's exact rule).
@@ -236,12 +243,12 @@ impl PrecisionController {
             steps.push(s as f64);
         }
         vec![
-            ("precision/codes".into(), self.codes.iter().map(|&c| c as f64).collect()),
-            ("precision/var_values".into(), vals),
-            ("precision/var_steps".into(), steps),
-            ("precision/promoted".into(), self.promoted.iter().map(|&p| p as f64).collect()),
+            (key("codes"), self.codes.iter().map(|&c| c as f64).collect()),
+            (key("var_values"), vals),
+            (key("var_steps"), steps),
+            (key("promoted"), self.promoted.iter().map(|&p| p as f64).collect()),
             (
-                "precision/meta".into(),
+                key("meta"),
                 vec![
                     self.tau_low,
                     self.tau_high,
@@ -252,14 +259,15 @@ impl PrecisionController {
         ]
     }
 
-    /// Restore state written by [`Self::export_state`].
+    /// Restore state written by [`Self::export_state`] (or the legacy
+    /// `precision/…` keys of pre-policy checkpoints).
     pub fn import_state(&mut self, kv: &[(String, Vec<f64>)]) -> anyhow::Result<()> {
         let n = self.vars.len();
-        let codes = super::ckpt_lookup(kv, "precision/codes")?;
-        let vals = super::ckpt_lookup(kv, "precision/var_values")?;
-        let steps = super::ckpt_lookup(kv, "precision/var_steps")?;
-        let promoted = super::ckpt_lookup(kv, "precision/promoted")?;
-        let meta = super::ckpt_lookup(kv, "precision/meta")?;
+        let codes = ckpt_lookup(kv, &[&key("codes"), "precision/codes"])?;
+        let vals = ckpt_lookup(kv, &[&key("var_values"), "precision/var_values"])?;
+        let steps = ckpt_lookup(kv, &[&key("var_steps"), "precision/var_steps"])?;
+        let promoted = ckpt_lookup(kv, &[&key("promoted"), "precision/promoted"])?;
+        let meta = ckpt_lookup(kv, &[&key("meta"), "precision/meta"])?;
         anyhow::ensure!(
             codes.len() == n && vals.len() == n && steps.len() == n && promoted.len() == n,
             "precision state arity mismatch ({} layers)",
@@ -284,6 +292,134 @@ impl PrecisionController {
         self.tau_high = meta[1];
         self.calibrated = meta[2] > 0.5;
         self.transitions = meta[3] as u64;
+        Ok(())
+    }
+}
+
+const NAME: &str = "precision.adaptive";
+
+fn key(field: &str) -> String {
+    format!("policy/{NAME}/{field}")
+}
+
+impl PrecisionPolicy for PrecisionController {
+    fn name(&self) -> &'static str {
+        NAME
+    }
+
+    fn observe(&mut self, grad_var: &[f32]) {
+        PrecisionController::observe(self, grad_var)
+    }
+
+    fn control_window(&mut self) -> bool {
+        PrecisionController::control_window(self)
+    }
+
+    fn promote(&mut self, l: usize) -> bool {
+        PrecisionController::promote(self, l);
+        true
+    }
+
+    fn adaptive(&self) -> bool {
+        true
+    }
+
+    fn codes(&self) -> &[i32] {
+        PrecisionController::codes(self)
+    }
+
+    fn num_layers(&self) -> usize {
+        PrecisionController::num_layers(self)
+    }
+
+    fn transitions(&self) -> u64 {
+        PrecisionController::transitions(self)
+    }
+
+    fn variances(&self) -> Vec<f64> {
+        PrecisionController::variances(self)
+    }
+
+    fn thresholds(&self) -> Option<(f64, f64)> {
+        Some(PrecisionController::thresholds(self))
+    }
+
+    fn export_state(&self) -> Vec<(String, Vec<f64>)> {
+        PrecisionController::export_state(self)
+    }
+
+    fn import_state(&mut self, kv: &[(String, Vec<f64>)]) -> anyhow::Result<()> {
+        PrecisionController::import_state(self, kv)
+    }
+}
+
+/// Constant precision: the FP32 baseline, static AMP, and the
+/// precision-off ablation. Observations are ignored; promotions are
+/// refused (the plane reports none, matching the pre-policy
+/// controller, whose promotion path was gated on dynamic precision).
+pub struct PinnedPrecision {
+    codes: Vec<i32>,
+}
+
+impl PinnedPrecision {
+    pub fn new(num_layers: usize, code: i32) -> PinnedPrecision {
+        assert!([FP16, BF16, FP32].contains(&code), "invalid pin code {code}");
+        PinnedPrecision { codes: vec![code; num_layers] }
+    }
+}
+
+impl PrecisionPolicy for PinnedPrecision {
+    fn name(&self) -> &'static str {
+        "precision.pinned"
+    }
+
+    fn observe(&mut self, _grad_var: &[f32]) {}
+
+    fn control_window(&mut self) -> bool {
+        false
+    }
+
+    fn promote(&mut self, _l: usize) -> bool {
+        false
+    }
+
+    fn adaptive(&self) -> bool {
+        false
+    }
+
+    fn codes(&self) -> &[i32] {
+        &self.codes
+    }
+
+    fn num_layers(&self) -> usize {
+        self.codes.len()
+    }
+
+    fn transitions(&self) -> u64 {
+        0
+    }
+
+    fn export_state(&self) -> Vec<(String, Vec<f64>)> {
+        vec![(
+            "policy/precision.pinned/codes".to_string(),
+            self.codes.iter().map(|&c| c as f64).collect(),
+        )]
+    }
+
+    /// Pins are constitutive — set by the method spec, not the saved
+    /// run — so imports only validate geometry when state is present
+    /// (legacy checkpoints from pinned runs carried the full adaptive
+    /// state; its values are irrelevant to a pinned policy).
+    fn import_state(&mut self, kv: &[(String, Vec<f64>)]) -> anyhow::Result<()> {
+        if let Some(codes) =
+            ckpt_lookup_opt(kv, &["policy/precision.pinned/codes", "precision/codes"])
+        {
+            anyhow::ensure!(
+                codes.len() == self.codes.len(),
+                "pinned precision arity mismatch ({} layers)",
+                self.codes.len()
+            );
+        }
         Ok(())
     }
 }
@@ -352,15 +488,16 @@ impl LossScaler {
     /// Serialize (scale, clean-step streak, overflow count).
     pub fn export_state(&self) -> Vec<(String, Vec<f64>)> {
         vec![(
-            "scaler/state".into(),
+            "policy/scaler/state".into(),
             vec![self.scale as f64, self.clean_steps as f64, self.overflows as f64],
         )]
     }
 
-    /// Restore state written by [`Self::export_state`]. The restored
-    /// scale is clamped into the scaler's [min, max] band.
+    /// Restore state written by [`Self::export_state`] (or the legacy
+    /// `scaler/state` key). The restored scale is clamped into the
+    /// scaler's [min, max] band.
     pub fn import_state(&mut self, kv: &[(String, Vec<f64>)]) -> anyhow::Result<()> {
-        let v = super::ckpt_lookup(kv, "scaler/state")?;
+        let v = ckpt_lookup(kv, &["policy/scaler/state", "scaler/state"])?;
         anyhow::ensure!(v.len() == 3, "scaler state arity");
         self.scale = (v[0] as f32).clamp(self.min_scale, self.max_scale);
         self.clean_steps = v[1] as u64;
@@ -523,6 +660,57 @@ mod tests {
         let mut pc = PrecisionController::new(3, cfg());
         pc.pin_all(FP32);
         assert_eq!(pc.codes(), &[FP32, FP32, FP32]);
+    }
+
+    #[test]
+    fn pinned_policy_never_moves() {
+        let mut pp = PinnedPrecision::new(3, BF16);
+        pp.observe(&[1.0, 1.0, 1.0]);
+        assert!(!PrecisionPolicy::control_window(&mut pp));
+        assert!(!PrecisionPolicy::promote(&mut pp, 1));
+        assert_eq!(PrecisionPolicy::codes(&pp), &[BF16, BF16, BF16]);
+        assert!(!pp.adaptive());
+        assert_eq!(PrecisionPolicy::transitions(&pp), 0);
+    }
+
+    #[test]
+    fn pinned_import_validates_arity_only() {
+        let mut pp = PinnedPrecision::new(2, FP32);
+        // Legacy adaptive state from a 2-layer run: accepted, ignored.
+        let kv = vec![("precision/codes".to_string(), vec![0.0, 1.0])];
+        pp.import_state(&kv).unwrap();
+        assert_eq!(PrecisionPolicy::codes(&pp), &[FP32, FP32]);
+        // Wrong geometry is rejected loudly.
+        let bad = vec![("precision/codes".to_string(), vec![0.0, 1.0, 2.0])];
+        assert!(pp.import_state(&bad).is_err());
+        // No state at all is fine (pins are constitutive).
+        pp.import_state(&[]).unwrap();
+    }
+
+    #[test]
+    fn adaptive_state_roundtrips_with_namespaced_keys() {
+        let mut pc = PrecisionController::new(2, cfg());
+        for _ in 0..4 {
+            pc.observe(&[1e-7, 1.0]);
+            pc.control_window();
+        }
+        let saved = PrecisionController::export_state(&pc);
+        assert!(saved.iter().all(|(k, _)| k.starts_with("policy/precision.adaptive/")));
+        let mut fresh = PrecisionController::new(2, cfg());
+        fresh.import_state(&saved).unwrap();
+        assert_eq!(fresh.codes(), pc.codes());
+        assert_eq!(fresh.transitions(), pc.transitions());
+        // Legacy keys import identically.
+        let legacy: Vec<(String, Vec<f64>)> = saved
+            .iter()
+            .map(|(k, v)| {
+                (k.replace("policy/precision.adaptive/", "precision/"), v.clone())
+            })
+            .collect();
+        let mut old = PrecisionController::new(2, cfg());
+        old.import_state(&legacy).unwrap();
+        assert_eq!(old.codes(), pc.codes());
+        assert_eq!(old.variances(), pc.variances());
     }
 
     #[test]

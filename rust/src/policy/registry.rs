@@ -1,0 +1,250 @@
+//! The method registry: named policy compositions resolved at
+//! arg-parse time. The paper's three Table-1 columns are the first
+//! three entries; the rest are compositions the pluggable policy plane
+//! makes cheap to add (the Table-2 ablation rows, a loss-scale-only
+//! AMP, an elasticity-only method for the VRAM-pressure scenarios).
+//!
+//! A spec is declarative: a Table-1 *family* (which names the metrics
+//! row), the §3 ablation toggles, and an optional precision pin. The
+//! plane (`ControlPlane::new`) turns the resolved config into the
+//! policy triple. `registry()` is the single source of truth for
+//! `--method` parsing, `--list-methods`, and checkpoint
+//! method-compatibility keys.
+
+use anyhow::Result;
+
+use crate::config::{Ablation, Config, Method};
+use crate::manifest::{BF16, FP16, FP32};
+
+/// One named method: a policy composition the CLI can select.
+#[derive(Debug, Clone, Copy)]
+pub struct MethodSpec {
+    /// Registry key (`--method <key>`), also the checkpoint method id.
+    pub key: &'static str,
+    /// Accepted alternate spellings.
+    pub aliases: &'static [&'static str],
+    /// Display label (Table-1 style).
+    pub label: &'static str,
+    /// Table-1 family the summary rows file this method under.
+    pub family: Method,
+    pub ablation: Ablation,
+    /// Pinned precision code for the non-adaptive precision policy;
+    /// `None` = the family default (FP32 baseline pins FP32, everything
+    /// else pins BF16 when dynamic precision is off).
+    pub pin: Option<i32>,
+    /// One-line description for `--list-methods`.
+    pub about: &'static str,
+}
+
+/// Every named method, in presentation order.
+pub const REGISTRY: &[MethodSpec] = &[
+    MethodSpec {
+        key: "fp32",
+        aliases: &[],
+        label: "FP32 Baseline",
+        family: Method::Fp32,
+        ablation: Ablation { dynamic_precision: false, dynamic_batch: false, curvature: false },
+        pin: None,
+        about: "FP32 SGD+momentum, fixed batch, no adaptivity",
+    },
+    MethodSpec {
+        key: "amp_static",
+        aliases: &["amp"],
+        label: "AMP (Static)",
+        family: Method::AmpStatic,
+        ablation: Ablation { dynamic_precision: false, dynamic_batch: false, curvature: false },
+        pin: None,
+        about: "uniform BF16 compute, dynamic loss scale, fixed batch",
+    },
+    MethodSpec {
+        key: "tri_accel",
+        aliases: &["tri-accel", "triaccel"],
+        label: "Tri-Accel",
+        family: Method::TriAccel,
+        ablation: Ablation { dynamic_precision: true, dynamic_batch: true, curvature: true },
+        pin: None,
+        about: "full §3.4 loop: adaptive precision × curvature × elastic batch",
+    },
+    MethodSpec {
+        key: "tri_accel_nocurv",
+        aliases: &["tri-accel-nocurv"],
+        label: "Tri-Accel (no curv)",
+        family: Method::TriAccel,
+        ablation: Ablation { dynamic_precision: true, dynamic_batch: true, curvature: false },
+        pin: None,
+        about: "adaptive precision + elastic batch, curvature probes off",
+    },
+    MethodSpec {
+        key: "amp_dynamic",
+        aliases: &["amp-dynamic", "amp_fp16"],
+        label: "AMP (Dynamic)",
+        family: Method::AmpStatic,
+        ablation: Ablation { dynamic_precision: false, dynamic_batch: false, curvature: false },
+        pin: Some(FP16),
+        about: "uniform FP16 compute driven by the dynamic loss scale alone",
+    },
+    MethodSpec {
+        key: "greedy_batch",
+        aliases: &["greedy-batch", "batch_only"],
+        label: "Greedy Batch",
+        family: Method::TriAccel,
+        ablation: Ablation { dynamic_precision: false, dynamic_batch: true, curvature: false },
+        pin: None,
+        about: "elasticity only: pinned BF16, batch follows the VRAM signal",
+    },
+];
+
+/// The registry (presentation order).
+pub fn registry() -> &'static [MethodSpec] {
+    REGISTRY
+}
+
+/// Resolve a CLI name to a spec; unknown names list the full registry.
+pub fn resolve(name: &str) -> Result<&'static MethodSpec> {
+    if let Some(spec) = REGISTRY
+        .iter()
+        .find(|s| s.key == name || s.aliases.contains(&name))
+    {
+        return Ok(spec);
+    }
+    let known: Vec<String> = REGISTRY
+        .iter()
+        .map(|s| {
+            if s.aliases.is_empty() {
+                s.key.to_string()
+            } else {
+                format!("{} ({})", s.key, s.aliases.join(", "))
+            }
+        })
+        .collect();
+    anyhow::bail!(
+        "unknown method `{name}` — registered methods: {}",
+        known.join(", ")
+    )
+}
+
+/// Apply a spec to a config: family, ablation toggles, precision pin.
+pub fn apply(cfg: &mut Config, spec: &MethodSpec) {
+    cfg.method = spec.family;
+    cfg.ablation = spec.ablation;
+    cfg.pin_override = spec.pin;
+}
+
+/// The registry key describing a config's *effective* method — the
+/// composition actually built, after the ablation flags and pin
+/// override (which tests and `--set` mutate freely) are taken into
+/// account. Compositions with no registered name get a synthesized
+/// `tri_accel[p.b.c]`-style key. Used as the checkpoint method id.
+pub fn effective_key(cfg: &Config) -> String {
+    // Compare against the *normalized* composition the plane actually
+    // builds: non-TriAccel families ignore the ablation flags, and an
+    // adaptive-precision composition ignores the pin override.
+    let ablation = match cfg.method {
+        Method::TriAccel => cfg.ablation,
+        _ => Ablation::none(),
+    };
+    let pin_override = if cfg.method == Method::TriAccel && ablation.dynamic_precision {
+        None
+    } else {
+        cfg.pin_override
+    };
+    for s in REGISTRY {
+        if s.family == cfg.method && s.ablation == ablation && s.pin == pin_override {
+            return s.key.to_string();
+        }
+    }
+    let pin = match pin_override {
+        None => "auto".to_string(),
+        Some(c) if c == FP16 => "fp16".into(),
+        Some(c) if c == BF16 => "bf16".into(),
+        Some(c) if c == FP32 => "fp32".into(),
+        Some(c) => format!("code{c}"),
+    };
+    format!(
+        "{}[p{}b{}c{}&pin={pin}]",
+        match cfg.method {
+            Method::Fp32 => "fp32",
+            Method::AmpStatic => "amp_static",
+            Method::TriAccel => "tri_accel",
+        },
+        ablation.dynamic_precision as u8,
+        ablation.dynamic_batch as u8,
+        ablation.curvature as u8,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn legacy_names_resolve_to_legacy_specs() {
+        assert_eq!(resolve("fp32").unwrap().family, Method::Fp32);
+        assert_eq!(resolve("amp").unwrap().key, "amp_static");
+        assert_eq!(resolve("tri-accel").unwrap().key, "tri_accel");
+        assert!(resolve("tri_accel").unwrap().ablation.curvature);
+    }
+
+    #[test]
+    fn unknown_method_lists_registry() {
+        let err = resolve("adam").unwrap_err().to_string();
+        for s in REGISTRY {
+            assert!(err.contains(s.key), "error must list `{}`: {err}", s.key);
+        }
+    }
+
+    #[test]
+    fn keys_and_aliases_are_unique() {
+        let mut seen = std::collections::BTreeSet::new();
+        for s in REGISTRY {
+            assert!(seen.insert(s.key), "duplicate key {}", s.key);
+            for &a in s.aliases {
+                assert!(seen.insert(a), "duplicate alias {a}");
+            }
+        }
+    }
+
+    #[test]
+    fn apply_then_effective_key_roundtrips() {
+        for s in REGISTRY {
+            let mut cfg = Config::default();
+            apply(&mut cfg, s);
+            assert_eq!(effective_key(&cfg), s.key, "spec {} must round-trip", s.key);
+        }
+    }
+
+    #[test]
+    fn legacy_config_paths_map_to_registry_keys() {
+        // Config::cell + ablation mutation — the pre-registry way the
+        // harness builds the Table-2 rows — still lands on named specs.
+        let mut cfg = Config::cell("tiny_cnn_c10", Method::TriAccel, 0);
+        assert_eq!(effective_key(&cfg), "tri_accel");
+        cfg.ablation.curvature = false;
+        assert_eq!(effective_key(&cfg), "tri_accel_nocurv");
+        cfg.ablation.dynamic_precision = false;
+        assert_eq!(effective_key(&cfg), "greedy_batch");
+        // Non-TriAccel families ignore stale ablation flags.
+        let mut amp = Config::cell("tiny_cnn_c10", Method::AmpStatic, 0);
+        amp.ablation = Ablation::full();
+        assert_eq!(effective_key(&amp), "amp_static");
+    }
+
+    #[test]
+    fn adaptive_compositions_ignore_the_pin_override() {
+        // `pin` is documented as inert when dynamic precision is
+        // active; two bit-identical compositions must share a key (a
+        // checkpoint saved without the flag resumes with it set).
+        let mut cfg = Config::cell("tiny_cnn_c10", Method::TriAccel, 0);
+        cfg.pin_override = Some(BF16);
+        assert_eq!(effective_key(&cfg), "tri_accel");
+    }
+
+    #[test]
+    fn unnamed_compositions_get_synthesized_keys() {
+        let mut cfg = Config::cell("tiny_cnn_c10", Method::TriAccel, 0);
+        cfg.ablation =
+            Ablation { dynamic_precision: true, dynamic_batch: false, curvature: true };
+        let key = effective_key(&cfg);
+        assert!(key.starts_with("tri_accel[p1b0c1"), "got {key}");
+    }
+}

@@ -217,6 +217,8 @@ impl<'e> Session<'e> {
         }
         Ok(Checkpoint {
             model_key: self.entry.key.clone(),
+            method_key: String::new(),
+            graph_digest: self.entry.digest(),
             step,
             tensors,
             ctrl: Vec::new(),
@@ -233,6 +235,20 @@ impl<'e> Session<'e> {
             ckpt.model_key,
             self.entry.key
         );
+        // v3 headers carry the graph digest: the same key with a
+        // changed definition (layer table, node graph, buckets) must
+        // fail here, not as a tensor-shape surprise mid-restore.
+        if ckpt.graph_digest != 0 {
+            let ours = self.entry.digest();
+            anyhow::ensure!(
+                ckpt.graph_digest == ours,
+                "checkpoint graph digest {:#018x} != current `{}` definition {:#018x} — \
+                 the model's graph/geometry changed since this checkpoint was written",
+                ckpt.graph_digest,
+                self.entry.key,
+                ours
+            );
+        }
         let vec_for = |t: &crate::checkpoint::Tensor, want: &[usize]| -> Result<Vec<f32>> {
             let dims: Vec<usize> = t.dims.iter().map(|&d| d as usize).collect();
             anyhow::ensure!(

@@ -1,8 +1,16 @@
 //! The trainer: binds the runtime session (any [`crate::runtime::Backend`]:
-//! native reference executor or PJRT artifacts), the Tri-Accel
-//! controller, the VRAM simulator, and the data pipeline into the
-//! paper's training procedure (§4.1–§4.3): SGD+momentum, 5-epoch
-//! warmup + cosine decay, per-epoch test evaluation, 3-axis metrics.
+//! native reference executor or PJRT artifacts), the policy control
+//! plane, the VRAM simulator, and the data pipeline into the paper's
+//! training procedure (§4.1–§4.3): SGD+momentum, 5-epoch warmup +
+//! cosine decay, per-epoch test evaluation, 3-axis metrics.
+//!
+//! The step loop talks to the control plane only through its
+//! observation/decision interface: [`ControlPlane::plan_step`] decides
+//! the step (batch size, codes, LR scales, loss scale, probe cadence),
+//! the trainer feeds back observations (`observe_step`,
+//! `observe_curvature`, `oom_event`), and `control_window` runs on the
+//! `window_due` cadence. The trainer never reaches into an individual
+//! policy.
 //!
 //! One `Trainer::run()` = one Table-1 cell at one seed.
 
@@ -11,11 +19,11 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::config::{Config, Method};
-use crate::coordinator::Controller;
 use crate::data::{auto_source, BatchIter, Dataset, IMG_ELEMS};
 use crate::manifest::FP32;
-use crate::memsim::{MemoryMonitor, SpeedModel, VramSim};
+use crate::memsim::{BudgetTrace, MemoryMonitor, SpeedModel, VramSim};
 use crate::metrics::{efficiency_score, EpochRecord, PrecisionMix, RunMetrics};
+use crate::policy::{registry, ControlPlane};
 use crate::runtime::Engine;
 use crate::runtime::{Batch, Session, StepCtrl};
 use crate::schedule::LrSchedule;
@@ -39,7 +47,7 @@ pub struct RunSummary {
 pub struct Trainer<'e> {
     pub cfg: Config,
     pub session: Session<'e>,
-    pub controller: Controller,
+    pub controller: ControlPlane,
     pub memsim: VramSim,
     pub speed: SpeedModel,
     pub metrics: RunMetrics,
@@ -76,7 +84,7 @@ impl<'e> Trainer<'e> {
         }
         let session = Session::init(engine, &cfg.model_key, cfg.seed as i32)
             .context("initializing session")?;
-        let controller = Controller::new(&cfg, &entry);
+        let controller = ControlPlane::new(&cfg, &entry);
         // Auto budget (paper's "strict single-GPU memory budget", scaled
         // per model): 1.05× the FP32 footprint at the initial batch, so
         // the static baselines just fit and the adaptive method has to
@@ -88,7 +96,11 @@ impl<'e> Trainer<'e> {
             let fp32_codes = vec![crate::manifest::FP32; entry.num_layers];
             probe.usage(cfg.batch_init, &fp32_codes, false).total_gb * 1.05
         };
-        let memsim = VramSim::new(&entry, budget_gb, cfg.mem_noise, cfg.seed);
+        let mut memsim = VramSim::new(&entry, budget_gb, cfg.mem_noise, cfg.seed);
+        // VRAM-pressure scenarios: a time-varying budget trace moves
+        // MemMax under the controller's feet ("const" = the paper's
+        // fixed strict budget, bit-identical to the untraced path).
+        memsim.set_trace(BudgetTrace::parse(&cfg.mem_trace).context("mem_trace")?);
         let speed = SpeedModel::t4_like();
         let train_ds = auto_source(entry.num_classes, true, cfg.train_examples, cfg.seed);
         // Same seed as the train source: the class prototypes define the
@@ -127,7 +139,13 @@ impl<'e> Trainer<'e> {
     /// One optimizer step, including the paper's control-loop hooks.
     /// Returns (loss, correct, batch size, modeled seconds).
     pub fn step(&mut self) -> Result<(f64, i64, usize, f64)> {
-        let b = self.controller.batch_size();
+        // Advance the budget trace before any memory accounting: the
+        // pressure scenarios move MemMax per step.
+        self.memsim.set_step(self.global_step);
+        // The decision half of the plane's interface: one bundle holds
+        // everything this step needs.
+        let plan = self.controller.plan_step(self.global_step);
+        let b = plan.batch_size;
         let batch = self.train_iter.next_batch(b)?;
         let mut lr = self.schedule.lr_at(self.global_step);
         if self.cfg.lr_batch_scaling {
@@ -135,14 +153,14 @@ impl<'e> Trainer<'e> {
             // as the elastic controller moves B(t).
             lr *= b as f32 / self.cfg.batch_init as f32;
         }
+        let curv_due = plan.curvature_due;
         let ctrl = StepCtrl {
-            codes: self.controller.codes(),
-            lr_scales: self.controller.lr_scales(),
+            codes: plan.codes,
+            lr_scales: plan.lr_scales,
             lr,
-            loss_scale: self.controller.loss_scale(),
+            loss_scale: plan.loss_scale,
             weight_decay: self.cfg.weight_decay,
         };
-        let curv_due = self.controller.curvature_due(self.global_step);
         let out = self.session.train_step(&batch, &ctrl)?;
         self.controller.observe_step(&out.grad_var, out.overflow);
         if out.overflow {
@@ -155,12 +173,10 @@ impl<'e> Trainer<'e> {
         let usage = self.memsim.usage(b, &ctrl.codes, false);
         if usage.total_gb > self.memsim.mem_max_gb() {
             // Simulated OOM — the paper's motivating failure mode. The
-            // elastic controller reacts with an emergency shrink; the
+            // elastic policy reacts with an emergency shrink; the
             // static baselines keep their batch (and the OOM counter
             // records that a real run would have crashed here).
-            if self.controller.batch_active() {
-                self.controller.batch.force_shrink(self.global_step);
-            }
+            self.controller.oom_event(self.global_step);
             self.metrics.oom_events += 1;
         }
 
@@ -193,7 +209,7 @@ impl<'e> Trainer<'e> {
             // absorb a curvature-probe transient — otherwise the grown
             // batch immediately shrinks back and the spike sets the peak.
             let rho_high = self.cfg.rho_high;
-            let curv_on = self.controller.ablation.curvature;
+            let curv_on = self.controller.curvature_active();
             let d = self.controller.control_window(self.global_step, used, max, |nb| {
                 memsim.would_fit_within(nb, &codes, curv_on, rho_high)
             });
@@ -258,7 +274,10 @@ impl<'e> Trainer<'e> {
         };
         self.metrics.epochs.push(rec.clone());
         self.train_iter.next_epoch();
-        self.metrics.precision_transitions = self.controller.precision.transitions();
+        let counts = self.controller.counts();
+        self.metrics.precision_transitions = counts.precision_transitions;
+        self.metrics.ctrl_windows = counts.windows;
+        self.metrics.batch_decisions = counts.batch_decisions;
         Ok(rec)
     }
 
@@ -357,10 +376,13 @@ impl<'e> Trainer<'e> {
     }
 
     /// Save the full optimizer state (params/momentum/BN state, live
-    /// curvature probes, Tri-Accel controller state, the data-stream
-    /// position, and the step).
+    /// curvature probes, control-plane policy state, the data-stream
+    /// position, and the step). The v3 header records the effective
+    /// method key and the model-graph digest for resume-compatibility
+    /// checks.
     pub fn save_checkpoint(&self, path: &std::path::Path) -> Result<()> {
         let mut ckpt = self.session.export(self.global_step)?;
+        ckpt.method_key = registry::effective_key(&self.cfg);
         ckpt.ctrl = self.controller.export_state();
         let (epoch, pos) = self.train_iter.stream_state();
         ckpt.ctrl.push(("trainer/stream".into(), vec![epoch as f64, pos as f64]));
@@ -382,6 +404,19 @@ impl<'e> Trainer<'e> {
     /// batch decisions may diverge within the noise band.
     pub fn resume_from(&mut self, path: &std::path::Path) -> Result<u64> {
         let ckpt = crate::checkpoint::Checkpoint::load(path)?;
+        // v3 headers carry the method the run trained with: policy
+        // state is not transferable across methods, so a mismatch is
+        // an error here, not a silently reset controller downstream.
+        if !ckpt.method_key.is_empty() {
+            let ours = registry::effective_key(&self.cfg);
+            anyhow::ensure!(
+                ckpt.method_key == ours,
+                "checkpoint was trained with method `{}`, this run uses `{ours}` — \
+                 resume with --method {} or start fresh",
+                ckpt.method_key,
+                ckpt.method_key
+            );
+        }
         let step = self.session.restore(&ckpt)?;
         if !ckpt.ctrl.is_empty() {
             self.controller

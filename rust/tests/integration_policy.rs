@@ -1,0 +1,213 @@
+//! End-to-end coverage of the policy subsystem: registry methods
+//! beyond the paper's three columns run through the unmodified
+//! trainer, the VRAM-pressure scenario separates static from elastic
+//! methods, and the v3 checkpoint compatibility header rejects
+//! method/graph mismatches with clear errors.
+
+use tri_accel::config::Config;
+use tri_accel::harness;
+use tri_accel::manifest::{BF16, FP16};
+use tri_accel::memsim::VramSim;
+use tri_accel::policy::registry;
+use tri_accel::runtime::Engine;
+use tri_accel::train::Trainer;
+
+fn engine() -> Engine {
+    Engine::native()
+}
+
+/// Quick config for a named registry method.
+fn quick_cfg(method_key: &str, seed: u64) -> Config {
+    let spec = registry::resolve(method_key).unwrap();
+    let mut cfg = Config::cell("tiny_cnn_c10", spec.family, seed);
+    registry::apply(&mut cfg, spec);
+    cfg.epochs = 1;
+    cfg.steps_per_epoch = Some(25);
+    cfg.train_examples = 2048;
+    cfg.eval_examples = 256;
+    cfg.batch_init = 16;
+    cfg.t_ctrl = 5;
+    cfg.t_curv = 10;
+    cfg.curv_warmup = 1;
+    cfg.batch_cooldown = 5;
+    cfg.warmup_epochs = 0;
+    cfg.mem_budget_gb = 0.06;
+    cfg.mem_noise = 0.0;
+    cfg
+}
+
+#[test]
+fn amp_dynamic_trains_uniform_fp16_with_live_scaler() {
+    let e = engine();
+    let mut tr = Trainer::new(&e, quick_cfg("amp_dynamic", 0)).unwrap();
+    let r = tr.run_epoch(0).unwrap();
+    assert!(r.train_loss.is_finite() && r.train_loss > 0.0);
+    assert!(tr.controller.codes().iter().all(|&c| c == FP16), "uniform FP16");
+    assert_eq!(r.mix.fp16, 1.0);
+    // FP16 everywhere ⇒ the loss scale actually reaches the graph.
+    assert!(tr.controller.loss_scale() >= 1.0);
+    assert_eq!(tr.metrics.batch_trace.len(), 1, "batch stays fixed");
+    assert_eq!(tr.metrics.curv_firings, 0, "no curvature policy");
+}
+
+#[test]
+fn greedy_batch_is_elastic_with_pinned_bf16() {
+    let e = engine();
+    let mut cfg = quick_cfg("greedy_batch", 1);
+    cfg.mem_budget_gb = 0.5; // roomy: the ladder should climb
+    cfg.steps_per_epoch = Some(40);
+    cfg.batch_cooldown = 3;
+    let mut tr = Trainer::new(&e, cfg).unwrap();
+    tr.run_epoch(0).unwrap();
+    assert!(tr.controller.codes().iter().all(|&c| c == BF16), "precision pinned");
+    let max_b = tr.metrics.batch_trace.iter().map(|&(_, b)| b).max().unwrap();
+    assert!(max_b > 16, "elastic policy never grew the batch");
+    assert!(tr.metrics.batch_decisions > 0);
+    assert_eq!(tr.metrics.curv_firings, 0);
+}
+
+#[test]
+fn tri_accel_nocurv_adapts_precision_without_probes() {
+    let e = engine();
+    let mut tr = Trainer::new(&e, quick_cfg("tri_accel_nocurv", 2)).unwrap();
+    tr.run_epoch(0).unwrap();
+    assert_eq!(tr.metrics.curv_firings, 0, "curvature off");
+    assert_eq!(tr.metrics.promotions, 0);
+    assert!(tr.controller.lr_scales().iter().all(|&s| s == 1.0), "no λ ⇒ unit scales");
+    assert!(tr.metrics.ctrl_windows > 0, "control windows still run");
+}
+
+#[test]
+fn pressure_sweep_separates_static_from_elastic() {
+    // Calibrate the squeeze from the simulator itself so the scenario
+    // is exact on any geometry: base budget fits B=64 comfortably; the
+    // squeezed budget sits midway between the B=32 and B=64 footprints
+    // (half-precision codes — amp_dynamic and greedy_batch both run
+    // 2-byte compute). A static method must then OOM on every step
+    // after the squeeze; the elastic method sheds buckets and recovers.
+    let e = engine();
+    let entry = e.manifest.model("tiny_cnn_c10").unwrap().clone();
+    let mut sim = VramSim::new(&entry, 1e9, 0.0, 0);
+    let codes = vec![BF16; entry.num_layers];
+    let u64gb = sim.usage(64, &codes, false).total_gb;
+    let u32gb = sim.usage(32, &codes, false).total_gb;
+    let base = u64gb * 1.2;
+    let squeezed = 0.5 * (u32gb + u64gb);
+    let trace = format!("step:{:.8}@10", squeezed / base);
+
+    let tweak = move |cfg: &mut Config| {
+        cfg.epochs = 1;
+        cfg.steps_per_epoch = Some(30);
+        cfg.train_examples = 4096;
+        cfg.eval_examples = 128;
+        cfg.batch_init = 64;
+        cfg.t_ctrl = 3;
+        cfg.t_curv = 0; // no probes: keep the footprint pure
+        cfg.batch_cooldown = 2;
+        cfg.warmup_epochs = 0;
+        cfg.mem_budget_gb = base;
+        cfg.mem_noise = 0.0;
+    };
+    let rows = harness::pressure(
+        &e,
+        "tiny_cnn_c10",
+        &["amp_dynamic", "greedy_batch"],
+        &[0],
+        &trace,
+        &tweak,
+    )
+    .unwrap();
+    assert_eq!(rows.len(), 2);
+    let stat = &rows[0];
+    let elastic = &rows[1];
+    assert_eq!(stat.method_key, "amp_dynamic");
+    assert!(
+        stat.oom_events > 5,
+        "static batch must OOM under the squeeze, got {}",
+        stat.oom_events
+    );
+    assert_eq!(stat.min_batch, 64, "static method never sheds");
+    assert!(elastic.min_batch < 64, "elastic method sheds buckets");
+    assert!(
+        elastic.oom_events < stat.oom_events,
+        "elastic ({}) must OOM less than static ({})",
+        elastic.oom_events,
+        stat.oom_events
+    );
+    assert!(elastic.acc.mean().is_finite());
+}
+
+#[test]
+fn pressure_rejects_bad_trace_and_method() {
+    let e = engine();
+    let tweak = |_: &mut Config| {};
+    assert!(harness::pressure(&e, "tiny_cnn_c10", &["fp32"], &[0], "wobble", &tweak).is_err());
+    let err = harness::pressure(&e, "tiny_cnn_c10", &["sgd"], &[0], "const", &tweak)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("registered methods"), "{err}");
+}
+
+#[test]
+fn resume_rejects_method_mismatch() {
+    let e = engine();
+    let p = std::env::temp_dir()
+        .join(format!("triaccel_policy_method_{}.bin", std::process::id()));
+    let mut cfg = quick_cfg("fp32", 3);
+    cfg.t_curv = 0;
+    let mut tr = Trainer::new(&e, cfg).unwrap();
+    for _ in 0..4 {
+        tr.step().unwrap();
+    }
+    tr.save_checkpoint(&p).unwrap();
+
+    let mut other = Trainer::new(&e, quick_cfg("greedy_batch", 3)).unwrap();
+    let err = other.resume_from(&p).unwrap_err().to_string();
+    assert!(err.contains("trained with method `fp32`"), "{err}");
+    assert!(err.contains("greedy_batch"), "{err}");
+
+    // Same method resumes fine.
+    let mut cfg2 = quick_cfg("fp32", 3);
+    cfg2.t_curv = 0;
+    let mut same = Trainer::new(&e, cfg2).unwrap();
+    assert_eq!(same.resume_from(&p).unwrap(), 4);
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn restore_rejects_graph_digest_mismatch() {
+    let e = engine();
+    let p = std::env::temp_dir()
+        .join(format!("triaccel_policy_digest_{}.bin", std::process::id()));
+    let mut cfg = quick_cfg("fp32", 0);
+    cfg.t_curv = 0;
+    let tr = Trainer::new(&e, cfg).unwrap();
+    tr.save_checkpoint(&p).unwrap();
+    let mut ckpt = tri_accel::checkpoint::Checkpoint::load(&p).unwrap();
+    assert_ne!(ckpt.graph_digest, 0, "v3 checkpoints carry the digest");
+    ckpt.graph_digest ^= 1; // "the model definition changed"
+    let mut cfg2 = quick_cfg("fp32", 0);
+    cfg2.t_curv = 0;
+    let mut tr2 = Trainer::new(&e, cfg2).unwrap();
+    let err = tr2.session.restore(&ckpt).unwrap_err().to_string();
+    assert!(err.contains("graph/geometry changed"), "{err}");
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn trace_plumbs_from_config_into_the_run() {
+    // `mem_trace` on the config reaches the simulator: squeezing the
+    // budget to 1% mid-run must surface as OOM events for a static
+    // method, where the constant trace records none.
+    let e = engine();
+    let run = |trace: &str| {
+        let mut cfg = quick_cfg("amp_static", 0);
+        cfg.steps_per_epoch = Some(12);
+        cfg.mem_trace = trace.to_string();
+        let mut tr = Trainer::new(&e, cfg).unwrap();
+        tr.run_epoch(0).unwrap();
+        tr.metrics.oom_events
+    };
+    assert_eq!(run("const"), 0, "fits the full budget");
+    assert!(run("step:0.01@6") > 0, "squeezed budget must OOM");
+}

@@ -1,0 +1,189 @@
+//! Property tests on the policy control plane (alongside
+//! `prop_coordinator.rs`, which covers the individual state machines):
+//! checkpoint round-trips taken *mid-control-window* must leave every
+//! policy's subsequent decisions bit-identical, for every registry
+//! method, under arbitrary measurement histories.
+
+use tri_accel::config::Config;
+use tri_accel::manifest::{LayerSpec, ModelEntry};
+use tri_accel::policy::{registry, ControlPlane};
+use tri_accel::util::prop::{check, log_uniform, small_usize, uniform};
+use tri_accel::util::rng::Rng;
+
+fn entry(num_layers: usize) -> ModelEntry {
+    ModelEntry {
+        key: "prop_policy".into(),
+        model: "prop_policy".into(),
+        num_classes: 10,
+        num_layers,
+        param_count: 0,
+        layers: (0..num_layers)
+            .map(|i| LayerSpec {
+                name: format!("l{i}"),
+                kind: "conv".into(),
+                param_elems: 100,
+                act_elems: 10,
+                flops: 1000,
+            })
+            .collect(),
+        params: vec![],
+        nodes: vec![],
+        state_shapes: vec![],
+        train_buckets: vec![16, 32, 64, 96, 128],
+        eval_buckets: vec![16],
+        curv_batch: 8,
+        artifacts: Default::default(),
+    }
+}
+
+/// Feed one step of a random measurement stream into a plane —
+/// observations, probes, occasional OOMs, the control window on its
+/// cadence. The stream is a pure function of `rng`, so replaying the
+/// same draws drives two planes identically.
+fn drive(ctl: &mut ControlPlane, step: u64, rng: &mut Rng) {
+    let layers = ctl.codes().len();
+    let vars: Vec<f32> = (0..layers).map(|_| log_uniform(rng, -9.0, 0.0) as f32).collect();
+    ctl.observe_step(&vars, rng.bernoulli(0.08));
+    if ctl.curvature_due(step) {
+        let lams: Vec<f32> =
+            (0..layers).map(|_| log_uniform(rng, -2.0, 3.0) as f32).collect();
+        ctl.observe_curvature(&lams);
+    }
+    if rng.bernoulli(0.05) {
+        ctl.oom_event(step);
+    }
+    if ctl.window_due(step) {
+        let fits = rng.bernoulli(0.7);
+        ctl.control_window(step, uniform(rng, 0.0, 1.2), 1.0, |_| fits);
+    }
+}
+
+fn random_cfg(rng: &mut Rng) -> Config {
+    let specs = registry::registry();
+    let spec = &specs[small_usize(rng, 0, specs.len() - 1)];
+    let mut cfg = Config::default();
+    registry::apply(&mut cfg, spec);
+    cfg.t_ctrl = small_usize(rng, 1, 7) as u64;
+    cfg.t_curv = small_usize(rng, 1, 9) as u64;
+    cfg.curv_warmup = small_usize(rng, 0, 2) as u64;
+    cfg.batch_cooldown = small_usize(rng, 0, 4) as u64;
+    cfg.auto_threshold = rng.bernoulli(0.5);
+    cfg.tau_curv = log_uniform(rng, 0.0, 3.0);
+    cfg
+}
+
+#[test]
+fn prop_mid_window_roundtrip_is_bit_identical() {
+    check("export/import at an arbitrary step is decision-transparent", |rng| {
+        let layers = small_usize(rng, 1, 6);
+        let e = entry(layers);
+        let cfg = random_cfg(rng);
+        let mut live = ControlPlane::new(&cfg, &e);
+
+        // Arbitrary history — deliberately not aligned to t_ctrl, so
+        // the snapshot lands mid-control-window most of the time.
+        let snap_at = small_usize(rng, 1, 60) as u64;
+        for step in 1..=snap_at {
+            drive(&mut live, step, rng);
+        }
+
+        let saved = live.export_state();
+        let mut resumed = ControlPlane::new(&cfg, &e);
+        resumed.import_state(&saved).map_err(|err| format!("import: {err:#}"))?;
+
+        // Continue both under an identical input stream: every decision
+        // surface must match bit for bit, step for step.
+        for step in snap_at + 1..=snap_at + 40 {
+            let vars: Vec<f32> =
+                (0..layers).map(|_| log_uniform(rng, -9.0, 0.0) as f32).collect();
+            let overflow = rng.bernoulli(0.08);
+            live.observe_step(&vars, overflow);
+            resumed.observe_step(&vars, overflow);
+
+            if live.curvature_due(step) != resumed.curvature_due(step) {
+                return Err(format!("step {step}: curvature cadence diverged"));
+            }
+            if live.curvature_due(step) {
+                let lams: Vec<f32> =
+                    (0..layers).map(|_| log_uniform(rng, -2.0, 3.0) as f32).collect();
+                let ra = live.observe_curvature(&lams);
+                let rb = resumed.observe_curvature(&lams);
+                if ra != rb {
+                    return Err(format!("step {step}: probe rejections diverged"));
+                }
+            }
+            if rng.bernoulli(0.05) {
+                let a = live.oom_event(step);
+                let b = resumed.oom_event(step);
+                if a != b {
+                    return Err(format!("step {step}: OOM shed diverged"));
+                }
+            }
+            if live.window_due(step) {
+                let used = uniform(rng, 0.0, 1.2);
+                let fits = rng.bernoulli(0.7);
+                let a = live.control_window(step, used, 1.0, |_| fits);
+                let b = resumed.control_window(step, used, 1.0, |_| fits);
+                if a.batch_move != b.batch_move
+                    || a.batch_size != b.batch_size
+                    || a.promotions != b.promotions
+                    || a.precision_changed != b.precision_changed
+                    || a.loss_scale.to_bits() != b.loss_scale.to_bits()
+                {
+                    return Err(format!("step {step}: window decisions diverged"));
+                }
+            }
+
+            if live.codes() != resumed.codes() {
+                return Err(format!(
+                    "step {step}: codes {:?} vs {:?}",
+                    live.codes(),
+                    resumed.codes()
+                ));
+            }
+            if live.batch_size() != resumed.batch_size() {
+                return Err(format!("step {step}: batch diverged"));
+            }
+            if live.loss_scale().to_bits() != resumed.loss_scale().to_bits() {
+                return Err(format!("step {step}: loss scale diverged"));
+            }
+            let (sa, sb) = (live.lr_scales(), resumed.lr_scales());
+            if sa.iter().map(|v| v.to_bits()).ne(sb.iter().map(|v| v.to_bits())) {
+                return Err(format!("step {step}: lr scales diverged"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_reexport_after_roundtrip_is_stable() {
+    // export → import → export must be a fixed point: nothing about a
+    // plane's checkpointable state is lost or mutated by the trip.
+    check("double export is a fixed point", |rng| {
+        let layers = small_usize(rng, 1, 6);
+        let e = entry(layers);
+        let cfg = random_cfg(rng);
+        let mut live = ControlPlane::new(&cfg, &e);
+        let steps = small_usize(rng, 1, 50) as u64;
+        for step in 1..=steps {
+            drive(&mut live, step, rng);
+        }
+        let first = live.export_state();
+        let mut resumed = ControlPlane::new(&cfg, &e);
+        resumed.import_state(&first).map_err(|err| format!("import: {err:#}"))?;
+        let second = resumed.export_state();
+        if first.len() != second.len() {
+            return Err(format!("entry count {} vs {}", first.len(), second.len()));
+        }
+        for ((ka, va), (kb, vb)) in first.iter().zip(second.iter()) {
+            if ka != kb {
+                return Err(format!("key order changed: {ka} vs {kb}"));
+            }
+            if va.iter().map(|v| v.to_bits()).ne(vb.iter().map(|v| v.to_bits())) {
+                return Err(format!("state `{ka}` not bit-stable"));
+            }
+        }
+        Ok(())
+    });
+}

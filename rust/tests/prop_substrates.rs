@@ -243,6 +243,8 @@ fn prop_checkpoint_roundtrip_any_shapes() {
             .collect();
         let c = Checkpoint {
             model_key: format!("m{}", small_usize(rng, 0, 99)),
+            method_key: format!("meth{}", small_usize(rng, 0, 9)),
+            graph_digest: rng.next_u64(),
             step: rng.next_u64() % 1_000_000,
             tensors,
             ctrl,
@@ -257,6 +259,9 @@ fn prop_checkpoint_roundtrip_any_shapes() {
         std::fs::remove_file(&p).ok();
         if d.model_key != c.model_key || d.step != c.step {
             return Err("header mismatch".into());
+        }
+        if d.method_key != c.method_key || d.graph_digest != c.graph_digest {
+            return Err("compat header mismatch".into());
         }
         for (a, b) in c.tensors.iter().zip(&d.tensors) {
             if a.name != b.name || a.dims != b.dims || a.data != b.data {
