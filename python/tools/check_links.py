@@ -1,0 +1,73 @@
+#!/usr/bin/env python3
+"""Markdown link checker for the docs CI job (stdlib only).
+
+Usage: check_links.py <file-or-dir> [<file-or-dir> ...]
+
+Walks the given markdown files (directories are searched for *.md) and
+verifies that every relative link target exists on disk, resolved
+against the linking file's directory. External schemes (http/https/
+mailto) and pure in-page anchors (#...) are skipped; a `#fragment` on
+a relative link is stripped before the existence check. Exits non-zero
+listing every broken link.
+"""
+
+import os
+import re
+import sys
+
+# [text](target) — ignores images' leading `!` (same target rules) and
+# skips code spans line-wise (good enough for these docs).
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+CODE_FENCE_RE = re.compile(r"^\s*(```|~~~)")
+
+
+def md_files(paths):
+    for p in paths:
+        if os.path.isdir(p):
+            for root, _dirs, names in os.walk(p):
+                for n in sorted(names):
+                    if n.endswith(".md"):
+                        yield os.path.join(root, n)
+        else:
+            yield p
+
+
+def check_file(path):
+    broken = []
+    in_fence = False
+    with open(path, encoding="utf-8") as f:
+        for ln, line in enumerate(f, 1):
+            if CODE_FENCE_RE.match(line):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            for target in LINK_RE.findall(line):
+                if target.startswith(("http://", "https://", "mailto:", "#")):
+                    continue
+                rel = target.split("#", 1)[0]
+                if not rel:
+                    continue
+                resolved = os.path.normpath(os.path.join(os.path.dirname(path), rel))
+                if not os.path.exists(resolved):
+                    broken.append((ln, target, resolved))
+    return broken
+
+
+def main(argv):
+    if len(argv) < 2:
+        print(__doc__)
+        return 2
+    total = 0
+    checked = 0
+    for path in md_files(argv[1:]):
+        checked += 1
+        for ln, target, resolved in check_file(path):
+            print(f"{path}:{ln}: broken link `{target}` -> {resolved}")
+            total += 1
+    print(f"checked {checked} markdown file(s): {total} broken link(s)")
+    return 1 if total else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -53,11 +53,11 @@ pub struct Ablation {
 }
 
 impl Ablation {
-    pub fn full() -> Self {
+    pub const fn full() -> Self {
         Ablation { dynamic_precision: true, dynamic_batch: true, curvature: true }
     }
 
-    pub fn none() -> Self {
+    pub const fn none() -> Self {
         Ablation { dynamic_precision: false, dynamic_batch: false, curvature: false }
     }
 }
@@ -268,6 +268,16 @@ impl Config {
         Ok(())
     }
 
+    /// FNV-1a fingerprint of every field (via the derived `Debug`
+    /// formatting, which is a stable total description of the struct).
+    /// The experiment scheduler keys its grid ledger on this hash (plus
+    /// the model-graph digest and seed), so a changed hyperparameter
+    /// invalidates persisted cell results instead of silently reusing
+    /// them — see `docs/TELEMETRY.md`.
+    pub fn fingerprint(&self) -> u64 {
+        crate::checkpoint::fnv1a(format!("{self:?}").as_bytes())
+    }
+
     pub fn validate(&self) -> Result<()> {
         anyhow::ensure!((0.0..1.0).contains(&self.beta), "beta in [0,1)");
         anyhow::ensure!(self.tau_low <= self.tau_high, "tau_low <= tau_high");
@@ -365,6 +375,18 @@ mod tests {
         c.set("pin", "auto").unwrap();
         assert_eq!(c.pin_override, None);
         assert!(c.set("pin", "int8").is_err());
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_field_sensitive() {
+        let a = Config::default();
+        assert_eq!(a.fingerprint(), Config::default().fingerprint());
+        let mut b = Config::default();
+        b.epochs += 1;
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        let mut c = Config::default();
+        c.seed = 7;
+        assert_ne!(a.fingerprint(), c.fingerprint(), "seed is part of the key");
     }
 
     #[test]

@@ -7,15 +7,172 @@
 //! ordering, memory reductions, ablation progression — is the
 //! reproduction target (repro band 0/5 ⇒ simulated hardware, DESIGN.md
 //! §5).
+//!
+//! The unit of execution is [`run_seed`]: one (model, method, seed)
+//! run producing a [`SeedResult`]. Everything above it — the serial
+//! [`table1`]/[`table2`]/[`pressure`] helpers here and the parallel
+//! [`crate::sched`] grid scheduler — composes seed runs and reduces
+//! them with [`aggregate_cell`]/[`aggregate_pressure`], which sort by
+//! seed before reducing so the aggregate is independent of execution
+//! order (serial, parallel, or resumed-from-ledger).
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::config::{Ablation, Config, Method};
 
 use crate::metrics::efficiency_score;
+use crate::metrics::telemetry::TelemetrySink;
 use crate::runtime::Engine;
 use crate::train::Trainer;
+use crate::util::json::Json;
 use crate::util::stats::Welford;
+
+/// Everything one seed's run contributes to a cell aggregate: the
+/// Table-1 scalars plus the decision/survival counters the pressure
+/// sweep and `BENCH_grid.json` report. This is the value persisted
+/// per job in the scheduler's `ledger.json` (see `docs/TELEMETRY.md`),
+/// so it round-trips through JSON exactly ([`Self::to_json`] /
+/// [`Self::from_json`]; f64 serialization is shortest-roundtrip).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SeedResult {
+    /// The seed this run trained with.
+    pub seed: u64,
+    /// Final test accuracy (%).
+    pub test_acc_pct: f64,
+    /// Wall seconds per epoch (CPU substrate; varies across reruns —
+    /// never rendered into deterministic artifacts).
+    pub wall_s: f64,
+    /// Modeled accelerator seconds per epoch (deterministic).
+    pub modeled_s: f64,
+    /// Peak simulated VRAM (GiB).
+    pub peak_gb: f64,
+    /// §4.2 efficiency score.
+    pub score: f64,
+    /// Simulated OOM events over the run.
+    pub oom_events: u64,
+    /// Batch-policy decisions (moves + vetoes) over the run.
+    pub batch_decisions: u64,
+    /// §3.4 control windows evaluated.
+    pub ctrl_windows: u64,
+    /// Precision-policy layer transitions.
+    pub precision_transitions: u64,
+    /// Curvature probe steps executed.
+    pub curv_firings: u64,
+    /// Smallest batch size the run was squeezed to.
+    pub min_batch: usize,
+}
+
+impl SeedResult {
+    /// Serialize for the scheduler ledger / `run_finished` event.
+    /// The seed is a decimal *string*: u64 seeds above 2^53 would lose
+    /// bits through a JSON number (all other counts here are bounded
+    /// by run length and stay numeric).
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("seed".to_string(), Json::Str(self.seed.to_string()));
+        let mut put = |k: &str, v: f64| {
+            m.insert(k.to_string(), Json::Num(v));
+        };
+        put("test_acc_pct", self.test_acc_pct);
+        put("wall_s", self.wall_s);
+        put("modeled_s", self.modeled_s);
+        put("peak_gb", self.peak_gb);
+        put("score", self.score);
+        put("oom_events", self.oom_events as f64);
+        put("batch_decisions", self.batch_decisions as f64);
+        put("ctrl_windows", self.ctrl_windows as f64);
+        put("precision_transitions", self.precision_transitions as f64);
+        put("curv_firings", self.curv_firings as f64);
+        put("min_batch", self.min_batch as f64);
+        Json::Obj(m)
+    }
+
+    /// Parse a [`Self::to_json`] object (ledger resume path).
+    pub fn from_json(j: &Json) -> Result<SeedResult> {
+        let f = |k: &str| -> Result<f64> {
+            j.req(k)?.as_f64().with_context(|| format!("seed result `{k}` not a number"))
+        };
+        let u = |k: &str| -> Result<u64> {
+            j.req(k)?
+                .as_i64()
+                .and_then(|v| u64::try_from(v).ok())
+                .with_context(|| format!("seed result `{k}` not a count"))
+        };
+        let seed: u64 = j
+            .req("seed")?
+            .as_str()
+            .context("seed result `seed` not a string")?
+            .parse()
+            .context("seed result `seed` not a u64")?;
+        Ok(SeedResult {
+            seed,
+            test_acc_pct: f("test_acc_pct")?,
+            wall_s: f("wall_s")?,
+            modeled_s: f("modeled_s")?,
+            peak_gb: f("peak_gb")?,
+            score: f("score")?,
+            oom_events: u("oom_events")?,
+            batch_decisions: u("batch_decisions")?,
+            ctrl_windows: u("ctrl_windows")?,
+            precision_transitions: u("precision_transitions")?,
+            curv_firings: u("curv_firings")?,
+            min_batch: u("min_batch")? as usize,
+        })
+    }
+}
+
+/// Run one fully-specified config (model/method/seed all inside `cfg`)
+/// and condense it to a [`SeedResult`]. This is the single entry point
+/// both the serial helpers and the parallel scheduler execute, so a
+/// grid cell's numbers cannot depend on which path ran it. An optional
+/// telemetry sink streams the per-step JSONL events.
+pub fn run_seed(
+    engine: &Engine,
+    cfg: Config,
+    telemetry: Option<Box<dyn TelemetrySink>>,
+) -> Result<SeedResult> {
+    let seed = cfg.seed;
+    let mut tr = Trainer::new(engine, cfg)?;
+    if let Some(sink) = telemetry {
+        tr.set_telemetry(sink);
+    }
+    let s = tr.run()?;
+    let min_batch = tr
+        .metrics
+        .batch_trace
+        .iter()
+        .map(|&(_, b)| b)
+        .min()
+        .unwrap_or(0);
+    Ok(SeedResult {
+        seed,
+        test_acc_pct: s.test_acc_pct,
+        wall_s: s.wall_s_per_epoch,
+        modeled_s: s.modeled_s_per_epoch,
+        peak_gb: s.peak_vram_gb,
+        score: s.eff_score,
+        oom_events: tr.metrics.oom_events,
+        batch_decisions: tr.metrics.batch_decisions,
+        ctrl_windows: tr.metrics.ctrl_windows,
+        precision_transitions: tr.metrics.precision_transitions,
+        curv_firings: tr.metrics.curv_firings,
+        min_batch,
+    })
+}
+
+/// Normalize a CLI seed list: sorted ascending and deduplicated.
+///
+/// Every aggregate divides by the number of *runs*, so a duplicated
+/// seed (`--seeds 0,0,1`) used to both waste a run and silently weight
+/// one seed double in the mean±std denominators. Sorting additionally
+/// fixes the reduction order: aggregates are identical however the
+/// seeds were listed.
+pub fn normalize_seeds(seeds: &[u64]) -> Vec<u64> {
+    let mut s = seeds.to_vec();
+    s.sort_unstable();
+    s.dedup();
+    s
+}
 
 /// Aggregate of one (model, method, config) cell over seeds.
 #[derive(Debug, Clone)]
@@ -47,16 +204,31 @@ impl CellResult {
     }
 }
 
-/// Run one cell (fixed model/method/ablation) across `seeds`, applying
-/// `tweak` to each seed's config (epoch budget etc.).
-pub fn run_cell(
-    engine: &Engine,
-    model_key: &str,
-    method: Method,
-    label: &str,
-    seeds: &[u64],
-    tweak: &dyn Fn(&mut Config),
-) -> Result<CellResult> {
+/// Sort per-seed results by seed and reject duplicates — the shared
+/// front half of every cell reduction. Sorting here is what makes the
+/// aggregates *provably* independent of scheduler completion order:
+/// Welford accumulation is order-sensitive in the last float bits, so
+/// every path (serial loop, `--jobs N` pool, ledger resume) reduces in
+/// the same canonical order.
+fn sorted_by_seed(results: &[SeedResult]) -> Result<Vec<SeedResult>> {
+    anyhow::ensure!(!results.is_empty(), "cell aggregation needs at least one seed result");
+    let mut rs = results.to_vec();
+    rs.sort_by_key(|r| r.seed);
+    for w in rs.windows(2) {
+        anyhow::ensure!(
+            w[0].seed != w[1].seed,
+            "duplicate seed {} in cell aggregation (seed lists must be deduplicated)",
+            w[0].seed
+        );
+    }
+    Ok(rs)
+}
+
+/// Reduce per-seed results to one Table-1/2 cell row. Results are
+/// sorted by seed internally (see [`normalize_seeds`] for the CLI-side
+/// dedup), so the output is bit-identical for any input order.
+pub fn aggregate_cell(model_key: &str, label: &str, results: &[SeedResult]) -> Result<CellResult> {
+    let rs = sorted_by_seed(results)?;
     let mut cell = CellResult {
         model_key: model_key.to_string(),
         label: label.to_string(),
@@ -66,18 +238,36 @@ pub fn run_cell(
         peak_gb: Welford::default(),
         score: Welford::default(),
     };
-    for &seed in seeds {
-        let mut cfg = Config::cell(model_key, method, seed);
-        tweak(&mut cfg);
-        let mut tr = Trainer::new(engine, cfg)?;
-        let s = tr.run()?;
-        cell.acc.push(s.test_acc_pct);
-        cell.wall_s.push(s.wall_s_per_epoch);
-        cell.modeled_s.push(s.modeled_s_per_epoch);
-        cell.peak_gb.push(s.peak_vram_gb);
-        cell.score.push(s.eff_score);
+    for r in &rs {
+        cell.acc.push(r.test_acc_pct);
+        cell.wall_s.push(r.wall_s);
+        cell.modeled_s.push(r.modeled_s);
+        cell.peak_gb.push(r.peak_gb);
+        cell.score.push(r.score);
     }
     Ok(cell)
+}
+
+/// Run one cell (fixed model/method/ablation) across `seeds`, applying
+/// `tweak` to each seed's config (epoch budget etc.). Seeds are
+/// normalized ([`normalize_seeds`]) so duplicates neither rerun nor
+/// skew the mean±std denominators.
+pub fn run_cell(
+    engine: &Engine,
+    model_key: &str,
+    method: Method,
+    label: &str,
+    seeds: &[u64],
+    tweak: &dyn Fn(&mut Config),
+) -> Result<CellResult> {
+    let seeds = normalize_seeds(seeds);
+    let mut results = Vec::with_capacity(seeds.len());
+    for &seed in &seeds {
+        let mut cfg = Config::cell(model_key, method, seed);
+        tweak(&mut cfg);
+        results.push(run_seed(engine, cfg, None)?);
+    }
+    aggregate_cell(model_key, label, &results)
 }
 
 /// Table 1: methods × model keys. Returns rows in paper order.
@@ -96,6 +286,24 @@ pub fn table1(
     Ok(rows)
 }
 
+/// The Table-2 ablation rows for one model, in paper order: (label,
+/// family, toggles). Shared by the serial helper below and the
+/// scheduler's grid builder so the two can never drift.
+pub const TABLE2_ROWS: [(&str, Method, Ablation); 4] = [
+    ("Standard Training", Method::Fp32, Ablation::none()),
+    (
+        "+ Dynamic Batch",
+        Method::TriAccel,
+        Ablation { dynamic_precision: false, dynamic_batch: true, curvature: false },
+    ),
+    (
+        "+ Dynamic Precision",
+        Method::TriAccel,
+        Ablation { dynamic_precision: true, dynamic_batch: false, curvature: false },
+    ),
+    ("+ Full Tri-Accel", Method::TriAccel, Ablation::full()),
+];
+
 /// Table 2 ablation rows for one model: standard, +batch, +precision,
 /// full (paper order).
 pub fn table2(
@@ -104,22 +312,8 @@ pub fn table2(
     seeds: &[u64],
     tweak: &dyn Fn(&mut Config),
 ) -> Result<Vec<CellResult>> {
-    let rows_spec: [(&str, Method, Ablation); 4] = [
-        ("Standard Training", Method::Fp32, Ablation::none()),
-        (
-            "+ Dynamic Batch",
-            Method::TriAccel,
-            Ablation { dynamic_precision: false, dynamic_batch: true, curvature: false },
-        ),
-        (
-            "+ Dynamic Precision",
-            Method::TriAccel,
-            Ablation { dynamic_precision: true, dynamic_batch: false, curvature: false },
-        ),
-        ("+ Full Tri-Accel", Method::TriAccel, Ablation::full()),
-    ];
     let mut rows = Vec::new();
-    for (label, method, ablation) in rows_spec {
+    for (label, method, ablation) in TABLE2_ROWS {
         let t = move |cfg: &mut Config| {
             cfg.ablation = ablation;
             tweak(cfg);
@@ -245,6 +439,37 @@ pub struct PressureCell {
     pub min_batch: usize,
 }
 
+/// Reduce per-seed results to one pressure-sweep row. All reductions —
+/// mean±std *and* the min-over-seeds `min_batch` and summed counters —
+/// happen here on the numeric values (never on formatted output), in
+/// canonical seed order.
+pub fn aggregate_pressure(
+    method_key: &str,
+    label: &str,
+    results: &[SeedResult],
+) -> Result<PressureCell> {
+    let rs = sorted_by_seed(results)?;
+    let mut cell = PressureCell {
+        method_key: method_key.to_string(),
+        label: label.to_string(),
+        acc: Welford::default(),
+        peak_gb: Welford::default(),
+        score: Welford::default(),
+        oom_events: 0,
+        batch_decisions: 0,
+        min_batch: usize::MAX,
+    };
+    for r in &rs {
+        cell.acc.push(r.test_acc_pct);
+        cell.peak_gb.push(r.peak_gb);
+        cell.score.push(r.score);
+        cell.oom_events += r.oom_events;
+        cell.batch_decisions += r.batch_decisions;
+        cell.min_batch = cell.min_batch.min(r.min_batch);
+    }
+    Ok(cell)
+}
+
 /// The VRAM-pressure scenario sweep (ROADMAP "as many scenarios as you
 /// can imagine"): run each registry method under a time-varying budget
 /// trace and report survival metrics. This is the stress test the
@@ -267,40 +492,18 @@ pub fn pressure(
         .iter()
         .map(|k| crate::policy::registry::resolve(k.trim()))
         .collect::<Result<_>>()?;
+    let seeds = normalize_seeds(seeds);
     let mut rows = Vec::new();
     for spec in specs {
-        let mut cell = PressureCell {
-            method_key: spec.key.to_string(),
-            label: spec.label.to_string(),
-            acc: Welford::default(),
-            peak_gb: Welford::default(),
-            score: Welford::default(),
-            oom_events: 0,
-            batch_decisions: 0,
-            min_batch: usize::MAX,
-        };
-        for &seed in seeds {
+        let mut results = Vec::with_capacity(seeds.len());
+        for &seed in &seeds {
             let mut cfg = Config::cell(model_key, spec.family, seed);
             crate::policy::registry::apply(&mut cfg, spec);
             tweak(&mut cfg);
             cfg.mem_trace = trace.to_string();
-            let mut tr = Trainer::new(engine, cfg)?;
-            let s = tr.run()?;
-            cell.acc.push(s.test_acc_pct);
-            cell.peak_gb.push(s.peak_vram_gb);
-            cell.score.push(s.eff_score);
-            cell.oom_events += tr.metrics.oom_events;
-            cell.batch_decisions += tr.metrics.batch_decisions;
-            let run_min = tr
-                .metrics
-                .batch_trace
-                .iter()
-                .map(|&(_, b)| b)
-                .min()
-                .unwrap_or(0);
-            cell.min_batch = cell.min_batch.min(run_min);
+            results.push(run_seed(engine, cfg, None)?);
         }
-        rows.push(cell);
+        rows.push(aggregate_pressure(spec.key, spec.label, &results)?);
     }
     Ok(rows)
 }
@@ -379,4 +582,88 @@ pub fn print_table1(rows: &[CellResult]) {
         );
     }
     let _ = efficiency_score(0.0, 1.0, 1.0); // keep the import honest
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sr(seed: u64, acc: f64) -> SeedResult {
+        SeedResult {
+            seed,
+            test_acc_pct: acc,
+            wall_s: 0.5 + seed as f64,
+            modeled_s: 10.0 + acc / 7.0,
+            peak_gb: 0.3 + seed as f64 * 0.01,
+            score: acc / 3.0,
+            oom_events: seed,
+            batch_decisions: 2 * seed,
+            ctrl_windows: 5,
+            precision_transitions: 1,
+            curv_firings: 3,
+            min_batch: 32 + seed as usize,
+        }
+    }
+
+    #[test]
+    fn normalize_seeds_sorts_and_dedups() {
+        assert_eq!(normalize_seeds(&[2, 0, 1, 0, 2]), vec![0, 1, 2]);
+        assert_eq!(normalize_seeds(&[]), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn aggregation_is_order_independent() {
+        let fwd = [sr(0, 60.0), sr(1, 61.5), sr(2, 59.0)];
+        let rev = [sr(2, 59.0), sr(0, 60.0), sr(1, 61.5)];
+        let a = aggregate_cell("m", "l", &fwd).unwrap();
+        let b = aggregate_cell("m", "l", &rev).unwrap();
+        assert_eq!(a.acc.mean().to_bits(), b.acc.mean().to_bits());
+        assert_eq!(a.acc.std().to_bits(), b.acc.std().to_bits());
+        assert_eq!(a.modeled_s.mean().to_bits(), b.modeled_s.mean().to_bits());
+        let pa = aggregate_pressure("k", "l", &fwd).unwrap();
+        let pb = aggregate_pressure("k", "l", &rev).unwrap();
+        assert_eq!(pa.acc.mean().to_bits(), pb.acc.mean().to_bits());
+        assert_eq!(pa.min_batch, 32);
+        assert_eq!(pa.oom_events, pb.oom_events);
+    }
+
+    #[test]
+    fn aggregation_rejects_duplicates_and_empty() {
+        let dup = [sr(1, 60.0), sr(1, 61.0)];
+        assert!(aggregate_cell("m", "l", &dup).is_err());
+        assert!(aggregate_cell("m", "l", &[]).is_err());
+        assert!(aggregate_pressure("k", "l", &dup).is_err());
+    }
+
+    #[test]
+    fn denominator_counts_unique_seeds() {
+        // The dedup fix: three listed seeds with one duplicate must
+        // aggregate as two runs, not three.
+        let seeds = normalize_seeds(&[0, 1, 1]);
+        let results: Vec<SeedResult> = seeds.iter().map(|&s| sr(s, 60.0 + s as f64)).collect();
+        let cell = aggregate_cell("m", "l", &results).unwrap();
+        assert_eq!(cell.acc.count(), 2);
+    }
+
+    #[test]
+    fn seed_result_json_roundtrip_is_exact() {
+        let r = sr(3, 61.234567890123);
+        let j = r.to_json().to_string_compact();
+        let back = SeedResult::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back, r, "shortest-roundtrip f64 serialization must be exact");
+        assert_eq!(back.test_acc_pct.to_bits(), r.test_acc_pct.to_bits());
+        // Seeds ride as decimal strings: u64 values past 2^53 must
+        // survive the JSON round trip bit-exactly too.
+        let big = SeedResult { seed: u64::MAX - 1, ..sr(0, 50.0) };
+        let j = big.to_json().to_string_compact();
+        let back = SeedResult::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back.seed, u64::MAX - 1);
+        assert_eq!(back, big);
+    }
+
+    #[test]
+    fn seed_result_json_rejects_missing_fields() {
+        let j = Json::parse(r#"{"seed": 0}"#).unwrap();
+        assert!(SeedResult::from_json(&j).is_err());
+    }
 }

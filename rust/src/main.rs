@@ -1,25 +1,33 @@
 //! `tri-accel` — leader entrypoint / CLI.
 //!
-//! Subcommands:
+//! Subcommands (full reference with examples: `docs/CLI.md`):
 //!   info                          backend + model inventory
 //!   train    [--model K] [--method M] [--epochs N] [--set k=v ...]
-//!   table1   [--models a,b] [--seeds 0,1,2] [--steps N] [--epochs N] [--smoke]
-//!   table2   [--model K]    [--seeds 0,1,2] [--steps N] [--epochs N]
-//!   fig      [--model K]    [--seed S]      [--steps N] [--epochs N]
-//!   pressure [--model K] [--methods a,b] [--trace SPEC] [--smoke]
+//!   table1   [--models a,b] [--seeds 0,1,2] [--jobs N] [--smoke]
+//!   table2   [--model K]    [--seeds 0,1,2] [--jobs N]
+//!   fig      [--model K]    [--seed S]      [--jobs N]
+//!   pressure [--model K] [--methods a,b] [--trace SPEC] [--jobs N] [--smoke]
 //!   compare --a run.json --b run.json
+//!   report   [--out runs] [--dir DIR]
 //!
 //! Global flags: `--list-models` (manifest inventory) and
 //! `--list-methods` (the method registry) print and exit. `--method`
 //! accepts any registry key (`--list-methods`), not just the paper's
 //! three columns.
 //!
-//! Backend selection: `--backend native` (default — the hermetic
-//! pure-Rust executor, no artifacts needed) or `--backend pjrt`
-//! (`--features pjrt` builds only; reads `--artifacts <dir>`).
-//! `--threads N` pins the native compute core's worker count
-//! (equivalent to `TRIACCEL_THREADS=N`; output is bit-identical for
-//! every value — see README "Performance").
+//! The grid subcommands (`table1`/`table2`/`fig`/`pressure`) run on
+//! the experiment scheduler: `--jobs N` executes cells concurrently,
+//! `--threads` caps the *total* compute-thread budget shared by all
+//! jobs, and every grid persists a resumable ledger plus JSONL
+//! telemetry under `runs/<grid-id>/` — rerunning the same command
+//! resumes a killed grid bit-identically. `report` re-renders the
+//! markdown/JSON artifacts from the ledgers alone.
+//!
+//! Backend selection (train/info): `--backend native` (default — the
+//! hermetic pure-Rust executor) or `--backend pjrt` (`--features
+//! pjrt` builds only; reads `--artifacts <dir>`). `--threads N` pins
+//! the native compute core's worker count (output is bit-identical
+//! for every value — see README "Performance").
 
 use std::path::PathBuf;
 
@@ -30,6 +38,7 @@ use tri_accel::harness;
 use tri_accel::metrics::PrecisionMix;
 use tri_accel::policy::registry;
 use tri_accel::runtime::Engine;
+use tri_accel::sched;
 use tri_accel::train::Trainer;
 use tri_accel::util::args::Args;
 
@@ -59,9 +68,10 @@ fn run() -> Result<()> {
         Some("fig") => fig(&args),
         Some("pressure") => pressure(&args),
         Some("compare") => compare(&args),
+        Some("report") => report(&args),
         Some(other) => {
             anyhow::bail!(
-                "unknown subcommand `{other}` (info|train|table1|table2|fig|pressure|compare)"
+                "unknown subcommand `{other}` (info|train|table1|table2|fig|pressure|compare|report)"
             )
         }
     }
@@ -120,6 +130,58 @@ fn engine_from(args: &Args) -> Result<Engine> {
         return Ok(Engine::native_with_threads(threads));
     }
     Engine::by_name(&backend, &artifacts)
+}
+
+/// Grid subcommands run on the scheduler's native job pool; reject an
+/// explicit non-native backend instead of silently ignoring it.
+fn require_native(args: &Args) -> Result<()> {
+    let backend = args.get_or("backend", "native");
+    let _ = args.get("artifacts"); // accepted (and unused) for script compatibility
+    anyhow::ensure!(
+        backend == "native",
+        "grid subcommands (table1|table2|fig|pressure) run on the scheduler's \
+         native job pool; `--backend {backend}` is only supported by train/info"
+    );
+    Ok(())
+}
+
+/// Scheduler knobs shared by the grid subcommands: `--jobs N`
+/// concurrent cells, `--threads` total compute budget (split across
+/// jobs so the machine is never oversubscribed), `--out` base
+/// directory, `--quiet` to suppress per-job lines.
+fn sched_opts(args: &Args) -> Result<sched::SchedOptions> {
+    let jobs: usize = args.parse_or("jobs", 1)?;
+    anyhow::ensure!(jobs >= 1, "--jobs must be at least 1");
+    Ok(sched::SchedOptions {
+        jobs,
+        total_threads: args.parse_or("threads", 0)?,
+        out_dir: PathBuf::from(args.get_or("out", "runs")),
+        job_limit: None,
+        quiet: args.flag("quiet"),
+    })
+}
+
+/// The completed grid's ledger — the single aggregation source for
+/// stdout tables (the same one the rendered artifacts used).
+fn grid_ledger(outcome: &sched::GridOutcome) -> Result<&sched::Ledger> {
+    outcome
+        .ledger
+        .as_ref()
+        .context("grid did not complete (rerun the command to resume it)")
+}
+
+fn print_outcome(o: &sched::GridOutcome) {
+    println!(
+        "grid {} → {}  (jobs: {} executed, {} reused of {})",
+        o.grid_id,
+        o.grid_dir.display(),
+        o.executed,
+        o.reused,
+        o.total
+    );
+    for a in &o.artifacts {
+        println!("artifact → {}", a.display());
+    }
 }
 
 /// Default model list: everything the engine's manifest serves.
@@ -309,14 +371,9 @@ fn parse_seeds(args: &Args) -> Result<Vec<u64>> {
         .collect()
 }
 
-fn budget_tweak(args: &Args) -> Result<impl Fn(&mut Config)> {
-    let steps: usize = args.parse_or("steps", 60)?;
-    let epochs: usize = args.parse_or("epochs", 3)?;
-    Ok(harness::quick_budget(steps, epochs))
-}
-
 fn table1(args: &Args) -> Result<()> {
-    let engine = engine_from(args)?;
+    require_native(args)?;
+    let engine = Engine::native();
     // `--smoke`: the CI fast path — 1 seed, a couple of steps, the full
     // built-in architecture grid. Explicit --steps/--epochs/--seeds
     // still win over the smoke defaults.
@@ -332,11 +389,14 @@ fn table1(args: &Args) -> Result<()> {
     }
     let steps: usize = args.parse_or("steps", if smoke { 2 } else { 60 })?;
     let epochs: usize = args.parse_or("epochs", if smoke { 1 } else { 3 })?;
-    let tweak = harness::quick_budget(steps, epochs);
+    let opts = sched_opts(args)?;
     args.reject_unknown()?;
     let keys: Vec<&str> = models.split(',').collect();
     harness::validate_models(&engine, &keys)?;
-    let rows = harness::table1(&engine, &keys, &seeds, &tweak)?;
+    let tweak = harness::quick_budget(steps, epochs);
+    let spec = sched::table1_spec(&keys, &seeds, &tweak);
+    let outcome = sched::run_grid(&spec, &opts)?;
+    let rows = sched::report::cell_rows(grid_ledger(&outcome)?)?;
     println!(
         "== Table 1 ({}; shape comparison vs paper) ==",
         if smoke { "smoke budget" } else { "reduced budget" }
@@ -345,19 +405,27 @@ fn table1(args: &Args) -> Result<()> {
     for chunk in rows.chunks(3) {
         println!("{} — {}", chunk[0].model_key, harness::headline(&chunk[0], &chunk[2]));
     }
+    print_outcome(&outcome);
     Ok(())
 }
 
 fn table2(args: &Args) -> Result<()> {
-    let engine = engine_from(args)?;
+    require_native(args)?;
+    let engine = Engine::native();
     let model = model_or_first(args, &engine)?;
     let seeds = parse_seeds(args)?;
-    let tweak = budget_tweak(args)?;
+    let steps: usize = args.parse_or("steps", 60)?;
+    let epochs: usize = args.parse_or("epochs", 3)?;
+    let opts = sched_opts(args)?;
     args.reject_unknown()?;
     harness::validate_models(&engine, &[model.as_str()])?;
-    let rows = harness::table2(&engine, &model, &seeds, &tweak)?;
+    let tweak = harness::quick_budget(steps, epochs);
+    let spec = sched::table2_spec(&model, &seeds, &tweak);
+    let outcome = sched::run_grid(&spec, &opts)?;
+    let rows = sched::report::cell_rows(grid_ledger(&outcome)?)?;
     println!("== Table 2 ablation — {model} ==");
     harness::print_table2(&rows);
+    print_outcome(&outcome);
     Ok(())
 }
 
@@ -366,7 +434,8 @@ fn table2(args: &Args) -> Result<()> {
 /// the middle half of the run). `--smoke` is the CI fast path — one
 /// seed, two registry-composed methods, a short trace.
 fn pressure(args: &Args) -> Result<()> {
-    let engine = engine_from(args)?;
+    require_native(args)?;
+    let engine = Engine::native();
     let model = model_or_first(args, &engine)?;
     let smoke = args.flag("smoke");
     let methods = args.get_or(
@@ -396,24 +465,39 @@ fn pressure(args: &Args) -> Result<()> {
     let ramp_end = ((3 * total) / 4).max(ramp_start + 1);
     let default_trace = format!("ramp:{ramp_start}:{ramp_end}:0.55");
     let trace = args.get_or("trace", &default_trace);
-    let tweak = harness::quick_budget(steps, epochs);
+    let opts = sched_opts(args)?;
     args.reject_unknown()?;
     harness::validate_models(&engine, &[model.as_str()])?;
     let keys: Vec<&str> = methods.split(',').collect();
-    let rows = harness::pressure(&engine, &model, &keys, &seeds, &trace, &tweak)?;
-    println!("== VRAM pressure — {model} ({} seed(s)) ==", seeds.len());
+    let tweak = harness::quick_budget(steps, epochs);
+    let spec = sched::pressure_spec(&model, &keys, &seeds, &trace, &tweak)?;
+    let outcome = sched::run_grid(&spec, &opts)?;
+    let rows = sched::report::pressure_rows(grid_ledger(&outcome)?)?;
+    println!(
+        "== VRAM pressure — {model} ({} seed(s)) ==",
+        spec.cells.first().map(|c| c.seeds.len()).unwrap_or(0)
+    );
     harness::print_pressure(&rows, &trace);
+    print_outcome(&outcome);
     Ok(())
 }
 
 fn fig(args: &Args) -> Result<()> {
-    let engine = engine_from(args)?;
+    require_native(args)?;
+    let engine = Engine::native();
     let model = model_or_first(args, &engine)?;
     let seed: u64 = args.parse_or("seed", 0)?;
-    let tweak = budget_tweak(args)?;
+    let steps: usize = args.parse_or("steps", 60)?;
+    let epochs: usize = args.parse_or("epochs", 3)?;
+    let opts = sched_opts(args)?;
     args.reject_unknown()?;
     harness::validate_models(&engine, &[model.as_str()])?;
-    let t = harness::fig_adaptive(&engine, &model, seed, &tweak)?;
+    let tweak = harness::quick_budget(steps, epochs);
+    let spec = sched::fig_spec(&model, seed, &tweak);
+    let outcome = sched::run_grid(&spec, &opts)?;
+    // The figure series come back out of the persisted telemetry
+    // stream — proof the JSONL events carry everything the plot needs.
+    let t = sched::report::fig_series(&outcome.grid_dir, grid_ledger(&outcome)?)?;
     println!("== adaptive behaviour — {model} seed {seed} ==");
     println!("epoch, eff_score, fp16, bf16, fp32");
     for ((e, s), (_, f16, b16, f32_)) in t.epoch_eff.iter().zip(&t.mix_trace) {
@@ -423,5 +507,57 @@ fn fig(args: &Args) -> Result<()> {
     for (st, b) in &t.batch_trace {
         println!("{st}, {b}");
     }
+    print_outcome(&outcome);
+    Ok(())
+}
+
+/// `report`: re-render the markdown/JSON artifacts of completed grids
+/// from their ledgers alone — no training runs. `--dir` targets one
+/// grid directory; otherwise every `<out>/*/ledger.json` is rendered.
+fn report(args: &Args) -> Result<()> {
+    let out = PathBuf::from(args.get_or("out", "runs"));
+    let dir = args.get("dir").map(PathBuf::from);
+    args.reject_unknown()?;
+    // With an explicit --dir, any failure is the user's answer; in
+    // scan mode an incomplete grid (e.g. one killed mid-run, awaiting
+    // resume) must not block rendering of the complete ones.
+    let (dirs, explicit) = match dir {
+        Some(d) => (vec![d], true),
+        None => {
+            let rd = std::fs::read_dir(&out).with_context(|| {
+                format!("reading {} (run a grid first, or pass --dir)", out.display())
+            })?;
+            let mut v = Vec::new();
+            for ent in rd {
+                let p = ent?.path();
+                if p.join("ledger.json").exists() {
+                    v.push(p);
+                }
+            }
+            v.sort();
+            anyhow::ensure!(!v.is_empty(), "no grid ledgers under {}", out.display());
+            (v, false)
+        }
+    };
+    let mut rendered = 0usize;
+    for d in dirs {
+        let result = sched::Ledger::load(&d.join("ledger.json"))
+            .and_then(|led| sched::report::render(&d, &led));
+        match result {
+            Ok(artifacts) => {
+                rendered += 1;
+                for a in artifacts {
+                    println!("{}", a.display());
+                }
+            }
+            Err(e) if !explicit => {
+                eprintln!("skipping {}: {e:#}", d.display());
+            }
+            Err(e) => {
+                return Err(anyhow::anyhow!("rendering {}: {e:#}", d.display()));
+            }
+        }
+    }
+    anyhow::ensure!(rendered > 0, "no grid could be rendered (see warnings above)");
     Ok(())
 }

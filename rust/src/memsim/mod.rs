@@ -9,6 +9,11 @@
 //! so the *functional form* of memory vs (B, precision) — which is what
 //! the feedback controller's dynamics depend on — is preserved.
 
+// Enforced as an error by the docs CI job (`cargo doc` with
+// `RUSTDOCFLAGS=-D warnings`); kept at `warn` here so tier-1
+// `cargo build`/`cargo test` never hard-fails on a doc regression.
+#![warn(missing_docs)]
+
 use crate::manifest::{precision_bytes, ModelEntry};
 use crate::util::rng::Rng;
 
@@ -140,18 +145,32 @@ const BASE_OVERHEAD_BYTES: f64 = 48.0 * 1024.0 * 1024.0;
 /// Allocator block rounding / fragmentation factor.
 const FRAG_FACTOR: f64 = 1.05;
 
+/// Byte accounting of one simulated train step, split by allocation
+/// class (all GiB).
 #[derive(Debug, Clone)]
 pub struct StepUsage {
+    /// Master FP32 weights plus BN/statistics state.
     pub params_gb: f64,
+    /// Low-precision compute copies of quantized layers.
     pub compute_copies_gb: f64,
+    /// Gradients in compute precision (plus FP32 BN grads).
     pub grads_gb: f64,
+    /// SGD momentum buffers (FP32).
     pub momentum_gb: f64,
+    /// Saved activations for backward, scaled by the batch size.
     pub activations_gb: f64,
+    /// Convolution / reduction scratch workspace.
     pub workspace_gb: f64,
+    /// Curvature-probe u/Hu buffers (probe steps only).
     pub transient_gb: f64,
+    /// Grand total including fragmentation, noise, and base overhead.
     pub total_gb: f64,
 }
 
+/// The analytic VRAM simulator: produces `MemUsage(t)`/`MemMax` for
+/// the §3.3 feedback controller from the manifest's tensor shapes, the
+/// live precision map, and the live batch size. Supports time-varying
+/// budgets ([`BudgetTrace`]) for the VRAM-pressure scenarios.
 pub struct VramSim {
     /// Base budget; the live `MemMax` is `budget_gb · trace.factor(step)`.
     budget_gb: f64,
@@ -179,6 +198,9 @@ pub struct VramSim {
 }
 
 impl VramSim {
+    /// Build a simulator for one model entry: `budget_gb` is the base
+    /// `MemMax`, `noise_frac` the allocator-transient noise band, and
+    /// `seed` drives the (deterministic) noise stream.
     pub fn new(entry: &ModelEntry, budget_gb: f64, noise_frac: f64, seed: u64) -> VramSim {
         VramSim {
             budget_gb,
@@ -286,6 +308,7 @@ impl VramSim {
         self.trace = trace;
     }
 
+    /// The installed budget trace ([`BudgetTrace::Constant`] default).
     pub fn trace(&self) -> &BudgetTrace {
         &self.trace
     }
@@ -322,10 +345,12 @@ impl VramSim {
         u.total_gb <= self.mem_max_gb() * frac
     }
 
+    /// Simulated OOM count: steps whose usage exceeded the live budget.
     pub fn oom_events(&self) -> u64 {
         self.oom_events
     }
 
+    /// Reset the high-water mark to the most recent step's usage.
     pub fn reset_peak(&mut self) {
         self.peak = self.last;
     }
@@ -355,12 +380,16 @@ impl MemoryMonitor for VramSim {
 /// keeps it below the 8× tensor-core peak).
 #[derive(Debug, Clone)]
 pub struct SpeedModel {
+    /// Effective FP32 throughput (TFLOP/s).
     pub fp32_tflops: f64,
+    /// Effective speedup factor for half-precision layers.
     pub half_speedup: f64,
-    pub fixed_overhead_s: f64, // per-step launch/host overhead
+    /// Per-step launch/host overhead (seconds).
+    pub fixed_overhead_s: f64,
 }
 
 impl SpeedModel {
+    /// T4-class parameters (the paper's single-GPU setting).
     pub fn t4_like() -> SpeedModel {
         SpeedModel { fp32_tflops: 8.1, half_speedup: 1.8, fixed_overhead_s: 2.0e-3 }
     }

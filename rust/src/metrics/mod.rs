@@ -2,7 +2,16 @@
 //! accuracy, time per epoch, peak VRAM, aggregate efficiency score —
 //! plus the traces §4.2 says are logged (effective batch size) and the
 //! adaptive-behaviour series the abstract describes (efficiency over
-//! training). CSV/JSON writers for offline plotting.
+//! training). CSV/JSON writers for offline plotting, plus the
+//! schema-versioned streaming [`telemetry`] events the experiment
+//! scheduler persists as JSONL (`docs/TELEMETRY.md`).
+
+// Enforced as an error by the docs CI job (`cargo doc` with
+// `RUSTDOCFLAGS=-D warnings`); kept at `warn` here so tier-1
+// `cargo build`/`cargo test` never hard-fails on a doc regression.
+#![warn(missing_docs)]
+
+pub mod telemetry;
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -32,12 +41,16 @@ pub fn efficiency_score(acc_pct: f64, time_s: f64, vram_gb: f64) -> f64 {
 /// precision (telemetry for the adaptive-behaviour figure).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct PrecisionMix {
+    /// Fraction of precision layers computing in FP16.
     pub fp16: f64,
+    /// Fraction of precision layers computing in BF16.
     pub bf16: f64,
+    /// Fraction of precision layers computing in FP32.
     pub fp32: f64,
 }
 
 impl PrecisionMix {
+    /// Fractions of each precision code in a per-layer codes vector.
     pub fn of(codes: &[i32]) -> PrecisionMix {
         if codes.is_empty() {
             return PrecisionMix::default();
@@ -54,11 +67,17 @@ impl PrecisionMix {
 /// One epoch's record — one row of the per-run log.
 #[derive(Debug, Clone)]
 pub struct EpochRecord {
+    /// Epoch index (0-based).
     pub epoch: usize,
+    /// Optimizer steps taken this epoch.
     pub steps: u64,
+    /// Mean training loss over the epoch's steps.
     pub train_loss: f64,
+    /// Training accuracy (%) over the examples consumed this epoch.
     pub train_acc: f64,
+    /// Test loss from the end-of-epoch evaluation.
     pub test_loss: f64,
+    /// Test accuracy (%) from the end-of-epoch evaluation.
     pub test_acc: f64,
     /// Examples consumed this epoch (varies with elastic batching).
     pub examples: usize,
@@ -71,11 +90,17 @@ pub struct EpochRecord {
     /// examples) — the Table-1 comparable: reduced-step runs and elastic
     /// batch sizes otherwise distort per-epoch time.
     pub modeled_s_norm: f64,
+    /// Peak simulated VRAM (GiB) over the run so far.
     pub peak_vram_gb: f64,
+    /// Mean effective batch size over the epoch's steps.
     pub mean_batch: f64,
+    /// Per-layer precision mix at epoch end.
     pub mix: PrecisionMix,
+    /// Learning rate at the epoch's final step.
     pub lr: f64,
+    /// Live loss scale at epoch end.
     pub loss_scale: f64,
+    /// The §4.2 aggregate efficiency score on normalized modeled time.
     pub eff_score: f64,
 }
 
@@ -83,13 +108,19 @@ pub struct EpochRecord {
 /// the control-decision counters.
 #[derive(Debug, Clone, Default)]
 pub struct RunMetrics {
+    /// One record per completed epoch, in order.
     pub epochs: Vec<EpochRecord>,
     /// (step, batch size) — recorded at every change plus epoch marks.
     pub batch_trace: Vec<(u64, usize)>,
+    /// Precision-policy layer transitions over the run.
     pub precision_transitions: u64,
+    /// Curvature-driven precision promotions over the run.
     pub promotions: u64,
+    /// Loss-scaler overflow events over the run.
     pub overflows: u64,
+    /// Simulated out-of-memory events over the run.
     pub oom_events: u64,
+    /// Curvature probe steps executed over the run.
     pub curv_firings: u64,
     /// §3.4 control windows evaluated (policy-decision telemetry).
     pub ctrl_windows: u64,
@@ -98,16 +129,20 @@ pub struct RunMetrics {
 }
 
 impl RunMetrics {
+    /// Record the live batch size at `step` (deduplicates consecutive
+    /// identical values — the §4.2 effective-batch-size trace).
     pub fn record_batch(&mut self, step: u64, b: usize) {
         if self.batch_trace.last().map(|&(_, pb)| pb) != Some(b) {
             self.batch_trace.push((step, b));
         }
     }
 
+    /// Test accuracy (%) of the final epoch (0 if no epochs ran).
     pub fn final_test_acc(&self) -> f64 {
         self.epochs.last().map(|e| e.test_acc).unwrap_or(0.0)
     }
 
+    /// Peak simulated VRAM (GiB) over all epochs.
     pub fn peak_vram_gb(&self) -> f64 {
         self.epochs.iter().map(|e| e.peak_vram_gb).fold(0.0, f64::max)
     }
@@ -169,6 +204,7 @@ impl RunMetrics {
         s
     }
 
+    /// The full run log as one JSON document (`runs/<tag>.json`).
     pub fn to_json(&self) -> Json {
         let mut obj = BTreeMap::new();
         obj.insert(
@@ -225,6 +261,8 @@ impl RunMetrics {
         Json::Obj(obj)
     }
 
+    /// Write the epoch CSV, batch-trace CSV, and JSON log under `dir`
+    /// with the given file-name `tag`.
     pub fn write(&self, dir: &Path, tag: &str) -> Result<()> {
         std::fs::create_dir_all(dir).with_context(|| format!("mkdir {dir:?}"))?;
         std::fs::write(dir.join(format!("{tag}_epochs.csv")), self.epochs_csv())?;

@@ -1,0 +1,313 @@
+//! Streaming run telemetry: schema-versioned JSONL events.
+//!
+//! Every event is one JSON object per line with two fixed fields —
+//! `"schema"` (the telemetry schema version, see [`SCHEMA_VERSION`])
+//! and `"event"` (the event kind) — plus kind-specific payload fields.
+//! The experiment scheduler ([`crate::sched`]) streams one file per
+//! job into `runs/<grid-id>/events/<job>.jsonl`; the full field tables
+//! and the version policy live in `docs/TELEMETRY.md`.
+//!
+//! Event kinds (schema 1):
+//!
+//! * `run_started` / `run_finished` — emitted by the scheduler around
+//!   one job (one model × method × seed run).
+//! * `step` — one optimizer step (emitted by the trainer).
+//! * `control_window` — one §3.4 control-window evaluation.
+//! * `oom` — a simulated out-of-memory event.
+//! * `epoch` — one epoch summary row (the [`super::EpochRecord`]
+//!   fields).
+//!
+//! The trainer writes through the [`TelemetrySink`] trait so it never
+//! depends on where events go; [`JsonlWriter`] is the file sink and
+//! [`SharedSink`] the clonable handle the scheduler threads through.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+use super::EpochRecord;
+
+/// Telemetry schema version stamped into every event line. Bump only
+/// for breaking changes (renamed/retyped fields); adding new fields or
+/// new event kinds is backward-compatible and does not bump it.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Where events go. The trainer emits through this trait; sinks must
+/// tolerate being called once per optimizer step.
+pub trait TelemetrySink: Send {
+    /// Record one event (one JSONL line).
+    fn emit(&mut self, event: &Json);
+}
+
+fn base(event: &str) -> std::collections::BTreeMap<String, Json> {
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("schema".to_string(), Json::Num(SCHEMA_VERSION as f64));
+    m.insert("event".to_string(), Json::Str(event.to_string()));
+    m
+}
+
+fn num(m: &mut std::collections::BTreeMap<String, Json>, k: &str, v: f64) {
+    m.insert(k.to_string(), Json::Num(v));
+}
+
+fn s(m: &mut std::collections::BTreeMap<String, Json>, k: &str, v: &str) {
+    m.insert(k.to_string(), Json::Str(v.to_string()));
+}
+
+/// `run_started`: the scheduler is about to execute one job.
+pub fn ev_run_started(
+    job: &str,
+    model: &str,
+    method_key: &str,
+    seed: u64,
+    digest: u64,
+    config_hash: u64,
+) -> Json {
+    let mut m = base("run_started");
+    s(&mut m, "job", job);
+    s(&mut m, "model", model);
+    s(&mut m, "method", method_key);
+    // Decimal string: u64 seeds past 2^53 would lose bits as a number.
+    s(&mut m, "seed", &seed.to_string());
+    s(&mut m, "digest", &format!("{digest:016x}"));
+    s(&mut m, "config_hash", &format!("{config_hash:016x}"));
+    Json::Obj(m)
+}
+
+/// `run_finished`: the job completed; carries the persisted per-seed
+/// result object (the same JSON stored in `ledger.json`) and the
+/// job's wall-clock seconds (informational — wall time is the one
+/// field that varies across reruns).
+pub fn ev_run_finished(job: &str, result: Json, wall_s: f64) -> Json {
+    let mut m = base("run_finished");
+    s(&mut m, "job", job);
+    m.insert("result".to_string(), result);
+    num(&mut m, "wall_s", wall_s);
+    Json::Obj(m)
+}
+
+/// `step`: one optimizer step — step index, live batch size, training
+/// loss, and the modeled accelerator-seconds for the step.
+pub fn ev_step(step: u64, batch: usize, loss: f64, modeled_s: f64) -> Json {
+    let mut m = base("step");
+    num(&mut m, "step", step as f64);
+    num(&mut m, "batch", batch as f64);
+    num(&mut m, "loss", loss);
+    num(&mut m, "modeled_s", modeled_s);
+    Json::Obj(m)
+}
+
+/// `oom`: the memory simulator saw usage exceed the live budget at
+/// this step (a real static-batch run would have crashed here).
+pub fn ev_oom(step: u64, used_gb: f64, max_gb: f64) -> Json {
+    let mut m = base("oom");
+    num(&mut m, "step", step as f64);
+    num(&mut m, "used_gb", used_gb);
+    num(&mut m, "max_gb", max_gb);
+    Json::Obj(m)
+}
+
+/// `control_window`: one §3.4 control-window evaluation — how many
+/// curvature promotions fired, the batch size after the window, and
+/// the live loss scale.
+pub fn ev_control_window(step: u64, promotions: usize, batch: usize, loss_scale: f64) -> Json {
+    let mut m = base("control_window");
+    num(&mut m, "step", step as f64);
+    num(&mut m, "promotions", promotions as f64);
+    num(&mut m, "batch", batch as f64);
+    num(&mut m, "loss_scale", loss_scale);
+    Json::Obj(m)
+}
+
+/// `epoch`: one epoch summary row (every [`EpochRecord`] field).
+pub fn ev_epoch(r: &EpochRecord) -> Json {
+    let mut m = base("epoch");
+    num(&mut m, "epoch", r.epoch as f64);
+    num(&mut m, "steps", r.steps as f64);
+    num(&mut m, "examples", r.examples as f64);
+    num(&mut m, "train_loss", r.train_loss);
+    num(&mut m, "train_acc", r.train_acc);
+    num(&mut m, "test_loss", r.test_loss);
+    num(&mut m, "test_acc", r.test_acc);
+    num(&mut m, "wall_s", r.wall_s);
+    num(&mut m, "modeled_s", r.modeled_s);
+    num(&mut m, "modeled_s_norm", r.modeled_s_norm);
+    num(&mut m, "peak_vram_gb", r.peak_vram_gb);
+    num(&mut m, "mean_batch", r.mean_batch);
+    num(&mut m, "fp16_frac", r.mix.fp16);
+    num(&mut m, "bf16_frac", r.mix.bf16);
+    num(&mut m, "fp32_frac", r.mix.fp32);
+    num(&mut m, "lr", r.lr);
+    num(&mut m, "loss_scale", r.loss_scale);
+    num(&mut m, "eff_score", r.eff_score);
+    Json::Obj(m)
+}
+
+/// Buffered JSONL file sink. IO errors are latched and surfaced at
+/// [`Self::flush`] (the sink trait has no error channel — the trainer
+/// should not abort a run over a telemetry write).
+pub struct JsonlWriter {
+    path: PathBuf,
+    w: std::io::BufWriter<std::fs::File>,
+    error: Option<std::io::Error>,
+}
+
+impl JsonlWriter {
+    /// Create (truncating any previous file — a killed job's partial
+    /// event stream is replaced when the job reruns).
+    pub fn create(path: &Path) -> Result<JsonlWriter> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("mkdir {}", parent.display()))?;
+        }
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        Ok(JsonlWriter {
+            path: path.to_path_buf(),
+            w: std::io::BufWriter::new(f),
+            error: None,
+        })
+    }
+
+    /// The file this sink writes to.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Flush buffered lines; reports the first latched write error.
+    pub fn flush(&mut self) -> Result<()> {
+        if let Some(e) = self.error.take() {
+            return Err(anyhow::anyhow!("telemetry write to {}: {e}", self.path.display()));
+        }
+        self.w
+            .flush()
+            .with_context(|| format!("flushing {}", self.path.display()))
+    }
+}
+
+impl TelemetrySink for JsonlWriter {
+    fn emit(&mut self, event: &Json) {
+        if self.error.is_some() {
+            return;
+        }
+        if let Err(e) = writeln!(self.w, "{}", event.to_string_compact()) {
+            self.error = Some(e);
+        }
+    }
+}
+
+/// Clonable handle over a shared [`JsonlWriter`]: the scheduler keeps
+/// one clone to emit `run_started`/`run_finished` while the trainer
+/// owns another for the inner `step`/`epoch`/`oom`/`control_window`
+/// stream.
+#[derive(Clone)]
+pub struct SharedSink(Arc<Mutex<JsonlWriter>>);
+
+impl SharedSink {
+    /// Wrap a writer for shared use.
+    pub fn new(w: JsonlWriter) -> SharedSink {
+        SharedSink(Arc::new(Mutex::new(w)))
+    }
+
+    /// Record one event (lock + write).
+    pub fn post(&self, event: &Json) {
+        self.0.lock().unwrap().emit(event);
+    }
+
+    /// Flush the underlying writer and surface latched write errors.
+    pub fn flush(&self) -> Result<()> {
+        self.0.lock().unwrap().flush()
+    }
+}
+
+impl TelemetrySink for SharedSink {
+    fn emit(&mut self, event: &Json) {
+        self.post(event);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::PrecisionMix;
+
+    #[test]
+    fn events_carry_schema_and_kind() {
+        let ev = ev_step(7, 64, 2.5, 0.001);
+        assert_eq!(ev.get("schema").unwrap().as_i64(), Some(SCHEMA_VERSION as i64));
+        assert_eq!(ev.get("event").unwrap().as_str(), Some("step"));
+        assert_eq!(ev.get("batch").unwrap().as_usize(), Some(64));
+        let ev = ev_oom(3, 0.5, 0.4);
+        assert_eq!(ev.get("event").unwrap().as_str(), Some("oom"));
+        let ev = ev_control_window(9, 2, 96, 1024.0);
+        assert_eq!(ev.get("promotions").unwrap().as_usize(), Some(2));
+        let ev = ev_run_started("j", "m", "tri_accel", 1, 0xAB, 0xCD);
+        assert_eq!(ev.get("digest").unwrap().as_str(), Some("00000000000000ab"));
+    }
+
+    #[test]
+    fn epoch_event_mirrors_record() {
+        let r = EpochRecord {
+            epoch: 1,
+            steps: 10,
+            train_loss: 1.0,
+            train_acc: 50.0,
+            test_loss: 1.1,
+            test_acc: 49.0,
+            examples: 640,
+            wall_s: 0.5,
+            modeled_s: 0.05,
+            modeled_s_norm: 0.4,
+            peak_vram_gb: 0.3,
+            mean_batch: 64.0,
+            mix: PrecisionMix { fp16: 0.25, bf16: 0.5, fp32: 0.25 },
+            lr: 0.1,
+            loss_scale: 1024.0,
+            eff_score: 12.0,
+        };
+        let ev = ev_epoch(&r);
+        assert_eq!(ev.get("event").unwrap().as_str(), Some("epoch"));
+        assert_eq!(ev.get("epoch").unwrap().as_usize(), Some(1));
+        assert_eq!(ev.get("bf16_frac").unwrap().as_f64(), Some(0.5));
+        assert_eq!(ev.get("eff_score").unwrap().as_f64(), Some(12.0));
+    }
+
+    #[test]
+    fn jsonl_writer_streams_lines() {
+        let dir = std::env::temp_dir().join(format!("triaccel_tel_{}", std::process::id()));
+        let path = dir.join("events.jsonl");
+        let mut w = JsonlWriter::create(&path).unwrap();
+        w.emit(&ev_step(0, 32, 2.0, 0.001));
+        w.emit(&ev_step(1, 32, 1.9, 0.001));
+        w.flush().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for l in lines {
+            let j = Json::parse(l).unwrap();
+            assert_eq!(j.get("event").unwrap().as_str(), Some("step"));
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shared_sink_clones_write_one_stream() {
+        let dir = std::env::temp_dir().join(format!("triaccel_tels_{}", std::process::id()));
+        let path = dir.join("shared.jsonl");
+        let sink = SharedSink::new(JsonlWriter::create(&path).unwrap());
+        let mut clone: Box<dyn TelemetrySink> = Box::new(sink.clone());
+        sink.post(&ev_run_started("j", "m", "k", 0, 1, 2));
+        clone.emit(&ev_step(0, 16, 2.0, 0.001));
+        sink.post(&ev_run_finished("j", Json::Null, 0.1));
+        sink.flush().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        assert!(text.lines().next().unwrap().contains("run_started"));
+        assert!(text.lines().last().unwrap().contains("run_finished"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

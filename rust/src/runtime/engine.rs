@@ -45,6 +45,19 @@ impl Engine {
         }
     }
 
+    /// The native engine over an existing compute-pool handle. The
+    /// experiment scheduler ([`crate::sched`]) builds one engine per
+    /// job-pool worker this way and reuses it across every job that
+    /// worker runs, so consecutive jobs share the pool handle and the
+    /// warm scratch arena behind it. Results are bit-identical to any
+    /// other construction — the pool width is a pure performance knob.
+    pub fn native_with_pool(pool: native::pool::Pool) -> Engine {
+        Engine {
+            manifest: native::builtin_manifest(),
+            backend: Box::new(native::NativeBackend::with_pool(pool)),
+        }
+    }
+
     /// Compatibility constructor: PJRT over `artifacts_dir` when built
     /// with `--features pjrt` and a manifest is present there, else the
     /// native backend (ignoring `artifacts_dir`).

@@ -5,7 +5,7 @@
 //! wall-clock claims lean on):
 //! * `B` is packed into `NR`-wide column panels once per call, so the
 //!   micro-kernel streams both operands contiguously;
-//! * a 4×-unrolled register-tiled micro-kernel ([`MR`]×[`NR`]
+//! * a 4×-unrolled register-tiled micro-kernel (`MR`×`NR`
 //!   accumulators live in registers across the whole K loop — the
 //!   seed's scalar kernels re-loaded/stored the output row once per
 //!   input channel, which was the dominant cost);

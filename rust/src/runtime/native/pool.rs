@@ -34,7 +34,25 @@ pub fn resolve_threads(var: Option<&str>) -> usize {
     }
 }
 
+/// Split a total worker budget across `jobs` concurrent scheduler
+/// jobs: `floor(total / jobs)`, at least 1. The experiment scheduler
+/// ([`crate::sched`]) gives every job-pool worker this many compute
+/// threads so `jobs × threads ≤ total` and concurrent cells never
+/// oversubscribe the machine (the determinism contract makes the
+/// per-job thread count a pure performance knob).
+pub fn per_job_threads(total: usize, jobs: usize) -> usize {
+    (total / jobs.max(1)).max(1)
+}
+
 /// A fixed-width worker pool over scoped threads.
+///
+/// A `Pool` is a cheap, clonable *handle* (just the configured width —
+/// workers are scoped per call, state-free). The scheduler exploits
+/// this by building one `Pool` per job-pool worker and reusing the
+/// handle — and the arena-carrying `Exec` around it — across every
+/// job that worker runs ([`crate::runtime::Engine::native_with_pool`]),
+/// so back-to-back jobs share warm scratch buffers instead of
+/// re-growing an arena from empty.
 #[derive(Debug, Clone)]
 pub struct Pool {
     threads: usize,
@@ -105,6 +123,20 @@ impl Default for Pool {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn per_job_threads_never_oversubscribes() {
+        assert_eq!(per_job_threads(8, 4), 2);
+        assert_eq!(per_job_threads(8, 1), 8);
+        assert_eq!(per_job_threads(4, 8), 1, "floor at one thread per job");
+        assert_eq!(per_job_threads(0, 3), 1);
+        assert_eq!(per_job_threads(7, 0), 7, "jobs clamped to >= 1");
+        for total in 1..=16usize {
+            for jobs in 1..=16usize {
+                assert!(per_job_threads(total, jobs) * jobs <= total.max(jobs));
+            }
+        }
+    }
 
     #[test]
     fn resolve_threads_parses_and_falls_back() {

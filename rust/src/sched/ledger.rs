@@ -1,0 +1,324 @@
+//! The grid ledger: `runs/<grid-id>/ledger.json`.
+//!
+//! One ledger records one grid — its structure (cells, per-cell job
+//! keys) plus one entry per *completed* job, keyed by the job key and
+//! guarded by the (model-graph digest, method key, seed, config
+//! fingerprint) quadruple. Rerunning the same grid command loads the
+//! ledger, skips every recorded job, and re-aggregates the persisted
+//! per-seed results — so a killed grid resumes mid-way and produces
+//! bit-identical artifacts (aggregation reads the JSON-roundtripped
+//! values in fixed job-key order, never the in-memory floats of
+//! whichever jobs happened to run this time).
+//!
+//! The file is written atomically (temp file + rename) after every
+//! job completion, so a kill at any instant leaves either the old or
+//! the new ledger — never a torn one. Format reference:
+//! `docs/TELEMETRY.md`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::harness::SeedResult;
+use crate::util::json::Json;
+
+use super::{GridSpec, Job};
+
+/// Ledger format version (`"schema"` in `ledger.json`). Bump only on
+/// breaking changes; additive fields keep the version.
+pub const LEDGER_SCHEMA_VERSION: u64 = 1;
+
+/// One completed job: identity quadruple + persisted result.
+#[derive(Debug, Clone)]
+pub struct LedgerEntry {
+    /// Job key (`<cell>_<model>_<method>_s<seed>`).
+    pub key: String,
+    /// Manifest model key.
+    pub model: String,
+    /// Effective method key ([`crate::policy::registry::effective_key`]).
+    pub method_key: String,
+    /// Training seed.
+    pub seed: u64,
+    /// Model-graph digest ([`crate::manifest::ModelEntry::digest`]).
+    pub digest: u64,
+    /// Config fingerprint ([`crate::config::Config::fingerprint`]).
+    pub config_hash: u64,
+    /// The persisted per-seed result.
+    pub result: SeedResult,
+    /// Wall-clock seconds the job took (informational; the one field
+    /// that differs across reruns and is never rendered into the
+    /// deterministic artifacts).
+    pub wall_s: f64,
+}
+
+/// One grid cell's structure: which jobs aggregate into which row.
+#[derive(Debug, Clone)]
+pub struct CellMeta {
+    /// Manifest model key.
+    pub model: String,
+    /// Row label (Table-1 method name / Table-2 configuration).
+    pub label: String,
+    /// Effective method key.
+    pub method_key: String,
+    /// Budget trace spec the cell ran under (`const` outside pressure).
+    pub trace: String,
+    /// Seeds, normalized (sorted, deduplicated).
+    pub seeds: Vec<u64>,
+    /// Job keys in aggregation order (one per seed).
+    pub job_keys: Vec<String>,
+}
+
+/// The grid ledger: structure + completed-job entries.
+#[derive(Debug, Clone)]
+pub struct Ledger {
+    /// Format version of the loaded/created file.
+    pub schema: u64,
+    /// Content-derived grid id (also the directory name).
+    pub grid_id: String,
+    /// Grid kind (`table1`/`table2`/`fig`/`pressure`).
+    pub kind: String,
+    /// Cell structure in presentation/aggregation order.
+    pub cells: Vec<CellMeta>,
+    /// Completed jobs by job key.
+    pub entries: BTreeMap<String, LedgerEntry>,
+}
+
+fn hex_u64(j: &Json, key: &str) -> Result<u64> {
+    let s = j.req(key)?.as_str().with_context(|| format!("ledger `{key}` not a string"))?;
+    u64::from_str_radix(s, 16).with_context(|| format!("ledger `{key}`: bad hex `{s}`"))
+}
+
+impl Ledger {
+    /// Fresh ledger for a grid about to run (no completed jobs yet).
+    pub fn new(grid_id: &str, spec: &GridSpec, jobs: &[Job]) -> Ledger {
+        let mut cells = Vec::with_capacity(spec.cells.len());
+        for (ci, c) in spec.cells.iter().enumerate() {
+            cells.push(CellMeta {
+                model: c.model_key.clone(),
+                label: c.label.clone(),
+                method_key: c.method_key.clone(),
+                trace: c.base.mem_trace.clone(),
+                seeds: c.seeds.clone(),
+                job_keys: jobs
+                    .iter()
+                    .filter(|j| j.cell == ci)
+                    .map(|j| j.key.clone())
+                    .collect(),
+            });
+        }
+        Ledger {
+            schema: LEDGER_SCHEMA_VERSION,
+            grid_id: grid_id.to_string(),
+            kind: spec.kind.name().to_string(),
+            cells,
+            entries: BTreeMap::new(),
+        }
+    }
+
+    /// Has this job already completed?
+    pub fn is_done(&self, key: &str) -> bool {
+        self.entries.contains_key(key)
+    }
+
+    /// Record one completed job.
+    pub fn insert(&mut self, entry: LedgerEntry) {
+        self.entries.insert(entry.key.clone(), entry);
+    }
+
+    /// Check a loaded ledger against the jobs the current command
+    /// expects: same grid id, and every recorded entry must match its
+    /// job's digest + config fingerprint. A mismatch means the code or
+    /// config changed under an existing grid directory — stale results
+    /// must never be silently re-aggregated.
+    pub fn validate_against(&self, grid_id: &str, jobs: &[Job]) -> Result<()> {
+        anyhow::ensure!(
+            self.grid_id == grid_id,
+            "ledger grid id `{}` does not match this command (`{grid_id}`) — \
+             delete the grid directory to start over",
+            self.grid_id
+        );
+        let by_key: BTreeMap<&str, &Job> =
+            jobs.iter().map(|j| (j.key.as_str(), j)).collect();
+        for (key, e) in &self.entries {
+            let job = by_key.get(key.as_str()).with_context(|| {
+                format!("ledger records job `{key}` which this grid does not contain")
+            })?;
+            anyhow::ensure!(
+                e.digest == job.digest && e.config_hash == job.config_hash,
+                "ledger entry `{key}` was produced by a different model/config \
+                 (digest {:016x} vs {:016x}, config {:016x} vs {:016x}) — \
+                 delete the grid directory to rerun",
+                e.digest,
+                job.digest,
+                e.config_hash,
+                job.config_hash
+            );
+        }
+        Ok(())
+    }
+
+    /// Per-cell seed results in canonical (cell, job-key) order.
+    /// Errors if any cell's job is missing — callers resume the grid
+    /// first, then aggregate.
+    pub fn cell_results(&self) -> Result<Vec<Vec<SeedResult>>> {
+        let mut out = Vec::with_capacity(self.cells.len());
+        for c in &self.cells {
+            let mut rs = Vec::with_capacity(c.job_keys.len());
+            for k in &c.job_keys {
+                let e = self.entries.get(k).with_context(|| {
+                    format!(
+                        "grid incomplete: job `{k}` has no ledger entry — \
+                         rerun the grid command to resume"
+                    )
+                })?;
+                rs.push(e.result.clone());
+            }
+            out.push(rs);
+        }
+        Ok(out)
+    }
+
+    /// Serialize the whole ledger.
+    pub fn to_json(&self) -> Json {
+        let mut root = BTreeMap::new();
+        root.insert("schema".into(), Json::Num(self.schema as f64));
+        root.insert("grid_id".into(), Json::Str(self.grid_id.clone()));
+        root.insert("kind".into(), Json::Str(self.kind.clone()));
+        root.insert(
+            "cells".into(),
+            Json::Arr(
+                self.cells
+                    .iter()
+                    .map(|c| {
+                        let mut m = BTreeMap::new();
+                        m.insert("model".into(), Json::Str(c.model.clone()));
+                        m.insert("label".into(), Json::Str(c.label.clone()));
+                        m.insert("method_key".into(), Json::Str(c.method_key.clone()));
+                        m.insert("trace".into(), Json::Str(c.trace.clone()));
+                        // Decimal strings, not JSON numbers: u64 seeds
+                        // past 2^53 must survive the round trip.
+                        m.insert(
+                            "seeds".into(),
+                            Json::Arr(
+                                c.seeds.iter().map(|s| Json::Str(s.to_string())).collect(),
+                            ),
+                        );
+                        m.insert(
+                            "job_keys".into(),
+                            Json::Arr(
+                                c.job_keys.iter().map(|k| Json::Str(k.clone())).collect(),
+                            ),
+                        );
+                        Json::Obj(m)
+                    })
+                    .collect(),
+            ),
+        );
+        let mut jobs = BTreeMap::new();
+        for (k, e) in &self.entries {
+            let mut m = BTreeMap::new();
+            m.insert("model".into(), Json::Str(e.model.clone()));
+            m.insert("method_key".into(), Json::Str(e.method_key.clone()));
+            m.insert("seed".into(), Json::Str(e.seed.to_string()));
+            m.insert("digest".into(), Json::Str(format!("{:016x}", e.digest)));
+            m.insert("config_hash".into(), Json::Str(format!("{:016x}", e.config_hash)));
+            m.insert("wall_s".into(), Json::Num(e.wall_s));
+            m.insert("result".into(), e.result.to_json());
+            jobs.insert(k.clone(), Json::Obj(m));
+        }
+        root.insert("jobs".into(), Json::Obj(jobs));
+        Json::Obj(root)
+    }
+
+    /// Parse a `ledger.json` document.
+    pub fn from_json(j: &Json) -> Result<Ledger> {
+        let schema = j.req("schema")?.as_i64().context("ledger schema")? as u64;
+        anyhow::ensure!(
+            schema == LEDGER_SCHEMA_VERSION,
+            "unsupported ledger schema {schema} (this build reads {LEDGER_SCHEMA_VERSION})"
+        );
+        let grid_id = j.req("grid_id")?.as_str().context("ledger grid_id")?.to_string();
+        let kind = j.req("kind")?.as_str().context("ledger kind")?.to_string();
+        let mut cells = Vec::new();
+        for c in j.req("cells")?.as_arr().context("ledger cells")? {
+            cells.push(CellMeta {
+                model: c.req("model")?.as_str().context("cell model")?.to_string(),
+                label: c.req("label")?.as_str().context("cell label")?.to_string(),
+                method_key: c
+                    .req("method_key")?
+                    .as_str()
+                    .context("cell method_key")?
+                    .to_string(),
+                trace: c.req("trace")?.as_str().context("cell trace")?.to_string(),
+                seeds: c
+                    .req("seeds")?
+                    .as_arr()
+                    .context("cell seeds")?
+                    .iter()
+                    .map(|s| -> Result<u64> {
+                        s.as_str()
+                            .context("cell seed not a string")?
+                            .parse()
+                            .context("cell seed not a u64")
+                    })
+                    .collect::<Result<_>>()?,
+                job_keys: c
+                    .req("job_keys")?
+                    .as_arr()
+                    .context("cell job_keys")?
+                    .iter()
+                    .map(|k| k.as_str().map(str::to_string).context("cell job key"))
+                    .collect::<Result<_>>()?,
+            });
+        }
+        let mut entries = BTreeMap::new();
+        for (k, e) in j.req("jobs")?.as_obj().context("ledger jobs")? {
+            entries.insert(
+                k.clone(),
+                LedgerEntry {
+                    key: k.clone(),
+                    model: e.req("model")?.as_str().context("job model")?.to_string(),
+                    method_key: e
+                        .req("method_key")?
+                        .as_str()
+                        .context("job method_key")?
+                        .to_string(),
+                    seed: e
+                        .req("seed")?
+                        .as_str()
+                        .context("job seed not a string")?
+                        .parse()
+                        .context("job seed not a u64")?,
+                    digest: hex_u64(e, "digest")?,
+                    config_hash: hex_u64(e, "config_hash")?,
+                    wall_s: e.req("wall_s")?.as_f64().context("job wall_s")?,
+                    result: SeedResult::from_json(e.req("result")?)
+                        .with_context(|| format!("job `{k}` result"))?,
+                },
+            );
+        }
+        Ok(Ledger { schema, grid_id, kind, cells, entries })
+    }
+
+    /// Load a ledger file.
+    pub fn load(path: &Path) -> Result<Ledger> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| {
+            anyhow::anyhow!("{}: {e} — delete the grid directory to start over", path.display())
+        })?;
+        Self::from_json(&j).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    /// Write atomically: serialize to `<path>.tmp`, then rename over
+    /// `path`. A kill mid-save leaves the previous ledger intact.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, self.to_json().to_string_compact())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming {} into place", tmp.display()))?;
+        Ok(())
+    }
+}

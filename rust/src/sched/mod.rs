@@ -1,0 +1,562 @@
+//! The experiment scheduler: decomposes the paper's grids
+//! (`table1`/`table2`/`fig`/`pressure`) into independent [`Job`]s —
+//! one per (model × method × seed × trace) cell-seed — and executes
+//! them concurrently on a dedicated *job pool*, streaming per-step
+//! telemetry and persisting every result into a resumable grid ledger.
+//!
+//! Two thread pools, one budget: the job pool (`--jobs N`) runs whole
+//! training runs side by side, while each job's *compute* pool (the
+//! deterministic [`crate::runtime::native::pool::Pool`]) gets
+//! `per_job_threads(total, jobs)` workers — so `jobs × threads` never
+//! oversubscribes the machine. Because the compute core is
+//! bit-identical for every thread count, `--jobs` is a pure wall-clock
+//! knob: a `--jobs 4` grid produces byte-identical artifacts to a
+//! `--jobs 1` run.
+//!
+//! Everything a grid produces lands in `runs/<grid-id>/`:
+//!
+//! ```text
+//! runs/table1-1a2b3c4d/
+//! ├── ledger.json              completed jobs + grid structure (resume state)
+//! ├── events/<job>.jsonl       schema-versioned per-step telemetry
+//! ├── table1.md                deterministic report artifact (by kind)
+//! └── BENCH_grid.json          decision-count / modeled-time summary
+//! ```
+//!
+//! The grid id is a content hash of every job's (key, model-graph
+//! digest, config fingerprint), so the same command always maps to
+//! the same directory, and *any* change to model, method, seed list,
+//! or hyperparameters maps to a new one. Rerunning a killed grid
+//! skips the jobs its ledger already records and re-aggregates the
+//! persisted results in fixed job-key order — resumption is
+//! bit-identical by construction, not by luck. See
+//! `docs/ARCHITECTURE.md` (subsystem tour) and `docs/TELEMETRY.md`
+//! (event + ledger formats).
+
+// Enforced as an error by the docs CI job (`cargo doc` with
+// `RUSTDOCFLAGS=-D warnings`); kept at `warn` here so tier-1
+// `cargo build`/`cargo test` never hard-fails on a doc regression.
+#![warn(missing_docs)]
+
+pub mod ledger;
+pub mod report;
+
+use std::collections::VecDeque;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::{Config, Method};
+use crate::harness::{self, SeedResult};
+use crate::manifest::Manifest;
+use crate::metrics::telemetry::{self, JsonlWriter, SharedSink};
+use crate::policy::registry;
+use crate::runtime::native::pool::{per_job_threads, resolve_threads, Pool};
+use crate::runtime::Engine;
+
+pub use ledger::{CellMeta, Ledger, LedgerEntry, LEDGER_SCHEMA_VERSION};
+
+/// Which paper artifact a grid regenerates (drives the report
+/// renderer and the row layout).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GridKind {
+    /// Methods × models (paper Table 1).
+    Table1,
+    /// Ablation rows for one model (paper Table 2).
+    Table2,
+    /// The adaptive-behaviour trace (paper Fig. 3).
+    Fig,
+    /// Method sweep under a moving VRAM budget (the pressure scenario).
+    Pressure,
+}
+
+impl GridKind {
+    /// Stable lowercase name (ledger `"kind"` field, grid-id prefix).
+    pub fn name(&self) -> &'static str {
+        match self {
+            GridKind::Table1 => "table1",
+            GridKind::Table2 => "table2",
+            GridKind::Fig => "fig",
+            GridKind::Pressure => "pressure",
+        }
+    }
+}
+
+/// One grid cell: a (model, method composition) pair swept over seeds.
+/// `base` is the fully-tweaked config (budget, trace, ablation);
+/// per-seed jobs differ from it only in the `seed` field.
+#[derive(Debug, Clone)]
+pub struct CellSpec {
+    /// Manifest model key.
+    pub model_key: String,
+    /// Row label (Table-1 method name / Table-2 configuration).
+    pub label: String,
+    /// Effective method key ([`registry::effective_key`] of `base`).
+    pub method_key: String,
+    /// Seeds, normalized (sorted, deduplicated).
+    pub seeds: Vec<u64>,
+    /// The cell's config at seed 0 (seed overridden per job).
+    pub base: Config,
+}
+
+/// A whole grid: kind + cells in presentation order.
+#[derive(Debug, Clone)]
+pub struct GridSpec {
+    /// Which artifact this grid regenerates.
+    pub kind: GridKind,
+    /// Cells in presentation/aggregation order.
+    pub cells: Vec<CellSpec>,
+}
+
+/// One schedulable unit: a single (model, method, seed, config) run.
+#[derive(Debug, Clone)]
+pub struct Job {
+    /// Index into [`GridSpec::cells`].
+    pub cell: usize,
+    /// Training seed.
+    pub seed: u64,
+    /// Filename-safe job key: `<cell>_<model>_<method>_s<seed>`.
+    pub key: String,
+    /// The fully-resolved config this job trains.
+    pub cfg: Config,
+    /// [`Config::fingerprint`] of `cfg` (ledger identity).
+    pub config_hash: u64,
+    /// Model-graph digest (ledger identity).
+    pub digest: u64,
+    /// Manifest model key (denormalized for telemetry/ledger).
+    pub model_key: String,
+    /// Effective method key (denormalized for telemetry/ledger).
+    pub method_key: String,
+}
+
+/// Replace any character that isn't filename-safe (the synthesized
+/// method keys contain `[`/`&`/`=`) with `-`.
+fn sanitize(s: &str) -> String {
+    s.chars()
+        .map(|c| if c.is_ascii_alphanumeric() || matches!(c, '_' | '-' | '.') { c } else { '-' })
+        .collect()
+}
+
+impl GridSpec {
+    /// Decompose into jobs — one per (cell, seed), in (cell, seed)
+    /// order. Validates every model key against the manifest and
+    /// stamps each job with its model-graph digest.
+    pub fn jobs(&self, manifest: &Manifest) -> Result<Vec<Job>> {
+        let mut jobs = Vec::new();
+        for (ci, cell) in self.cells.iter().enumerate() {
+            let digest = manifest.model(&cell.model_key)?.digest();
+            for &seed in &cell.seeds {
+                let mut cfg = cell.base.clone();
+                cfg.seed = seed;
+                cfg.validate()
+                    .with_context(|| format!("cell {ci} ({})", cell.label))?;
+                let key = format!(
+                    "{ci:02}_{}_{}_s{seed}",
+                    sanitize(&cell.model_key),
+                    sanitize(&cell.method_key)
+                );
+                jobs.push(Job {
+                    cell: ci,
+                    seed,
+                    config_hash: cfg.fingerprint(),
+                    digest,
+                    key,
+                    cfg,
+                    model_key: cell.model_key.clone(),
+                    method_key: cell.method_key.clone(),
+                });
+            }
+        }
+        anyhow::ensure!(!jobs.is_empty(), "grid has no jobs (empty cells or seed lists)");
+        Ok(jobs)
+    }
+
+    /// Content-derived grid id: `<kind>-<hash8>` over every job's
+    /// (key, digest, config fingerprint). The same command always maps
+    /// to the same id; any change to models, methods, seeds, or
+    /// hyperparameters maps to a fresh one.
+    pub fn grid_id(&self, jobs: &[Job]) -> String {
+        let mut desc = String::from(self.kind.name());
+        for j in jobs {
+            desc.push_str(&format!("|{}:{:016x}:{:016x}", j.key, j.digest, j.config_hash));
+        }
+        let h = crate::checkpoint::fnv1a(desc.as_bytes());
+        format!("{}-{:08x}", self.kind.name(), (h ^ (h >> 32)) as u32)
+    }
+}
+
+/// Scheduler knobs (the CLI's `--jobs`/`--threads`/`--out` flags).
+#[derive(Debug, Clone)]
+pub struct SchedOptions {
+    /// Concurrent jobs on the job pool (`--jobs`, default 1).
+    pub jobs: usize,
+    /// Total compute-thread budget shared by all concurrent jobs
+    /// (`--threads`; 0 = auto: `TRIACCEL_THREADS`, else machine
+    /// parallelism capped at 8). The scheduler caps concurrent
+    /// workers at this budget and gives each one
+    /// [`per_job_threads`]`(total, workers)` compute threads, so
+    /// `workers × threads` never exceeds the budget.
+    pub total_threads: usize,
+    /// Base output directory (`--out`, default `runs`); the grid
+    /// writes into `<out>/<grid-id>/`.
+    pub out_dir: PathBuf,
+    /// Test hook: stop after this many *newly executed* jobs, leaving
+    /// the grid incomplete — simulates a mid-grid kill for the
+    /// resume property suite. `None` (the default) runs to completion.
+    pub job_limit: Option<usize>,
+    /// Suppress per-job progress lines.
+    pub quiet: bool,
+}
+
+impl Default for SchedOptions {
+    fn default() -> SchedOptions {
+        SchedOptions {
+            jobs: 1,
+            total_threads: 0,
+            out_dir: PathBuf::from("runs"),
+            job_limit: None,
+            quiet: false,
+        }
+    }
+}
+
+/// What one `run_grid` call did.
+#[derive(Debug)]
+pub struct GridOutcome {
+    /// Content-derived grid id.
+    pub grid_id: String,
+    /// `out_dir/<grid_id>` — ledger, events, and report artifacts.
+    pub grid_dir: PathBuf,
+    /// Jobs executed by this call.
+    pub executed: usize,
+    /// Jobs skipped because the ledger already recorded them.
+    pub reused: usize,
+    /// Total jobs in the grid.
+    pub total: usize,
+    /// Did every job complete? (False only under [`SchedOptions::job_limit`].)
+    pub complete: bool,
+    /// Per-cell seed results in canonical order, re-read from the
+    /// persisted ledger (empty unless `complete`).
+    pub cells: Vec<Vec<SeedResult>>,
+    /// The completed grid's ledger as re-read from disk (`None`
+    /// unless `complete`) — feed it to [`report::cell_rows`] /
+    /// [`report::pressure_rows`] so stdout tables aggregate through
+    /// exactly the same path as the rendered artifacts.
+    pub ledger: Option<Ledger>,
+    /// Report artifacts rendered into `grid_dir` (empty unless
+    /// `complete`).
+    pub artifacts: Vec<PathBuf>,
+}
+
+/// Execute one job: open its telemetry stream, run the seed, persist
+/// the `run_started`/`run_finished` envelope, and build the ledger
+/// entry.
+fn run_job(engine: &Engine, job: &Job, grid_dir: &Path) -> Result<LedgerEntry> {
+    let events_path = grid_dir.join("events").join(format!("{}.jsonl", job.key));
+    let sink = SharedSink::new(JsonlWriter::create(&events_path)?);
+    sink.post(&telemetry::ev_run_started(
+        &job.key,
+        &job.model_key,
+        &job.method_key,
+        job.seed,
+        job.digest,
+        job.config_hash,
+    ));
+    let t0 = Instant::now();
+    let result = harness::run_seed(engine, job.cfg.clone(), Some(Box::new(sink.clone())))?;
+    let wall_s = t0.elapsed().as_secs_f64();
+    sink.post(&telemetry::ev_run_finished(&job.key, result.to_json(), wall_s));
+    sink.flush()?;
+    Ok(LedgerEntry {
+        key: job.key.clone(),
+        model: job.model_key.clone(),
+        method_key: job.method_key.clone(),
+        seed: job.seed,
+        digest: job.digest,
+        config_hash: job.config_hash,
+        result,
+        wall_s,
+    })
+}
+
+/// Run (or resume) a grid: skip ledger-recorded jobs, execute the rest
+/// on the job pool, persist each completion atomically, and — once the
+/// grid is whole — re-aggregate from the ledger and render the report
+/// artifacts. Aggregation always reads the persisted (JSON-roundtripped)
+/// values in job-key order, so interrupted-and-resumed grids, fresh
+/// grids, and any `--jobs` width all produce bit-identical artifacts.
+pub fn run_grid(spec: &GridSpec, opts: &SchedOptions) -> Result<GridOutcome> {
+    anyhow::ensure!(opts.jobs >= 1, "--jobs must be at least 1");
+    let manifest = crate::runtime::native::builtin_manifest();
+    let jobs = spec.jobs(&manifest)?;
+    let grid_id = spec.grid_id(&jobs);
+    let grid_dir = opts.out_dir.join(&grid_id);
+    std::fs::create_dir_all(grid_dir.join("events"))
+        .with_context(|| format!("creating {}", grid_dir.display()))?;
+    let ledger_path = grid_dir.join("ledger.json");
+    let mut led = if ledger_path.exists() {
+        let l = Ledger::load(&ledger_path)?;
+        l.validate_against(&grid_id, &jobs)?;
+        l
+    } else {
+        Ledger::new(&grid_id, spec, &jobs)
+    };
+
+    let mut pending: Vec<Job> =
+        jobs.iter().filter(|j| !led.is_done(&j.key)).cloned().collect();
+    let reused = jobs.len() - pending.len();
+    if let Some(k) = opts.job_limit {
+        pending.truncate(k);
+    }
+    let executed = pending.len();
+
+    if !pending.is_empty() {
+        let total_threads = if opts.total_threads > 0 {
+            opts.total_threads
+        } else {
+            resolve_threads(std::env::var("TRIACCEL_THREADS").ok().as_deref())
+        };
+        // Concurrent workers never exceed the pending work *or* the
+        // thread budget (more jobs than threads would oversubscribe no
+        // matter how the budget is split), and each worker's compute
+        // pool gets an equal share of the whole budget — so
+        // `workers × threads_each ≤ total_threads` always, and a
+        // resume with one pending job still uses the full budget.
+        let workers = opts.jobs.min(pending.len()).min(total_threads).max(1);
+        let threads_each = per_job_threads(total_threads, workers);
+        let queue = Mutex::new(VecDeque::from(pending));
+        let led_mutex = Mutex::new(&mut led);
+        let failure: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+        let grid_dir_ref = &grid_dir;
+        let ledger_path_ref = &ledger_path;
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| {
+                    // One engine per worker, reused across every job it
+                    // runs: the pool handle and the warm scratch arena
+                    // behind it survive job boundaries.
+                    let engine = Engine::native_with_pool(Pool::new(threads_each));
+                    loop {
+                        if failure.lock().unwrap().is_some() {
+                            return;
+                        }
+                        let job = queue.lock().unwrap().pop_front();
+                        let Some(job) = job else { return };
+                        match run_job(&engine, &job, grid_dir_ref) {
+                            Ok(entry) => {
+                                if !opts.quiet {
+                                    println!(
+                                        "  job {:<44} {:>7.2}s  acc {:5.1}%",
+                                        entry.key, entry.wall_s, entry.result.test_acc_pct
+                                    );
+                                }
+                                let mut l = led_mutex.lock().unwrap();
+                                l.insert(entry);
+                                if let Err(e) = l.save(ledger_path_ref) {
+                                    let mut f = failure.lock().unwrap();
+                                    if f.is_none() {
+                                        *f = Some(e);
+                                    }
+                                    return;
+                                }
+                            }
+                            Err(e) => {
+                                let mut f = failure.lock().unwrap();
+                                if f.is_none() {
+                                    *f = Some(anyhow::anyhow!("job {}: {e:#}", job.key));
+                                }
+                                return;
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        if let Some(e) = failure.into_inner().unwrap() {
+            return Err(e);
+        }
+    }
+
+    let complete = jobs.iter().all(|j| led.is_done(&j.key));
+    let mut outcome = GridOutcome {
+        grid_id,
+        grid_dir: grid_dir.clone(),
+        executed,
+        reused,
+        total: jobs.len(),
+        complete,
+        cells: Vec::new(),
+        ledger: None,
+        artifacts: Vec::new(),
+    };
+    if complete {
+        // Reload from disk so aggregation consumes exactly the
+        // persisted bits — the same inputs a later resume or `report`
+        // invocation would read.
+        let led = Ledger::load(&ledger_path)?;
+        outcome.cells = led.cell_results()?;
+        outcome.artifacts = report::render(&grid_dir, &led)?;
+        outcome.ledger = Some(led);
+    }
+    Ok(outcome)
+}
+
+// ---------------------------------------------------------------------------
+// Grid builders: the CLI subcommands' decompositions.
+// ---------------------------------------------------------------------------
+
+fn cell(model_key: &str, label: &str, seeds: &[u64], base: Config) -> CellSpec {
+    CellSpec {
+        model_key: model_key.to_string(),
+        label: label.to_string(),
+        method_key: registry::effective_key(&base),
+        seeds: harness::normalize_seeds(seeds),
+        base,
+    }
+}
+
+/// Table 1: every model × the paper's three method columns.
+pub fn table1_spec(models: &[&str], seeds: &[u64], tweak: &dyn Fn(&mut Config)) -> GridSpec {
+    let mut cells = Vec::new();
+    for model in models {
+        for method in [Method::Fp32, Method::AmpStatic, Method::TriAccel] {
+            let mut base = Config::cell(model, method, 0);
+            tweak(&mut base);
+            cells.push(cell(model, method.name(), seeds, base));
+        }
+    }
+    GridSpec { kind: GridKind::Table1, cells }
+}
+
+/// Table 2: the four ablation rows ([`harness::TABLE2_ROWS`]) for one
+/// model.
+pub fn table2_spec(model: &str, seeds: &[u64], tweak: &dyn Fn(&mut Config)) -> GridSpec {
+    let mut cells = Vec::new();
+    for (label, method, ablation) in harness::TABLE2_ROWS {
+        let mut base = Config::cell(model, method, 0);
+        base.ablation = ablation;
+        tweak(&mut base);
+        cells.push(cell(model, label, seeds, base));
+    }
+    GridSpec { kind: GridKind::Table2, cells }
+}
+
+/// The adaptive-behaviour figure: one Tri-Accel run at one seed.
+pub fn fig_spec(model: &str, seed: u64, tweak: &dyn Fn(&mut Config)) -> GridSpec {
+    let mut base = Config::cell(model, Method::TriAccel, 0);
+    tweak(&mut base);
+    GridSpec {
+        kind: GridKind::Fig,
+        cells: vec![cell(model, "Tri-Accel", &[seed], base)],
+    }
+}
+
+/// The VRAM-pressure sweep: registry methods × one model under a
+/// time-varying budget trace. Method keys and the trace spec are
+/// validated here, before any training burns time.
+pub fn pressure_spec(
+    model: &str,
+    method_keys: &[&str],
+    seeds: &[u64],
+    trace: &str,
+    tweak: &dyn Fn(&mut Config),
+) -> Result<GridSpec> {
+    crate::memsim::BudgetTrace::parse(trace)?;
+    let specs: Vec<&registry::MethodSpec> = method_keys
+        .iter()
+        .map(|k| registry::resolve(k.trim()))
+        .collect::<Result<_>>()?;
+    let mut cells = Vec::new();
+    for spec in specs {
+        let mut base = Config::cell(model, spec.family, 0);
+        registry::apply(&mut base, spec);
+        tweak(&mut base);
+        base.mem_trace = trace.to_string();
+        cells.push(cell(model, spec.label, seeds, base));
+    }
+    Ok(GridSpec { kind: GridKind::Pressure, cells })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_tweak() -> impl Fn(&mut Config) {
+        |cfg: &mut Config| {
+            cfg.steps_per_epoch = Some(2);
+            cfg.epochs = 1;
+            cfg.train_examples = 256;
+            cfg.eval_examples = 128;
+            cfg.batch_init = 32;
+            cfg.warmup_epochs = 0;
+            cfg.mem_budget_gb = 0.0;
+        }
+    }
+
+    #[test]
+    fn jobs_are_cell_seed_ordered_and_keyed() {
+        let manifest = crate::runtime::native::builtin_manifest();
+        let spec = table1_spec(&["tiny_cnn_c10"], &[1, 0], &tiny_tweak());
+        let jobs = spec.jobs(&manifest).unwrap();
+        assert_eq!(jobs.len(), 6, "3 methods x 2 seeds");
+        assert_eq!(jobs[0].key, "00_tiny_cnn_c10_fp32_s0", "seeds normalized ascending");
+        assert_eq!(jobs[1].key, "00_tiny_cnn_c10_fp32_s1");
+        assert_eq!(jobs[4].cell, 2);
+        assert_eq!(jobs[4].method_key, "tri_accel");
+        assert_eq!(jobs[4].cfg.seed, 0);
+        let with_dup = table1_spec(&["tiny_cnn_c10"], &[0, 0, 1], &tiny_tweak());
+        assert_eq!(with_dup.jobs(&manifest).unwrap().len(), 6, "duplicate seeds collapse");
+    }
+
+    #[test]
+    fn grid_id_tracks_content() {
+        let manifest = crate::runtime::native::builtin_manifest();
+        let a = table1_spec(&["tiny_cnn_c10"], &[0], &tiny_tweak());
+        let id_a = a.grid_id(&a.jobs(&manifest).unwrap());
+        let id_a2 = a.grid_id(&a.jobs(&manifest).unwrap());
+        assert_eq!(id_a, id_a2, "same spec, same id");
+        assert!(id_a.starts_with("table1-"), "{id_a}");
+        let b = table1_spec(&["tiny_cnn_c10"], &[0, 1], &tiny_tweak());
+        assert_ne!(id_a, b.grid_id(&b.jobs(&manifest).unwrap()), "seed list changes id");
+        let c = table1_spec(&["tiny_cnn_c100"], &[0], &tiny_tweak());
+        assert_ne!(id_a, c.grid_id(&c.jobs(&manifest).unwrap()), "model changes id");
+    }
+
+    #[test]
+    fn unknown_model_fails_at_decomposition() {
+        let manifest = crate::runtime::native::builtin_manifest();
+        let spec = table1_spec(&["resnet18_c10"], &[0], &tiny_tweak());
+        assert!(spec.jobs(&manifest).is_err());
+    }
+
+    #[test]
+    fn pressure_spec_validates_inputs_early() {
+        assert!(pressure_spec("tiny_cnn_c10", &["nope"], &[0], "const", &tiny_tweak()).is_err());
+        assert!(
+            pressure_spec("tiny_cnn_c10", &["fp32"], &[0], "wobble:3", &tiny_tweak()).is_err()
+        );
+        let methods = ["fp32", "greedy_batch"];
+        let ok = pressure_spec("tiny_cnn_c10", &methods, &[0], "ramp:1:4:0.6", &tiny_tweak())
+            .unwrap();
+        assert_eq!(ok.cells.len(), 2);
+        assert_eq!(ok.cells[0].base.mem_trace, "ramp:1:4:0.6");
+    }
+
+    #[test]
+    fn table2_cells_map_to_effective_keys() {
+        let spec = table2_spec("tiny_cnn_c10", &[0], &tiny_tweak());
+        let keys: Vec<&str> = spec.cells.iter().map(|c| c.method_key.as_str()).collect();
+        assert_eq!(keys[0], "fp32");
+        assert_eq!(keys[1], "greedy_batch", "+ Dynamic Batch is the elasticity-only spec");
+        assert!(keys[2].starts_with("tri_accel[p1b0c0"), "unnamed composition: {}", keys[2]);
+        assert_eq!(keys[3], "tri_accel");
+    }
+
+    #[test]
+    fn sanitize_makes_filename_safe_keys() {
+        assert_eq!(sanitize("tri_accel[p1b0c0&pin=auto]"), "tri_accel-p1b0c0-pin-auto-");
+        assert_eq!(sanitize("ok_name-1.2"), "ok_name-1.2");
+    }
+}

@@ -1,0 +1,270 @@
+//! Deterministic report artifacts rendered from the grid ledger alone.
+//!
+//! `render` turns a *complete* ledger into the paper artifacts for its
+//! grid kind — `table1.md` / `table2.md` / `pressure.md` — plus a
+//! `BENCH_grid.json` summary of modeled time and policy-decision
+//! counts. Every value comes from the persisted per-seed results
+//! (JSON-roundtripped, aggregated in fixed job-key order) and wall
+//! clock is deliberately excluded, so the artifacts are byte-identical
+//! across `--jobs` widths, kills-and-resumes, and machines: they diff
+//! cleanly across PRs. Per-job wall seconds stay in `ledger.json`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::harness::{self, CellResult, PressureCell, SeedResult};
+use crate::util::bench::BenchReport;
+use crate::util::json::Json;
+
+use super::ledger::{CellMeta, Ledger};
+
+/// Render the report artifacts for a complete ledger into `grid_dir`;
+/// returns the paths written. Errors if any job is missing (resume the
+/// grid first).
+pub fn render(grid_dir: &Path, led: &Ledger) -> Result<Vec<PathBuf>> {
+    let cells = led.cell_results()?;
+    let mut artifacts = Vec::new();
+    let md = match led.kind.as_str() {
+        "table1" => Some(("table1.md", table1_md(led)?)),
+        "table2" => Some(("table2.md", table2_md(led)?)),
+        "pressure" => Some(("pressure.md", pressure_md(led)?)),
+        "fig" => None,
+        other => anyhow::bail!("unknown grid kind `{other}` in ledger"),
+    };
+    if let Some((name, text)) = md {
+        let path = grid_dir.join(name);
+        std::fs::write(&path, text).with_context(|| format!("writing {}", path.display()))?;
+        artifacts.push(path);
+    }
+    let bench = bench_grid(led, &cells)?;
+    let bench_path = grid_dir.join("BENCH_grid.json");
+    bench.write(&bench_path).with_context(|| format!("writing {}", bench_path.display()))?;
+    artifacts.push(bench_path);
+    Ok(artifacts)
+}
+
+/// Aggregate a complete ledger into Table rows (one [`CellResult`]
+/// per cell, canonical order). This is the *only* reduction path: the
+/// markdown artifacts and the CLI's stdout tables both call it, so
+/// the two can never disagree.
+pub fn cell_rows(led: &Ledger) -> Result<Vec<CellResult>> {
+    led.cells
+        .iter()
+        .zip(led.cell_results()?.iter())
+        .map(|(meta, rs)| harness::aggregate_cell(&meta.model, &meta.label, rs))
+        .collect()
+}
+
+/// Aggregate a complete ledger into pressure-sweep rows (shared by
+/// `pressure.md` and the CLI's stdout table).
+pub fn pressure_rows(led: &Ledger) -> Result<Vec<PressureCell>> {
+    led.cells
+        .iter()
+        .zip(led.cell_results()?.iter())
+        .map(|(meta, rs)| harness::aggregate_pressure(&meta.method_key, &meta.label, rs))
+        .collect()
+}
+
+fn table1_md(led: &Ledger) -> Result<String> {
+    let rows = cell_rows(led)?;
+    let mut out = String::new();
+    out.push_str(&format!("# Table 1 — grid `{}`\n\n", led.grid_id));
+    out.push_str(
+        "Rendered deterministically from `ledger.json`: per-seed results are \
+         aggregated in fixed job-key order, wall clock is excluded (see \
+         `docs/TELEMETRY.md`). Time is modeled accelerator seconds per epoch.\n\n",
+    );
+    out.push_str("| Model | Method | Acc (%) | Time (s) | VRAM (GB) | Score |\n");
+    out.push_str("|---|---|---|---|---|---|\n");
+    for r in &rows {
+        out.push_str(&format!(
+            "| {} | {} | {:.1} ± {:.2} | {:.2} ± {:.2} | {:.4} ± {:.4} | {:.2} |\n",
+            r.model_key,
+            r.label,
+            r.acc.mean(),
+            r.acc.std(),
+            r.modeled_s.mean(),
+            r.modeled_s.std(),
+            r.peak_gb.mean(),
+            r.peak_gb.std(),
+            r.score.mean(),
+        ));
+    }
+    // Headline deltas for full (FP32, AMP, Tri-Accel) triples.
+    let mut headlines = String::new();
+    for chunk in rows.chunks(3) {
+        if chunk.len() == 3
+            && chunk[0].model_key == chunk[2].model_key
+            && chunk[0].label == "FP32 Baseline"
+            && chunk[2].label == "Tri-Accel"
+        {
+            headlines.push_str(&format!(
+                "- **{}** — {}\n",
+                chunk[0].model_key,
+                harness::headline(&chunk[0], &chunk[2])
+            ));
+        }
+    }
+    if !headlines.is_empty() {
+        out.push_str("\n## Headline deltas\n\n");
+        out.push_str(&headlines);
+    }
+    Ok(out)
+}
+
+fn table2_md(led: &Ledger) -> Result<String> {
+    let rows = cell_rows(led)?;
+    anyhow::ensure!(!rows.is_empty(), "table2 grid has no rows");
+    let model = &rows[0].model_key;
+    let base = rows[0].peak_gb.mean();
+    let mut out = String::new();
+    out.push_str(&format!("# Table 2 ablation — {model} — grid `{}`\n\n", led.grid_id));
+    out.push_str("| Configuration | VRAM (GB) | Reduction |\n|---|---|---|\n");
+    for (i, r) in rows.iter().enumerate() {
+        let red = if i == 0 {
+            "-".to_string()
+        } else {
+            format!("{:.1}%", 100.0 * (base - r.peak_gb.mean()) / base)
+        };
+        out.push_str(&format!("| {} | {:.4} | {} |\n", r.label, r.peak_gb.mean(), red));
+    }
+    Ok(out)
+}
+
+fn pressure_md(led: &Ledger) -> Result<String> {
+    let rows = pressure_rows(led)?;
+    anyhow::ensure!(!rows.is_empty(), "pressure grid has no rows");
+    let model = &led.cells[0].model;
+    let trace = &led.cells[0].trace;
+    let seeds = led.cells[0].seeds.len();
+    let mut out = String::new();
+    out.push_str(&format!("# VRAM pressure — {model} — grid `{}`\n\n", led.grid_id));
+    out.push_str(&format!(
+        "Budget trace `{trace}`, {seeds} seed(s). Static methods accumulate \
+         simulated OOMs; elastic methods shed batch buckets and survive.\n\n"
+    ));
+    out.push_str("| Method | Acc (%) | VRAM (GB) | OOMs | B_min | Decisions | Score |\n");
+    out.push_str("|---|---|---|---|---|---|---|\n");
+    for r in &rows {
+        let min_b = if r.min_batch == usize::MAX { 0 } else { r.min_batch };
+        out.push_str(&format!(
+            "| {} | {:.1} ± {:.2} | {:.4} | {} | {} | {} | {:.2} |\n",
+            r.label,
+            r.acc.mean(),
+            r.acc.std(),
+            r.peak_gb.mean(),
+            r.oom_events,
+            min_b,
+            r.batch_decisions,
+            r.score.mean(),
+        ));
+    }
+    Ok(out)
+}
+
+/// The `BENCH_grid.json` summary: one row per cell with modeled-time
+/// aggregates and summed policy-decision counters. Wall clock is
+/// excluded by design (it lives per job in `ledger.json`), so this
+/// file is bit-identical across reruns, resumes, and `--jobs` widths.
+fn bench_grid(led: &Ledger, cells: &[Vec<SeedResult>]) -> Result<BenchReport> {
+    let mut rep = BenchReport::new("grid");
+    rep.meta_str("grid_id", &led.grid_id);
+    rep.meta_str("kind", &led.kind);
+    rep.meta_num("schema", led.schema as f64);
+    rep.meta_num("jobs_total", cells.iter().map(Vec::len).sum::<usize>() as f64);
+    for (meta, rs) in led.cells.iter().zip(cells.iter()) {
+        rep.push_json(bench_row(meta, rs)?);
+    }
+    Ok(rep)
+}
+
+fn bench_row(meta: &CellMeta, rs: &[SeedResult]) -> Result<Json> {
+    let cell = harness::aggregate_cell(&meta.model, &meta.label, rs)?;
+    let press = harness::aggregate_pressure(&meta.method_key, &meta.label, rs)?;
+    let mut m = BTreeMap::new();
+    m.insert("name".into(), Json::Str(format!("{}/{}", meta.model, meta.method_key)));
+    m.insert("label".into(), Json::Str(meta.label.clone()));
+    m.insert("trace".into(), Json::Str(meta.trace.clone()));
+    m.insert("seeds".into(), Json::Num(rs.len() as f64));
+    let mut num = |k: &str, v: f64| {
+        m.insert(k.to_string(), Json::Num(v));
+    };
+    num("acc_mean", cell.acc.mean());
+    num("acc_std", cell.acc.std());
+    num("modeled_s_mean", cell.modeled_s.mean());
+    num("modeled_s_std", cell.modeled_s.std());
+    num("peak_gb_mean", cell.peak_gb.mean());
+    num("score_mean", cell.score.mean());
+    num("oom_events", press.oom_events as f64);
+    num("batch_decisions", press.batch_decisions as f64);
+    num("min_batch", press.min_batch as f64);
+    let sum = |f: fn(&SeedResult) -> u64| rs.iter().map(f).sum::<u64>() as f64;
+    num("ctrl_windows", sum(|r| r.ctrl_windows));
+    num("precision_transitions", sum(|r| r.precision_transitions));
+    num("curv_firings", sum(|r| r.curv_firings));
+    Ok(Json::Obj(m))
+}
+
+/// The adaptive-behaviour series of a `fig` grid, reconstructed from
+/// its telemetry stream alone (`events/<job>.jsonl`): per-epoch
+/// efficiency/precision-mix rows plus the deduplicated (step, batch)
+/// trace — proof the event stream carries everything the figure needs.
+#[derive(Debug, Clone)]
+pub struct FigSeries {
+    /// (epoch, efficiency score).
+    pub epoch_eff: Vec<(usize, f64)>,
+    /// (epoch, fp16 frac, bf16 frac, fp32 frac).
+    pub mix_trace: Vec<(usize, f64, f64, f64)>,
+    /// (step, batch size) at every change.
+    pub batch_trace: Vec<(u64, usize)>,
+}
+
+/// Read a `fig` grid's series back out of its telemetry JSONL.
+pub fn fig_series(grid_dir: &Path, led: &Ledger) -> Result<FigSeries> {
+    anyhow::ensure!(led.kind == "fig", "fig series need a fig grid, got `{}`", led.kind);
+    let key = led
+        .cells
+        .first()
+        .and_then(|c| c.job_keys.first())
+        .context("fig ledger has no job")?;
+    let path = grid_dir.join("events").join(format!("{key}.jsonl"));
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let mut out = FigSeries {
+        epoch_eff: Vec::new(),
+        mix_trace: Vec::new(),
+        batch_trace: Vec::new(),
+    };
+    for (ln, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let ev = Json::parse(line)
+            .map_err(|e| anyhow::anyhow!("{}:{}: {e}", path.display(), ln + 1))?;
+        match ev.req("event")?.as_str() {
+            Some("epoch") => {
+                let epoch = ev.req("epoch")?.as_usize().context("epoch index")?;
+                out.epoch_eff
+                    .push((epoch, ev.req("eff_score")?.as_f64().context("eff_score")?));
+                out.mix_trace.push((
+                    epoch,
+                    ev.req("fp16_frac")?.as_f64().context("fp16_frac")?,
+                    ev.req("bf16_frac")?.as_f64().context("bf16_frac")?,
+                    ev.req("fp32_frac")?.as_f64().context("fp32_frac")?,
+                ));
+            }
+            Some("step") => {
+                let step = ev.req("step")?.as_i64().context("step index")? as u64;
+                let b = ev.req("batch")?.as_usize().context("step batch")?;
+                if out.batch_trace.last().map(|&(_, pb)| pb) != Some(b) {
+                    out.batch_trace.push((step, b));
+                }
+            }
+            _ => {}
+        }
+    }
+    anyhow::ensure!(!out.epoch_eff.is_empty(), "no epoch events in {}", path.display());
+    Ok(out)
+}

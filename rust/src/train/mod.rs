@@ -22,6 +22,7 @@ use crate::config::{Config, Method};
 use crate::data::{auto_source, BatchIter, Dataset, IMG_ELEMS};
 use crate::manifest::FP32;
 use crate::memsim::{BudgetTrace, MemoryMonitor, SpeedModel, VramSim};
+use crate::metrics::telemetry::{self, TelemetrySink};
 use crate::metrics::{efficiency_score, EpochRecord, PrecisionMix, RunMetrics};
 use crate::policy::{registry, ControlPlane};
 use crate::runtime::Engine;
@@ -57,6 +58,10 @@ pub struct Trainer<'e> {
     layer_flops: Vec<usize>,
     global_step: u64,
     steps_per_epoch_hint: usize,
+    /// Optional streaming event sink (`step`/`oom`/`control_window`/
+    /// `epoch` JSONL telemetry — see `metrics::telemetry`). `None`
+    /// (the default) emits nothing and costs nothing.
+    telemetry: Option<Box<dyn TelemetrySink>>,
 }
 
 impl<'e> Trainer<'e> {
@@ -128,8 +133,16 @@ impl<'e> Trainer<'e> {
             layer_flops,
             global_step: 0,
             steps_per_epoch_hint,
+            telemetry: None,
             cfg,
         })
+    }
+
+    /// Install a streaming telemetry sink: the trainer will emit one
+    /// `step` event per optimizer step plus `oom`, `control_window`,
+    /// and `epoch` events as they occur (schema in `docs/TELEMETRY.md`).
+    pub fn set_telemetry(&mut self, sink: Box<dyn TelemetrySink>) {
+        self.telemetry = Some(sink);
     }
 
     pub fn global_step(&self) -> u64 {
@@ -178,6 +191,10 @@ impl<'e> Trainer<'e> {
             // records that a real run would have crashed here).
             self.controller.oom_event(self.global_step);
             self.metrics.oom_events += 1;
+            let max_gb = self.memsim.mem_max_gb();
+            if let Some(sink) = self.telemetry.as_mut() {
+                sink.emit(&telemetry::ev_oom(self.global_step, usage.total_gb, max_gb));
+            }
         }
 
         // §3.2 curvature probe on its own cadence.
@@ -214,10 +231,21 @@ impl<'e> Trainer<'e> {
                 memsim.would_fit_within(nb, &codes, curv_on, rho_high)
             });
             self.metrics.promotions += d.promotions.len() as u64;
+            if let Some(sink) = self.telemetry.as_mut() {
+                sink.emit(&telemetry::ev_control_window(
+                    self.global_step,
+                    d.promotions.len(),
+                    d.batch_size,
+                    d.loss_scale as f64,
+                ));
+            }
         }
 
         let modeled = self.speed.step_seconds(b, &ctrl.codes, &self.layer_flops);
         self.metrics.record_batch(self.global_step, b);
+        if let Some(sink) = self.telemetry.as_mut() {
+            sink.emit(&telemetry::ev_step(self.global_step, b, out.loss as f64, modeled));
+        }
         self.global_step += 1;
         Ok((out.loss as f64, out.correct, b, modeled))
     }
@@ -273,6 +301,9 @@ impl<'e> Trainer<'e> {
             eff_score: efficiency_score(test_acc, modeled_norm, peak),
         };
         self.metrics.epochs.push(rec.clone());
+        if let Some(sink) = self.telemetry.as_mut() {
+            sink.emit(&telemetry::ev_epoch(&rec));
+        }
         self.train_iter.next_epoch();
         let counts = self.controller.counts();
         self.metrics.precision_transitions = counts.precision_transitions;

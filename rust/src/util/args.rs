@@ -1,7 +1,9 @@
 //! Tiny CLI argument parser (substrate — no clap in the offline build).
 //!
-//! Grammar: `prog <subcommand> [--key value]... [--flag]...`
+//! Grammar: `prog <subcommand> [--key value | --key=value]... [--flag]...`
 //! Unknown keys are an error (catches typos in experiment scripts).
+//! `--key=value` splits at the first `=`, so `--set=batch_init=96`
+//! reads key `set`, value `batch_init=96`.
 
 use std::collections::BTreeMap;
 
@@ -11,6 +13,10 @@ pub struct Args {
     kv: BTreeMap<String, String>,
     flags: Vec<String>,
     consumed: std::cell::RefCell<Vec<String>>,
+    /// `--flag=VALUE` spellings whose VALUE wasn't a recognized
+    /// boolean — reported by [`Self::reject_unknown`] (same
+    /// typo-catching stance as unknown keys).
+    bad_bools: std::cell::RefCell<Vec<String>>,
 }
 
 impl Args {
@@ -26,7 +32,11 @@ impl Args {
             let key = a
                 .strip_prefix("--")
                 .ok_or_else(|| anyhow::anyhow!("expected --option, got `{a}`"))?;
-            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+            if let Some((k, v)) = key.split_once('=') {
+                anyhow::ensure!(!k.is_empty(), "empty option name in `{a}`");
+                out.kv.insert(k.to_string(), v.to_string());
+                i += 1;
+            } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
                 out.kv.insert(key.to_string(), argv[i + 1].clone());
                 i += 2;
             } else {
@@ -60,13 +70,33 @@ impl Args {
         }
     }
 
+    /// Boolean flag: bare `--flag`, or the `--flag=true|false` spelling
+    /// (`true|1|yes` / `false|0|no`). Any other `=` value is recorded
+    /// and reported as an error by [`Self::reject_unknown`] — a typo'd
+    /// `--smoke=True` must not silently run the full-budget grid.
     pub fn flag(&self, key: &str) -> bool {
         self.consumed.borrow_mut().push(key.to_string());
-        self.flags.iter().any(|f| f == key)
+        if self.flags.iter().any(|f| f == key) {
+            return true;
+        }
+        match self.kv.get(key).map(|s| s.as_str()) {
+            Some("true" | "1" | "yes") => true,
+            Some("false" | "0" | "no") | None => false,
+            Some(other) => {
+                self.bad_bools
+                    .borrow_mut()
+                    .push(format!("--{key}={other}"));
+                false
+            }
+        }
     }
 
-    /// Call after all gets: errors on any option the program never read.
+    /// Call after all gets: errors on any option the program never
+    /// read, and on any boolean flag given a non-boolean `=` value.
     pub fn reject_unknown(&self) -> anyhow::Result<()> {
+        if let Some(bad) = self.bad_bools.borrow().first() {
+            anyhow::bail!("{bad}: boolean flags take true|false|1|0|yes|no");
+        }
         let seen = self.consumed.borrow();
         for k in self.kv.keys().chain(self.flags.iter()) {
             if !seen.iter().any(|s| s == k) {
@@ -93,6 +123,33 @@ mod tests {
         assert_eq!(a.parse_or("epochs", 0usize).unwrap(), 3);
         assert!(a.flag("verbose"));
         a.reject_unknown().unwrap();
+    }
+
+    #[test]
+    fn equals_syntax_splits_at_first_equals() {
+        let a = Args::parse(&argv("table1 --jobs=4 --set=batch_init=96 --smoke")).unwrap();
+        assert_eq!(a.parse_or("jobs", 1usize).unwrap(), 4);
+        assert_eq!(a.get("set"), Some("batch_init=96"));
+        assert!(a.flag("smoke"));
+        a.reject_unknown().unwrap();
+        assert!(Args::parse(&argv("run --=v")).is_err(), "empty key rejected");
+    }
+
+    #[test]
+    fn flags_accept_equals_boolean_spelling() {
+        let a = Args::parse(&argv("table1 --smoke=true --quiet=false")).unwrap();
+        assert!(a.flag("smoke"), "--smoke=true must behave like --smoke");
+        assert!(!a.flag("quiet"));
+        a.reject_unknown().unwrap();
+    }
+
+    #[test]
+    fn flags_reject_typod_boolean_values() {
+        let a = Args::parse(&argv("table1 --smoke=True")).unwrap();
+        assert!(!a.flag("smoke"), "unrecognized value reads false pre-reject");
+        let err = a.reject_unknown().unwrap_err().to_string();
+        assert!(err.contains("--smoke=True"), "{err}");
+        assert!(err.contains("true|false"), "{err}");
     }
 
     #[test]

@@ -78,6 +78,15 @@ impl BenchReport {
         self.results.push(r.to_json());
     }
 
+    /// Record one pre-built result row. The grid scheduler's
+    /// `BENCH_grid.json` reuses this report container for its
+    /// per-cell modeled-time/decision-count rows, so every
+    /// machine-readable bench artifact shares one envelope shape
+    /// (`{suite, ...meta, results: [...]}`).
+    pub fn push_json(&mut self, row: Json) {
+        self.results.push(row);
+    }
+
     pub fn len(&self) -> usize {
         self.results.len()
     }

@@ -1,0 +1,224 @@
+//! Experiment-scheduler integration: the resumable-grid property suite.
+//!
+//! The contracts under test (ISSUE 5 acceptance criteria):
+//! * a grid killed after k of n jobs — for every k — and then resumed
+//!   produces `table1.md` and `BENCH_grid.json` byte-identical to an
+//!   uninterrupted run;
+//! * `--jobs 1` and `--jobs 4` produce byte-identical artifacts over a
+//!   2-model × 2-method × 2-seed smoke grid;
+//! * the telemetry JSONL stream is schema-versioned, well-formed, and
+//!   complete enough to reconstruct the adaptive-behaviour figure.
+
+use std::path::{Path, PathBuf};
+
+use tri_accel::config::{Config, Method};
+use tri_accel::policy::registry;
+use tri_accel::sched::{self, CellSpec, GridKind, GridSpec, SchedOptions};
+use tri_accel::util::json::Json;
+
+fn tweak(cfg: &mut Config) {
+    cfg.steps_per_epoch = Some(2);
+    cfg.epochs = 1;
+    cfg.train_examples = 256;
+    cfg.eval_examples = 128;
+    cfg.batch_init = 32;
+    cfg.t_ctrl = 2;
+    cfg.t_curv = 3;
+    cfg.curv_warmup = 1;
+    cfg.batch_cooldown = 2;
+    cfg.warmup_epochs = 0;
+    cfg.mem_budget_gb = 0.0;
+    cfg.mem_noise = 0.0;
+}
+
+/// 2 models × 2 methods × 2 seeds = 8 jobs.
+fn smoke_spec() -> GridSpec {
+    let mut cells = Vec::new();
+    for model in ["tiny_cnn_c10", "tiny_cnn_c100"] {
+        for method in [Method::Fp32, Method::TriAccel] {
+            let mut base = Config::cell(model, method, 0);
+            tweak(&mut base);
+            cells.push(CellSpec {
+                model_key: model.to_string(),
+                label: method.name().to_string(),
+                method_key: registry::effective_key(&base),
+                seeds: vec![0, 1],
+                base,
+            });
+        }
+    }
+    GridSpec { kind: GridKind::Table1, cells }
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!(
+        "triaccel_sched_{name}_{}",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&p).ok();
+    p
+}
+
+fn opts(out: &Path, jobs: usize) -> SchedOptions {
+    SchedOptions {
+        jobs,
+        total_threads: 4,
+        out_dir: out.to_path_buf(),
+        job_limit: None,
+        quiet: true,
+    }
+}
+
+fn read(p: &Path) -> String {
+    std::fs::read_to_string(p).unwrap_or_else(|e| panic!("reading {}: {e}", p.display()))
+}
+
+#[test]
+fn jobs1_and_jobs4_grids_are_bit_identical() {
+    let spec = smoke_spec();
+    let out1 = tmp("j1");
+    let out4 = tmp("j4");
+    let o1 = sched::run_grid(&spec, &opts(&out1, 1)).unwrap();
+    let o4 = sched::run_grid(&spec, &opts(&out4, 4)).unwrap();
+    assert!(o1.complete && o4.complete);
+    assert_eq!(o1.grid_id, o4.grid_id, "grid id is content-derived, not width-derived");
+    assert_eq!(o1.total, 8);
+    assert_eq!(o1.executed, 8);
+    assert_eq!(
+        read(&o1.grid_dir.join("table1.md")),
+        read(&o4.grid_dir.join("table1.md")),
+        "table1.md must not depend on job-pool width"
+    );
+    assert_eq!(
+        read(&o1.grid_dir.join("BENCH_grid.json")),
+        read(&o4.grid_dir.join("BENCH_grid.json")),
+        "BENCH_grid.json must not depend on job-pool width"
+    );
+    // Aggregates re-read from the two ledgers agree bit-for-bit too.
+    assert_eq!(o1.cells.len(), o4.cells.len());
+    for (a, b) in o1.cells.iter().zip(o4.cells.iter()) {
+        assert_eq!(a, b);
+    }
+    std::fs::remove_dir_all(&out1).ok();
+    std::fs::remove_dir_all(&out4).ok();
+}
+
+#[test]
+fn killed_grid_resumes_bit_identically_for_every_k() {
+    let spec = smoke_spec();
+    let ref_out = tmp("ref");
+    let reference = sched::run_grid(&spec, &opts(&ref_out, 1)).unwrap();
+    assert!(reference.complete);
+    let n = reference.total;
+    assert_eq!(n, 8);
+    let ref_table = read(&reference.grid_dir.join("table1.md"));
+    let ref_bench = read(&reference.grid_dir.join("BENCH_grid.json"));
+    assert!(ref_table.contains("| tiny_cnn_c10 |"), "{ref_table}");
+
+    for k in 0..n {
+        let out = tmp(&format!("k{k}"));
+        // "Kill" after k jobs: the scheduler stops with the ledger
+        // recording exactly those completions.
+        let mut partial_opts = opts(&out, 2);
+        partial_opts.job_limit = Some(k);
+        let partial = sched::run_grid(&spec, &partial_opts).unwrap();
+        assert_eq!(partial.executed, k, "k={k}");
+        assert!(!partial.complete, "k={k}");
+        assert!(partial.artifacts.is_empty(), "incomplete grids render nothing");
+        assert!(partial.cells.is_empty());
+
+        // Resume at a different job width; only the missing jobs run.
+        let resumed = sched::run_grid(&spec, &opts(&out, 4)).unwrap();
+        assert!(resumed.complete, "k={k}");
+        assert_eq!(resumed.reused, k, "k={k}");
+        assert_eq!(resumed.executed, n - k, "k={k}");
+        assert_eq!(
+            read(&resumed.grid_dir.join("table1.md")),
+            ref_table,
+            "resumed table1.md diverged at k={k}"
+        );
+        assert_eq!(
+            read(&resumed.grid_dir.join("BENCH_grid.json")),
+            ref_bench,
+            "resumed BENCH_grid.json diverged at k={k}"
+        );
+        std::fs::remove_dir_all(&out).ok();
+    }
+
+    // A no-op rerun of a complete grid reuses everything and
+    // re-renders identical artifacts.
+    let rerun = sched::run_grid(&spec, &opts(&ref_out, 2)).unwrap();
+    assert_eq!(rerun.executed, 0);
+    assert_eq!(rerun.reused, n);
+    assert_eq!(read(&rerun.grid_dir.join("table1.md")), ref_table);
+    std::fs::remove_dir_all(&ref_out).ok();
+}
+
+#[test]
+fn pressure_grid_persists_and_renders() {
+    let out = tmp("press");
+    let spec = sched::pressure_spec(
+        "tiny_cnn_c10",
+        &["amp_dynamic", "greedy_batch"],
+        &[0],
+        "ramp:1:3:0.55",
+        &tweak,
+    )
+    .unwrap();
+    let o = sched::run_grid(&spec, &opts(&out, 2)).unwrap();
+    assert!(o.complete);
+    assert_eq!(o.total, 2);
+    let md = read(&o.grid_dir.join("pressure.md"));
+    assert!(md.contains("ramp:1:3:0.55"), "{md}");
+    assert!(md.contains("AMP (Dynamic)") && md.contains("Greedy Batch"), "{md}");
+    // Rendering is idempotent: a second pass writes identical bytes.
+    let led = sched::Ledger::load(&o.grid_dir.join("ledger.json")).unwrap();
+    let bench_before = read(&o.grid_dir.join("BENCH_grid.json"));
+    sched::report::render(&o.grid_dir, &led).unwrap();
+    assert_eq!(read(&o.grid_dir.join("pressure.md")), md);
+    assert_eq!(read(&o.grid_dir.join("BENCH_grid.json")), bench_before);
+    std::fs::remove_dir_all(&out).ok();
+}
+
+#[test]
+fn telemetry_stream_is_schema_versioned_and_reconstructs_fig() {
+    let out = tmp("fig");
+    let spec = sched::fig_spec("tiny_cnn_c10", 0, &tweak);
+    let o = sched::run_grid(&spec, &opts(&out, 1)).unwrap();
+    assert!(o.complete);
+    let led = sched::Ledger::load(&o.grid_dir.join("ledger.json")).unwrap();
+    let key = &led.cells[0].job_keys[0];
+    let text = read(&o.grid_dir.join("events").join(format!("{key}.jsonl")));
+    let events: Vec<Json> = text.lines().map(|l| Json::parse(l).unwrap()).collect();
+    assert!(events.len() >= 4, "run_started + 2 steps + epoch + run_finished");
+    for ev in &events {
+        assert_eq!(ev.req("schema").unwrap().as_i64(), Some(1), "schema-versioned");
+        assert!(ev.req("event").unwrap().as_str().is_some());
+    }
+    assert_eq!(events.first().unwrap().get("event").unwrap().as_str(), Some("run_started"));
+    assert_eq!(events.last().unwrap().get("event").unwrap().as_str(), Some("run_finished"));
+    let steps = events
+        .iter()
+        .filter(|e| e.get("event").unwrap().as_str() == Some("step"))
+        .count();
+    assert_eq!(steps, 2, "one step event per optimizer step");
+    let epochs = events
+        .iter()
+        .filter(|e| e.get("event").unwrap().as_str() == Some("epoch"))
+        .count();
+    assert_eq!(epochs, 1);
+    // The run_finished result matches the ledger entry bit-for-bit.
+    let finished = events.last().unwrap().req("result").unwrap();
+    let entry = led.entries.get(key).unwrap();
+    assert_eq!(
+        finished.to_string_compact(),
+        entry.result.to_json().to_string_compact()
+    );
+    // And the figure series reconstruct from telemetry alone.
+    let series = sched::report::fig_series(&o.grid_dir, &led).unwrap();
+    assert_eq!(series.epoch_eff.len(), 1);
+    assert_eq!(series.mix_trace.len(), 1);
+    assert!(!series.batch_trace.is_empty());
+    assert_eq!(series.batch_trace[0].1, 32, "initial batch from the step events");
+    std::fs::remove_dir_all(&out).ok();
+}
