@@ -209,6 +209,7 @@ mod tests {
         assert!(b.y.iter().all(|&y| (0..10).contains(&y)));
         // Normalized CIFAR pixels live in roughly [-3, 3].
         assert!(b.x.iter().all(|&v| v.abs() < 4.0));
+        // detlint: ordered — sequential sum in pixel-buffer order.
         let mean: f32 = b.x.iter().sum::<f32>() / b.x.len() as f32;
         assert!(mean.abs() < 1.0, "roughly centered, got {mean}");
     }

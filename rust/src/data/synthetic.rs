@@ -189,7 +189,7 @@ mod tests {
             a.iter()
                 .zip(b)
                 .map(|(&x, &y)| ((x - y) as f64).powi(2))
-                .sum::<f64>()
+                .sum::<f64>() // detlint: ordered — sequential sum in buffer order.
                 .sqrt()
         };
         // Statistical: average over many pairs (the task is deliberately

@@ -1,0 +1,89 @@
+//! `detlint` — the repo-native determinism & safety static-analysis
+//! pass.
+//!
+//! The determinism contract (bit-identical traces across thread
+//! counts, `--jobs` widths, and kill/resume — `docs/DETERMINISM.md`)
+//! is enforced at runtime by property tests, but those only catch
+//! violations after they ship and only on executed paths. This module
+//! rejects them at the source level: a dependency-free line/token
+//! scanner ([`scan`]) feeds a rule engine ([`rules`]) encoding the
+//! contract as seven rules (D1–D7, table in `docs/DETERMINISM.md`),
+//! plus a schema-drift guard ([`schema`]) that pins digests of the
+//! serialized telemetry/ledger field sets.
+//!
+//! The pass runs three ways, all sharing this module:
+//!
+//! * `tri-accel lint [--format json] [--out report.json]` — the CLI
+//!   subcommand CI runs (failing on any finding, uploading the JSON
+//!   report as an artifact);
+//! * `cargo test --test lint_rules` — fixture corpus plus a
+//!   whole-tree lint-clean assertion;
+//! * [`lint_source`] — the library entry for linting one in-memory
+//!   file (what the fixture tests use).
+//!
+//! Exemptions are explicit and justified in-source via pragmas
+//! (grammar in [`scan`]); an unjustified or malformed pragma is itself
+//! a finding.
+
+pub mod report;
+pub mod rules;
+pub mod scan;
+pub mod schema;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+pub use report::Report;
+pub use rules::{Finding, RuleInfo, RULES};
+
+/// Lint one in-memory source file. `rel` is the path relative to the
+/// lint root (forward slashes) — rules are scoped by it.
+pub fn lint_source(rel: &str, text: &str) -> Vec<Finding> {
+    rules::check_file(&scan::scan_source(rel, text))
+}
+
+/// Lint every `.rs` file under `root` (recursively, sorted order) and
+/// check the D7 schema pins. Findings are sorted by (path, line, rule)
+/// so reports are deterministic.
+pub fn lint_tree(root: &Path) -> Result<Report> {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    files.sort();
+    let mut findings = Vec::new();
+    for path in &files {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        findings.extend(lint_source(&rel, &text));
+    }
+    let (schema_findings, schemas) = schema::check_tree(root)?;
+    findings.extend(schema_findings);
+    findings.sort_by(|a, b| (&a.path, a.line, &a.rule).cmp(&(&b.path, b.line, &b.rule)));
+    Ok(Report {
+        root: root.display().to_string(),
+        files_scanned: files.len(),
+        findings,
+        schemas,
+    })
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries = Vec::new();
+    for entry in std::fs::read_dir(dir).with_context(|| format!("listing {}", dir.display()))? {
+        entries.push(entry?.path());
+    }
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,156 @@
+//! Rendering for detlint results: human text and machine JSON.
+//!
+//! The JSON shape is what CI uploads as a build artifact (see the
+//! `lint` job in `.github/workflows/ci.yml`): findings plus the
+//! computed schema digests, so a D7 failure's report carries the new
+//! digest to re-pin. Rendering goes through [`crate::util::json::Json`]
+//! so the output is valid JSON with deterministic key order.
+
+use std::collections::BTreeMap;
+
+use super::rules::{Finding, RULES};
+use super::schema::SchemaStatus;
+use crate::util::json::Json;
+
+/// One full lint run over a tree.
+pub struct Report {
+    /// Root directory that was scanned.
+    pub root: String,
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+    /// All findings, sorted by `(path, line, rule)`.
+    pub findings: Vec<Finding>,
+    /// Computed-vs-pinned status for every D7 schema pin.
+    pub schemas: Vec<SchemaStatus>,
+}
+
+impl Report {
+    /// True when the tree is lint-clean.
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Render the human-readable report.
+    pub fn human(&self) -> String {
+        let mut out = String::new();
+        let files = self.files_scanned;
+        let root = &self.root;
+        out.push_str(&format!("detlint: scanned {files} files under {root}\n"));
+        for f in &self.findings {
+            out.push_str(&format!("{}:{} [{}] {}\n", f.path, f.line, f.rule, f.message));
+            if !f.snippet.is_empty() {
+                out.push_str(&format!("    > {}\n", f.snippet));
+            }
+        }
+        for s in &self.schemas {
+            let ok = if s.version == s.pinned_version && s.digest == s.pinned_digest {
+                "ok"
+            } else {
+                "DRIFT"
+            };
+            let file = &s.file;
+            let (v, pv) = (s.version, s.pinned_version);
+            let digest = format!("{:016x}", s.digest);
+            let pinned = format!("{:016x}", s.pinned_digest);
+            out.push_str(&format!(
+                "schema {file}: v{v} digest {digest} (pinned v{pv} {pinned}) {ok}\n"
+            ));
+        }
+        let n = self.findings.len();
+        if n == 0 {
+            out.push_str("detlint: clean\n");
+        } else {
+            out.push_str(&format!("detlint: {n} finding(s)\n"));
+        }
+        out
+    }
+
+    /// Render the JSON report (compact, deterministic key order).
+    pub fn json(&self) -> String {
+        let mut m = BTreeMap::new();
+        m.insert("tool".to_string(), Json::Str("detlint".to_string()));
+        m.insert("root".to_string(), Json::Str(self.root.clone()));
+        m.insert("files_scanned".to_string(), Json::Num(self.files_scanned as f64));
+        m.insert("clean".to_string(), Json::Bool(self.clean()));
+        let findings: Vec<Json> = self.findings.iter().map(finding_json).collect();
+        m.insert("findings".to_string(), Json::Arr(findings));
+        let schemas: Vec<Json> = self.schemas.iter().map(schema_json).collect();
+        m.insert("schemas".to_string(), Json::Arr(schemas));
+        let rules: Vec<Json> = RULES.iter().map(rule_json).collect();
+        m.insert("rules".to_string(), Json::Arr(rules));
+        Json::Obj(m).to_string_compact()
+    }
+}
+
+fn finding_json(f: &Finding) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("rule".to_string(), Json::Str(f.rule.clone()));
+    m.insert("path".to_string(), Json::Str(f.path.clone()));
+    m.insert("line".to_string(), Json::Num(f.line as f64));
+    m.insert("message".to_string(), Json::Str(f.message.clone()));
+    m.insert("snippet".to_string(), Json::Str(f.snippet.clone()));
+    Json::Obj(m)
+}
+
+fn schema_json(s: &SchemaStatus) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("file".to_string(), Json::Str(s.file.clone()));
+    m.insert("version".to_string(), Json::Num(s.version as f64));
+    m.insert("digest".to_string(), Json::Str(format!("{:016x}", s.digest)));
+    m.insert("pinned_version".to_string(), Json::Num(s.pinned_version as f64));
+    m.insert("pinned_digest".to_string(), Json::Str(format!("{:016x}", s.pinned_digest)));
+    let ok = s.version == s.pinned_version && s.digest == s.pinned_digest;
+    m.insert("ok".to_string(), Json::Bool(ok));
+    Json::Obj(m)
+}
+
+fn rule_json(r: &super::rules::RuleInfo) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("id".to_string(), Json::Str(r.id.to_string()));
+    m.insert("title".to_string(), Json::Str(r.title.to_string()));
+    m.insert("scope".to_string(), Json::Str(r.scope.to_string()));
+    Json::Obj(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Report {
+        Report {
+            root: "src".to_string(),
+            files_scanned: 2,
+            findings: vec![Finding {
+                rule: "d1".to_string(),
+                path: "policy/x.rs".to_string(),
+                line: 3,
+                message: "HashMap".to_string(),
+                snippet: "use std::collections::HashMap;".to_string(),
+            }],
+            schemas: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn json_round_trips_through_the_parser() {
+        let r = sample();
+        let parsed = Json::parse(&r.json()).expect("valid json");
+        assert_eq!(parsed.req("clean").unwrap().as_bool(), Some(false));
+        let findings = parsed.req("findings").unwrap().as_arr().unwrap();
+        assert_eq!(findings.len(), 1);
+        assert_eq!(findings[0].req("rule").unwrap().as_str(), Some("d1"));
+        assert_eq!(findings[0].req("line").unwrap().as_usize(), Some(3));
+        let rules = parsed.req("rules").unwrap().as_arr().unwrap();
+        assert_eq!(rules.len(), 7);
+    }
+
+    #[test]
+    fn human_report_lists_findings_and_verdict() {
+        let r = sample();
+        let text = r.human();
+        assert!(text.contains("policy/x.rs:3 [d1]"));
+        assert!(text.contains("detlint: 1 finding(s)"));
+        let clean = Report { findings: Vec::new(), ..r };
+        assert!(clean.human().contains("detlint: clean"));
+    }
+}

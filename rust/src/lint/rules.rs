@@ -1,0 +1,300 @@
+//! The detlint rule set: D1–D6 line rules over scanned source.
+//!
+//! Each rule encodes one clause of the repo's determinism/safety
+//! contract (`docs/DETERMINISM.md` carries the full table and
+//! rationale). Rules match against the scanner's comment-stripped
+//! `code` channel only, scoped by relative path, and are suppressed by
+//! a justified `// detlint: allow(<rule>)` pragma (D4 additionally by
+//! `// detlint: ordered`). The schema-drift rule D7 lives in
+//! [`super::schema`] because it digests file contents instead of
+//! matching lines.
+
+use super::scan::SourceFile;
+
+/// One lint finding.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Rule id (`d1`..`d7`, or `pragma` for malformed pragmas).
+    pub rule: String,
+    /// Path relative to the lint root.
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// What is wrong and how to fix or justify it.
+    pub message: String,
+    /// The offending source line, trimmed.
+    pub snippet: String,
+}
+
+/// Static metadata for one rule (report/doc rendering).
+pub struct RuleInfo {
+    /// Rule id (`d1`..`d7`).
+    pub id: &'static str,
+    /// One-line title.
+    pub title: &'static str,
+    /// Where the rule applies.
+    pub scope: &'static str,
+}
+
+/// The rule table, in id order.
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        id: "d1",
+        title: "no HashMap/HashSet in deterministic subsystems",
+        scope: "runtime/ sched/ policy/ metrics/ checkpoint/ memsim/ (non-test)",
+    },
+    RuleInfo {
+        id: "d2",
+        title: "no wall-clock reads outside the timing allowlist",
+        scope: "all library code (non-test)",
+    },
+    RuleInfo {
+        id: "d3",
+        title: "no thread creation outside the deterministic pools",
+        scope: "all library code except runtime/native/pool.rs and sched/mod.rs (non-test)",
+    },
+    RuleInfo {
+        id: "d4",
+        title: "float reductions must pin their order",
+        scope: "runtime/native/ and data/ (tests included)",
+    },
+    RuleInfo {
+        id: "d5",
+        title: "every `unsafe` needs a `// SAFETY:` comment",
+        scope: "all code (tests included)",
+    },
+    RuleInfo {
+        id: "d6",
+        title: "no unwrap()/expect() in library code",
+        scope: "all library code (non-test)",
+    },
+    RuleInfo {
+        id: "d7",
+        title: "serialized schema drift requires a version bump",
+        scope: "metrics/telemetry.rs and sched/ledger.rs field keys",
+    },
+];
+
+/// Subsystems whose in-memory iteration order reaches artifacts.
+const D1_DIRS: &[&str] = &["runtime/", "sched/", "policy/", "metrics/", "checkpoint/", "memsim/"];
+
+/// Modules whose reductions feed golden traces and gradchecks.
+const D4_DIRS: &[&str] = &["runtime/native/", "data/"];
+
+/// Files allowed to create threads: the deterministic compute pool and
+/// the scheduler's job pool (both reduce in fixed order).
+const D3_ALLOWED: &[&str] = &["runtime/native/pool.rs", "sched/mod.rs"];
+
+fn in_dirs(rel: &str, dirs: &[&str]) -> bool {
+    dirs.iter().any(|d| rel.starts_with(d))
+}
+
+/// Order-independent reduction operators exempt from D4.
+const D4_EXEMPT: &[&str] = &["f32::max", "f32::min", "f64::max", "f64::min"];
+
+/// Infallible-by-construction idioms exempt from D6: a poisoned lock
+/// means another thread already panicked (propagating the panic is the
+/// correct response), and `try_into` on a length-checked slice cannot
+/// fail.
+const D6_EXEMPT: &[&str] = &[".lock().unwrap()", ".try_into().unwrap()"];
+
+/// Run every line rule over one scanned file.
+pub fn check_file(sf: &SourceFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (lineno, msg) in &sf.pragma_errors {
+        out.push(finding(sf, "pragma", *lineno, msg));
+    }
+    for (i, line) in sf.lines.iter().enumerate() {
+        let lineno = i + 1;
+        let code = line.code.as_str();
+        if code.trim().is_empty() {
+            continue;
+        }
+        let allowed = |rule: &str| sf.file_allows.contains(rule) || line.allows.contains(rule);
+
+        // D1 — nondeterministic-iteration collections.
+        if !line.in_test
+            && in_dirs(&sf.rel, D1_DIRS)
+            && (code.contains("HashMap") || code.contains("HashSet"))
+            && !allowed("d1")
+        {
+            out.push(finding(
+                sf,
+                "d1",
+                lineno,
+                "HashMap/HashSet iteration order is nondeterministic — use BTreeMap/BTreeSet \
+                 in deterministic subsystems",
+            ));
+        }
+
+        // D2 — wall-clock reads.
+        if !line.in_test
+            && (code.contains("Instant::now") || code.contains("SystemTime"))
+            && !allowed("d2")
+        {
+            out.push(finding(
+                sf,
+                "d2",
+                lineno,
+                "wall-clock read outside the timing allowlist — deterministic paths must not \
+                 observe time",
+            ));
+        }
+
+        // D3 — thread creation.
+        if !line.in_test
+            && !D3_ALLOWED.contains(&sf.rel.as_str())
+            && (code.contains("thread::spawn") || code.contains("thread::scope"))
+            && !allowed("d3")
+        {
+            out.push(finding(
+                sf,
+                "d3",
+                lineno,
+                "thread creation outside the deterministic worker pools (pool.rs / sched) — \
+                 ad-hoc threads break the ordered-reduction contract",
+            ));
+        }
+
+        // D4 — unordered float reductions in kernel/hot-path modules.
+        if in_dirs(&sf.rel, D4_DIRS)
+            && is_reduction(code)
+            && !D4_EXEMPT.iter().any(|p| code.contains(p))
+            && !line.ordered
+            && !allowed("d4")
+        {
+            out.push(finding(
+                sf,
+                "d4",
+                lineno,
+                "float reduction without a pinned order — state it with \
+                 `// detlint: ordered — <order>`",
+            ));
+        }
+
+        // D5 — unsafe without SAFETY. The comment may sit on the line
+        // itself or anywhere in the contiguous comment block directly
+        // above it (no blank or code line in between).
+        if contains_word(code, "unsafe") && !allowed("d5") {
+            let mut documented = line.comment.contains("SAFETY:");
+            let mut j = i;
+            while !documented && j > 0 {
+                j -= 1;
+                let above = &sf.lines[j];
+                // A comment line has no code but nonblank raw text (a
+                // bare `//` spacer counts); anything else ends the block.
+                if !above.code.trim().is_empty() || sf.raw[j].trim().is_empty() {
+                    break;
+                }
+                documented = above.comment.contains("SAFETY:");
+            }
+            if !documented {
+                out.push(finding(
+                    sf,
+                    "d5",
+                    lineno,
+                    "`unsafe` without a `// SAFETY:` comment on or directly above the block",
+                ));
+            }
+        }
+
+        // D6 — unwrap/expect in library code.
+        if !line.in_test && (code.contains(".unwrap()") || code.contains(".expect(")) {
+            let exempt = D6_EXEMPT.iter().any(|p| code.contains(p));
+            if !exempt && !allowed("d6") {
+                out.push(finding(
+                    sf,
+                    "d6",
+                    lineno,
+                    "unwrap()/expect() in library code — propagate with anyhow \
+                     (`?` / `.context(...)`)",
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// Reduction shapes D4 watches: iterator sums and folds over floats.
+fn is_reduction(code: &str) -> bool {
+    code.contains(".sum::<f32>()")
+        || code.contains(".sum::<f64>()")
+        || code.contains(".sum()")
+        || code.contains(".fold(")
+}
+
+/// `needle` present as a standalone word (no identifier chars around).
+fn contains_word(code: &str, needle: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut from = 0;
+    while let Some(at) = code[from..].find(needle) {
+        let start = from + at;
+        let end = start + needle.len();
+        let pre_ok = start == 0 || !is_ident(bytes[start - 1]);
+        let post_ok = end == bytes.len() || !is_ident(bytes[end]);
+        if pre_ok && post_ok {
+            return true;
+        }
+        from = end;
+    }
+    false
+}
+
+fn is_ident(b: u8) -> bool {
+    b == b'_' || b.is_ascii_alphanumeric()
+}
+
+fn finding(sf: &SourceFile, rule: &str, lineno: usize, message: &str) -> Finding {
+    let snippet = sf
+        .raw
+        .get(lineno - 1)
+        .map(|l| l.trim().chars().take(120).collect())
+        .unwrap_or_default();
+    Finding {
+        rule: rule.to_string(),
+        path: sf.rel.clone(),
+        line: lineno,
+        message: message.to_string(),
+        snippet,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::scan::scan_source;
+
+    fn check(rel: &str, src: &str) -> Vec<Finding> {
+        check_file(&scan_source(rel, src))
+    }
+
+    #[test]
+    fn d1_scoped_to_deterministic_dirs() {
+        let src = "use std::collections::HashMap;\n";
+        assert_eq!(check("policy/x.rs", src).len(), 1);
+        assert!(check("util/x.rs", src).is_empty(), "util is out of scope");
+    }
+
+    #[test]
+    fn d5_safety_comment_block_must_be_contiguous() {
+        let ok = "// SAFETY: prefix initialized\n// (multi-line)\n//\nunsafe { v.set_len(n) };\n";
+        assert!(check("util/x.rs", ok).is_empty());
+        let gap = "// SAFETY: detached by a blank line\n\nunsafe { v.set_len(n) };\n";
+        assert_eq!(check("util/x.rs", gap).len(), 1);
+        let code_between = "// SAFETY: detached by code\nlet a = 1;\nunsafe { v.set_len(n) };\n";
+        assert_eq!(check("util/x.rs", code_between).len(), 1);
+    }
+
+    #[test]
+    fn d6_exempts_lock_and_try_into() {
+        let src = "let g = m.lock().unwrap();\nlet a: [u8; 4] = b.try_into().unwrap();\n";
+        assert!(check("util/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn word_boundary_matching() {
+        assert!(contains_word("unsafe { }", "unsafe"));
+        assert!(!contains_word("unsafely()", "unsafe"));
+        assert!(!contains_word("an_unsafe_name", "unsafe"));
+    }
+}

@@ -1,0 +1,464 @@
+//! Source scanner for the detlint pass.
+//!
+//! A small line/token scanner — deliberately not a parser (`syn` would
+//! drag a proc-macro stack into the hermetic vendor tree). One pass
+//! classifies every line of a file into *code* (string-literal
+//! contents and comments blanked out, quote delimiters kept) and
+//! *comment* text; a second pass tracks `#[cfg(test)]` regions by
+//! brace depth; a third collects `// detlint:` pragmas. Rules only
+//! ever match against the `code` channel, so a `HashMap` mentioned in
+//! a doc comment or a string literal can never fire a finding.
+//!
+//! Pragma grammar (justifications are mandatory — an allowlist entry
+//! without a stated reason is itself a finding):
+//!
+//! ```text
+//! // detlint: allow(d1, d6) — <why this line is exempt>
+//! // detlint: allow-file(d2) — <why this whole file is exempt>
+//! // detlint: ordered — <statement of the reduction order>
+//! ```
+//!
+//! A pragma on a line with code applies to that line; a pragma on a
+//! comment-only line applies to the next line that has code.
+
+use std::collections::BTreeSet;
+
+/// One scanned source line.
+#[derive(Debug)]
+pub struct Line {
+    /// Source text with comments removed and string/char literal
+    /// contents blanked (delimiters kept), so needle matching never
+    /// fires inside prose.
+    pub code: String,
+    /// Comment text on this line (line, block, and doc comments).
+    pub comment: String,
+    /// Inside a `#[cfg(test)]` item (the attribute line included).
+    pub in_test: bool,
+    /// Rules allowlisted at this line via `detlint: allow(...)`.
+    pub allows: BTreeSet<String>,
+    /// A `detlint: ordered` pragma covers this line.
+    pub ordered: bool,
+}
+
+/// A fully scanned file.
+#[derive(Debug)]
+pub struct SourceFile {
+    /// Path relative to the lint root, forward slashes.
+    pub rel: String,
+    /// Raw source lines (for finding snippets).
+    pub raw: Vec<String>,
+    /// Scanned lines, parallel to `raw`.
+    pub lines: Vec<Line>,
+    /// Rules allowlisted file-wide via `detlint: allow-file(...)`.
+    pub file_allows: BTreeSet<String>,
+    /// Malformed pragmas found while scanning: `(1-based line, message)`.
+    pub pragma_errors: Vec<(usize, String)>,
+}
+
+/// The rule ids a pragma may name.
+pub const RULE_IDS: &[&str] = &["d1", "d2", "d3", "d4", "d5", "d6", "d7"];
+
+/// Scan one file's source text.
+pub fn scan_source(rel: &str, text: &str) -> SourceFile {
+    let raw: Vec<String> = text.lines().map(str::to_string).collect();
+    let (code_lines, comment_lines) = split_channels(text);
+    let in_test = test_regions(&code_lines);
+    let mut sf = SourceFile {
+        rel: rel.to_string(),
+        raw,
+        lines: Vec::with_capacity(code_lines.len()),
+        file_allows: BTreeSet::new(),
+        pragma_errors: Vec::new(),
+    };
+    for (i, code) in code_lines.iter().enumerate() {
+        sf.lines.push(Line {
+            code: code.clone(),
+            comment: comment_lines[i].clone(),
+            in_test: in_test[i],
+            allows: BTreeSet::new(),
+            ordered: false,
+        });
+    }
+    apply_pragmas(&mut sf);
+    sf
+}
+
+/// Lexer state for [`split_channels`]. Strings and block comments span
+/// lines, so the state must survive line boundaries.
+enum St {
+    Code,
+    LineComment,
+    BlockComment(u32),
+    Str,
+    RawStr(u32),
+}
+
+/// Split source text into per-line code and comment channels.
+fn split_channels(text: &str) -> (Vec<String>, Vec<String>) {
+    let chars: Vec<char> = text.chars().collect();
+    let mut code_lines = Vec::new();
+    let mut comment_lines = Vec::new();
+    let mut code = String::new();
+    let mut com = String::new();
+    let mut st = St::Code;
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            code_lines.push(std::mem::take(&mut code));
+            comment_lines.push(std::mem::take(&mut com));
+            if matches!(st, St::LineComment) {
+                st = St::Code;
+            }
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Code => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    st = St::LineComment;
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    st = St::BlockComment(1);
+                    i += 2;
+                } else if c == '"' {
+                    code.push('"');
+                    st = St::Str;
+                    i += 1;
+                } else if c == 'r' || (c == 'b' && next == Some('r')) {
+                    // Possible raw string: r"..." / r#"..."# / br"...".
+                    let mut j = i + if c == 'b' { 2 } else { 1 };
+                    let mut hashes = 0u32;
+                    while chars.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if chars.get(j) == Some(&'"') {
+                        code.push('"');
+                        st = St::RawStr(hashes);
+                        i = j + 1;
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                } else if c == 'b' && next == Some('"') {
+                    code.push('"');
+                    st = St::Str;
+                    i += 2;
+                } else if c == '\'' || (c == 'b' && next == Some('\'')) {
+                    // Char/byte literal vs lifetime tick.
+                    let q = if c == 'b' { i + 1 } else { i };
+                    if chars.get(q + 1) == Some(&'\\') {
+                        let mut j = q + 2;
+                        while j < chars.len() && chars[j] != '\'' {
+                            j += 1;
+                        }
+                        code.push('\'');
+                        i = j + 1;
+                    } else if chars.get(q + 2) == Some(&'\'') && chars.get(q + 1) != Some(&'\'') {
+                        code.push('\'');
+                        i = q + 3;
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            St::LineComment => {
+                com.push(c);
+                i += 1;
+            }
+            St::BlockComment(depth) => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('*') {
+                    st = St::BlockComment(depth + 1);
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    if depth == 1 {
+                        st = St::Code;
+                    } else {
+                        st = St::BlockComment(depth - 1);
+                    }
+                    i += 2;
+                } else {
+                    com.push(c);
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' && chars.get(i + 1) != Some(&'\n') {
+                    // Skip the escaped char; an escaped newline falls
+                    // through so the line accounting above sees it.
+                    i += 2;
+                } else if c == '"' {
+                    code.push('"');
+                    st = St::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            St::RawStr(hashes) => {
+                if c == '"' {
+                    let h = hashes as usize;
+                    let closed = (1..=h).all(|k| chars.get(i + k) == Some(&'#'));
+                    if closed {
+                        code.push('"');
+                        st = St::Code;
+                        i += 1 + h;
+                    } else {
+                        i += 1;
+                    }
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    code_lines.push(code);
+    comment_lines.push(com);
+    // Keep the channel vectors aligned with `str::lines()` (the final
+    // push is a stray empty line when the text ends in a newline).
+    let n = text.lines().count();
+    code_lines.truncate(n);
+    comment_lines.truncate(n);
+    while code_lines.len() < n {
+        code_lines.push(String::new());
+        comment_lines.push(String::new());
+    }
+    (code_lines, comment_lines)
+}
+
+/// Mark lines covered by a `#[cfg(test)]` item (brace-depth tracking).
+fn test_regions(code_lines: &[String]) -> Vec<bool> {
+    let mut out = vec![false; code_lines.len()];
+    let mut depth: i64 = 0;
+    let mut pending_attr = false;
+    // Active while `depth >= region_floor`.
+    let mut region_floor: Option<i64> = None;
+    for (idx, code) in code_lines.iter().enumerate() {
+        let trimmed = code.trim();
+        if region_floor.is_none() && trimmed.starts_with("#[cfg(test)]") {
+            pending_attr = true;
+        }
+        if pending_attr || region_floor.is_some() {
+            out[idx] = true;
+        }
+        let depth_before = depth;
+        let mut first_open_depth: Option<i64> = None;
+        for ch in trimmed.chars() {
+            match ch {
+                '{' => {
+                    depth += 1;
+                    if first_open_depth.is_none() {
+                        first_open_depth = Some(depth);
+                    }
+                }
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if pending_attr && !trimmed.is_empty() && !trimmed.starts_with("#[") {
+            // The item the attribute covers starts here.
+            pending_attr = false;
+            if let Some(open) = first_open_depth {
+                region_floor = Some(open);
+            } else if !trimmed.ends_with(';') {
+                // Item signature continues onto later lines; its body
+                // opens at one past the depth the item started at.
+                region_floor = Some(depth_before + 1);
+            }
+        }
+        if let Some(floor) = region_floor {
+            if depth < floor {
+                region_floor = None;
+            }
+        }
+    }
+    out
+}
+
+/// A parsed `detlint:` directive.
+enum Directive {
+    Allow(Vec<String>),
+    AllowFile(Vec<String>),
+    Ordered,
+}
+
+/// Parse the directive out of one comment, validating rule names and
+/// the mandatory justification text.
+fn parse_directive(comment: &str) -> Option<Result<Directive, String>> {
+    let at = comment.find("detlint:")?;
+    // Only a directive at the start of the comment counts — prose that
+    // *mentions* a pragma (docs, this file) is not a pragma.
+    if !comment[..at].chars().all(|c| matches!(c, '/' | ' ' | '\t')) {
+        return None;
+    }
+    let rest = comment[at + "detlint:".len()..].trim_start();
+    let (dir, tail) = if let Some(t) = rest.strip_prefix("allow-file(") {
+        match rule_list(t) {
+            Ok((rules, tail)) => (Directive::AllowFile(rules), tail),
+            Err(e) => return Some(Err(e)),
+        }
+    } else if let Some(t) = rest.strip_prefix("allow(") {
+        match rule_list(t) {
+            Ok((rules, tail)) => (Directive::Allow(rules), tail),
+            Err(e) => return Some(Err(e)),
+        }
+    } else if let Some(t) = rest.strip_prefix("ordered") {
+        (Directive::Ordered, t.to_string())
+    } else {
+        let head = rest.split_whitespace().next().unwrap_or("");
+        return Some(Err(format!(
+            "unknown detlint directive `{head}` (allow | allow-file | ordered)"
+        )));
+    };
+    if !justified(&tail) {
+        return Some(Err("detlint pragma needs a `— <justification>` suffix".to_string()));
+    }
+    Some(Ok(dir))
+}
+
+/// Parse `d1, d6) tail` into validated rule ids + the remaining text.
+fn rule_list(t: &str) -> Result<(Vec<String>, String), String> {
+    let close = t.find(')').ok_or_else(|| "unclosed rule list in detlint pragma".to_string())?;
+    let mut rules = Vec::new();
+    for part in t[..close].split(',') {
+        let r = part.trim().to_ascii_lowercase();
+        if !RULE_IDS.contains(&r.as_str()) {
+            return Err(format!("unknown detlint rule `{r}` (d1..d7)"));
+        }
+        rules.push(r);
+    }
+    Ok((rules, t[close + 1..].to_string()))
+}
+
+/// Justifications follow an em-dash/hyphen separator and are nonempty.
+fn justified(tail: &str) -> bool {
+    let t = tail.trim_start();
+    let stripped = t
+        .strip_prefix('—')
+        .or_else(|| t.strip_prefix("--"))
+        .or_else(|| t.strip_prefix('-'));
+    match stripped {
+        Some(rest) => !rest.trim().is_empty(),
+        None => false,
+    }
+}
+
+/// Attach pragmas to lines (same-line, or carried to the next code line).
+fn apply_pragmas(sf: &mut SourceFile) {
+    let mut pending_allows: BTreeSet<String> = BTreeSet::new();
+    let mut pending_ordered = false;
+    for (i, line) in sf.lines.iter_mut().enumerate() {
+        let has_code = !line.code.trim().is_empty();
+        match parse_directive(&line.comment) {
+            Some(Ok(Directive::AllowFile(rules))) => sf.file_allows.extend(rules),
+            Some(Ok(Directive::Allow(rules))) => {
+                if has_code {
+                    line.allows.extend(rules);
+                } else {
+                    pending_allows.extend(rules);
+                }
+            }
+            Some(Ok(Directive::Ordered)) => {
+                if has_code {
+                    line.ordered = true;
+                } else {
+                    pending_ordered = true;
+                }
+            }
+            Some(Err(msg)) => sf.pragma_errors.push((i + 1, msg)),
+            None => {}
+        }
+        if has_code && (!pending_allows.is_empty() || pending_ordered) {
+            line.allows.append(&mut pending_allows);
+            if pending_ordered {
+                line.ordered = true;
+                pending_ordered = false;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_are_stripped_from_code() {
+        let sf = scan_source(
+            "x.rs",
+            "let a = \"HashMap\"; // HashMap in comment\nlet b = 1; /* HashMap */ let c = 2;\n",
+        );
+        assert!(!sf.lines[0].code.contains("HashMap"));
+        assert!(sf.lines[0].comment.contains("HashMap"));
+        assert!(!sf.lines[1].code.contains("HashMap"));
+        assert!(sf.lines[1].code.contains("let c = 2;"));
+    }
+
+    #[test]
+    fn raw_strings_and_chars_are_blanked() {
+        let sf = scan_source(
+            "x.rs",
+            "let a = r#\"unsafe {\"#;\nlet b = '\\'';\nlet c: &'static str = \"x\";\n",
+        );
+        assert!(!sf.lines[0].code.contains("unsafe"));
+        assert!(!sf.lines[1].code.contains("\\'"));
+        assert!(sf.lines[2].code.contains("&'static str"));
+    }
+
+    #[test]
+    fn multiline_strings_span_lines() {
+        let sf = scan_source("x.rs", "let a = \"one\ntwo unsafe {\nthree\";\nlet b = 1;\n");
+        assert!(!sf.lines[1].code.contains("unsafe"));
+        assert!(sf.lines[3].code.contains("let b"));
+    }
+
+    #[test]
+    fn cfg_test_region_tracked_by_depth() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod t {\n fn t() { x.unwrap(); }\n}\nfn z() {}\n";
+        let sf = scan_source("x.rs", src);
+        assert!(!sf.lines[0].in_test);
+        assert!(sf.lines[1].in_test, "attribute line is test");
+        assert!(sf.lines[3].in_test);
+        assert!(!sf.lines[5].in_test, "region closes with the brace");
+    }
+
+    #[test]
+    fn pragmas_attach_to_code_lines() {
+        let src = "// detlint: allow(d6) — infallible by construction\nlet a = x.unwrap();\n\
+                   let b = y.unwrap(); // detlint: allow(d6) — same line\n";
+        let sf = scan_source("x.rs", src);
+        assert!(sf.lines[1].allows.contains("d6"));
+        assert!(sf.lines[2].allows.contains("d6"));
+        assert!(sf.pragma_errors.is_empty());
+    }
+
+    #[test]
+    fn prose_mentions_are_not_pragmas() {
+        let sf = scan_source("x.rs", "// see the detlint: allow(d1) docs\nlet a = 1;\n");
+        assert!(sf.pragma_errors.is_empty());
+        assert!(sf.lines[1].allows.is_empty());
+    }
+
+    #[test]
+    fn unjustified_or_unknown_pragmas_error() {
+        let sf = scan_source("x.rs", "// detlint: allow(d6)\nlet a = 1;\n");
+        assert_eq!(sf.pragma_errors.len(), 1);
+        let sf = scan_source("x.rs", "// detlint: allow(d99) — nope\nlet a = 1;\n");
+        assert_eq!(sf.pragma_errors.len(), 1);
+        let sf = scan_source("x.rs", "// detlint: frobnicate — eh\nlet a = 1;\n");
+        assert_eq!(sf.pragma_errors.len(), 1);
+    }
+
+    #[test]
+    fn allow_file_is_file_wide() {
+        let sf = scan_source("x.rs", "// detlint: allow-file(d2) — bench module\nfn f() {}\n");
+        assert!(sf.file_allows.contains("d2"));
+    }
+}

@@ -1,0 +1,250 @@
+//! Rule D7 — schema-drift guard over the serialized field sets.
+//!
+//! The telemetry events (`metrics/telemetry.rs`) and the grid ledger
+//! (`sched/ledger.rs`) are the two on-disk formats external tooling
+//! parses, and both carry an explicit schema-version constant. This
+//! module digests the *field-key string literals* each file serializes
+//! (the first argument of `insert("…")` / `num(&mut m, "…")` /
+//! `s(&mut m, "…")` calls outside test code) and pins the
+//! `(version, digest)` pair. Renaming, removing, or adding a
+//! serialized field changes the digest; if the version constant did
+//! not move with it, the lint fails — so a schema change can never
+//! ship silently. The bump procedure lives in `docs/TELEMETRY.md`
+//! ("Schema-version policy").
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::rules::Finding;
+use super::scan;
+
+/// One pinned schema: file, version constant, and the expected pair.
+pub struct SchemaPin {
+    /// Path relative to the lint root.
+    pub file: &'static str,
+    /// Name of the `pub const …: u64` version in that file.
+    pub version_const: &'static str,
+    /// Pinned version value.
+    pub version: u64,
+    /// Pinned FNV-1a digest of the sorted serialized-field-key list.
+    pub digest: u64,
+}
+
+/// The pinned schemas. Update these together with a version bump —
+/// `tri-accel lint --format json` prints the freshly computed digests.
+pub const PINS: &[SchemaPin] = &[
+    SchemaPin {
+        file: "metrics/telemetry.rs",
+        version_const: "SCHEMA_VERSION",
+        version: 1,
+        digest: 0xe24e8666f75b9196,
+    },
+    SchemaPin {
+        file: "sched/ledger.rs",
+        version_const: "LEDGER_SCHEMA_VERSION",
+        version: 1,
+        digest: 0xa37fae1e18c9d872,
+    },
+];
+
+/// Computed-vs-pinned status for one schema file (report rendering).
+#[derive(Debug, Clone)]
+pub struct SchemaStatus {
+    /// Path relative to the lint root.
+    pub file: String,
+    /// Version constant's current value.
+    pub version: u64,
+    /// Digest of the current serialized-field-key set.
+    pub digest: u64,
+    /// Pinned version.
+    pub pinned_version: u64,
+    /// Pinned digest.
+    pub pinned_digest: u64,
+}
+
+/// 64-bit FNV-1a (matches the repo's other content digests).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Serialization call shapes whose first argument is a field key.
+const KEY_MARKERS: &[&str] = &["insert(\"", "num(&mut m, \"", "s(&mut m, \""];
+
+/// Extract `(version, field keys)` from one schema file's source.
+/// Only non-test lines count; the markers are matched on the scanner's
+/// comment-stripped code channel so prose can't contribute keys.
+pub fn extract(src: &str, version_const: &str) -> (Option<u64>, BTreeSet<String>) {
+    let sf = scan::scan_source("schema-input.rs", src);
+    let mut keys = BTreeSet::new();
+    let mut version = None;
+    let version_needle = format!("const {version_const}: u64 =");
+    for (i, line) in sf.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        if line.code.contains(&version_needle) {
+            version = parse_version(&sf.raw[i], &version_needle);
+        }
+        for marker in KEY_MARKERS {
+            if !line.code.contains(marker) {
+                continue;
+            }
+            // The code channel blanks literal contents, so read the
+            // actual key text out of the raw line at the same marker.
+            if let Some(at) = sf.raw[i].find(marker) {
+                let tail = &sf.raw[i][at + marker.len()..];
+                if let Some(end) = tail.find('"') {
+                    keys.insert(tail[..end].to_string());
+                }
+            }
+        }
+    }
+    (version, keys)
+}
+
+fn parse_version(raw: &str, needle: &str) -> Option<u64> {
+    let at = raw.find(needle)?;
+    let tail = raw[at + needle.len()..].trim_start();
+    let digits: String = tail.chars().take_while(char::is_ascii_digit).collect();
+    digits.parse().ok()
+}
+
+/// Digest a key set: keys sorted (BTreeSet order), comma-joined.
+pub fn digest_keys(keys: &BTreeSet<String>) -> u64 {
+    let joined = keys.iter().cloned().collect::<Vec<_>>().join(",");
+    fnv1a64(joined.as_bytes())
+}
+
+/// Compare one extracted schema against its pin.
+pub fn check_extracted(
+    pin: &SchemaPin,
+    version: Option<u64>,
+    keys: &BTreeSet<String>,
+) -> (Vec<Finding>, SchemaStatus) {
+    let mut findings = Vec::new();
+    let digest = digest_keys(keys);
+    let version = version.unwrap_or(0);
+    let status = SchemaStatus {
+        file: pin.file.to_string(),
+        version,
+        digest,
+        pinned_version: pin.version,
+        pinned_digest: pin.digest,
+    };
+    let vc = pin.version_const;
+    let pinned_version = pin.version;
+    let pinned_digest = pin.digest;
+    if version != pinned_version {
+        findings.push(Finding {
+            rule: "d7".to_string(),
+            path: pin.file.to_string(),
+            line: 1,
+            message: format!(
+                "{vc} is {version} but the lint pins {pinned_version} — update the PINS \
+                 entry in lint/schema.rs (version and digest) together with the bump"
+            ),
+            snippet: format!("pub const {vc}: u64 = {version};"),
+        });
+    } else if digest != pinned_digest {
+        findings.push(Finding {
+            rule: "d7".to_string(),
+            path: pin.file.to_string(),
+            line: 1,
+            message: format!(
+                "serialized field set drifted (digest {digest:016x}, pinned \
+                 {pinned_digest:016x}) without a {vc} bump — bump the version and re-pin \
+                 the digest in lint/schema.rs"
+            ),
+            snippet: format!("{} field keys: {}", keys.len(), preview(keys)),
+        });
+    }
+    (findings, status)
+}
+
+fn preview(keys: &BTreeSet<String>) -> String {
+    let mut s = keys.iter().cloned().collect::<Vec<_>>().join(",");
+    if s.len() > 100 {
+        s.truncate(100);
+        s.push('…');
+    }
+    s
+}
+
+/// Check every pinned schema file under `root`.
+pub fn check_tree(root: &Path) -> Result<(Vec<Finding>, Vec<SchemaStatus>)> {
+    let mut findings = Vec::new();
+    let mut statuses = Vec::new();
+    for pin in PINS {
+        let path = root.join(pin.file);
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading schema-pinned file {}", path.display()))?;
+        let (version, keys) = extract(&src, pin.version_const);
+        let (f, s) = check_extracted(pin, version, &keys);
+        findings.extend(f);
+        statuses.push(s);
+    }
+    Ok((findings, statuses))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FIXTURE: &str = "pub const SCHEMA_VERSION: u64 = 3;\nfn ev() {\n\
+                           m.insert(\"alpha\".to_string(), v);\nnum(&mut m, \"beta\", 1.0);\n\
+                           s(&mut m, \"gamma\", x);\n}\n#[cfg(test)]\nmod tests {\n\
+                           m.insert(\"test_only\".to_string(), v);\n}\n";
+
+    #[test]
+    fn extracts_version_and_nontest_keys() {
+        let (version, keys) = extract(FIXTURE, "SCHEMA_VERSION");
+        assert_eq!(version, Some(3));
+        let got: Vec<&str> = keys.iter().map(String::as_str).collect();
+        assert_eq!(got, vec!["alpha", "beta", "gamma"], "test-mod keys excluded");
+    }
+
+    #[test]
+    fn drift_without_bump_is_a_finding() {
+        let (version, keys) = extract(FIXTURE, "SCHEMA_VERSION");
+        let pin = SchemaPin {
+            file: "x.rs",
+            version_const: "SCHEMA_VERSION",
+            version: 3,
+            digest: digest_keys(&keys),
+        };
+        let (f, _) = check_extracted(&pin, version, &keys);
+        assert!(f.is_empty(), "matching pin is clean");
+        let stale = SchemaPin { digest: 0xdead_beef, ..pin };
+        let (f, _) = check_extracted(&stale, version, &keys);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("without a SCHEMA_VERSION bump"), "{}", f[0].message);
+    }
+
+    #[test]
+    fn version_drift_points_at_the_pin() {
+        let (_, keys) = extract(FIXTURE, "SCHEMA_VERSION");
+        let pin = SchemaPin {
+            file: "x.rs",
+            version_const: "SCHEMA_VERSION",
+            version: 2,
+            digest: digest_keys(&keys),
+        };
+        let (f, status) = check_extracted(&pin, Some(3), &keys);
+        assert_eq!(f.len(), 1);
+        assert_eq!(status.version, 3);
+        assert_eq!(status.pinned_version, 2);
+    }
+
+    #[test]
+    fn fnv_reference_vector() {
+        // FNV-1a("a") from the reference implementation.
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+}

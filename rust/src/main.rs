@@ -9,6 +9,7 @@
 //!   pressure [--model K] [--methods a,b] [--trace SPEC] [--jobs N] [--smoke]
 //!   compare --a run.json --b run.json
 //!   report   [--out runs] [--dir DIR]
+//!   lint     [--format human|json] [--out FILE] [--root DIR]
 //!
 //! Global flags: `--list-models` (manifest inventory) and
 //! `--list-methods` (the method registry) print and exit. `--method`
@@ -69,12 +70,45 @@ fn run() -> Result<()> {
         Some("pressure") => pressure(&args),
         Some("compare") => compare(&args),
         Some("report") => report(&args),
+        Some("lint") => lint(&args),
         Some(other) => {
             anyhow::bail!(
-                "unknown subcommand `{other}` (info|train|table1|table2|fig|pressure|compare|report)"
+                "unknown subcommand `{other}` \
+                 (info|train|table1|table2|fig|pressure|compare|report|lint)"
             )
         }
     }
+}
+
+/// `lint`: the detlint static-analysis pass over this crate's own
+/// source tree (rule table and pragma grammar: `docs/DETERMINISM.md`).
+/// Prints the report (`--format human|json`), always writes the JSON
+/// report to `--out` when given (the CI artifact), and exits nonzero
+/// on any finding.
+fn lint(args: &Args) -> Result<()> {
+    let root = PathBuf::from(args.get_or("root", concat!(env!("CARGO_MANIFEST_DIR"), "/src")));
+    let format = args.get_or("format", "human");
+    let out = args.get("out").map(PathBuf::from);
+    args.reject_unknown()?;
+    anyhow::ensure!(
+        format == "human" || format == "json",
+        "--format must be `human` or `json`, got `{format}`"
+    );
+    let report = tri_accel::lint::lint_tree(&root)?;
+    if let Some(ref p) = out {
+        std::fs::write(p, report.json()).with_context(|| format!("writing {}", p.display()))?;
+    }
+    if format == "json" {
+        println!("{}", report.json());
+    } else {
+        print!("{}", report.human());
+    }
+    anyhow::ensure!(
+        report.clean(),
+        "detlint: {} finding(s) — fix each one or exempt it with a justified pragma",
+        report.findings.len()
+    );
+    Ok(())
 }
 
 /// `--list-methods`: the method registry — every named policy

@@ -198,7 +198,7 @@ impl PrecisionController {
     /// observed cross-layer EMA variances (floored to keep ordering).
     fn calibrate(&mut self) {
         let mut vs: Vec<f64> = self.vars.iter().map(|e| e.get().max(1e-30)).collect();
-        vs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        vs.sort_by(f64::total_cmp);
         let lo = crate::util::stats::percentile(&vs, 0.25);
         let hi = crate::util::stats::percentile(&vs, 0.90);
         if hi > lo {
@@ -425,9 +425,12 @@ impl PrecisionPolicy for PinnedPrecision {
 }
 
 /// Move `from` one rung toward `target` on the FP16 < BF16 < FP32 ladder.
+/// Codes outside the ladder (impossible by construction — both come
+/// from the policy's own code table) step nowhere.
 fn step_toward(from: i32, target: i32) -> i32 {
-    debug_assert!(rung(from).is_some() && rung(target).is_some());
-    let (f, t) = (rung(from).unwrap(), rung(target).unwrap());
+    let (Some(f), Some(t)) = (rung(from), rung(target)) else {
+        return from;
+    };
     let next = if t > f { f + 1 } else if t < f { f - 1 } else { f };
     [FP16, BF16, FP32][next]
 }

@@ -14,12 +14,15 @@
 //! borrow gymnastics; discipline is simply that every `take` is paired
 //! with a `put` once the buffer is dead.
 
-/// Best-fit pop from a free list, zero-filled to `len`. Zeroing is a
-/// deliberate simplicity/safety trade: a non-zeroing reuse would need
-/// `unsafe` (`set_len` over possibly-uninit capacity), and the memset
-/// is a single streaming pass — small next to the GEMMs these buffers
-/// feed. The per-element-type pools share this one implementation so
-/// the fit heuristic and alloc accounting can't drift apart.
+/// Best-fit pop from a free list, zero-filled to `len`. Zeroing keeps
+/// the borrow discipline simple (a stale-content reuse would make
+/// every consumer's first write load-bearing), and it is one streaming
+/// pass — small next to the GEMMs these buffers feed. The fill writes
+/// `T::default()` straight into the spare capacity and publishes the
+/// length with a single `set_len`, skipping `resize`'s per-push length
+/// bookkeeping on the hot path. The per-element-type pools share this
+/// one implementation so the fit heuristic and alloc accounting can't
+/// drift apart.
 fn take_from<T: Copy + Default>(free: &mut Vec<Vec<T>>, fresh: &mut u64, len: usize) -> Vec<T> {
     let mut best: Option<usize> = None;
     for (i, b) in free.iter().enumerate() {
@@ -39,7 +42,15 @@ fn take_from<T: Copy + Default>(free: &mut Vec<Vec<T>>, fresh: &mut u64, len: us
         }
     };
     v.clear();
-    v.resize(len, T::default());
+    for slot in &mut v.spare_capacity_mut()[..len] {
+        slot.write(T::default());
+    }
+    // SAFETY: `clear` set the length to 0, the loop above initialized
+    // the first `len` spare slots, and `len <= capacity` — pooled
+    // buffers are best-fit selected with `capacity() >= len`, fresh
+    // ones come from `with_capacity(len)` (the slice above would have
+    // panicked otherwise).
+    unsafe { v.set_len(len) };
     v
 }
 

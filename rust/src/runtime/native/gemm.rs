@@ -656,7 +656,9 @@ mod tests {
             im2col_qdq(&pool, &x, n, h, w, cin, k, s, FP32, &mut cols);
             let mut back = vec![0f32; x.len()];
             col2im(&pool, &y, n, h, w, cin, k, s, &mut back);
+            // detlint: ordered — sequential dot products in buffer order.
             let lhs: f64 = cols.iter().zip(&y).map(|(&a, &b)| a as f64 * b as f64).sum();
+            // detlint: ordered — sequential dot products in buffer order.
             let rhs: f64 = x.iter().zip(&back).map(|(&a, &b)| a as f64 * b as f64).sum();
             assert!(
                 (lhs - rhs).abs() < 1e-3 * lhs.abs().max(1.0),
@@ -678,7 +680,9 @@ mod tests {
         im2col3x3_qdq(&pool, &x, n, h, w, cin, FP32, &mut cols);
         let mut back = vec![0f32; x.len()];
         col2im3x3(&pool, &y, n, h, w, cin, &mut back);
+        // detlint: ordered — sequential dot products in buffer order.
         let lhs: f64 = cols.iter().zip(&y).map(|(&a, &b)| a as f64 * b as f64).sum();
+        // detlint: ordered — sequential dot products in buffer order.
         let rhs: f64 = x.iter().zip(&back).map(|(&a, &b)| a as f64 * b as f64).sum();
         assert!((lhs - rhs).abs() < 1e-3 * lhs.abs().max(1.0), "{lhs} vs {rhs}");
     }

@@ -292,7 +292,7 @@ impl Plan {
         // The executor seeds the backward from the loss node; a graph
         // without one would silently eval to loss 0 and panic in train.
         anyhow::ensure!(
-            matches!(entry.nodes.last().expect("non-empty").op, NodeOp::SoftmaxCe),
+            matches!(entry.nodes.last().map(|n| &n.op), Some(NodeOp::SoftmaxCe)),
             "{}: graph must end in a softmax_ce loss node",
             entry.key
         );
@@ -552,6 +552,9 @@ fn backward(
             send(arena, &mut grad, node.input, g);
             continue;
         }
+        // detlint: allow(d6) — Plan validation proved every non-loss
+        // node's output is consumed, so the reverse walk always finds a
+        // deposited cotangent; a miss is executor-corruption, not input.
         let mut g = grad[i].take().expect("consumed node has a cotangent");
         match node.op {
             NodeOp::Conv { k, stride, w, layer } => {
@@ -989,16 +992,19 @@ pub fn curv_step(
             .collect();
         let un: f64 = idxs
             .iter()
+            // detlint: ordered — sequential iterator sums: elements in
+            // buffer order, tensors in fixed idxs order (next 2 lines).
             .map(|&i| probes[i].iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>())
-            .sum::<f64>()
+            .sum::<f64>() // detlint: ordered — see above
             .sqrt();
         if un < 1e-12 {
             continue; // degenerate probe — λ stays 0, probe untouched
         }
         let tn: f64 = idxs
             .iter()
+            // detlint: ordered — same fixed buffer/idxs order as `un`.
             .map(|&i| st.params[i].iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>())
-            .sum::<f64>()
+            .sum::<f64>() // detlint: ordered — see above
             .sqrt();
         let eps = (FD_EPS_REL * (tn + 1.0) / un) as f32;
 
@@ -1086,6 +1092,7 @@ mod tests {
             assert!(st.state[0].iter().all(|&v| v == 0.0), "{key}: rm");
             assert!(st.state[1].iter().all(|&v| v == 1.0), "{key}: rv");
             // conv weights have he-normal-ish spread.
+            // detlint: ordered — sequential sum in buffer order.
             let norm: f64 = st.params[0].iter().map(|&v| (v as f64).powi(2)).sum::<f64>();
             assert!(norm > 0.1 && norm < 1000.0, "{key}: stem norm² {norm}");
         }
@@ -1171,6 +1178,7 @@ mod tests {
                     "{key}: {} grad non-finite",
                     spec.name
                 );
+                // detlint: ordered — sequential sum in buffer order.
                 let norm: f64 = g.iter().map(|&v| (v as f64).powi(2)).sum();
                 assert!(norm > 0.0, "{key}: {} grad identically zero", spec.name);
             }

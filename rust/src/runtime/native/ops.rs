@@ -1037,6 +1037,7 @@ mod tests {
         let mut rng = Rng::new(5);
         let x = randv(&mut rng, n * h * w * c);
         let out = gap_fwd(&x, n, h, w, c);
+        // detlint: ordered — sequential sum over ascending positions.
         let manual: f32 = (0..4).map(|p| x[p * c]).sum::<f32>() / 4.0;
         assert!((out[0] - manual).abs() < 1e-6);
         let g: Vec<f32> = (0..n * c).map(|i| i as f32).collect();
@@ -1067,6 +1068,7 @@ mod tests {
         });
         // db is the column sum of g.
         for co in 0..cout {
+            // detlint: ordered — sequential sum over ascending batch rows.
             let want: f32 = (0..n).map(|bi| g[bi * cout + co]).sum();
             assert!((db[co] - want).abs() < 1e-5);
         }

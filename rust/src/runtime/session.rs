@@ -159,11 +159,8 @@ impl<'e> Session<'e> {
     pub fn curv_step(&mut self, batch: &Batch, codes: &[i32], seed: u64) -> Result<Vec<f32>> {
         anyhow::ensure!(batch.n == self.entry.curv_batch, "curvature batch size");
         anyhow::ensure!(codes.len() == self.entry.num_layers, "codes arity");
-        if self.probes.is_none() {
-            self.probes = Some(fresh_probes(&self.entry, seed));
-        }
         let backend = self.engine.backend();
-        let probes = self.probes.as_mut().unwrap();
+        let probes = self.probes.get_or_insert_with(|| fresh_probes(&self.entry, seed));
         let lambdas = backend.curv_step(&self.entry, &self.st, batch, probes, codes)?;
         anyhow::ensure!(lambdas.len() == self.entry.num_layers, "lambda arity");
         Ok(lambdas)

@@ -264,6 +264,9 @@ fn run_job(engine: &Engine, job: &Job, grid_dir: &Path) -> Result<LedgerEntry> {
         job.digest,
         job.config_hash,
     ));
+    // detlint: allow(d2) — measured wall_s is observability-only: it
+    // rides in telemetry/ledger but is excluded from result digests and
+    // every golden comparison (docs/TELEMETRY.md "determinism").
     let t0 = Instant::now();
     let result = harness::run_seed(engine, job.cfg.clone(), Some(Box::new(sink.clone())))?;
     let wall_s = t0.elapsed().as_secs_f64();
@@ -374,7 +377,8 @@ pub fn run_grid(spec: &GridSpec, opts: &SchedOptions) -> Result<GridOutcome> {
                 });
             }
         });
-        if let Some(e) = failure.into_inner().unwrap() {
+        let first_failure = failure.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner);
+        if let Some(e) = first_failure {
             return Err(e);
         }
     }

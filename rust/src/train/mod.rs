@@ -259,6 +259,8 @@ impl<'e> Trainer<'e> {
         let mut modeled_s = 0.0;
         let budget_examples = self.cfg.train_examples;
         let fixed_steps = self.cfg.steps_per_epoch;
+        // detlint: allow(d2) — wall_s is a measured-only epoch field,
+        // excluded from digests and goldens (docs/TELEMETRY.md).
         let t0 = Instant::now();
         loop {
             let (loss, corr, b, modeled) = self.step()?;

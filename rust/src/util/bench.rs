@@ -10,6 +10,10 @@
 //! (`BENCH_native.json`), so the repo's perf trajectory is comparable
 //! across PRs (`util/json.rs` is both the writer and the reader).
 
+// detlint: allow-file(d2) — this IS the wall-clock module: measuring
+// latency is its whole job, and bench output never feeds deterministic
+// artifacts (BENCH_*.json is observability, not a golden file).
+
 use std::path::Path;
 use std::time::{Duration, Instant};
 
@@ -161,7 +165,7 @@ impl Bencher {
             samples.push(dt.as_secs_f64());
             iters += 1;
         }
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        samples.sort_by(f64::total_cmp);
         let res = BenchResult {
             name: name.to_string(),
             iters,

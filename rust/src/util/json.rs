@@ -184,7 +184,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn expect(&mut self, c: u8) -> Result<(), ParseError> {
+    fn expect_byte(&mut self, c: u8) -> Result<(), ParseError> {
         if self.peek() == Some(c) {
             self.i += 1;
             Ok(())
@@ -216,7 +216,7 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json, ParseError> {
-        self.expect(b'{')?;
+        self.expect_byte(b'{')?;
         let mut m = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
@@ -227,7 +227,7 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             let k = self.string()?;
             self.skip_ws();
-            self.expect(b':')?;
+            self.expect_byte(b':')?;
             self.skip_ws();
             let v = self.value()?;
             m.insert(k, v);
@@ -244,7 +244,7 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Json, ParseError> {
-        self.expect(b'[')?;
+        self.expect_byte(b'[')?;
         let mut v = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
@@ -267,7 +267,7 @@ impl<'a> Parser<'a> {
     }
 
     fn string(&mut self) -> Result<String, ParseError> {
-        self.expect(b'"')?;
+        self.expect_byte(b'"')?;
         let mut s = String::new();
         loop {
             match self.peek() {
@@ -341,6 +341,8 @@ impl<'a> Parser<'a> {
                 self.i += 1;
             }
         }
+        // detlint: allow(d6) — the scanned span holds ASCII digits, sign,
+        // dot, and exponent bytes only, so it is always valid UTF-8.
         let text = std::str::from_utf8(&self.b[start..self.i]).unwrap();
         text.parse::<f64>()
             .map(Json::Num)

@@ -1,0 +1,5 @@
+use std::collections::BTreeMap;
+
+fn table() -> BTreeMap<String, u64> {
+    BTreeMap::new()
+}

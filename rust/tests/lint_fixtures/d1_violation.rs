@@ -1,0 +1,5 @@
+use std::collections::HashMap;
+
+fn table() -> HashMap<String, u64> {
+    HashMap::new()
+}

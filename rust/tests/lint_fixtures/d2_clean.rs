@@ -1,0 +1,5 @@
+fn stamp() -> std::time::Instant {
+    // detlint: allow(d2) — fixture: observability-only timing that never
+    // feeds a deterministic artifact.
+    std::time::Instant::now()
+}

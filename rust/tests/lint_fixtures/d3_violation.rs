@@ -1,0 +1,3 @@
+fn go() {
+    std::thread::spawn(|| {});
+}

@@ -1,0 +1,7 @@
+fn total(xs: &[f32]) -> f32 {
+    xs.iter().sum::<f32>() // detlint: ordered — sequential sum in slice order.
+}
+
+fn peak(xs: &[f32]) -> f32 {
+    xs.iter().copied().fold(f32::MIN, f32::max)
+}

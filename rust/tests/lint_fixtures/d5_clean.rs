@@ -1,0 +1,5 @@
+fn fill(v: &mut Vec<u8>, len: usize) {
+    // SAFETY: fixture — the caller reserved and initialized the first
+    // `len` bytes before handing the buffer over.
+    unsafe { v.set_len(len) };
+}

@@ -1,0 +1,3 @@
+fn fill(v: &mut Vec<u8>, len: usize) {
+    unsafe { v.set_len(len) };
+}

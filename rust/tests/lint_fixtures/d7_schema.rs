@@ -1,0 +1,16 @@
+pub const SCHEMA_VERSION: u64 = 1;
+
+fn emit(m: &mut Map) {
+    m.insert("alpha", 1);
+    m.insert("beta", 2);
+    m.insert("gamma", 3);
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_keys_are_ignored() {
+        let mut m = Map::new();
+        m.insert("not_a_schema_key", 0);
+    }
+}

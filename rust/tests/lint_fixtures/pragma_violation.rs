@@ -1,0 +1,6 @@
+fn f() -> u32 {
+    // detlint: allow(d6)
+    let x: Result<u32, ()> = Ok(1);
+    // detlint: allow(d9) — no such rule exists.
+    x.unwrap()
+}

@@ -1,0 +1,129 @@
+//! Fixture corpus for the detlint rule engine — one positive and one
+//! negative case per rule D1–D7 plus pragma hygiene — and the gate
+//! that matters: the crate's own `src/` tree must be lint-clean.
+//!
+//! Fixtures live in `tests/lint_fixtures/` as plain `.rs` text (never
+//! compiled); each is linted under a pseudo relative path because the
+//! rules are path-scoped.
+
+use std::path::Path;
+
+use tri_accel::lint::{lint_source, schema, Finding};
+
+fn rule_ids(findings: &[Finding]) -> Vec<&str> {
+    findings.iter().map(|f| f.rule.as_str()).collect()
+}
+
+macro_rules! fixture {
+    ($name:literal) => {
+        include_str!(concat!("lint_fixtures/", $name))
+    };
+}
+
+#[test]
+fn d1_flags_hash_collections_in_deterministic_dirs() {
+    let f = lint_source("sched/fixture.rs", fixture!("d1_violation.rs"));
+    assert!(!f.is_empty(), "HashMap in sched/ must be flagged");
+    assert!(rule_ids(&f).iter().all(|r| *r == "d1"), "{f:?}");
+    assert!(lint_source("util/fixture.rs", fixture!("d1_violation.rs")).is_empty());
+    assert!(lint_source("sched/fixture.rs", fixture!("d1_clean.rs")).is_empty());
+}
+
+#[test]
+fn d2_flags_wall_clock_reads() {
+    let f = lint_source("policy/fixture.rs", fixture!("d2_violation.rs"));
+    assert_eq!(rule_ids(&f), ["d2"], "{f:?}");
+    assert!(lint_source("policy/fixture.rs", fixture!("d2_clean.rs")).is_empty());
+}
+
+#[test]
+fn d3_flags_thread_creation_outside_the_pools() {
+    let f = lint_source("metrics/fixture.rs", fixture!("d3_violation.rs"));
+    assert_eq!(rule_ids(&f), ["d3"], "{f:?}");
+    let in_pool = lint_source("runtime/native/pool.rs", fixture!("d3_violation.rs"));
+    assert!(in_pool.is_empty(), "the pool module itself is allowed to spawn");
+}
+
+#[test]
+fn d4_flags_unpinned_float_reductions() {
+    let f = lint_source("runtime/native/fixture.rs", fixture!("d4_violation.rs"));
+    assert_eq!(rule_ids(&f), ["d4"], "{f:?}");
+    let data = lint_source("data/fixture.rs", fixture!("d4_violation.rs"));
+    assert_eq!(rule_ids(&data), ["d4"], "data/ is in scope too");
+    assert!(lint_source("util/fixture.rs", fixture!("d4_violation.rs")).is_empty());
+    assert!(lint_source("runtime/native/fixture.rs", fixture!("d4_clean.rs")).is_empty());
+}
+
+#[test]
+fn d5_requires_safety_comments_on_unsafe() {
+    let f = lint_source("util/fixture.rs", fixture!("d5_violation.rs"));
+    assert_eq!(rule_ids(&f), ["d5"], "{f:?}");
+    assert!(lint_source("util/fixture.rs", fixture!("d5_clean.rs")).is_empty());
+}
+
+#[test]
+fn d6_flags_unwrap_in_library_code() {
+    let f = lint_source("policy/fixture.rs", fixture!("d6_violation.rs"));
+    assert_eq!(rule_ids(&f), ["d6"], "{f:?}");
+    assert!(lint_source("policy/fixture.rs", fixture!("d6_clean.rs")).is_empty());
+}
+
+#[test]
+fn d7_schema_pin_matches_the_extracted_field_set() {
+    let (version, keys) = schema::extract(fixture!("d7_schema.rs"), "SCHEMA_VERSION");
+    assert_eq!(version, Some(1));
+    let names: Vec<&str> = keys.iter().map(String::as_str).collect();
+    assert_eq!(names, ["alpha", "beta", "gamma"], "test-region keys must be ignored");
+    let digest = schema::digest_keys(&keys);
+    let pin = schema::SchemaPin {
+        file: "metrics/fixture.rs",
+        version_const: "SCHEMA_VERSION",
+        version: 1,
+        digest,
+    };
+    let (f, status) = schema::check_extracted(&pin, version, &keys);
+    assert!(f.is_empty(), "{f:?}");
+    assert_eq!(status.digest, status.pinned_digest);
+}
+
+#[test]
+fn d7_drift_without_a_version_bump_is_a_finding() {
+    let (version, keys) = schema::extract(fixture!("d7_schema.rs"), "SCHEMA_VERSION");
+    let digest = schema::digest_keys(&keys);
+    let stale = schema::SchemaPin {
+        file: "metrics/fixture.rs",
+        version_const: "SCHEMA_VERSION",
+        version: 1,
+        digest: digest ^ 1,
+    };
+    let (f, _) = schema::check_extracted(&stale, version, &keys);
+    assert_eq!(rule_ids(&f), ["d7"], "{f:?}");
+    assert!(f[0].message.contains("drifted"), "{}", f[0].message);
+
+    let bumped = schema::SchemaPin {
+        file: "metrics/fixture.rs",
+        version_const: "SCHEMA_VERSION",
+        version: 2,
+        digest,
+    };
+    let (f, _) = schema::check_extracted(&bumped, version, &keys);
+    assert_eq!(rule_ids(&f), ["d7"], "{f:?}");
+    assert!(f[0].message.contains("lint pins"), "{}", f[0].message);
+}
+
+#[test]
+fn malformed_pragmas_are_findings_and_do_not_suppress() {
+    let f = lint_source("policy/fixture.rs", fixture!("pragma_violation.rs"));
+    let ids = rule_ids(&f);
+    assert_eq!(ids.iter().filter(|r| **r == "pragma").count(), 2, "{f:?}");
+    assert_eq!(ids.iter().filter(|r| **r == "d6").count(), 1, "a broken pragma must not allow");
+}
+
+#[test]
+fn crate_source_tree_is_lint_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let report = tri_accel::lint::lint_tree(&root).expect("lint the src tree");
+    assert!(report.files_scanned > 40, "only scanned {} files", report.files_scanned);
+    assert!(report.clean(), "detlint findings in src/:\n{}", report.human());
+    assert_eq!(report.schemas.len(), 2, "telemetry + ledger pins");
+}
