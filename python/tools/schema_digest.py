@@ -1,0 +1,234 @@
+#!/usr/bin/env python3
+"""Python twin of detlint rule D7's schema digest (stdlib only).
+
+Usage: schema_digest.py <file.rs> <VERSION_CONST> [<file.rs> <VERSION_CONST> ...]
+
+Recomputes, for each schema-pinned Rust source file, the (version,
+digest) pair that `rust/src/lint/schema.rs` pins: the FNV-1a-64 hash of
+the sorted, comma-joined set of serialized-field-key string literals —
+the first argument of `insert("…")` / `num(&mut m, "…")` /
+`s(&mut m, "…")` calls on non-test code lines. The extraction is a
+faithful port of the Rust scanner's code channel (string contents and
+comments blanked, `#[cfg(test)]` regions tracked by brace depth), so
+the numbers printed here are the numbers `tri-accel lint` computes.
+
+Use it when bumping a schema version without a local Rust toolchain:
+run it on the edited file, then update the matching PINS entry in
+`rust/src/lint/schema.rs`. Validate the port itself by running it on
+an unmodified pinned file and comparing against the pinned digest.
+
+Prints one line per file: `<file> version=<v> digest=0x<16 hex>`.
+"""
+
+import sys
+
+KEY_MARKERS = ['insert("', 'num(&mut m, "', 's(&mut m, "']
+
+
+def fnv1a64(data: bytes) -> int:
+    h = 0xCBF29CE484222325
+    for b in data:
+        h ^= b
+        h = (h * 0x100000001B3) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+def split_code_lines(text):
+    """Per-line code channel: comments removed, string/char literal
+    contents blanked with delimiters kept (port of lint/scan.rs
+    split_channels, code side only)."""
+    chars = text
+    code_lines = []
+    code = []
+    state = "code"  # code | line_comment | block_comment | str | raw_str
+    depth = 0  # block-comment nesting
+    hashes = 0  # raw-string hash count
+    i = 0
+    n = len(chars)
+    while i < n:
+        c = chars[i]
+        if c == "\n":
+            code_lines.append("".join(code))
+            code = []
+            if state == "line_comment":
+                state = "code"
+            i += 1
+            continue
+        if state == "code":
+            nxt = chars[i + 1] if i + 1 < n else ""
+            if c == "/" and nxt == "/":
+                state = "line_comment"
+                i += 2
+            elif c == "/" and nxt == "*":
+                state = "block_comment"
+                depth = 1
+                i += 2
+            elif c == '"':
+                code.append('"')
+                state = "str"
+                i += 1
+            elif c == "r" or (c == "b" and nxt == "r"):
+                j = i + (2 if c == "b" else 1)
+                h = 0
+                while j < n and chars[j] == "#":
+                    h += 1
+                    j += 1
+                if j < n and chars[j] == '"':
+                    code.append('"')
+                    state = "raw_str"
+                    hashes = h
+                    i = j + 1
+                else:
+                    code.append(c)
+                    i += 1
+            elif c == "b" and nxt == '"':
+                code.append('"')
+                state = "str"
+                i += 2
+            elif c == "'" or (c == "b" and nxt == "'"):
+                q = i + 1 if c == "b" else i
+                if q + 1 < n and chars[q + 1] == "\\":
+                    j = q + 2
+                    while j < n and chars[j] != "'":
+                        j += 1
+                    code.append("'")
+                    i = j + 1
+                elif q + 2 < n and chars[q + 2] == "'" and chars[q + 1] != "'":
+                    code.append("'")
+                    i = q + 3
+                else:
+                    code.append(c)
+                    i += 1
+            else:
+                code.append(c)
+                i += 1
+        elif state == "line_comment":
+            i += 1
+        elif state == "block_comment":
+            nxt = chars[i + 1] if i + 1 < n else ""
+            if c == "/" and nxt == "*":
+                depth += 1
+                i += 2
+            elif c == "*" and nxt == "/":
+                depth -= 1
+                if depth == 0:
+                    state = "code"
+                i += 2
+            else:
+                i += 1
+        elif state == "str":
+            if c == "\\" and not (i + 1 < n and chars[i + 1] == "\n"):
+                i += 2
+            elif c == '"':
+                code.append('"')
+                state = "code"
+                i += 1
+            else:
+                i += 1
+        else:  # raw_str
+            if c == '"' and all(
+                i + k < n and chars[i + k] == "#" for k in range(1, hashes + 1)
+            ):
+                code.append('"')
+                state = "code"
+                i += 1 + hashes
+            else:
+                i += 1
+    code_lines.append("".join(code))
+    # Align with str::lines() semantics (drop the stray final element
+    # when the text ends in a newline).
+    want = len(text.splitlines())
+    del code_lines[want:]
+    while len(code_lines) < want:
+        code_lines.append("")
+    return code_lines
+
+
+def test_regions(code_lines):
+    """Mark lines covered by a #[cfg(test)] item (port of lint/scan.rs
+    test_regions, brace-depth tracking)."""
+    out = [False] * len(code_lines)
+    depth = 0
+    pending_attr = False
+    region_floor = None
+    for idx, code in enumerate(code_lines):
+        trimmed = code.strip()
+        if region_floor is None and trimmed.startswith("#[cfg(test)]"):
+            pending_attr = True
+        if pending_attr or region_floor is not None:
+            out[idx] = True
+        depth_before = depth
+        first_open_depth = None
+        for ch in trimmed:
+            if ch == "{":
+                depth += 1
+                if first_open_depth is None:
+                    first_open_depth = depth
+            elif ch == "}":
+                depth -= 1
+        if pending_attr and trimmed and not trimmed.startswith("#["):
+            pending_attr = False
+            if first_open_depth is not None:
+                region_floor = first_open_depth
+            elif not trimmed.endswith(";"):
+                region_floor = depth_before + 1
+        if region_floor is not None and depth < region_floor:
+            region_floor = None
+    return out
+
+
+def extract(src, version_const):
+    """(version, sorted key list) — port of lint/schema.rs extract."""
+    raw = src.splitlines()
+    code_lines = split_code_lines(src)
+    in_test = test_regions(code_lines)
+    keys = set()
+    version = None
+    needle = f"const {version_const}: u64 ="
+    for i, code in enumerate(code_lines):
+        if in_test[i]:
+            continue
+        if needle in code:
+            at = raw[i].find(needle)
+            if at >= 0:
+                tail = raw[i][at + len(needle):].lstrip()
+                digits = ""
+                for ch in tail:
+                    if ch.isdigit():
+                        digits += ch
+                    else:
+                        break
+                if digits:
+                    version = int(digits)
+        for marker in KEY_MARKERS:
+            if marker not in code:
+                continue
+            at = raw[i].find(marker)
+            if at >= 0:
+                tail = raw[i][at + len(marker):]
+                end = tail.find('"')
+                if end >= 0:
+                    keys.add(tail[:end])
+    return version, sorted(keys)
+
+
+def digest_keys(keys):
+    return fnv1a64(",".join(keys).encode("utf-8"))
+
+
+def main(argv):
+    args = argv[1:]
+    if not args or len(args) % 2 != 0:
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    for path, const in zip(args[::2], args[1::2]):
+        with open(path, encoding="utf-8") as f:
+            src = f.read()
+        version, keys = extract(src, const)
+        v = "?" if version is None else str(version)
+        print(f"{path} version={v} digest=0x{digest_keys(keys):016x} keys={len(keys)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

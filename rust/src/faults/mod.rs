@@ -1,0 +1,671 @@
+//! Deterministic fault injection for the experiment scheduler.
+//!
+//! The scheduler's crash-safety claims (`docs/FAULTS.md`) are only as
+//! good as the failures they were tested against. This module supplies
+//! those failures on demand, *deterministically*: a [`FaultSpec`]
+//! (parsed from the `--faults` CLI spec) plus a seed expands into a
+//! [`FaultPlan`] that schedules
+//!
+//! * simulated **OOM storms** (a co-tenant burst crushes the live
+//!   [`crate::memsim::VramSim`] budget and the attempt dies the way the
+//!   kernel OOM-killer would kill it),
+//! * **transient IO errors** on ledger and telemetry writes (injected
+//!   through the [`ArtifactIo`] seam both writers go through),
+//! * **job panics** (a [`PanicSink`] unwinds out of the trainer's
+//!   telemetry emission — deep inside the real training stack), and
+//! * **torn final ledger records** (a half-written line followed by a
+//!   simulated process crash).
+//!
+//! Which jobs are hit is derived from the plan seed and the job-key
+//! set alone — never from wall time, thread timing, or completion
+//! order — so a plan is reproducible across runs, `--jobs` widths, and
+//! resumes. Every fired fault is appended to `faults.jsonl` in the
+//! grid directory; the plan reloads that log when it arms, which is
+//! how one-shot faults stay consumed across a (simulated or real)
+//! process restart instead of re-firing forever.
+//!
+//! The invariant that makes this more than chaos theater: a grid run
+//! under any survivable plan produces report artifacts bit-identical
+//! to the fault-free run (`tri-accel chaos` asserts it end-to-end).
+
+// Enforced as an error by the docs CI job (`cargo doc` with
+// `RUSTDOCFLAGS=-D warnings`); kept at `warn` here so tier-1
+// `cargo build`/`cargo test` never hard-fails on a doc regression.
+#![warn(missing_docs)]
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::checkpoint::fnv1a;
+use crate::config::Config;
+use crate::manifest::ModelEntry;
+use crate::memsim::{self, MemoryMonitor, VramSim};
+use crate::metrics::telemetry::TelemetrySink;
+use crate::util::json::Json;
+
+/// The accepted `--faults` grammar (shown by parse errors and
+/// `docs/FAULTS.md`).
+pub const FAULTS_GRAMMAR: &str =
+    "seed:S,io:N,ledger_io:N,panic:N[:H],oom:N[:H],torn:N (comma-separated, any subset; \
+     N = count, H = attempts hit, default 1)";
+
+/// A parsed, validated fault plan specification. Pure data — expand it
+/// into a live [`FaultPlan`] with [`FaultPlan::arm`] once the grid
+/// directory and job-key set are known.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultSpec {
+    /// Plan seed: drives which jobs are targeted (and nothing else).
+    pub seed: u64,
+    /// Jobs whose telemetry stream gets one transient write error.
+    pub io_jobs: usize,
+    /// Ledger appends that fail transiently (nothing written), once each.
+    pub ledger_io: usize,
+    /// Jobs whose training panics (via the telemetry path), and how
+    /// many attempts the panic hits before clearing.
+    pub panic_jobs: usize,
+    /// Attempts hit per panicking job (≥ 1).
+    pub panic_hits: usize,
+    /// Jobs killed by a simulated OOM storm, and how many attempts.
+    pub oom_jobs: usize,
+    /// Attempts hit per stormed job (≥ 1).
+    pub oom_hits: usize,
+    /// Torn ledger writes: a half-written record followed by a
+    /// simulated process crash, once each.
+    pub torn: usize,
+}
+
+impl FaultSpec {
+    /// Parse a `--faults` spec. `""`, `none`, and `off` parse to the
+    /// empty plan; anything else must match [`FAULTS_GRAMMAR`].
+    pub fn parse(spec: &str) -> Result<FaultSpec> {
+        let mut out = FaultSpec { panic_hits: 1, oom_hits: 1, ..FaultSpec::default() };
+        let trimmed = spec.trim();
+        if trimmed.is_empty() || trimmed == "none" || trimmed == "off" {
+            return Ok(out);
+        }
+        for clause in trimmed.split(',') {
+            let mut parts = clause.split(':');
+            // detlint: allow(d6) — split always yields a first element.
+            let name = parts.next().unwrap().trim();
+            let rest: Vec<&str> = parts.collect();
+            let field = |i: usize| -> Result<u64> {
+                let v = rest.get(i).copied().with_context(|| {
+                    format!("--faults clause `{clause}` is missing a value ({FAULTS_GRAMMAR})")
+                })?;
+                v.trim().parse().map_err(|_| {
+                    anyhow::anyhow!("--faults clause `{clause}`: `{v}` is not a number")
+                })
+            };
+            let count_only = |rest: &[&str]| -> Result<()> {
+                anyhow::ensure!(
+                    rest.len() == 1,
+                    "--faults clause `{clause}` takes one value ({FAULTS_GRAMMAR})"
+                );
+                Ok(())
+            };
+            match name {
+                "seed" => {
+                    count_only(&rest)?;
+                    out.seed = field(0)?;
+                }
+                "io" => {
+                    count_only(&rest)?;
+                    out.io_jobs = field(0)? as usize;
+                }
+                "ledger_io" => {
+                    count_only(&rest)?;
+                    out.ledger_io = field(0)? as usize;
+                }
+                "torn" => {
+                    count_only(&rest)?;
+                    out.torn = field(0)? as usize;
+                }
+                "panic" | "oom" => {
+                    anyhow::ensure!(
+                        (1..=2).contains(&rest.len()),
+                        "--faults clause `{clause}` takes N or N:H ({FAULTS_GRAMMAR})"
+                    );
+                    let n = field(0)? as usize;
+                    let hits = if rest.len() == 2 { field(1)? as usize } else { 1 };
+                    anyhow::ensure!(hits >= 1, "--faults `{clause}`: H must be at least 1");
+                    if name == "panic" {
+                        out.panic_jobs = n;
+                        out.panic_hits = hits;
+                    } else {
+                        out.oom_jobs = n;
+                        out.oom_hits = hits;
+                    }
+                }
+                other => anyhow::bail!(
+                    "unknown --faults clause `{other}` — accepted grammar: {FAULTS_GRAMMAR}"
+                ),
+            }
+        }
+        let total = out.io_jobs + out.ledger_io + out.panic_jobs + out.oom_jobs + out.torn;
+        anyhow::ensure!(total <= 10_000, "--faults plan is implausibly large ({total} faults)");
+        Ok(out)
+    }
+
+    /// Does this spec inject anything at all?
+    pub fn is_empty(&self) -> bool {
+        self.io_jobs == 0
+            && self.ledger_io == 0
+            && self.panic_jobs == 0
+            && self.oom_jobs == 0
+            && self.torn == 0
+    }
+
+    /// Canonical one-line rendering (progress lines, fault log header).
+    pub fn render(&self) -> String {
+        format!(
+            "seed:{},io:{},ledger_io:{},panic:{}:{},oom:{}:{},torn:{}",
+            self.seed,
+            self.io_jobs,
+            self.ledger_io,
+            self.panic_jobs,
+            self.panic_hits,
+            self.oom_jobs,
+            self.oom_hits,
+            self.torn
+        )
+    }
+}
+
+/// Per-job fault assignment (derived from the plan seed + job-key set).
+#[derive(Debug, Clone, Default)]
+struct JobFaults {
+    /// Attempts 0..panic_hits panic.
+    panic_hits: usize,
+    /// Attempts 0..oom_hits die to a simulated OOM storm.
+    oom_hits: usize,
+    /// First telemetry append fails transiently.
+    io: bool,
+}
+
+/// Mutable plan state, shared across scheduler workers.
+#[derive(Debug, Default)]
+struct PlanState {
+    /// Ids of faults that already fired (persisted in `faults.jsonl`).
+    consumed: BTreeSet<String>,
+    /// A torn-write crash fired: every later ledger write in this
+    /// process fails, simulating the process being dead.
+    crashed: bool,
+}
+
+/// A live, armed fault plan for one grid directory. Shared by every
+/// scheduler worker (and the [`FaultyIo`] seam) behind an `Arc`.
+pub struct FaultPlan {
+    spec: FaultSpec,
+    targets: BTreeMap<String, JobFaults>,
+    log_path: PathBuf,
+    state: Mutex<PlanState>,
+}
+
+impl FaultPlan {
+    /// Expand a spec against a grid: deterministically assign targeted
+    /// jobs from the full job-key set (so targeting is identical on
+    /// resume, when fewer jobs are pending) and reload the grid's
+    /// fault log so already-fired one-shots stay consumed across
+    /// restarts.
+    pub fn arm(spec: &FaultSpec, grid_dir: &Path, job_keys: &[String]) -> Result<Arc<FaultPlan>> {
+        // Rank job keys by seeded content hash (ties by key): a pure
+        // function of (seed, key set) — independent of job order,
+        // `--jobs` width, and completion timing.
+        let mut ranked: Vec<(u64, &String)> = job_keys
+            .iter()
+            .map(|k| {
+                let mut bytes = spec.seed.to_le_bytes().to_vec();
+                bytes.extend_from_slice(k.as_bytes());
+                (fnv1a(&bytes), k)
+            })
+            .collect();
+        ranked.sort();
+        let mut targets: BTreeMap<String, JobFaults> = BTreeMap::new();
+        let mut cursor = ranked.iter().map(|(_, k)| (*k).clone());
+        for key in cursor.by_ref().take(spec.panic_jobs.min(job_keys.len())) {
+            targets.entry(key).or_default().panic_hits = spec.panic_hits;
+        }
+        for key in cursor.by_ref().take(spec.oom_jobs) {
+            targets.entry(key).or_default().oom_hits = spec.oom_hits;
+        }
+        for key in cursor.take(spec.io_jobs) {
+            targets.entry(key).or_default().io = true;
+        }
+        let log_path = grid_dir.join("faults.jsonl");
+        let mut consumed = BTreeSet::new();
+        if log_path.exists() {
+            let text = std::fs::read_to_string(&log_path)
+                .with_context(|| format!("reading fault log {}", log_path.display()))?;
+            for line in text.lines() {
+                // Tolerate a torn tail in the log itself — an
+                // unparseable line simply doesn't mark anything consumed.
+                if let Ok(j) = Json::parse(line) {
+                    if let Some(id) = j.get("id").and_then(Json::as_str) {
+                        consumed.insert(id.to_string());
+                    }
+                }
+            }
+        }
+        Ok(Arc::new(FaultPlan {
+            spec: spec.clone(),
+            targets,
+            log_path,
+            state: Mutex::new(PlanState { consumed, crashed: false }),
+        }))
+    }
+
+    /// The spec this plan was armed from.
+    pub fn spec(&self) -> &FaultSpec {
+        &self.spec
+    }
+
+    /// Path of the append-only fault log (`<grid-dir>/faults.jsonl`).
+    pub fn log_path(&self) -> &Path {
+        &self.log_path
+    }
+
+    /// Fire a fault once: marks `id` consumed and appends a log line.
+    /// Returns false (and injects nothing) if the fault already fired
+    /// — including in a previous process, via the reloaded log — or if
+    /// the log line cannot be persisted (a fault whose consumption
+    /// can't be recorded would re-fire forever on restart).
+    pub fn fire(&self, id: &str, kind: &str, detail: &str) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if st.consumed.contains(id) {
+            return false;
+        }
+        let mut m = BTreeMap::new();
+        m.insert("id".to_string(), Json::Str(id.to_string()));
+        m.insert("kind".to_string(), Json::Str(kind.to_string()));
+        m.insert("detail".to_string(), Json::Str(detail.to_string()));
+        let line = format!("{}\n", Json::Obj(m).to_string_compact());
+        let appended = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.log_path)
+            .and_then(|mut f| f.write_all(line.as_bytes()));
+        if appended.is_err() {
+            return false;
+        }
+        st.consumed.insert(id.to_string());
+        if kind == "torn" {
+            st.crashed = true;
+        }
+        true
+    }
+
+    /// Has a torn-write crash fired in this process? While true, every
+    /// ledger write errors — the process is "dead" as far as the grid
+    /// ledger is concerned.
+    pub fn crashed(&self) -> bool {
+        self.state.lock().unwrap().crashed
+    }
+
+    fn due(&self, id: &str) -> Option<String> {
+        let st = self.state.lock().unwrap();
+        if st.consumed.contains(id) {
+            None
+        } else {
+            Some(id.to_string())
+        }
+    }
+
+    /// Pending panic fault for this (job, attempt), if any.
+    pub fn panic_due(&self, key: &str, attempt: usize) -> Option<String> {
+        let t = self.targets.get(key)?;
+        if attempt >= t.panic_hits {
+            return None;
+        }
+        self.due(&format!("panic:{key}:a{attempt}"))
+    }
+
+    /// Pending OOM-storm fault for this (job, attempt), if any.
+    pub fn oom_due(&self, key: &str, attempt: usize) -> Option<String> {
+        let t = self.targets.get(key)?;
+        if attempt >= t.oom_hits {
+            return None;
+        }
+        self.due(&format!("oom:{key}:a{attempt}"))
+    }
+
+    /// Pending transient IO fault for this job's event stream, if any.
+    pub fn events_io_due(&self, key: &str) -> Option<String> {
+        let t = self.targets.get(key)?;
+        if !t.io {
+            return None;
+        }
+        self.due(&format!("io:{key}"))
+    }
+
+    /// Pending transient ledger-append fault, if any.
+    pub fn ledger_io_due(&self) -> Option<String> {
+        (1..=self.spec.ledger_io).find_map(|i| self.due(&format!("ledger_io:{i}")))
+    }
+
+    /// Pending torn-write (simulated crash) fault, if any.
+    pub fn torn_due(&self) -> Option<String> {
+        (1..=self.spec.torn).find_map(|i| self.due(&format!("torn:{i}")))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The artifact-IO seam.
+// ---------------------------------------------------------------------------
+
+/// The write seam both artifact writers go through: the grid ledger
+/// (`sched::ledger`) and the telemetry JSONL sink
+/// (`metrics::telemetry`). The default implementation is [`RealIo`];
+/// [`FaultyIo`] wraps it to inject the plan's IO faults. A trait —
+/// rather than direct `std::fs` calls — is what makes transient disk
+/// errors testable without actually breaking the filesystem.
+pub trait ArtifactIo: Send + Sync {
+    /// Create `path` as an empty file (truncating any previous
+    /// content; parent directories are created).
+    fn create(&self, path: &Path) -> std::io::Result<()>;
+    /// Append `text` — always whole records — to `path`, creating it
+    /// if absent.
+    fn append(&self, path: &Path, text: &str) -> std::io::Result<()>;
+    /// Atomically replace `path` with `text` (temp file + rename): a
+    /// kill mid-call leaves either the old or the new content.
+    fn write_atomic(&self, path: &Path, text: &str) -> std::io::Result<()>;
+}
+
+/// Plain `std::fs` implementation of [`ArtifactIo`].
+pub struct RealIo;
+
+fn ensure_parent(path: &Path) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    Ok(())
+}
+
+impl ArtifactIo for RealIo {
+    fn create(&self, path: &Path) -> std::io::Result<()> {
+        ensure_parent(path)?;
+        std::fs::File::create(path).map(|_| ())
+    }
+
+    fn append(&self, path: &Path, text: &str) -> std::io::Result<()> {
+        ensure_parent(path)?;
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        f.write_all(text.as_bytes())
+    }
+
+    fn write_atomic(&self, path: &Path, text: &str) -> std::io::Result<()> {
+        ensure_parent(path)?;
+        let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+        name.push(".tmp");
+        let tmp = path.with_file_name(name);
+        std::fs::write(&tmp, text.as_bytes())?;
+        std::fs::rename(&tmp, path)
+    }
+}
+
+/// [`ArtifactIo`] that injects the plan's IO faults in front of
+/// [`RealIo`]: transient errors on targeted event streams and ledger
+/// appends, and torn ledger writes followed by a simulated crash.
+pub struct FaultyIo {
+    plan: Arc<FaultPlan>,
+    inner: RealIo,
+}
+
+/// Is `path` the grid ledger?
+fn is_ledger(path: &Path) -> bool {
+    path.file_name().and_then(|n| n.to_str()) == Some("ledger.json")
+}
+
+/// Job key of an event stream path (`events/<key>.jsonl`), if it is one.
+fn events_key(path: &Path) -> Option<&str> {
+    if path.extension().and_then(|e| e.to_str()) != Some("jsonl") {
+        return None;
+    }
+    if path.parent()?.file_name()?.to_str()? != "events" {
+        return None;
+    }
+    path.file_stem()?.to_str()
+}
+
+/// Longest prefix of `text` not exceeding half its length that ends on
+/// a char boundary — the torn write's payload.
+fn torn_prefix(text: &str) -> &str {
+    let mut cut = text.len() / 2;
+    while cut > 0 && !text.is_char_boundary(cut) {
+        cut -= 1;
+    }
+    &text[..cut]
+}
+
+impl FaultyIo {
+    /// Wrap the real filesystem with a plan's IO faults.
+    pub fn new(plan: Arc<FaultPlan>) -> FaultyIo {
+        FaultyIo { plan, inner: RealIo }
+    }
+}
+
+impl ArtifactIo for FaultyIo {
+    fn create(&self, path: &Path) -> std::io::Result<()> {
+        self.inner.create(path)
+    }
+
+    fn append(&self, path: &Path, text: &str) -> std::io::Result<()> {
+        if is_ledger(path) {
+            if self.plan.crashed() {
+                return Err(std::io::Error::other(
+                    "injected crash: process is simulated dead, ledger write suppressed",
+                ));
+            }
+            if let Some(id) = self.plan.torn_due() {
+                if self.plan.fire(&id, "torn", &format!("torn append to {}", path.display())) {
+                    // Half a record lands on disk, then the "process
+                    // dies": exactly the state recovery must repair.
+                    self.inner.append(path, torn_prefix(text))?;
+                    return Err(std::io::Error::other(format!(
+                        "injected torn ledger write ({id}) — simulated crash"
+                    )));
+                }
+            }
+            if let Some(id) = self.plan.ledger_io_due() {
+                if self.plan.fire(&id, "ledger_io", &format!("append to {}", path.display())) {
+                    return Err(std::io::Error::other(format!(
+                        "injected transient ledger IO error ({id})"
+                    )));
+                }
+            }
+        } else if let Some(key) = events_key(path) {
+            if let Some(id) = self.plan.events_io_due(key) {
+                if self.plan.fire(&id, "io", &format!("append to {}", path.display())) {
+                    return Err(std::io::Error::other(format!(
+                        "injected transient telemetry IO error ({id})"
+                    )));
+                }
+            }
+        }
+        self.inner.append(path, text)
+    }
+
+    fn write_atomic(&self, path: &Path, text: &str) -> std::io::Result<()> {
+        if is_ledger(path) && self.plan.crashed() {
+            return Err(std::io::Error::other(
+                "injected crash: process is simulated dead, ledger write suppressed",
+            ));
+        }
+        self.inner.write_atomic(path, text)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// In-attempt fault carriers.
+// ---------------------------------------------------------------------------
+
+/// A telemetry sink that panics on the first `step` event after firing
+/// its fault — so the unwind originates inside the trainer's step
+/// loop, crossing the real train → harness → scheduler stack before
+/// the supervisor's `catch_unwind` contains it.
+pub struct PanicSink {
+    inner: Box<dyn TelemetrySink>,
+    plan: Arc<FaultPlan>,
+    id: String,
+}
+
+impl PanicSink {
+    /// Wrap `inner`; the panic fires at most once (plan-gated).
+    pub fn new(inner: Box<dyn TelemetrySink>, plan: Arc<FaultPlan>, id: String) -> PanicSink {
+        PanicSink { inner, plan, id }
+    }
+}
+
+impl TelemetrySink for PanicSink {
+    fn emit(&mut self, event: &Json) {
+        if event.get("event").and_then(Json::as_str) == Some("step")
+            && self.plan.fire(&self.id, "panic", "telemetry panic inside the trainer step loop")
+        {
+            // No locks are held here: SharedSink's mutex is only taken
+            // inside the inner sink's emit, which we have not called.
+            panic!("injected fault: {}", self.id);
+        }
+        self.inner.emit(event);
+    }
+}
+
+/// Simulate an OOM storm against this job's [`VramSim`]: install the
+/// storm trace ([`memsim::storm_trace`]), account one step at the
+/// smallest possible batch in full precision, and report the breach
+/// the OOM killer would kill the job for. Always returns the error the
+/// supervisor records for the attempt — by construction not even
+/// batch 1 fits a stormed budget.
+pub fn simulated_oom_storm(entry: &ModelEntry, cfg: &Config) -> anyhow::Error {
+    let budget = if cfg.mem_budget_gb > 0.0 { cfg.mem_budget_gb } else { 1.0 };
+    let mut sim = VramSim::new(entry, budget, 0.0, cfg.seed);
+    sim.set_trace(memsim::storm_trace());
+    sim.set_step(0);
+    let codes = vec![crate::manifest::FP32; entry.layers.len()];
+    let used = sim.usage(1, &codes, false).total_gb;
+    let max = sim.mem_max_gb();
+    anyhow::anyhow!(
+        "injected OOM storm: batch 1 needs {used:.4} GiB against a stormed budget of \
+         {max:.4} GiB — attempt killed"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_grammar_round_trips() {
+        let s = FaultSpec::parse("seed:7,io:2,ledger_io:1,panic:1:3,oom:2,torn:1").unwrap();
+        assert_eq!(s.seed, 7);
+        assert_eq!(s.io_jobs, 2);
+        assert_eq!(s.ledger_io, 1);
+        assert_eq!((s.panic_jobs, s.panic_hits), (1, 3));
+        assert_eq!((s.oom_jobs, s.oom_hits), (2, 1));
+        assert_eq!(s.torn, 1);
+        assert!(!s.is_empty());
+        assert_eq!(FaultSpec::parse(&s.render()).unwrap(), s, "render re-parses");
+        for empty in ["", "none", "off", "  "] {
+            assert!(FaultSpec::parse(empty).unwrap().is_empty(), "`{empty}`");
+        }
+    }
+
+    #[test]
+    fn spec_rejects_malformed_clauses_with_grammar() {
+        for bad in ["wobble:1", "panic", "io:x", "panic:1:0", "seed:1:2", "io:1:2"] {
+            let err = FaultSpec::parse(bad).unwrap_err().to_string();
+            assert!(
+                err.contains("--faults") || err.contains("H must be"),
+                "`{bad}` → {err}"
+            );
+        }
+        let err = FaultSpec::parse("frob:1").unwrap_err().to_string();
+        assert!(err.contains("seed:S"), "grammar listed: {err}");
+    }
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let p = std::env::temp_dir()
+            .join(format!("triaccel_faults_{name}_{}", std::process::id()));
+        std::fs::remove_dir_all(&p).ok();
+        std::fs::create_dir_all(&p).unwrap();
+        p
+    }
+
+    fn keys(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("{i:02}_tiny_cnn_c10_fp32_s0")).collect()
+    }
+
+    #[test]
+    fn targeting_is_seeded_and_deterministic() {
+        let dir = tmp_dir("target");
+        let spec = FaultSpec::parse("seed:3,panic:2,oom:1,io:1").unwrap();
+        let a = FaultPlan::arm(&spec, &dir, &keys(8)).unwrap();
+        let b = FaultPlan::arm(&spec, &dir, &keys(8)).unwrap();
+        let hit = |p: &FaultPlan| -> Vec<String> {
+            keys(8)
+                .into_iter()
+                .filter(|k| {
+                    p.panic_due(k, 0).is_some()
+                        || p.oom_due(k, 0).is_some()
+                        || p.events_io_due(k).is_some()
+                })
+                .collect()
+        };
+        assert_eq!(hit(&a), hit(&b), "same seed, same targets");
+        assert_eq!(hit(&a).len(), 4, "2 panic + 1 oom + 1 io, disjoint");
+        let other = FaultSpec::parse("seed:4,panic:2,oom:1,io:1").unwrap();
+        let c = FaultPlan::arm(&other, &dir, &keys(8)).unwrap();
+        assert_ne!(hit(&a), hit(&c), "seed moves the targets");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fired_faults_stay_consumed_across_rearm() {
+        let dir = tmp_dir("consume");
+        let spec = FaultSpec::parse("seed:0,torn:1,ledger_io:1").unwrap();
+        let plan = FaultPlan::arm(&spec, &dir, &keys(2)).unwrap();
+        let id = plan.torn_due().unwrap();
+        assert!(plan.fire(&id, "torn", "test"));
+        assert!(!plan.fire(&id, "torn", "test"), "one-shot");
+        assert!(plan.crashed(), "torn fault simulates a crash");
+        assert!(plan.torn_due().is_none());
+        // Re-arm (simulated restart): the log keeps it consumed, and
+        // the crash flag resets with the new process.
+        let again = FaultPlan::arm(&spec, &dir, &keys(2)).unwrap();
+        assert!(again.torn_due().is_none(), "log persists consumption");
+        assert!(!again.crashed());
+        assert!(again.ledger_io_due().is_some(), "unfired faults stay armed");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn faulty_io_tears_then_crashes_ledger_writes() {
+        let dir = tmp_dir("torn");
+        let ledger = dir.join("ledger.json");
+        let spec = FaultSpec::parse("torn:1").unwrap();
+        let plan = FaultPlan::arm(&spec, &dir, &keys(1)).unwrap();
+        let io = FaultyIo::new(plan.clone());
+        io.append(&ledger, "{\"ok\":1}\n").unwrap_err();
+        let text = std::fs::read_to_string(&ledger).unwrap();
+        assert_eq!(text, torn_prefix("{\"ok\":1}\n"), "half the record landed");
+        io.append(&ledger, "{\"ok\":2}\n").unwrap_err();
+        io.write_atomic(&ledger, "x").unwrap_err();
+        assert_eq!(std::fs::read_to_string(&ledger).unwrap(), text, "dead process writes nothing");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn attempt_hits_gate_panic_and_oom() {
+        let dir = tmp_dir("hits");
+        let spec = FaultSpec::parse("panic:1:2").unwrap();
+        let plan = FaultPlan::arm(&spec, &dir, &keys(1)).unwrap();
+        let key = &keys(1)[0];
+        assert!(plan.panic_due(key, 0).is_some());
+        assert!(plan.panic_due(key, 1).is_some());
+        assert!(plan.panic_due(key, 2).is_none(), "third attempt is clean");
+        assert!(plan.oom_due(key, 0).is_none(), "no oom targets in this plan");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

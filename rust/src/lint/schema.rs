@@ -39,13 +39,13 @@ pub const PINS: &[SchemaPin] = &[
         file: "metrics/telemetry.rs",
         version_const: "SCHEMA_VERSION",
         version: 1,
-        digest: 0xe24e8666f75b9196,
+        digest: 0xe6b895a2daf4351c,
     },
     SchemaPin {
         file: "sched/ledger.rs",
         version_const: "LEDGER_SCHEMA_VERSION",
-        version: 1,
-        digest: 0xa37fae1e18c9d872,
+        version: 2,
+        digest: 0x1d8c24f3894add94,
     },
 ];
 

@@ -7,6 +7,7 @@
 //!   table2   [--model K]    [--seeds 0,1,2] [--jobs N]
 //!   fig      [--model K]    [--seed S]      [--jobs N]
 //!   pressure [--model K] [--methods a,b] [--trace SPEC] [--jobs N] [--smoke]
+//!   chaos    [--grid table1|table2|fig|pressure] [--faults SPEC] [--retries N] + grid flags
 //!   compare --a run.json --b run.json
 //!   report   [--out runs] [--dir DIR]
 //!   lint     [--format human|json] [--out FILE] [--root DIR]
@@ -22,7 +23,12 @@
 //! jobs, and every grid persists a resumable ledger plus JSONL
 //! telemetry under `runs/<grid-id>/` — rerunning the same command
 //! resumes a killed grid bit-identically. `report` re-renders the
-//! markdown/JSON artifacts from the ledgers alone.
+//! markdown/JSON artifacts from the ledgers alone. Every grid runs
+//! under the job supervisor (`--retries N` bounded retries with
+//! virtual-clock backoff, quarantine on exhaustion) and accepts a
+//! seeded `--faults SPEC` fault plan; `chaos` runs a grid under a
+//! plan and verifies the artifacts stay bit-identical to the
+//! fault-free run (`docs/FAULTS.md`).
 //!
 //! Backend selection (train/info): `--backend native` (default — the
 //! hermetic pure-Rust executor) or `--backend pjrt` (`--features
@@ -35,6 +41,7 @@ use std::path::PathBuf;
 use anyhow::{Context, Result};
 
 use tri_accel::config::Config;
+use tri_accel::faults;
 use tri_accel::harness;
 use tri_accel::metrics::PrecisionMix;
 use tri_accel::policy::registry;
@@ -68,13 +75,14 @@ fn run() -> Result<()> {
         Some("table2") => table2(&args),
         Some("fig") => fig(&args),
         Some("pressure") => pressure(&args),
+        Some("chaos") => chaos(&args),
         Some("compare") => compare(&args),
         Some("report") => report(&args),
         Some("lint") => lint(&args),
         Some(other) => {
             anyhow::bail!(
                 "unknown subcommand `{other}` \
-                 (info|train|table1|table2|fig|pressure|compare|report|lint)"
+                 (info|train|table1|table2|fig|pressure|chaos|compare|report|lint)"
             )
         }
     }
@@ -173,7 +181,7 @@ fn require_native(args: &Args) -> Result<()> {
     let _ = args.get("artifacts"); // accepted (and unused) for script compatibility
     anyhow::ensure!(
         backend == "native",
-        "grid subcommands (table1|table2|fig|pressure) run on the scheduler's \
+        "grid subcommands (table1|table2|fig|pressure|chaos) run on the scheduler's \
          native job pool; `--backend {backend}` is only supported by train/info"
     );
     Ok(())
@@ -182,16 +190,37 @@ fn require_native(args: &Args) -> Result<()> {
 /// Scheduler knobs shared by the grid subcommands: `--jobs N`
 /// concurrent cells, `--threads` total compute budget (split across
 /// jobs so the machine is never oversubscribed), `--out` base
-/// directory, `--quiet` to suppress per-job lines.
+/// directory, `--retries N` supervisor retry budget per job,
+/// `--faults SPEC` deterministic fault injection, `--quiet` to
+/// suppress per-job lines. Invalid values are rejected here, at
+/// parse time, before any job runs.
 fn sched_opts(args: &Args) -> Result<sched::SchedOptions> {
     let jobs: usize = args.parse_or("jobs", 1)?;
     anyhow::ensure!(jobs >= 1, "--jobs must be at least 1");
+    let retries: i64 = args.parse_or("retries", 2)?;
+    anyhow::ensure!(
+        (0..=1000).contains(&retries),
+        "--retries must be between 0 and 1000, got {retries}"
+    );
+    let faults = match args.get("faults") {
+        Some(spec) => {
+            let f = faults::FaultSpec::parse(spec)?;
+            if f.is_empty() {
+                None
+            } else {
+                Some(f)
+            }
+        }
+        None => None,
+    };
     Ok(sched::SchedOptions {
         jobs,
         total_threads: args.parse_or("threads", 0)?,
         out_dir: PathBuf::from(args.get_or("out", "runs")),
         job_limit: None,
         quiet: args.flag("quiet"),
+        retries: retries as usize,
+        faults,
     })
 }
 
@@ -405,16 +434,15 @@ fn parse_seeds(args: &Args) -> Result<Vec<u64>> {
         .collect()
 }
 
-fn table1(args: &Args) -> Result<()> {
-    require_native(args)?;
-    let engine = Engine::native();
-    // `--smoke`: the CI fast path — 1 seed, a couple of steps, the full
-    // built-in architecture grid. Explicit --steps/--epochs/--seeds
-    // still win over the smoke defaults.
+/// Build the Table-1 grid spec from the shared grid flags (also used
+/// by `chaos --grid table1`). `--smoke` is the CI fast path — 1 seed,
+/// a couple of steps, the full built-in architecture grid; explicit
+/// `--steps`/`--epochs`/`--seeds` still win over the smoke defaults.
+fn table1_grid(args: &Args, engine: &Engine) -> Result<sched::GridSpec> {
     let smoke = args.flag("smoke");
     let models = match args.get("models") {
         Some(m) => m.to_string(),
-        None => all_models(&engine),
+        None => all_models(engine),
     };
     let explicit_seeds = args.get("seeds").is_some();
     let mut seeds = parse_seeds(args)?;
@@ -423,12 +451,19 @@ fn table1(args: &Args) -> Result<()> {
     }
     let steps: usize = args.parse_or("steps", if smoke { 2 } else { 60 })?;
     let epochs: usize = args.parse_or("epochs", if smoke { 1 } else { 3 })?;
+    let keys: Vec<&str> = models.split(',').collect();
+    harness::validate_models(engine, &keys)?;
+    let tweak = harness::quick_budget(steps, epochs);
+    Ok(sched::table1_spec(&keys, &seeds, &tweak))
+}
+
+fn table1(args: &Args) -> Result<()> {
+    require_native(args)?;
+    let engine = Engine::native();
+    let smoke = args.flag("smoke");
+    let spec = table1_grid(args, &engine)?;
     let opts = sched_opts(args)?;
     args.reject_unknown()?;
-    let keys: Vec<&str> = models.split(',').collect();
-    harness::validate_models(&engine, &keys)?;
-    let tweak = harness::quick_budget(steps, epochs);
-    let spec = sched::table1_spec(&keys, &seeds, &tweak);
     let outcome = sched::run_grid(&spec, &opts)?;
     let rows = sched::report::cell_rows(grid_ledger(&outcome)?)?;
     println!(
@@ -443,18 +478,24 @@ fn table1(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn table2(args: &Args) -> Result<()> {
-    require_native(args)?;
-    let engine = Engine::native();
-    let model = model_or_first(args, &engine)?;
+/// Build the Table-2 ablation spec (also used by `chaos --grid table2`);
+/// returns the spec plus the resolved model key for the header line.
+fn table2_grid(args: &Args, engine: &Engine) -> Result<(sched::GridSpec, String)> {
+    let model = model_or_first(args, engine)?;
     let seeds = parse_seeds(args)?;
     let steps: usize = args.parse_or("steps", 60)?;
     let epochs: usize = args.parse_or("epochs", 3)?;
+    harness::validate_models(engine, &[model.as_str()])?;
+    let tweak = harness::quick_budget(steps, epochs);
+    Ok((sched::table2_spec(&model, &seeds, &tweak), model))
+}
+
+fn table2(args: &Args) -> Result<()> {
+    require_native(args)?;
+    let engine = Engine::native();
+    let (spec, model) = table2_grid(args, &engine)?;
     let opts = sched_opts(args)?;
     args.reject_unknown()?;
-    harness::validate_models(&engine, &[model.as_str()])?;
-    let tweak = harness::quick_budget(steps, epochs);
-    let spec = sched::table2_spec(&model, &seeds, &tweak);
     let outcome = sched::run_grid(&spec, &opts)?;
     let rows = sched::report::cell_rows(grid_ledger(&outcome)?)?;
     println!("== Table 2 ablation — {model} ==");
@@ -463,14 +504,11 @@ fn table2(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// The VRAM-pressure scenario: sweep methods under a time-varying
-/// budget trace (default: a ramp that squeezes the budget to 55% over
-/// the middle half of the run). `--smoke` is the CI fast path — one
-/// seed, two registry-composed methods, a short trace.
-fn pressure(args: &Args) -> Result<()> {
-    require_native(args)?;
-    let engine = Engine::native();
-    let model = model_or_first(args, &engine)?;
+/// Build the VRAM-pressure sweep spec (also used by
+/// `chaos --grid pressure`); returns the spec plus the resolved model
+/// and budget trace for the header lines.
+fn pressure_grid(args: &Args, engine: &Engine) -> Result<(sched::GridSpec, String, String)> {
+    let model = model_or_first(args, engine)?;
     let smoke = args.flag("smoke");
     let methods = args.get_or(
         "methods",
@@ -499,12 +537,23 @@ fn pressure(args: &Args) -> Result<()> {
     let ramp_end = ((3 * total) / 4).max(ramp_start + 1);
     let default_trace = format!("ramp:{ramp_start}:{ramp_end}:0.55");
     let trace = args.get_or("trace", &default_trace);
-    let opts = sched_opts(args)?;
-    args.reject_unknown()?;
-    harness::validate_models(&engine, &[model.as_str()])?;
+    harness::validate_models(engine, &[model.as_str()])?;
     let keys: Vec<&str> = methods.split(',').collect();
     let tweak = harness::quick_budget(steps, epochs);
     let spec = sched::pressure_spec(&model, &keys, &seeds, &trace, &tweak)?;
+    Ok((spec, model, trace))
+}
+
+/// The VRAM-pressure scenario: sweep methods under a time-varying
+/// budget trace (default: a ramp that squeezes the budget to 55% over
+/// the middle half of the run). `--smoke` is the CI fast path — one
+/// seed, two registry-composed methods, a short trace.
+fn pressure(args: &Args) -> Result<()> {
+    require_native(args)?;
+    let engine = Engine::native();
+    let (spec, model, trace) = pressure_grid(args, &engine)?;
+    let opts = sched_opts(args)?;
+    args.reject_unknown()?;
     let outcome = sched::run_grid(&spec, &opts)?;
     let rows = sched::report::pressure_rows(grid_ledger(&outcome)?)?;
     println!(
@@ -516,18 +565,25 @@ fn pressure(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn fig(args: &Args) -> Result<()> {
-    require_native(args)?;
-    let engine = Engine::native();
-    let model = model_or_first(args, &engine)?;
+/// Build the adaptive-behaviour figure spec (also used by
+/// `chaos --grid fig`); returns the spec plus the resolved model and
+/// seed for the header line.
+fn fig_grid(args: &Args, engine: &Engine) -> Result<(sched::GridSpec, String, u64)> {
+    let model = model_or_first(args, engine)?;
     let seed: u64 = args.parse_or("seed", 0)?;
     let steps: usize = args.parse_or("steps", 60)?;
     let epochs: usize = args.parse_or("epochs", 3)?;
+    harness::validate_models(engine, &[model.as_str()])?;
+    let tweak = harness::quick_budget(steps, epochs);
+    Ok((sched::fig_spec(&model, seed, &tweak), model, seed))
+}
+
+fn fig(args: &Args) -> Result<()> {
+    require_native(args)?;
+    let engine = Engine::native();
+    let (spec, model, seed) = fig_grid(args, &engine)?;
     let opts = sched_opts(args)?;
     args.reject_unknown()?;
-    harness::validate_models(&engine, &[model.as_str()])?;
-    let tweak = harness::quick_budget(steps, epochs);
-    let spec = sched::fig_spec(&model, seed, &tweak);
     let outcome = sched::run_grid(&spec, &opts)?;
     // The figure series come back out of the persisted telemetry
     // stream — proof the JSONL events carry everything the plot needs.
@@ -542,6 +598,94 @@ fn fig(args: &Args) -> Result<()> {
         println!("{st}, {b}");
     }
     print_outcome(&outcome);
+    Ok(())
+}
+
+/// Default chaos fault plan: every fault kind fires at least once
+/// under a fixed seed — transient telemetry IO errors on two jobs, a
+/// transient ledger IO error, one panicking job, one simulated OOM
+/// storm, and a torn final ledger record (simulated crash).
+const DEFAULT_CHAOS_FAULTS: &str = "seed:7,io:2,ledger_io:1,panic:1,oom:1,torn:1";
+
+/// `chaos`: run a grid under a deterministic fault plan, then prove
+/// its report artifacts are bit-identical to a fault-free run of the
+/// same grid. Torn-record faults abort `run_grid` mid-flight
+/// (simulated process death); the in-process resume loop stands in
+/// for the operator rerunning the command.
+fn chaos(args: &Args) -> Result<()> {
+    require_native(args)?;
+    let engine = Engine::native();
+    let grid = args.get_or("grid", "table1");
+    let spec = match grid.as_str() {
+        "table1" => table1_grid(args, &engine)?,
+        "table2" => table2_grid(args, &engine)?.0,
+        "pressure" => pressure_grid(args, &engine)?.0,
+        "fig" => fig_grid(args, &engine)?.0,
+        other => anyhow::bail!("--grid {other}: expected table1|table2|pressure|fig"),
+    };
+    let explicit_faults = args.get("faults").is_some();
+    let mut opts = sched_opts(args)?;
+    args.reject_unknown()?;
+    let fspec = match opts.faults.take() {
+        Some(f) => f,
+        // `--faults none`: an explicit dry rehearsal with no injection.
+        None if explicit_faults => faults::FaultSpec::default(),
+        None => faults::FaultSpec::parse(DEFAULT_CHAOS_FAULTS)?,
+    };
+    println!("chaos: grid {grid}, fault plan [{}]", fspec.render());
+    // The faulted run gets its own directory so the clean baseline
+    // can't resume from its ledger (and vice versa).
+    let mut chaos_opts = opts.clone();
+    chaos_opts.out_dir = opts.out_dir.join("chaos");
+    chaos_opts.faults = Some(fspec.clone());
+    // Every torn record kills one run_grid call; +2 covers a retry
+    // cushion while still failing fast on a non-converging loop.
+    let max_restarts = fspec.torn + 2;
+    let mut restarts = 0usize;
+    let faulted = loop {
+        match sched::run_grid(&spec, &chaos_opts) {
+            Ok(o) => break o,
+            Err(e) if format!("{e:#}").contains("injected") && restarts < max_restarts => {
+                restarts += 1;
+                println!("simulated crash #{restarts} ({e:#}) — resuming");
+            }
+            Err(e) => return Err(e),
+        }
+    };
+    anyhow::ensure!(
+        faulted.complete,
+        "faulted run left {} job(s) quarantined — raise --retries above the fault \
+         plan's hit counts to make every fault survivable",
+        faulted.quarantined.len()
+    );
+    println!("faulted grid complete after {restarts} simulated crash(es); running the clean baseline");
+    let clean = sched::run_grid(&spec, &opts)?;
+    anyhow::ensure!(clean.complete, "clean baseline did not complete");
+    anyhow::ensure!(!clean.artifacts.is_empty(), "clean baseline rendered no artifacts");
+    let mut mismatches = 0usize;
+    for a in &clean.artifacts {
+        let name = a.file_name().context("artifact path has no file name")?;
+        let twin = faulted.grid_dir.join(name);
+        let clean_bytes = std::fs::read(a).with_context(|| a.display().to_string())?;
+        let fault_bytes = std::fs::read(&twin).with_context(|| twin.display().to_string())?;
+        if clean_bytes == fault_bytes {
+            println!("identical: {}", name.to_string_lossy());
+        } else {
+            eprintln!("MISMATCH: {} differs from {}", twin.display(), a.display());
+            mismatches += 1;
+        }
+    }
+    anyhow::ensure!(
+        mismatches == 0,
+        "{mismatches} artifact(s) differ between the faulted and clean runs"
+    );
+    let log = faulted.grid_dir.join("faults.jsonl");
+    let fired = std::fs::read_to_string(&log)
+        .map(|s| s.lines().filter(|l| !l.trim().is_empty()).count())
+        .unwrap_or(0);
+    println!("fault log: {fired} fault(s) fired → {}", log.display());
+    println!("chaos PASS: faulted artifacts are bit-identical to the fault-free run");
+    print_outcome(&faulted);
     Ok(())
 }
 

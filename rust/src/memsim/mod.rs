@@ -140,6 +140,20 @@ impl BudgetTrace {
     }
 }
 
+/// Fraction of the base budget left during an injected OOM storm —
+/// small enough that not even a batch-1 FP32 step fits any built-in
+/// model's budget, so a stormed attempt always dies.
+pub const STORM_FRAC: f64 = 0.001;
+
+/// The budget trace an injected OOM storm installs (see
+/// `faults::simulated_oom_storm`): a co-tenant burst that claims
+/// essentially the whole device from step 0 — a [`BudgetTrace::Step`]
+/// at the [`STORM_FRAC`] floor. Kept here (with the other traces) so
+/// the fault injector and the pressure scenarios share one vocabulary.
+pub fn storm_trace() -> BudgetTrace {
+    BudgetTrace::Step { at: 0, frac: STORM_FRAC }
+}
+
 /// Fixed runtime overhead: context, cuDNN/Triton handles, streams.
 const BASE_OVERHEAD_BYTES: f64 = 48.0 * 1024.0 * 1024.0;
 /// Allocator block rounding / fragmentation factor.
@@ -591,6 +605,20 @@ mod tests {
         for bad in ["step:1.5@4", "ramp:9:9:0.5", "saw:0:0.2", "wobble", "saw:5:1.0"] {
             assert!(BudgetTrace::parse(bad).is_err(), "`{bad}` must be rejected");
         }
+    }
+
+    #[test]
+    fn storm_trace_starves_even_batch_one() {
+        let t = storm_trace();
+        t.validate().unwrap();
+        assert_eq!(t.factor(0), STORM_FRAC, "storm hits from the first step");
+        let e = toy_entry();
+        let mut sim = VramSim::new(&e, 1.0, 0.0, 0);
+        sim.set_trace(storm_trace());
+        sim.set_step(0);
+        let codes = vec![FP32; e.layers.len()];
+        let used = sim.usage(1, &codes, false).total_gb;
+        assert!(used > sim.mem_max_gb(), "batch 1 must not fit a stormed budget");
     }
 
     #[test]

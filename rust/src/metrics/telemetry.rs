@@ -20,13 +20,23 @@
 //! The trainer writes through the [`TelemetrySink`] trait so it never
 //! depends on where events go; [`JsonlWriter`] is the file sink and
 //! [`SharedSink`] the clonable handle the scheduler threads through.
+//!
+//! Crash safety: the file sink buffers *whole lines* and seals every
+//! event with a `crc` field (FNV-1a-64 over the line without `crc`)
+//! before buffering it. Buffered lines are written out at a size
+//! threshold, on `run_finished`, on [`JsonlWriter::flush`], and on
+//! drop — so a killed or panicking job leaves an events file that
+//! ends on a complete, verifiable record instead of a torn tail.
+//! Writes go through the [`ArtifactIo`] seam, which is how injected
+//! IO faults (`docs/FAULTS.md`) reach this sink in tests.
 
-use std::io::Write;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
+use crate::checkpoint::fnv1a;
+use crate::faults::{ArtifactIo, RealIo};
 use crate::util::json::Json;
 
 use super::EpochRecord;
@@ -147,12 +157,53 @@ pub fn ev_epoch(r: &EpochRecord) -> Json {
     Json::Obj(m)
 }
 
-/// Buffered JSONL file sink. IO errors are latched and surfaced at
-/// [`Self::flush`] (the sink trait has no error channel — the trainer
-/// should not abort a run over a telemetry write).
+/// Seal one event: add a `crc` field — the FNV-1a-64 digest (16-hex)
+/// of the event's compact serialization without `crc`. Recomputable
+/// exactly by any consumer because [`Json::to_string_compact`] is
+/// deterministic. Non-object events pass through unsealed.
+fn sealed_line(event: &Json) -> String {
+    match event {
+        Json::Obj(fields) => {
+            let mut m = fields.clone();
+            m.remove("crc");
+            let unsealed = Json::Obj(m.clone()).to_string_compact();
+            m.insert("crc".to_string(), Json::Str(format!("{:016x}", fnv1a(unsealed.as_bytes()))));
+            Json::Obj(m).to_string_compact()
+        }
+        other => other.to_string_compact(),
+    }
+}
+
+/// Verify a parsed event line's seal: recompute the digest over the
+/// object minus `crc` and compare. Objects without `crc` never verify.
+pub fn crc_ok(event: &Json) -> bool {
+    let (Some(fields), Some(stored)) =
+        (event.as_obj(), event.get("crc").and_then(Json::as_str))
+    else {
+        return false;
+    };
+    let mut m = fields.clone();
+    m.remove("crc");
+    let crc = fnv1a(Json::Obj(m).to_string_compact().as_bytes());
+    stored == format!("{crc:016x}")
+}
+
+/// Write out buffered lines once they exceed this size (small enough
+/// to keep the stream observable while a job runs, large enough to
+/// amortize the append syscall over many `step` events).
+const WRITE_OUT_BYTES: usize = 8 * 1024;
+
+/// JSONL file sink buffering *whole sealed lines*. IO errors are
+/// latched and surfaced at [`Self::flush`] (the sink trait has no
+/// error channel — the trainer should not abort a run over a
+/// telemetry write). Because only complete lines ever reach the file,
+/// and the buffer drains on `run_finished`, on `flush`, and on drop,
+/// a killed job's events file always ends on a complete record.
 pub struct JsonlWriter {
     path: PathBuf,
-    w: std::io::BufWriter<std::fs::File>,
+    io: Arc<dyn ArtifactIo>,
+    /// Complete sealed lines not yet written to the file.
+    buf: String,
     error: Option<std::io::Error>,
 }
 
@@ -160,17 +211,14 @@ impl JsonlWriter {
     /// Create (truncating any previous file — a killed job's partial
     /// event stream is replaced when the job reruns).
     pub fn create(path: &Path) -> Result<JsonlWriter> {
-        if let Some(parent) = path.parent() {
-            std::fs::create_dir_all(parent)
-                .with_context(|| format!("mkdir {}", parent.display()))?;
-        }
-        let f = std::fs::File::create(path)
-            .with_context(|| format!("creating {}", path.display()))?;
-        Ok(JsonlWriter {
-            path: path.to_path_buf(),
-            w: std::io::BufWriter::new(f),
-            error: None,
-        })
+        Self::create_with_io(path, Arc::new(RealIo))
+    }
+
+    /// Create with an explicit artifact-IO implementation (the
+    /// scheduler passes its fault-injecting seam here).
+    pub fn create_with_io(path: &Path, io: Arc<dyn ArtifactIo>) -> Result<JsonlWriter> {
+        io.create(path).with_context(|| format!("creating {}", path.display()))?;
+        Ok(JsonlWriter { path: path.to_path_buf(), io, buf: String::new(), error: None })
     }
 
     /// The file this sink writes to.
@@ -178,14 +226,26 @@ impl JsonlWriter {
         &self.path
     }
 
-    /// Flush buffered lines; reports the first latched write error.
+    /// Append every buffered line to the file. On failure the error is
+    /// latched, the buffer discarded, and later emits are dropped —
+    /// the attempt is already doomed; [`Self::flush`] reports it.
+    fn write_out(&mut self) {
+        if self.error.is_some() || self.buf.is_empty() {
+            return;
+        }
+        if let Err(e) = self.io.append(&self.path, &self.buf) {
+            self.error = Some(e);
+        }
+        self.buf.clear();
+    }
+
+    /// Drain the buffer; reports the first latched write error.
     pub fn flush(&mut self) -> Result<()> {
+        self.write_out();
         if let Some(e) = self.error.take() {
             return Err(anyhow::anyhow!("telemetry write to {}: {e}", self.path.display()));
         }
-        self.w
-            .flush()
-            .with_context(|| format!("flushing {}", self.path.display()))
+        Ok(())
     }
 }
 
@@ -194,9 +254,20 @@ impl TelemetrySink for JsonlWriter {
         if self.error.is_some() {
             return;
         }
-        if let Err(e) = writeln!(self.w, "{}", event.to_string_compact()) {
-            self.error = Some(e);
+        self.buf.push_str(&sealed_line(event));
+        self.buf.push('\n');
+        let finished = event.get("event").and_then(Json::as_str) == Some("run_finished");
+        if finished || self.buf.len() >= WRITE_OUT_BYTES {
+            self.write_out();
         }
+    }
+}
+
+impl Drop for JsonlWriter {
+    fn drop(&mut self) {
+        // Best effort: a panicking job's sink drops during unwind, and
+        // whatever it buffered lands as complete lines.
+        self.write_out();
     }
 }
 
@@ -290,7 +361,42 @@ mod tests {
         for l in lines {
             let j = Json::parse(l).unwrap();
             assert_eq!(j.get("event").unwrap().as_str(), Some("step"));
+            assert!(crc_ok(&j), "every written line is sealed: {l}");
         }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn crc_seal_detects_tampering() {
+        let line = sealed_line(&ev_step(3, 64, 1.5, 0.002));
+        let j = Json::parse(&line).unwrap();
+        assert!(crc_ok(&j));
+        let tampered = line.replace("\"batch\":64", "\"batch\":65");
+        assert_ne!(tampered, line);
+        assert!(!crc_ok(&Json::parse(&tampered).unwrap()), "flipped field must fail the seal");
+        assert!(!crc_ok(&ev_step(3, 64, 1.5, 0.002)), "unsealed event never verifies");
+    }
+
+    #[test]
+    fn buffer_drains_on_run_finished_and_on_drop() {
+        let dir = std::env::temp_dir().join(format!("triaccel_teld_{}", std::process::id()));
+        let path = dir.join("drain.jsonl");
+        let mut w = JsonlWriter::create(&path).unwrap();
+        w.emit(&ev_step(0, 32, 2.0, 0.001));
+        assert_eq!(
+            std::fs::read_to_string(&path).unwrap(),
+            "",
+            "small events stay buffered"
+        );
+        w.emit(&ev_run_finished("j", Json::Null, 0.1));
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2, "run_finished drains the buffer");
+        assert!(text.ends_with('\n'), "file ends on a complete record");
+        w.emit(&ev_step(1, 32, 1.9, 0.001));
+        drop(w);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 3, "drop drains the buffered tail");
+        assert!(text.ends_with('\n'));
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -10,9 +10,16 @@
 //! values in fixed job-key order, never the in-memory floats of
 //! whichever jobs happened to run this time).
 //!
-//! The file is written atomically (temp file + rename) after every
-//! job completion, so a kill at any instant leaves either the old or
-//! the new ledger — never a torn one. Format reference:
+//! Since schema 2 the file is JSONL: line 1 is a sealed `header`
+//! record (grid structure), then one sealed `job` record per
+//! completion, appended as jobs finish. "Sealed" means every record
+//! carries a `crc` — an FNV-1a-64 digest of its own serialization
+//! without the `crc` key (recomputable exactly because
+//! [`Json::to_string_compact`] is deterministic). Appends go through
+//! the [`ArtifactIo`] seam, so crash-recovery is tested against
+//! injected torn and failed writes (`docs/FAULTS.md`); a torn tail is
+//! detected by the checksum on load and dropped, costing exactly the
+//! affected job(s) instead of the grid. Format reference:
 //! `docs/TELEMETRY.md`.
 
 use std::collections::BTreeMap;
@@ -20,14 +27,18 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
+use crate::checkpoint::fnv1a;
+use crate::faults::ArtifactIo;
 use crate::harness::SeedResult;
 use crate::util::json::Json;
 
 use super::{GridSpec, Job};
 
 /// Ledger format version (`"schema"` in `ledger.json`). Bump only on
-/// breaking changes; additive fields keep the version.
-pub const LEDGER_SCHEMA_VERSION: u64 = 1;
+/// breaking changes; additive fields keep the version. Version 2 is
+/// the sealed-JSONL format (v1 was a single atomically-rewritten JSON
+/// document without per-record checksums).
+pub const LEDGER_SCHEMA_VERSION: u64 = 2;
 
 /// One completed job: identity quadruple + persisted result.
 #[derive(Debug, Clone)]
@@ -84,9 +95,49 @@ pub struct Ledger {
     pub entries: BTreeMap<String, LedgerEntry>,
 }
 
+/// Relaxed load outcome ([`Ledger::load_relaxed`]): recovery callers
+/// (grid resume) decide how much damage is survivable.
+pub enum Loaded {
+    /// The header parsed and sealed correctly. `dropped` counts
+    /// invalid/torn trailing job records that were discarded — their
+    /// jobs simply rerun.
+    Usable {
+        /// The recovered ledger (valid prefix of the file).
+        ledger: Ledger,
+        /// Discarded trailing record count (0 on a clean file).
+        dropped: usize,
+    },
+    /// The header line itself is unreadable (empty file, torn first
+    /// line, or a pre-v2 document): nothing is recoverable.
+    Corrupt {
+        /// Human-readable diagnosis.
+        reason: String,
+    },
+}
+
 fn hex_u64(j: &Json, key: &str) -> Result<u64> {
     let s = j.req(key)?.as_str().with_context(|| format!("ledger `{key}` not a string"))?;
     u64::from_str_radix(s, 16).with_context(|| format!("ledger `{key}`: bad hex `{s}`"))
+}
+
+/// Seal a record in place: set `crc` to the FNV-1a-64 digest of the
+/// record's compact serialization without the `crc` key.
+fn seal(m: &mut BTreeMap<String, Json>) {
+    m.remove("crc");
+    let unsealed = Json::Obj(m.clone()).to_string_compact();
+    m.insert("crc".into(), Json::Str(format!("{:016x}", fnv1a(unsealed.as_bytes()))));
+}
+
+/// Verify a record's seal: recompute the digest over the record minus
+/// `crc` and compare. A record without `crc` never verifies.
+fn seal_ok(m: &BTreeMap<String, Json>) -> bool {
+    let Some(stored) = m.get("crc").and_then(Json::as_str) else {
+        return false;
+    };
+    let mut unsealed = m.clone();
+    unsealed.remove("crc");
+    let crc = fnv1a(Json::Obj(unsealed).to_string_compact().as_bytes());
+    stored == format!("{crc:016x}")
 }
 
 impl Ledger {
@@ -179,9 +230,10 @@ impl Ledger {
         Ok(out)
     }
 
-    /// Serialize the whole ledger.
-    pub fn to_json(&self) -> Json {
+    /// The sealed header record (line 1 of the file).
+    fn header_json(&self) -> Json {
         let mut root = BTreeMap::new();
+        root.insert("record".into(), Json::Str("header".to_string()));
         root.insert("schema".into(), Json::Num(self.schema as f64));
         root.insert("grid_id".into(), Json::Str(self.grid_id.clone()));
         root.insert("kind".into(), Json::Str(self.kind.clone()));
@@ -215,24 +267,47 @@ impl Ledger {
                     .collect(),
             ),
         );
-        let mut jobs = BTreeMap::new();
-        for (k, e) in &self.entries {
-            let mut m = BTreeMap::new();
-            m.insert("model".into(), Json::Str(e.model.clone()));
-            m.insert("method_key".into(), Json::Str(e.method_key.clone()));
-            m.insert("seed".into(), Json::Str(e.seed.to_string()));
-            m.insert("digest".into(), Json::Str(format!("{:016x}", e.digest)));
-            m.insert("config_hash".into(), Json::Str(format!("{:016x}", e.config_hash)));
-            m.insert("wall_s".into(), Json::Num(e.wall_s));
-            m.insert("result".into(), e.result.to_json());
-            jobs.insert(k.clone(), Json::Obj(m));
-        }
-        root.insert("jobs".into(), Json::Obj(jobs));
+        seal(&mut root);
         Json::Obj(root)
     }
 
-    /// Parse a `ledger.json` document.
-    pub fn from_json(j: &Json) -> Result<Ledger> {
+    /// One sealed `job` record (a completion line).
+    fn entry_json(e: &LedgerEntry) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("record".into(), Json::Str("job".to_string()));
+        m.insert("key".into(), Json::Str(e.key.clone()));
+        m.insert("model".into(), Json::Str(e.model.clone()));
+        m.insert("method_key".into(), Json::Str(e.method_key.clone()));
+        m.insert("seed".into(), Json::Str(e.seed.to_string()));
+        m.insert("digest".into(), Json::Str(format!("{:016x}", e.digest)));
+        m.insert("config_hash".into(), Json::Str(format!("{:016x}", e.config_hash)));
+        m.insert("wall_s".into(), Json::Num(e.wall_s));
+        m.insert("result".into(), e.result.to_json());
+        seal(&mut m);
+        Json::Obj(m)
+    }
+
+    /// Serialize the whole ledger as sealed JSONL (header + entries in
+    /// job-key order).
+    pub fn to_jsonl(&self) -> String {
+        let mut out = self.header_json().to_string_compact();
+        out.push('\n');
+        for e in self.entries.values() {
+            out.push_str(&Self::entry_json(e).to_string_compact());
+            out.push('\n');
+        }
+        out
+    }
+
+    fn parse_header(line: &str) -> Result<Ledger> {
+        let j = Json::parse(line).map_err(|e| anyhow::anyhow!("header line: {e}"))?;
+        let m = j.as_obj().context("header line not an object")?;
+        let record = j.get("record").and_then(Json::as_str).unwrap_or("");
+        anyhow::ensure!(
+            record == "header",
+            "first line is not a `header` record (a pre-v2 ledger is rebuilt from scratch)"
+        );
+        anyhow::ensure!(seal_ok(m), "header record failed its checksum");
         let schema = j.req("schema")?.as_i64().context("ledger schema")? as u64;
         anyhow::ensure!(
             schema == LEDGER_SCHEMA_VERSION,
@@ -272,53 +347,119 @@ impl Ledger {
                     .collect::<Result<_>>()?,
             });
         }
-        let mut entries = BTreeMap::new();
-        for (k, e) in j.req("jobs")?.as_obj().context("ledger jobs")? {
-            entries.insert(
-                k.clone(),
-                LedgerEntry {
-                    key: k.clone(),
-                    model: e.req("model")?.as_str().context("job model")?.to_string(),
-                    method_key: e
-                        .req("method_key")?
-                        .as_str()
-                        .context("job method_key")?
-                        .to_string(),
-                    seed: e
-                        .req("seed")?
-                        .as_str()
-                        .context("job seed not a string")?
-                        .parse()
-                        .context("job seed not a u64")?,
-                    digest: hex_u64(e, "digest")?,
-                    config_hash: hex_u64(e, "config_hash")?,
-                    wall_s: e.req("wall_s")?.as_f64().context("job wall_s")?,
-                    result: SeedResult::from_json(e.req("result")?)
-                        .with_context(|| format!("job `{k}` result"))?,
-                },
-            );
-        }
-        Ok(Ledger { schema, grid_id, kind, cells, entries })
+        Ok(Ledger { schema, grid_id, kind, cells, entries: BTreeMap::new() })
     }
 
-    /// Load a ledger file.
-    pub fn load(path: &Path) -> Result<Ledger> {
+    fn parse_entry(line: &str) -> Result<LedgerEntry> {
+        let j = Json::parse(line).map_err(|e| anyhow::anyhow!("job line: {e}"))?;
+        let m = j.as_obj().context("job line not an object")?;
+        anyhow::ensure!(
+            j.get("record").and_then(Json::as_str) == Some("job"),
+            "not a `job` record"
+        );
+        anyhow::ensure!(seal_ok(m), "job record failed its checksum");
+        let key = j.req("key")?.as_str().context("job key")?.to_string();
+        Ok(LedgerEntry {
+            key: key.clone(),
+            model: j.req("model")?.as_str().context("job model")?.to_string(),
+            method_key: j
+                .req("method_key")?
+                .as_str()
+                .context("job method_key")?
+                .to_string(),
+            seed: j
+                .req("seed")?
+                .as_str()
+                .context("job seed not a string")?
+                .parse()
+                .context("job seed not a u64")?,
+            digest: hex_u64(&j, "digest")?,
+            config_hash: hex_u64(&j, "config_hash")?,
+            wall_s: j.req("wall_s")?.as_f64().context("job wall_s")?,
+            result: SeedResult::from_json(j.req("result")?)
+                .with_context(|| format!("job `{key}` result"))?,
+        })
+    }
+
+    /// Load with crash recovery: parse the valid sealed prefix of the
+    /// file and report — rather than fail on — damage a mid-write kill
+    /// can cause. A torn, truncated, or checksum-failing record ends
+    /// the prefix; it and everything after it is counted in `dropped`
+    /// (truncation only ever damages the tail, so later lines cannot
+    /// be trusted more than the first bad one). Duplicate job keys
+    /// keep the last record. Errors only if the file cannot be read at
+    /// all.
+    pub fn load_relaxed(path: &Path) -> Result<Loaded> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading {}", path.display()))?;
-        let j = Json::parse(&text).map_err(|e| {
-            anyhow::anyhow!("{}: {e} — delete the grid directory to start over", path.display())
-        })?;
-        Self::from_json(&j).with_context(|| format!("parsing {}", path.display()))
+        let mut lines = text.lines();
+        let Some(first) = lines.next() else {
+            return Ok(Loaded::Corrupt { reason: "empty ledger file".to_string() });
+        };
+        let mut ledger = match Self::parse_header(first) {
+            Ok(l) => l,
+            Err(e) => return Ok(Loaded::Corrupt { reason: format!("{e:#}") }),
+        };
+        let mut dropped = 0usize;
+        let mut tail_bad = false;
+        for line in lines {
+            if line.trim().is_empty() {
+                continue;
+            }
+            if tail_bad {
+                dropped += 1;
+                continue;
+            }
+            match Self::parse_entry(line) {
+                Ok(e) => ledger.insert(e),
+                Err(_) => {
+                    tail_bad = true;
+                    dropped += 1;
+                }
+            }
+        }
+        Ok(Loaded::Usable { ledger, dropped })
     }
 
-    /// Write atomically: serialize to `<path>.tmp`, then rename over
-    /// `path`. A kill mid-save leaves the previous ledger intact.
-    pub fn save(&self, path: &Path) -> Result<()> {
-        let tmp = path.with_extension("json.tmp");
-        std::fs::write(&tmp, self.to_json().to_string_compact())
-            .with_context(|| format!("writing {}", tmp.display()))?;
-        std::fs::rename(&tmp, path)
-            .with_context(|| format!("renaming {} into place", tmp.display()))?;
-        Ok(())
+    /// Load a ledger file, warning (not failing) about a recoverable
+    /// torn tail — the affected jobs rerun on resume. Errors if the
+    /// header itself is unreadable; grid resume treats that case as
+    /// "no ledger" and rebuilds, while read-only consumers surface it.
+    pub fn load(path: &Path) -> Result<Ledger> {
+        match Self::load_relaxed(path)? {
+            Loaded::Usable { ledger, dropped } => {
+                if dropped > 0 {
+                    eprintln!(
+                        "warning: {}: dropped {dropped} torn/invalid trailing record(s) — \
+                         the affected job(s) rerun on resume",
+                        path.display()
+                    );
+                }
+                Ok(ledger)
+            }
+            Loaded::Corrupt { reason } => Err(anyhow::anyhow!(
+                "{}: {reason} — rerun the grid command to rebuild, or delete the grid \
+                 directory to start over",
+                path.display()
+            )),
+        }
+    }
+
+    /// Rewrite the whole file atomically (temp + rename) through the
+    /// artifact-IO seam. Used at grid creation, when healing a torn
+    /// tail, and as the fallback when [`Self::append_entry`] fails.
+    pub fn save(&self, path: &Path, io: &dyn ArtifactIo) -> Result<()> {
+        io.write_atomic(path, &self.to_jsonl())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    /// Append one sealed completion record. The fast path after each
+    /// job: O(1) in grid size, and a kill mid-append costs at most
+    /// this one record (the checksum catches the torn line on load).
+    pub fn append_entry(entry: &LedgerEntry, path: &Path, io: &dyn ArtifactIo) -> Result<()> {
+        let mut line = Self::entry_json(entry).to_string_compact();
+        line.push('\n');
+        io.append(path, &line)
+            .with_context(|| format!("appending job `{}` to {}", entry.key, path.display()))
     }
 }

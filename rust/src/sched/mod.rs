@@ -32,6 +32,22 @@
 //! bit-identical by construction, not by luck. See
 //! `docs/ARCHITECTURE.md` (subsystem tour) and `docs/TELEMETRY.md`
 //! (event + ledger formats).
+//!
+//! Every job runs under a *supervisor*: the attempt is isolated with
+//! `catch_unwind`, a failed or panicking attempt is retried up to
+//! [`SchedOptions::retries`] times with deterministic exponential
+//! backoff on a virtual clock (pure step counting — no wall-time
+//! reads, so retry behavior is reproducible and detlint-clean), and a
+//! job that exhausts its retries is *quarantined*: the grid keeps
+//! going, finishes every other job, and renders a partial report that
+//! marks the quarantined cells instead of aborting
+//! ([`report::render_partial`]). Ledger and telemetry writes go
+//! through the [`crate::faults::ArtifactIo`] seam; when
+//! [`SchedOptions::faults`] carries a seeded [`FaultSpec`], the
+//! supervisor runs the grid under injected OOM storms, IO errors,
+//! panics, and torn ledger writes — and the `chaos` subcommand
+//! verifies the artifacts still come out bit-identical
+//! (`docs/FAULTS.md`).
 
 // Enforced as an error by the docs CI job (`cargo doc` with
 // `RUSTDOCFLAGS=-D warnings`); kept at `warn` here so tier-1
@@ -42,21 +58,23 @@ pub mod ledger;
 pub mod report;
 
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
 use crate::config::{Config, Method};
+use crate::faults::{ArtifactIo, FaultPlan, FaultSpec, FaultyIo, PanicSink, RealIo};
 use crate::harness::{self, SeedResult};
 use crate::manifest::Manifest;
-use crate::metrics::telemetry::{self, JsonlWriter, SharedSink};
+use crate::metrics::telemetry::{self, JsonlWriter, SharedSink, TelemetrySink};
 use crate::policy::registry;
 use crate::runtime::native::pool::{per_job_threads, resolve_threads, Pool};
 use crate::runtime::Engine;
 
-pub use ledger::{CellMeta, Ledger, LedgerEntry, LEDGER_SCHEMA_VERSION};
+pub use ledger::{CellMeta, Ledger, LedgerEntry, Loaded, LEDGER_SCHEMA_VERSION};
 
 /// Which paper artifact a grid regenerates (drives the report
 /// renderer and the row layout).
@@ -208,6 +226,14 @@ pub struct SchedOptions {
     pub job_limit: Option<usize>,
     /// Suppress per-job progress lines.
     pub quiet: bool,
+    /// Supervisor retries per job (`--retries`, default 2): a failed
+    /// or panicking attempt reruns up to this many extra times (with
+    /// deterministic virtual-clock backoff) before the job is
+    /// quarantined.
+    pub retries: usize,
+    /// Fault plan to run the grid under (`--faults`; `None` or an
+    /// empty spec injects nothing).
+    pub faults: Option<FaultSpec>,
 }
 
 impl Default for SchedOptions {
@@ -218,8 +244,22 @@ impl Default for SchedOptions {
             out_dir: PathBuf::from("runs"),
             job_limit: None,
             quiet: false,
+            retries: 2,
+            faults: None,
         }
     }
+}
+
+/// A job that exhausted its supervisor retries. The grid completes
+/// around it; [`report::render_partial`] marks its cell.
+#[derive(Debug, Clone)]
+pub struct Quarantine {
+    /// Job key.
+    pub key: String,
+    /// Attempts made (initial try + retries).
+    pub attempts: usize,
+    /// The last attempt's failure, rendered.
+    pub error: String,
 }
 
 /// What one `run_grid` call did.
@@ -245,17 +285,29 @@ pub struct GridOutcome {
     /// [`report::pressure_rows`] so stdout tables aggregate through
     /// exactly the same path as the rendered artifacts.
     pub ledger: Option<Ledger>,
-    /// Report artifacts rendered into `grid_dir` (empty unless
-    /// `complete`).
+    /// Report artifacts rendered into `grid_dir`. Empty unless the
+    /// grid is `complete` — or partially complete with quarantined
+    /// jobs, in which case this holds the partial report.
     pub artifacts: Vec<PathBuf>,
+    /// Jobs that exhausted their retries this call (sorted by key).
+    /// Non-empty implies `complete == false`.
+    pub quarantined: Vec<Quarantine>,
 }
 
-/// Execute one job: open its telemetry stream, run the seed, persist
-/// the `run_started`/`run_finished` envelope, and build the ledger
-/// entry.
-fn run_job(engine: &Engine, job: &Job, grid_dir: &Path) -> Result<LedgerEntry> {
+/// Execute one job attempt: open its telemetry stream, run the seed,
+/// persist the `run_started`/`run_finished` envelope, and build the
+/// ledger entry. `panic_fault` optionally wraps the trainer's sink in
+/// a [`PanicSink`] so an injected panic unwinds from inside the step
+/// loop.
+fn run_job(
+    engine: &Engine,
+    job: &Job,
+    grid_dir: &Path,
+    io: &Arc<dyn ArtifactIo>,
+    panic_fault: Option<(Arc<FaultPlan>, String)>,
+) -> Result<LedgerEntry> {
     let events_path = grid_dir.join("events").join(format!("{}.jsonl", job.key));
-    let sink = SharedSink::new(JsonlWriter::create(&events_path)?);
+    let sink = SharedSink::new(JsonlWriter::create_with_io(&events_path, io.clone())?);
     sink.post(&telemetry::ev_run_started(
         &job.key,
         &job.model_key,
@@ -264,11 +316,15 @@ fn run_job(engine: &Engine, job: &Job, grid_dir: &Path) -> Result<LedgerEntry> {
         job.digest,
         job.config_hash,
     ));
+    let trainer_sink: Box<dyn TelemetrySink> = match panic_fault {
+        Some((plan, id)) => Box::new(PanicSink::new(Box::new(sink.clone()), plan, id)),
+        None => Box::new(sink.clone()),
+    };
     // detlint: allow(d2) — measured wall_s is observability-only: it
     // rides in telemetry/ledger but is excluded from result digests and
     // every golden comparison (docs/TELEMETRY.md "determinism").
     let t0 = Instant::now();
-    let result = harness::run_seed(engine, job.cfg.clone(), Some(Box::new(sink.clone())))?;
+    let result = harness::run_seed(engine, job.cfg.clone(), Some(trainer_sink))?;
     let wall_s = t0.elapsed().as_secs_f64();
     sink.post(&telemetry::ev_run_finished(&job.key, result.to_json(), wall_s));
     sink.flush()?;
@@ -282,6 +338,112 @@ fn run_job(engine: &Engine, job: &Job, grid_dir: &Path) -> Result<LedgerEntry> {
         result,
         wall_s,
     })
+}
+
+/// The supervisor's backoff clock: pure step accounting, no wall-time
+/// reads. Attempt `i` "waits" `2^i` virtual ticks before the next try
+/// — deterministic, reproducible, and free (simulated time costs
+/// nothing, exactly like the simulated VRAM budget).
+struct VirtualClock {
+    ticks: u64,
+}
+
+impl VirtualClock {
+    fn new() -> VirtualClock {
+        VirtualClock { ticks: 0 }
+    }
+
+    /// Account the backoff for a failed attempt; returns the delay in
+    /// virtual ticks.
+    fn backoff(&mut self, attempt: usize) -> u64 {
+        let delay = 1u64 << attempt.min(16);
+        self.ticks += delay;
+        delay
+    }
+}
+
+/// How one supervised job ended.
+enum JobVerdict {
+    /// An attempt succeeded.
+    Done(Box<LedgerEntry>),
+    /// Every attempt failed; the job is quarantined.
+    Quarantined(Quarantine),
+}
+
+/// Render a `catch_unwind` payload (panics carry `&str` or `String`).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Run one job under supervision: up to `1 + retries` isolated
+/// attempts, exponential virtual-clock backoff between failures, and a
+/// [`Quarantine`] verdict when they are exhausted. Scheduled faults
+/// (OOM storms, panics) are consulted per attempt, so a job whose
+/// plan hits H attempts recovers on attempt H+1 — within the retry
+/// budget — or quarantines beyond it.
+fn supervise_job(
+    engine: &Engine,
+    job: &Job,
+    grid_dir: &Path,
+    io: &Arc<dyn ArtifactIo>,
+    plan: Option<&Arc<FaultPlan>>,
+    manifest: &Manifest,
+    opts: &SchedOptions,
+) -> JobVerdict {
+    let mut clock = VirtualClock::new();
+    let mut last_err = String::new();
+    let mut attempts = 0;
+    for attempt in 0..=opts.retries {
+        attempts = attempt + 1;
+        // A scheduled OOM storm kills the attempt before it trains:
+        // the live budget is crushed by a simulated co-tenant burst
+        // and not even batch 1 fits. Running the storm *outside* the
+        // trainer is deliberate — the retry trains fault-free, so the
+        // recorded result (and the grid artifacts) stay bit-identical
+        // to an unstormed run.
+        let storm = plan.and_then(|p| {
+            let id = p.oom_due(&job.key, attempt)?;
+            p.fire(&id, "oom", &job.key).then_some(id)
+        });
+        if storm.is_some() {
+            last_err = match manifest.model(&job.model_key) {
+                Ok(entry) => format!("{:#}", crate::faults::simulated_oom_storm(entry, &job.cfg)),
+                Err(e) => format!("injected OOM storm (model lookup failed: {e:#})"),
+            };
+        } else {
+            let panic_fault =
+                plan.and_then(|p| p.panic_due(&job.key, attempt).map(|id| (Arc::clone(p), id)));
+            // AssertUnwindSafe: a panicking attempt's state is all
+            // attempt-local (trainer, sink, scratch); the shared
+            // engine only queues closures on its compute pool and the
+            // unwind happens on this worker thread, never inside a
+            // pool task — nothing shared is left mid-mutation.
+            let caught =
+                catch_unwind(AssertUnwindSafe(|| run_job(engine, job, grid_dir, io, panic_fault)));
+            match caught {
+                Ok(Ok(entry)) => return JobVerdict::Done(Box::new(entry)),
+                Ok(Err(e)) => last_err = format!("{e:#}"),
+                Err(payload) => last_err = format!("panic: {}", panic_message(payload.as_ref())),
+            }
+        }
+        if attempt < opts.retries {
+            let delay = clock.backoff(attempt);
+            if !opts.quiet {
+                eprintln!(
+                    "  job {} attempt {attempts} failed ({last_err}); retrying after \
+                     {delay} virtual tick(s)",
+                    job.key
+                );
+            }
+        }
+    }
+    JobVerdict::Quarantined(Quarantine { key: job.key.clone(), attempts, error: last_err })
 }
 
 /// Run (or resume) a grid: skip ledger-recorded jobs, execute the rest
@@ -298,14 +460,63 @@ pub fn run_grid(spec: &GridSpec, opts: &SchedOptions) -> Result<GridOutcome> {
     let grid_dir = opts.out_dir.join(&grid_id);
     std::fs::create_dir_all(grid_dir.join("events"))
         .with_context(|| format!("creating {}", grid_dir.display()))?;
+
+    // Arm the fault plan (if any) against the *full* job-key set, so
+    // targeting is identical on resume, and route runtime artifact
+    // writes through the fault-injecting IO seam. Recovery writes
+    // (healing a torn ledger, the initial header) use the real
+    // filesystem: they repair damage, they are not job activity.
+    let plan: Option<Arc<FaultPlan>> = match &opts.faults {
+        Some(fspec) if !fspec.is_empty() => {
+            let keys: Vec<String> = jobs.iter().map(|j| j.key.clone()).collect();
+            let p = FaultPlan::arm(fspec, &grid_dir, &keys)?;
+            if !opts.quiet {
+                println!("  fault plan armed: {} (log: {})", fspec.render(), p.log_path().display());
+            }
+            Some(p)
+        }
+        _ => None,
+    };
+    let io: Arc<dyn ArtifactIo> = match &plan {
+        Some(p) => Arc::new(FaultyIo::new(Arc::clone(p))),
+        None => Arc::new(RealIo),
+    };
+
     let ledger_path = grid_dir.join("ledger.json");
     let mut led = if ledger_path.exists() {
-        let l = Ledger::load(&ledger_path)?;
-        l.validate_against(&grid_id, &jobs)?;
-        l
+        match Ledger::load_relaxed(&ledger_path)? {
+            Loaded::Usable { ledger, dropped } => {
+                ledger.validate_against(&grid_id, &jobs)?;
+                if dropped > 0 {
+                    if !opts.quiet {
+                        eprintln!(
+                            "  recovered {}: dropped {dropped} torn/invalid trailing \
+                             record(s); the affected job(s) rerun",
+                            ledger_path.display()
+                        );
+                    }
+                    // Heal: rewrite the valid prefix atomically so the
+                    // torn tail never has to be re-skipped.
+                    ledger.save(&ledger_path, &RealIo)?;
+                }
+                ledger
+            }
+            Loaded::Corrupt { reason } => {
+                if !opts.quiet {
+                    eprintln!(
+                        "  rebuilding {}: {reason}; every job reruns",
+                        ledger_path.display()
+                    );
+                }
+                Ledger::new(&grid_id, spec, &jobs)
+            }
+        }
     } else {
         Ledger::new(&grid_id, spec, &jobs)
     };
+    // The file on disk always starts with a valid sealed header — even
+    // before the first job completes.
+    led.save(&ledger_path, &RealIo)?;
 
     let mut pending: Vec<Job> =
         jobs.iter().filter(|j| !led.is_done(&j.key)).cloned().collect();
@@ -315,6 +526,7 @@ pub fn run_grid(spec: &GridSpec, opts: &SchedOptions) -> Result<GridOutcome> {
     }
     let executed = pending.len();
 
+    let mut quarantined: Vec<Quarantine> = Vec::new();
     if !pending.is_empty() {
         let total_threads = if opts.total_threads > 0 {
             opts.total_threads
@@ -331,9 +543,17 @@ pub fn run_grid(spec: &GridSpec, opts: &SchedOptions) -> Result<GridOutcome> {
         let threads_each = per_job_threads(total_threads, workers);
         let queue = Mutex::new(VecDeque::from(pending));
         let led_mutex = Mutex::new(&mut led);
+        let quarantine_sink: Mutex<Vec<Quarantine>> = Mutex::new(Vec::new());
+        // The failure latch aborts the grid — reserved for ledger
+        // persistence failures (a completion we cannot record is not a
+        // per-job problem). Job failures never land here: the
+        // supervisor retries, then quarantines.
         let failure: Mutex<Option<anyhow::Error>> = Mutex::new(None);
         let grid_dir_ref = &grid_dir;
         let ledger_path_ref = &ledger_path;
+        let manifest_ref = &manifest;
+        let plan_ref = &plan;
+        let io_ref = &io;
         std::thread::scope(|s| {
             for _ in 0..workers {
                 s.spawn(|| {
@@ -347,30 +567,60 @@ pub fn run_grid(spec: &GridSpec, opts: &SchedOptions) -> Result<GridOutcome> {
                         }
                         let job = queue.lock().unwrap().pop_front();
                         let Some(job) = job else { return };
-                        match run_job(&engine, &job, grid_dir_ref) {
-                            Ok(entry) => {
+                        let verdict = supervise_job(
+                            &engine,
+                            &job,
+                            grid_dir_ref,
+                            io_ref,
+                            plan_ref.as_ref(),
+                            manifest_ref,
+                            opts,
+                        );
+                        match verdict {
+                            JobVerdict::Done(entry) => {
                                 if !opts.quiet {
                                     println!(
                                         "  job {:<44} {:>7.2}s  acc {:5.1}%",
                                         entry.key, entry.wall_s, entry.result.test_acc_pct
                                     );
                                 }
+                                let entry = *entry;
                                 let mut l = led_mutex.lock().unwrap();
-                                l.insert(entry);
-                                if let Err(e) = l.save(ledger_path_ref) {
+                                l.insert(entry.clone());
+                                // Fast path: append one sealed record.
+                                // If the append fails (transient IO
+                                // fault, torn write), fall back to a
+                                // full atomic rewrite; only when both
+                                // fail is the grid aborted.
+                                let saved = Ledger::append_entry(
+                                    &entry,
+                                    ledger_path_ref,
+                                    io_ref.as_ref(),
+                                )
+                                .or_else(|append_err| {
+                                    l.save(ledger_path_ref, io_ref.as_ref()).with_context(
+                                        || format!("after failed append ({append_err:#})"),
+                                    )
+                                });
+                                if let Err(e) = saved {
                                     let mut f = failure.lock().unwrap();
                                     if f.is_none() {
-                                        *f = Some(e);
+                                        *f = Some(e.context(format!(
+                                            "persisting job `{}`",
+                                            entry.key
+                                        )));
                                     }
                                     return;
                                 }
                             }
-                            Err(e) => {
-                                let mut f = failure.lock().unwrap();
-                                if f.is_none() {
-                                    *f = Some(anyhow::anyhow!("job {}: {e:#}", job.key));
+                            JobVerdict::Quarantined(q) => {
+                                if !opts.quiet {
+                                    eprintln!(
+                                        "  job {:<44} QUARANTINED after {} attempt(s): {}",
+                                        q.key, q.attempts, q.error
+                                    );
                                 }
-                                return;
+                                quarantine_sink.lock().unwrap().push(q);
                             }
                         }
                     }
@@ -381,6 +631,9 @@ pub fn run_grid(spec: &GridSpec, opts: &SchedOptions) -> Result<GridOutcome> {
         if let Some(e) = first_failure {
             return Err(e);
         }
+        quarantined =
+            quarantine_sink.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner);
+        quarantined.sort_by(|a, b| a.key.cmp(&b.key));
     }
 
     let complete = jobs.iter().all(|j| led.is_done(&j.key));
@@ -394,6 +647,7 @@ pub fn run_grid(spec: &GridSpec, opts: &SchedOptions) -> Result<GridOutcome> {
         cells: Vec::new(),
         ledger: None,
         artifacts: Vec::new(),
+        quarantined: Vec::new(),
     };
     if complete {
         // Reload from disk so aggregation consumes exactly the
@@ -403,6 +657,14 @@ pub fn run_grid(spec: &GridSpec, opts: &SchedOptions) -> Result<GridOutcome> {
         outcome.cells = led.cell_results()?;
         outcome.artifacts = report::render(&grid_dir, &led)?;
         outcome.ledger = Some(led);
+    } else if !quarantined.is_empty() {
+        // Quarantined jobs must not silently erase the rest of the
+        // grid's work: render a partial report that marks their cells.
+        // (Plain `job_limit` incompleteness still renders nothing —
+        // that is a simulated kill, not a supervised failure.)
+        let led = Ledger::load(&ledger_path)?;
+        outcome.artifacts = report::render_partial(&grid_dir, &led, &quarantined)?;
+        outcome.quarantined = quarantined;
     }
     Ok(outcome)
 }

@@ -45,6 +45,89 @@ pub fn render(grid_dir: &Path, led: &Ledger) -> Result<Vec<PathBuf>> {
     Ok(artifacts)
 }
 
+/// Render a *partial* report for a grid with quarantined jobs: cells
+/// whose every job completed render as normal rows; cells blocked by a
+/// quarantined job are listed with the failure that quarantined them.
+/// The file is clearly marked PARTIAL and `BENCH_grid.json` is *not*
+/// written — the diffable summary only ever describes complete grids.
+/// Rerunning the grid command retries the quarantined jobs and, once
+/// they pass, overwrites this file with the full report.
+pub fn render_partial(
+    grid_dir: &Path,
+    led: &Ledger,
+    quarantined: &[super::Quarantine],
+) -> Result<Vec<PathBuf>> {
+    let name = match led.kind.as_str() {
+        "table1" => "table1.md",
+        "table2" => "table2.md",
+        "pressure" => "pressure.md",
+        "fig" => "fig.md",
+        other => anyhow::bail!("unknown grid kind `{other}` in ledger"),
+    };
+    let mut whole = Vec::new();
+    let mut blocked = Vec::new();
+    for c in &led.cells {
+        if c.job_keys.iter().all(|k| led.entries.contains_key(k)) {
+            whole.push(c.clone());
+        } else {
+            blocked.push(c.clone());
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!(
+        "# {} — grid `{}` — PARTIAL ({} of {} cells quarantined)\n\n",
+        led.kind,
+        led.grid_id,
+        blocked.len(),
+        led.cells.len()
+    ));
+    out.push_str(
+        "Some jobs exhausted their supervisor retries and were quarantined \
+         (see `docs/FAULTS.md`). Completed cells are reported below; rerun \
+         the same grid command to retry the quarantined jobs and render the \
+         full report.\n\n",
+    );
+    if !whole.is_empty() {
+        let reduced = Ledger { cells: whole, ..led.clone() };
+        let rows = cell_rows(&reduced)?;
+        out.push_str("## Completed cells\n\n");
+        out.push_str("| Model | Method | Acc (%) | Time (s) | VRAM (GB) | Score |\n");
+        out.push_str("|---|---|---|---|---|---|\n");
+        for r in &rows {
+            out.push_str(&format!(
+                "| {} | {} | {:.1} ± {:.2} | {:.2} ± {:.2} | {:.4} ± {:.4} | {:.2} |\n",
+                r.model_key,
+                r.label,
+                r.acc.mean(),
+                r.acc.std(),
+                r.modeled_s.mean(),
+                r.modeled_s.std(),
+                r.peak_gb.mean(),
+                r.peak_gb.std(),
+                r.score.mean(),
+            ));
+        }
+        out.push('\n');
+    }
+    out.push_str("## Quarantined cells\n\n");
+    for c in &blocked {
+        out.push_str(&format!("- **{}** / {} (`{}`)\n", c.model, c.label, c.method_key));
+        for k in &c.job_keys {
+            if let Some(q) = quarantined.iter().find(|q| &q.key == k) {
+                out.push_str(&format!(
+                    "  - `{}`: quarantined after {} attempt(s): {}\n",
+                    q.key, q.attempts, q.error
+                ));
+            } else if !led.entries.contains_key(k) {
+                out.push_str(&format!("  - `{k}`: not yet run\n"));
+            }
+        }
+    }
+    let path = grid_dir.join(name);
+    std::fs::write(&path, out).with_context(|| format!("writing {}", path.display()))?;
+    Ok(vec![path])
+}
+
 /// Aggregate a complete ledger into Table rows (one [`CellResult`]
 /// per cell, canonical order). This is the *only* reduction path: the
 /// markdown artifacts and the CLI's stdout tables both call it, so

@@ -13,6 +13,23 @@
 //! policy.
 //!
 //! One `Trainer::run()` = one Table-1 cell at one seed.
+//!
+//! ## Panic propagation boundary
+//!
+//! The trainer holds no cross-job state: everything it owns (session,
+//! control plane, VRAM sim, data iterators, metrics) is constructed
+//! per run and dropped with it. A panic anywhere in the step loop —
+//! including one injected through the telemetry sink by a fault plan
+//! ([`crate::faults::PanicSink`]) — therefore unwinds cleanly out of
+//! `run()` to the scheduler's supervisor, which catches it at the job
+//! boundary (`catch_unwind` in [`crate::sched`]) and retries or
+//! quarantines *that job only*. The compute pool is not part of the
+//! unwind path: pool workers execute fixed work chunks and the
+//! trainer's panic surfaces on the job's own thread. Simulated OOMs
+//! are *not* panics — `oom_event` is an observation the control plane
+//! adapts to (and OOM-storm faults kill the attempt in the supervisor,
+//! before the trainer ever runs, so recorded results stay
+//! bit-identical).
 
 use std::time::Instant;
 

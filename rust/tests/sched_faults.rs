@@ -1,0 +1,425 @@
+//! Fault-injection & crash-recovery integration suite.
+//!
+//! The contracts under test (ISSUE 7 acceptance criteria):
+//! * a ledger truncated at *every* byte offset loads to a usable valid
+//!   prefix (or is cleanly diagnosed as corrupt while the header is
+//!   damaged), healing is lossless, and resuming from any truncation
+//!   class reproduces bit-identical artifacts;
+//! * a torn telemetry stream can never pass a record off as authentic:
+//!   any line that verifies its `crc` is byte-equal to the original;
+//! * the supervisor retries transient faults (panics, OOM storms,
+//!   IO errors) to a bit-identical completion, isolates a persistently
+//!   failing job into quarantine with a partial report, and a full
+//!   chaos plan — including a torn-ledger crash and resume — converges
+//!   to artifacts byte-identical to the fault-free run.
+
+use std::path::{Path, PathBuf};
+
+use tri_accel::config::{Config, Method};
+use tri_accel::faults::{FaultSpec, RealIo};
+use tri_accel::metrics::telemetry;
+use tri_accel::policy::registry;
+use tri_accel::sched::{self, CellSpec, GridKind, GridSpec, Ledger, Loaded, SchedOptions};
+use tri_accel::util::json::Json;
+
+fn tweak(cfg: &mut Config) {
+    cfg.steps_per_epoch = Some(2);
+    cfg.epochs = 1;
+    cfg.train_examples = 256;
+    cfg.eval_examples = 128;
+    cfg.batch_init = 32;
+    cfg.t_ctrl = 2;
+    cfg.t_curv = 3;
+    cfg.curv_warmup = 1;
+    cfg.batch_cooldown = 2;
+    cfg.warmup_epochs = 0;
+    cfg.mem_budget_gb = 0.0;
+    cfg.mem_noise = 0.0;
+}
+
+/// 1 model × N methods × 1 seed = N jobs.
+fn spec_n(methods: &[Method]) -> GridSpec {
+    let mut cells = Vec::new();
+    for &method in methods {
+        let mut base = Config::cell("tiny_cnn_c10", method, 0);
+        tweak(&mut base);
+        cells.push(CellSpec {
+            model_key: "tiny_cnn_c10".to_string(),
+            label: method.name().to_string(),
+            method_key: registry::effective_key(&base),
+            seeds: vec![0],
+            base,
+        });
+    }
+    GridSpec { kind: GridKind::Table1, cells }
+}
+
+fn two_job_spec() -> GridSpec {
+    spec_n(&[Method::Fp32, Method::TriAccel])
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!(
+        "triaccel_faults_it_{name}_{}",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&p).ok();
+    p
+}
+
+fn opts(out: &Path, jobs: usize) -> SchedOptions {
+    SchedOptions {
+        jobs,
+        total_threads: 4,
+        out_dir: out.to_path_buf(),
+        quiet: true,
+        ..SchedOptions::default()
+    }
+}
+
+fn read(p: &Path) -> String {
+    std::fs::read_to_string(p).unwrap_or_else(|e| panic!("reading {}: {e}", p.display()))
+}
+
+fn result_bits(e: &sched::LedgerEntry) -> String {
+    e.result.to_json().to_string_compact()
+}
+
+/// Run the grid under a fault plan, resuming across simulated
+/// torn-write crashes the way an operator (or `tri-accel chaos`)
+/// would. Returns (outcome, restart count).
+fn run_with_resume(spec: &GridSpec, o: &SchedOptions, max: usize) -> (sched::GridOutcome, usize) {
+    let mut restarts = 0usize;
+    loop {
+        match sched::run_grid(spec, o) {
+            Ok(out) => return (out, restarts),
+            Err(e) if format!("{e:#}").contains("injected") && restarts < max => restarts += 1,
+            Err(e) => panic!("non-injected grid failure: {e:#}"),
+        }
+    }
+}
+
+#[test]
+fn ledger_truncated_at_every_byte_offset_loads_a_valid_prefix() {
+    let spec = two_job_spec();
+    let ref_out = tmp("lprop");
+    let reference = sched::run_grid(&spec, &opts(&ref_out, 1)).unwrap();
+    assert!(reference.complete);
+    let bytes = std::fs::read(reference.grid_dir.join("ledger.json")).unwrap();
+    let ref_led = Ledger::load(&reference.grid_dir.join("ledger.json")).unwrap();
+    assert_eq!(ref_led.entries.len(), 2);
+    let header_end = bytes.iter().position(|&b| b == b'\n').unwrap();
+
+    let scratch = tmp("lscratch");
+    std::fs::create_dir_all(&scratch).unwrap();
+    let f = scratch.join("ledger.json");
+    for k in 0..=bytes.len() {
+        std::fs::write(&f, &bytes[..k]).unwrap();
+        match Ledger::load_relaxed(&f).unwrap() {
+            Loaded::Usable { ledger, dropped } => {
+                assert!(k >= header_end, "offset {k}: usable before the header is whole");
+                // Every recovered entry is authentic — the checksum
+                // makes a truncated record unrepresentable as data.
+                for (key, e) in &ledger.entries {
+                    let r = ref_led
+                        .entries
+                        .get(key)
+                        .unwrap_or_else(|| panic!("offset {k}: phantom entry `{key}`"));
+                    assert_eq!(result_bits(e), result_bits(r), "offset {k}");
+                }
+                if ledger.entries.len() == ref_led.entries.len() {
+                    assert_eq!(dropped, 0, "offset {k}: full prefix drops nothing");
+                }
+                // Healing (what grid resume does) is lossless and
+                // leaves a file that reloads clean.
+                ledger.save(&f, &RealIo).unwrap();
+                match Ledger::load_relaxed(&f).unwrap() {
+                    Loaded::Usable { ledger: healed, dropped: d2 } => {
+                        assert_eq!(d2, 0, "offset {k}: healed file has no torn tail");
+                        assert_eq!(
+                            healed.entries.keys().collect::<Vec<_>>(),
+                            ledger.entries.keys().collect::<Vec<_>>(),
+                            "offset {k}"
+                        );
+                    }
+                    Loaded::Corrupt { reason } => panic!("offset {k}: healed corrupt: {reason}"),
+                }
+            }
+            Loaded::Corrupt { .. } => {
+                assert!(
+                    k <= header_end,
+                    "offset {k}: corrupt verdict with an intact header"
+                );
+            }
+        }
+    }
+    std::fs::remove_dir_all(&ref_out).ok();
+    std::fs::remove_dir_all(&scratch).ok();
+}
+
+#[test]
+fn resume_from_each_truncation_class_is_bit_identical() {
+    let spec = two_job_spec();
+    let ref_out = tmp("ltrunc");
+    let reference = sched::run_grid(&spec, &opts(&ref_out, 1)).unwrap();
+    assert!(reference.complete);
+    let bytes = std::fs::read(reference.grid_dir.join("ledger.json")).unwrap();
+    let ref_table = read(&reference.grid_dir.join("table1.md"));
+    let ref_bench = read(&reference.grid_dir.join("BENCH_grid.json"));
+    let nl: Vec<usize> = bytes
+        .iter()
+        .enumerate()
+        .filter_map(|(i, &b)| (b == b'\n').then_some(i))
+        .collect();
+    assert_eq!(nl.len(), 3, "header + 2 job records");
+    // One offset per recovery class: empty file, mid-header, header
+    // only, mid-record 1, record 1 whole, mid-record 2, whole file.
+    let mut classes = vec![
+        0,
+        nl[0] / 2,
+        nl[0] + 1,
+        (nl[0] + nl[1]) / 2,
+        nl[1] + 1,
+        (nl[1] + nl[2]) / 2,
+        bytes.len(),
+    ];
+    classes.dedup();
+    for k in classes {
+        let out = tmp(&format!("ltrunc_k{k}"));
+        let grid_dir = out.join(&reference.grid_id);
+        std::fs::create_dir_all(grid_dir.join("events")).unwrap();
+        std::fs::write(grid_dir.join("ledger.json"), &bytes[..k]).unwrap();
+        let resumed = sched::run_grid(&spec, &opts(&out, 2)).unwrap();
+        assert!(resumed.complete, "offset {k}");
+        assert_eq!(resumed.executed + resumed.reused, resumed.total, "offset {k}");
+        assert_eq!(
+            read(&resumed.grid_dir.join("table1.md")),
+            ref_table,
+            "table1.md diverged resuming from truncation at {k}"
+        );
+        assert_eq!(
+            read(&resumed.grid_dir.join("BENCH_grid.json")),
+            ref_bench,
+            "BENCH_grid.json diverged resuming from truncation at {k}"
+        );
+        std::fs::remove_dir_all(&out).ok();
+    }
+    std::fs::remove_dir_all(&ref_out).ok();
+}
+
+#[test]
+fn torn_event_stream_never_passes_a_tampered_record() {
+    let spec = sched::fig_spec("tiny_cnn_c10", 0, &tweak);
+    let out = tmp("etorn");
+    let o = sched::run_grid(&spec, &opts(&out, 1)).unwrap();
+    assert!(o.complete);
+    let led = Ledger::load(&o.grid_dir.join("ledger.json")).unwrap();
+    let key = led.cells[0].job_keys[0].clone();
+    let events = o.grid_dir.join("events").join(format!("{key}.jsonl"));
+    let bytes = std::fs::read(&events).unwrap();
+    let full = String::from_utf8(bytes.clone()).expect("events are UTF-8");
+    let orig: Vec<&str> = full.lines().collect();
+    assert!(orig.len() >= 4, "run_started + steps + epoch + run_finished");
+    for line in &orig {
+        let j = Json::parse(line).unwrap();
+        assert!(telemetry::crc_ok(&j), "reference stream is fully sealed: {line}");
+    }
+    // Crash at every byte offset: any line in the torn prefix that
+    // still verifies its crc must be byte-identical to the original —
+    // truncation can lose the tail record but never corrupt one.
+    for k in 0..=bytes.len() {
+        let Ok(text) = std::str::from_utf8(&bytes[..k]) else {
+            continue; // mid-UTF-8 cut: no line of this prefix parses anyway
+        };
+        for (i, seg) in text.split('\n').enumerate() {
+            if seg.is_empty() {
+                continue;
+            }
+            if let Ok(j) = Json::parse(seg) {
+                if telemetry::crc_ok(&j) {
+                    assert_eq!(
+                        seg, orig[i],
+                        "offset {k}: a truncated line verified without being authentic"
+                    );
+                }
+            }
+        }
+    }
+    std::fs::remove_dir_all(&out).ok();
+}
+
+#[test]
+fn rerun_after_events_truncation_rebuilds_a_sealed_stream() {
+    let spec = sched::fig_spec("tiny_cnn_c10", 0, &tweak);
+    let out = tmp("eresume");
+    let o = sched::run_grid(&spec, &opts(&out, 1)).unwrap();
+    assert!(o.complete);
+    let ledger_path = o.grid_dir.join("ledger.json");
+    let led = Ledger::load(&ledger_path).unwrap();
+    let key = led.cells[0].job_keys[0].clone();
+    let events = o.grid_dir.join("events").join(format!("{key}.jsonl"));
+    let bytes = std::fs::read(&events).unwrap();
+    let ref_bench = read(&o.grid_dir.join("BENCH_grid.json"));
+    for k in [0, bytes.len() / 3, bytes.len() - 1] {
+        // Simulate a crash mid-job: torn events, no ledger record.
+        std::fs::write(&events, &bytes[..k]).unwrap();
+        let mut crashed = led.clone();
+        crashed.entries.clear();
+        crashed.save(&ledger_path, &RealIo).unwrap();
+        let resumed = sched::run_grid(&spec, &opts(&out, 1)).unwrap();
+        assert!(resumed.complete, "offset {k}");
+        assert_eq!(resumed.executed, 1, "offset {k}: the torn job reran");
+        let text = read(&events);
+        for line in text.lines() {
+            let j = Json::parse(line).unwrap_or_else(|e| panic!("offset {k}: {e}"));
+            assert!(telemetry::crc_ok(&j), "offset {k}: rebuilt stream is sealed");
+        }
+        assert_eq!(
+            read(&resumed.grid_dir.join("BENCH_grid.json")),
+            ref_bench,
+            "offset {k}"
+        );
+        // And the figure still reconstructs from the healed stream.
+        let reled = Ledger::load(&ledger_path).unwrap();
+        sched::report::fig_series(&resumed.grid_dir, &reled).unwrap();
+    }
+    std::fs::remove_dir_all(&out).ok();
+}
+
+#[test]
+fn supervisor_retries_a_panicking_job_to_a_clean_finish() {
+    let spec = two_job_spec();
+    let clean_out = tmp("pclean");
+    let clean = sched::run_grid(&spec, &opts(&clean_out, 1)).unwrap();
+    assert!(clean.complete);
+
+    let fault_out = tmp("pfault");
+    let mut o = opts(&fault_out, 1);
+    o.retries = 2;
+    o.faults = Some(FaultSpec::parse("seed:5,panic:1").unwrap());
+    let faulted = sched::run_grid(&spec, &o).unwrap();
+    assert!(faulted.complete, "one panic within the retry budget recovers");
+    assert!(faulted.quarantined.is_empty());
+    let log = read(&faulted.grid_dir.join("faults.jsonl"));
+    let kinds: Vec<String> = log
+        .lines()
+        .map(|l| {
+            Json::parse(l).unwrap().get("kind").unwrap().as_str().unwrap().to_string()
+        })
+        .collect();
+    assert_eq!(kinds, ["panic"], "exactly one fault fired: {log}");
+    assert_eq!(
+        read(&faulted.grid_dir.join("table1.md")),
+        read(&clean.grid_dir.join("table1.md")),
+        "a retried panic leaves no trace in the artifacts"
+    );
+    assert_eq!(
+        read(&faulted.grid_dir.join("BENCH_grid.json")),
+        read(&clean.grid_dir.join("BENCH_grid.json"))
+    );
+    std::fs::remove_dir_all(&clean_out).ok();
+    std::fs::remove_dir_all(&fault_out).ok();
+}
+
+#[test]
+fn simulated_oom_storms_retry_without_contaminating_results() {
+    let spec = two_job_spec();
+    let clean_out = tmp("oclean");
+    let clean = sched::run_grid(&spec, &opts(&clean_out, 1)).unwrap();
+
+    let fault_out = tmp("ofault");
+    let mut o = opts(&fault_out, 1);
+    o.retries = 3;
+    o.faults = Some(FaultSpec::parse("seed:5,oom:1:2").unwrap());
+    let faulted = sched::run_grid(&spec, &o).unwrap();
+    assert!(faulted.complete, "storms clear within the retry budget");
+    let log = read(&faulted.grid_dir.join("faults.jsonl"));
+    assert_eq!(log.lines().count(), 2, "both storm hits fired: {log}");
+    assert!(log.contains("\"kind\":\"oom\""), "{log}");
+    assert_eq!(
+        read(&faulted.grid_dir.join("table1.md")),
+        read(&clean.grid_dir.join("table1.md")),
+        "OOM storms kill attempts, never results"
+    );
+    std::fs::remove_dir_all(&clean_out).ok();
+    std::fs::remove_dir_all(&fault_out).ok();
+}
+
+#[test]
+fn retry_exhaustion_quarantines_and_renders_a_partial_report() {
+    let spec = two_job_spec();
+    let out = tmp("quar");
+    let mut o = opts(&out, 1);
+    o.retries = 1;
+    // 5 hits > 1+1 attempts: the targeted job cannot complete.
+    o.faults = Some(FaultSpec::parse("seed:5,panic:1:5").unwrap());
+    let outcome = sched::run_grid(&spec, &o).unwrap();
+    assert!(!outcome.complete, "a quarantined job leaves the grid incomplete");
+    assert_eq!(outcome.quarantined.len(), 1);
+    let q = &outcome.quarantined[0];
+    assert_eq!(q.attempts, 2, "initial attempt + 1 retry");
+    assert!(q.error.contains("injected fault"), "{}", q.error);
+    // The healthy job still completed — panic isolation.
+    let led = Ledger::load(&out.join(&outcome.grid_id).join("ledger.json")).unwrap();
+    assert_eq!(led.entries.len(), 1, "the untargeted job is unaffected");
+    assert!(!led.entries.contains_key(&q.key));
+    // A partial report marks the damage; the diffable summary is not
+    // written for incomplete grids.
+    assert_eq!(outcome.artifacts.len(), 1);
+    let partial = read(&outcome.artifacts[0]);
+    assert!(partial.contains("PARTIAL"), "{partial}");
+    assert!(partial.contains("Quarantined cells"), "{partial}");
+    assert!(partial.contains(&q.key), "{partial}");
+    assert!(!outcome.grid_dir.join("BENCH_grid.json").exists());
+
+    // Rerunning without faults retries the quarantined job and
+    // overwrites the partial report with the full one.
+    let healed = sched::run_grid(&spec, &opts(&out, 1)).unwrap();
+    assert!(healed.complete);
+    assert_eq!(healed.reused, 1);
+    assert!(!read(&healed.grid_dir.join("table1.md")).contains("PARTIAL"));
+    assert!(healed.grid_dir.join("BENCH_grid.json").exists());
+    std::fs::remove_dir_all(&out).ok();
+}
+
+#[test]
+fn full_chaos_plan_converges_to_bit_identical_artifacts() {
+    let spec = spec_n(&[Method::Fp32, Method::AmpStatic, Method::TriAccel]);
+    let clean_out = tmp("cclean");
+    let clean = sched::run_grid(&spec, &opts(&clean_out, 1)).unwrap();
+    assert!(clean.complete);
+
+    let fault_out = tmp("cfault");
+    let mut o = opts(&fault_out, 2);
+    o.retries = 3;
+    let fspec = FaultSpec::parse("seed:7,io:1,ledger_io:1,panic:1,oom:1,torn:1").unwrap();
+    o.faults = Some(fspec.clone());
+    let (faulted, restarts) = run_with_resume(&spec, &o, fspec.torn + 2);
+    assert!(faulted.complete, "the full plan is survivable at --retries 3");
+    assert!(faulted.quarantined.is_empty());
+    assert_eq!(restarts, 1, "the torn write killed exactly one process");
+    let log = read(&faulted.grid_dir.join("faults.jsonl"));
+    let mut kinds: Vec<String> = log
+        .lines()
+        .map(|l| {
+            Json::parse(l).unwrap().get("kind").unwrap().as_str().unwrap().to_string()
+        })
+        .collect();
+    kinds.sort();
+    assert_eq!(
+        kinds,
+        ["io", "ledger_io", "oom", "panic", "torn"],
+        "every scheduled fault fired exactly once: {log}"
+    );
+    assert_eq!(
+        read(&faulted.grid_dir.join("table1.md")),
+        read(&clean.grid_dir.join("table1.md")),
+        "chaos run artifacts must be bit-identical to the fault-free run"
+    );
+    assert_eq!(
+        read(&faulted.grid_dir.join("BENCH_grid.json")),
+        read(&clean.grid_dir.join("BENCH_grid.json"))
+    );
+    std::fs::remove_dir_all(&clean_out).ok();
+    std::fs::remove_dir_all(&fault_out).ok();
+}

@@ -64,8 +64,8 @@ fn opts(out: &Path, jobs: usize) -> SchedOptions {
         jobs,
         total_threads: 4,
         out_dir: out.to_path_buf(),
-        job_limit: None,
         quiet: true,
+        ..SchedOptions::default()
     }
 }
 
