@@ -1,0 +1,137 @@
+#!/usr/bin/env python3
+"""Warn-only diff of two BENCH_native.json reports (stdlib only).
+
+Usage: bench_compare.py --current BENCH_native.json \
+                        --baseline /path/to/baseline.json \
+                        [--warn-pct 25]
+
+Matches result rows by `name` and compares `mean_s` per row:
+
+* slower than the baseline by more than --warn-pct → a `WARN` line;
+* faster by more than --warn-pct → an `improved` line;
+* within the band → `ok`.
+
+Also renders the scalar-vs-SIMD speedup table from the current
+report's per-tier `gemm(MxKxN)[tier]` rows, so the CI log shows the
+dispatch win at a glance.
+
+Deliberately **warn-only**: micro-benchmark timings on shared CI
+runners are far too noisy to gate a merge, and the committed baseline
+may have been recorded on different hardware. The exit code is 0
+whenever both files parse (non-zero on a malformed/unreadable report) —
+thresholds shape the log, not the verdict. To refresh the baseline,
+download `BENCH_native.json` from a CI bench artifact (or run
+`cargo bench --bench micro` locally) and commit it at the repo root as
+`BENCH_baseline.json` (`BENCH_native.json` itself is gitignored — the
+bench overwrites it).
+"""
+
+import argparse
+import json
+import re
+import sys
+
+TIER_ROW_RE = re.compile(r"^(gemm\([0-9x]+\))\[([a-z0-9]+)\]$")
+
+
+def load_report(path):
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        sys.exit(f"bench_compare: cannot read {path}: {e}")
+    if not isinstance(doc, dict) or not isinstance(doc.get("results"), list):
+        sys.exit(f"bench_compare: {path}: expected an object with a `results` array")
+    rows = {}
+    for row in doc["results"]:
+        name, mean = row.get("name"), row.get("mean_s")
+        if isinstance(name, str) and isinstance(mean, (int, float)) and mean > 0:
+            rows[name] = float(mean)
+    return doc, rows
+
+
+def fmt_s(seconds):
+    if seconds < 1e-6:
+        return f"{seconds * 1e9:.0f}ns"
+    if seconds < 1e-3:
+        return f"{seconds * 1e6:.1f}µs"
+    if seconds < 1.0:
+        return f"{seconds * 1e3:.2f}ms"
+    return f"{seconds:.3f}s"
+
+
+def compare(cur_rows, base_rows, warn_pct):
+    warns = 0
+    shared = [n for n in cur_rows if n in base_rows]
+    for name in shared:
+        cur, base = cur_rows[name], base_rows[name]
+        delta_pct = (cur / base - 1.0) * 100.0
+        if delta_pct > warn_pct:
+            verdict, warns = "WARN slower", warns + 1
+        elif delta_pct < -warn_pct:
+            verdict = "improved"
+        else:
+            verdict = "ok"
+        print(
+            f"  {name:<44} {fmt_s(base):>10} -> {fmt_s(cur):>10} "
+            f"{delta_pct:+7.1f}%  {verdict}"
+        )
+    for name in cur_rows:
+        if name not in base_rows:
+            print(f"  {name:<44} {'—':>10} -> {fmt_s(cur_rows[name]):>10}  new row")
+    for name in base_rows:
+        if name not in cur_rows:
+            print(f"  {name:<44} {fmt_s(base_rows[name]):>10} ->   (dropped)")
+    return warns, len(shared)
+
+
+def speedup_table(cur_rows):
+    # shape -> {tier: mean_s} from `gemm(MxKxN)[tier]` rows.
+    by_shape = {}
+    for name, mean in cur_rows.items():
+        m = TIER_ROW_RE.match(name)
+        if m:
+            by_shape.setdefault(m.group(1), {})[m.group(2)] = mean
+    printed = False
+    for shape in sorted(by_shape):
+        tiers = by_shape[shape]
+        scalar = tiers.get("scalar")
+        if scalar is None:
+            continue
+        for tier in sorted(t for t in tiers if t != "scalar"):
+            if not printed:
+                print("scalar-vs-SIMD speedups (current report):")
+                printed = True
+            print(f"  {shape:<28} {tier:>6}: {scalar / tiers[tier]:5.2f}x")
+    if not printed:
+        print("no per-tier gemm rows in the current report (quick mode or scalar-only host)")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--current", required=True, help="freshly produced BENCH_native.json")
+    ap.add_argument("--baseline", required=True, help="committed baseline report")
+    ap.add_argument(
+        "--warn-pct",
+        type=float,
+        default=25.0,
+        help="percent mean_s regression that draws a WARN line (default 25)",
+    )
+    args = ap.parse_args()
+
+    cur_doc, cur_rows = load_report(args.current)
+    _base_doc, base_rows = load_report(args.baseline)
+
+    mode = cur_doc.get("mode", "?")
+    print(f"bench_compare: {len(cur_rows)} current rows (mode={mode}), {len(base_rows)} baseline rows")
+    if not base_rows:
+        print("baseline has no timed rows (seed stub) — nothing to diff; refresh it from a CI artifact")
+    else:
+        warns, shared = compare(cur_rows, base_rows, args.warn_pct)
+        print(f"compared {shared} shared row(s): {warns} above the {args.warn_pct:.0f}% warn band")
+    speedup_table(cur_rows)
+    print("bench_compare: warn-only — exit 0")
+
+
+if __name__ == "__main__":
+    main()

@@ -8,8 +8,13 @@
 //!
 //! Output: the pretty table on stdout plus `BENCH_native.json` (via
 //! `util::bench::BenchReport`), the machine-readable perf record
-//! compared across PRs. `-- --quick` runs every case once — the CI
-//! smoke mode that keeps the kernels compiling and running.
+//! compared across PRs (`python/tools/bench_compare.py` diffs it
+//! against the committed baseline). The GEMM case emits one row per
+//! dispatch tier (`gemm(...)[scalar]` vs `[avx2]`/`[neon]`) plus
+//! `speedup/<tier>` metadata, so the scalar-vs-SIMD ratio is tracked
+//! in-repo. `-- --quick` runs every case once — the CI smoke mode
+//! that keeps the kernels compiling and running; `-- --no-autotune`
+//! skips the tuning pass and pins the default blocking.
 
 use tri_accel::config::{Config, Method};
 use tri_accel::coordinator::Controller;
@@ -17,7 +22,7 @@ use tri_accel::data::{synthetic::SyntheticCifar, BatchIter};
 use tri_accel::manifest::{BF16, FP16, FP32};
 use tri_accel::memsim::VramSim;
 use tri_accel::policy::registry;
-use tri_accel::runtime::native::{arena::Arena, gemm, ops, pool::Pool};
+use tri_accel::runtime::native::{arena::Arena, autotune, gemm, ops, pool::Pool, simd};
 use tri_accel::runtime::{Engine, Session, StepCtrl};
 use tri_accel::train::Trainer;
 use tri_accel::util::bench::{black_box, BenchReport, Bencher};
@@ -25,6 +30,9 @@ use tri_accel::util::rng::Rng;
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
+    if std::env::args().any(|a| a == "--no-autotune") {
+        autotune::set_enabled(false);
+    }
     let engine = Engine::native();
     let key = "tiny_cnn_c10";
     let entry = engine.manifest.model(key).unwrap().clone();
@@ -35,6 +43,10 @@ fn main() {
     report.meta_str("model", key);
     report.meta_str("mode", if quick { "quick" } else { "full" });
     report.meta_num("threads", pool.threads() as f64);
+    report.meta_str("dispatch", simd::active().name());
+    let tier_names: Vec<&str> = simd::available_tiers().iter().map(|t| t.name()).collect();
+    report.meta_str("tiers", &tier_names.join(","));
+    report.meta_str("autotune", if autotune::enabled() { "on" } else { "off" });
 
     println!(
         "== micro: L3 hot path ({key}, {} thread(s){}) ==",
@@ -53,6 +65,36 @@ fn main() {
         let b: Vec<f32> = (0..k * n).map(|_| rng.next_normal()).collect();
         let mut c = vec![0f32; m * n];
         let mut arena = Arena::new();
+        // Scalar-vs-SIMD rows: one per available tier, pinned through
+        // gemm_with so the comparison isolates the micro-kernel. Full
+        // mode autotunes the blocking first (and persists the cache);
+        // quick/--no-autotune runs use whatever the cache already says.
+        let mut scalar_mean = 0f64;
+        for tier in simd::available_tiers() {
+            if !quick && autotune::enabled() {
+                let (cfg, err) = autotune::tune_and_save(&pool, &mut arena, tier, m, k, n, 3);
+                if let Some(e) = err {
+                    eprintln!("warning: could not save the tuning cache: {e}");
+                }
+                println!("tuned [{tier}] -> row_chunk {} nr {}", cfg.row_chunk, cfg.nr);
+            }
+            let cfg = autotune::lookup(tier, pool.threads(), m, k, n);
+            let r = quick_b.run(&format!("gemm({m}x{k}x{n})[{tier}]"), || {
+                gemm::gemm_with(tier, cfg, &pool, &mut arena, &a, &b, &mut c, m, k, n, false);
+                black_box(c[0]);
+            });
+            let mean = r.mean.as_secs_f64();
+            if tier == simd::Tier::Scalar {
+                scalar_mean = mean;
+            } else if scalar_mean > 0.0 && mean > 0.0 {
+                let sp = scalar_mean / mean;
+                report.meta_num(&format!("speedup/{tier}"), sp);
+                println!("speedup [{tier}] vs scalar: {sp:.2}x");
+            }
+            report.push(&r);
+        }
+        // The dispatch row: active tier + tuned blocking, what the
+        // trainer actually runs.
         report.push(&quick_b.run(&format!("gemm({m}x{k}x{n})"), || {
             gemm::gemm(&pool, &mut arena, &a, &b, &mut c, m, k, n, false);
             black_box(c[0]);

@@ -215,12 +215,17 @@ pub fn check_file(sf: &SourceFile) -> Vec<Finding> {
     out
 }
 
-/// Reduction shapes D4 watches: iterator sums and folds over floats.
+/// Reduction shapes D4 watches: iterator sums and folds over floats,
+/// plus the SIMD fused-multiply-add intrinsics (each `fmadd` chains a
+/// lane accumulator — the pragma must state the lane-order argument:
+/// which axis the lanes span and why the per-element chain is pinned).
 fn is_reduction(code: &str) -> bool {
     code.contains(".sum::<f32>()")
         || code.contains(".sum::<f64>()")
         || code.contains(".sum()")
         || code.contains(".fold(")
+        || code.contains("_mm256_fmadd_ps(")
+        || code.contains("vfmaq_f32(")
 }
 
 /// `needle` present as a standalone word (no identifier chars around).

@@ -11,11 +11,14 @@
 //!   compare --a run.json --b run.json
 //!   report   [--out runs] [--dir DIR]
 //!   lint     [--format human|json] [--out FILE] [--root DIR]
+//!   tune     [--shapes MxKxN,...] [--reps N] [--threads N]
 //!
 //! Global flags: `--list-models` (manifest inventory) and
 //! `--list-methods` (the method registry) print and exit. `--method`
 //! accepts any registry key (`--list-methods`), not just the paper's
-//! three columns.
+//! three columns. `--no-autotune` ignores the GEMM tuning cache for
+//! this run (every kernel uses the default blocking; see
+//! docs/ARCHITECTURE.md "SIMD dispatch & autotuning").
 //!
 //! The grid subcommands (`table1`/`table2`/`fig`/`pressure`) run on
 //! the experiment scheduler: `--jobs N` executes cells concurrently,
@@ -68,6 +71,9 @@ fn run() -> Result<()> {
         let engine = engine_from(&args)?;
         return list_models(&engine);
     }
+    if args.flag("no-autotune") {
+        tri_accel::runtime::native::autotune::set_enabled(false);
+    }
     match args.subcommand.as_deref() {
         Some("info") => info(&args),
         Some("train") | None => train(&args),
@@ -79,10 +85,11 @@ fn run() -> Result<()> {
         Some("compare") => compare(&args),
         Some("report") => report(&args),
         Some("lint") => lint(&args),
+        Some("tune") => tune(&args),
         Some(other) => {
             anyhow::bail!(
                 "unknown subcommand `{other}` \
-                 (info|train|table1|table2|fig|pressure|chaos|compare|report|lint)"
+                 (info|train|table1|table2|fig|pressure|chaos|compare|report|lint|tune)"
             )
         }
     }
@@ -116,6 +123,51 @@ fn lint(args: &Args) -> Result<()> {
         "detlint: {} finding(s) — fix each one or exempt it with a justified pragma",
         report.findings.len()
     );
+    Ok(())
+}
+
+/// `tune`: search the GEMM blocking candidates per dispatch tier for a
+/// set of shapes and persist the winners to the on-disk tuning cache
+/// (`TRIACCEL_TUNE_CACHE`, default `triaccel_tune.json` in the working
+/// directory). Safe by construction: every candidate is bit-identical
+/// within a tier, so tuning changes speed, never numbers
+/// (docs/DETERMINISM.md).
+fn tune(args: &Args) -> Result<()> {
+    use tri_accel::runtime::native::{arena::Arena, autotune, pool::Pool, simd};
+    let threads: usize = args.parse_or("threads", 0)?;
+    let reps: usize = args.parse_or("reps", 3)?;
+    anyhow::ensure!(reps >= 1, "--reps must be at least 1");
+    let shapes = args.get_or("shapes", "8192x144x32,1024x64x64,16384x27x16,16x64x10");
+    args.reject_unknown()?;
+    anyhow::ensure!(
+        autotune::enabled(),
+        "autotuning is disabled (--no-autotune / TRIACCEL_NO_AUTOTUNE) — nothing to tune"
+    );
+    let pool = if threads > 0 { Pool::new(threads) } else { Pool::from_env() };
+    let mut arena = Arena::new();
+    for spec in shapes.split(',') {
+        let dims: Vec<usize> = spec
+            .trim()
+            .split('x')
+            .map(|d| d.parse::<usize>())
+            .collect::<Result<_, _>>()
+            .with_context(|| format!("--shapes entry `{spec}` (want MxKxN)"))?;
+        anyhow::ensure!(dims.len() == 3, "--shapes entry `{spec}` must be MxKxN");
+        let (m, k, n) = (dims[0], dims[1], dims[2]);
+        for tier in simd::available_tiers() {
+            let (cfg, err) = autotune::tune_and_save(&pool, &mut arena, tier, m, k, n, reps);
+            if let Some(e) = err {
+                return Err(anyhow::Error::new(e).context("writing the tuning cache"));
+            }
+            println!(
+                "{m}x{k}x{n} [{tier}] threads {} -> row_chunk {} nr {}",
+                pool.threads(),
+                cfg.row_chunk,
+                cfg.nr
+            );
+        }
+    }
+    println!("cache → {}", autotune::cache_path().display());
     Ok(())
 }
 
@@ -325,9 +377,17 @@ fn compare(args: &Args) -> Result<()> {
 }
 
 fn info(args: &Args) -> Result<()> {
+    use tri_accel::runtime::native::{autotune, simd};
     let engine = engine_from(args)?;
     args.reject_unknown()?;
     println!("backend: {}", engine.platform());
+    let tiers: Vec<&str> = simd::available_tiers().iter().map(|t| t.name()).collect();
+    println!("dispatch: {} (available: {})", simd::active().name(), tiers.join(","));
+    println!(
+        "autotune: {} (cache: {})",
+        if autotune::enabled() { "on" } else { "off" },
+        autotune::cache_path().display()
+    );
     println!(
         "{:<20} {:>7} {:>11} {:>8} {:>22}",
         "model", "layers", "params", "curv_b", "train buckets"

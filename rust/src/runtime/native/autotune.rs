@@ -1,0 +1,407 @@
+//! Shape-class autotuning for the GEMM macro-kernel: search the
+//! blocking parameters (`row_chunk` rows per parallel chunk, `nr`
+//! panel width) per (dispatch tier, shape class, thread count) and
+//! persist the winners to an on-disk cache.
+//!
+//! Determinism: every candidate in [`candidates`] is **bit-identical
+//! within a tier** — per-element k-chains are invariant to row and
+//! panel blocking (pinned by `tests/prop_substrates.rs` and the unit
+//! tests in [`super::gemm`]) — so timing only ever picks *which
+//! equally-correct kernel schedule* runs. Values never depend on the
+//! clock, the cache file, or the search. The reduction regrouping
+//! knob (`gemm_at_b`'s `RED_CHUNK`) is deliberately **not** in the
+//! search space: regrouping partials would change bits.
+//!
+//! Cache file: compact JSON, sorted keys,
+//! `{"schema":1,"entries":{"<tier>/m<⌈log2⌉>k<..>n<..>/t<threads>":
+//! {"nr":8,"row_chunk":128}}}` — written crash-safe (temp + rename)
+//! through the [`crate::faults::ArtifactIo`] seam. Default location:
+//! `triaccel_tune.json` in the working directory; override with
+//! `TRIACCEL_TUNE_CACHE`. Invalidation: delete the file (an unknown
+//! `schema` number is treated as absent).
+//!
+//! Escape hatches: `TRIACCEL_NO_AUTOTUNE=1` or the CLI flag
+//! `--no-autotune` disable both lookups and tuning — every GEMM then
+//! runs the [`TuneCfg::default`] legacy blocking.
+//!
+//! The library GEMM entry points only ever *look up* this cache
+//! (never time anything implicitly); tuning runs in the `tri-accel
+//! tune` subcommand and the full (non-`--quick`) micro bench.
+
+// detlint: allow-file(d2) — wall-clock here only ranks candidate
+// kernel configurations that are proven bit-identical within a tier,
+// so time influences scheduling choices, never computed values (see
+// module docs).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use super::arena::Arena;
+use super::pool::Pool;
+use super::simd::{Tier, MR};
+use crate::faults::{ArtifactIo, RealIo};
+use crate::util::json::Json;
+
+/// Cache file schema version (bump on format changes; mismatched
+/// files are ignored, i.e. self-invalidate).
+const SCHEMA: i64 = 1;
+
+/// One blocking configuration for the GEMM macro-kernel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TuneCfg {
+    /// Output rows per parallel chunk — always a multiple of
+    /// [`MR`], so chunk boundaries (and therefore bits) are config
+    /// constants that ignore the thread count.
+    pub row_chunk: usize,
+    /// Packed panel width the micro-kernel consumes (8 or 16).
+    pub nr: usize,
+}
+
+impl Default for TuneCfg {
+    /// The seed kernel's blocking (`row_chunk` 128, `nr` 8) — what
+    /// every run uses when autotuning is disabled or the cache is
+    /// cold, keeping the scalar tier bit-identical to the seed.
+    fn default() -> TuneCfg {
+        TuneCfg { row_chunk: 128, nr: 8 }
+    }
+}
+
+impl TuneCfg {
+    /// Clamp to values the kernels support: `row_chunk` a positive
+    /// multiple of [`MR`] (≤ 4096), `nr ∈ {8, 16}`. Out-of-range
+    /// values (say, a hand-edited cache file) degrade to the nearest
+    /// legal config instead of erroring — the cache is an
+    /// optimization, not state.
+    pub fn sanitized(self) -> TuneCfg {
+        let nr = if self.nr == 16 { 16 } else { 8 };
+        let rc = self.row_chunk.clamp(MR, 4096);
+        TuneCfg { row_chunk: rc.div_ceil(MR) * MR, nr }
+    }
+}
+
+/// The search space: every combination is bit-identical within a tier
+/// (the property that makes autotuning safe under the determinism
+/// contract), so the tuner is free to pick purely on speed.
+pub fn candidates() -> Vec<TuneCfg> {
+    let mut out = Vec::new();
+    for &row_chunk in &[32usize, 64, 128, 256] {
+        for &nr in &[8usize, 16] {
+            out.push(TuneCfg { row_chunk, nr });
+        }
+    }
+    out
+}
+
+/// ⌈log2⌉ bucket (0 for 0/1), so one tuned entry covers the band of
+/// shapes that behave alike cache-wise.
+fn log2_bucket(v: usize) -> u32 {
+    (v.max(1) as u64).next_power_of_two().trailing_zeros()
+}
+
+/// Cache key for one (tier, shape class, thread count):
+/// `"<tier>/m<⌈log2 m⌉>k<⌈log2 k⌉>n<⌈log2 n⌉>/t<threads>"`.
+pub fn cache_key(tier: Tier, threads: usize, m: usize, k: usize, n: usize) -> String {
+    format!(
+        "{}/m{}k{}n{}/t{}",
+        tier.name(),
+        log2_bucket(m),
+        log2_bucket(k),
+        log2_bucket(n),
+        threads
+    )
+}
+
+/// The tuning cache: shape-class keys → winning configs, with
+/// load/save. A plain struct so tests and tools can run isolated
+/// instances against temp paths; the library GEMM entry points
+/// consult one process-global instance via [`lookup`] (lookups only —
+/// the global never times anything implicitly).
+#[derive(Debug)]
+pub struct Tuner {
+    entries: BTreeMap<String, TuneCfg>,
+    path: PathBuf,
+    /// When false, every lookup returns [`TuneCfg::default`] and
+    /// [`Tuner::tune_gemm`] is a no-op (the `--no-autotune` hatch).
+    pub enabled: bool,
+}
+
+impl Tuner {
+    /// Empty cache that will save to `path`.
+    pub fn new(path: &Path) -> Tuner {
+        Tuner { entries: BTreeMap::new(), path: path.to_path_buf(), enabled: true }
+    }
+
+    /// Load `path`, degrading silently to an empty cache on a
+    /// missing, unreadable, malformed, or schema-mismatched file —
+    /// worst case is untuned (default-blocking) kernels, never an
+    /// error on the compute path.
+    pub fn load(path: &Path) -> Tuner {
+        let mut t = Tuner::new(path);
+        let Ok(text) = std::fs::read_to_string(path) else {
+            return t;
+        };
+        let Ok(j) = Json::parse(&text) else {
+            return t;
+        };
+        if j.get("schema").and_then(|v| v.as_i64()) != Some(SCHEMA) {
+            return t;
+        }
+        let Some(entries) = j.get("entries").and_then(|v| v.as_obj()) else {
+            return t;
+        };
+        for (key, v) in entries {
+            let rc = v.get("row_chunk").and_then(|x| x.as_usize());
+            let nr = v.get("nr").and_then(|x| x.as_usize());
+            if let (Some(rc), Some(nr)) = (rc, nr) {
+                t.entries.insert(key.clone(), TuneCfg { row_chunk: rc, nr }.sanitized());
+            }
+        }
+        t
+    }
+
+    /// Persist as compact JSON with sorted keys (BTreeMap order —
+    /// byte-deterministic for a given entry set) through the
+    /// crash-safe temp+rename seam.
+    pub fn save(&self) -> std::io::Result<()> {
+        let mut entries = BTreeMap::new();
+        for (key, cfg) in &self.entries {
+            let mut e = BTreeMap::new();
+            e.insert("row_chunk".to_string(), Json::Num(cfg.row_chunk as f64));
+            e.insert("nr".to_string(), Json::Num(cfg.nr as f64));
+            entries.insert(key.clone(), Json::Obj(e));
+        }
+        let mut root = BTreeMap::new();
+        root.insert("schema".to_string(), Json::Num(SCHEMA as f64));
+        root.insert("entries".to_string(), Json::Obj(entries));
+        RealIo.write_atomic(&self.path, &Json::Obj(root).to_string_compact())
+    }
+
+    /// Where this cache loads from / saves to.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Number of tuned entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when no entry has been tuned or loaded.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The config for one GEMM call: the tuned winner for this
+    /// (tier, shape class, thread count) if present, else the default.
+    pub fn lookup(&self, tier: Tier, threads: usize, m: usize, k: usize, n: usize) -> TuneCfg {
+        if !self.enabled {
+            return TuneCfg::default();
+        }
+        self.entries.get(&cache_key(tier, threads, m, k, n)).copied().unwrap_or_default()
+    }
+
+    /// Record a winner for (tier, shape class, thread count).
+    pub fn record(&mut self, tier: Tier, threads: usize, m: usize, k: usize, n: usize, c: TuneCfg) {
+        self.entries.insert(cache_key(tier, threads, m, k, n), c.sanitized());
+    }
+
+    /// Time every candidate on a synthetic (m,k,n) problem (best of
+    /// `reps` after one warmup pass each) and record the winner for
+    /// this (tier, shape class, thread count). Which candidate wins
+    /// may vary with machine noise — fine, because all candidates
+    /// compute identical bits within the tier; only speed differs.
+    pub fn tune_gemm(
+        &mut self,
+        pool: &Pool,
+        arena: &mut Arena,
+        tier: Tier,
+        m: usize,
+        k: usize,
+        n: usize,
+        reps: usize,
+    ) -> TuneCfg {
+        if !self.enabled {
+            return TuneCfg::default();
+        }
+        let mut rng = crate::util::rng::Rng::new(0xA17);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.next_normal()).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.next_normal()).collect();
+        let mut c = vec![0f32; m * n];
+        let mut best = TuneCfg::default();
+        let mut best_t = f64::INFINITY;
+        for cfg in candidates() {
+            super::gemm::gemm_with(tier, cfg, pool, arena, &a, &b, &mut c, m, k, n, false);
+            let mut t_min = f64::INFINITY;
+            for _ in 0..reps.max(1) {
+                let t0 = Instant::now();
+                super::gemm::gemm_with(tier, cfg, pool, arena, &a, &b, &mut c, m, k, n, false);
+                t_min = t_min.min(t0.elapsed().as_secs_f64());
+            }
+            if t_min < best_t {
+                best_t = t_min;
+                best = cfg;
+            }
+        }
+        std::hint::black_box(&c);
+        self.record(tier, pool.threads(), m, k, n, best);
+        best
+    }
+}
+
+// --------------------------------------------- the process-global cache
+
+fn global() -> &'static Mutex<Tuner> {
+    static GLOBAL: OnceLock<Mutex<Tuner>> = OnceLock::new();
+    GLOBAL.get_or_init(|| {
+        let path = std::env::var("TRIACCEL_TUNE_CACHE")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("triaccel_tune.json"));
+        let mut t = Tuner::load(&path);
+        if std::env::var("TRIACCEL_NO_AUTOTUNE").map(|v| v != "0").unwrap_or(false) {
+            t.enabled = false;
+        }
+        Mutex::new(t)
+    })
+}
+
+/// Blocking config for one GEMM call, from the process-global cache
+/// (loaded once from `TRIACCEL_TUNE_CACHE`). Pure lookup — never
+/// times anything.
+pub fn lookup(tier: Tier, threads: usize, m: usize, k: usize, n: usize) -> TuneCfg {
+    global().lock().unwrap().lookup(tier, threads, m, k, n)
+}
+
+/// Enable/disable the process-global cache (the CLI `--no-autotune`).
+pub fn set_enabled(on: bool) {
+    global().lock().unwrap().enabled = on;
+}
+
+/// Is the process-global cache consulted at all?
+pub fn enabled() -> bool {
+    global().lock().unwrap().enabled
+}
+
+/// The process-global cache path (for operator-facing printouts).
+pub fn cache_path() -> PathBuf {
+    global().lock().unwrap().path.clone()
+}
+
+/// Tune (m,k,n) for `tier` on the process-global cache and persist
+/// the whole cache. A failed save is returned (not raised): the tuned
+/// config still applies in-process, and the cache is an optimization.
+pub fn tune_and_save(
+    pool: &Pool,
+    arena: &mut Arena,
+    tier: Tier,
+    m: usize,
+    k: usize,
+    n: usize,
+    reps: usize,
+) -> (TuneCfg, Option<std::io::Error>) {
+    let mut g = global().lock().unwrap();
+    let cfg = g.tune_gemm(pool, arena, tier, m, k, n, reps);
+    if !g.enabled {
+        return (cfg, None);
+    }
+    match g.save() {
+        Ok(()) => (cfg, None),
+        Err(e) => (cfg, Some(e)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_path(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("triaccel_tune_test_{tag}_{}.json", std::process::id()))
+    }
+
+    #[test]
+    fn sanitized_clamps_to_legal_configs() {
+        assert_eq!(TuneCfg::default().sanitized(), TuneCfg::default());
+        assert_eq!(TuneCfg { row_chunk: 0, nr: 0 }.sanitized(), TuneCfg { row_chunk: MR, nr: 8 });
+        assert_eq!(
+            TuneCfg { row_chunk: 33, nr: 16 }.sanitized(),
+            TuneCfg { row_chunk: 36, nr: 16 },
+            "row_chunk rounds up to a multiple of MR"
+        );
+        assert_eq!(TuneCfg { row_chunk: 1 << 20, nr: 12 }.sanitized().row_chunk, 4096);
+        for c in candidates() {
+            assert_eq!(c.sanitized(), c, "candidates must already be legal");
+        }
+    }
+
+    #[test]
+    fn cache_key_buckets_by_log2_tier_and_threads() {
+        let a = cache_key(Tier::Scalar, 4, 8192, 144, 32);
+        assert_eq!(a, "scalar/m13k8n5/t4");
+        // Same bucket for nearby shapes, different for tier/threads.
+        assert_eq!(cache_key(Tier::Scalar, 4, 8000, 130, 31), a);
+        assert_ne!(cache_key(Tier::Avx2, 4, 8192, 144, 32), a);
+        assert_ne!(cache_key(Tier::Scalar, 2, 8192, 144, 32), a);
+    }
+
+    #[test]
+    fn cache_roundtrips_through_disk() {
+        let p = temp_path("roundtrip");
+        let mut t = Tuner::new(&p);
+        assert!(t.is_empty());
+        t.record(Tier::Scalar, 2, 100, 50, 30, TuneCfg { row_chunk: 64, nr: 16 });
+        t.record(Tier::Avx2, 4, 8192, 144, 32, TuneCfg { row_chunk: 256, nr: 8 });
+        t.save().unwrap();
+        let back = Tuner::load(&p);
+        std::fs::remove_file(&p).ok();
+        assert_eq!(back.len(), 2);
+        assert_eq!(
+            back.lookup(Tier::Scalar, 2, 100, 50, 30),
+            TuneCfg { row_chunk: 64, nr: 16 },
+            "reloaded cache must select the identical config"
+        );
+        assert_eq!(back.lookup(Tier::Avx2, 4, 8192, 144, 32), TuneCfg { row_chunk: 256, nr: 8 });
+        // A shape outside the tuned classes falls back to the default.
+        assert_eq!(back.lookup(Tier::Scalar, 8, 7, 7, 7), TuneCfg::default());
+    }
+
+    #[test]
+    fn load_degrades_to_empty_on_bad_files() {
+        let p = temp_path("bad");
+        assert!(Tuner::load(&p).is_empty(), "missing file");
+        std::fs::write(&p, "not json at all").unwrap();
+        assert!(Tuner::load(&p).is_empty(), "malformed file");
+        let wrong = "{\"schema\":99,\"entries\":{\"x\":{\"row_chunk\":8,\"nr\":8}}}";
+        std::fs::write(&p, wrong).unwrap();
+        assert!(Tuner::load(&p).is_empty(), "unknown schema self-invalidates");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn disabled_tuner_always_returns_the_default() {
+        let p = temp_path("disabled");
+        let mut t = Tuner::new(&p);
+        t.record(Tier::Scalar, 1, 64, 64, 64, TuneCfg { row_chunk: 32, nr: 16 });
+        t.enabled = false;
+        assert_eq!(t.lookup(Tier::Scalar, 1, 64, 64, 64), TuneCfg::default());
+        let pool = Pool::new(1);
+        let mut arena = Arena::new();
+        assert_eq!(
+            t.tune_gemm(&pool, &mut arena, Tier::Scalar, 16, 8, 8, 1),
+            TuneCfg::default(),
+            "disabled tuner must not search"
+        );
+    }
+
+    #[test]
+    fn tune_gemm_records_a_candidate_for_the_shape_class() {
+        let p = temp_path("tune");
+        let mut t = Tuner::new(&p);
+        let pool = Pool::new(1);
+        let mut arena = Arena::new();
+        let best = t.tune_gemm(&pool, &mut arena, Tier::Scalar, 48, 16, 24, 1);
+        assert!(candidates().contains(&best), "winner comes from the search space");
+        assert_eq!(t.lookup(Tier::Scalar, 1, 48, 16, 24), best, "winner is recorded");
+        assert_eq!(t.lookup(Tier::Scalar, 1, 40, 12, 20), best, "same shape class hits");
+    }
+}

@@ -3,38 +3,47 @@
 //!
 //! Kernel structure (the FlashOptim-style restructuring the Tri-Accel
 //! wall-clock claims lean on):
-//! * `B` is packed into `NR`-wide column panels once per call, so the
-//!   micro-kernel streams both operands contiguously;
-//! * a 4×-unrolled register-tiled micro-kernel (`MR`×`NR`
-//!   accumulators live in registers across the whole K loop — the
-//!   seed's scalar kernels re-loaded/stored the output row once per
-//!   input channel, which was the dominant cost);
+//! * `B` is packed into `nr`-wide column panels once per call, so the
+//!   micro-kernel streams both operands contiguously; the backward
+//!   `A·Bᵀ` shape packs panels straight from the transposed storage
+//!   ([`pack_b_from_t`]) instead of materializing `Bᵀ` first;
+//! * the register-tiled micro-kernel lives in [`super::simd`]: an
+//!   `MR`×`nr` accumulator block held across the whole K loop, with
+//!   runtime-dispatched AVX2/FMA and NEON tiers over the
+//!   always-available scalar reference (true 1/2/3-row kernels for
+//!   MR tails — no wasted lanes);
+//! * the blocking parameters (`row_chunk` rows per parallel chunk,
+//!   `nr` panel width) come from the [`super::autotune`] cache per
+//!   (tier, shape class, thread count) — every candidate is
+//!   bit-identical within a tier, so tuning is pure scheduling;
 //! * for convolution, im2col itself plays the role of the A-panel pack
 //!   (rows are already contiguous K-major), with the fp16/bf16 qdq
 //!   round-trip fused into the pack instead of materializing a
 //!   quantized activation copy.
 //!
-//! Determinism contract (shared with [`super::pool`]): every output
-//! element accumulates in a fixed order — ascending k within a chunk,
-//! and cross-chunk reductions ([`gemm_at_b`]) combine partials in chunk
-//! index order on the caller thread. Chunk sizes are compile-time
-//! constants, never derived from the thread count, so results are
-//! bit-identical for any `TRIACCEL_THREADS`.
+//! Determinism contract (shared with [`super::pool`] and stated in
+//! full in `docs/DETERMINISM.md`): every output element accumulates in
+//! a fixed order — ascending k within a chunk (SIMD tiers vectorize
+//! across the `j` lanes, never across k, so the per-element k chain
+//! is preserved; FMA fuses each multiply-add's rounding, which makes
+//! bits a pure function of (inputs, tier)) — and cross-chunk
+//! reductions ([`gemm_at_b`]) combine partials in chunk index order on
+//! the caller thread. Chunk sizes come from the tuning config, never
+//! from the thread count, so results are bit-identical for any
+//! `TRIACCEL_THREADS` within a tier; `TRIACCEL_DISPATCH=scalar`
+//! reproduces the reference bits anywhere.
 
 #![allow(clippy::too_many_arguments)]
 
 use super::arena::Arena;
+use super::autotune::{self, TuneCfg};
 use super::pool::Pool;
 use super::qdq;
+use super::simd::{self, Tier, MR, NR_MAX};
 
-/// Micro-tile rows (the 4× unroll).
-const MR: usize = 4;
-/// Micro-tile columns: one cache-line half / two SSE registers per row.
-const NR: usize = 8;
-/// Output rows per parallel chunk — a fixed multiple of [`MR`], so
-/// chunk boundaries (and therefore bits) ignore the thread count.
-const ROW_CHUNK: usize = 128;
-/// Reduction rows per partial product in [`gemm_at_b`] (fixed).
+/// Reduction rows per partial product in [`gemm_at_b`] (fixed — not
+/// part of the autotune search space, because regrouping the partials
+/// would change bits).
 const RED_CHUNK: usize = 1024;
 /// Flop threshold below which spawning threads costs more than it buys.
 /// Compared against problem size only — identical for every thread
@@ -44,82 +53,88 @@ const PAR_MIN_FLOPS: usize = 1 << 20;
 const PAR_MIN_ELEMS: usize = 1 << 19;
 
 #[inline]
-fn panels_of(n: usize) -> usize {
-    n.div_ceil(NR)
+fn panels_of(n: usize, nr: usize) -> usize {
+    n.div_ceil(nr)
 }
 
-/// Pack `b` (k×n row-major) into `NR`-wide column panels, zero-padded
-/// to a multiple of `NR` columns: panel `p` stores `b[.., p*NR..]` as
-/// `k` rows of `NR` contiguous values.
-fn pack_b(b: &[f32], k: usize, n: usize, out: &mut [f32]) {
+/// Pack `b` (k×n row-major) into `nr`-wide column panels, zero-padded
+/// to a multiple of `nr` columns: panel `p` stores `b[.., p*nr..]` as
+/// `k` rows of `nr` contiguous values.
+fn pack_b(b: &[f32], k: usize, n: usize, nr: usize, out: &mut [f32]) {
     debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(out.len(), panels_of(n) * k * NR);
-    for p in 0..panels_of(n) {
-        let c0 = p * NR;
-        let cols = (n - c0).min(NR);
-        let dst = &mut out[p * k * NR..(p + 1) * k * NR];
+    debug_assert_eq!(out.len(), panels_of(n, nr) * k * nr);
+    for p in 0..panels_of(n, nr) {
+        let c0 = p * nr;
+        let cols = (n - c0).min(nr);
+        let dst = &mut out[p * k * nr..(p + 1) * k * nr];
         for kk in 0..k {
-            dst[kk * NR..kk * NR + cols].copy_from_slice(&b[kk * n + c0..kk * n + c0 + cols]);
-            dst[kk * NR + cols..(kk + 1) * NR].fill(0.0);
+            dst[kk * nr..kk * nr + cols].copy_from_slice(&b[kk * n + c0..kk * n + c0 + cols]);
+            dst[kk * nr + cols..(kk + 1) * nr].fill(0.0);
         }
     }
 }
 
-/// One MR×NR register tile: `acc[i][j] += Σ_k a[i][k] · bp[k*NR+j]`.
-/// Each output element accumulates in ascending-k order — the property
-/// the cross-thread bit-exactness contract relies on (vectorization
-/// across `j` never reorders the per-element k chain).
-#[inline]
-fn micro_kernel(a: [&[f32]; MR], bp: &[f32], k: usize, acc: &mut [[f32; NR]; MR]) {
-    for kk in 0..k {
-        let brow = &bp[kk * NR..kk * NR + NR];
-        let a0 = a[0][kk];
-        let a1 = a[1][kk];
-        let a2 = a[2][kk];
-        let a3 = a[3][kk];
-        for j in 0..NR {
-            let bv = brow[j];
-            acc[0][j] += a0 * bv;
-            acc[1][j] += a1 * bv;
-            acc[2][j] += a2 * bv;
-            acc[3][j] += a3 * bv;
+/// Pack `Bᵀ` storage (`bt`, n×k row-major — i.e. `B` is k×n) into the
+/// same `nr`-wide column panels [`pack_b`] produces, reading columns of
+/// `B` as contiguous rows of `bt`. Panel bytes are identical to
+/// `transpose(bt)` followed by [`pack_b`] (pinned by a test), but the
+/// full k×n transpose — formerly a serial copy on the caller thread
+/// before every backward `g · Wᵀ` GEMM — never materializes.
+fn pack_b_from_t(bt: &[f32], k: usize, n: usize, nr: usize, out: &mut [f32]) {
+    debug_assert_eq!(bt.len(), n * k);
+    debug_assert_eq!(out.len(), panels_of(n, nr) * k * nr);
+    for p in 0..panels_of(n, nr) {
+        let c0 = p * nr;
+        let cols = (n - c0).min(nr);
+        let dst = &mut out[p * k * nr..(p + 1) * k * nr];
+        for (j, col) in bt[c0 * k..].chunks_exact(k).take(cols).enumerate() {
+            for (kk, &v) in col.iter().enumerate() {
+                dst[kk * nr + j] = v;
+            }
+        }
+        for kk in 0..k {
+            dst[kk * nr + cols..(kk + 1) * nr].fill(0.0);
         }
     }
 }
 
 /// Macro-kernel over one row block of C (rows `row0..row0+rows` of the
-/// full problem, stored in `c_chunk`).
+/// full problem, stored in `c_chunk`), dispatching `tier`'s micro-tile.
 fn gemm_rows(
+    tier: Tier,
     a: &[f32],
     bp: &[f32],
     c_chunk: &mut [f32],
     row0: usize,
     k: usize,
     n: usize,
+    nr: usize,
     accumulate: bool,
 ) {
     let rows = c_chunk.len() / n;
-    let panels = panels_of(n);
+    let panels = panels_of(n, nr);
     let mut i = 0;
     while i < rows {
         let mr = (rows - i).min(MR);
-        // Row slices of A for this tile; tail rows alias row 0 (their
-        // lanes are computed but never stored).
+        // Row slices of A for this tile; tail entries clamp to the last
+        // live row and are never read — every kernel loops `r < mr`, so
+        // tails run true 1/2/3-row micro-kernels (the seed aliased
+        // row 0 and computed lanes it then threw away).
         let ar: [&[f32]; MR] = std::array::from_fn(|t| {
-            let rr = row0 + i + if t < mr { t } else { 0 };
+            let rr = row0 + i + t.min(mr - 1);
             &a[rr * k..rr * k + k]
         });
         for p in 0..panels {
-            let c0 = p * NR;
-            let cols = (n - c0).min(NR);
-            let mut acc = [[0f32; NR]; MR];
+            let c0 = p * nr;
+            let cols = (n - c0).min(nr);
+            let mut acc = [[0f32; NR_MAX]; MR];
             if accumulate {
                 for t in 0..mr {
                     let base = (i + t) * n + c0;
                     acc[t][..cols].copy_from_slice(&c_chunk[base..base + cols]);
                 }
             }
-            micro_kernel(ar, &bp[p * k * NR..(p + 1) * k * NR], k, &mut acc);
+            simd::tile(tier, &ar, mr, &bp[p * k * nr..(p + 1) * k * nr], k, nr, &mut acc);
             for t in 0..mr {
                 let base = (i + t) * n + c0;
                 c_chunk[base..base + cols].copy_from_slice(&acc[t][..cols]);
@@ -129,11 +144,55 @@ fn gemm_rows(
     }
 }
 
+/// Shared macro-kernel driver over a pre-packed B: parallel over fixed
+/// `cfg.row_chunk` row blocks (boundaries depend on the config only,
+/// never the thread count).
+fn gemm_packed(
+    tier: Tier,
+    cfg: TuneCfg,
+    pool: &Pool,
+    a: &[f32],
+    bp: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    accumulate: bool,
+) {
+    let parallel = 2 * m * k * n >= PAR_MIN_FLOPS;
+    pool.for_each_chunk(c, cfg.row_chunk * n, parallel, |ci, c_chunk| {
+        gemm_rows(tier, a, bp, c_chunk, ci * cfg.row_chunk, k, n, cfg.nr, accumulate);
+    });
+}
+
 /// `C (m×n) = A (m×k) · B (k×n)`, overwriting `c`; with `accumulate`
 /// the product is added onto the existing contents instead (per-element
 /// order: `c_init + a_0·b_0 + a_1·b_1 + …`, which is how the dense
-/// layer preloads its bias). Parallel over fixed [`ROW_CHUNK`] blocks.
+/// layer preloads its bias). Runs the active dispatch tier with the
+/// autotuned blocking for this (tier, shape class, thread count).
 pub fn gemm(
+    pool: &Pool,
+    arena: &mut Arena,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    accumulate: bool,
+) {
+    let tier = simd::active();
+    let cfg = autotune::lookup(tier, pool.threads(), m, k, n);
+    gemm_with(tier, cfg, pool, arena, a, b, c, m, k, n, accumulate);
+}
+
+/// [`gemm`] pinned to an explicit tier and blocking config — the
+/// entry point the tuner times and the cross-tier property tests
+/// drive. `cfg` is sanitized; any legal config produces identical
+/// bits within a tier.
+pub fn gemm_with(
+    tier: Tier,
+    cfg: TuneCfg,
     pool: &Pool,
     arena: &mut Arena,
     a: &[f32],
@@ -156,12 +215,10 @@ pub fn gemm(
         }
         return;
     }
-    let mut bp = arena.take(panels_of(n) * k * NR);
-    pack_b(b, k, n, &mut bp);
-    let parallel = 2 * m * k * n >= PAR_MIN_FLOPS;
-    pool.for_each_chunk(c, ROW_CHUNK * n, parallel, |ci, c_chunk| {
-        gemm_rows(a, &bp, c_chunk, ci * ROW_CHUNK, k, n, accumulate);
-    });
+    let cfg = cfg.sanitized();
+    let mut bp = arena.take(panels_of(n, cfg.nr) * k * cfg.nr);
+    pack_b(b, k, n, cfg.nr, &mut bp);
+    gemm_packed(tier, cfg, pool, a, &bp, c, m, k, n, accumulate);
     arena.put(bp);
 }
 
@@ -177,9 +234,10 @@ pub fn transpose(m: &[f32], rows: usize, cols: usize, out: &mut [f32]) {
 }
 
 /// `C (m×n) = A (m×k) · Bᵀ` with `B` stored (n×k) — the `g · Wᵀ`
-/// backward shape. Implemented as a one-shot transpose into arena
-/// scratch followed by [`gemm`], keeping the packed fast path and the
-/// deterministic row partition.
+/// backward shape. Packs panels directly from the transposed storage
+/// ([`pack_b_from_t`]), so no k×n transpose copy runs on the caller
+/// thread; bits are pinned identical to the old transpose-then-[`gemm`]
+/// path (the packed panels are byte-identical).
 pub fn gemm_a_bt(
     pool: &Pool,
     arena: &mut Arena,
@@ -191,23 +249,71 @@ pub fn gemm_a_bt(
     n: usize,
     accumulate: bool,
 ) {
+    let tier = simd::active();
+    let cfg = autotune::lookup(tier, pool.threads(), m, k, n);
+    gemm_a_bt_with(tier, cfg, pool, arena, a, b, c, m, k, n, accumulate);
+}
+
+/// [`gemm_a_bt`] pinned to an explicit tier and blocking config.
+pub fn gemm_a_bt_with(
+    tier: Tier,
+    cfg: TuneCfg,
+    pool: &Pool,
+    arena: &mut Arena,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    accumulate: bool,
+) {
+    debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
-    let mut bt = arena.take(k * n);
-    transpose(b, n, k, &mut bt);
-    gemm(pool, arena, a, &bt, c, m, k, n, accumulate);
-    arena.put(bt);
+    debug_assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        if !accumulate {
+            c.fill(0.0);
+        }
+        return;
+    }
+    let cfg = cfg.sanitized();
+    let mut bp = arena.take(panels_of(n, cfg.nr) * k * cfg.nr);
+    pack_b_from_t(b, k, n, cfg.nr, &mut bp);
+    gemm_packed(tier, cfg, pool, a, &bp, c, m, k, n, accumulate);
+    arena.put(bp);
 }
 
 /// `C (ka×n) = Aᵀ · B` with `A` (m×ka) and `B` (m×n) — the
 /// `x_colsᵀ · g` weight-gradient shape, a reduction over the m
-/// (row/pixel) dimension.
+/// (row/pixel) dimension. Runs the active dispatch tier.
+pub fn gemm_at_b(
+    pool: &Pool,
+    arena: &mut Arena,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    ka: usize,
+    n: usize,
+) {
+    gemm_at_b_with(simd::active(), pool, arena, a, b, c, m, ka, n);
+}
+
+/// [`gemm_at_b`] pinned to an explicit tier.
 ///
 /// Parallel scheme: fixed [`RED_CHUNK`]-row partial products computed
-/// independently (rank-1 updates in ascending m order within a chunk),
-/// then an *ordered* reduction in chunk-index order on the caller
-/// thread. The partial/reduce structure is used even serially, so one
-/// thread and eight threads produce the same bits.
-pub fn gemm_at_b(
+/// independently (rank-1 [`simd::axpy`] updates in ascending m order
+/// within a chunk — lanes are independent output columns, each
+/// keeping its ascending-m chain), then an *ordered* reduction in
+/// chunk-index order on the caller thread. The partial/reduce
+/// structure is used even serially, so one thread and eight threads
+/// produce the same bits.
+pub fn gemm_at_b_with(
+    tier: Tier,
     pool: &Pool,
     arena: &mut Arena,
     a: &[f32],
@@ -234,10 +340,7 @@ pub fn gemm_at_b(
             let arow = &a[mm * ka..(mm + 1) * ka];
             let brow = &b[mm * n..(mm + 1) * n];
             for (i, &av) in arow.iter().enumerate() {
-                let prow = &mut part[i * n..(i + 1) * n];
-                for (pv, &bv) in prow.iter_mut().zip(brow) {
-                    *pv += av * bv;
-                }
+                simd::axpy(tier, &mut part[i * n..(i + 1) * n], brow, av);
             }
         }
     });
@@ -424,11 +527,25 @@ mod tests {
         }
     }
 
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
     #[test]
     fn gemm_matches_naive_over_odd_shapes() {
         let mut rng = Rng::new(11);
-        let shapes =
-            [(1usize, 1usize, 1usize), (5, 3, 9), (17, 27, 16), (130, 144, 33), (64, 288, 100)];
+        // m covers every MR tail (1, 2, 3 leftover rows) and n crosses
+        // both panel widths raggedly.
+        let shapes = [
+            (1usize, 1usize, 1usize),
+            (2, 5, 3),
+            (3, 4, 17),
+            (5, 3, 9),
+            (6, 9, 5),
+            (17, 27, 16),
+            (130, 144, 33),
+            (64, 288, 100),
+        ];
         for &(m, k, n) in &shapes {
             let a = randv(&mut rng, m * k);
             let b = randv(&mut rng, k * n);
@@ -464,21 +581,47 @@ mod tests {
     }
 
     #[test]
-    fn gemm_bits_identical_across_thread_counts() {
+    fn gemm_bits_identical_across_thread_counts_in_every_tier() {
         let mut rng = Rng::new(13);
         let (m, k, n) = (400usize, 96usize, 40usize); // crosses the parallel threshold
         let a = randv(&mut rng, m * k);
         let b = randv(&mut rng, k * n);
-        let run = |threads: usize| {
-            let pool = Pool::new(threads);
-            let mut arena = Arena::new();
-            let mut c = vec![0f32; m * n];
-            gemm(&pool, &mut arena, &a, &b, &mut c, m, k, n, false);
-            c.iter().map(|v| v.to_bits()).collect::<Vec<u32>>()
-        };
-        let base = run(1);
-        for t in [2usize, 4, 8] {
-            assert_eq!(run(t), base, "threads={t}");
+        for tier in simd::available_tiers() {
+            let run = |threads: usize| {
+                let pool = Pool::new(threads);
+                let mut arena = Arena::new();
+                let mut c = vec![0f32; m * n];
+                let cfg = TuneCfg::default();
+                gemm_with(tier, cfg, &pool, &mut arena, &a, &b, &mut c, m, k, n, false);
+                bits(&c)
+            };
+            let base = run(1);
+            for t in [2usize, 4, 8] {
+                assert_eq!(run(t), base, "tier={tier} threads={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn blocking_configs_are_bit_invariant_within_a_tier() {
+        // The property that makes autotuning safe: every candidate
+        // blocking produces identical bits, per tier.
+        let mut rng = Rng::new(21);
+        let (m, k, n) = (70usize, 33usize, 25usize); // ragged in every dim
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        for tier in simd::available_tiers() {
+            let run = |cfg: TuneCfg| {
+                let pool = Pool::new(2);
+                let mut arena = Arena::new();
+                let mut c = vec![0f32; m * n];
+                gemm_with(tier, cfg, &pool, &mut arena, &a, &b, &mut c, m, k, n, false);
+                bits(&c)
+            };
+            let base = run(TuneCfg::default());
+            for cfg in autotune::candidates() {
+                assert_eq!(run(cfg), base, "tier={tier} cfg={cfg:?}");
+            }
         }
     }
 
@@ -509,11 +652,7 @@ mod tests {
         close(&c1, &wantf, 1e-3, "at_b");
         for t in [2usize, 4] {
             let ct = run(t);
-            assert_eq!(
-                c1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
-                ct.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
-                "threads={t}"
-            );
+            assert_eq!(bits(&c1), bits(&ct), "threads={t}");
         }
     }
 
@@ -538,6 +677,48 @@ mod tests {
             }
         }
         close(&c, &want, 1e-4, "a_bt");
+    }
+
+    #[test]
+    fn a_bt_direct_pack_matches_transpose_then_gemm_bitwise() {
+        // The pack_b_from_t bugfix pin: the direct-pack path must
+        // reproduce the old transpose-then-gemm path bit-for-bit, in
+        // every tier and panel width.
+        let mut rng = Rng::new(22);
+        let (m, k, n) = (29usize, 14usize, 19usize);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, n * k); // stored n×k
+        for tier in simd::available_tiers() {
+            for nr in [8usize, 16] {
+                let cfg = TuneCfg { row_chunk: 64, nr };
+                let pool = Pool::new(2);
+                let mut arena = Arena::new();
+                let mut direct = vec![0f32; m * n];
+                gemm_a_bt_with(tier, cfg, &pool, &mut arena, &a, &b, &mut direct, m, k, n, false);
+                let mut bt = vec![0f32; k * n];
+                transpose(&b, n, k, &mut bt);
+                let mut two_step = vec![0f32; m * n];
+                gemm_with(tier, cfg, &pool, &mut arena, &a, &bt, &mut two_step, m, k, n, false);
+                assert_eq!(bits(&direct), bits(&two_step), "tier={tier} nr={nr}");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_from_t_matches_transpose_then_pack() {
+        let mut rng = Rng::new(23);
+        let (k, n) = (7usize, 21usize); // ragged for both panel widths
+        let bt = randv(&mut rng, n * k);
+        let mut b = vec![0f32; k * n];
+        transpose(&bt, n, k, &mut b);
+        for nr in [8usize, 16] {
+            let len = panels_of(n, nr) * k * nr;
+            let mut via_t = vec![1f32; len]; // nonzero: fills must overwrite
+            let mut via_b = vec![2f32; len];
+            pack_b_from_t(&bt, k, n, nr, &mut via_t);
+            pack_b(&b, k, n, nr, &mut via_b);
+            assert_eq!(bits(&via_t), bits(&via_b), "nr={nr}");
+        }
     }
 
     #[test]
@@ -635,10 +816,7 @@ mod tests {
         let mut db = vec![0f32; x.len()];
         col2im3x3(&pool, &y, n, h, w, cin, &mut da);
         col2im(&pool, &y, n, h, w, cin, 3, 1, &mut db);
-        assert_eq!(
-            da.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
-            db.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
-        );
+        assert_eq!(bits(&da), bits(&db));
     }
 
     #[test]

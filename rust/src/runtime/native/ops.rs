@@ -28,6 +28,7 @@
 use std::cell::RefCell;
 
 use super::gemm;
+use super::simd;
 use super::Exec;
 use crate::manifest::FP32;
 
@@ -172,6 +173,7 @@ pub fn dwconv_fwd_into(
     debug_assert_eq!(wt.len(), k * k * c);
     debug_assert_eq!(out.len(), n * ho * wo * c);
     let parallel = out.len() * k * k >= 1 << 19;
+    let tier = simd::active();
     pool.for_each_chunk(out, ho * wo * c, parallel, |bi, img| {
         for oy in 0..ho {
             for ox in 0..wo {
@@ -190,9 +192,7 @@ pub fn dwconv_fwd_into(
                         let xrow =
                             &x[((bi * h + iy as usize) * w + ix as usize) * c..][..c];
                         let wrow = &wt[(ky * k + kx) * c..(ky * k + kx + 1) * c];
-                        for ((o, &xv), &wv) in orow.iter_mut().zip(xrow).zip(wrow) {
-                            *o += xv * wv;
-                        }
+                        simd::mul_acc(tier, orow, xrow, wrow);
                     }
                 }
             }
@@ -220,6 +220,7 @@ pub fn dwconv_dw_into(
     debug_assert_eq!(g.len(), n * ho * wo * c);
     debug_assert_eq!(dw.len(), k * k * c);
     dw.fill(0.0);
+    let tier = simd::active();
     for bi in 0..n {
         for oy in 0..ho {
             for ox in 0..wo {
@@ -237,9 +238,7 @@ pub fn dwconv_dw_into(
                         let xrow =
                             &x[((bi * h + iy as usize) * w + ix as usize) * c..][..c];
                         let drow = &mut dw[(ky * k + kx) * c..(ky * k + kx + 1) * c];
-                        for ((d, &xv), &gv) in drow.iter_mut().zip(xrow).zip(grow) {
-                            *d += xv * gv;
-                        }
+                        simd::mul_acc(tier, drow, xrow, grow);
                     }
                 }
             }
@@ -268,6 +267,7 @@ pub fn dwconv_dx_into(
     debug_assert_eq!(g.len(), n * ho * wo * c);
     debug_assert_eq!(dx.len(), n * h * w * c);
     let parallel = dx.len() * k * k >= 1 << 19;
+    let tier = simd::active();
     pool.for_each_chunk(dx, h * w * c, parallel, |bi, img| {
         for iy in 0..h {
             for ix in 0..w {
@@ -293,9 +293,7 @@ pub fn dwconv_dx_into(
                         }
                         let grow = &g[((bi * ho + oy) * wo + ox) * c..][..c];
                         let wrow = &wt[(ky * k + kx) * c..(ky * k + kx + 1) * c];
-                        for ((d, &gv), &wv) in drow.iter_mut().zip(grow).zip(wrow) {
-                            *d += gv * wv;
-                        }
+                        simd::mul_acc(tier, drow, grow, wrow);
                     }
                 }
             }

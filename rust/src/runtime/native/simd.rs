@@ -1,0 +1,750 @@
+//! Runtime-dispatched SIMD micro-kernels for the GEMM core.
+//!
+//! Three dispatch **tiers**, selected once per process:
+//! * `scalar` — the always-available reference tier: plain mul+add
+//!   (two roundings per update), bit-identical to the seed kernel;
+//! * `avx2` — x86-64 AVX2+FMA (8-wide f32, fused mul+add), taken only
+//!   when `is_x86_feature_detected!` confirms both features;
+//! * `neon` — aarch64 NEON (4-wide f32, fused mul+add), mandatory on
+//!   aarch64 so no runtime detection is needed.
+//!
+//! `TRIACCEL_DISPATCH=scalar|avx2|neon` forces a tier (an unavailable
+//! or unknown value falls back to `scalar` — forcing the reference
+//! tier must work on every machine); unset, the best available tier
+//! wins.
+//!
+//! Numeric contract (docs/DETERMINISM.md "Dispatch tiers"): every tier
+//! keeps each output element's k-chain in ascending-k order —
+//! vectorization is across the independent `j` output columns, never
+//! across `k` — so within a tier, results are bit-identical for every
+//! thread count and every [`super::autotune::TuneCfg`] blocking. The
+//! SIMD tiers fuse mul+add (one rounding instead of two), so their
+//! bits differ from `scalar` by rounding only: bits are a pure
+//! function of (inputs, tier).
+
+#![allow(clippy::needless_range_loop)]
+
+use std::fmt;
+use std::sync::OnceLock;
+
+/// Micro-tile rows (the register-tile unroll shared by every tier).
+pub const MR: usize = 4;
+/// Widest supported micro-tile column count. Panels are packed at the
+/// active config's `nr` (8 or 16); accumulator tiles are sized for the
+/// widest so one buffer type fits every tier and config.
+pub const NR_MAX: usize = 16;
+
+/// A dispatch tier — which micro-kernel family executes GEMM tiles.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Tier {
+    /// Reference mul+add kernel; available everywhere.
+    Scalar,
+    /// x86-64 AVX2 + FMA (8 f32 lanes, fused mul+add).
+    Avx2,
+    /// aarch64 NEON (4 f32 lanes, fused mul+add).
+    Neon,
+}
+
+impl Tier {
+    /// Stable lower-case name (cache keys, bench rows, env parsing).
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Scalar => "scalar",
+            Tier::Avx2 => "avx2",
+            Tier::Neon => "neon",
+        }
+    }
+
+    /// Inverse of [`Tier::name`]; `None` for unknown spellings.
+    pub fn parse(s: &str) -> Option<Tier> {
+        match s {
+            "scalar" => Some(Tier::Scalar),
+            "avx2" => Some(Tier::Avx2),
+            "neon" => Some(Tier::Neon),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Tier {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Does this CPU execute the avx2 tier? (Both AVX2 and FMA are
+/// required; the detection macro caches in an atomic, so re-checking
+/// at dispatch sites is cheap.)
+fn avx2_ok() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Every tier this machine can execute, worst-first (so `.last()` is
+/// the best). Always starts with [`Tier::Scalar`].
+pub fn available_tiers() -> Vec<Tier> {
+    let mut tiers = vec![Tier::Scalar];
+    if avx2_ok() {
+        tiers.push(Tier::Avx2);
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        tiers.push(Tier::Neon);
+    }
+    tiers
+}
+
+static ACTIVE: OnceLock<Tier> = OnceLock::new();
+
+/// The process-wide dispatch tier: `TRIACCEL_DISPATCH` if it names an
+/// available tier, `scalar` if it names anything else, and the best
+/// available tier when unset. Resolved once and latched, so a run
+/// never mixes tiers.
+pub fn active() -> Tier {
+    *ACTIVE.get_or_init(|| {
+        let avail = available_tiers();
+        match std::env::var("TRIACCEL_DISPATCH") {
+            Ok(s) => match Tier::parse(s.trim()) {
+                Some(t) if avail.contains(&t) => t,
+                // Unknown or unavailable: the reference tier, never an
+                // error — forcing `scalar` must work on every machine,
+                // and a typo degrading to slow-but-correct beats a
+                // crash mid-grid.
+                _ => Tier::Scalar,
+            },
+            Err(_) => *avail.last().unwrap_or(&Tier::Scalar),
+        }
+    })
+}
+
+// ---------------------------------------------------------------- tile
+
+/// One `mr`×`nr` register tile against a packed panel:
+/// `acc[r][j] += Σ_kk a[r][kk] · bp[kk*nr + j]` for `r < mr`,
+/// `j < nr`. Lanes `nr..NR_MAX` of `acc` and rows `mr..MR` of `a` are
+/// never touched (true 1/2/3-row tail kernels — the seed computed
+/// wasted lanes for tail rows and discarded them). Safe wrapper: the
+/// SIMD paths re-verify CPU features (a cached atomic) before entering
+/// `unsafe` kernels, falling back to scalar otherwise.
+pub fn tile(
+    tier: Tier,
+    a: &[&[f32]; MR],
+    mr: usize,
+    bp: &[f32],
+    k: usize,
+    nr: usize,
+    acc: &mut [[f32; NR_MAX]; MR],
+) {
+    debug_assert!((1..=MR).contains(&mr));
+    debug_assert!(nr == 8 || nr == NR_MAX);
+    debug_assert!(bp.len() >= k * nr);
+    match tier {
+        Tier::Scalar => scalar_tile(a, mr, bp, k, nr, acc),
+        Tier::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                if avx2_ok() {
+                    // SAFETY: avx2+fma presence re-verified just above
+                    // (cached atomic), satisfying the kernels'
+                    // `#[target_feature]` contract; every load/store
+                    // stays inside the length-asserted slices.
+                    unsafe {
+                        if nr == NR_MAX {
+                            avx2_tile16(a, mr, bp, k, acc);
+                        } else {
+                            avx2_tile8(a, mr, bp, k, acc);
+                        }
+                    }
+                    return;
+                }
+            }
+            scalar_tile(a, mr, bp, k, nr, acc);
+        }
+        Tier::Neon => {
+            #[cfg(target_arch = "aarch64")]
+            {
+                // SAFETY: NEON is a mandatory aarch64 feature, so the
+                // kernels' `#[target_feature(enable = "neon")]`
+                // contract holds on every aarch64 CPU; every
+                // load/store stays inside the length-asserted slices.
+                unsafe {
+                    if nr == NR_MAX {
+                        neon_tile16(a, mr, bp, k, acc);
+                    } else {
+                        neon_tile8(a, mr, bp, k, acc);
+                    }
+                }
+                return;
+            }
+            #[allow(unreachable_code)]
+            scalar_tile(a, mr, bp, k, nr, acc);
+        }
+    }
+}
+
+/// Reference tile, monomorphized per (rows, width) so tails dispatch
+/// to true 1/2/3-row kernels and the compiler sees fixed trip counts.
+fn scalar_tile(
+    a: &[&[f32]; MR],
+    mr: usize,
+    bp: &[f32],
+    k: usize,
+    nr: usize,
+    acc: &mut [[f32; NR_MAX]; MR],
+) {
+    match (nr, mr) {
+        (8, 1) => scalar_rows::<1, 8>(a, bp, k, acc),
+        (8, 2) => scalar_rows::<2, 8>(a, bp, k, acc),
+        (8, 3) => scalar_rows::<3, 8>(a, bp, k, acc),
+        (8, _) => scalar_rows::<4, 8>(a, bp, k, acc),
+        (_, 1) => scalar_rows::<1, 16>(a, bp, k, acc),
+        (_, 2) => scalar_rows::<2, 16>(a, bp, k, acc),
+        (_, 3) => scalar_rows::<3, 16>(a, bp, k, acc),
+        _ => scalar_rows::<4, 16>(a, bp, k, acc),
+    }
+}
+
+/// The scalar R×W tile: plain mul+add (two roundings per update) in
+/// ascending-k order per element — bit-identical to the seed kernel
+/// for every R, since the seed's wasted tail lanes were never stored.
+#[inline]
+fn scalar_rows<const R: usize, const W: usize>(
+    a: &[&[f32]; MR],
+    bp: &[f32],
+    k: usize,
+    acc: &mut [[f32; NR_MAX]; MR],
+) {
+    for kk in 0..k {
+        let brow = &bp[kk * W..kk * W + W];
+        for r in 0..R {
+            let av = a[r][kk];
+            let row = &mut acc[r];
+            for j in 0..W {
+                row[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+// SAFETY: caller guarantees avx2+fma are present (runtime-detected in
+// `tile`); `bp` holds ≥ k rows of 8 packed floats, `a[r]` rows hold
+// ≥ k values, and `acc` rows are NR_MAX ≥ 8 wide, so every unaligned
+// load/store below is in bounds.
+unsafe fn avx2_tile8(
+    a: &[&[f32]; MR],
+    mr: usize,
+    bp: &[f32],
+    k: usize,
+    acc: &mut [[f32; NR_MAX]; MR],
+) {
+    use std::arch::x86_64::*;
+    debug_assert!(bp.len() >= k * 8);
+    let mut va = [_mm256_setzero_ps(); MR];
+    for r in 0..mr {
+        va[r] = _mm256_loadu_ps(acc[r].as_ptr());
+    }
+    for kk in 0..k {
+        let vb = _mm256_loadu_ps(bp.as_ptr().add(kk * 8));
+        for r in 0..mr {
+            // detlint: ordered — per-element k-chain stays ascending-k;
+            // lanes are the 8 independent j columns of this panel. The
+            // FMA fuses mul+add into one rounding, the avx2 tier's
+            // pinned numeric contract (bits = f(inputs, tier)).
+            va[r] = _mm256_fmadd_ps(_mm256_set1_ps(a[r][kk]), vb, va[r]);
+        }
+    }
+    for r in 0..mr {
+        _mm256_storeu_ps(acc[r].as_mut_ptr(), va[r]);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+// SAFETY: caller guarantees avx2+fma are present (runtime-detected in
+// `tile`); `bp` holds ≥ k rows of 16 packed floats, `a[r]` rows hold
+// ≥ k values, and `acc` rows are exactly NR_MAX = 16 wide, so every
+// unaligned load/store below is in bounds.
+unsafe fn avx2_tile16(
+    a: &[&[f32]; MR],
+    mr: usize,
+    bp: &[f32],
+    k: usize,
+    acc: &mut [[f32; NR_MAX]; MR],
+) {
+    use std::arch::x86_64::*;
+    debug_assert!(bp.len() >= k * 16);
+    let mut lo = [_mm256_setzero_ps(); MR];
+    let mut hi = [_mm256_setzero_ps(); MR];
+    for r in 0..mr {
+        lo[r] = _mm256_loadu_ps(acc[r].as_ptr());
+        hi[r] = _mm256_loadu_ps(acc[r].as_ptr().add(8));
+    }
+    for kk in 0..k {
+        let b0 = _mm256_loadu_ps(bp.as_ptr().add(kk * 16));
+        let b1 = _mm256_loadu_ps(bp.as_ptr().add(kk * 16 + 8));
+        for r in 0..mr {
+            let av = _mm256_set1_ps(a[r][kk]);
+            // detlint: ordered — ascending-k chain; lanes are the
+            // independent j columns 0..8 of this panel (fused, the
+            // avx2 tier contract).
+            lo[r] = _mm256_fmadd_ps(av, b0, lo[r]);
+            // detlint: ordered — ascending-k chain; lanes are the
+            // independent j columns 8..16 of this panel (fused, the
+            // avx2 tier contract).
+            hi[r] = _mm256_fmadd_ps(av, b1, hi[r]);
+        }
+    }
+    for r in 0..mr {
+        _mm256_storeu_ps(acc[r].as_mut_ptr(), lo[r]);
+        _mm256_storeu_ps(acc[r].as_mut_ptr().add(8), hi[r]);
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+// SAFETY: NEON is mandatory on aarch64 (the caller dispatches this
+// under cfg(target_arch = "aarch64") only); `bp` holds ≥ k rows of 8
+// packed floats, `a[r]` rows hold ≥ k values, and `acc` rows are
+// NR_MAX ≥ 8 wide, so every load/store below is in bounds.
+unsafe fn neon_tile8(
+    a: &[&[f32]; MR],
+    mr: usize,
+    bp: &[f32],
+    k: usize,
+    acc: &mut [[f32; NR_MAX]; MR],
+) {
+    use std::arch::aarch64::*;
+    debug_assert!(bp.len() >= k * 8);
+    let mut v0 = [vdupq_n_f32(0.0); MR];
+    let mut v1 = [vdupq_n_f32(0.0); MR];
+    for r in 0..mr {
+        v0[r] = vld1q_f32(acc[r].as_ptr());
+        v1[r] = vld1q_f32(acc[r].as_ptr().add(4));
+    }
+    for kk in 0..k {
+        let b0 = vld1q_f32(bp.as_ptr().add(kk * 8));
+        let b1 = vld1q_f32(bp.as_ptr().add(kk * 8 + 4));
+        for r in 0..mr {
+            let av = vdupq_n_f32(a[r][kk]);
+            // detlint: ordered — ascending-k chain; lanes are the
+            // independent j columns 0..4 of this panel (fused, the
+            // neon tier contract).
+            v0[r] = vfmaq_f32(v0[r], av, b0);
+            // detlint: ordered — ascending-k chain; lanes are the
+            // independent j columns 4..8 of this panel (fused, the
+            // neon tier contract).
+            v1[r] = vfmaq_f32(v1[r], av, b1);
+        }
+    }
+    for r in 0..mr {
+        vst1q_f32(acc[r].as_mut_ptr(), v0[r]);
+        vst1q_f32(acc[r].as_mut_ptr().add(4), v1[r]);
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+// SAFETY: NEON is mandatory on aarch64 (the caller dispatches this
+// under cfg(target_arch = "aarch64") only); `bp` holds ≥ k rows of 16
+// packed floats, `a[r]` rows hold ≥ k values, and `acc` rows are
+// exactly NR_MAX = 16 wide, so every load/store below is in bounds.
+unsafe fn neon_tile16(
+    a: &[&[f32]; MR],
+    mr: usize,
+    bp: &[f32],
+    k: usize,
+    acc: &mut [[f32; NR_MAX]; MR],
+) {
+    use std::arch::aarch64::*;
+    debug_assert!(bp.len() >= k * 16);
+    let mut v = [[vdupq_n_f32(0.0); 4]; MR];
+    for r in 0..mr {
+        for q in 0..4 {
+            v[r][q] = vld1q_f32(acc[r].as_ptr().add(4 * q));
+        }
+    }
+    for kk in 0..k {
+        let base = bp.as_ptr().add(kk * 16);
+        let mut bv = [vdupq_n_f32(0.0); 4];
+        for q in 0..4 {
+            bv[q] = vld1q_f32(base.add(4 * q));
+        }
+        for r in 0..mr {
+            let av = vdupq_n_f32(a[r][kk]);
+            for q in 0..4 {
+                // detlint: ordered — ascending-k chain; lanes are the
+                // independent j columns 4q..4q+4 of this panel (fused,
+                // the neon tier contract).
+                v[r][q] = vfmaq_f32(v[r][q], av, bv[q]);
+            }
+        }
+    }
+    for r in 0..mr {
+        for q in 0..4 {
+            vst1q_f32(acc[r].as_mut_ptr().add(4 * q), v[r][q]);
+        }
+    }
+}
+
+// ------------------------------------------------- elementwise helpers
+
+/// `acc[j] += s · x[j]` over `j < min(lengths)` — the rank-1 row
+/// update of `gemm_at_b`. j-parallel: each `acc[j]` takes exactly one
+/// update per call, so no reduction order is created here; the
+/// ascending-m chain order is owned by the caller's loop.
+pub fn axpy(tier: Tier, acc: &mut [f32], x: &[f32], s: f32) {
+    match tier {
+        Tier::Scalar => scalar_axpy(acc, x, s),
+        Tier::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                if avx2_ok() {
+                    // SAFETY: avx2+fma presence re-verified just above
+                    // (cached atomic); the kernel bounds every access
+                    // by min(acc.len(), x.len()).
+                    unsafe {
+                        avx2_axpy(acc, x, s);
+                    }
+                    return;
+                }
+            }
+            scalar_axpy(acc, x, s);
+        }
+        Tier::Neon => {
+            #[cfg(target_arch = "aarch64")]
+            {
+                // SAFETY: NEON is mandatory on aarch64; the kernel
+                // bounds every access by min(acc.len(), x.len()).
+                unsafe {
+                    neon_axpy(acc, x, s);
+                }
+                return;
+            }
+            #[allow(unreachable_code)]
+            scalar_axpy(acc, x, s);
+        }
+    }
+}
+
+/// `acc[j] += x[j] · w[j]` over `j < min(lengths)` — the per-channel
+/// tap update of the depthwise convolutions. j-parallel like [`axpy`]:
+/// the ascending-tap chain order is owned by the caller's loop.
+pub fn mul_acc(tier: Tier, acc: &mut [f32], x: &[f32], w: &[f32]) {
+    match tier {
+        Tier::Scalar => scalar_mul_acc(acc, x, w),
+        Tier::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                if avx2_ok() {
+                    // SAFETY: avx2+fma presence re-verified just above
+                    // (cached atomic); the kernel bounds every access
+                    // by the minimum of the three slice lengths.
+                    unsafe {
+                        avx2_mul_acc(acc, x, w);
+                    }
+                    return;
+                }
+            }
+            scalar_mul_acc(acc, x, w);
+        }
+        Tier::Neon => {
+            #[cfg(target_arch = "aarch64")]
+            {
+                // SAFETY: NEON is mandatory on aarch64; the kernel
+                // bounds every access by the minimum of the three
+                // slice lengths.
+                unsafe {
+                    neon_mul_acc(acc, x, w);
+                }
+                return;
+            }
+            #[allow(unreachable_code)]
+            scalar_mul_acc(acc, x, w);
+        }
+    }
+}
+
+fn scalar_axpy(acc: &mut [f32], x: &[f32], s: f32) {
+    for (av, &xv) in acc.iter_mut().zip(x) {
+        *av += s * xv;
+    }
+}
+
+fn scalar_mul_acc(acc: &mut [f32], x: &[f32], w: &[f32]) {
+    for ((av, &xv), &wv) in acc.iter_mut().zip(x).zip(w) {
+        *av += xv * wv;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+// SAFETY: caller guarantees avx2+fma are present; every load/store is
+// bounded by n = min(acc.len(), x.len()) — the vector loop covers
+// whole 8-lane groups below n, the scalar tail covers the rest.
+unsafe fn avx2_axpy(acc: &mut [f32], x: &[f32], s: f32) {
+    use std::arch::x86_64::*;
+    let n = acc.len().min(x.len());
+    let vs = _mm256_set1_ps(s);
+    let mut j = 0usize;
+    while j + 8 <= n {
+        let va = _mm256_loadu_ps(acc.as_ptr().add(j));
+        let vx = _mm256_loadu_ps(x.as_ptr().add(j));
+        // detlint: ordered — j-parallel FMA over 8 distinct output
+        // elements (one fused update each); the lane split at the
+        // largest multiple of 8 ≤ n depends on lengths only, so it is
+        // identical for every thread count.
+        _mm256_storeu_ps(acc.as_mut_ptr().add(j), _mm256_fmadd_ps(vs, vx, va));
+        j += 8;
+    }
+    while j < n {
+        acc[j] += s * x[j];
+        j += 1;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+// SAFETY: caller guarantees avx2+fma are present; every load/store is
+// bounded by n = min of the three slice lengths — the vector loop
+// covers whole 8-lane groups below n, the scalar tail the rest.
+unsafe fn avx2_mul_acc(acc: &mut [f32], x: &[f32], w: &[f32]) {
+    use std::arch::x86_64::*;
+    let n = acc.len().min(x.len()).min(w.len());
+    let mut j = 0usize;
+    while j + 8 <= n {
+        let va = _mm256_loadu_ps(acc.as_ptr().add(j));
+        let vx = _mm256_loadu_ps(x.as_ptr().add(j));
+        let vw = _mm256_loadu_ps(w.as_ptr().add(j));
+        // detlint: ordered — j-parallel FMA over 8 distinct output
+        // elements (one fused update each); the lane split at the
+        // largest multiple of 8 ≤ n depends on lengths only, so it is
+        // identical for every thread count.
+        _mm256_storeu_ps(acc.as_mut_ptr().add(j), _mm256_fmadd_ps(vx, vw, va));
+        j += 8;
+    }
+    while j < n {
+        acc[j] += x[j] * w[j];
+        j += 1;
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+// SAFETY: NEON is mandatory on aarch64; every load/store is bounded by
+// n = min(acc.len(), x.len()) — the vector loop covers whole 4-lane
+// groups below n, the scalar tail covers the rest.
+unsafe fn neon_axpy(acc: &mut [f32], x: &[f32], s: f32) {
+    use std::arch::aarch64::*;
+    let n = acc.len().min(x.len());
+    let vs = vdupq_n_f32(s);
+    let mut j = 0usize;
+    while j + 4 <= n {
+        let va = vld1q_f32(acc.as_ptr().add(j));
+        let vx = vld1q_f32(x.as_ptr().add(j));
+        // detlint: ordered — j-parallel FMA over 4 distinct output
+        // elements (one fused update each); the lane split at the
+        // largest multiple of 4 ≤ n depends on lengths only, so it is
+        // identical for every thread count.
+        vst1q_f32(acc.as_mut_ptr().add(j), vfmaq_f32(va, vs, vx));
+        j += 4;
+    }
+    while j < n {
+        acc[j] += s * x[j];
+        j += 1;
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+// SAFETY: NEON is mandatory on aarch64; every load/store is bounded by
+// n = min of the three slice lengths — the vector loop covers whole
+// 4-lane groups below n, the scalar tail covers the rest.
+unsafe fn neon_mul_acc(acc: &mut [f32], x: &[f32], w: &[f32]) {
+    use std::arch::aarch64::*;
+    let n = acc.len().min(x.len()).min(w.len());
+    let mut j = 0usize;
+    while j + 4 <= n {
+        let va = vld1q_f32(acc.as_ptr().add(j));
+        let vx = vld1q_f32(x.as_ptr().add(j));
+        let vw = vld1q_f32(w.as_ptr().add(j));
+        // detlint: ordered — j-parallel FMA over 4 distinct output
+        // elements (one fused update each); the lane split at the
+        // largest multiple of 4 ≤ n depends on lengths only, so it is
+        // identical for every thread count.
+        vst1q_f32(acc.as_mut_ptr().add(j), vfmaq_f32(va, vx, vw));
+        j += 4;
+    }
+    while j < n {
+        acc[j] += x[j] * w[j];
+        j += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.next_normal()).collect()
+    }
+
+    fn close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+            let scale = x.abs().max(y.abs()).max(1.0);
+            assert!((x - y).abs() / scale < tol, "{what}[{i}]: {x} vs {y}");
+        }
+    }
+
+    /// Run one tile through `tile()` and return the acc rows.
+    fn run_tile(tier: Tier, mr: usize, nr: usize, k: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let rows: Vec<Vec<f32>> = (0..MR).map(|_| randv(&mut rng, k)).collect();
+        let a: [&[f32]; MR] = std::array::from_fn(|r| rows[r].as_slice());
+        let bp = randv(&mut rng, k * nr);
+        let mut acc = [[0f32; NR_MAX]; MR];
+        tile(tier, &a, mr, &bp, k, nr, &mut acc);
+        (0..mr).flat_map(|r| acc[r][..nr].to_vec()).collect()
+    }
+
+    /// f64 reference for the same tile.
+    fn naive_tile(mr: usize, nr: usize, k: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let rows: Vec<Vec<f32>> = (0..MR).map(|_| randv(&mut rng, k)).collect();
+        let bp = randv(&mut rng, k * nr);
+        let mut out = vec![0f64; mr * nr];
+        for r in 0..mr {
+            for kk in 0..k {
+                for j in 0..nr {
+                    out[r * nr + j] += rows[r][kk] as f64 * bp[kk * nr + j] as f64;
+                }
+            }
+        }
+        out.iter().map(|&v| v as f32).collect()
+    }
+
+    #[test]
+    fn tier_names_roundtrip() {
+        for t in [Tier::Scalar, Tier::Avx2, Tier::Neon] {
+            assert_eq!(Tier::parse(t.name()), Some(t));
+            assert_eq!(format!("{t}"), t.name());
+        }
+        assert_eq!(Tier::parse("avx512"), None);
+        assert_eq!(Tier::parse(""), None);
+    }
+
+    #[test]
+    fn scalar_is_always_available_and_first() {
+        let tiers = available_tiers();
+        assert_eq!(tiers[0], Tier::Scalar);
+        let mut sorted = tiers.clone();
+        sorted.dedup();
+        assert_eq!(sorted, tiers, "no duplicate tiers");
+        assert!(tiers.contains(&active()), "active tier must be available");
+    }
+
+    #[test]
+    fn every_tier_matches_naive_on_every_tile_shape() {
+        for &tier in &available_tiers() {
+            for nr in [8usize, 16] {
+                for mr in 1..=MR {
+                    for k in [1usize, 2, 7, 33] {
+                        let seed = 90 + (mr * 31 + nr * 7 + k) as u64;
+                        let got = run_tile(tier, mr, nr, k, seed);
+                        let want = naive_tile(mr, nr, k, seed);
+                        close(&got, &want, 1e-4, &format!("{tier} mr={mr} nr={nr} k={k}"));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tile_touches_only_live_rows_and_lanes() {
+        for &tier in &available_tiers() {
+            for nr in [8usize, 16] {
+                let (mr, k) = (2usize, 9usize);
+                let mut rng = Rng::new(7);
+                let rows: Vec<Vec<f32>> = (0..MR).map(|_| randv(&mut rng, k)).collect();
+                let a: [&[f32]; MR] = std::array::from_fn(|r| rows[r].as_slice());
+                let bp = randv(&mut rng, k * nr);
+                let mut acc = [[7.5f32; NR_MAX]; MR];
+                tile(tier, &a, mr, &bp, k, nr, &mut acc);
+                for r in mr..MR {
+                    assert_eq!(acc[r], [7.5f32; NR_MAX], "{tier}: dead row {r} written");
+                }
+                for r in 0..mr {
+                    for j in nr..NR_MAX {
+                        assert_eq!(acc[r][j], 7.5, "{tier}: dead lane {j} written");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_and_mul_acc_match_scalar_per_tier() {
+        for &tier in &available_tiers() {
+            for n in [1usize, 3, 8, 9, 16, 31] {
+                let mut rng = Rng::new(100 + n as u64);
+                let x = randv(&mut rng, n);
+                let w = randv(&mut rng, n);
+                let init = randv(&mut rng, n);
+
+                let mut want = init.clone();
+                scalar_axpy(&mut want, &x, 0.37);
+                let mut got = init.clone();
+                axpy(tier, &mut got, &x, 0.37);
+                close(&got, &want, 1e-5, &format!("axpy {tier} n={n}"));
+
+                let mut want = init.clone();
+                scalar_mul_acc(&mut want, &x, &w);
+                let mut got = init.clone();
+                mul_acc(tier, &mut got, &x, &w);
+                close(&got, &want, 1e-5, &format!("mul_acc {tier} n={n}"));
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_tile_matches_seed_kernel_bitwise() {
+        // The seed's micro_kernel loop order was kk → j → rows; the
+        // scalar tier is kk → rows → j. Per-element chains are the
+        // same (ascending k), so bits must match exactly.
+        let (k, nr) = (57usize, 8usize);
+        let mut rng = Rng::new(3);
+        let rows: Vec<Vec<f32>> = (0..MR).map(|_| randv(&mut rng, k)).collect();
+        let a: [&[f32]; MR] = std::array::from_fn(|r| rows[r].as_slice());
+        let bp = randv(&mut rng, k * nr);
+        let mut acc = [[0f32; NR_MAX]; MR];
+        tile(Tier::Scalar, &a, MR, &bp, k, nr, &mut acc);
+        // Seed loop order, reproduced inline.
+        let mut seed_acc = [[0f32; 8]; MR];
+        for kk in 0..k {
+            let brow = &bp[kk * 8..kk * 8 + 8];
+            for j in 0..8 {
+                for r in 0..MR {
+                    seed_acc[r][j] += rows[r][kk] * brow[j];
+                }
+            }
+        }
+        for r in 0..MR {
+            for j in 0..8 {
+                assert_eq!(
+                    acc[r][j].to_bits(),
+                    seed_acc[r][j].to_bits(),
+                    "element ({r},{j}) drifted from the seed kernel"
+                );
+            }
+        }
+    }
+}

@@ -19,6 +19,7 @@ use std::time::{Duration, Instant};
 
 use super::json::Json;
 use super::stats::{percentile, Welford};
+use crate::faults::{ArtifactIo, RealIo};
 
 pub struct BenchResult {
     pub name: String,
@@ -106,9 +107,12 @@ impl BenchReport {
         Json::Obj(m)
     }
 
-    /// Write the report to `path` as compact JSON.
+    /// Write the report to `path` as compact JSON, through the
+    /// crash-safe temp+rename seam — a killed bench run (or the chaos
+    /// harness's byte-compare) can never observe a torn
+    /// `BENCH_*.json`.
     pub fn write(&self, path: &Path) -> std::io::Result<()> {
-        std::fs::write(path, self.to_json().to_string_compact())
+        RealIo.write_atomic(path, &self.to_json().to_string_compact())
     }
 }
 

@@ -11,6 +11,13 @@
 //! the bit, and the FNV-1a digests of the two full traces must agree.
 //! Any reordering of a reduction, a changed quantization point, or a
 //! dropped cache in the graph path fails loudly here.
+//!
+//! SIMD dispatch note: both executors call the same public kernels, so
+//! both resolve the same `simd::active()` tier and the comparison is
+//! *relative* — it holds under scalar, AVX2, or NEON dispatch alike
+//! (and under any autotuned blocking, which is bit-invariant within a
+//! tier). No per-tier re-pinning is needed; forcing
+//! `TRIACCEL_DISPATCH=scalar` reproduces the historical reference bits.
 
 use tri_accel::manifest::{ModelEntry, BF16, FP16, FP32};
 use tri_accel::runtime::backend::{Backend, ModelState};

@@ -5,3 +5,13 @@ fn total(xs: &[f32]) -> f32 {
 fn peak(xs: &[f32]) -> f32 {
     xs.iter().copied().fold(f32::MIN, f32::max)
 }
+
+fn fma_tile_x86(acc: __m256, x: __m256, y: __m256) -> __m256 {
+    // detlint: ordered — lanes are independent output columns; each
+    // lane's accumulation chain stays in ascending-k order.
+    _mm256_fmadd_ps(x, y, acc)
+}
+
+fn fma_tile_neon(acc: float32x4_t, x: float32x4_t, y: float32x4_t) -> float32x4_t {
+    vfmaq_f32(acc, x, y) // detlint: ordered — lanes are independent columns, ascending-k chain.
+}

@@ -1,3 +1,11 @@
 fn total(xs: &[f32]) -> f32 {
     xs.iter().sum::<f32>()
 }
+
+fn fma_tile_x86(acc: __m256, x: __m256, y: __m256) -> __m256 {
+    _mm256_fmadd_ps(x, y, acc)
+}
+
+fn fma_tile_neon(acc: float32x4_t, x: float32x4_t, y: float32x4_t) -> float32x4_t {
+    vfmaq_f32(acc, x, y)
+}

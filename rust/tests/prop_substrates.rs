@@ -672,3 +672,134 @@ fn prop_qdq_idempotent_and_ordered() {
         Ok(())
     });
 }
+
+// ------------------------------------------- simd dispatch & autotune
+
+/// Every runtime-dispatched tier must agree with the scalar reference
+/// tier to fp tolerance on ragged shapes (m, k, n deliberately not
+/// multiples of the 4×8/4×16 micro-kernel footprint), across all three
+/// GEMM entry points. Exact bit equality is *not* required across
+/// tiers — FMA contracts the multiply-add — only within one.
+#[test]
+fn prop_gemm_tiers_agree_on_ragged_shapes() {
+    use tri_accel::runtime::native::{arena::Arena, autotune::TuneCfg, gemm, pool::Pool, simd};
+    check("each SIMD tier matches the scalar tier within fp tolerance", |rng| {
+        let (m, k) = (small_usize(rng, 1, 33), small_usize(rng, 1, 41));
+        let n = small_usize(rng, 1, 37);
+        let a = randv(rng, m * k);
+        let b = randv(rng, k * n);
+        let mut bt = vec![0f32; k * n];
+        gemm::transpose(&b, k, n, &mut bt);
+        let ab = randv(rng, m * n);
+        let nr = [8usize, 16][small_usize(rng, 0, 1)];
+        let cfg = TuneCfg { row_chunk: 8 * small_usize(rng, 1, 8), nr };
+        let pool = Pool::new(1);
+        let mut arena = Arena::new();
+        let mut run = |tier: simd::Tier| {
+            let mut c = vec![0f32; m * n];
+            gemm::gemm_with(tier, cfg, &pool, &mut arena, &a, &b, &mut c, m, k, n, false);
+            let mut cbt = vec![0f32; m * n];
+            gemm::gemm_a_bt_with(tier, cfg, &pool, &mut arena, &a, &bt, &mut cbt, m, k, n, false);
+            let mut catb = vec![0f32; k * n];
+            gemm::gemm_at_b_with(tier, &pool, &mut arena, &a, &ab, &mut catb, m, k, n);
+            (c, cbt, catb)
+        };
+        let (sc, sbt, satb) = run(simd::Tier::Scalar);
+        for tier in simd::available_tiers() {
+            let (c, cbt, catb) = run(tier);
+            let pairs = [("gemm", &c, &sc), ("a_bt", &cbt, &sbt), ("at_b", &catb, &satb)];
+            for (what, got, want) in pairs {
+                for (i, (&x, &y)) in got.iter().zip(want.iter()).enumerate() {
+                    let scale = x.abs().max(y.abs()).max(1.0);
+                    if (x - y).abs() / scale > 1e-4 {
+                        return Err(format!("{tier}/{what}[{i}] {m}x{k}x{n}: {x} vs {y}"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Within one tier, worker-thread count must be a pure performance
+/// knob: the shape crosses the parallel-dispatch threshold, and 1-, 2-,
+/// and 4-thread runs must produce bit-identical output for every
+/// available tier and candidate row blocking.
+#[test]
+fn prop_gemm_thread_bits_identical_in_every_tier() {
+    use tri_accel::runtime::native::{arena::Arena, autotune::TuneCfg, gemm, pool::Pool, simd};
+    check("threads are a pure perf knob within each dispatch tier", |rng| {
+        let m = 4 * small_usize(rng, 70, 90);
+        let (k, n) = (small_usize(rng, 64, 80), small_usize(rng, 32, 40));
+        let a = randv(rng, m * k);
+        let b = randv(rng, k * n);
+        let nr = [8usize, 16][small_usize(rng, 0, 1)];
+        let cfg = TuneCfg { row_chunk: [32usize, 64, 128][small_usize(rng, 0, 2)], nr };
+        for tier in simd::available_tiers() {
+            let run = |threads: usize| {
+                let pool = Pool::new(threads);
+                let mut arena = Arena::new();
+                let mut c = vec![0f32; m * n];
+                gemm::gemm_with(tier, cfg, &pool, &mut arena, &a, &b, &mut c, m, k, n, false);
+                c.iter().map(|v| v.to_bits()).collect::<Vec<u32>>()
+            };
+            let base = run(1);
+            for t in [2usize, 4] {
+                if run(t) != base {
+                    return Err(format!("tier {tier}: {t}-thread bits diverged ({cfg:?})"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The tuning cache must round-trip: record a random candidate per
+/// tier, persist, reload, and require the identical config back — and
+/// identical GEMM bits under the reloaded config, so a cache file can
+/// never change numerics.
+#[test]
+fn prop_autotune_cache_roundtrip_preserves_selection_and_bits() {
+    use tri_accel::runtime::native::{arena::Arena, autotune, gemm, pool::Pool, simd};
+    check("tuning entries survive save/load with identical bits", |rng| {
+        let path = std::env::temp_dir().join(format!(
+            "triaccel_prop_tune_{}_{}.json",
+            std::process::id(),
+            rng.next_u64()
+        ));
+        let (m, k) = (small_usize(rng, 1, 48), small_usize(rng, 1, 48));
+        let n = small_usize(rng, 1, 48);
+        let threads = small_usize(rng, 1, 4);
+        let cands = autotune::candidates();
+        let mut tuner = autotune::Tuner::new(&path);
+        for tier in simd::available_tiers() {
+            let pick = cands[small_usize(rng, 0, cands.len() - 1)];
+            tuner.record(tier, threads, m, k, n, pick);
+        }
+        tuner.save().map_err(|e| e.to_string())?;
+        let back = autotune::Tuner::load(&path);
+        std::fs::remove_file(&path).ok();
+        if back.len() != tuner.len() {
+            return Err(format!("entry count {} → {} across reload", tuner.len(), back.len()));
+        }
+        let a = randv(rng, m * k);
+        let b = randv(rng, k * n);
+        let pool = Pool::new(threads);
+        let mut arena = Arena::new();
+        for tier in simd::available_tiers() {
+            let before = tuner.lookup(tier, threads, m, k, n);
+            let after = back.lookup(tier, threads, m, k, n);
+            if before != after {
+                return Err(format!("{tier}: config {before:?} reloaded as {after:?}"));
+            }
+            let mut c0 = vec![0f32; m * n];
+            let mut c1 = vec![0f32; m * n];
+            gemm::gemm_with(tier, before, &pool, &mut arena, &a, &b, &mut c0, m, k, n, false);
+            gemm::gemm_with(tier, after, &pool, &mut arena, &a, &b, &mut c1, m, k, n, false);
+            if c0.iter().map(|v| v.to_bits()).ne(c1.iter().map(|v| v.to_bits())) {
+                return Err(format!("{tier}: bits changed across a cache reload"));
+            }
+        }
+        Ok(())
+    });
+}
