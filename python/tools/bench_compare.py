@@ -1,9 +1,9 @@
 #!/usr/bin/env python3
-"""Warn-only diff of two BENCH_native.json reports (stdlib only).
+"""Diff two BENCH_native.json reports (stdlib only).
 
 Usage: bench_compare.py --current BENCH_native.json \
                         --baseline /path/to/baseline.json \
-                        [--warn-pct 25]
+                        [--warn-pct 25] [--strict] [--pin REGEX ...]
 
 Matches result rows by `name` and compares `mean_s` per row:
 
@@ -15,15 +15,25 @@ Also renders the scalar-vs-SIMD speedup table from the current
 report's per-tier `gemm(MxKxN)[tier]` rows, so the CI log shows the
 dispatch win at a glance.
 
-Deliberately **warn-only**: micro-benchmark timings on shared CI
-runners are far too noisy to gate a merge, and the committed baseline
-may have been recorded on different hardware. The exit code is 0
-whenever both files parse (non-zero on a malformed/unreadable report) —
-thresholds shape the log, not the verdict. To refresh the baseline,
-download `BENCH_native.json` from a CI bench artifact (or run
-`cargo bench --bench micro` locally) and commit it at the repo root as
-`BENCH_baseline.json` (`BENCH_native.json` itself is gitignored — the
-bench overwrites it).
+Two verdict modes:
+
+* Default: **warn-only**. Micro-benchmark timings on shared CI runners
+  are far too noisy to gate a merge on every row, and the committed
+  baseline may have been recorded on different hardware. The exit code
+  is 0 whenever both files parse (non-zero on a malformed/unreadable
+  report) — thresholds shape the log, not the verdict.
+* `--strict`: the *pinned* rows become a gate. A pinned row (name
+  fullmatching any `--pin` regex; default: the hot-path
+  `train_step(...)` and dispatch `gemm(MxKxN)` rows) that regresses
+  beyond --warn-pct exits 1. Pins are deliberately few and chosen for
+  stability — the strict gate catches a real hot-path cliff, not
+  runner jitter on a 2µs controller row. An empty-baseline (seed stub)
+  report never fails strict mode; refresh the baseline first.
+
+To refresh the baseline, download `BENCH_native.json` from a CI bench
+artifact (or run `cargo bench --bench micro` locally) and commit it at
+the repo root as `BENCH_baseline.json` (`BENCH_native.json` itself is
+gitignored — the bench overwrites it).
 """
 
 import argparse
@@ -32,6 +42,14 @@ import re
 import sys
 
 TIER_ROW_RE = re.compile(r"^(gemm\([0-9x]+\))\[([a-z0-9]+)\]$")
+
+# Default strict-mode pins: the end-to-end hot path (train steps at any
+# replica count) and the tuned-dispatch GEMM row. Everything else stays
+# warn-only even under --strict.
+DEFAULT_PINS = [
+    r"train_step\(.*\)",
+    r"gemm\([0-9x]+\)",
+]
 
 
 def load_report(path):
@@ -60,18 +78,23 @@ def fmt_s(seconds):
     return f"{seconds:.3f}s"
 
 
-def compare(cur_rows, base_rows, warn_pct):
+def compare(cur_rows, base_rows, warn_pct, pins):
     warns = 0
+    failures = []
     shared = [n for n in cur_rows if n in base_rows]
     for name in shared:
         cur, base = cur_rows[name], base_rows[name]
         delta_pct = (cur / base - 1.0) * 100.0
+        pinned = any(p.fullmatch(name) for p in pins)
         if delta_pct > warn_pct:
-            verdict, warns = "WARN slower", warns + 1
+            warns += 1
+            verdict = "FAIL slower [pinned]" if pinned else "WARN slower"
+            if pinned:
+                failures.append((name, delta_pct))
         elif delta_pct < -warn_pct:
             verdict = "improved"
         else:
-            verdict = "ok"
+            verdict = "ok [pinned]" if pinned else "ok"
         print(
             f"  {name:<44} {fmt_s(base):>10} -> {fmt_s(cur):>10} "
             f"{delta_pct:+7.1f}%  {verdict}"
@@ -82,7 +105,7 @@ def compare(cur_rows, base_rows, warn_pct):
     for name in base_rows:
         if name not in cur_rows:
             print(f"  {name:<44} {fmt_s(base_rows[name]):>10} ->   (dropped)")
-    return warns, len(shared)
+    return warns, len(shared), failures
 
 
 def speedup_table(cur_rows):
@@ -117,20 +140,45 @@ def main():
         default=25.0,
         help="percent mean_s regression that draws a WARN line (default 25)",
     )
+    ap.add_argument(
+        "--strict",
+        action="store_true",
+        help="exit 1 when a pinned row regresses beyond --warn-pct",
+    )
+    ap.add_argument(
+        "--pin",
+        action="append",
+        default=None,
+        metavar="REGEX",
+        help="row-name regex (fullmatch) gated under --strict; repeatable "
+        "(default: the train_step and dispatch gemm rows)",
+    )
     args = ap.parse_args()
 
     cur_doc, cur_rows = load_report(args.current)
     _base_doc, base_rows = load_report(args.baseline)
+    try:
+        pins = [re.compile(p) for p in (args.pin or DEFAULT_PINS)] if args.strict else []
+    except re.error as e:
+        sys.exit(f"bench_compare: bad --pin regex: {e}")
 
     mode = cur_doc.get("mode", "?")
     print(f"bench_compare: {len(cur_rows)} current rows (mode={mode}), {len(base_rows)} baseline rows")
+    failures = []
     if not base_rows:
         print("baseline has no timed rows (seed stub) — nothing to diff; refresh it from a CI artifact")
     else:
-        warns, shared = compare(cur_rows, base_rows, args.warn_pct)
+        warns, shared, failures = compare(cur_rows, base_rows, args.warn_pct, pins)
         print(f"compared {shared} shared row(s): {warns} above the {args.warn_pct:.0f}% warn band")
     speedup_table(cur_rows)
-    print("bench_compare: warn-only — exit 0")
+    if args.strict:
+        if failures:
+            for name, delta in failures:
+                print(f"bench_compare: STRICT FAIL: {name} regressed {delta:+.1f}%")
+            sys.exit(1)
+        print("bench_compare: strict — no pinned row regressed; exit 0")
+    else:
+        print("bench_compare: warn-only — exit 0")
 
 
 if __name__ == "__main__":

@@ -187,6 +187,37 @@ fn main() {
         }));
     }
 
+    // -- data-parallel replica scaling --------------------------------------
+    // One train-step row per replica count on the replicated backend,
+    // each engine budgeted so replicas × threads stays within the pool
+    // width. The rows share a batch and precision mix, so the
+    // `speedup/replicasN` metadata is the pure shard-parallel return —
+    // and because replication is numerics-neutral, any loss drift
+    // across these rows is a bug, not noise.
+    {
+        use tri_accel::runtime::native::pool::budget_threads;
+        let batch = it.next_batch(32).unwrap();
+        let ctrl = StepCtrl::uniform(n_layers, BF16, 0.05, 5e-4);
+        let mut single_mean = 0f64;
+        for replicas in [1usize, 2, 4] {
+            let threads_each = budget_threads(pool.threads(), 1, replicas);
+            let eng = Engine::native_replicated(replicas, threads_each);
+            let mut s = Session::init(&eng, key, 0).unwrap();
+            let r = heavy.run(&format!("train_step(B=32, bf16, replicas={replicas})"), || {
+                black_box(s.train_step(&batch, &ctrl).unwrap());
+            });
+            let mean = r.mean.as_secs_f64();
+            if replicas == 1 {
+                single_mean = mean;
+            } else if single_mean > 0.0 && mean > 0.0 {
+                let sp = single_mean / mean;
+                report.meta_num(&format!("speedup/replicas{replicas}"), sp);
+                println!("speedup [replicas={replicas}] vs 1: {sp:.2}x");
+            }
+            report.push(&r);
+        }
+    }
+
     // -- graph-grid architectures: one train-step row each ------------------
     for key in ["resnet_mini_c10", "effnet_lite_c10"] {
         let e = engine.manifest.model(key).unwrap().clone();

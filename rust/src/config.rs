@@ -116,6 +116,17 @@ pub struct Config {
     pub rho_high: f64,     // shrink when usage > ρ_high·budget
     pub batch_cooldown: u64, // min steps between batch moves
 
+    // -- data-parallel replicas ---------------------------------------------
+    /// Replica engines per job (1, 2, or 4). The native replicated
+    /// backend guarantees bit-identical trajectories for every value;
+    /// the scheduler budgets jobs × replicas × threads against the
+    /// machine.
+    pub replicas: usize,
+    /// Let the control plane elastically shed/restore live replicas
+    /// under VRAM pressure (the `tri_accel_replica` method). Ignored
+    /// when `replicas == 1`.
+    pub elastic_replicas: bool,
+
     // -- memory simulator ---------------------------------------------------
     /// MemMax: the strict single-GPU budget. `0` = auto: 1.05× the FP32
     /// footprint at `batch_init` — the paper's "strict memory budget"
@@ -164,6 +175,8 @@ impl Default for Config {
             rho_low: 0.70,
             rho_high: 0.90,
             batch_cooldown: 30,
+            replicas: 1,
+            elastic_replicas: false,
             mem_budget_gb: 0.45,
             mem_noise: 0.01,
             mem_trace: "const".into(),
@@ -255,6 +268,8 @@ impl Config {
             "rho_low" => self.rho_low = num!(),
             "rho_high" => self.rho_high = num!(),
             "batch_cooldown" => self.batch_cooldown = num!(),
+            "replicas" => self.replicas = num!(),
+            "elastic_replicas" => self.elastic_replicas = parse_bool(val)?,
             "mem_budget_gb" => self.mem_budget_gb = num!(),
             "mem_noise" => self.mem_noise = num!(),
             "mem_trace" => self.mem_trace = val.to_string(),
@@ -287,6 +302,11 @@ impl Config {
         );
         anyhow::ensure!(self.mem_budget_gb >= 0.0, "mem_budget_gb >= 0 (0 = auto)");
         anyhow::ensure!(self.batch_init > 0 && self.epochs > 0, "positive sizes");
+        anyhow::ensure!(
+            matches!(self.replicas, 1 | 2 | 4),
+            "replicas must be 1, 2, or 4 (got {})",
+            self.replicas
+        );
         crate::memsim::BudgetTrace::parse(&self.mem_trace)
             .context("mem_trace spec")?;
         Ok(())
@@ -387,6 +407,18 @@ mod tests {
         let mut c = Config::default();
         c.seed = 7;
         assert_ne!(a.fingerprint(), c.fingerprint(), "seed is part of the key");
+    }
+
+    #[test]
+    fn replicas_validated_and_settable() {
+        let mut c = Config::default();
+        assert_eq!(c.replicas, 1);
+        c.set("replicas", "4").unwrap();
+        c.set("elastic_replicas", "true").unwrap();
+        c.validate().unwrap();
+        assert!(c.elastic_replicas);
+        c.replicas = 3;
+        assert!(c.validate().is_err(), "only power-of-two replica ladders");
     }
 
     #[test]

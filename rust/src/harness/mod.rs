@@ -60,6 +60,12 @@ pub struct SeedResult {
     pub curv_firings: u64,
     /// Smallest batch size the run was squeezed to.
     pub min_batch: usize,
+    /// Replica-policy decisions (sheds + restores + vetoes) over the
+    /// run; 0 for every single-replica or fixed-replica method.
+    pub replica_decisions: u64,
+    /// Smallest live replica count the run was squeezed to (1 for
+    /// single-replica runs).
+    pub min_replicas: usize,
 }
 
 impl SeedResult {
@@ -84,10 +90,15 @@ impl SeedResult {
         put("precision_transitions", self.precision_transitions as f64);
         put("curv_firings", self.curv_firings as f64);
         put("min_batch", self.min_batch as f64);
+        put("replica_decisions", self.replica_decisions as f64);
+        put("min_replicas", self.min_replicas as f64);
         Json::Obj(m)
     }
 
-    /// Parse a [`Self::to_json`] object (ledger resume path).
+    /// Parse a [`Self::to_json`] object (ledger resume path). The
+    /// replica fields default when absent — ledgers written before the
+    /// replica axis existed (implicitly 1 replica, 0 decisions) must
+    /// keep resuming.
     pub fn from_json(j: &Json) -> Result<SeedResult> {
         let f = |k: &str| -> Result<f64> {
             j.req(k)?.as_f64().with_context(|| format!("seed result `{k}` not a number"))
@@ -97,6 +108,15 @@ impl SeedResult {
                 .as_i64()
                 .and_then(|v| u64::try_from(v).ok())
                 .with_context(|| format!("seed result `{k}` not a count"))
+        };
+        let u_opt = |k: &str, default: u64| -> Result<u64> {
+            match j.get(k) {
+                None => Ok(default),
+                Some(v) => v
+                    .as_i64()
+                    .and_then(|v| u64::try_from(v).ok())
+                    .with_context(|| format!("seed result `{k}` not a count")),
+            }
         };
         let seed: u64 = j
             .req("seed")?
@@ -117,6 +137,8 @@ impl SeedResult {
             precision_transitions: u("precision_transitions")?,
             curv_firings: u("curv_firings")?,
             min_batch: u("min_batch")? as usize,
+            replica_decisions: u_opt("replica_decisions", 0)?,
+            min_replicas: u_opt("min_replicas", 1)? as usize,
         })
     }
 }
@@ -157,6 +179,8 @@ pub fn run_seed(
         precision_transitions: tr.metrics.precision_transitions,
         curv_firings: tr.metrics.curv_firings,
         min_batch,
+        replica_decisions: tr.metrics.replica_decisions,
+        min_replicas: tr.metrics.min_replicas.max(1),
     })
 }
 
@@ -437,6 +461,10 @@ pub struct PressureCell {
     pub batch_decisions: u64,
     /// Smallest batch the run was squeezed to (min over seeds).
     pub min_batch: usize,
+    /// Replica-policy decisions (sheds + restores + vetoes) across seeds.
+    pub replica_decisions: u64,
+    /// Smallest live replica count any seed was squeezed to.
+    pub min_replicas: usize,
 }
 
 /// Reduce per-seed results to one pressure-sweep row. All reductions —
@@ -458,6 +486,8 @@ pub fn aggregate_pressure(
         oom_events: 0,
         batch_decisions: 0,
         min_batch: usize::MAX,
+        replica_decisions: 0,
+        min_replicas: usize::MAX,
     };
     for r in &rs {
         cell.acc.push(r.test_acc_pct);
@@ -466,6 +496,8 @@ pub fn aggregate_pressure(
         cell.oom_events += r.oom_events;
         cell.batch_decisions += r.batch_decisions;
         cell.min_batch = cell.min_batch.min(r.min_batch);
+        cell.replica_decisions += r.replica_decisions;
+        cell.min_replicas = cell.min_replicas.min(r.min_replicas);
     }
     Ok(cell)
 }
@@ -508,23 +540,29 @@ pub fn pressure(
     Ok(rows)
 }
 
-/// Pretty-print the pressure sweep (one row per method).
+/// Pretty-print the pressure sweep (one row per method). `B decs` /
+/// `R decs` split the elastic response by lever: batch-ladder moves vs
+/// replica sheds/restores (replicas are the numerics-free lever, so an
+/// elastic-replica method should show `R_min` dropping before `B_min`).
 pub fn print_pressure(rows: &[PressureCell], trace: &str) {
     println!(
-        "{:<18} {:>12} {:>10} {:>6} {:>7} {:>7} {:>8}   (trace {trace})",
-        "Method", "Acc(%)", "VRAM(GB)", "OOMs", "B_min", "Decs", "Score"
+        "{:<18} {:>12} {:>10} {:>6} {:>7} {:>7} {:>7} {:>7} {:>8}   (trace {trace})",
+        "Method", "Acc(%)", "VRAM(GB)", "OOMs", "B_min", "R_min", "B decs", "R decs", "Score"
     );
     for r in rows {
         let min_b = if r.min_batch == usize::MAX { 0 } else { r.min_batch };
+        let min_r = if r.min_replicas == usize::MAX { 0 } else { r.min_replicas };
         let acc = format!("{:.1}±{:.2}", r.acc.mean(), r.acc.std());
         println!(
-            "{:<18} {:>12} {:>10.4} {:>6} {:>7} {:>7} {:>8.2}",
+            "{:<18} {:>12} {:>10.4} {:>6} {:>7} {:>7} {:>7} {:>7} {:>8.2}",
             r.label,
             acc,
             r.peak_gb.mean(),
             r.oom_events,
             min_b,
+            min_r,
             r.batch_decisions,
+            r.replica_decisions,
             r.score.mean(),
         );
     }
@@ -602,6 +640,8 @@ mod tests {
             precision_transitions: 1,
             curv_firings: 3,
             min_batch: 32 + seed as usize,
+            replica_decisions: seed / 2,
+            min_replicas: 1 + seed as usize % 2,
         }
     }
 
@@ -665,5 +705,27 @@ mod tests {
     fn seed_result_json_rejects_missing_fields() {
         let j = Json::parse(r#"{"seed": 0}"#).unwrap();
         assert!(SeedResult::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn seed_result_json_accepts_pre_replica_ledger_records() {
+        // Ledgers written before the replica axis existed carry no
+        // replica keys; resuming them must default to the values those
+        // runs actually had (1 replica, 0 replica decisions) rather
+        // than fail the whole grid resume.
+        let mut r = sr(2, 61.0);
+        r.replica_decisions = 0;
+        r.min_replicas = 1;
+        let j = r.to_json();
+        let stripped = match j {
+            Json::Obj(mut m) => {
+                assert!(m.remove("replica_decisions").is_some());
+                assert!(m.remove("min_replicas").is_some());
+                Json::Obj(m)
+            }
+            _ => unreachable!(),
+        };
+        let back = SeedResult::from_json(&stripped).unwrap();
+        assert_eq!(back, r, "absent replica keys must default to 1 replica / 0 decisions");
     }
 }

@@ -39,7 +39,7 @@ pub const PINS: &[SchemaPin] = &[
         file: "metrics/telemetry.rs",
         version_const: "SCHEMA_VERSION",
         version: 1,
-        digest: 0xe6b895a2daf4351c,
+        digest: 0x6e070c60d1122fed,
     },
     SchemaPin {
         file: "sched/ledger.rs",

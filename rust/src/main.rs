@@ -2,11 +2,11 @@
 //!
 //! Subcommands (full reference with examples: `docs/CLI.md`):
 //!   info                          backend + model inventory
-//!   train    [--model K] [--method M] [--epochs N] [--set k=v ...]
-//!   table1   [--models a,b] [--seeds 0,1,2] [--jobs N] [--smoke]
-//!   table2   [--model K]    [--seeds 0,1,2] [--jobs N]
-//!   fig      [--model K]    [--seed S]      [--jobs N]
-//!   pressure [--model K] [--methods a,b] [--trace SPEC] [--jobs N] [--smoke]
+//!   train    [--model K] [--method M] [--epochs N] [--replicas N] [--set k=v ...]
+//!   table1   [--models a,b] [--seeds 0,1,2] [--jobs N] [--replicas N] [--smoke]
+//!   table2   [--model K]    [--seeds 0,1,2] [--jobs N] [--replicas N]
+//!   fig      [--model K]    [--seed S]      [--jobs N] [--replicas N]
+//!   pressure [--model K] [--methods a,b] [--trace SPEC] [--jobs N] [--replicas N] [--smoke]
 //!   chaos    [--grid table1|table2|fig|pressure] [--faults SPEC] [--retries N] + grid flags
 //!   compare --a run.json --b run.json
 //!   report   [--out runs] [--dir DIR]
@@ -23,7 +23,11 @@
 //! The grid subcommands (`table1`/`table2`/`fig`/`pressure`) run on
 //! the experiment scheduler: `--jobs N` executes cells concurrently,
 //! `--threads` caps the *total* compute-thread budget shared by all
-//! jobs, and every grid persists a resumable ledger plus JSONL
+//! jobs, `--replicas N` (1|2|4) trains every job as N deterministic
+//! data-parallel replicas (numerics-neutral — bit-identical losses and
+//! decisions at any count; elastic shedding under the
+//! `tri_accel_replica` method), and every grid persists a resumable
+//! ledger plus JSONL
 //! telemetry under `runs/<grid-id>/` — rerunning the same command
 //! resumes a killed grid bit-identically. `report` re-renders the
 //! markdown/JSON artifacts from the ledgers alone. Every grid runs
@@ -226,6 +230,20 @@ fn engine_from(args: &Args) -> Result<Engine> {
     Engine::by_name(&backend, &artifacts)
 }
 
+/// `--replicas N`: deterministic data-parallel replica count (1, 2, or
+/// 4). Numerics-neutral by construction — every loss, parameter, and
+/// policy decision is bit-identical at any count (docs/DETERMINISM.md,
+/// "ordered replica reduction") — so it is validated once here, before
+/// any engine or grid is built.
+fn parse_replicas(args: &Args) -> Result<usize> {
+    let replicas: usize = args.parse_or("replicas", 1)?;
+    anyhow::ensure!(
+        matches!(replicas, 1 | 2 | 4),
+        "--replicas must be 1, 2, or 4 (got {replicas})"
+    );
+    Ok(replicas)
+}
+
 /// Grid subcommands run on the scheduler's native job pool; reject an
 /// explicit non-native backend instead of silently ignoring it.
 fn require_native(args: &Args) -> Result<()> {
@@ -417,6 +435,9 @@ fn config_from(args: &Args) -> Result<Config> {
     }
     cfg.epochs = args.parse_or("epochs", cfg.epochs)?;
     cfg.seed = args.parse_or("seed", cfg.seed)?;
+    if args.get("replicas").is_some() {
+        cfg.replicas = parse_replicas(args)?;
+    }
     if let Some(s) = args.get("steps") {
         cfg.steps_per_epoch = Some(s.parse().context("--steps")?);
     }
@@ -434,8 +455,28 @@ fn config_from(args: &Args) -> Result<Config> {
 }
 
 fn train(args: &Args) -> Result<()> {
-    let engine = engine_from(args)?;
     let cfg = config_from(args)?;
+    // A replicated config needs a replicated engine: split the thread
+    // budget across the replicas so `replicas × threads` stays within
+    // it, exactly like the scheduler's job-pool accounting.
+    let engine = if cfg.replicas > 1 {
+        use tri_accel::runtime::native::pool::{budget_threads, resolve_threads};
+        let backend = args.get_or("backend", "native");
+        anyhow::ensure!(
+            backend == "native",
+            "--replicas > 1 runs on the native replicated backend; \
+             `--backend {backend}` is single-replica only"
+        );
+        let threads: usize = args.parse_or("threads", 0)?;
+        let total = if threads > 0 {
+            threads
+        } else {
+            resolve_threads(std::env::var("TRIACCEL_THREADS").ok().as_deref())
+        };
+        Engine::native_replicated(cfg.replicas, budget_threads(total, 1, cfg.replicas))
+    } else {
+        engine_from(args)?
+    };
     harness::validate_models(&engine, &[cfg.model_key.as_str()])?;
     let out_dir = PathBuf::from(args.get_or("out", "runs"));
     let quiet = args.flag("quiet");
@@ -513,7 +554,12 @@ fn table1_grid(args: &Args, engine: &Engine) -> Result<sched::GridSpec> {
     let epochs: usize = args.parse_or("epochs", if smoke { 1 } else { 3 })?;
     let keys: Vec<&str> = models.split(',').collect();
     harness::validate_models(engine, &keys)?;
-    let tweak = harness::quick_budget(steps, epochs);
+    let replicas = parse_replicas(args)?;
+    let budget = harness::quick_budget(steps, epochs);
+    let tweak = move |cfg: &mut Config| {
+        budget(cfg);
+        cfg.replicas = replicas;
+    };
     Ok(sched::table1_spec(&keys, &seeds, &tweak))
 }
 
@@ -546,7 +592,12 @@ fn table2_grid(args: &Args, engine: &Engine) -> Result<(sched::GridSpec, String)
     let steps: usize = args.parse_or("steps", 60)?;
     let epochs: usize = args.parse_or("epochs", 3)?;
     harness::validate_models(engine, &[model.as_str()])?;
-    let tweak = harness::quick_budget(steps, epochs);
+    let replicas = parse_replicas(args)?;
+    let budget = harness::quick_budget(steps, epochs);
+    let tweak = move |cfg: &mut Config| {
+        budget(cfg);
+        cfg.replicas = replicas;
+    };
     Ok((sched::table2_spec(&model, &seeds, &tweak), model))
 }
 
@@ -570,6 +621,7 @@ fn table2(args: &Args) -> Result<()> {
 fn pressure_grid(args: &Args, engine: &Engine) -> Result<(sched::GridSpec, String, String)> {
     let model = model_or_first(args, engine)?;
     let smoke = args.flag("smoke");
+    let replicas = parse_replicas(args)?;
     let methods = args.get_or(
         "methods",
         if smoke {
@@ -577,6 +629,11 @@ fn pressure_grid(args: &Args, engine: &Engine) -> Result<(sched::GridSpec, Strin
             // static FP16 method (accumulates OOMs) vs elasticity-only
             // (sheds batch) — the pressure contrast in miniature.
             "amp_dynamic,greedy_batch"
+        } else if replicas > 1 {
+            // A replicated sweep gets the elastic-replica composition
+            // too: under the squeeze it sheds replicas before the
+            // batch moves, with zero simulated OOMs.
+            "fp32,amp_static,amp_dynamic,greedy_batch,tri_accel,tri_accel_replica"
         } else {
             "fp32,amp_static,amp_dynamic,greedy_batch,tri_accel"
         },
@@ -599,7 +656,11 @@ fn pressure_grid(args: &Args, engine: &Engine) -> Result<(sched::GridSpec, Strin
     let trace = args.get_or("trace", &default_trace);
     harness::validate_models(engine, &[model.as_str()])?;
     let keys: Vec<&str> = methods.split(',').collect();
-    let tweak = harness::quick_budget(steps, epochs);
+    let budget = harness::quick_budget(steps, epochs);
+    let tweak = move |cfg: &mut Config| {
+        budget(cfg);
+        cfg.replicas = replicas;
+    };
     let spec = sched::pressure_spec(&model, &keys, &seeds, &trace, &tweak)?;
     Ok((spec, model, trace))
 }
@@ -634,7 +695,12 @@ fn fig_grid(args: &Args, engine: &Engine) -> Result<(sched::GridSpec, String, u6
     let steps: usize = args.parse_or("steps", 60)?;
     let epochs: usize = args.parse_or("epochs", 3)?;
     harness::validate_models(engine, &[model.as_str()])?;
-    let tweak = harness::quick_budget(steps, epochs);
+    let replicas = parse_replicas(args)?;
+    let budget = harness::quick_budget(steps, epochs);
+    let tweak = move |cfg: &mut Config| {
+        budget(cfg);
+        cfg.replicas = replicas;
+    };
     Ok((sched::fig_spec(&model, seed, &tweak), model, seed))
 }
 

@@ -192,6 +192,11 @@ pub struct VramSim {
     /// Current trainer step (drives the trace). Advanced by
     /// [`Self::set_step`]; constant traces ignore it.
     step: u64,
+    /// Live data-parallel replica count: [`Self::usage`] accounts the
+    /// *aggregate* across replicas (each holds its own weights /
+    /// grads / workspace; activations split). 1 = the pre-replica
+    /// model, bit-identically.
+    replicas: usize,
     noise_frac: f64,
     rng: Rng,
     // static per-model quantities (elements)
@@ -220,6 +225,7 @@ impl VramSim {
             budget_gb,
             trace: BudgetTrace::Constant,
             step: 0,
+            replicas: 1,
             noise_frac,
             rng: Rng::stream(seed, 0x4D454D),
             param_elems_total: entry.param_count,
@@ -285,19 +291,30 @@ impl VramSim {
         let max_layer = self.layer_param_elems.iter().copied().max().unwrap_or(0);
         let transient = if curv_active { f(max_layer, 4) * 2.0 } else { 0.0 };
 
+        // Aggregate across live data-parallel replicas: every replica
+        // device holds its own master weights, momentum, compute
+        // copies, gradients, and workspace — plus its own runtime base
+        // overhead — while the saved activations split across replicas
+        // (each holds 1/N of the batch, so the aggregate activation
+        // bytes are unchanged). The curvature probe runs on one
+        // replica, so its transient is unscaled too. `replicas = 1` is
+        // bit-identical to the pre-replica model (×1.0 is exact and
+        // the addition order is preserved).
+        let r = self.replicas.max(1) as f64;
         let noise = 1.0 + self.noise_frac * (2.0 * self.rng.next_f64() - 1.0);
-        let total_bytes = (params + momentum + copies + grads + acts + workspace + transient)
+        let total_bytes = ((params + momentum + copies + grads) * r + acts + workspace * r
+            + transient)
             * FRAG_FACTOR
             * noise
-            + BASE_OVERHEAD_BYTES;
+            + BASE_OVERHEAD_BYTES * r;
 
         let u = StepUsage {
-            params_gb: params / GIB,
-            compute_copies_gb: copies / GIB,
-            grads_gb: grads / GIB,
-            momentum_gb: momentum / GIB,
+            params_gb: params * r / GIB,
+            compute_copies_gb: copies * r / GIB,
+            grads_gb: grads * r / GIB,
+            momentum_gb: momentum * r / GIB,
             activations_gb: acts / GIB,
-            workspace_gb: workspace / GIB,
+            workspace_gb: workspace * r / GIB,
             transient_gb: transient / GIB,
             total_gb: total_bytes / GIB,
         };
@@ -320,6 +337,36 @@ impl VramSim {
     /// Install a time-varying budget trace (VRAM-pressure scenarios).
     pub fn set_trace(&mut self, trace: BudgetTrace) {
         self.trace = trace;
+    }
+
+    /// Set the live data-parallel replica count the accounting
+    /// aggregates over (clamped to ≥ 1).
+    pub fn set_replicas(&mut self, n: usize) {
+        self.replicas = n.max(1);
+    }
+
+    /// The live replica count the accounting aggregates over.
+    pub fn replicas(&self) -> usize {
+        self.replicas
+    }
+
+    /// Predictive fit at a *candidate* replica count: would a step at
+    /// (b, codes) with `n` live replicas stay under `frac·budget`?
+    /// Probes without mutating the live count, peak, or noise stream —
+    /// the replica controller's restore veto.
+    pub fn would_fit_replicas(
+        &mut self,
+        n: usize,
+        b: usize,
+        codes: &[i32],
+        curv_active: bool,
+        frac: f64,
+    ) -> bool {
+        let live = self.replicas;
+        self.replicas = n.max(1);
+        let ok = self.would_fit_within(b, codes, curv_active, frac);
+        self.replicas = live;
+        ok
     }
 
     /// The installed budget trace ([`BudgetTrace::Constant`] default).
@@ -422,6 +469,28 @@ impl SpeedModel {
             .sum();
         let flops = total * 3.0 * b as f64; // fwd + 2×fwd for bwd
         flops / (self.fp32_tflops * 1e12) + self.fixed_overhead_s
+    }
+
+    /// Modeled seconds for one *replicated* fwd+bwd step: `replicas`
+    /// engines each execute 1/N of the batch concurrently, with a 5%
+    /// per-extra-replica synchronization/reduction tax on the compute
+    /// term (the ordered gradient reduction is serial in N). The
+    /// per-step launch overhead is not divided — every replica step
+    /// still pays it once. `replicas = 1` is [`Self::step_seconds`]
+    /// bit-identically.
+    pub fn step_seconds_replicated(
+        &self,
+        b: usize,
+        codes: &[i32],
+        layer_flops: &[usize],
+        replicas: usize,
+    ) -> f64 {
+        if replicas <= 1 {
+            return self.step_seconds(b, codes, layer_flops);
+        }
+        let n = replicas as f64;
+        let compute = self.step_seconds(b, codes, layer_flops) - self.fixed_overhead_s;
+        compute / n * (1.0 + 0.05 * (n - 1.0)) + self.fixed_overhead_s
     }
 }
 
@@ -659,6 +728,71 @@ mod tests {
         let mut sim = VramSim::new(&e, 0.05, 0.0, 0);
         sim.usage(64, &[FP32, FP32], false);
         assert_eq!(sim.oom_events(), 1);
+    }
+
+    #[test]
+    fn replicas_scale_weights_not_activations() {
+        let e = toy_entry();
+        let mut a = VramSim::new(&e, 10.0, 0.0, 0);
+        let mut b = VramSim::new(&e, 10.0, 0.0, 0);
+        b.set_replicas(2);
+        assert_eq!(b.replicas(), 2);
+        let u1 = a.usage(64, &[FP32, FP32], false);
+        let u2 = b.usage(64, &[FP32, FP32], false);
+        assert_eq!(u2.params_gb, 2.0 * u1.params_gb);
+        assert_eq!(u2.momentum_gb, 2.0 * u1.momentum_gb);
+        assert_eq!(u2.grads_gb, 2.0 * u1.grads_gb);
+        assert_eq!(u2.workspace_gb, 2.0 * u1.workspace_gb);
+        assert_eq!(u2.activations_gb, u1.activations_gb, "acts split across replicas");
+        assert!(u2.total_gb > u1.total_gb && u2.total_gb < 2.0 * u1.total_gb + 1.0);
+    }
+
+    #[test]
+    fn one_replica_is_bit_identical_to_the_pre_replica_model() {
+        let e = toy_entry();
+        let mut a = VramSim::new(&e, 0.5, 0.01, 7);
+        let mut b = VramSim::new(&e, 0.5, 0.01, 7);
+        b.set_replicas(1);
+        for step in 0..10u64 {
+            let ua = a.usage(32, &[BF16, FP16], step % 3 == 0);
+            let ub = b.usage(32, &[BF16, FP16], step % 3 == 0);
+            assert_eq!(ua.total_gb.to_bits(), ub.total_gb.to_bits());
+            assert_eq!(ua.workspace_gb.to_bits(), ub.workspace_gb.to_bits());
+        }
+        assert_eq!(a.peak_gb().to_bits(), b.peak_gb().to_bits());
+    }
+
+    #[test]
+    fn would_fit_replicas_probes_without_mutating() {
+        let e = toy_entry();
+        let mut sim = VramSim::new(&e, 0.1, 0.0, 0);
+        let fits1 = sim.would_fit_replicas(1, 32, &[FP16, FP16], false, 1.0);
+        let fits4 = sim.would_fit_replicas(4, 32, &[FP16, FP16], false, 1.0);
+        assert!(fits1, "one replica fits the 0.1 GiB budget");
+        assert!(!fits4, "four replicas' aggregate weights must not");
+        assert_eq!(sim.replicas(), 1, "probe restores the live count");
+        assert_eq!(sim.oom_events(), 0);
+        assert_eq!(sim.peak_gb(), BASE_OVERHEAD_BYTES / GIB, "peak untouched");
+    }
+
+    #[test]
+    fn replicated_speed_scales_sublinearly() {
+        let e = toy_entry();
+        let sm = SpeedModel::t4_like();
+        let fl: Vec<usize> = e.layers.iter().map(|l| l.flops).collect();
+        let codes = [FP32, FP32];
+        let t1 = sm.step_seconds_replicated(96, &codes, &fl, 1);
+        assert_eq!(
+            t1.to_bits(),
+            sm.step_seconds(96, &codes, &fl).to_bits(),
+            "one replica is the plain model, bit-identically"
+        );
+        let t2 = sm.step_seconds_replicated(96, &codes, &fl, 2);
+        let t4 = sm.step_seconds_replicated(96, &codes, &fl, 4);
+        assert!(t2 < t1 && t4 < t2, "more replicas is faster");
+        let c1 = t1 - sm.fixed_overhead_s;
+        let c4 = t4 - sm.fixed_overhead_s;
+        assert!(c4 > c1 / 4.0, "sync tax keeps the scaling sublinear");
     }
 
     #[test]

@@ -126,6 +126,12 @@ pub struct RunMetrics {
     pub ctrl_windows: u64,
     /// Batch-policy moves + vetoes decided (0 for static baselines).
     pub batch_decisions: u64,
+    /// Replica-policy sheds + restores + vetoes decided (0 unless an
+    /// `elastic_replicas` method runs with `--replicas > 1`).
+    pub replica_decisions: u64,
+    /// Smallest live replica count over the run's steps (how far the
+    /// elastic policy shed under pressure; 0 until a step records).
+    pub min_replicas: usize,
 }
 
 impl RunMetrics {
@@ -134,6 +140,13 @@ impl RunMetrics {
     pub fn record_batch(&mut self, step: u64, b: usize) {
         if self.batch_trace.last().map(|&(_, pb)| pb) != Some(b) {
             self.batch_trace.push((step, b));
+        }
+    }
+
+    /// Record the live replica count a step ran with (keeps the min).
+    pub fn record_replicas(&mut self, r: usize) {
+        if self.min_replicas == 0 || r < self.min_replicas {
+            self.min_replicas = r;
         }
     }
 
@@ -257,6 +270,7 @@ impl RunMetrics {
         counters.insert("curv_firings".into(), Json::Num(self.curv_firings as f64));
         counters.insert("ctrl_windows".into(), Json::Num(self.ctrl_windows as f64));
         counters.insert("batch_decisions".into(), Json::Num(self.batch_decisions as f64));
+        counters.insert("replica_decisions".into(), Json::Num(self.replica_decisions as f64));
         obj.insert("counters".into(), Json::Obj(counters));
         Json::Obj(obj)
     }

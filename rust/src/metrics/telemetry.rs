@@ -101,13 +101,16 @@ pub fn ev_run_finished(job: &str, result: Json, wall_s: f64) -> Json {
 }
 
 /// `step`: one optimizer step — step index, live batch size, training
-/// loss, and the modeled accelerator-seconds for the step.
-pub fn ev_step(step: u64, batch: usize, loss: f64, modeled_s: f64) -> Json {
+/// loss, the modeled accelerator-seconds for the step, and the live
+/// data-parallel replica count (1 for non-replicated runs; replica
+/// moves never change the loss trajectory).
+pub fn ev_step(step: u64, batch: usize, loss: f64, modeled_s: f64, replicas: usize) -> Json {
     let mut m = base("step");
     num(&mut m, "step", step as f64);
     num(&mut m, "batch", batch as f64);
     num(&mut m, "loss", loss);
     num(&mut m, "modeled_s", modeled_s);
+    num(&mut m, "replicas", replicas as f64);
     Json::Obj(m)
 }
 
@@ -122,14 +125,22 @@ pub fn ev_oom(step: u64, used_gb: f64, max_gb: f64) -> Json {
 }
 
 /// `control_window`: one §3.4 control-window evaluation — how many
-/// curvature promotions fired, the batch size after the window, and
-/// the live loss scale.
-pub fn ev_control_window(step: u64, promotions: usize, batch: usize, loss_scale: f64) -> Json {
+/// curvature promotions fired, the batch size after the window, the
+/// live loss scale, and the replica count after the window (the
+/// elastic shed/restore decisions surface here).
+pub fn ev_control_window(
+    step: u64,
+    promotions: usize,
+    batch: usize,
+    loss_scale: f64,
+    replicas: usize,
+) -> Json {
     let mut m = base("control_window");
     num(&mut m, "step", step as f64);
     num(&mut m, "promotions", promotions as f64);
     num(&mut m, "batch", batch as f64);
     num(&mut m, "loss_scale", loss_scale);
+    num(&mut m, "replicas", replicas as f64);
     Json::Obj(m)
 }
 
@@ -308,14 +319,16 @@ mod tests {
 
     #[test]
     fn events_carry_schema_and_kind() {
-        let ev = ev_step(7, 64, 2.5, 0.001);
+        let ev = ev_step(7, 64, 2.5, 0.001, 2);
         assert_eq!(ev.get("schema").unwrap().as_i64(), Some(SCHEMA_VERSION as i64));
         assert_eq!(ev.get("event").unwrap().as_str(), Some("step"));
         assert_eq!(ev.get("batch").unwrap().as_usize(), Some(64));
+        assert_eq!(ev.get("replicas").unwrap().as_usize(), Some(2));
         let ev = ev_oom(3, 0.5, 0.4);
         assert_eq!(ev.get("event").unwrap().as_str(), Some("oom"));
-        let ev = ev_control_window(9, 2, 96, 1024.0);
+        let ev = ev_control_window(9, 2, 96, 1024.0, 2);
         assert_eq!(ev.get("promotions").unwrap().as_usize(), Some(2));
+        assert_eq!(ev.get("replicas").unwrap().as_usize(), Some(2));
         let ev = ev_run_started("j", "m", "tri_accel", 1, 0xAB, 0xCD);
         assert_eq!(ev.get("digest").unwrap().as_str(), Some("00000000000000ab"));
     }
@@ -352,8 +365,8 @@ mod tests {
         let dir = std::env::temp_dir().join(format!("triaccel_tel_{}", std::process::id()));
         let path = dir.join("events.jsonl");
         let mut w = JsonlWriter::create(&path).unwrap();
-        w.emit(&ev_step(0, 32, 2.0, 0.001));
-        w.emit(&ev_step(1, 32, 1.9, 0.001));
+        w.emit(&ev_step(0, 32, 2.0, 0.001, 1));
+        w.emit(&ev_step(1, 32, 1.9, 0.001, 1));
         w.flush().unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         let lines: Vec<&str> = text.lines().collect();
@@ -368,13 +381,13 @@ mod tests {
 
     #[test]
     fn crc_seal_detects_tampering() {
-        let line = sealed_line(&ev_step(3, 64, 1.5, 0.002));
+        let line = sealed_line(&ev_step(3, 64, 1.5, 0.002, 1));
         let j = Json::parse(&line).unwrap();
         assert!(crc_ok(&j));
         let tampered = line.replace("\"batch\":64", "\"batch\":65");
         assert_ne!(tampered, line);
         assert!(!crc_ok(&Json::parse(&tampered).unwrap()), "flipped field must fail the seal");
-        assert!(!crc_ok(&ev_step(3, 64, 1.5, 0.002)), "unsealed event never verifies");
+        assert!(!crc_ok(&ev_step(3, 64, 1.5, 0.002, 1)), "unsealed event never verifies");
     }
 
     #[test]
@@ -382,7 +395,7 @@ mod tests {
         let dir = std::env::temp_dir().join(format!("triaccel_teld_{}", std::process::id()));
         let path = dir.join("drain.jsonl");
         let mut w = JsonlWriter::create(&path).unwrap();
-        w.emit(&ev_step(0, 32, 2.0, 0.001));
+        w.emit(&ev_step(0, 32, 2.0, 0.001, 1));
         assert_eq!(
             std::fs::read_to_string(&path).unwrap(),
             "",
@@ -392,7 +405,7 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         assert_eq!(text.lines().count(), 2, "run_finished drains the buffer");
         assert!(text.ends_with('\n'), "file ends on a complete record");
-        w.emit(&ev_step(1, 32, 1.9, 0.001));
+        w.emit(&ev_step(1, 32, 1.9, 0.001, 1));
         drop(w);
         let text = std::fs::read_to_string(&path).unwrap();
         assert_eq!(text.lines().count(), 3, "drop drains the buffered tail");
@@ -407,7 +420,7 @@ mod tests {
         let sink = SharedSink::new(JsonlWriter::create(&path).unwrap());
         let mut clone: Box<dyn TelemetrySink> = Box::new(sink.clone());
         sink.post(&ev_run_started("j", "m", "k", 0, 1, 2));
-        clone.emit(&ev_step(0, 16, 2.0, 0.001));
+        clone.emit(&ev_step(0, 16, 2.0, 0.001, 1));
         sink.post(&ev_run_finished("j", Json::Null, 0.1));
         sink.flush().unwrap();
         let text = std::fs::read_to_string(&path).unwrap();

@@ -36,12 +36,14 @@ pub mod curvature;
 pub mod plane;
 pub mod precision;
 pub mod registry;
+pub mod replica;
 
 pub use batch::{BatchController, BatchMove, FixedBatch};
 pub use curvature::{CurvatureScheduler, NoCurvature};
 pub use plane::{ControlDecision, ControlPlane, PolicyCounts, StepPlan};
 pub use precision::{LossScaler, PinnedPrecision, PrecisionController};
 pub use registry::MethodSpec;
+pub use replica::{ReplicaController, ReplicaMove};
 
 /// The historical name: the §3.4 unified controller is now the policy
 /// plane. Kept as an alias so call sites and tests read either way.

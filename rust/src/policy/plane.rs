@@ -30,6 +30,7 @@ use crate::manifest::{ModelEntry, BF16, FP16, FP32};
 use super::batch::{BatchConfig, BatchController, BatchMove, FixedBatch};
 use super::curvature::{CurvatureConfig, CurvatureScheduler, NoCurvature};
 use super::precision::{LossScaler, PinnedPrecision, PrecisionConfig, PrecisionController};
+use super::replica::{ReplicaConfig, ReplicaController, ReplicaMove};
 use super::{ckpt_lookup_opt, BatchPolicy, CurvaturePolicy, PrecisionPolicy};
 
 /// What one control window decided (telemetry / tests / traces).
@@ -40,6 +41,8 @@ pub struct ControlDecision {
     pub promotions: Vec<usize>,
     pub batch_move: BatchMove,
     pub batch_size: usize,
+    pub replica_move: ReplicaMove,
+    pub replicas: usize,
     pub loss_scale: f32,
 }
 
@@ -51,6 +54,9 @@ pub struct StepPlan {
     pub codes: Vec<i32>,
     pub lr_scales: Vec<f32>,
     pub loss_scale: f32,
+    /// Live data-parallel replica count (1 unless `--replicas` and a
+    /// replicated backend are in play; never affects numerics).
+    pub replicas: usize,
     /// Should the trainer run a curvature probe at this step?
     pub curvature_due: bool,
 }
@@ -62,6 +68,7 @@ pub struct PolicyCounts {
     pub windows: u64,
     pub precision_transitions: u64,
     pub batch_decisions: u64,
+    pub replica_decisions: u64,
     pub curv_firings: u64,
     pub scaler_overflows: u64,
 }
@@ -77,6 +84,10 @@ pub struct ControlPlane {
     pub precision: Box<dyn PrecisionPolicy>,
     pub curvature: Box<dyn CurvaturePolicy>,
     pub batch: Box<dyn BatchPolicy>,
+    /// The replica axis: elastic for `elastic_replicas` methods, a
+    /// fixed (inert) count for everything else. Always present so the
+    /// trainer has one surface regardless of method.
+    pub replica: ReplicaController,
     pub scaler: LossScaler,
     t_ctrl: u64,
     windows: u64,
@@ -132,12 +143,21 @@ impl ControlPlane {
         } else {
             LossScaler::new(cfg.init_loss_scale, cfg.loss_scale_growth_interval)
         };
+        // The replica axis: the count itself is workload shape
+        // (`--replicas`); the *elasticity* is method
+        // (`elastic_replicas` registry methods).
+        let replica = ReplicaController::new(
+            cfg.replicas,
+            cfg.elastic_replicas,
+            ReplicaConfig::from_cfg(cfg),
+        );
         ControlPlane {
             method: cfg.method,
             ablation,
             precision,
             curvature,
             batch,
+            replica,
             scaler,
             t_ctrl: cfg.t_ctrl.max(1),
             windows: 0,
@@ -151,6 +171,7 @@ impl ControlPlane {
             codes: self.codes(),
             lr_scales: self.lr_scales(),
             loss_scale: self.loss_scale(),
+            replicas: self.replica.current(),
             curvature_due: self.curvature_due(step),
         }
     }
@@ -198,10 +219,16 @@ impl ControlPlane {
         self.curvature.observe(lambdas)
     }
 
-    /// An actual (simulated or real) OOM happened at `step`: the
-    /// elastic policy sheds one bucket immediately; static baselines
-    /// hold (and a real run would have crashed). True if B moved.
+    /// An actual (simulated or real) OOM happened at `step`. The
+    /// elastic levers react immediately, cheapest first: a replica
+    /// shed frees aggregate memory without touching the trajectory, so
+    /// it goes before a batch shrink (which changes B); static
+    /// baselines hold (and a real run would have crashed). True if
+    /// either lever moved.
     pub fn oom_event(&mut self, step: u64) -> bool {
+        if self.replica.force_shed(step) {
+            return true;
+        }
         self.batch.force_shrink(step)
     }
 
@@ -212,14 +239,45 @@ impl ControlPlane {
 
     /// One §3.4 control window. `mem_used`/`mem_max` from the memory
     /// monitor; `fits(b)` is the predictive OOM check for a candidate
-    /// batch size *under the current precision codes*.
+    /// batch size *under the current precision codes*. Replica
+    /// restores are never vetoed through this entry point — the
+    /// trainer uses [`Self::control_window_replicated`], which takes
+    /// the aggregate-VRAM fit predicate; with a fixed replica policy
+    /// (every non-replica method) the two are identical.
     pub fn control_window<F: FnMut(usize) -> bool>(
         &mut self,
         step: u64,
         mem_used: f64,
         mem_max: f64,
-        mut fits: F,
+        fits: F,
     ) -> ControlDecision {
+        self.control_window_replicated(step, mem_used, mem_max, fits, |_| true)
+    }
+
+    /// One §3.4 control window with the replica axis live:
+    /// `fits_replicas(n)` is the predictive check that the *current*
+    /// batch fits the budget when `n` replicas are live (aggregate
+    /// accounting across replicas, from `VramSim`).
+    ///
+    /// Lever ordering: replicas move first — shedding one frees every
+    /// live replica's params/grads/workspace without touching the
+    /// trajectory, so it is strictly cheaper than a batch shrink. The
+    /// batch controller only acts in windows where the replica axis
+    /// held (one memory lever per window keeps the response damped);
+    /// with a fixed replica policy it acts every window, exactly as
+    /// before the replica axis existed.
+    pub fn control_window_replicated<F, G>(
+        &mut self,
+        step: u64,
+        mem_used: f64,
+        mem_max: f64,
+        mut fits: F,
+        mut fits_replicas: G,
+    ) -> ControlDecision
+    where
+        F: FnMut(usize) -> bool,
+        G: FnMut(usize) -> bool,
+    {
         self.windows += 1;
 
         // (2) precision from variance; (3) promotion from curvature.
@@ -236,8 +294,16 @@ impl ControlPlane {
             }
         }
 
-        // (4) batch from memory.
-        let batch_move = self.batch.update(step, mem_used, mem_max, &mut fits);
+        // (4a) replicas from memory — the numerics-free lever.
+        let replica_move = self.replica.update(step, mem_used, mem_max, &mut fits_replicas);
+
+        // (4b) batch from memory, in windows where replicas held.
+        let batch_move = match replica_move {
+            ReplicaMove::Shed | ReplicaMove::Restore => BatchMove::Hold,
+            ReplicaMove::Hold | ReplicaMove::VetoedRestore => {
+                self.batch.update(step, mem_used, mem_max, &mut fits)
+            }
+        };
 
         ControlDecision {
             step,
@@ -245,6 +311,8 @@ impl ControlPlane {
             promotions,
             batch_move,
             batch_size: self.batch.current(),
+            replica_move,
+            replicas: self.replica.current(),
             loss_scale: self.scaler.scale(),
         }
     }
@@ -274,6 +342,17 @@ impl ControlPlane {
         self.batch.current()
     }
 
+    /// Live data-parallel replica count (1 for non-replicated runs).
+    pub fn replicas(&self) -> usize {
+        self.replica.current()
+    }
+
+    /// Is the elastic replica path active (an `elastic_replicas`
+    /// method)?
+    pub fn replica_active(&self) -> bool {
+        self.replica.elastic()
+    }
+
     pub fn windows(&self) -> u64 {
         self.windows
     }
@@ -284,6 +363,7 @@ impl ControlPlane {
             windows: self.windows,
             precision_transitions: self.precision.transitions(),
             batch_decisions: self.batch.decisions(),
+            replica_decisions: self.replica.decisions(),
             curv_firings: self.curvature.firings(),
             scaler_overflows: self.scaler.overflows(),
         }
@@ -299,6 +379,7 @@ impl ControlPlane {
         out.extend(self.precision.export_state());
         out.extend(self.curvature.export_state());
         out.extend(self.batch.export_state());
+        out.extend(self.replica.export_state());
         out.extend(self.scaler.export_state());
         out
     }
@@ -320,6 +401,9 @@ impl ControlPlane {
         self.precision.import_state(kv)?;
         self.curvature.import_state(kv)?;
         self.batch.import_state(kv)?;
+        // Pre-replica checkpoints carry no replica key: the controller
+        // keeps its fresh position (the fixed configured count).
+        self.replica.import_state(kv)?;
         self.scaler.import_state(kv)?;
         Ok(())
     }
@@ -684,5 +768,93 @@ mod tests {
         assert!(ctl.window_due(10));
         assert!(!ctl.window_due(15));
         assert!(ctl.window_due(20));
+    }
+
+    #[test]
+    fn elastic_replicas_shed_before_batch_and_restore_with_headroom() {
+        let mut c = cfg(Method::TriAccel);
+        c.replicas = 4;
+        c.elastic_replicas = true;
+        let mut ctl = ControlPlane::new(&c, &entry(2));
+        assert!(ctl.replica_active());
+        assert_eq!(ctl.plan_step(0).replicas, 4, "elastic starts at full capacity");
+        // Pressure: the replica axis absorbs it; the batch holds.
+        let d = ctl.control_window_replicated(10, 0.95, 1.0, |_| true, |_| true);
+        assert_eq!(d.replica_move, ReplicaMove::Shed);
+        assert_eq!(d.replicas, 2);
+        assert_eq!(d.batch_move, BatchMove::Hold, "one memory lever per window");
+        assert_eq!(ctl.batch_size(), 96);
+        // Continued pressure sheds to the floor, then the batch moves.
+        ctl.control_window_replicated(20, 0.95, 1.0, |_| true, |_| true);
+        assert_eq!(ctl.replicas(), 1);
+        let d = ctl.control_window_replicated(30, 0.95, 1.0, |_| true, |_| true);
+        assert_eq!(d.replica_move, ReplicaMove::Hold);
+        assert_eq!(d.batch_move, BatchMove::Shrink, "replica floor → batch lever");
+        // Headroom: restore honors the aggregate-VRAM veto.
+        let d = ctl.control_window_replicated(40, 0.2, 1.0, |_| true, |_| false);
+        assert_eq!(d.replica_move, ReplicaMove::VetoedRestore);
+        assert_eq!(d.batch_move, BatchMove::Grow, "vetoed restore frees the window");
+        let d = ctl.control_window_replicated(50, 0.2, 1.0, |_| true, |_| true);
+        assert_eq!(d.replica_move, ReplicaMove::Restore);
+        assert_eq!(d.replicas, 2);
+        assert_eq!(d.batch_move, BatchMove::Hold);
+        assert!(ctl.counts().replica_decisions >= 4);
+    }
+
+    #[test]
+    fn oom_sheds_replicas_before_shrinking_the_batch() {
+        let mut c = cfg(Method::TriAccel);
+        c.replicas = 2;
+        c.elastic_replicas = true;
+        let mut ctl = ControlPlane::new(&c, &entry(1));
+        assert!(ctl.oom_event(5));
+        assert_eq!(ctl.replicas(), 1);
+        assert_eq!(ctl.batch_size(), 96, "batch untouched while replicas can shed");
+        assert!(ctl.oom_event(6));
+        assert_eq!(ctl.replicas(), 1);
+        assert_eq!(ctl.batch_size(), 64, "replica floor → batch shrink");
+    }
+
+    #[test]
+    fn non_replica_methods_pin_the_replica_count() {
+        let mut c = cfg(Method::TriAccel);
+        c.replicas = 2; // workload shape without an elastic_replicas method
+        let mut ctl = ControlPlane::new(&c, &entry(1));
+        assert!(!ctl.replica_active());
+        assert_eq!(ctl.plan_step(0).replicas, 2);
+        let d = ctl.control_window(10, 0.99, 1.0, |_| true);
+        assert_eq!(d.replica_move, ReplicaMove::Hold);
+        assert_eq!(d.replicas, 2);
+        assert_eq!(d.batch_move, BatchMove::Shrink, "batch lever acts as before");
+        ctl.oom_event(11);
+        assert_eq!(ctl.replicas(), 2, "fixed count never sheds");
+        assert_eq!(ctl.counts().replica_decisions, 0);
+    }
+
+    #[test]
+    fn replica_state_roundtrips_and_legacy_checkpoints_stay_fixed() {
+        let mut c = cfg(Method::TriAccel);
+        c.replicas = 4;
+        c.elastic_replicas = true;
+        let mut ctl = ControlPlane::new(&c, &entry(1));
+        ctl.control_window_replicated(10, 0.95, 1.0, |_| true, |_| true);
+        assert_eq!(ctl.replicas(), 2);
+        let saved = ctl.export_state();
+        let mut fresh = ControlPlane::new(&c, &entry(1));
+        fresh.import_state(&saved).unwrap();
+        assert_eq!(fresh.replicas(), 2);
+        assert_eq!(
+            fresh.counts().replica_decisions,
+            ctl.counts().replica_decisions
+        );
+        // A pre-replica checkpoint (no replica key) restores cleanly
+        // and keeps the fresh full-capacity position.
+        let legacy: Vec<(String, Vec<f64>)> = saved
+            .into_iter()
+            .filter(|(k, _)| !k.contains("replica"))
+            .collect();
+        let mut old = ControlPlane::new(&c, &entry(1));
+        old.import_state(&legacy).unwrap();
+        assert_eq!(old.replicas(), 4);
     }
 }

@@ -32,6 +32,10 @@ pub struct MethodSpec {
     /// `None` = the family default (FP32 baseline pins FP32, everything
     /// else pins BF16 when dynamic precision is off).
     pub pin: Option<i32>,
+    /// Let the control plane elastically shed/restore data-parallel
+    /// replicas under VRAM pressure (requires `--replicas > 1` to have
+    /// any effect; replica moves never change training numerics).
+    pub elastic_replicas: bool,
     /// One-line description for `--list-methods`.
     pub about: &'static str,
 }
@@ -45,6 +49,7 @@ pub const REGISTRY: &[MethodSpec] = &[
         family: Method::Fp32,
         ablation: Ablation { dynamic_precision: false, dynamic_batch: false, curvature: false },
         pin: None,
+        elastic_replicas: false,
         about: "FP32 SGD+momentum, fixed batch, no adaptivity",
     },
     MethodSpec {
@@ -54,6 +59,7 @@ pub const REGISTRY: &[MethodSpec] = &[
         family: Method::AmpStatic,
         ablation: Ablation { dynamic_precision: false, dynamic_batch: false, curvature: false },
         pin: None,
+        elastic_replicas: false,
         about: "uniform BF16 compute, dynamic loss scale, fixed batch",
     },
     MethodSpec {
@@ -63,6 +69,7 @@ pub const REGISTRY: &[MethodSpec] = &[
         family: Method::TriAccel,
         ablation: Ablation { dynamic_precision: true, dynamic_batch: true, curvature: true },
         pin: None,
+        elastic_replicas: false,
         about: "full §3.4 loop: adaptive precision × curvature × elastic batch",
     },
     MethodSpec {
@@ -72,6 +79,7 @@ pub const REGISTRY: &[MethodSpec] = &[
         family: Method::TriAccel,
         ablation: Ablation { dynamic_precision: true, dynamic_batch: true, curvature: false },
         pin: None,
+        elastic_replicas: false,
         about: "adaptive precision + elastic batch, curvature probes off",
     },
     MethodSpec {
@@ -81,6 +89,7 @@ pub const REGISTRY: &[MethodSpec] = &[
         family: Method::AmpStatic,
         ablation: Ablation { dynamic_precision: false, dynamic_batch: false, curvature: false },
         pin: Some(FP16),
+        elastic_replicas: false,
         about: "uniform FP16 compute driven by the dynamic loss scale alone",
     },
     MethodSpec {
@@ -90,7 +99,18 @@ pub const REGISTRY: &[MethodSpec] = &[
         family: Method::TriAccel,
         ablation: Ablation { dynamic_precision: false, dynamic_batch: true, curvature: false },
         pin: None,
+        elastic_replicas: false,
         about: "elasticity only: pinned BF16, batch follows the VRAM signal",
+    },
+    MethodSpec {
+        key: "tri_accel_replica",
+        aliases: &["tri-accel-replica", "triaccel_replica"],
+        label: "Tri-Accel (elastic replicas)",
+        family: Method::TriAccel,
+        ablation: Ablation { dynamic_precision: true, dynamic_batch: true, curvature: true },
+        pin: None,
+        elastic_replicas: true,
+        about: "full loop + elastic data-parallel replica count under VRAM pressure",
     },
 ];
 
@@ -123,11 +143,14 @@ pub fn resolve(name: &str) -> Result<&'static MethodSpec> {
     )
 }
 
-/// Apply a spec to a config: family, ablation toggles, precision pin.
+/// Apply a spec to a config: family, ablation toggles, precision pin,
+/// elastic-replica control. (`cfg.replicas` itself is workload shape,
+/// not method — `--replicas` sets it independently.)
 pub fn apply(cfg: &mut Config, spec: &MethodSpec) {
     cfg.method = spec.family;
     cfg.ablation = spec.ablation;
     cfg.pin_override = spec.pin;
+    cfg.elastic_replicas = spec.elastic_replicas;
 }
 
 /// The registry key describing a config's *effective* method — the
@@ -149,7 +172,11 @@ pub fn effective_key(cfg: &Config) -> String {
         cfg.pin_override
     };
     for s in REGISTRY {
-        if s.family == cfg.method && s.ablation == ablation && s.pin == pin_override {
+        if s.family == cfg.method
+            && s.ablation == ablation
+            && s.pin == pin_override
+            && s.elastic_replicas == cfg.elastic_replicas
+        {
             return s.key.to_string();
         }
     }
@@ -161,7 +188,7 @@ pub fn effective_key(cfg: &Config) -> String {
         Some(c) => format!("code{c}"),
     };
     format!(
-        "{}[p{}b{}c{}&pin={pin}]",
+        "{}[p{}b{}c{}r{}&pin={pin}]",
         match cfg.method {
             Method::Fp32 => "fp32",
             Method::AmpStatic => "amp_static",
@@ -170,6 +197,7 @@ pub fn effective_key(cfg: &Config) -> String {
         ablation.dynamic_precision as u8,
         ablation.dynamic_batch as u8,
         ablation.curvature as u8,
+        cfg.elastic_replicas as u8,
     )
 }
 

@@ -1,0 +1,358 @@
+//! Elastic data-parallel replica control under VRAM pressure.
+//!
+//! The replica count is the one memory lever that never touches
+//! training numerics: the native replicated backend computes over
+//! *canonical* batch shards with an ordered reduction, so shedding or
+//! restoring replicas changes aggregate VRAM (each live replica holds
+//! its own params/grads/workspace) while the parameter trajectory
+//! stays bit-identical (see `runtime::native::replica`). The batch
+//! controller, by contrast, changes B(t) — a different trajectory.
+//!
+//! The control rule mirrors §3.3's feedback form over the replica
+//! ladder (powers of two up to the configured ceiling):
+//!
+//! ```text
+//! R(t+1) = R(t) · 2   if MemUsage(t) < ρ_low · MemMax and the
+//!                     restored count is predicted to fit
+//!          R(t) / 2   if MemUsage(t) > ρ_high · MemMax
+//!          R(t)       otherwise
+//! ```
+//!
+//! The plane orders the two memory levers: replicas shed *before* the
+//! batch shrinks (free memory without touching the trajectory first),
+//! and an actual OOM force-sheds a replica rung before it drops a
+//! batch bucket. Like batch growth, restoring replicas is vetoed by a
+//! predictive fit check so the controller never causes the OOM it
+//! exists to avoid.
+
+use super::ckpt_lookup_opt;
+
+/// Outcome of one replica decision (telemetry / tests).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplicaMove {
+    /// Dropped one ladder rung (halved the live count).
+    Shed,
+    /// Climbed one ladder rung (doubled the live count).
+    Restore,
+    Hold,
+    /// Restore was indicated but vetoed by the fit predictor.
+    VetoedRestore,
+}
+
+/// Thresholds and damping for the replica feedback rule (shared with
+/// the §3.3 batch controller: one pressure vocabulary).
+#[derive(Debug, Clone)]
+pub struct ReplicaConfig {
+    pub rho_low: f64,
+    pub rho_high: f64,
+    /// Minimum steps between moves.
+    pub cooldown: u64,
+}
+
+impl ReplicaConfig {
+    pub fn from_cfg(cfg: &crate::config::Config) -> ReplicaConfig {
+        ReplicaConfig {
+            rho_low: cfg.rho_low,
+            rho_high: cfg.rho_high,
+            cooldown: cfg.batch_cooldown,
+        }
+    }
+}
+
+/// The replica-count policy: elastic (the feedback rule above) or
+/// fixed (every non-replica method — the count never moves). One type
+/// covers both so the plane always has a replica axis; the fixed mode
+/// is inert and exports no state.
+pub struct ReplicaController {
+    cfg: ReplicaConfig,
+    /// Ascending power-of-two ladder up to the configured ceiling.
+    ladder: Vec<usize>,
+    /// Index into `ladder`.
+    idx: usize,
+    elastic: bool,
+    last_move_step: u64,
+    sheds: u64,
+    restores: u64,
+    vetoes: u64,
+}
+
+impl ReplicaController {
+    /// `capacity` is the configured replica ceiling (`--replicas`);
+    /// elastic controllers start at full capacity and shed downward
+    /// under pressure. A fixed controller pins the count at capacity.
+    pub fn new(capacity: usize, elastic: bool, cfg: ReplicaConfig) -> ReplicaController {
+        let cap = capacity.max(1);
+        let mut ladder = Vec::new();
+        let mut v = 1usize;
+        while v <= cap {
+            ladder.push(v);
+            v *= 2;
+        }
+        // detlint: allow(d6) — the loop above always pushes 1 first
+        // (cap >= 1 by the clamp), so the ladder is never empty.
+        if *ladder.last().unwrap() != cap {
+            ladder.push(cap); // defensive: config validation pins 1|2|4
+        }
+        let idx = ladder.len() - 1;
+        ReplicaController {
+            cfg,
+            ladder,
+            idx,
+            elastic,
+            last_move_step: 0,
+            sheds: 0,
+            restores: 0,
+            vetoes: 0,
+        }
+    }
+
+    /// Policy name (checkpoint namespace / telemetry).
+    pub fn name(&self) -> &'static str {
+        if self.elastic {
+            "replica.elastic"
+        } else {
+            "replica.fixed"
+        }
+    }
+
+    /// Is the elastic path active (vs a pinned count)?
+    pub fn elastic(&self) -> bool {
+        self.elastic
+    }
+
+    /// Live replica count.
+    pub fn current(&self) -> usize {
+        self.ladder[self.idx]
+    }
+
+    /// The configured ceiling (top of the ladder).
+    pub fn capacity(&self) -> usize {
+        // detlint: allow(d6) — the constructor guarantees a nonempty
+        // ladder (it always pushes at least 1).
+        *self.ladder.last().unwrap()
+    }
+
+    /// The ascending replica ladder.
+    pub fn ladder(&self) -> &[usize] {
+        &self.ladder
+    }
+
+    /// One feedback decision. `mem_used`/`mem_max` in GiB; `fits(n)` is
+    /// the predictive OOM veto for running the *current* batch at `n`
+    /// live replicas (aggregate accounting, from `VramSim`).
+    pub fn update<F: FnMut(usize) -> bool>(
+        &mut self,
+        step: u64,
+        mem_used: f64,
+        mem_max: f64,
+        mut fits: F,
+    ) -> ReplicaMove {
+        if !self.elastic {
+            return ReplicaMove::Hold;
+        }
+        let frac = mem_used / mem_max;
+        // Pressure shed bypasses the cooldown, like the batch
+        // controller's shrink: reacting late defeats the purpose.
+        if frac > self.cfg.rho_high {
+            if self.idx > 0 {
+                self.idx -= 1;
+                self.last_move_step = step;
+                self.sheds += 1;
+                return ReplicaMove::Shed;
+            }
+            return ReplicaMove::Hold; // already down to one replica
+        }
+        if step.saturating_sub(self.last_move_step) < self.cfg.cooldown {
+            return ReplicaMove::Hold;
+        }
+        if frac < self.cfg.rho_low && self.idx + 1 < self.ladder.len() {
+            if fits(self.ladder[self.idx + 1]) {
+                self.idx += 1;
+                self.last_move_step = step;
+                self.restores += 1;
+                return ReplicaMove::Restore;
+            }
+            self.vetoes += 1;
+            return ReplicaMove::VetoedRestore;
+        }
+        ReplicaMove::Hold
+    }
+
+    /// Emergency shed on an actual OOM signal: drop one rung
+    /// immediately. The plane tries this *before* a batch shrink —
+    /// replicas are the lever that costs no trajectory change.
+    pub fn force_shed(&mut self, step: u64) -> bool {
+        if !self.elastic || self.idx == 0 {
+            return false;
+        }
+        self.idx -= 1;
+        self.last_move_step = step;
+        self.sheds += 1;
+        true
+    }
+
+    /// Moves + vetoes (controller-overhead telemetry).
+    pub fn decisions(&self) -> u64 {
+        self.sheds + self.restores + self.vetoes
+    }
+
+    /// Serialize (current count, cooldown anchor, shed/restore/veto
+    /// counters). Fixed controllers export nothing — the count is
+    /// config, not state.
+    pub fn export_state(&self) -> Vec<(String, Vec<f64>)> {
+        if !self.elastic {
+            return Vec::new();
+        }
+        vec![(
+            "policy/replica.elastic/state".into(),
+            vec![
+                self.current() as f64,
+                self.last_move_step as f64,
+                self.sheds as f64,
+                self.restores as f64,
+                self.vetoes as f64,
+            ],
+        )]
+    }
+
+    /// Restore state written by [`Self::export_state`]. Checkpoints
+    /// predating the replica axis carry no key — the controller keeps
+    /// its fresh (full-capacity) position, matching how those runs
+    /// actually trained. Fixed controllers ignore any saved state.
+    pub fn import_state(&mut self, kv: &[(String, Vec<f64>)]) -> anyhow::Result<()> {
+        if !self.elastic {
+            return Ok(());
+        }
+        let Some(v) = ckpt_lookup_opt(kv, &["policy/replica.elastic/state"]) else {
+            return Ok(());
+        };
+        anyhow::ensure!(v.len() == 5, "replica state arity");
+        let count = v[0] as usize;
+        let idx = self.ladder.iter().position(|&r| r == count).ok_or_else(|| {
+            anyhow::anyhow!(
+                "checkpoint replica count {count} is not on this ladder {:?}",
+                self.ladder
+            )
+        })?;
+        self.idx = idx;
+        self.last_move_step = v[1] as u64;
+        self.sheds = v[2] as u64;
+        self.restores = v[3] as u64;
+        self.vetoes = v[4] as u64;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ReplicaConfig {
+        ReplicaConfig { rho_low: 0.7, rho_high: 0.9, cooldown: 5 }
+    }
+
+    fn ctl() -> ReplicaController {
+        ReplicaController::new(4, true, cfg())
+    }
+
+    #[test]
+    fn ladder_is_powers_of_two_starting_live_at_capacity() {
+        let c = ctl();
+        assert_eq!(c.ladder(), &[1, 2, 4]);
+        assert_eq!(c.current(), 4, "elastic starts at full capacity");
+        assert_eq!(c.capacity(), 4);
+        let two = ReplicaController::new(2, true, cfg());
+        assert_eq!(two.ladder(), &[1, 2]);
+        let one = ReplicaController::new(1, true, cfg());
+        assert_eq!(one.ladder(), &[1]);
+        assert_eq!(one.current(), 1);
+    }
+
+    #[test]
+    fn sheds_under_pressure_bypassing_cooldown() {
+        let mut c = ctl();
+        assert_eq!(c.update(10, 0.95, 1.0, |_| true), ReplicaMove::Shed);
+        assert_eq!(c.current(), 2);
+        // Immediately again — shed ignores the cooldown.
+        assert_eq!(c.update(11, 0.95, 1.0, |_| true), ReplicaMove::Shed);
+        assert_eq!(c.current(), 1);
+        assert_eq!(c.update(12, 0.95, 1.0, |_| true), ReplicaMove::Hold, "floor");
+    }
+
+    #[test]
+    fn restores_with_headroom_and_a_passing_fit_check() {
+        let mut c = ctl();
+        c.force_shed(0);
+        c.force_shed(0);
+        assert_eq!(c.current(), 1);
+        assert_eq!(c.update(10, 0.2, 1.0, |_| true), ReplicaMove::Restore);
+        assert_eq!(c.current(), 2);
+        assert_eq!(c.update(12, 0.2, 1.0, |_| true), ReplicaMove::Hold, "cooling down");
+        assert_eq!(c.update(20, 0.2, 1.0, |_| true), ReplicaMove::Restore);
+        assert_eq!(c.current(), 4);
+        assert_eq!(c.update(30, 0.2, 1.0, |_| true), ReplicaMove::Hold, "ceiling");
+    }
+
+    #[test]
+    fn veto_blocks_unfit_restore() {
+        let mut c = ctl();
+        c.force_shed(0);
+        let mut asked = Vec::new();
+        let m = c.update(10, 0.2, 1.0, |n| {
+            asked.push(n);
+            false
+        });
+        assert_eq!(m, ReplicaMove::VetoedRestore);
+        assert_eq!(c.current(), 2);
+        assert_eq!(asked, vec![4], "predictive check sees the candidate count");
+        assert_eq!(c.decisions(), 2, "one shed + one veto");
+    }
+
+    #[test]
+    fn holds_in_the_band() {
+        let mut c = ctl();
+        assert_eq!(c.update(10, 0.8, 1.0, |_| true), ReplicaMove::Hold);
+        assert_eq!(c.current(), 4);
+    }
+
+    #[test]
+    fn fixed_controller_is_inert() {
+        let mut c = ReplicaController::new(2, false, cfg());
+        assert_eq!(c.current(), 2, "pinned at the configured count");
+        assert_eq!(c.update(10, 0.99, 1.0, |_| true), ReplicaMove::Hold);
+        assert!(!c.force_shed(10));
+        assert_eq!(c.current(), 2);
+        assert_eq!(c.decisions(), 0);
+        assert!(c.export_state().is_empty());
+        c.import_state(&[("policy/replica.elastic/state".into(), vec![1.0; 5])]).unwrap();
+        assert_eq!(c.current(), 2, "saved elastic state ignored when fixed");
+    }
+
+    #[test]
+    fn state_roundtrips_and_tolerates_absence() {
+        let mut c = ctl();
+        c.update(10, 0.95, 1.0, |_| true);
+        c.update(20, 0.2, 1.0, |_| false);
+        let saved = c.export_state();
+        assert_eq!(saved[0].0, "policy/replica.elastic/state");
+        let mut fresh = ctl();
+        fresh.import_state(&saved).unwrap();
+        assert_eq!(fresh.current(), c.current());
+        assert_eq!(fresh.decisions(), c.decisions());
+        // Continued evolution matches.
+        assert_eq!(
+            fresh.update(26, 0.2, 1.0, |_| true),
+            c.update(26, 0.2, 1.0, |_| true)
+        );
+        // A pre-replica checkpoint has no key: fresh position kept.
+        let mut old = ctl();
+        old.import_state(&[("policy/batch.elastic/state".into(), vec![0.0; 4])]).unwrap();
+        assert_eq!(old.current(), 4);
+        // Off-ladder counts fail loudly.
+        let mut bad = ctl();
+        let err = bad
+            .import_state(&[("policy/replica.elastic/state".into(), vec![3.0, 0.0, 0.0, 0.0, 0.0])])
+            .unwrap_err();
+        assert!(err.to_string().contains("not on this ladder"));
+    }
+}

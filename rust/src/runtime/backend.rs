@@ -81,4 +81,21 @@ pub trait Backend {
         probes: &mut [Vec<f32>],
         codes: &[i32],
     ) -> Result<Vec<f32>>;
+
+    /// Data-parallel replica engines this backend holds (the elastic
+    /// ceiling). Non-replicated backends report 1.
+    fn replica_capacity(&self) -> usize {
+        1
+    }
+
+    /// Replicas currently executing shards (`1..=replica_capacity`).
+    fn live_replicas(&self) -> usize {
+        1
+    }
+
+    /// Elastically set the live replica count, clamped to
+    /// `1..=replica_capacity`. The replicated native backend guarantees
+    /// this never changes training numerics (canonical batch shards +
+    /// ordered reduction); non-replicated backends ignore it.
+    fn set_live_replicas(&self, _n: usize) {}
 }

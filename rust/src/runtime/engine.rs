@@ -58,6 +58,19 @@ impl Engine {
         }
     }
 
+    /// The native engine with `replicas` data-parallel engine instances
+    /// per step, each computing with `threads_each` pool workers
+    /// (budget the pair via [`native::pool::budget_threads`] so
+    /// jobs × replicas × threads never oversubscribes). Training
+    /// numerics are bit-identical for every replica count — see
+    /// [`native::replica`].
+    pub fn native_replicated(replicas: usize, threads_each: usize) -> Engine {
+        Engine {
+            manifest: native::builtin_manifest(),
+            backend: Box::new(native::replica::ReplicaBackend::new(replicas, threads_each)),
+        }
+    }
+
     /// Compatibility constructor: PJRT over `artifacts_dir` when built
     /// with `--features pjrt` and a manifest is present there, else the
     /// native backend (ignoring `artifacts_dir`).
@@ -110,6 +123,24 @@ impl Engine {
     pub fn backend(&self) -> &dyn Backend {
         self.backend.as_ref()
     }
+
+    /// Data-parallel replica ceiling of the backend (1 when not
+    /// replicated).
+    pub fn replica_capacity(&self) -> usize {
+        self.backend.replica_capacity()
+    }
+
+    /// Replicas currently live (1 when not replicated).
+    pub fn live_replicas(&self) -> usize {
+        self.backend.live_replicas()
+    }
+
+    /// Elastically set the live replica count (no-op on
+    /// non-replicated backends; never changes numerics on the native
+    /// replicated backend).
+    pub fn set_live_replicas(&self, n: usize) {
+        self.backend.set_live_replicas(n);
+    }
 }
 
 #[cfg(test)]
@@ -129,6 +160,19 @@ mod tests {
         let e = Engine::native_with_threads(2);
         assert_eq!(e.platform(), "native-cpu");
         assert!(e.manifest.model("tiny_cnn_c10").is_ok());
+    }
+
+    #[test]
+    fn replicated_engine_exposes_elastic_replicas() {
+        let e = Engine::native_replicated(2, 1);
+        assert_eq!(e.platform(), "native-replica");
+        assert_eq!(e.replica_capacity(), 2);
+        e.set_live_replicas(1);
+        assert_eq!(e.live_replicas(), 1);
+        let single = Engine::native();
+        assert_eq!(single.replica_capacity(), 1);
+        single.set_live_replicas(4); // no-op on non-replicated backends
+        assert_eq!(single.live_replicas(), 1);
     }
 
     #[test]

@@ -58,27 +58,27 @@ const MOMENTUM: f32 = 0.9;
 
 /// Spatial/channel extent of one node's activation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-struct Dims {
-    h: usize,
-    w: usize,
-    c: usize,
+pub(crate) struct Dims {
+    pub(crate) h: usize,
+    pub(crate) w: usize,
+    pub(crate) c: usize,
 }
 
 impl Dims {
-    fn elems(&self, n: usize) -> usize {
+    pub(crate) fn elems(&self, n: usize) -> usize {
         n * self.h * self.w * self.c
     }
 }
 
 /// Per-node shape plan: the node's input and output extents.
-struct NodePlan {
-    din: Dims,
-    dout: Dims,
+pub(crate) struct NodePlan {
+    pub(crate) din: Dims,
+    pub(crate) dout: Dims,
 }
 
 /// The validated execution plan for one model entry.
-struct Plan {
-    nd: Vec<NodePlan>,
+pub(crate) struct Plan {
+    pub(crate) nd: Vec<NodePlan>,
 }
 
 impl Plan {
@@ -87,7 +87,7 @@ impl Plan {
     /// the executor relies on: every parameter owned by exactly one
     /// node, every BN state slot by exactly one BN node, and every
     /// non-terminal node's output consumed by someone.
-    fn build(entry: &ModelEntry) -> Result<Plan> {
+    pub(crate) fn build(entry: &ModelEntry) -> Result<Plan> {
         anyhow::ensure!(
             !entry.nodes.is_empty(),
             "model `{}` has no layer graph (artifact-only entry)",
@@ -302,7 +302,7 @@ impl Plan {
 
 /// Per-node forward caches the backward consumes. All buffers are
 /// arena-backed; [`release_fwd`] checks them back in.
-enum Aux {
+pub(crate) enum Aux {
     None,
     /// Quantized im2col panels + quantized weights.
     Conv { cols: Vec<f32>, wq: Vec<f32> },
@@ -316,10 +316,21 @@ enum Aux {
     Dense { xq: Vec<f32>, wq: Vec<f32> },
 }
 
-struct NodeCache {
+pub(crate) struct NodeCache {
     /// Output activation (empty for the terminal loss node).
-    act: Vec<f32>,
-    aux: Aux,
+    pub(crate) act: Vec<f32>,
+    pub(crate) aux: Aux,
+}
+
+/// Scalar outputs of the loss node, accumulated per forward walk (one
+/// logical batch for the fused path, one shard for the replica path).
+#[derive(Default)]
+pub(crate) struct FwdScalars {
+    /// Cotangent of the (unscaled) mean loss w.r.t. the logits.
+    pub(crate) dlogits: Vec<f32>,
+    /// Unnormalized f64 CE loss sum (divide by the logical batch).
+    pub(crate) loss_sum: f64,
+    pub(crate) correct: i64,
 }
 
 struct Fwd {
@@ -332,9 +343,9 @@ struct Fwd {
     correct: i64,
 }
 
-/// Return every forward cache to the arena.
-fn release_fwd(ex: &mut Exec, fwd: Fwd) {
-    let Fwd { caches, new_state, dlogits, .. } = fwd;
+/// Return a forward walk's node caches to the arena (the replica path
+/// releases per-shard cache vectors through this same hook).
+pub(crate) fn release_caches(ex: &mut Exec, caches: Vec<NodeCache>) {
     for c in caches {
         ex.arena.put(c.act);
         match c.aux {
@@ -358,30 +369,43 @@ fn release_fwd(ex: &mut Exec, fwd: Fwd) {
             }
         }
     }
+}
+
+/// Return every forward cache to the arena.
+fn release_fwd(ex: &mut Exec, fwd: Fwd) {
+    let Fwd { caches, new_state, dlogits, .. } = fwd;
+    release_caches(ex, caches);
     ex.arena.put_all(new_state);
     ex.arena.put(dlogits);
 }
 
-fn forward(
+/// One node of the forward walk. `n` is the sample count this walk
+/// carries (the whole batch on the fused path, one canonical shard on
+/// the replica path) and `n_loss` is the logical batch size the CE
+/// mean normalizes by (`== n` on the fused path). BN nodes here
+/// compute whole-walk batch statistics — the replica path normalizes
+/// its BN nodes against globally reduced statistics instead and never
+/// routes them through this function (`replica.rs`).
+pub(crate) fn forward_node(
     ex: &mut Exec,
     entry: &ModelEntry,
     plan: &Plan,
+    i: usize,
     params: &[Vec<f32>],
     state: &[Vec<f32>],
     x: &[f32],
     y: &[i32],
     n: usize,
+    n_loss: usize,
     codes: &[i32],
     train: bool,
-) -> Fwd {
+    caches: &mut Vec<NodeCache>,
+    new_state: &mut [Vec<f32>],
+    scal: &mut FwdScalars,
+) {
     let Exec { pool, arena } = ex;
-    let mut caches: Vec<NodeCache> = Vec::with_capacity(entry.nodes.len());
-    let mut new_state: Vec<Vec<f32>> = (0..entry.state_shapes.len()).map(|_| Vec::new()).collect();
-    let mut dlogits = Vec::new();
-    let mut loss = 0f32;
-    let mut correct = 0i64;
-
-    for (i, node) in entry.nodes.iter().enumerate() {
+    let node = &entry.nodes[i];
+    {
         let p = &plan.nd[i];
         let (din, dout) = (p.din, p.dout);
         let src: &[f32] = if node.input == NODE_INPUT_IMAGE {
@@ -489,17 +513,40 @@ fn forward(
             NodeOp::SoftmaxCe => {
                 let classes = din.c;
                 let mut dl = arena.take(n * classes);
-                let (l, corr) = ops::softmax_ce_into(src, y, n, classes, &mut dl);
-                dlogits = dl;
-                loss = l;
-                correct = corr;
+                let (ls, corr) = ops::softmax_ce_sum_into(src, y, n, classes, n_loss, &mut dl);
+                scal.dlogits = dl;
+                scal.loss_sum = ls;
+                scal.correct = corr;
                 NodeCache { act: Vec::new(), aux: Aux::None }
             }
         };
         caches.push(cache);
     }
+}
 
-    Fwd { caches, new_state, dlogits, loss, correct }
+fn forward(
+    ex: &mut Exec,
+    entry: &ModelEntry,
+    plan: &Plan,
+    params: &[Vec<f32>],
+    state: &[Vec<f32>],
+    x: &[f32],
+    y: &[i32],
+    n: usize,
+    codes: &[i32],
+    train: bool,
+) -> Fwd {
+    let mut caches: Vec<NodeCache> = Vec::with_capacity(entry.nodes.len());
+    let mut new_state: Vec<Vec<f32>> = (0..entry.state_shapes.len()).map(|_| Vec::new()).collect();
+    let mut scal = FwdScalars::default();
+    for i in 0..entry.nodes.len() {
+        forward_node(
+            ex, entry, plan, i, params, state, x, y, n, n, codes, train, &mut caches,
+            &mut new_state, &mut scal,
+        );
+    }
+    let FwdScalars { dlogits, loss_sum, correct } = scal;
+    Fwd { caches, new_state, dlogits, loss: (loss_sum / n as f64) as f32, correct }
 }
 
 /// Hand a cotangent buffer to `grad[input]`: moved when the slot is
@@ -507,7 +554,7 @@ fn forward(
 /// when a residual fork already deposited one. Cotangents aimed at the
 /// batch images are dropped (never consumed — the stem conv skips that
 /// GEMM entirely).
-fn send(arena: &mut Arena, grad: &mut [Option<Vec<f32>>], input: i64, buf: Vec<f32>) {
+pub(crate) fn send(arena: &mut Arena, grad: &mut [Option<Vec<f32>>], input: i64, buf: Vec<f32>) {
     if input == NODE_INPUT_IMAGE {
         arena.put(buf);
         return;
@@ -523,34 +570,39 @@ fn send(arena: &mut Arena, grad: &mut [Option<Vec<f32>>], input: i64, buf: Vec<f
     }
 }
 
-/// Reverse pass: returns the parameter gradients of the *unscaled* mean
-/// loss (the loss-scale round-trip is exact for 2^k scales). Gradients
-/// are arena buffers; the caller checks them back in.
-fn backward(
+/// One node of the reverse walk over one forward walk's `caches`. The
+/// SoftmaxCe arm seeds from `dlogits × loss_scale`; every other arm
+/// consumes the cotangent deposited in `grad[i]` and writes parameter
+/// gradients of the *scaled* loss into `grads` (the caller unscales).
+/// The BN arm reduces whole-walk statistics — as in the forward, the
+/// replica path handles BN nodes itself and never routes them here.
+pub(crate) fn backward_node(
     ex: &mut Exec,
     entry: &ModelEntry,
     plan: &Plan,
-    fwd: &Fwd,
+    i: usize,
+    caches: &[NodeCache],
+    dlogits: &[f32],
     params: &[Vec<f32>],
     codes: &[i32],
     loss_scale: f32,
     n: usize,
-) -> Vec<Vec<f32>> {
+    grad: &mut [Option<Vec<f32>>],
+    grads: &mut [Vec<f32>],
+) {
     let Exec { pool, arena } = ex;
-    let mut grads: Vec<Vec<f32>> = (0..params.len()).map(|_| Vec::new()).collect();
-    let mut grad: Vec<Option<Vec<f32>>> = (0..entry.nodes.len()).map(|_| None).collect();
-
-    for (i, node) in entry.nodes.iter().enumerate().rev() {
+    let node = &entry.nodes[i];
+    {
         let p = &plan.nd[i];
         let (din, dout) = (p.din, p.dout);
         if let NodeOp::SoftmaxCe = node.op {
             // Seed with the cotangent of the scaled loss.
             let mut g = arena.take(n * din.c);
-            for (d, &v) in g.iter_mut().zip(fwd.dlogits.iter()) {
+            for (d, &v) in g.iter_mut().zip(dlogits.iter()) {
                 *d = v * loss_scale;
             }
-            send(arena, &mut grad, node.input, g);
-            continue;
+            send(arena, grad, node.input, g);
+            return;
         }
         // detlint: allow(d6) — Plan validation proved every non-loss
         // node's output is consumed, so the reverse walk always finds a
@@ -559,7 +611,7 @@ fn backward(
         match node.op {
             NodeOp::Conv { k, stride, w, layer } => {
                 let code = codes[layer];
-                let (cols, wq) = match &fwd.caches[i].aux {
+                let (cols, wq) = match &caches[i].aux {
                     Aux::Conv { cols, wq } => (cols, wq),
                     _ => unreachable!("conv node caches conv aux"),
                 };
@@ -583,12 +635,12 @@ fn backward(
                     gemm::col2im(pool, &dcols, n, din.h, din.w, din.c, k, stride, &mut dx);
                     arena.put(dcols);
                     qdq::qdq_inplace(&mut dx, code);
-                    send(arena, &mut grad, node.input, dx);
+                    send(arena, grad, node.input, dx);
                 }
             }
             NodeOp::DwConv { k, stride, w, layer } => {
                 let code = codes[layer];
-                let (xq, wq) = match &fwd.caches[i].aux {
+                let (xq, wq) = match &caches[i].aux {
                     Aux::DwConv { xq, wq } => (xq, wq),
                     _ => unreachable!("dwconv node caches dwconv aux"),
                 };
@@ -603,11 +655,11 @@ fn backward(
                     ops::dwconv_dx_into(pool, &g, wq, n, din.h, din.w, din.c, k, stride, &mut dx);
                     arena.put(g);
                     qdq::qdq_inplace(&mut dx, code);
-                    send(arena, &mut grad, node.input, dx);
+                    send(arena, grad, node.input, dx);
                 }
             }
             NodeOp::Bn { gamma, beta, state: _ } => {
-                let (mean, inv) = match &fwd.caches[i].aux {
+                let (mean, inv) = match &caches[i].aux {
                     Aux::Bn { mean, inv } => (mean, inv),
                     _ => unreachable!("bn node caches bn aux"),
                 };
@@ -616,7 +668,7 @@ fn backward(
                 let conv_out: &[f32] = if node.input == NODE_INPUT_IMAGE {
                     unreachable!("bn never reads the images directly")
                 } else {
-                    &fwd.caches[node.input as usize].act
+                    &caches[node.input as usize].act
                 };
                 let mut dx = arena.take(rows * c);
                 let mut dgamma = arena.take(c);
@@ -636,32 +688,32 @@ fn backward(
                 arena.put(g);
                 grads[gamma] = dgamma;
                 grads[beta] = dbeta;
-                send(arena, &mut grad, node.input, dx);
+                send(arena, grad, node.input, dx);
             }
             NodeOp::Relu => {
-                let pre: &[f32] = &fwd.caches[node.input as usize].act;
+                let pre: &[f32] = &caches[node.input as usize].act;
                 ops::relu_bwd_inplace(&mut g, pre);
-                send(arena, &mut grad, node.input, g);
+                send(arena, grad, node.input, g);
             }
             NodeOp::MaxPool2 => {
-                let arg = match &fwd.caches[i].aux {
+                let arg = match &caches[i].aux {
                     Aux::Pool { arg } => arg,
                     _ => unreachable!("pool node caches its argmax"),
                 };
                 let mut dx = arena.take(din.elems(n));
                 ops::maxpool2_bwd_into(&g, arg, n, din.h, din.w, din.c, &mut dx);
                 arena.put(g);
-                send(arena, &mut grad, node.input, dx);
+                send(arena, grad, node.input, dx);
             }
             NodeOp::Gap => {
                 let mut dx = arena.take(din.elems(n));
                 ops::gap_bwd_into(&g, n, din.h, din.w, din.c, &mut dx);
                 arena.put(g);
-                send(arena, &mut grad, node.input, dx);
+                send(arena, grad, node.input, dx);
             }
             NodeOp::Dense { w, b, layer } => {
                 let code = codes[layer];
-                let (xq, wq) = match &fwd.caches[i].aux {
+                let (xq, wq) = match &caches[i].aux {
                     Aux::Dense { xq, wq } => (xq, wq),
                     _ => unreachable!("dense node caches dense aux"),
                 };
@@ -684,34 +736,60 @@ fn backward(
                 arena.put(g);
                 grads[w] = dw;
                 grads[b] = db;
-                send(arena, &mut grad, node.input, dx);
+                send(arena, grad, node.input, dx);
             }
             NodeOp::Add { rhs } => {
                 // The residual add copies the cotangent to both
                 // branches unchanged.
                 let mut side = arena.take(g.len());
                 side.copy_from_slice(&g);
-                send(arena, &mut grad, rhs as i64, side);
-                send(arena, &mut grad, node.input, g);
+                send(arena, grad, rhs as i64, side);
+                send(arena, grad, node.input, g);
             }
             NodeOp::SoftmaxCe => unreachable!("handled above"),
         }
     }
+}
 
-    // Unscale (exact for power-of-two loss scales).
+/// Divide every gradient by the loss scale (exact for 2^k scales).
+pub(crate) fn unscale_grads(grads: &mut [Vec<f32>], loss_scale: f32) {
     let inv = 1.0 / loss_scale;
     for gvec in grads.iter_mut() {
         for v in gvec.iter_mut() {
             *v *= inv;
         }
     }
+}
+
+/// Reverse pass: returns the parameter gradients of the *unscaled* mean
+/// loss (the loss-scale round-trip is exact for 2^k scales). Gradients
+/// are arena buffers; the caller checks them back in.
+fn backward(
+    ex: &mut Exec,
+    entry: &ModelEntry,
+    plan: &Plan,
+    fwd: &Fwd,
+    params: &[Vec<f32>],
+    codes: &[i32],
+    loss_scale: f32,
+    n: usize,
+) -> Vec<Vec<f32>> {
+    let mut grads: Vec<Vec<f32>> = (0..params.len()).map(|_| Vec::new()).collect();
+    let mut grad: Vec<Option<Vec<f32>>> = (0..entry.nodes.len()).map(|_| None).collect();
+    for i in (0..entry.nodes.len()).rev() {
+        backward_node(
+            ex, entry, plan, i, &fwd.caches, &fwd.dlogits, params, codes, loss_scale, n,
+            &mut grad, &mut grads,
+        );
+    }
+    unscale_grads(&mut grads, loss_scale);
     grads
 }
 
 /// Per-precision-layer (variance, Σg²) of the parameter gradients,
 /// mirroring `train_graph._per_layer_grad_stats`. NaN/inf gradients
 /// propagate into the stats (the controller ignores non-finite values).
-fn layer_stats(entry: &ModelEntry, grads: &[Vec<f32>]) -> (Vec<f32>, Vec<f32>) {
+pub(crate) fn layer_stats(entry: &ModelEntry, grads: &[Vec<f32>]) -> (Vec<f32>, Vec<f32>) {
     let l_count = entry.num_layers;
     let mut sum = vec![0f64; l_count];
     let mut sq = vec![0f64; l_count];
@@ -789,6 +867,38 @@ pub fn init(entry: &ModelEntry, seed: i32) -> Result<ModelState> {
     Ok(ModelState { params, mom, state })
 }
 
+/// Fused SGD+momentum update with the overflow gate as a runtime mask:
+/// an overflowed step leaves params and momentum untouched. Shared by
+/// the single-engine path and the replica path (which applies it once,
+/// to the order-reduced gradients).
+pub(crate) fn apply_update(
+    entry: &ModelEntry,
+    st: &mut ModelState,
+    grads: &[Vec<f32>],
+    ctrl: &StepCtrl,
+    overflow: bool,
+) {
+    let mask = if overflow { 0f32 } else { 1f32 };
+    for (i, spec) in entry.params.iter().enumerate() {
+        let scale = if spec.layer_idx >= 0 {
+            ctrl.lr_scales[spec.layer_idx as usize]
+        } else {
+            1.0
+        };
+        let lr_eff = ctrl.lr * scale;
+        let p = &mut st.params[i];
+        let m = &mut st.mom[i];
+        let g = &grads[i];
+        for k in 0..p.len() {
+            let g_eff = (g[k] + ctrl.weight_decay * p[k]) * mask;
+            let m_new = MOMENTUM * m[k] + g_eff;
+            let m_out = if mask > 0.5 { m_new } else { m[k] };
+            p[k] -= lr_eff * mask * m_out;
+            m[k] = m_out;
+        }
+    }
+}
+
 /// One fused SGD+momentum training step (train_graph.py semantics).
 pub fn train_step(
     ex: &mut Exec,
@@ -814,28 +924,7 @@ pub fn train_step(
     let grads = backward(ex, entry, &plan, &fwd, &st.params, &ctrl.codes, ctrl.loss_scale, n);
     let overflow = grads.iter().any(|g| g.iter().any(|v| !v.is_finite()));
     let (grad_var, grad_norm) = layer_stats(entry, &grads);
-
-    // Fused update with the overflow gate as a runtime mask: an
-    // overflowed step leaves params, momentum, and BN state untouched.
-    let mask = if overflow { 0f32 } else { 1f32 };
-    for (i, spec) in entry.params.iter().enumerate() {
-        let scale = if spec.layer_idx >= 0 {
-            ctrl.lr_scales[spec.layer_idx as usize]
-        } else {
-            1.0
-        };
-        let lr_eff = ctrl.lr * scale;
-        let p = &mut st.params[i];
-        let m = &mut st.mom[i];
-        let g = &grads[i];
-        for k in 0..p.len() {
-            let g_eff = (g[k] + ctrl.weight_decay * p[k]) * mask;
-            let m_new = MOMENTUM * m[k] + g_eff;
-            let m_out = if mask > 0.5 { m_new } else { m[k] };
-            p[k] -= lr_eff * mask * m_out;
-            m[k] = m_out;
-        }
-    }
+    apply_update(entry, st, &grads, ctrl, overflow);
     if !overflow {
         // Swap the arena-backed running stats in; the displaced old
         // state vectors ride back to the arena through `new_state`.

@@ -495,6 +495,153 @@ pub fn bn_bwd_into(
     }
 }
 
+// ---- sharded BN primitives (the data-parallel replica path) ----
+//
+// The replica executor (`super::replica`) computes BN over the *whole*
+// batch while the batch lives in fixed canonical shards: each shard
+// contributes per-channel sufficient statistics (Σx, Σx²) in its own
+// row order, the orchestrator reduces the partials in ascending shard
+// order, and every shard then normalizes against the shared global
+// statistics. The same split applies to the backward's Σg / Σg·x̂
+// sums. Partials accumulate in f64 (like the fused path) and reduce
+// deterministically, so the result depends only on the canonical shard
+// boundaries — never on how many replicas processed them.
+
+/// Per-channel sufficient statistics of one shard: accumulates
+/// `Σx` into `sum` and `Σx²` into `sq` (CBLK-blocked, row order).
+/// Callers zero the accumulators; an empty shard is a no-op.
+pub fn bn_partial_into(x: &[f32], rows: usize, c: usize, sum: &mut [f64], sq: &mut [f64]) {
+    debug_assert_eq!(x.len(), rows * c);
+    debug_assert_eq!(sum.len(), c);
+    debug_assert_eq!(sq.len(), c);
+    for c0 in (0..c).step_by(CBLK) {
+        let cb = (c - c0).min(CBLK);
+        let mut s = [0f64; CBLK];
+        let mut q = [0f64; CBLK];
+        for r in 0..rows {
+            let row = &x[r * c + c0..r * c + c0 + cb];
+            for (i, &v) in row.iter().enumerate() {
+                let vd = v as f64;
+                s[i] += vd;
+                q[i] += vd * vd;
+            }
+        }
+        for i in 0..cb {
+            sum[c0 + i] += s[i];
+            sq[c0 + i] += q[i];
+        }
+    }
+}
+
+/// Finalize globally-reduced BN sufficient statistics: `mean`, the
+/// inverse stddev `inv`, and torch-style updated running stats.
+/// `var = Σx²/rows − mean²` clamped at zero (one-pass form; the fused
+/// single-engine path uses the two-pass form, so the replica path is
+/// its own pinned numeric contract — see docs/DETERMINISM.md).
+pub fn bn_finalize_stats(
+    sum: &[f64],
+    sq: &[f64],
+    rows: usize,
+    rm: &[f32],
+    rv: &[f32],
+    mean: &mut [f32],
+    inv: &mut [f32],
+    new_rm: &mut [f32],
+    new_rv: &mut [f32],
+) {
+    let n = rows as f64;
+    for ci in 0..sum.len() {
+        let m = sum[ci] / n;
+        let var = ((sq[ci] / n - m * m).max(0.0)) as f32;
+        mean[ci] = m as f32;
+        inv[ci] = 1.0 / (var + BN_EPS).sqrt();
+        new_rm[ci] = (1.0 - BN_MOMENTUM) * rm[ci] + BN_MOMENTUM * mean[ci];
+        new_rv[ci] = (1.0 - BN_MOMENTUM) * rv[ci] + BN_MOMENTUM * var;
+    }
+}
+
+/// Normalize one shard against shared (global) statistics — the apply
+/// half of the sharded BN forward, also usable for eval-mode stats.
+pub fn bn_apply_into(
+    x: &[f32],
+    rows: usize,
+    c: usize,
+    gamma: &[f32],
+    beta: &[f32],
+    mean: &[f32],
+    inv: &[f32],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), rows * c);
+    debug_assert_eq!(out.len(), rows * c);
+    for r in 0..rows {
+        for ci in 0..c {
+            out[r * c + ci] = (x[r * c + ci] - mean[ci]) * inv[ci] * gamma[ci] + beta[ci];
+        }
+    }
+}
+
+/// One shard's partial BN backward sums: accumulates `Σg` into `db`
+/// and `Σg·x̂` into `dg` (CBLK-blocked, row order).
+pub fn bn_bwd_partial_into(
+    x: &[f32],
+    g: &[f32],
+    rows: usize,
+    c: usize,
+    mean: &[f32],
+    inv: &[f32],
+    db: &mut [f64],
+    dg: &mut [f64],
+) {
+    debug_assert_eq!(g.len(), rows * c);
+    for c0 in (0..c).step_by(CBLK) {
+        let cb = (c - c0).min(CBLK);
+        let mut b = [0f64; CBLK];
+        let mut gm = [0f64; CBLK];
+        for r in 0..rows {
+            for i in 0..cb {
+                let ci = c0 + i;
+                let gv = g[r * c + ci] as f64;
+                let xhat = ((x[r * c + ci] - mean[ci]) * inv[ci]) as f64;
+                b[i] += gv;
+                gm[i] += gv * xhat;
+            }
+        }
+        for i in 0..cb {
+            db[c0 + i] += b[i];
+            dg[c0 + i] += gm[i];
+        }
+    }
+}
+
+/// One shard's BN input cotangent against the globally-reduced
+/// `dgamma`/`dbeta` sums, with `rows_total` the whole-batch row count
+/// (the batch-statistics gradient couples every sample).
+pub fn bn_bwd_apply_into(
+    x: &[f32],
+    g: &[f32],
+    rows: usize,
+    c: usize,
+    gamma: &[f32],
+    mean: &[f32],
+    inv: &[f32],
+    dgamma: &[f32],
+    dbeta: &[f32],
+    rows_total: usize,
+    dx: &mut [f32],
+) {
+    debug_assert_eq!(g.len(), rows * c);
+    debug_assert_eq!(dx.len(), rows * c);
+    let nf = rows_total as f32;
+    for r in 0..rows {
+        for ci in 0..c {
+            let xhat = (x[r * c + ci] - mean[ci]) * inv[ci];
+            let coeff = gamma[ci] * inv[ci] / nf;
+            dx[r * c + ci] = coeff * (nf * g[r * c + ci] - dbeta[ci] - xhat * dgamma[ci]);
+        }
+    }
+}
+
 /// BatchNorm train-mode backward (compat wrapper). Returns
 /// `(dx, dgamma, dbeta)`.
 pub fn bn_bwd(
@@ -731,6 +878,24 @@ pub fn softmax_ce_into(
     classes: usize,
     dlogits: &mut [f32],
 ) -> (f32, i64) {
+    let (loss_sum, correct) = softmax_ce_sum_into(logits, y, n, classes, n, dlogits);
+    ((loss_sum / n as f64) as f32, correct)
+}
+
+/// Shard form of the CE loss: `n` examples of a logical batch of
+/// `n_total`. Writes `dlogits = (softmax - onehot)/n_total` and returns
+/// the *unnormalized* f64 loss sum plus the correct count — the
+/// replica orchestrator reduces shard sums in ascending shard order
+/// and divides by `n_total` once. With `n_total == n` this is exactly
+/// the mean-CE computation ([`softmax_ce_into`] wraps it).
+pub fn softmax_ce_sum_into(
+    logits: &[f32],
+    y: &[i32],
+    n: usize,
+    classes: usize,
+    n_total: usize,
+    dlogits: &mut [f32],
+) -> (f64, i64) {
     debug_assert_eq!(logits.len(), n * classes);
     debug_assert_eq!(dlogits.len(), n * classes);
     let mut loss_sum = 0f64;
@@ -758,10 +923,10 @@ pub fn softmax_ce_into(
         let drow = &mut dlogits[bi * classes..(bi + 1) * classes];
         for (ci, d) in drow.iter_mut().enumerate() {
             let p = (row[ci] - m).exp() / z;
-            *d = (p - if ci == label { 1.0 } else { 0.0 }) / n as f32;
+            *d = (p - if ci == label { 1.0 } else { 0.0 }) / n_total as f32;
         }
     }
-    ((loss_sum / n as f64) as f32, correct)
+    (loss_sum, correct)
 }
 
 /// Mean softmax cross-entropy (compat wrapper over
@@ -993,6 +1158,123 @@ mod tests {
             let want = (s / rows as f64) as f32;
             assert!((cache.mean[ci] - want).abs() < 1e-6, "channel {ci}");
         }
+    }
+
+    #[test]
+    fn sharded_bn_is_shard_count_invariant() {
+        // The replica-path contract: partial stats reduced in ascending
+        // shard order give bit-identical results for any contiguous
+        // shard split of the same rows.
+        let (rows, c) = (48, CBLK + 5);
+        let mut rng = Rng::new(51);
+        let x = randv(&mut rng, rows * c);
+        let run = |bounds: &[usize]| {
+            let mut sum = vec![0f64; c];
+            let mut sq = vec![0f64; c];
+            for w in bounds.windows(2) {
+                bn_partial_into(&x[w[0] * c..w[1] * c], w[1] - w[0], c, &mut sum, &mut sq);
+            }
+            let rm = vec![0f32; c];
+            let rv = vec![1f32; c];
+            let (mut mean, mut inv) = (vec![0f32; c], vec![0f32; c]);
+            let (mut nrm, mut nrv) = (vec![0f32; c], vec![0f32; c]);
+            bn_finalize_stats(&sum, &sq, rows, &rm, &rv, &mut mean, &mut inv, &mut nrm, &mut nrv);
+            (mean, inv, nrm, nrv)
+        };
+        let whole = run(&[0, rows]);
+        assert_eq!(whole, run(&[0, 12, 24, 36, rows]), "4 shards == 1 shard");
+        assert_eq!(whole, run(&[0, 24, rows]), "2 shards == 1 shard");
+        // And the one-pass stats agree with the two-pass fused path to
+        // f32 round-off (they are distinct numeric contracts).
+        let gamma = vec![1f32; c];
+        let beta = vec![0f32; c];
+        let (_, _, _, cache) =
+            bn_fwd(&x, rows, c, &gamma, &beta, &vec![0f32; c], &vec![1f32; c], true);
+        for ci in 0..c {
+            assert!((whole.0[ci] - cache.mean[ci]).abs() < 1e-5, "mean channel {ci}");
+            assert!((whole.1[ci] / cache.inv[ci] - 1.0).abs() < 1e-4, "inv channel {ci}");
+        }
+    }
+
+    #[test]
+    fn sharded_bn_backward_matches_fused() {
+        let (rows, c) = (32, 6);
+        let mut rng = Rng::new(52);
+        let x = randv(&mut rng, rows * c);
+        let g = randv(&mut rng, rows * c);
+        let gamma: Vec<f32> = (0..c).map(|i| 1.0 + 0.05 * i as f32).collect();
+        let (_, _, _, cache) =
+            bn_fwd(&x, rows, c, &gamma, &vec![0f32; c], &vec![0f32; c], &vec![1f32; c], true);
+        let (dx_ref, dgamma_ref, dbeta_ref) = bn_bwd(&x, &g, rows, c, &gamma, &cache);
+        // Sharded: partials reduced over 2 shards, apply per shard.
+        let mut db = vec![0f64; c];
+        let mut dg = vec![0f64; c];
+        let mid = rows / 2;
+        for (r0, r1) in [(0, mid), (mid, rows)] {
+            bn_bwd_partial_into(
+                &x[r0 * c..r1 * c],
+                &g[r0 * c..r1 * c],
+                r1 - r0,
+                c,
+                &cache.mean,
+                &cache.inv,
+                &mut db,
+                &mut dg,
+            );
+        }
+        let dgamma: Vec<f32> = dg.iter().map(|&v| v as f32).collect();
+        let dbeta: Vec<f32> = db.iter().map(|&v| v as f32).collect();
+        let mut dx = vec![0f32; rows * c];
+        for (r0, r1) in [(0, mid), (mid, rows)] {
+            bn_bwd_apply_into(
+                &x[r0 * c..r1 * c],
+                &g[r0 * c..r1 * c],
+                r1 - r0,
+                c,
+                &gamma,
+                &cache.mean,
+                &cache.inv,
+                &dgamma,
+                &dbeta,
+                rows,
+                &mut dx[r0 * c..r1 * c],
+            );
+        }
+        for ci in 0..c {
+            assert!((dgamma[ci] - dgamma_ref[ci]).abs() < 1e-4, "dgamma {ci}");
+            assert!((dbeta[ci] - dbeta_ref[ci]).abs() < 1e-4, "dbeta {ci}");
+        }
+        for i in 0..rows * c {
+            assert!((dx[i] - dx_ref[i]).abs() < 1e-4, "dx[{i}]");
+        }
+    }
+
+    #[test]
+    fn shard_softmax_sums_compose_to_the_mean() {
+        let (n, classes) = (8, 5);
+        let mut rng = Rng::new(53);
+        let logits = randv(&mut rng, n * classes);
+        let y: Vec<i32> = (0..n).map(|i| (i % classes) as i32).collect();
+        let mut d_ref = vec![0f32; n * classes];
+        let (loss_ref, corr_ref) = softmax_ce_into(&logits, &y, n, classes, &mut d_ref);
+        let mut d_sh = vec![0f32; n * classes];
+        let mut loss_sum = 0f64;
+        let mut corr = 0i64;
+        for (r0, r1) in [(0usize, 3usize), (3, 5), (5, n)] {
+            let (ls, cr) = softmax_ce_sum_into(
+                &logits[r0 * classes..r1 * classes],
+                &y[r0..r1],
+                r1 - r0,
+                classes,
+                n,
+                &mut d_sh[r0 * classes..r1 * classes],
+            );
+            loss_sum += ls;
+            corr += cr;
+        }
+        assert_eq!(corr, corr_ref);
+        assert_eq!(d_sh, d_ref, "per-example cotangents are shard-independent");
+        assert!((((loss_sum / n as f64) as f32) - loss_ref).abs() < 1e-6);
     }
 
     #[test]

@@ -34,14 +34,24 @@ pub fn resolve_threads(var: Option<&str>) -> usize {
     }
 }
 
-/// Split a total worker budget across `jobs` concurrent scheduler
-/// jobs: `floor(total / jobs)`, at least 1. The experiment scheduler
-/// ([`crate::sched`]) gives every job-pool worker this many compute
-/// threads so `jobs × threads ≤ total` and concurrent cells never
-/// oversubscribe the machine (the determinism contract makes the
-/// per-job thread count a pure performance knob).
+/// Split a total worker budget across every concurrent compute lane:
+/// `jobs` scheduler jobs × `replicas` data-parallel engines per job.
+/// Each lane gets `floor(total / (jobs × replicas))`, at least 1, so
+/// `jobs × replicas × threads ≤ total` whenever the budget covers the
+/// lane count at all (the ≥ 1 floor keeps starved lanes making
+/// progress rather than deadlocking the grid — see the
+/// `thread_budget_never_oversubscribes` test for the exact guarantee).
+/// The determinism contract makes the per-lane count a pure
+/// performance knob.
+pub fn budget_threads(total: usize, jobs: usize, replicas: usize) -> usize {
+    let lanes = jobs.max(1) * replicas.max(1);
+    (total / lanes).max(1)
+}
+
+/// Budget for non-replicated jobs: [`budget_threads`] with one replica
+/// per job (kept as the name the scheduler historically used).
 pub fn per_job_threads(total: usize, jobs: usize) -> usize {
-    (total / jobs.max(1)).max(1)
+    budget_threads(total, jobs, 1)
 }
 
 /// A fixed-width worker pool over scoped threads.
@@ -134,6 +144,36 @@ mod tests {
         for total in 1..=16usize {
             for jobs in 1..=16usize {
                 assert!(per_job_threads(total, jobs) * jobs <= total.max(jobs));
+            }
+        }
+    }
+
+    #[test]
+    fn thread_budget_never_oversubscribes() {
+        assert_eq!(budget_threads(8, 2, 2), 2);
+        assert_eq!(budget_threads(8, 2, 4), 1);
+        assert_eq!(budget_threads(16, 2, 4), 2);
+        assert_eq!(budget_threads(8, 1, 1), 8);
+        assert_eq!(budget_threads(0, 2, 2), 1, "empty budget floors at one");
+        assert_eq!(budget_threads(8, 0, 0), 8, "lanes clamped to >= 1");
+        for total in 1..=16usize {
+            for jobs in 1..=4usize {
+                for replicas in 1..=4usize {
+                    let per = budget_threads(total, jobs, replicas);
+                    let lanes = jobs * replicas;
+                    // Whenever the budget covers the lane count, the
+                    // grid never oversubscribes; below that, every lane
+                    // still gets its floor of exactly one thread.
+                    if total >= lanes {
+                        assert!(
+                            per * lanes <= total,
+                            "oversubscribed: {per} threads x {lanes} lanes > {total}"
+                        );
+                    } else {
+                        assert_eq!(per, 1, "starved lanes floor at one thread");
+                    }
+                    assert_eq!(per_job_threads(total, jobs * replicas), per, "delegation");
+                }
             }
         }
     }

@@ -1,0 +1,647 @@
+//! Deterministic data-parallel replicas inside one training job.
+//!
+//! A [`ReplicaGroup`] holds N independent [`Exec`] contexts (own pool +
+//! own arena, each with a [`super::pool::budget_threads`]-style share
+//! of the compute budget) and runs one optimizer step over a batch
+//! split into **fixed canonical shards**. The invariant that makes
+//! elastic replica counts safe is the same one [`super::pool`] uses for
+//! threads, lifted one level up:
+//!
+//! * The batch always decomposes into `S = min(4, n)` contiguous
+//!   shards whose boundaries depend only on `n` — never on how many
+//!   replicas are live.
+//! * A live replica *owns* a contiguous run of shards
+//!   (`owner(s) = s·live/S`) and executes them with its own `Exec`;
+//!   per-shard compute is bit-identical no matter which replica runs
+//!   it (the pool's thread-count invariance covers the differing
+//!   per-replica thread shares).
+//! * Every cross-shard reduction — BN sufficient statistics, the CE
+//!   loss sum, and the parameter-gradient reduction — folds the
+//!   per-shard partials in **ascending canonical shard order**.
+//!
+//! Replicas therefore only decide *where* a shard computes, never
+//! *what* it computes, and N=1, N=2, and N=4 produce bit-identical
+//! parameter trajectories; the control plane may shed or restore
+//! replicas mid-run ([`ReplicaGroup::set_live`]) without perturbing a
+//! single bit of the training trajectory. The property suite in
+//! `tests/prop_replicas.rs` pins this next to the thread-count suite.
+//!
+//! Numerics: the sharded path computes BN statistics in their one-pass
+//! sufficient-statistics form (Σx, Σx² in f64) and the CE loss as
+//! per-shard f64 partial sums over a shared `1/n_total` factor, whereas
+//! the fused single-engine path ([`super::graph`]) uses two-pass BN
+//! and a single whole-batch CE walk. The replica path is therefore its
+//! own pinned numeric contract — bit-identical across replica counts
+//! and within float tolerance of the fused path, not bit-equal to it
+//! (see docs/DETERMINISM.md).
+
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use super::graph::{self, Aux, FwdScalars, NodeCache, Plan};
+use super::ops;
+use super::Exec;
+use crate::manifest::{ModelEntry, NodeOp, NODE_INPUT_IMAGE};
+use crate::runtime::backend::{Backend, ModelState};
+use crate::runtime::{Batch, EvalResult, StepCtrl, TrainOutputs};
+
+/// Elements per batch image (the [`Batch`] contract: 32×32×3 NHWC).
+const IMG_ELEMS: usize = 32 * 32 * 3;
+
+/// Canonical shard count cap. Every batch splits into
+/// `min(MAX_SHARDS, n)` shards regardless of the live replica count,
+/// so the reduction tree is a pure function of the batch size.
+pub const MAX_SHARDS: usize = 4;
+
+/// The fixed contiguous `(start, len)` decomposition of an `n`-sample
+/// batch into canonical shards. Depends only on `n`.
+pub fn shard_ranges(n: usize) -> Vec<(usize, usize)> {
+    let s_count = MAX_SHARDS.min(n.max(1));
+    let base = n / s_count;
+    let rem = n % s_count;
+    (0..s_count)
+        .map(|s| (s * base + s.min(rem), base + usize::from(s < rem)))
+        .collect()
+}
+
+/// Which live replica executes canonical shard `s` of `s_count`:
+/// `s·live/s_count`, a non-decreasing map that hands each replica a
+/// contiguous run of shards (possibly empty when `live > s_count`).
+pub fn shard_owner(s: usize, s_count: usize, live: usize) -> usize {
+    s * live.max(1) / s_count.max(1)
+}
+
+/// Per-shard execution context for one step: the forward caches, the
+/// loss scalars, the reverse-walk cotangent slots, and this shard's
+/// (scaled) parameter-gradient contributions.
+struct ShardCtx {
+    start: usize,
+    len: usize,
+    caches: Vec<NodeCache>,
+    scal: FwdScalars,
+    grad: Vec<Option<Vec<f32>>>,
+    grads: Vec<Vec<f32>>,
+    /// Dummy BN-state sink for [`graph::forward_node`] — BN nodes never
+    /// route through it on this path, so this stays untouched.
+    ns: Vec<Vec<f32>>,
+}
+
+/// N data-parallel engine instances executing one job's steps over
+/// fixed canonical batch shards.
+pub struct ReplicaGroup {
+    execs: Vec<Exec>,
+    live: usize,
+    threads_each: usize,
+}
+
+impl ReplicaGroup {
+    /// A group of `replicas` engines (clamped to ≥ 1), each computing
+    /// with `threads_each` pool workers. All replicas start live.
+    pub fn new(replicas: usize, threads_each: usize) -> ReplicaGroup {
+        let cap = replicas.max(1);
+        ReplicaGroup {
+            execs: (0..cap).map(|_| Exec::new(threads_each)).collect(),
+            live: cap,
+            threads_each: threads_each.max(1),
+        }
+    }
+
+    /// Total replica engines held (the elastic ceiling).
+    pub fn capacity(&self) -> usize {
+        self.execs.len()
+    }
+
+    /// Replicas currently executing shards.
+    pub fn live(&self) -> usize {
+        self.live
+    }
+
+    /// Pool workers per replica engine.
+    pub fn threads_each(&self) -> usize {
+        self.threads_each
+    }
+
+    /// Elastically set the live replica count (clamped to
+    /// `1..=capacity`). By the canonical-shard invariant this changes
+    /// wall-clock and aggregate memory only — never the numerics.
+    pub fn set_live(&mut self, n: usize) {
+        self.live = n.clamp(1, self.execs.len());
+    }
+}
+
+/// Run `f` once per shard with exclusive access to the shard's context
+/// and its owning replica's `Exec` — inline when one replica is live,
+/// scoped threads (one per replica that owns work) otherwise. Shard
+/// ownership is the contiguous [`shard_owner`] map, so the contexts
+/// split into disjoint per-replica sub-slices.
+fn run_sharded<F>(execs: &mut [Exec], live: usize, ctxs: &mut [ShardCtx], f: F)
+where
+    F: Fn(&mut Exec, &mut ShardCtx) + Sync,
+{
+    let s_count = ctxs.len();
+    let live = live.clamp(1, execs.len());
+    if live == 1 || s_count <= 1 {
+        let ex = &mut execs[0];
+        for ctx in ctxs.iter_mut() {
+            f(&mut *ex, ctx);
+        }
+        return;
+    }
+    let mut parts: Vec<(&mut Exec, &mut [ShardCtx])> = Vec::with_capacity(live);
+    let mut rest_ctx = ctxs;
+    let mut rest_ex = &mut execs[..live];
+    let mut s0 = 0usize;
+    for r in 0..live {
+        let cnt = (s0..s_count).take_while(|&s| shard_owner(s, s_count, live) == r).count();
+        let (head_ctx, tail_ctx) = rest_ctx.split_at_mut(cnt);
+        let (head_ex, tail_ex) = rest_ex.split_at_mut(1);
+        if cnt > 0 {
+            parts.push((&mut head_ex[0], head_ctx));
+        }
+        rest_ctx = tail_ctx;
+        rest_ex = tail_ex;
+        s0 += cnt;
+    }
+    let fr = &f;
+    // detlint: allow(d3) — replica lanes follow pool.rs's discipline:
+    // each scoped thread executes a disjoint, contiguous shard range
+    // against shard-local buffers, and every cross-shard reduction
+    // folds on the caller in ascending canonical shard order after the
+    // scope joins — spawn/completion order can never reach the numbers.
+    std::thread::scope(|sc| {
+        let mut parts = parts.into_iter();
+        let first = parts.next();
+        for (ex, group) in parts {
+            sc.spawn(move || {
+                for ctx in group.iter_mut() {
+                    fr(&mut *ex, ctx);
+                }
+            });
+        }
+        if let Some((ex, group)) = first {
+            for ctx in group.iter_mut() {
+                fr(&mut *ex, ctx);
+            }
+        }
+    });
+}
+
+/// One fused SGD+momentum training step over canonical shards. Same
+/// observable contract as [`graph::train_step`] (loss-scaled grads,
+/// overflow gating, per-layer stats, BN state swap), with all
+/// cross-shard math reduced in ascending canonical shard order.
+pub fn train_step(
+    group: &mut ReplicaGroup,
+    entry: &ModelEntry,
+    st: &mut ModelState,
+    batch: &Batch,
+    ctrl: &StepCtrl,
+) -> Result<TrainOutputs> {
+    let plan = Plan::build(entry)?;
+    let n = batch.n;
+    let ranges = shard_ranges(n);
+    let n_nodes = entry.nodes.len();
+    let n_params = st.params.len();
+    let live = group.live.clamp(1, group.execs.len());
+
+    let mut ctxs: Vec<ShardCtx> = ranges
+        .iter()
+        .map(|&(start, len)| ShardCtx {
+            start,
+            len,
+            caches: Vec::with_capacity(n_nodes),
+            scal: FwdScalars::default(),
+            grad: (0..n_nodes).map(|_| None).collect(),
+            grads: (0..n_params).map(|_| Vec::new()).collect(),
+            ns: Vec::new(),
+        })
+        .collect();
+    let mut new_state: Vec<Vec<f32>> = (0..entry.state_shapes.len()).map(|_| Vec::new()).collect();
+
+    // ---- forward: node-major; shards run in parallel across live
+    // replicas, BN nodes synchronize on globally reduced statistics.
+    for i in 0..n_nodes {
+        let node = &entry.nodes[i];
+        match node.op {
+            NodeOp::Bn { gamma, beta, state: sidx } => {
+                let din = plan.nd[i].din;
+                let (c, hw) = (din.c, din.h * din.w);
+                let rows_total = n * hw;
+                let input = node.input as usize; // BN never reads the images
+                // Phase 1 — per-shard sufficient statistics, folded in
+                // ascending canonical shard order (f64 throughout).
+                let mut sum = vec![0f64; c];
+                let mut sq = vec![0f64; c];
+                for ctx in ctxs.iter() {
+                    ops::bn_partial_into(&ctx.caches[input].act, ctx.len * hw, c, &mut sum, &mut sq);
+                }
+                let mut mean_g = vec![0f32; c];
+                let mut inv_g = vec![0f32; c];
+                let mut new_rm = group.execs[0].arena.take(c);
+                let mut new_rv = group.execs[0].arena.take(c);
+                ops::bn_finalize_stats(
+                    &sum,
+                    &sq,
+                    rows_total,
+                    &st.state[sidx],
+                    &st.state[sidx + 1],
+                    &mut mean_g,
+                    &mut inv_g,
+                    &mut new_rm,
+                    &mut new_rv,
+                );
+                new_state[sidx] = new_rm;
+                new_state[sidx + 1] = new_rv;
+                // Phase 2 — every shard normalizes against the shared
+                // global statistics (cached per shard for the VJP).
+                let (params, mean_ref, inv_ref) = (&st.params, &mean_g, &inv_g);
+                run_sharded(&mut group.execs, live, &mut ctxs, |ex, ctx| {
+                    let rows = ctx.len * hw;
+                    let mut out = ex.arena.take(rows * c);
+                    let mut mean = ex.arena.take(c);
+                    mean.copy_from_slice(mean_ref);
+                    let mut inv = ex.arena.take(c);
+                    inv.copy_from_slice(inv_ref);
+                    ops::bn_apply_into(
+                        &ctx.caches[input].act,
+                        rows,
+                        c,
+                        &params[gamma],
+                        &params[beta],
+                        &mean,
+                        &inv,
+                        &mut out,
+                    );
+                    ctx.caches.push(NodeCache { act: out, aux: Aux::Bn { mean, inv } });
+                });
+            }
+            _ => {
+                let (params, state, codes) = (&st.params, &st.state, &ctrl.codes[..]);
+                run_sharded(&mut group.execs, live, &mut ctxs, |ex, ctx| {
+                    let x = &batch.x[ctx.start * IMG_ELEMS..(ctx.start + ctx.len) * IMG_ELEMS];
+                    let y = &batch.y[ctx.start..ctx.start + ctx.len];
+                    let ShardCtx { caches, scal, ns, len, .. } = ctx;
+                    graph::forward_node(
+                        ex, entry, &plan, i, params, state, x, y, *len, n, codes, true, caches,
+                        ns, scal,
+                    );
+                });
+            }
+        }
+    }
+
+    // ---- backward: node-major in reverse; BN nodes reduce their
+    // parameter gradients globally before any shard computes dx.
+    for i in (0..n_nodes).rev() {
+        let node = &entry.nodes[i];
+        match node.op {
+            NodeOp::Bn { gamma, beta, state: _ } => {
+                let din = plan.nd[i].din;
+                let (c, hw) = (din.c, din.h * din.w);
+                let rows_total = n * hw;
+                let input = node.input as usize;
+                // Phase 1 — per-shard Σg / Σg·x̂, ascending shard order.
+                let mut db = vec![0f64; c];
+                let mut dg = vec![0f64; c];
+                for ctx in ctxs.iter() {
+                    // detlint: allow(d6) — the reverse walk visits nodes
+                    // in descending id order, so every consumer already
+                    // deposited this node's cotangent in `grad[i]`.
+                    let g = ctx.grad[i].as_ref().expect("bn cotangent deposited");
+                    let (mean, inv) = match &ctx.caches[i].aux {
+                        Aux::Bn { mean, inv } => (mean, inv),
+                        _ => unreachable!("bn node caches bn aux"),
+                    };
+                    ops::bn_bwd_partial_into(
+                        &ctx.caches[input].act,
+                        g,
+                        ctx.len * hw,
+                        c,
+                        mean,
+                        inv,
+                        &mut db,
+                        &mut dg,
+                    );
+                }
+                let dgamma: Vec<f32> = dg.iter().map(|&v| v as f32).collect();
+                let dbeta: Vec<f32> = db.iter().map(|&v| v as f32).collect();
+                // The globally reduced BN grads ride on shard 0, so the
+                // generic ascending-shard gradient reduction reproduces
+                // them verbatim (other shards contribute nothing).
+                ctxs[0].grads[gamma] = dgamma.clone();
+                ctxs[0].grads[beta] = dbeta.clone();
+                // Phase 2 — per-shard dx against the global sums.
+                let (params, dgm, dbt) = (&st.params, &dgamma, &dbeta);
+                let input_id = node.input;
+                run_sharded(&mut group.execs, live, &mut ctxs, |ex, ctx| {
+                    let rows = ctx.len * hw;
+                    // detlint: allow(d6) — same invariant as phase 1:
+                    // the cotangent was deposited before this node ran.
+                    let g = ctx.grad[i].take().expect("bn cotangent deposited");
+                    let (mean, inv) = match &ctx.caches[i].aux {
+                        Aux::Bn { mean, inv } => (mean, inv),
+                        _ => unreachable!("bn node caches bn aux"),
+                    };
+                    let mut dx = ex.arena.take(rows * c);
+                    ops::bn_bwd_apply_into(
+                        &ctx.caches[input].act,
+                        &g,
+                        rows,
+                        c,
+                        &params[gamma],
+                        mean,
+                        inv,
+                        dgm,
+                        dbt,
+                        rows_total,
+                        &mut dx,
+                    );
+                    ex.arena.put(g);
+                    graph::send(&mut ex.arena, &mut ctx.grad, input_id, dx);
+                });
+            }
+            _ => {
+                let (params, codes, loss_scale) = (&st.params, &ctrl.codes[..], ctrl.loss_scale);
+                run_sharded(&mut group.execs, live, &mut ctxs, |ex, ctx| {
+                    let ShardCtx { caches, scal, grad, grads, len, .. } = ctx;
+                    graph::backward_node(
+                        ex,
+                        entry,
+                        &plan,
+                        i,
+                        caches,
+                        &scal.dlogits,
+                        params,
+                        codes,
+                        loss_scale,
+                        *len,
+                        grad,
+                        grads,
+                    );
+                });
+            }
+        }
+    }
+
+    // ---- ordered gradient reduction: fold shard contributions in
+    // ascending canonical shard order, elementwise in f32 (exactly the
+    // pool.rs chunk-reduction discipline, one level up).
+    let mut grads: Vec<Vec<f32>> = (0..n_params).map(|_| Vec::new()).collect();
+    let mut surplus: Vec<Vec<f32>> = Vec::new();
+    for (pi, total) in grads.iter_mut().enumerate() {
+        for ctx in ctxs.iter_mut() {
+            let g = std::mem::take(&mut ctx.grads[pi]);
+            if g.is_empty() {
+                continue;
+            }
+            if total.is_empty() {
+                *total = g;
+            } else {
+                for (t, &v) in total.iter_mut().zip(g.iter()) {
+                    *t += v;
+                }
+                surplus.push(g);
+            }
+        }
+    }
+    graph::unscale_grads(&mut grads, ctrl.loss_scale);
+    let overflow = grads.iter().any(|g| g.iter().any(|v| !v.is_finite()));
+    let (grad_var, grad_norm) = graph::layer_stats(entry, &grads);
+    graph::apply_update(entry, st, &grads, ctrl, overflow);
+    if !overflow {
+        for (dst, src) in st.state.iter_mut().zip(new_state.iter_mut()) {
+            std::mem::swap(dst, src);
+        }
+    }
+
+    // ---- loss/accuracy: shard partials, ascending shard order.
+    let mut loss_sum = 0f64;
+    let mut correct = 0i64;
+    for ctx in ctxs.iter() {
+        loss_sum += ctx.scal.loss_sum;
+        correct += ctx.scal.correct;
+    }
+    let loss = (loss_sum / n as f64) as f32;
+
+    // ---- release every per-shard buffer to its owner's arena, and
+    // the shared buffers to replica 0's.
+    run_sharded(&mut group.execs, live, &mut ctxs, |ex, ctx| {
+        graph::release_caches(ex, std::mem::take(&mut ctx.caches));
+        ex.arena.put(std::mem::take(&mut ctx.scal.dlogits));
+    });
+    let ex0 = &mut group.execs[0];
+    ex0.arena.put_all(grads);
+    ex0.arena.put_all(surplus);
+    ex0.arena.put_all(new_state);
+    Ok(TrainOutputs { loss, correct, grad_var, grad_norm, overflow })
+}
+
+/// [`Backend`] over a [`ReplicaGroup`]: replicated data-parallel
+/// training with elastic live-replica control. Eval and curvature
+/// probes run single-engine on replica 0 — they are read-only and
+/// already bit-identical to the fused path.
+pub struct ReplicaBackend {
+    group: Mutex<ReplicaGroup>,
+}
+
+impl ReplicaBackend {
+    pub fn new(replicas: usize, threads_each: usize) -> ReplicaBackend {
+        ReplicaBackend { group: Mutex::new(ReplicaGroup::new(replicas, threads_each)) }
+    }
+}
+
+impl Backend for ReplicaBackend {
+    fn name(&self) -> &'static str {
+        "native-replica"
+    }
+
+    fn supports(&self, entry: &ModelEntry) -> bool {
+        !entry.nodes.is_empty()
+    }
+
+    fn init(&self, entry: &ModelEntry, seed: i32) -> Result<ModelState> {
+        graph::init(entry, seed)
+    }
+
+    fn train_step(
+        &self,
+        entry: &ModelEntry,
+        st: &mut ModelState,
+        batch: &Batch,
+        ctrl: &StepCtrl,
+    ) -> Result<TrainOutputs> {
+        let mut group = self.group.lock().unwrap();
+        train_step(&mut group, entry, st, batch, ctrl)
+    }
+
+    fn eval_batch(
+        &self,
+        entry: &ModelEntry,
+        st: &ModelState,
+        batch: &Batch,
+        codes: &[i32],
+    ) -> Result<EvalResult> {
+        let mut group = self.group.lock().unwrap();
+        graph::eval_batch(&mut group.execs[0], entry, st, batch, codes)
+    }
+
+    fn curv_step(
+        &self,
+        entry: &ModelEntry,
+        st: &ModelState,
+        batch: &Batch,
+        probes: &mut [Vec<f32>],
+        codes: &[i32],
+    ) -> Result<Vec<f32>> {
+        let mut group = self.group.lock().unwrap();
+        graph::curv_step(&mut group.execs[0], entry, st, batch, probes, codes)
+    }
+
+    fn replica_capacity(&self) -> usize {
+        self.group.lock().unwrap().capacity()
+    }
+
+    fn live_replicas(&self) -> usize {
+        self.group.lock().unwrap().live()
+    }
+
+    fn set_live_replicas(&self, n: usize) {
+        self.group.lock().unwrap().set_live(n);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::{BF16, FP16, FP32};
+    use crate::runtime::native::builtin_manifest;
+    use crate::util::rng::Rng;
+
+    fn entry(key: &str) -> ModelEntry {
+        builtin_manifest().model(key).unwrap().clone()
+    }
+
+    fn rand_batch(n: usize, classes: u64, seed: u64) -> Batch {
+        let mut rng = Rng::new(seed);
+        let x: Vec<f32> = (0..n * 32 * 32 * 3).map(|_| rng.next_normal()).collect();
+        let y: Vec<i32> = (0..n).map(|_| rng.below(classes) as i32).collect();
+        Batch::new(x, y)
+    }
+
+    fn mixed_ctrl(e: &ModelEntry, step: usize) -> StepCtrl {
+        let mut ctrl = StepCtrl::uniform(e.num_layers, FP32, 0.05, 5e-4);
+        for (l, code) in ctrl.codes.iter_mut().enumerate() {
+            *code = match (l + step) % 3 {
+                0 => FP32,
+                1 => FP16,
+                _ => BF16,
+            };
+        }
+        ctrl.loss_scale = if step % 2 == 0 { 1.0 } else { 1024.0 };
+        ctrl
+    }
+
+    #[test]
+    fn shards_are_fixed_contiguous_and_cover_the_batch() {
+        for n in 1..=33usize {
+            let ranges = shard_ranges(n);
+            assert_eq!(ranges.len(), MAX_SHARDS.min(n));
+            let mut next = 0usize;
+            for &(start, len) in &ranges {
+                assert_eq!(start, next, "contiguous at n={n}");
+                assert!(len > 0, "no empty shards at n={n}");
+                next = start + len;
+            }
+            assert_eq!(next, n, "covers the batch at n={n}");
+        }
+        // Ownership is non-decreasing and in range for every live count.
+        for live in 1..=4usize {
+            let mut prev = 0;
+            for s in 0..4 {
+                let o = shard_owner(s, 4, live);
+                assert!(o >= prev && o < live);
+                prev = o;
+            }
+        }
+    }
+
+    #[test]
+    fn replica_counts_are_bit_identical() {
+        let e = entry("tiny_cnn_c10");
+        let base = ReplicaBackend::new(1, 1);
+        let mut st1 = base.init(&e, 11).unwrap();
+        let mut outs1 = Vec::new();
+        for step in 0..4 {
+            let batch = rand_batch(10, 10, 90 + step as u64);
+            let out = base.train_step(&e, &mut st1, &batch, &mixed_ctrl(&e, step)).unwrap();
+            outs1.push((out.loss.to_bits(), out.correct, out.overflow));
+        }
+        for replicas in [2usize, 4] {
+            let b = ReplicaBackend::new(replicas, 1);
+            assert_eq!(b.replica_capacity(), replicas);
+            let mut st = b.init(&e, 11).unwrap();
+            for step in 0..4 {
+                let batch = rand_batch(10, 10, 90 + step as u64);
+                let out = b.train_step(&e, &mut st, &batch, &mixed_ctrl(&e, step)).unwrap();
+                assert_eq!(
+                    (out.loss.to_bits(), out.correct, out.overflow),
+                    outs1[step],
+                    "{replicas} replicas, step {step}"
+                );
+            }
+            assert_eq!(st.params, st1.params, "{replicas} replicas: params diverged");
+            assert_eq!(st.mom, st1.mom, "{replicas} replicas: momentum diverged");
+            assert_eq!(st.state, st1.state, "{replicas} replicas: BN state diverged");
+        }
+    }
+
+    #[test]
+    fn elastic_live_changes_never_perturb_the_trajectory() {
+        let e = entry("resnet_mini_c10");
+        let fixed = ReplicaBackend::new(1, 2);
+        let elastic = ReplicaBackend::new(4, 1);
+        let mut st_f = fixed.init(&e, 5).unwrap();
+        let mut st_e = elastic.init(&e, 5).unwrap();
+        // Shed/restore on every step — the canonical shards make every
+        // live count compute the same bits.
+        for (step, live) in [4usize, 1, 3, 2, 4, 1].into_iter().enumerate() {
+            elastic.set_live_replicas(live);
+            assert_eq!(elastic.live_replicas(), live);
+            let batch = rand_batch(9, 10, 700 + step as u64);
+            let ctrl = mixed_ctrl(&e, step);
+            let a = fixed.train_step(&e, &mut st_f, &batch, &ctrl).unwrap();
+            let b = elastic.train_step(&e, &mut st_e, &batch, &ctrl).unwrap();
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "step {step} loss");
+            assert_eq!(a.grad_norm, b.grad_norm, "step {step} grad_norm");
+        }
+        assert_eq!(st_f.params, st_e.params, "elastic moves changed the trajectory");
+        assert_eq!(st_f.state, st_e.state);
+    }
+
+    #[test]
+    fn set_live_clamps_to_capacity() {
+        let b = ReplicaBackend::new(2, 1);
+        b.set_live_replicas(0);
+        assert_eq!(b.live_replicas(), 1);
+        b.set_live_replicas(9);
+        assert_eq!(b.live_replicas(), 2);
+    }
+
+    #[test]
+    fn eval_and_curv_match_the_fused_single_engine() {
+        let e = entry("tiny_cnn_c10");
+        let rep = ReplicaBackend::new(2, 1);
+        let single = crate::runtime::native::NativeBackend::with_threads(1);
+        let st = rep.init(&e, 3).unwrap();
+        let st2 = single.init(&e, 3).unwrap();
+        assert_eq!(st.params, st2.params, "init is backend-independent");
+        let batch = rand_batch(16, 10, 42);
+        let codes = vec![FP32; e.num_layers];
+        let a = rep.eval_batch(&e, &st, &batch, &codes).unwrap();
+        let b = single.eval_batch(&e, &st2, &batch, &codes).unwrap();
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+        assert_eq!(a.correct, b.correct);
+        assert_eq!(a.total, b.total);
+    }
+}

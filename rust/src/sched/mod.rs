@@ -7,11 +7,18 @@
 //! Two thread pools, one budget: the job pool (`--jobs N`) runs whole
 //! training runs side by side, while each job's *compute* pool (the
 //! deterministic [`crate::runtime::native::pool::Pool`]) gets
-//! `per_job_threads(total, jobs)` workers — so `jobs × threads` never
-//! oversubscribes the machine. Because the compute core is
-//! bit-identical for every thread count, `--jobs` is a pure wall-clock
-//! knob: a `--jobs 4` grid produces byte-identical artifacts to a
-//! `--jobs 1` run.
+//! `budget_threads(total, jobs, replicas)` workers — so
+//! `jobs × replicas × threads` never oversubscribes the machine. When
+//! a grid's configs carry `replicas > 1` (the `--replicas` flag), each
+//! worker holds a replicated engine ([`Engine::native_replicated`])
+//! whose per-replica pools split that worker's share. Because the
+//! compute core is bit-identical for every thread count *and* every
+//! replica count, `--jobs` is a pure wall-clock knob (a `--jobs 4`
+//! grid produces byte-identical artifacts to a `--jobs 1` run), and
+//! `--replicas` is numerics-neutral: it changes the config identity
+//! (grid id, job keys gain an `_rN` suffix) and the telemetry
+//! `replicas` field, but every loss, parameter, and policy decision
+//! matches the single-replica trajectory bit for bit.
 //!
 //! Everything a grid produces lands in `runs/<grid-id>/`:
 //!
@@ -71,7 +78,7 @@ use crate::harness::{self, SeedResult};
 use crate::manifest::Manifest;
 use crate::metrics::telemetry::{self, JsonlWriter, SharedSink, TelemetrySink};
 use crate::policy::registry;
-use crate::runtime::native::pool::{per_job_threads, resolve_threads, Pool};
+use crate::runtime::native::pool::{budget_threads, resolve_threads, Pool};
 use crate::runtime::Engine;
 
 pub use ledger::{CellMeta, Ledger, LedgerEntry, Loaded, LEDGER_SCHEMA_VERSION};
@@ -135,7 +142,8 @@ pub struct Job {
     pub cell: usize,
     /// Training seed.
     pub seed: u64,
-    /// Filename-safe job key: `<cell>_<model>_<method>_s<seed>`.
+    /// Filename-safe job key: `<cell>_<model>_<method>[_rN]_s<seed>`
+    /// (the `_rN` segment appears only when `cfg.replicas > 1`).
     pub key: String,
     /// The fully-resolved config this job trains.
     pub cfg: Config,
@@ -170,8 +178,12 @@ impl GridSpec {
                 cfg.seed = seed;
                 cfg.validate()
                     .with_context(|| format!("cell {ci} ({})", cell.label))?;
+                // Replicated configs are a different workload shape, so
+                // the key says so: `_rN` keeps a `--replicas 2` grid's
+                // event files from shadowing the single-replica ones.
+                let rep = if cfg.replicas > 1 { format!("_r{}", cfg.replicas) } else { String::new() };
                 let key = format!(
-                    "{ci:02}_{}_{}_s{seed}",
+                    "{ci:02}_{}_{}{rep}_s{seed}",
                     sanitize(&cell.model_key),
                     sanitize(&cell.method_key)
                 );
@@ -214,8 +226,9 @@ pub struct SchedOptions {
     /// (`--threads`; 0 = auto: `TRIACCEL_THREADS`, else machine
     /// parallelism capped at 8). The scheduler caps concurrent
     /// workers at this budget and gives each one
-    /// [`per_job_threads`]`(total, workers)` compute threads, so
-    /// `workers × threads` never exceeds the budget.
+    /// [`budget_threads`]`(total, workers, replicas)` compute threads
+    /// per replica, so `workers × replicas × threads` never exceeds
+    /// the budget.
     pub total_threads: usize,
     /// Base output directory (`--out`, default `runs`); the grid
     /// writes into `<out>/<grid-id>/`.
@@ -536,11 +549,19 @@ pub fn run_grid(spec: &GridSpec, opts: &SchedOptions) -> Result<GridOutcome> {
         // Concurrent workers never exceed the pending work *or* the
         // thread budget (more jobs than threads would oversubscribe no
         // matter how the budget is split), and each worker's compute
-        // pool gets an equal share of the whole budget — so
-        // `workers × threads_each ≤ total_threads` always, and a
-        // resume with one pending job still uses the full budget.
-        let workers = opts.jobs.min(pending.len()).min(total_threads).max(1);
-        let threads_each = per_job_threads(total_threads, workers);
+        // pool(s) get an equal share of the whole budget — so
+        // `workers × replicas × threads_each ≤ total_threads` always,
+        // and a resume with one pending job still uses the full
+        // budget. Replicated configs shrink the worker cap too: every
+        // live replica holds its own pool, so a worker "costs"
+        // `replicas` pool slots out of the budget.
+        let replicas_max = pending.iter().map(|j| j.cfg.replicas).max().unwrap_or(1).max(1);
+        let workers = opts
+            .jobs
+            .min(pending.len())
+            .min((total_threads / replicas_max).max(1))
+            .max(1);
+        let threads_each = budget_threads(total_threads, workers, replicas_max);
         let queue = Mutex::new(VecDeque::from(pending));
         let led_mutex = Mutex::new(&mut led);
         let quarantine_sink: Mutex<Vec<Quarantine>> = Mutex::new(Vec::new());
@@ -558,9 +579,16 @@ pub fn run_grid(spec: &GridSpec, opts: &SchedOptions) -> Result<GridOutcome> {
             for _ in 0..workers {
                 s.spawn(|| {
                     // One engine per worker, reused across every job it
-                    // runs: the pool handle and the warm scratch arena
-                    // behind it survive job boundaries.
-                    let engine = Engine::native_with_pool(Pool::new(threads_each));
+                    // runs: the pool handles and the warm scratch
+                    // arenas behind it survive job boundaries. A
+                    // replicated grid gets a replicated engine sized to
+                    // the widest job; narrower jobs just leave the
+                    // extra replicas parked.
+                    let engine = if replicas_max > 1 {
+                        Engine::native_replicated(replicas_max, threads_each)
+                    } else {
+                        Engine::native_with_pool(Pool::new(threads_each))
+                    };
                     loop {
                         if failure.lock().unwrap().is_some() {
                             return;
@@ -788,6 +816,25 @@ mod tests {
         assert_ne!(id_a, b.grid_id(&b.jobs(&manifest).unwrap()), "seed list changes id");
         let c = table1_spec(&["tiny_cnn_c100"], &[0], &tiny_tweak());
         assert_ne!(id_a, c.grid_id(&c.jobs(&manifest).unwrap()), "model changes id");
+    }
+
+    #[test]
+    fn replicated_grids_get_suffixed_keys_and_fresh_ids() {
+        let manifest = crate::runtime::native::builtin_manifest();
+        let plain = table1_spec(&["tiny_cnn_c10"], &[0], &tiny_tweak());
+        let tweak = tiny_tweak();
+        let spec = table1_spec(&["tiny_cnn_c10"], &[0], &|cfg: &mut Config| {
+            tweak(cfg);
+            cfg.replicas = 2;
+        });
+        let jobs = spec.jobs(&manifest).unwrap();
+        assert_eq!(jobs[0].key, "00_tiny_cnn_c10_fp32_r2_s0");
+        assert!(jobs.iter().all(|j| j.cfg.replicas == 2));
+        assert_ne!(
+            spec.grid_id(&jobs),
+            plain.grid_id(&plain.jobs(&manifest).unwrap()),
+            "replica count is part of the grid identity"
+        );
     }
 
     #[test]

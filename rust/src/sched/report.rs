@@ -226,21 +226,28 @@ fn pressure_md(led: &Ledger) -> Result<String> {
     out.push_str(&format!("# VRAM pressure — {model} — grid `{}`\n\n", led.grid_id));
     out.push_str(&format!(
         "Budget trace `{trace}`, {seeds} seed(s). Static methods accumulate \
-         simulated OOMs; elastic methods shed batch buckets and survive.\n\n"
+         simulated OOMs; elastic methods shed data-parallel replicas \
+         (`R_min`, the numerics-free lever) and batch buckets (`B_min`) \
+         and survive.\n\n"
     ));
-    out.push_str("| Method | Acc (%) | VRAM (GB) | OOMs | B_min | Decisions | Score |\n");
-    out.push_str("|---|---|---|---|---|---|---|\n");
+    out.push_str(
+        "| Method | Acc (%) | VRAM (GB) | OOMs | B_min | R_min | B decs | R decs | Score |\n",
+    );
+    out.push_str("|---|---|---|---|---|---|---|---|---|\n");
     for r in &rows {
         let min_b = if r.min_batch == usize::MAX { 0 } else { r.min_batch };
+        let min_r = if r.min_replicas == usize::MAX { 0 } else { r.min_replicas };
         out.push_str(&format!(
-            "| {} | {:.1} ± {:.2} | {:.4} | {} | {} | {} | {:.2} |\n",
+            "| {} | {:.1} ± {:.2} | {:.4} | {} | {} | {} | {} | {} | {:.2} |\n",
             r.label,
             r.acc.mean(),
             r.acc.std(),
             r.peak_gb.mean(),
             r.oom_events,
             min_b,
+            min_r,
             r.batch_decisions,
+            r.replica_decisions,
             r.score.mean(),
         ));
     }
@@ -283,6 +290,8 @@ fn bench_row(meta: &CellMeta, rs: &[SeedResult]) -> Result<Json> {
     num("oom_events", press.oom_events as f64);
     num("batch_decisions", press.batch_decisions as f64);
     num("min_batch", press.min_batch as f64);
+    num("replica_decisions", press.replica_decisions as f64);
+    num("min_replicas", press.min_replicas as f64);
     let sum = |f: fn(&SeedResult) -> u64| rs.iter().map(f).sum::<u64>() as f64;
     num("ctrl_windows", sum(|r| r.ctrl_windows));
     num("precision_transitions", sum(|r| r.precision_transitions));

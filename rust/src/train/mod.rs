@@ -69,6 +69,10 @@ pub struct Trainer<'e> {
     pub memsim: VramSim,
     pub speed: SpeedModel,
     pub metrics: RunMetrics,
+    /// The engine the session runs on — kept for the elastic replica
+    /// path (`set_live_replicas` is an engine-level control; it never
+    /// changes numerics on the replicated native backend).
+    engine: &'e Engine,
     schedule: LrSchedule,
     train_iter: BatchIter,
     eval_ds: Box<dyn Dataset>,
@@ -104,6 +108,16 @@ impl<'e> Trainer<'e> {
                 "eval bucket {b} is not a multiple of the smallest ({min_eval_bucket})"
             );
         }
+        // Replica shape must match the backend: a config asking for N
+        // data-parallel replicas needs an engine actually holding N
+        // engine instances (`Engine::native_replicated`).
+        anyhow::ensure!(
+            cfg.replicas <= engine.replica_capacity(),
+            "config wants {} replicas but the engine holds {} — construct it with \
+             Engine::native_replicated (CLI: --replicas)",
+            cfg.replicas,
+            engine.replica_capacity()
+        );
         let session = Session::init(engine, &cfg.model_key, cfg.seed as i32)
             .context("initializing session")?;
         let controller = ControlPlane::new(&cfg, &entry);
@@ -115,10 +129,16 @@ impl<'e> Trainer<'e> {
             cfg.mem_budget_gb
         } else {
             let mut probe = VramSim::new(&entry, 1e9, 0.0, cfg.seed);
+            // Replicated runs budget for the full replica aggregate —
+            // all replicas just fit at FP32, so a shrinking trace
+            // forces the shed path. 1 replica is the pre-replica
+            // budget bit-identically.
+            probe.set_replicas(cfg.replicas);
             let fp32_codes = vec![crate::manifest::FP32; entry.num_layers];
             probe.usage(cfg.batch_init, &fp32_codes, false).total_gb * 1.05
         };
         let mut memsim = VramSim::new(&entry, budget_gb, cfg.mem_noise, cfg.seed);
+        memsim.set_replicas(controller.replicas());
         // VRAM-pressure scenarios: a time-varying budget trace moves
         // MemMax under the controller's feet ("const" = the paper's
         // fixed strict budget, bit-identical to the untraced path).
@@ -144,6 +164,7 @@ impl<'e> Trainer<'e> {
             session,
             controller,
             memsim,
+            engine,
             speed,
             metrics: RunMetrics::default(),
             schedule,
@@ -175,6 +196,12 @@ impl<'e> Trainer<'e> {
         // The decision half of the plane's interface: one bundle holds
         // everything this step needs.
         let plan = self.controller.plan_step(self.global_step);
+        // Apply the plane's replica decision before compute or memory
+        // accounting: the backend moves its live engine count
+        // (numerics-neutral — canonical shards + ordered reduction),
+        // the simulator aggregates over it. No-ops at 1 replica.
+        self.engine.set_live_replicas(plan.replicas);
+        self.memsim.set_replicas(plan.replicas);
         let b = plan.batch_size;
         let batch = self.train_iter.next_batch(b)?;
         let mut lr = self.schedule.lr_at(self.global_step);
@@ -237,16 +264,25 @@ impl<'e> Trainer<'e> {
         if self.controller.window_due(self.global_step) {
             let used = self.memsim.mem_used_gb();
             let max = self.memsim.mem_max_gb();
-            let memsim = &mut self.memsim;
+            // Both fit predicates probe the same simulator; the plane
+            // calls them sequentially, so a shared RefCell borrow is
+            // never contended.
+            let memsim = std::cell::RefCell::new(&mut self.memsim);
             let codes = ctrl.codes.clone();
             // Growth must leave the ρ_high shrink-band unviolated *and*
             // absorb a curvature-probe transient — otherwise the grown
             // batch immediately shrinks back and the spike sets the peak.
             let rho_high = self.cfg.rho_high;
             let curv_on = self.controller.curvature_active();
-            let d = self.controller.control_window(self.global_step, used, max, |nb| {
-                memsim.would_fit_within(nb, &codes, curv_on, rho_high)
-            });
+            let d = self.controller.control_window_replicated(
+                self.global_step,
+                used,
+                max,
+                |nb| memsim.borrow_mut().would_fit_within(nb, &codes, curv_on, rho_high),
+                // Restoring replicas must keep the *current* batch
+                // under the same band, at aggregate-VRAM accounting.
+                |nr| memsim.borrow_mut().would_fit_replicas(nr, b, &codes, curv_on, rho_high),
+            );
             self.metrics.promotions += d.promotions.len() as u64;
             if let Some(sink) = self.telemetry.as_mut() {
                 sink.emit(&telemetry::ev_control_window(
@@ -254,14 +290,24 @@ impl<'e> Trainer<'e> {
                     d.promotions.len(),
                     d.batch_size,
                     d.loss_scale as f64,
+                    d.replicas,
                 ));
             }
         }
 
-        let modeled = self.speed.step_seconds(b, &ctrl.codes, &self.layer_flops);
+        let modeled =
+            self.speed
+                .step_seconds_replicated(b, &ctrl.codes, &self.layer_flops, plan.replicas);
         self.metrics.record_batch(self.global_step, b);
+        self.metrics.record_replicas(plan.replicas);
         if let Some(sink) = self.telemetry.as_mut() {
-            sink.emit(&telemetry::ev_step(self.global_step, b, out.loss as f64, modeled));
+            sink.emit(&telemetry::ev_step(
+                self.global_step,
+                b,
+                out.loss as f64,
+                modeled,
+                plan.replicas,
+            ));
         }
         self.global_step += 1;
         Ok((out.loss as f64, out.correct, b, modeled))
@@ -328,6 +374,7 @@ impl<'e> Trainer<'e> {
         self.metrics.precision_transitions = counts.precision_transitions;
         self.metrics.ctrl_windows = counts.windows;
         self.metrics.batch_decisions = counts.batch_decisions;
+        self.metrics.replica_decisions = counts.replica_decisions;
         Ok(rec)
     }
 

@@ -1,0 +1,158 @@
+//! Property suite for deterministic data-parallel replication: the
+//! replica count is a pure wall-clock knob. A batch is always split
+//! into the same fixed canonical shards and every cross-shard
+//! reduction folds in ascending canonical order, so N = 1, 2, and 4
+//! replicas walk bit-identical parameter trajectories — same per-step
+//! loss bits, same controller state, byte-identical checkpoints — and
+//! a run checkpointed at one replica count resumes at another without
+//! perturbing a single bit. Modeled time is the one legitimate
+//! difference (replication exists to buy wall-clock), so it is the one
+//! thing these tests never compare.
+
+use tri_accel::config::{Config, Method};
+use tri_accel::runtime::Engine;
+use tri_accel::train::Trainer;
+
+/// Quick Tri-Accel config at a given replica count. The budget is
+/// deliberately generous: aggregate usage stays far below the control
+/// band at every replica count, so the policy plane makes the same
+/// decisions in every run and the trajectories are comparable step
+/// for step.
+fn cfg(replicas: usize, seed: u64) -> Config {
+    let mut cfg = Config::cell("tiny_cnn_c10", Method::TriAccel, seed);
+    cfg.epochs = 1;
+    cfg.steps_per_epoch = Some(18);
+    cfg.train_examples = 2048;
+    cfg.eval_examples = 256;
+    cfg.batch_init = 32;
+    cfg.t_ctrl = 4;
+    cfg.t_curv = 8;
+    cfg.curv_warmup = 1;
+    cfg.batch_cooldown = 3;
+    cfg.warmup_epochs = 0;
+    cfg.mem_budget_gb = 100.0;
+    cfg.mem_noise = 0.0;
+    cfg.replicas = replicas;
+    cfg
+}
+
+/// The engine whose capacity matches the config's replica count.
+fn engine_for(replicas: usize) -> Engine {
+    if replicas > 1 {
+        Engine::native_replicated(replicas, 1)
+    } else {
+        Engine::native()
+    }
+}
+
+/// Run `steps` optimizer steps and return every per-step loss, bitwise.
+fn loss_bits(tr: &mut Trainer, steps: usize) -> Vec<u64> {
+    (0..steps).map(|_| tr.step().unwrap().0.to_bits()).collect()
+}
+
+#[test]
+fn prop_replica_count_is_bit_invariant_step_for_step() {
+    for seed in [0u64, 3] {
+        let e1 = engine_for(1);
+        let mut t1 = Trainer::new(&e1, cfg(1, seed)).unwrap();
+        let base = loss_bits(&mut t1, 18);
+        let ctrl1 = t1.controller.export_state();
+        for replicas in [2usize, 4] {
+            let en = engine_for(replicas);
+            let mut tn = Trainer::new(&en, cfg(replicas, seed)).unwrap();
+            let got = loss_bits(&mut tn, 18);
+            assert_eq!(
+                got, base,
+                "seed {seed}: per-step loss bits diverged at {replicas} replicas"
+            );
+            assert_eq!(
+                tn.controller.export_state(),
+                ctrl1,
+                "seed {seed}: controller state diverged at {replicas} replicas"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_checkpoints_are_byte_identical_across_replica_counts() {
+    // Checkpoints carry params, momentum, BN state, probes, and policy
+    // state — none of which may know the replica count. Saving the same
+    // trajectory from a 1-replica and a 2-replica run must produce the
+    // same file, byte for byte.
+    let dir = std::env::temp_dir();
+    let pid = std::process::id();
+    let mut files = Vec::new();
+    for replicas in [1usize, 2] {
+        let e = engine_for(replicas);
+        let mut tr = Trainer::new(&e, cfg(replicas, 1)).unwrap();
+        for _ in 0..10 {
+            tr.step().unwrap();
+        }
+        let p = dir.join(format!("triaccel_prop_replicas_{pid}_r{replicas}.bin"));
+        tr.save_checkpoint(&p).unwrap();
+        files.push(std::fs::read(&p).unwrap());
+        std::fs::remove_file(&p).ok();
+    }
+    assert_eq!(files[0], files[1], "checkpoint bytes depend on the replica count");
+}
+
+#[test]
+fn prop_resume_at_a_different_replica_count_continues_bit_identically() {
+    // Checkpoint at N=2 replicas mid-run, resume at N=4: the
+    // continuation must reproduce the tail of an uninterrupted
+    // 1-replica run bit for bit, and the final checkpoints must match
+    // byte for byte. Elasticity across restarts is free when the
+    // replica count never touches the numbers.
+    let dir = std::env::temp_dir();
+    let pid = std::process::id();
+    let mid = dir.join(format!("triaccel_prop_replicas_{pid}_mid.bin"));
+    let end_a = dir.join(format!("triaccel_prop_replicas_{pid}_end_a.bin"));
+    let end_b = dir.join(format!("triaccel_prop_replicas_{pid}_end_b.bin"));
+
+    // Uninterrupted reference at 1 replica.
+    let e1 = engine_for(1);
+    let mut full = Trainer::new(&e1, cfg(1, 2)).unwrap();
+    let full_losses = loss_bits(&mut full, 16);
+    full.save_checkpoint(&end_a).unwrap();
+
+    // First half at 2 replicas, checkpoint, second half at 4.
+    let e2 = engine_for(2);
+    let mut first = Trainer::new(&e2, cfg(2, 2)).unwrap();
+    let head = loss_bits(&mut first, 8);
+    assert_eq!(head, full_losses[..8], "head diverged before the handoff");
+    first.save_checkpoint(&mid).unwrap();
+
+    let e4 = engine_for(4);
+    let mut second = Trainer::new(&e4, cfg(4, 2)).unwrap();
+    assert_eq!(second.resume_from(&mid).unwrap(), 8);
+    let tail = loss_bits(&mut second, 8);
+    assert_eq!(tail, full_losses[8..], "tail diverged after the replica-count switch");
+    second.save_checkpoint(&end_b).unwrap();
+
+    let a = std::fs::read(&end_a).unwrap();
+    let b = std::fs::read(&end_b).unwrap();
+    assert_eq!(a, b, "final checkpoints differ across the 2→4 replica handoff");
+    for p in [&mid, &end_a, &end_b] {
+        std::fs::remove_file(p).ok();
+    }
+}
+
+#[test]
+fn prop_elastic_replica_moves_never_change_the_numbers() {
+    // The elastic composition at a capacity the roomy budget will keep
+    // fully restored vs the same composition pinned: live-replica moves
+    // (including the initial full-capacity state and any veto churn)
+    // must be invisible to the loss stream.
+    let seed = 4;
+    let e1 = engine_for(1);
+    let mut pinned = Trainer::new(&e1, cfg(1, seed)).unwrap();
+    let base = loss_bits(&mut pinned, 18);
+
+    let e = engine_for(4);
+    let mut c = cfg(4, seed);
+    c.elastic_replicas = true;
+    let mut elastic = Trainer::new(&e, c).unwrap();
+    let got = loss_bits(&mut elastic, 18);
+    assert_eq!(got, base, "an elastic replica decision leaked into the numerics");
+}
