@@ -2,6 +2,7 @@
 """Python twin of detlint rule D7's schema digest (stdlib only).
 
 Usage: schema_digest.py <file.rs> <VERSION_CONST> [<file.rs> <VERSION_CONST> ...]
+       schema_digest.py --scenarios
 
 Recomputes, for each schema-pinned Rust source file, the (version,
 digest) pair that `rust/src/lint/schema.rs` pins: the FNV-1a-64 hash of
@@ -18,8 +19,17 @@ run it on the edited file, then update the matching PINS entry in
 an unmodified pinned file and comparing against the pinned digest.
 
 Prints one line per file: `<file> version=<v> digest=0x<16 hex>`.
+
+`--scenarios` instead prints the pressure-scenario factor-series
+digests pinned in `rust/src/memsim/scenarios.rs`: FNV-1a-64 over the
+little-endian f64 bits of `factor(step)` for steps 0..256, one line
+per scenario. The formulas here are a faithful port of `ScenarioKind::
+factor` (pure rational arithmetic — bit-identical across languages);
+re-pin the Rust test values from this output after any deliberate
+formula change.
 """
 
+import struct
 import sys
 
 KEY_MARKERS = ['insert("', 'num(&mut m, "', 's(&mut m, "']
@@ -216,8 +226,41 @@ def digest_keys(keys):
     return fnv1a64(",".join(keys).encode("utf-8"))
 
 
+def scenario_factor(name, step):
+    """Port of memsim/scenarios.rs ScenarioKind::factor."""
+    if name == "spike":
+        p = step % 23
+        if 8 <= p < 11:
+            return 0.45
+        if step % 37 == 18:
+            return 0.3
+        return 1.0
+    if name == "frag":
+        return 1.0 - 0.045 * float(min(step // 6, 9))
+    if name == "leak":
+        f = 1.0 - 0.004 * float(step)
+        return 0.5 if f < 0.5 else f
+    raise ValueError(f"unknown scenario `{name}`")
+
+
+def scenario_digests():
+    """One (name, digest) pair per scenario: FNV-1a-64 over the
+    little-endian f64 bits of factor(0..256)."""
+    out = []
+    for name in ("spike", "frag", "leak"):
+        series = b"".join(
+            struct.pack("<d", scenario_factor(name, step)) for step in range(256)
+        )
+        out.append((name, fnv1a64(series)))
+    return out
+
+
 def main(argv):
     args = argv[1:]
+    if args == ["--scenarios"]:
+        for name, digest in scenario_digests():
+            print(f"{name} digest=0x{digest:016x}")
+        return 0
     if not args or len(args) % 2 != 0:
         print(__doc__.strip(), file=sys.stderr)
         return 2

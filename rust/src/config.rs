@@ -134,10 +134,18 @@ pub struct Config {
     pub mem_budget_gb: f64,
     pub mem_noise: f64,     // allocator transient noise fraction
     /// Time-varying budget trace (`memsim::BudgetTrace` spec): "const"
-    /// (default), "step:FRAC@STEP", "ramp:START:END:FLOOR", or
-    /// "saw:PERIOD:DEPTH" — the VRAM-pressure scenarios a co-tenant or
+    /// (default), "step:FRAC@STEP", "ramp:START:END:FLOOR",
+    /// "saw:PERIOD:DEPTH", "replay:FILE[#DIGEST]" (a recorded absolute
+    /// MemMax series, see `docs/MEMORY.md`), or "scenario:NAME"
+    /// (spike|frag|leak) — the VRAM-pressure scenarios a co-tenant or
     /// shrinking allocation imposes on the elastic controller.
     pub mem_trace: String,
+    /// Control-window budget source: "sim" (default — the VRAM
+    /// simulator, fully deterministic) or "host" (real
+    /// `/proc/self/statm` RSS + MemTotal readings at control windows;
+    /// observational, feeds telemetry and the policy observe path
+    /// only — see `docs/MEMORY.md`).
+    pub mem_source: String,
 
     // -- loss scaling --------------------------------------------------------
     pub init_loss_scale: f32,
@@ -180,6 +188,7 @@ impl Default for Config {
             mem_budget_gb: 0.45,
             mem_noise: 0.01,
             mem_trace: "const".into(),
+            mem_source: "sim".into(),
             init_loss_scale: 1024.0,
             loss_scale_growth_interval: 200,
         }
@@ -273,6 +282,7 @@ impl Config {
             "mem_budget_gb" => self.mem_budget_gb = num!(),
             "mem_noise" => self.mem_noise = num!(),
             "mem_trace" => self.mem_trace = val.to_string(),
+            "mem_source" => self.mem_source = val.to_string(),
             "init_loss_scale" => self.init_loss_scale = num!(),
             "loss_scale_growth_interval" => self.loss_scale_growth_interval = num!(),
             "dynamic_precision" => self.ablation.dynamic_precision = parse_bool(val)?,
@@ -309,6 +319,11 @@ impl Config {
         );
         crate::memsim::BudgetTrace::parse(&self.mem_trace)
             .context("mem_trace spec")?;
+        anyhow::ensure!(
+            matches!(self.mem_source.as_str(), "sim" | "host"),
+            "mem_source must be sim|host (got `{}`)",
+            self.mem_source
+        );
         Ok(())
     }
 }
@@ -428,5 +443,22 @@ mod tests {
         c.validate().unwrap();
         c.mem_trace = "wobble:9".into();
         assert!(c.validate().is_err());
+        c.set("mem_trace", "scenario:leak").unwrap();
+        c.validate().unwrap();
+        c.mem_trace = "scenario:surge".into();
+        assert!(c.validate().is_err());
+        c.mem_trace = "replay:/no/such/file.json".into();
+        assert!(c.validate().is_err(), "missing trace file fails at validation");
+    }
+
+    #[test]
+    fn mem_source_validated() {
+        let mut c = Config::default();
+        assert_eq!(c.mem_source, "sim", "deterministic simulator is the default");
+        c.set("mem_source", "host").unwrap();
+        c.validate().unwrap();
+        c.mem_source = "gpu".into();
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("sim|host"), "{err}");
     }
 }

@@ -518,8 +518,10 @@ pub fn pressure(
 ) -> Result<Vec<PressureCell>> {
     // Fail on a bad trace or a bad method key before any training
     // burns time — a typo in the last method must not discard minutes
-    // of earlier cells.
-    crate::memsim::BudgetTrace::parse(trace)?;
+    // of earlier cells. Configs carry the *canonical* spec form
+    // (`to_spec`) so a `replay:` trace's content digest is part of
+    // every config fingerprint.
+    let trace = crate::memsim::BudgetTrace::parse(trace)?.to_spec();
     let specs: Vec<&crate::policy::MethodSpec> = method_keys
         .iter()
         .map(|k| crate::policy::registry::resolve(k.trim()))

@@ -45,7 +45,7 @@ pub const RULES: &[RuleInfo] = &[
     },
     RuleInfo {
         id: "d2",
-        title: "no wall-clock reads outside the timing allowlist",
+        title: "no wall-clock or host-environment reads outside the allowlist",
         scope: "all library code (non-test)",
     },
     RuleInfo {
@@ -127,17 +127,24 @@ pub fn check_file(sf: &SourceFile) -> Vec<Finding> {
             ));
         }
 
-        // D2 — wall-clock reads.
+        // D2 — wall-clock reads, plus host-environment reads: a
+        // `/proc/` path is live machine state (RSS, MemTotal) and must
+        // not feed deterministic paths. The code channel blanks string
+        // literal contents, so the path is matched on the raw line;
+        // comment-only lines never reach this point, and a prose
+        // mention in a trailing comment does not count.
+        // detlint: allow(d2) — the rule's own matcher must name the pattern
+        let proc_read = sf.raw[i].contains("/proc/") && !line.comment.contains("/proc/");
         if !line.in_test
-            && (code.contains("Instant::now") || code.contains("SystemTime"))
+            && (code.contains("Instant::now") || code.contains("SystemTime") || proc_read)
             && !allowed("d2")
         {
             out.push(finding(
                 sf,
                 "d2",
                 lineno,
-                "wall-clock read outside the timing allowlist — deterministic paths must not \
-                 observe time",
+                "wall-clock or host-environment read outside the timing allowlist — \
+                 deterministic paths must not observe time or live machine state",
             ));
         }
 
@@ -288,6 +295,19 @@ mod tests {
         assert_eq!(check("util/x.rs", gap).len(), 1);
         let code_between = "// SAFETY: detached by code\nlet a = 1;\nunsafe { v.set_len(n) };\n";
         assert_eq!(check("util/x.rs", code_between).len(), 1);
+    }
+
+    #[test]
+    fn d2_flags_proc_reads_despite_literal_blanking() {
+        let src = "let t = std::fs::read_to_string(\"/proc/self/statm\");\n";
+        let hits = check("memsim/x.rs", src);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].rule, "d2");
+        let commented = "let a = 1; // docs mention /proc/meminfo\n";
+        assert!(check("memsim/x.rs", commented).is_empty(), "prose mention in a comment");
+        let pragma = "// detlint: allow(d2) — host meter by design\n\
+                      let t = std::fs::read_to_string(\"/proc/self/statm\");\n";
+        assert!(check("memsim/x.rs", pragma).is_empty(), "justified pragma suppresses");
     }
 
     #[test]

@@ -39,7 +39,9 @@ pub const PINS: &[SchemaPin] = &[
         file: "metrics/telemetry.rs",
         version_const: "SCHEMA_VERSION",
         version: 1,
-        digest: 0x6e070c60d1122fed,
+        // Re-pinned for the additive `host_mem` event ("source" key);
+        // additive fields keep the version (docs/TELEMETRY.md).
+        digest: 0x1b51bde31d46413a,
     },
     SchemaPin {
         file: "sched/ledger.rs",

@@ -6,8 +6,9 @@
 //!   table1   [--models a,b] [--seeds 0,1,2] [--jobs N] [--replicas N] [--smoke]
 //!   table2   [--model K]    [--seeds 0,1,2] [--jobs N] [--replicas N]
 //!   fig      [--model K]    [--seed S]      [--jobs N] [--replicas N]
-//!   pressure [--model K] [--methods a,b] [--trace SPEC] [--jobs N] [--replicas N] [--smoke]
+//!   pressure [--model K] [--methods a,b] [--trace SPEC | --scenario NAME] [--jobs N] [--smoke]
 //!   chaos    [--grid table1|table2|fig|pressure] [--faults SPEC] [--retries N] + grid flags
+//!   trace    --record (--events F | --grid DIR) --out F | --show F | --verify --a DIR --b DIR
 //!   compare --a run.json --b run.json
 //!   report   [--out runs] [--dir DIR]
 //!   lint     [--format human|json] [--out FILE] [--root DIR]
@@ -18,7 +19,10 @@
 //! accepts any registry key (`--list-methods`), not just the paper's
 //! three columns. `--no-autotune` ignores the GEMM tuning cache for
 //! this run (every kernel uses the default blocking; see
-//! docs/ARCHITECTURE.md "SIMD dispatch & autotuning").
+//! docs/ARCHITECTURE.md "SIMD dispatch & autotuning"). `--mem-source
+//! host` (train) samples the process's real RSS at control windows
+//! into `host_mem` telemetry; deterministic artifacts still come from
+//! the simulator (docs/MEMORY.md).
 //!
 //! The grid subcommands (`table1`/`table2`/`fig`/`pressure`) run on
 //! the experiment scheduler: `--jobs N` executes cells concurrently,
@@ -43,7 +47,7 @@
 //! the native compute core's worker count (output is bit-identical
 //! for every value — see README "Performance").
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
@@ -86,6 +90,7 @@ fn run() -> Result<()> {
         Some("fig") => fig(&args),
         Some("pressure") => pressure(&args),
         Some("chaos") => chaos(&args),
+        Some("trace") => trace_cmd(&args),
         Some("compare") => compare(&args),
         Some("report") => report(&args),
         Some("lint") => lint(&args),
@@ -93,7 +98,7 @@ fn run() -> Result<()> {
         Some(other) => {
             anyhow::bail!(
                 "unknown subcommand `{other}` \
-                 (info|train|table1|table2|fig|pressure|chaos|compare|report|lint|tune)"
+                 (info|train|table1|table2|fig|pressure|chaos|trace|compare|report|lint|tune)"
             )
         }
     }
@@ -441,6 +446,9 @@ fn config_from(args: &Args) -> Result<Config> {
     if let Some(s) = args.get("steps") {
         cfg.steps_per_epoch = Some(s.parse().context("--steps")?);
     }
+    if let Some(src) = args.get("mem-source") {
+        cfg.set("mem_source", src)?;
+    }
     // k=v escape hatch for every remaining hyperparameter.
     if let Some(sets) = args.get("set") {
         for kv in sets.split(',') {
@@ -653,7 +661,18 @@ fn pressure_grid(args: &Args, engine: &Engine) -> Result<(sched::GridSpec, Strin
     let ramp_start = total / 4;
     let ramp_end = ((3 * total) / 4).max(ramp_start + 1);
     let default_trace = format!("ramp:{ramp_start}:{ramp_end}:0.55");
-    let trace = args.get_or("trace", &default_trace);
+    // `--scenario NAME` is sugar for `--trace scenario:NAME` — the
+    // named adversarial pressure shapes (docs/MEMORY.md).
+    let scenario = args.get("scenario").map(str::to_string);
+    let explicit_trace = args.get("trace").map(str::to_string);
+    let trace = match (scenario, explicit_trace) {
+        (Some(_), Some(_)) => {
+            anyhow::bail!("--scenario and --trace are mutually exclusive (pick one)")
+        }
+        (Some(name), None) => format!("scenario:{name}"),
+        (None, Some(t)) => t,
+        (None, None) => default_trace,
+    };
     harness::validate_models(engine, &[model.as_str()])?;
     let keys: Vec<&str> = methods.split(',').collect();
     let budget = harness::quick_budget(steps, epochs);
@@ -813,6 +832,97 @@ fn chaos(args: &Args) -> Result<()> {
     println!("chaos PASS: faulted artifacts are bit-identical to the fault-free run");
     print_outcome(&faulted);
     Ok(())
+}
+
+/// `trace`: telemetry-trace tooling for `mem_trace=replay:FILE`
+/// (file format and determinism contract: docs/MEMORY.md).
+///
+/// * `--record (--events FILE | --grid DIR) --out FILE [--source S]`
+///   converts a telemetry event stream into a versioned trace file —
+///   the per-step `max_gb` ceiling the run observed — and prints the
+///   canonical `replay:PATH#DIGEST` spec to feed back into
+///   `pressure --trace` or `--set mem_trace=…`. `--grid DIR` records
+///   from the grid's first events file (sorted job-key order).
+/// * `--show FILE` prints a trace file's provenance and series.
+/// * `--verify --a DIR --b DIR` compares two completed grid
+///   directories for replay equivalence — wall-clock fields, line
+///   CRCs, and config identity are normalized away; everything else
+///   must match bit for bit. Exits nonzero on any mismatch.
+fn trace_cmd(args: &Args) -> Result<()> {
+    use tri_accel::memsim::tracefile::TraceFile;
+    let record = args.flag("record");
+    let show = args.get("show").map(PathBuf::from);
+    let verify = args.flag("verify");
+    if record {
+        let events = args.get("events").map(PathBuf::from);
+        let grid = args.get("grid").map(PathBuf::from);
+        let out = PathBuf::from(args.get("out").context("--record needs --out FILE")?);
+        let source_override = args.get("source").map(str::to_string);
+        args.reject_unknown()?;
+        let events_path = match (events, grid) {
+            (Some(p), None) => p,
+            (None, Some(dir)) => first_events_file(&dir)?,
+            _ => anyhow::bail!("--record needs exactly one of --events FILE or --grid DIR"),
+        };
+        let text = std::fs::read_to_string(&events_path)
+            .with_context(|| format!("reading {}", events_path.display()))?;
+        let source = source_override.unwrap_or_else(|| events_path.display().to_string());
+        let tf = TraceFile::from_events(&text, &source)?;
+        tf.save(&out)?;
+        println!(
+            "recorded {} step(s) from {} → {}",
+            tf.gb.len(),
+            events_path.display(),
+            out.display()
+        );
+        println!("replay spec: replay:{}#{:016x}", out.display(), tf.digest());
+        return Ok(());
+    }
+    if let Some(path) = show {
+        args.reject_unknown()?;
+        let tf = TraceFile::load(&path)?;
+        println!(
+            "{}: {} step(s), source `{}`, digest {:016x}",
+            path.display(),
+            tf.gb.len(),
+            tf.source,
+            tf.digest()
+        );
+        const HEAD: usize = 16;
+        for (i, gb) in tf.gb.iter().take(HEAD).enumerate() {
+            println!("{i:>6}  {gb} GB");
+        }
+        if tf.gb.len() > HEAD {
+            println!("     … {} more step(s)", tf.gb.len() - HEAD);
+        }
+        return Ok(());
+    }
+    if verify {
+        let a = PathBuf::from(args.get("a").context("--verify needs --a GRID_DIR")?);
+        let b = PathBuf::from(args.get("b").context("--verify needs --b GRID_DIR")?);
+        args.reject_unknown()?;
+        let rep = sched::replay::compare_grids(&a, &b)?;
+        println!("{}", rep.render());
+        anyhow::ensure!(rep.ok(), "grids are not replay-equivalent");
+        return Ok(());
+    }
+    anyhow::bail!("trace: pick a mode — --record, --show FILE, or --verify --a DIR --b DIR")
+}
+
+/// The first events file (sorted job-key order) of a grid directory.
+fn first_events_file(grid_dir: &Path) -> Result<PathBuf> {
+    let events = grid_dir.join("events");
+    let rd = std::fs::read_dir(&events)
+        .with_context(|| format!("reading {} (not a grid directory?)", events.display()))?;
+    let mut files: Vec<PathBuf> = rd
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "jsonl"))
+        .collect();
+    files.sort();
+    files
+        .into_iter()
+        .next()
+        .with_context(|| format!("no .jsonl events under {}", events.display()))
 }
 
 /// `report`: re-render the markdown/JSON artifacts of completed grids

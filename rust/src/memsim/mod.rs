@@ -14,6 +14,10 @@
 // `cargo build`/`cargo test` never hard-fails on a doc regression.
 #![warn(missing_docs)]
 
+pub mod hostmem;
+pub mod scenarios;
+pub mod tracefile;
+
 use crate::manifest::{precision_bytes, ModelEntry};
 use crate::util::rng::Rng;
 
@@ -34,8 +38,10 @@ const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
 /// A time-varying budget: the VRAM-pressure scenarios. `MemMax` is no
 /// longer necessarily a constant — a co-tenant spinning up, a shrinking
 /// cgroup allocation, or a periodic neighbor all move the ceiling the
-/// §3.3 controller must live under. The trace multiplies the base
-/// budget by a step-indexed factor in (0, 1].
+/// §3.3 controller must live under. The synthetic traces multiply the
+/// base budget by a step-indexed factor in (0, 1]; a [`Self::Replay`]
+/// trace instead *replaces* `MemMax` with a recorded absolute series
+/// (see [`tracefile`]).
 #[derive(Debug, Clone, PartialEq)]
 pub enum BudgetTrace {
     /// Fixed budget (the paper's strict single-GPU setting).
@@ -50,11 +56,32 @@ pub enum BudgetTrace {
     /// linearly over each period, then releases. Factor falls from 1.0
     /// toward `1 - depth` across each `period`-step cycle.
     Sawtooth { period: u64, depth: f64 },
+    /// A recorded absolute `MemMax` series (GiB), loaded from a
+    /// versioned trace file and played back by step index — no wall
+    /// clock, no base-budget scaling. Past the end of the series the
+    /// last value holds. `path` is kept for spec round-tripping.
+    Replay {
+        /// The trace file the series was loaded from.
+        path: String,
+        /// Absolute `MemMax` in GiB at step `i` (never empty).
+        gb: Vec<f64>,
+    },
+    /// A named adversarial scenario from the library — a closed-form
+    /// deterministic factor curve (see [`scenarios`]).
+    Scenario(scenarios::ScenarioKind),
 }
 
 impl BudgetTrace {
     /// Parse a trace spec: `const` | `step:FRAC@STEP` |
-    /// `ramp:START:END:FLOOR` | `saw:PERIOD:DEPTH`.
+    /// `ramp:START:END:FLOOR` | `saw:PERIOD:DEPTH` |
+    /// `replay:FILE[#DIGEST]` | `scenario:NAME`.
+    ///
+    /// `replay:` loads and validates the trace file eagerly, so a
+    /// malformed file fails here (CLI arg / config validation), never
+    /// mid-grid. The optional `#DIGEST` suffix (16 hex digits) pins the
+    /// file's content digest — [`Self::to_spec`] always emits it — so
+    /// the spec string, and with it every config fingerprint built
+    /// from it, changes whenever the trace *content* changes.
     pub fn parse(spec: &str) -> anyhow::Result<BudgetTrace> {
         let t = match spec {
             "" | "const" | "none" => BudgetTrace::Constant,
@@ -85,8 +112,35 @@ impl BudgetTrace {
                     depth: parts[1].parse().map_err(|_| anyhow::anyhow!("bad depth"))?,
                 }
             }
+            s if s.starts_with("replay:") => {
+                let body = &s[7..];
+                // `#DIGEST` pin: exactly 16 trailing hex digits after
+                // the last `#`; anything else is part of the path.
+                let (path, want) = match body.rsplit_once('#') {
+                    Some((p, d)) if d.len() == 16 => match u64::from_str_radix(d, 16) {
+                        Ok(w) => (p, Some(w)),
+                        Err(_) => (body, None),
+                    },
+                    _ => (body, None),
+                };
+                anyhow::ensure!(!path.is_empty(), "replay trace wants a file path");
+                let tf = tracefile::TraceFile::load(std::path::Path::new(path))?;
+                if let Some(w) = want {
+                    let got = tf.digest();
+                    anyhow::ensure!(
+                        got == w,
+                        "replay trace `{path}` content digest {got:016x} does not match the \
+                         pinned {w:016x} — the file changed since this spec was written"
+                    );
+                }
+                BudgetTrace::Replay { path: path.to_string(), gb: tf.gb }
+            }
+            s if s.starts_with("scenario:") => {
+                BudgetTrace::Scenario(scenarios::ScenarioKind::parse(&s[9..])?)
+            }
             other => anyhow::bail!(
-                "unknown budget trace `{other}` (const|step:FRAC@STEP|ramp:START:END:FLOOR|saw:PERIOD:DEPTH)"
+                "unknown budget trace `{other}` (const|step:FRAC@STEP|ramp:START:END:FLOOR\
+                 |saw:PERIOD:DEPTH|replay:FILE[#DIGEST]|scenario:NAME)"
             ),
         };
         t.validate()?;
@@ -95,7 +149,7 @@ impl BudgetTrace {
 
     fn validate(&self) -> anyhow::Result<()> {
         match *self {
-            BudgetTrace::Constant => {}
+            BudgetTrace::Constant | BudgetTrace::Scenario(_) => {}
             BudgetTrace::Step { frac, .. } => {
                 anyhow::ensure!(frac > 0.0 && frac <= 1.0, "step frac in (0,1]");
             }
@@ -107,14 +161,49 @@ impl BudgetTrace {
                 anyhow::ensure!(period > 0, "saw period > 0");
                 anyhow::ensure!((0.0..1.0).contains(&depth), "saw depth in [0,1)");
             }
+            BudgetTrace::Replay { ref gb, .. } => tracefile::validate_series(gb)?,
         }
         Ok(())
     }
 
-    /// Budget multiplier at `step`, in (0, 1].
+    /// Render the canonical spec string [`Self::parse`] accepts — the
+    /// inverse of `parse`, used wherever a trace flows into a config
+    /// (`Config::mem_trace`), so grid identity always hashes the
+    /// canonical form. For [`Self::Replay`] the emitted spec pins the
+    /// content digest: `replay:PATH#DIGEST`.
+    pub fn to_spec(&self) -> String {
+        match self {
+            BudgetTrace::Constant => "const".to_string(),
+            BudgetTrace::Step { at, frac } => format!("step:{frac}@{at}"),
+            BudgetTrace::Ramp { start, end, floor } => format!("ramp:{start}:{end}:{floor}"),
+            BudgetTrace::Sawtooth { period, depth } => format!("saw:{period}:{depth}"),
+            BudgetTrace::Replay { path, gb } => {
+                format!("replay:{path}#{:016x}", tracefile::series_digest(gb))
+            }
+            BudgetTrace::Scenario(k) => format!("scenario:{}", k.name()),
+        }
+    }
+
+    /// Absolute `MemMax` level (GiB) at `step`, for traces that carry
+    /// one ([`Self::Replay`] — clamped to the last recorded step).
+    /// `None` for the factor-based traces, which scale a base budget
+    /// instead.
+    pub fn level_gb(&self, step: u64) -> Option<f64> {
+        match self {
+            BudgetTrace::Replay { gb, .. } => {
+                // `gb` is never empty (validated at parse/load time).
+                Some(gb[(step as usize).min(gb.len() - 1)])
+            }
+            _ => None,
+        }
+    }
+
+    /// Budget multiplier at `step`, in (0, 1]. For [`Self::Replay`]
+    /// the factor is unused ([`Self::level_gb`] replaces the budget
+    /// outright) and reads as 1.0.
     pub fn factor(&self, step: u64) -> f64 {
         match *self {
-            BudgetTrace::Constant => 1.0,
+            BudgetTrace::Constant | BudgetTrace::Replay { .. } => 1.0,
             BudgetTrace::Step { at, frac } => {
                 if step >= at {
                     frac
@@ -136,6 +225,7 @@ impl BudgetTrace {
                 let phase = (step % period) as f64 / period as f64;
                 1.0 - depth * phase
             }
+            BudgetTrace::Scenario(k) => k.factor(step),
         }
     }
 }
@@ -186,7 +276,9 @@ pub struct StepUsage {
 /// live precision map, and the live batch size. Supports time-varying
 /// budgets ([`BudgetTrace`]) for the VRAM-pressure scenarios.
 pub struct VramSim {
-    /// Base budget; the live `MemMax` is `budget_gb · trace.factor(step)`.
+    /// Base budget; the live `MemMax` is `budget_gb · trace.factor(step)`
+    /// — except under a [`BudgetTrace::Replay`], whose recorded
+    /// absolute series replaces the ceiling entirely.
     budget_gb: f64,
     trace: BudgetTrace,
     /// Current trainer step (drives the trace). Advanced by
@@ -423,6 +515,12 @@ impl MemoryMonitor for VramSim {
     }
 
     fn mem_max_gb(&self) -> f64 {
+        // A replayed trace carries the absolute ceiling; the base
+        // budget does not enter (that is what makes replay portable
+        // across models and budgets).
+        if let Some(gb) = self.trace.level_gb(self.step) {
+            return gb;
+        }
         match self.trace {
             BudgetTrace::Constant => self.budget_gb,
             _ => self.budget_gb * self.trace.factor(self.step),
@@ -674,6 +772,96 @@ mod tests {
         for bad in ["step:1.5@4", "ramp:9:9:0.5", "saw:0:0.2", "wobble", "saw:5:1.0"] {
             assert!(BudgetTrace::parse(bad).is_err(), "`{bad}` must be rejected");
         }
+    }
+
+    #[test]
+    fn to_spec_round_trips_every_variant() {
+        // Synthetic traces: parse(to_spec(t)) == t, and the canonical
+        // string is a fixed point of the round trip.
+        for spec in ["const", "step:0.6@100", "ramp:10:20:0.5", "saw:10:0.4"] {
+            let t = BudgetTrace::parse(spec).unwrap();
+            assert_eq!(t.to_spec(), spec, "canonical specs are fixed points");
+            assert_eq!(BudgetTrace::parse(&t.to_spec()).unwrap(), t);
+        }
+        assert_eq!(BudgetTrace::parse("").unwrap().to_spec(), "const");
+        for k in scenarios::ALL {
+            let t = BudgetTrace::Scenario(k);
+            assert_eq!(BudgetTrace::parse(&t.to_spec()).unwrap(), t);
+        }
+        // Replay: to_spec pins the content digest; parse verifies it.
+        let dir = std::env::temp_dir().join(format!("triaccel_memsim_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("round.json");
+        tracefile::TraceFile::new("unit", vec![0.5, 0.25, 0.125]).unwrap().save(&path).unwrap();
+        let t = BudgetTrace::parse(&format!("replay:{}", path.display())).unwrap();
+        let spec = t.to_spec();
+        assert!(spec.contains('#'), "replay spec pins the digest: {spec}");
+        assert_eq!(BudgetTrace::parse(&spec).unwrap(), t);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn replay_trace_replaces_the_ceiling_and_clamps() {
+        let dir = std::env::temp_dir().join(format!("triaccel_memsim_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("levels.json");
+        tracefile::TraceFile::new("unit", vec![2.0, 0.04, 0.5]).unwrap().save(&path).unwrap();
+        let t = BudgetTrace::parse(&format!("replay:{}", path.display())).unwrap();
+        assert_eq!(t.level_gb(0), Some(2.0));
+        assert_eq!(t.level_gb(1), Some(0.04));
+        assert_eq!(t.level_gb(9), Some(0.5), "holds the last value past the end");
+        assert_eq!(t.factor(1), 1.0, "factor is unused under replay");
+
+        let e = toy_entry();
+        let mut sim = VramSim::new(&e, 1.0, 0.0, 0);
+        sim.set_trace(t);
+        sim.set_step(0);
+        assert_eq!(sim.mem_max_gb(), 2.0, "absolute series ignores the base budget");
+        sim.usage(32, &[FP32, FP32], false);
+        assert_eq!(sim.oom_events(), 0);
+        sim.set_step(1);
+        assert_eq!(sim.mem_max_gb(), 0.04);
+        sim.usage(32, &[FP32, FP32], false);
+        assert_eq!(sim.oom_events(), 1, "squeezed recorded step OOMs");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn replay_spec_rejects_bad_files_and_stale_digests() {
+        let dir = std::env::temp_dir().join(format!("triaccel_memsim_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // Missing file fails at parse time, not mid-grid.
+        let missing = dir.join("nope.json");
+        assert!(BudgetTrace::parse(&format!("replay:{}", missing.display())).is_err());
+        assert!(BudgetTrace::parse("replay:").is_err(), "empty path rejected");
+        // Malformed content fails at parse time too.
+        let bad = dir.join("bad.json");
+        std::fs::write(&bad, "{\"schema\":1,\"kind\":\"mem_trace\",\"gb\":[0.5,-1.0]}").unwrap();
+        assert!(BudgetTrace::parse(&format!("replay:{}", bad.display())).is_err());
+        // A pinned digest catches content drift.
+        let path = dir.join("pin.json");
+        tracefile::TraceFile::new("unit", vec![0.5]).unwrap().save(&path).unwrap();
+        let spec = BudgetTrace::parse(&format!("replay:{}", path.display())).unwrap().to_spec();
+        tracefile::TraceFile::new("unit", vec![0.25]).unwrap().save(&path).unwrap();
+        let err = BudgetTrace::parse(&spec).unwrap_err().to_string();
+        assert!(err.contains("does not match"), "{err}");
+        for f in [&bad, &path] {
+            std::fs::remove_file(f).ok();
+        }
+    }
+
+    #[test]
+    fn scenario_trace_drives_the_budget() {
+        let t = BudgetTrace::parse("scenario:spike").unwrap();
+        assert_eq!(t, BudgetTrace::Scenario(scenarios::ScenarioKind::Spike));
+        let e = toy_entry();
+        let mut sim = VramSim::new(&e, 1.0, 0.0, 0);
+        sim.set_trace(t);
+        sim.set_step(0);
+        assert_eq!(sim.mem_max_gb(), 1.0);
+        sim.set_step(8);
+        assert!((sim.mem_max_gb() - 0.45).abs() < 1e-12, "burst squeezes the ceiling");
+        assert!(BudgetTrace::parse("scenario:surge").is_err(), "unknown names rejected");
     }
 
     #[test]

@@ -1,0 +1,171 @@
+//! The adversarial pressure-scenario library: named, deterministic
+//! budget shapes modeling real co-tenant behavior, exposed on the CLI
+//! as `pressure --scenario NAME` (spec form `scenario:NAME`).
+//!
+//! Each scenario is a closed-form step-indexed factor in (0, 1] over
+//! the base budget — pure integer/rational arithmetic only (no
+//! transcendental functions), so the series is bit-identical across
+//! platforms and mirrors exactly in the Python twin
+//! (`python/tools/schema_digest.py --scenarios`). The factor-series
+//! digests are pinned in the tests below; a formula change must re-pin
+//! them (the same twin recomputes the expected values).
+
+use anyhow::Result;
+
+/// A named pressure scenario (see the table in `docs/MEMORY.md`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScenarioKind {
+    /// Bursty inference co-tenant: short deep budget dips on two
+    /// interleaved periods, full budget between bursts.
+    Spike,
+    /// Fragmentation ratchet: the usable budget shrinks in steps and
+    /// never recovers, flooring at ~60%.
+    Frag,
+    /// Slow co-tenant leak: a linear decline to a 50% floor.
+    Leak,
+}
+
+/// Every scenario, in presentation order.
+pub const ALL: [ScenarioKind; 3] = [ScenarioKind::Spike, ScenarioKind::Frag, ScenarioKind::Leak];
+
+impl ScenarioKind {
+    /// Parse a scenario name (the `NAME` of `scenario:NAME`).
+    pub fn parse(name: &str) -> Result<ScenarioKind> {
+        match name {
+            "spike" => Ok(ScenarioKind::Spike),
+            "frag" => Ok(ScenarioKind::Frag),
+            "leak" => Ok(ScenarioKind::Leak),
+            other => anyhow::bail!("unknown scenario `{other}` (spike|frag|leak)"),
+        }
+    }
+
+    /// Stable lowercase name (spec form, report rows).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScenarioKind::Spike => "spike",
+            ScenarioKind::Frag => "frag",
+            ScenarioKind::Leak => "leak",
+        }
+    }
+
+    /// One-line description (CLI errors, report headers, docs table).
+    pub fn describe(&self) -> &'static str {
+        match self {
+            ScenarioKind::Spike => {
+                "bursty inference co-tenant: 3-step dips to 0.45 every 23 steps, \
+                 rarer single-step dips to 0.30"
+            }
+            ScenarioKind::Frag => {
+                "fragmentation ratchet: budget shrinks 4.5% every 6 steps, floors at 0.595, \
+                 never recovers"
+            }
+            ScenarioKind::Leak => "slow co-tenant leak: linear 0.4%/step decline to a 0.50 floor",
+        }
+    }
+
+    /// Budget factor at `step`, in (0, 1]. Pure integer/rational
+    /// arithmetic — bit-identical everywhere, mirrored by the Python
+    /// twin.
+    pub fn factor(&self, step: u64) -> f64 {
+        match self {
+            ScenarioKind::Spike => {
+                let p = step % 23;
+                if (8..11).contains(&p) {
+                    0.45
+                } else if step % 37 == 18 {
+                    0.3
+                } else {
+                    1.0
+                }
+            }
+            ScenarioKind::Frag => 1.0 - 0.045 * (step / 6).min(9) as f64,
+            ScenarioKind::Leak => {
+                let f = 1.0 - 0.004 * step as f64;
+                if f < 0.5 {
+                    0.5
+                } else {
+                    f
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::fnv1a;
+
+    /// FNV-1a-64 over the little-endian bits of `factor(0..256)` — the
+    /// same digest `python/tools/schema_digest.py --scenarios` prints.
+    fn series_digest(kind: ScenarioKind) -> u64 {
+        let mut bytes = Vec::with_capacity(256 * 8);
+        for step in 0..256u64 {
+            bytes.extend_from_slice(&kind.factor(step).to_bits().to_le_bytes());
+        }
+        fnv1a(&bytes)
+    }
+
+    #[test]
+    fn factors_stay_in_unit_interval() {
+        for kind in ALL {
+            for step in 0..2000u64 {
+                let f = kind.factor(step);
+                assert!(f > 0.0 && f <= 1.0, "{}.factor({step}) = {f}", kind.name());
+            }
+        }
+    }
+
+    #[test]
+    fn spike_bursts_and_recovers() {
+        let k = ScenarioKind::Spike;
+        assert_eq!(k.factor(0), 1.0);
+        assert_eq!(k.factor(8), 0.45, "burst opens at phase 8");
+        assert_eq!(k.factor(10), 0.45, "burst holds 3 steps");
+        assert_eq!(k.factor(11), 1.0, "budget returns after the burst");
+        assert_eq!(k.factor(18), 0.3, "deep dip on the 37-step period");
+        assert_eq!(k.factor(23 + 8), 0.45, "bursts are periodic");
+    }
+
+    #[test]
+    fn frag_ratchets_down_monotonically_to_a_floor() {
+        let k = ScenarioKind::Frag;
+        assert_eq!(k.factor(0), 1.0);
+        for step in 1..400u64 {
+            assert!(k.factor(step) <= k.factor(step - 1), "ratchet never recovers");
+        }
+        assert!((k.factor(1000) - 0.595).abs() < 1e-12, "floor at 10 notches");
+    }
+
+    #[test]
+    fn leak_declines_to_half() {
+        let k = ScenarioKind::Leak;
+        assert_eq!(k.factor(0), 1.0);
+        assert!((k.factor(50) - 0.8).abs() < 1e-12);
+        assert_eq!(k.factor(125), 0.5);
+        assert_eq!(k.factor(10_000), 0.5, "floor holds");
+    }
+
+    #[test]
+    fn parse_and_names_round_trip() {
+        for kind in ALL {
+            assert_eq!(ScenarioKind::parse(kind.name()).unwrap(), kind);
+            assert!(!kind.describe().is_empty());
+        }
+        let err = ScenarioKind::parse("surge").unwrap_err().to_string();
+        assert!(err.contains("spike|frag|leak"), "{err}");
+    }
+
+    #[test]
+    fn factor_series_digests_are_pinned() {
+        // Recompute with `python/tools/schema_digest.py --scenarios`
+        // after any deliberate formula change.
+        assert_eq!(
+            series_digest(ScenarioKind::Spike),
+            0x5b30ae23e42fd331,
+            "spike series drifted"
+        );
+        assert_eq!(series_digest(ScenarioKind::Frag), 0x51444d17cc4a10a5, "frag series drifted");
+        assert_eq!(series_digest(ScenarioKind::Leak), 0xf6527648fec1021f, "leak series drifted");
+    }
+}

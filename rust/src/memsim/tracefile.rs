@@ -1,0 +1,319 @@
+//! Versioned on-disk memory-budget traces: the record half of
+//! record/replay.
+//!
+//! A trace file is one JSON object holding an absolute `MemMax` series
+//! in GiB, indexed by optimizer step:
+//!
+//! ```text
+//! {"schema":1,"kind":"mem_trace","source":"<free text>","gb":[0.45,0.45,...]}
+//! ```
+//!
+//! The series is *absolute*, not a factor over some base budget:
+//! recording `max_gb / budget` and replaying `budget * factor` would
+//! not be bit-exact (`(x/y)*y != x` in general), and an absolute
+//! series replays onto any model × method × replica combination
+//! without knowing the originating run's budget. Values serialize
+//! through [`crate::util::json::Json`]'s shortest-roundtrip f64
+//! formatting, so a recorded `f64` parses back to the identical bits.
+//!
+//! Validation is strict and happens at parse time — a malformed,
+//! oversized, empty, or non-finite trace is rejected when the spec is
+//! parsed (CLI arg / config validation), never mid-grid. Standard JSON
+//! has no NaN/Infinity literals, so a NaN-bearing file already fails
+//! at [`Json::parse`]; the finiteness check here guards
+//! directly-constructed values too.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::checkpoint::fnv1a;
+use crate::util::json::Json;
+
+/// Trace-file schema version (`"schema"` field). Bump only for
+/// breaking changes; adding new informational fields does not bump it.
+pub const TRACE_SCHEMA_VERSION: u64 = 1;
+
+/// The `"kind"` tag a budget-trace file must carry.
+pub const TRACE_KIND: &str = "mem_trace";
+
+/// Hard cap on the step count a trace may hold — far above any real
+/// grid (a 60-step × 3-epoch run is 180 entries) and small enough that
+/// a hostile file cannot balloon every `Config::validate` call.
+pub const MAX_TRACE_STEPS: usize = 100_000;
+
+/// Pre-parse cap on the file size ([`TraceFile::load`] checks the
+/// metadata before reading): rejects a runaway file without ever
+/// buffering it.
+pub const MAX_TRACE_FILE_BYTES: u64 = 16 * 1024 * 1024;
+
+/// One recorded budget trace: an absolute per-step `MemMax` series.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceFile {
+    /// Where the series came from (informational — e.g. the recorded
+    /// job key, or a scenario name). Not part of [`Self::digest`].
+    pub source: String,
+    /// `MemMax` in GiB at step `i`; replay clamps past the end.
+    pub gb: Vec<f64>,
+}
+
+impl TraceFile {
+    /// Build a validated trace.
+    pub fn new(source: &str, gb: Vec<f64>) -> Result<TraceFile> {
+        validate_series(&gb)?;
+        Ok(TraceFile { source: source.to_string(), gb })
+    }
+
+    /// Parse and validate the JSON text of a trace file.
+    pub fn parse(text: &str) -> Result<TraceFile> {
+        let j = Json::parse(text).context("trace file json")?;
+        let schema = j.req("schema")?.as_i64().context("trace `schema` must be an integer")?;
+        anyhow::ensure!(
+            schema == TRACE_SCHEMA_VERSION as i64,
+            "trace schema {schema} unsupported (this build reads schema {TRACE_SCHEMA_VERSION})"
+        );
+        let kind = j.req("kind")?.as_str().context("trace `kind` must be a string")?;
+        anyhow::ensure!(kind == TRACE_KIND, "trace kind `{kind}` (want `{TRACE_KIND}`)");
+        let source = j
+            .get("source")
+            .and_then(Json::as_str)
+            .unwrap_or("")
+            .to_string();
+        let arr = j.req("gb")?.as_arr().context("trace `gb` must be an array")?;
+        anyhow::ensure!(
+            arr.len() <= MAX_TRACE_STEPS,
+            "trace holds {} steps (cap {MAX_TRACE_STEPS})",
+            arr.len()
+        );
+        let mut gb = Vec::with_capacity(arr.len());
+        for (i, v) in arr.iter().enumerate() {
+            let x = v.as_f64().with_context(|| format!("trace gb[{i}] must be a number"))?;
+            gb.push(x);
+        }
+        validate_series(&gb)?;
+        Ok(TraceFile { source, gb })
+    }
+
+    /// Serialize to the canonical one-line JSON form (plus a trailing
+    /// newline). Deterministic: the same series always renders the
+    /// same bytes.
+    pub fn render(&self) -> String {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("schema".to_string(), Json::Num(TRACE_SCHEMA_VERSION as f64));
+        m.insert("kind".to_string(), Json::Str(TRACE_KIND.to_string()));
+        m.insert("source".to_string(), Json::Str(self.source.clone()));
+        m.insert("gb".to_string(), Json::Arr(self.gb.iter().map(|&x| Json::Num(x)).collect()));
+        let mut out = Json::Obj(m).to_string_compact();
+        out.push('\n');
+        out
+    }
+
+    /// Load and validate a trace file, with the pre-read size cap.
+    pub fn load(path: &Path) -> Result<TraceFile> {
+        let meta = std::fs::metadata(path)
+            .with_context(|| format!("trace file {}", path.display()))?;
+        anyhow::ensure!(
+            meta.len() <= MAX_TRACE_FILE_BYTES,
+            "trace file {} is {} bytes (cap {MAX_TRACE_FILE_BYTES})",
+            path.display(),
+            meta.len()
+        );
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading trace file {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("trace file {}", path.display()))
+    }
+
+    /// Write the canonical form to `path`.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating {}", parent.display()))?;
+            }
+        }
+        std::fs::write(path, self.render())
+            .with_context(|| format!("writing trace file {}", path.display()))
+    }
+
+    /// Content digest over the series bits (FNV-1a-64 of each value's
+    /// little-endian IEEE-754 bytes, in order). `source` is excluded —
+    /// two recordings of the same series are the same trace. The
+    /// `replay:FILE#DIGEST` spec form pins this digest, so a grid's
+    /// identity covers the trace *content*, not just its path.
+    pub fn digest(&self) -> u64 {
+        series_digest(&self.gb)
+    }
+
+    /// Extract the `MemMax` series from a telemetry event stream (the
+    /// JSONL text of one job's events file): every `step` event's
+    /// `max_gb`, indexed by its `step` field. Requires a dense series
+    /// (steps 0..n-1 all present) so the recorded trace has no holes.
+    pub fn from_events(text: &str, source: &str) -> Result<TraceFile> {
+        let mut series: Vec<Option<f64>> = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let ev = Json::parse(line)
+                .map_err(|e| anyhow::anyhow!("events line {}: {e}", lineno + 1))?;
+            if ev.get("event").and_then(Json::as_str) != Some("step") {
+                continue;
+            }
+            let step = ev
+                .req("step")?
+                .as_usize()
+                .with_context(|| format!("events line {}: bad step", lineno + 1))?;
+            let max_gb = ev
+                .get("max_gb")
+                .and_then(Json::as_f64)
+                .with_context(|| {
+                    format!(
+                        "events line {}: step event has no max_gb — the stream predates \
+                         trace recording (re-run the grid with this build)",
+                        lineno + 1
+                    )
+                })?;
+            anyhow::ensure!(step < MAX_TRACE_STEPS, "step {step} exceeds the trace cap");
+            if step >= series.len() {
+                series.resize(step + 1, None);
+            }
+            series[step] = Some(max_gb);
+        }
+        anyhow::ensure!(!series.is_empty(), "no step events in the stream");
+        let mut gb = Vec::with_capacity(series.len());
+        for (i, v) in series.iter().enumerate() {
+            gb.push(v.with_context(|| format!("step {i} missing from the event stream"))?);
+        }
+        TraceFile::new(source, gb)
+    }
+}
+
+/// FNV-1a-64 over the little-endian IEEE-754 bytes of a series — the
+/// digest [`TraceFile::digest`] reports and `replay:FILE#DIGEST` pins.
+pub fn series_digest(gb: &[f64]) -> u64 {
+    let mut bytes = Vec::with_capacity(gb.len() * 8);
+    for &x in gb {
+        bytes.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+    fnv1a(&bytes)
+}
+
+/// Validate a budget series: non-empty, under the step cap, every
+/// value finite and positive. Shared with [`crate::memsim::BudgetTrace`],
+/// whose `Replay` variant holds the same series shape.
+pub fn validate_series(gb: &[f64]) -> Result<()> {
+    anyhow::ensure!(!gb.is_empty(), "trace holds no steps");
+    anyhow::ensure!(
+        gb.len() <= MAX_TRACE_STEPS,
+        "trace holds {} steps (cap {MAX_TRACE_STEPS})",
+        gb.len()
+    );
+    for (i, &x) in gb.iter().enumerate() {
+        anyhow::ensure!(x.is_finite() && x > 0.0, "trace gb[{i}] = {x} (want finite and > 0)");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::telemetry;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("triaccel_trace_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn render_parse_round_trip_is_bit_exact() {
+        let t = TraceFile::new("unit", vec![0.45, 0.3333333333333333, 1.0 / 3.0 * 0.9]).unwrap();
+        let back = TraceFile::parse(&t.render()).unwrap();
+        assert_eq!(back.gb.len(), t.gb.len());
+        for (a, b) in t.gb.iter().zip(back.gb.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "shortest-roundtrip f64 must be exact");
+        }
+        assert_eq!(back.source, "unit");
+        assert_eq!(back.digest(), t.digest());
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let path = tmp("rt.json");
+        let t = TraceFile::new("job_x", vec![0.5, 0.25, 0.125]).unwrap();
+        t.save(&path).unwrap();
+        let back = TraceFile::load(&path).unwrap();
+        assert_eq!(back, t);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn digest_tracks_content_not_source() {
+        let a = TraceFile::new("a", vec![0.5, 0.25]).unwrap();
+        let b = TraceFile::new("b", vec![0.5, 0.25]).unwrap();
+        let c = TraceFile::new("a", vec![0.5, 0.26]).unwrap();
+        assert_eq!(a.digest(), b.digest(), "source is informational");
+        assert_ne!(a.digest(), c.digest(), "content moves the digest");
+    }
+
+    #[test]
+    fn malformed_traces_are_rejected() {
+        for bad in [
+            "not json",
+            "{\"schema\":1,\"kind\":\"mem_trace\"}",          // no gb
+            "{\"schema\":2,\"kind\":\"mem_trace\",\"gb\":[1.0]}", // wrong schema
+            "{\"schema\":1,\"kind\":\"other\",\"gb\":[1.0]}",  // wrong kind
+            "{\"schema\":1,\"kind\":\"mem_trace\",\"gb\":[]}", // empty
+            "{\"schema\":1,\"kind\":\"mem_trace\",\"gb\":[0.5,\"x\"]}", // non-number
+            "{\"schema\":1,\"kind\":\"mem_trace\",\"gb\":[0.5,NaN]}",   // NaN is not JSON
+            "{\"schema\":1,\"kind\":\"mem_trace\",\"gb\":[0.5,-1.0]}",  // non-positive
+            "{\"schema\":1,\"kind\":\"mem_trace\",\"gb\":[0.5,0.0]}",   // zero
+        ] {
+            assert!(TraceFile::parse(bad).is_err(), "`{bad}` must be rejected");
+        }
+    }
+
+    #[test]
+    fn oversized_series_is_rejected() {
+        let mut s = String::from("{\"schema\":1,\"kind\":\"mem_trace\",\"gb\":[");
+        for i in 0..(MAX_TRACE_STEPS + 1) {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push('1');
+        }
+        s.push_str("]}");
+        let err = TraceFile::parse(&s).unwrap_err().to_string();
+        assert!(err.contains("cap"), "{err}");
+    }
+
+    #[test]
+    fn from_events_extracts_the_max_gb_series() {
+        let mut text = String::new();
+        for step in 0..4u64 {
+            let ev = telemetry::ev_step(step, 32, 1.0, 0.001, 1, 0.2, 0.5 - 0.1 * step as f64);
+            text.push_str(&ev.to_string_compact());
+            text.push('\n');
+        }
+        // Non-step events are ignored.
+        text.push_str(&telemetry::ev_oom(3, 0.9, 0.2).to_string_compact());
+        text.push('\n');
+        let t = TraceFile::from_events(&text, "unit").unwrap();
+        assert_eq!(t.gb.len(), 4);
+        assert_eq!(t.gb[0].to_bits(), 0.5f64.to_bits());
+        assert_eq!(t.gb[3].to_bits(), (0.5 - 0.3f64).to_bits());
+    }
+
+    #[test]
+    fn from_events_requires_a_dense_series() {
+        let mut text = String::new();
+        for step in [0u64, 2] {
+            let ev = telemetry::ev_step(step, 32, 1.0, 0.001, 1, 0.2, 0.5);
+            text.push_str(&ev.to_string_compact());
+            text.push('\n');
+        }
+        let err = TraceFile::from_events(&text, "unit").unwrap_err().to_string();
+        assert!(err.contains("step 1 missing"), "{err}");
+        assert!(TraceFile::from_events("", "unit").is_err(), "empty stream rejected");
+    }
+}

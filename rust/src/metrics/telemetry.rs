@@ -14,6 +14,8 @@
 //! * `step` — one optimizer step (emitted by the trainer).
 //! * `control_window` — one §3.4 control-window evaluation.
 //! * `oom` — a simulated out-of-memory event.
+//! * `host_mem` — a real host-memory sample (`--mem-source host`
+//!   only; observational, never part of deterministic artifacts).
 //! * `epoch` — one epoch summary row (the [`super::EpochRecord`]
 //!   fields).
 //!
@@ -101,16 +103,41 @@ pub fn ev_run_finished(job: &str, result: Json, wall_s: f64) -> Json {
 }
 
 /// `step`: one optimizer step — step index, live batch size, training
-/// loss, the modeled accelerator-seconds for the step, and the live
+/// loss, the modeled accelerator-seconds for the step, the live
 /// data-parallel replica count (1 for non-replicated runs; replica
-/// moves never change the loss trajectory).
-pub fn ev_step(step: u64, batch: usize, loss: f64, modeled_s: f64, replicas: usize) -> Json {
+/// moves never change the loss trajectory), and the simulator's memory
+/// scalars for the step (`used_gb`/`max_gb` — the series the trace
+/// recorder extracts, see `docs/MEMORY.md`).
+pub fn ev_step(
+    step: u64,
+    batch: usize,
+    loss: f64,
+    modeled_s: f64,
+    replicas: usize,
+    used_gb: f64,
+    max_gb: f64,
+) -> Json {
     let mut m = base("step");
     num(&mut m, "step", step as f64);
     num(&mut m, "batch", batch as f64);
     num(&mut m, "loss", loss);
     num(&mut m, "modeled_s", modeled_s);
     num(&mut m, "replicas", replicas as f64);
+    num(&mut m, "used_gb", used_gb);
+    num(&mut m, "max_gb", max_gb);
+    Json::Obj(m)
+}
+
+/// `host_mem`: a real host-memory sample taken at a control window
+/// (`--mem-source host` only). Observational — the sample feeds this
+/// event stream only, never policy decisions, digests, goldens, or
+/// ledger results; `source` names the meter that produced it.
+pub fn ev_host_mem(step: u64, used_gb: f64, max_gb: f64, source: &str) -> Json {
+    let mut m = base("host_mem");
+    num(&mut m, "step", step as f64);
+    num(&mut m, "used_gb", used_gb);
+    num(&mut m, "max_gb", max_gb);
+    s(&mut m, "source", source);
     Json::Obj(m)
 }
 
@@ -319,7 +346,7 @@ mod tests {
 
     #[test]
     fn events_carry_schema_and_kind() {
-        let ev = ev_step(7, 64, 2.5, 0.001, 2);
+        let ev = ev_step(7, 64, 2.5, 0.001, 2, 0.3, 0.5);
         assert_eq!(ev.get("schema").unwrap().as_i64(), Some(SCHEMA_VERSION as i64));
         assert_eq!(ev.get("event").unwrap().as_str(), Some("step"));
         assert_eq!(ev.get("batch").unwrap().as_usize(), Some(64));
@@ -365,8 +392,8 @@ mod tests {
         let dir = std::env::temp_dir().join(format!("triaccel_tel_{}", std::process::id()));
         let path = dir.join("events.jsonl");
         let mut w = JsonlWriter::create(&path).unwrap();
-        w.emit(&ev_step(0, 32, 2.0, 0.001, 1));
-        w.emit(&ev_step(1, 32, 1.9, 0.001, 1));
+        w.emit(&ev_step(0, 32, 2.0, 0.001, 1, 0.2, 0.5));
+        w.emit(&ev_step(1, 32, 1.9, 0.001, 1, 0.2, 0.5));
         w.flush().unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         let lines: Vec<&str> = text.lines().collect();
@@ -381,13 +408,13 @@ mod tests {
 
     #[test]
     fn crc_seal_detects_tampering() {
-        let line = sealed_line(&ev_step(3, 64, 1.5, 0.002, 1));
+        let line = sealed_line(&ev_step(3, 64, 1.5, 0.002, 1, 0.2, 0.5));
         let j = Json::parse(&line).unwrap();
         assert!(crc_ok(&j));
         let tampered = line.replace("\"batch\":64", "\"batch\":65");
         assert_ne!(tampered, line);
         assert!(!crc_ok(&Json::parse(&tampered).unwrap()), "flipped field must fail the seal");
-        assert!(!crc_ok(&ev_step(3, 64, 1.5, 0.002, 1)), "unsealed event never verifies");
+        assert!(!crc_ok(&ev_step(3, 64, 1.5, 0.002, 1, 0.2, 0.5)), "unsealed event never verifies");
     }
 
     #[test]
@@ -395,7 +422,7 @@ mod tests {
         let dir = std::env::temp_dir().join(format!("triaccel_teld_{}", std::process::id()));
         let path = dir.join("drain.jsonl");
         let mut w = JsonlWriter::create(&path).unwrap();
-        w.emit(&ev_step(0, 32, 2.0, 0.001, 1));
+        w.emit(&ev_step(0, 32, 2.0, 0.001, 1, 0.2, 0.5));
         assert_eq!(
             std::fs::read_to_string(&path).unwrap(),
             "",
@@ -405,7 +432,7 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         assert_eq!(text.lines().count(), 2, "run_finished drains the buffer");
         assert!(text.ends_with('\n'), "file ends on a complete record");
-        w.emit(&ev_step(1, 32, 1.9, 0.001, 1));
+        w.emit(&ev_step(1, 32, 1.9, 0.001, 1, 0.2, 0.5));
         drop(w);
         let text = std::fs::read_to_string(&path).unwrap();
         assert_eq!(text.lines().count(), 3, "drop drains the buffered tail");
@@ -420,7 +447,7 @@ mod tests {
         let sink = SharedSink::new(JsonlWriter::create(&path).unwrap());
         let mut clone: Box<dyn TelemetrySink> = Box::new(sink.clone());
         sink.post(&ev_run_started("j", "m", "k", 0, 1, 2));
-        clone.emit(&ev_step(0, 16, 2.0, 0.001, 1));
+        clone.emit(&ev_step(0, 16, 2.0, 0.001, 1, 0.2, 0.5));
         sink.post(&ev_run_finished("j", Json::Null, 0.1));
         sink.flush().unwrap();
         let text = std::fs::read_to_string(&path).unwrap();

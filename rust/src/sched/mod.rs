@@ -62,6 +62,7 @@
 #![warn(missing_docs)]
 
 pub mod ledger;
+pub mod replay;
 pub mod report;
 
 use std::collections::VecDeque;
@@ -757,7 +758,10 @@ pub fn pressure_spec(
     trace: &str,
     tweak: &dyn Fn(&mut Config),
 ) -> Result<GridSpec> {
-    crate::memsim::BudgetTrace::parse(trace)?;
+    // Canonicalize through parse→to_spec so a `replay:` trace carries
+    // its content digest into every config fingerprint (and thus the
+    // grid id): swapping the trace file's bytes maps to a new grid.
+    let trace = crate::memsim::BudgetTrace::parse(trace)?.to_spec();
     let specs: Vec<&registry::MethodSpec> = method_keys
         .iter()
         .map(|k| registry::resolve(k.trim()))
@@ -767,7 +771,7 @@ pub fn pressure_spec(
         let mut base = Config::cell(model, spec.family, 0);
         registry::apply(&mut base, spec);
         tweak(&mut base);
-        base.mem_trace = trace.to_string();
+        base.mem_trace = trace.clone();
         cells.push(cell(model, spec.label, seeds, base));
     }
     Ok(GridSpec { kind: GridKind::Pressure, cells })
@@ -855,6 +859,9 @@ mod tests {
             .unwrap();
         assert_eq!(ok.cells.len(), 2);
         assert_eq!(ok.cells[0].base.mem_trace, "ramp:1:4:0.6");
+        let sc = pressure_spec("tiny_cnn_c10", &["fp32"], &[0], "scenario:spike", &tiny_tweak())
+            .unwrap();
+        assert_eq!(sc.cells[0].base.mem_trace, "scenario:spike", "scenarios are canonical specs");
     }
 
     #[test]

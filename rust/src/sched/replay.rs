@@ -1,0 +1,317 @@
+//! Record→replay verification: compare two completed grid directories
+//! for deterministic equivalence, ignoring only the fields that are
+//! *allowed* to differ between a recording run and its replay.
+//!
+//! This is the proof obligation behind `mem_trace=replay:FILE`: a
+//! budget squeeze recorded from one run and replayed onto another must
+//! reproduce every policy decision, loss value, and OOM count bit for
+//! bit. The comparator loads both grids' ledgers, matches jobs by key
+//! (job keys carry no hashes, so they survive config changes by
+//! design), and diffs both the persisted results and the full
+//! telemetry event streams after normalization:
+//!
+//! * top-level `crc` (reseals over changed content), `wall_s`
+//!   (measured time), and `config_hash` (the replay grid carries a
+//!   different `mem_trace` spec by construction) are dropped;
+//! * `wall_s` nested inside a `run_finished` record's `result` object
+//!   is dropped for the same reason;
+//! * everything else — every step event, every policy decision, every
+//!   loss bit — must match exactly.
+//!
+//! Used by the `trace --verify` subcommand and the record→replay
+//! property suite (`tests/prop_memsim.rs`); the CI smoke job fails on
+//! a non-empty mismatch list. See `docs/MEMORY.md` for the replay
+//! determinism contract.
+
+#![warn(missing_docs)]
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+use super::ledger::{Ledger, LedgerEntry};
+
+/// Mismatches rendered in full before [`CompareReport::render`] elides
+/// the rest; also the per-job cap on reported line diffs (one bad
+/// window desynchronizes every later line, so more adds only noise).
+const MISMATCH_CAP: usize = 20;
+
+/// The outcome of a grid comparison: counts plus a human-readable
+/// mismatch list (empty means the grids are replay-equivalent).
+#[derive(Debug)]
+pub struct CompareReport {
+    /// Jobs compared (present in both ledgers).
+    pub jobs: usize,
+    /// Telemetry lines compared across all jobs.
+    pub lines: usize,
+    /// Rendered mismatches, in job-key order. Empty means equivalent.
+    pub mismatches: Vec<String>,
+}
+
+impl CompareReport {
+    /// Did every job identity, result, and normalized telemetry line
+    /// match?
+    pub fn ok(&self) -> bool {
+        self.mismatches.is_empty()
+    }
+
+    /// One-paragraph summary for CLI output.
+    pub fn render(&self) -> String {
+        if self.ok() {
+            return format!(
+                "replay-equivalent: {} job(s), {} telemetry line(s) match after normalization",
+                self.jobs, self.lines
+            );
+        }
+        let mut s = format!(
+            "{} mismatch(es) across {} job(s), {} telemetry line(s):",
+            self.mismatches.len(),
+            self.jobs,
+            self.lines
+        );
+        for m in self.mismatches.iter().take(MISMATCH_CAP) {
+            s.push_str("\n  - ");
+            s.push_str(m);
+        }
+        if self.mismatches.len() > MISMATCH_CAP {
+            s.push_str(&format!("\n  … and {} more", self.mismatches.len() - MISMATCH_CAP));
+        }
+        s
+    }
+}
+
+/// Strip the fields that legitimately differ between a recording run
+/// and its replay from one telemetry/ledger JSONL line, and return the
+/// canonical compact re-serialization. Fails on a non-JSON line — a
+/// torn artifact is a real mismatch, not something to normalize away.
+pub fn normalize_line(line: &str) -> Result<String> {
+    let mut v = Json::parse(line).map_err(|e| anyhow::anyhow!("non-JSON line: {e}"))?;
+    if let Json::Obj(m) = &mut v {
+        m.remove("crc");
+        m.remove("wall_s");
+        m.remove("config_hash");
+        if let Some(Json::Obj(r)) = m.get_mut("result") {
+            r.remove("wall_s");
+        }
+    }
+    Ok(v.to_string_compact())
+}
+
+/// The ledger entry's persisted result with wall time stripped, as a
+/// canonical compact string (everything else in [`SeedResult`]
+/// participates in the replay contract).
+///
+/// [`SeedResult`]: crate::harness::SeedResult
+fn result_minus_wall(e: &LedgerEntry) -> String {
+    let mut v = e.result.to_json();
+    if let Json::Obj(m) = &mut v {
+        m.remove("wall_s");
+    }
+    v.to_string_compact()
+}
+
+/// Read one job's event stream and normalize every line.
+fn normalized_events(grid_dir: &Path, key: &str) -> Result<Vec<String>> {
+    let path = grid_dir.join("events").join(format!("{key}.jsonl"));
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    text.lines()
+        .filter(|l| !l.trim().is_empty())
+        .enumerate()
+        .map(|(i, l)| normalize_line(l).with_context(|| format!("{key}.jsonl line {}", i + 1)))
+        .collect()
+}
+
+/// Compare two completed grid directories (each holding `ledger.json`
+/// and `events/`) for replay equivalence. Jobs are matched by key;
+/// keys present in only one grid, diverging job identities (model,
+/// method, seed, model digest), diverging wall-free results, and any
+/// diverging normalized telemetry line are all reported. The call
+/// itself only fails when a directory is unreadable or a ledger is
+/// unparseable — content differences land in the report.
+pub fn compare_grids(a_dir: &Path, b_dir: &Path) -> Result<CompareReport> {
+    let a = Ledger::load(&a_dir.join("ledger.json"))
+        .with_context(|| format!("grid A ({})", a_dir.display()))?;
+    let b = Ledger::load(&b_dir.join("ledger.json"))
+        .with_context(|| format!("grid B ({})", b_dir.display()))?;
+    let a_keys: BTreeSet<&String> = a.entries.keys().collect();
+    let b_keys: BTreeSet<&String> = b.entries.keys().collect();
+    let mut mismatches = Vec::new();
+    for k in a_keys.difference(&b_keys) {
+        mismatches.push(format!("job `{k}` recorded only in grid A"));
+    }
+    for k in b_keys.difference(&a_keys) {
+        mismatches.push(format!("job `{k}` recorded only in grid B"));
+    }
+    let mut lines = 0usize;
+    let shared: Vec<&String> = a_keys.intersection(&b_keys).copied().collect();
+    for key in &shared {
+        let ea = &a.entries[*key];
+        let eb = &b.entries[*key];
+        let ida = (&ea.model, &ea.method_key, ea.seed, ea.digest);
+        let idb = (&eb.model, &eb.method_key, eb.seed, eb.digest);
+        if ida != idb {
+            mismatches.push(format!("job `{key}`: identity differs ({ida:?} vs {idb:?})"));
+        }
+        let (ra, rb) = (result_minus_wall(ea), result_minus_wall(eb));
+        if ra != rb {
+            mismatches.push(format!("job `{key}`: result differs\n      A: {ra}\n      B: {rb}"));
+        }
+        let (la, lb) = match (normalized_events(a_dir, key), normalized_events(b_dir, key)) {
+            (Ok(la), Ok(lb)) => (la, lb),
+            (Err(e), _) | (_, Err(e)) => {
+                mismatches.push(format!("job `{key}`: {e:#}"));
+                continue;
+            }
+        };
+        lines += la.len().max(lb.len());
+        if la.len() != lb.len() {
+            mismatches
+                .push(format!("job `{key}`: event count differs ({} vs {})", la.len(), lb.len()));
+        }
+        let mut reported = 0usize;
+        for (i, (x, y)) in la.iter().zip(lb.iter()).enumerate() {
+            if x != y {
+                mismatches.push(format!("job `{key}` line {}:\n      A: {x}\n      B: {y}", i + 1));
+                reported += 1;
+                if reported >= MISMATCH_CAP {
+                    mismatches.push(format!("job `{key}`: further line diffs elided"));
+                    break;
+                }
+            }
+        }
+    }
+    Ok(CompareReport { jobs: shared.len(), lines, mismatches })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::faults::RealIo;
+    use crate::harness::SeedResult;
+    use std::collections::BTreeMap;
+
+    fn result(seed: u64, wall_s: f64, score: f64) -> SeedResult {
+        SeedResult {
+            seed,
+            test_acc_pct: 61.5,
+            wall_s,
+            modeled_s: 1.25,
+            peak_gb: 0.5,
+            score,
+            oom_events: 1,
+            batch_decisions: 3,
+            ctrl_windows: 4,
+            precision_transitions: 0,
+            curv_firings: 2,
+            min_batch: 16,
+            replica_decisions: 0,
+            min_replicas: 1,
+        }
+    }
+
+    fn entry(key: &str, wall_s: f64, score: f64) -> LedgerEntry {
+        LedgerEntry {
+            key: key.to_string(),
+            model: "tiny_cnn_c10".to_string(),
+            method_key: "fp32".to_string(),
+            seed: 7,
+            digest: 0xabcd,
+            config_hash: (wall_s * 1e6) as u64,
+            result: result(7, wall_s, score),
+            wall_s,
+        }
+    }
+
+    /// Write a one-job grid dir: sealed ledger plus one events file.
+    fn write_grid(dir: &Path, key: &str, wall_s: f64, score: f64, loss: f64) {
+        std::fs::create_dir_all(dir.join("events")).unwrap();
+        let mut entries = BTreeMap::new();
+        entries.insert(key.to_string(), entry(key, wall_s, score));
+        let led = Ledger {
+            schema: crate::sched::LEDGER_SCHEMA_VERSION,
+            grid_id: "pressure-00000000".to_string(),
+            kind: "pressure".to_string(),
+            cells: Vec::new(),
+            entries,
+        };
+        led.save(&dir.join("ledger.json"), &RealIo).unwrap();
+        let step = format!(r#"{{"crc":"x","kind":"step","loss":{loss},"wall_s":{wall_s}}}"#);
+        let fin =
+            format!(r#"{{"kind":"run_finished","result":{{"score":{score},"wall_s":{wall_s}}}}}"#);
+        std::fs::write(dir.join("events").join(format!("{key}.jsonl")), format!("{step}\n{fin}\n"))
+            .unwrap();
+    }
+
+    fn temp_root(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("triaccel_replay_{}_{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn normalize_drops_only_the_volatile_fields() {
+        let line = concat!(
+            r#"{"config_hash":"00ff","crc":"aa","kind":"run_finished","#,
+            r#""result":{"score":1.25,"seed":"7","wall_s":2.5},"wall_s":1.5}"#
+        );
+        assert_eq!(
+            normalize_line(line).unwrap(),
+            r#"{"kind":"run_finished","result":{"score":1.25,"seed":"7"}}"#
+        );
+        // Non-envelope fields survive untouched, bit for bit.
+        let step = r#"{"crc":"bb","kind":"step","loss":0.30000000000000004,"used_gb":0.25}"#;
+        assert_eq!(
+            normalize_line(step).unwrap(),
+            r#"{"kind":"step","loss":0.30000000000000004,"used_gb":0.25}"#
+        );
+        assert!(normalize_line("not json").is_err(), "torn lines are mismatches, not noise");
+    }
+
+    #[test]
+    fn equivalent_grids_compare_clean_despite_wall_and_hash_drift() {
+        let root = temp_root("ok");
+        let (a, b) = (root.join("a"), root.join("b"));
+        write_grid(&a, "00_job_s7", 1.0, 2.5, 0.125);
+        write_grid(&b, "00_job_s7", 9.0, 2.5, 0.125); // wall_s + config_hash differ
+        let rep = compare_grids(&a, &b).unwrap();
+        assert!(rep.ok(), "mismatches: {:?}", rep.mismatches);
+        assert_eq!(rep.jobs, 1);
+        assert_eq!(rep.lines, 2);
+        assert!(rep.render().contains("replay-equivalent"));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn content_drift_is_reported_per_job_and_per_line() {
+        let root = temp_root("bad");
+        let (a, b) = (root.join("a"), root.join("b"));
+        write_grid(&a, "00_job_s7", 1.0, 2.5, 0.125);
+        write_grid(&b, "00_job_s7", 1.0, 9.75, 0.5); // score + loss differ
+        let rep = compare_grids(&a, &b).unwrap();
+        assert!(!rep.ok());
+        assert!(
+            rep.mismatches.iter().any(|m| m.contains("result differs")),
+            "{:?}",
+            rep.mismatches
+        );
+        assert!(rep.mismatches.iter().any(|m| m.contains("line 1")), "{:?}", rep.mismatches);
+        assert!(rep.render().contains("mismatch(es)"));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn disjoint_job_sets_are_mismatches() {
+        let root = temp_root("keys");
+        let (a, b) = (root.join("a"), root.join("b"));
+        write_grid(&a, "00_job_s7", 1.0, 2.5, 0.125);
+        write_grid(&b, "00_other_s7", 1.0, 2.5, 0.125);
+        let rep = compare_grids(&a, &b).unwrap();
+        assert_eq!(rep.jobs, 0);
+        assert_eq!(rep.mismatches.len(), 2, "{:?}", rep.mismatches);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

@@ -230,6 +230,13 @@ fn pressure_md(led: &Ledger) -> Result<String> {
          (`R_min`, the numerics-free lever) and batch buckets (`B_min`) \
          and survive.\n\n"
     ));
+    // A named scenario gets its one-line adversarial description so
+    // the artifact is self-explaining (library: docs/MEMORY.md).
+    if let Some(name) = trace.strip_prefix("scenario:") {
+        if let Ok(k) = crate::memsim::scenarios::ScenarioKind::parse(name) {
+            out.push_str(&format!("Scenario `{}`: {}.\n\n", k.name(), k.describe()));
+        }
+    }
     out.push_str(
         "| Method | Acc (%) | VRAM (GB) | OOMs | B_min | R_min | B decs | R decs | Score |\n",
     );

@@ -38,6 +38,7 @@ use anyhow::{Context, Result};
 use crate::config::{Config, Method};
 use crate::data::{auto_source, BatchIter, Dataset, IMG_ELEMS};
 use crate::manifest::FP32;
+use crate::memsim::hostmem::{HostMeter, MemMeter};
 use crate::memsim::{BudgetTrace, MemoryMonitor, SpeedModel, VramSim};
 use crate::metrics::telemetry::{self, TelemetrySink};
 use crate::metrics::{efficiency_score, EpochRecord, PrecisionMix, RunMetrics};
@@ -83,6 +84,13 @@ pub struct Trainer<'e> {
     /// `epoch` JSONL telemetry — see `metrics::telemetry`). `None`
     /// (the default) emits nothing and costs nothing.
     telemetry: Option<Box<dyn TelemetrySink>>,
+    /// Real host-memory meter (`--mem-source host`): sampled only at
+    /// control windows, where each reading is emitted as a `host_mem`
+    /// telemetry event. Observational only — the §3.3/§3.4 policies
+    /// always read the simulator's scalars, so the meter can never
+    /// move a deterministic artifact. `None` (`mem_source = "sim"`,
+    /// the default) skips the sampling entirely.
+    host_meter: Option<Box<dyn MemMeter>>,
 }
 
 impl<'e> Trainer<'e> {
@@ -158,6 +166,15 @@ impl<'e> Trainer<'e> {
         let warmup_steps = warmup_steps.min(total_steps / 2);
         let schedule = LrSchedule::new(cfg.base_lr, warmup_steps, total_steps);
         let layer_flops = entry.layers.iter().map(|l| l.flops).collect();
+        // `--mem-source host`: real RSS/MemTotal readings replace the
+        // simulator's scalars at control windows. Construction is the
+        // opt-in; on a host without /proc the meter degrades to None
+        // and the run behaves exactly like `sim`.
+        let host_meter: Option<Box<dyn MemMeter>> = if cfg.mem_source == "host" {
+            HostMeter::new().map(|m| Box::new(m) as Box<dyn MemMeter>)
+        } else {
+            None
+        };
         Ok(Trainer {
             train_iter: BatchIter::new(train_ds, cfg.seed, true),
             eval_ds,
@@ -172,8 +189,16 @@ impl<'e> Trainer<'e> {
             global_step: 0,
             steps_per_epoch_hint,
             telemetry: None,
+            host_meter,
             cfg,
         })
+    }
+
+    /// Install (or replace) the control-window memory meter — the test
+    /// hook for driving the host-source path with a deterministic
+    /// [`crate::memsim::hostmem::FakeMeter`].
+    pub fn set_mem_meter(&mut self, meter: Box<dyn MemMeter>) {
+        self.host_meter = Some(meter);
     }
 
     /// Install a streaming telemetry sink: the trainer will emit one
@@ -262,8 +287,26 @@ impl<'e> Trainer<'e> {
 
         // §3.4 unified control window.
         if self.controller.window_due(self.global_step) {
-            let used = self.memsim.mem_used_gb();
-            let max = self.memsim.mem_max_gb();
+            // The host meter (`--mem-source host`) is observational
+            // only: every successful sample surfaces as a `host_mem`
+            // telemetry event, but the control plane always sees the
+            // simulator's scalars — live machine state must never
+            // steer a deterministic artifact (docs/MEMORY.md). A
+            // failed sample (no /proc) just skips the event.
+            if let Some(m) = self.host_meter.as_mut() {
+                if let Some(smp) = m.sample() {
+                    let source = m.source();
+                    if let Some(sink) = self.telemetry.as_mut() {
+                        sink.emit(&telemetry::ev_host_mem(
+                            self.global_step,
+                            smp.used_gb,
+                            smp.max_gb,
+                            source,
+                        ));
+                    }
+                }
+            }
+            let (used, max) = (self.memsim.mem_used_gb(), self.memsim.mem_max_gb());
             // Both fit predicates probe the same simulator; the plane
             // calls them sequentially, so a shared RefCell borrow is
             // never contended.
@@ -307,6 +350,8 @@ impl<'e> Trainer<'e> {
                 out.loss as f64,
                 modeled,
                 plan.replicas,
+                usage.total_gb,
+                self.memsim.mem_max_gb(),
             ));
         }
         self.global_step += 1;

@@ -1,14 +1,15 @@
 //! End-to-end coverage of the policy subsystem: registry methods
 //! beyond the paper's three columns run through the unmodified
-//! trainer, the VRAM-pressure scenario separates static from elastic
-//! methods, elastic data-parallel replicas shed under a ramping
-//! squeeze with zero simulated OOMs, and the v3 checkpoint
-//! compatibility header rejects method/graph mismatches with clear
-//! errors.
+//! trainer, the VRAM-pressure scenarios (hand-rolled traces and the
+//! named adversarial library) separate static from elastic methods,
+//! elastic data-parallel replicas shed under a ramping squeeze with
+//! zero simulated OOMs, and the v3 checkpoint compatibility header
+//! rejects method/graph mismatches with clear errors.
 
 use tri_accel::config::Config;
 use tri_accel::harness;
 use tri_accel::manifest::{BF16, FP16};
+use tri_accel::memsim::scenarios::ScenarioKind;
 use tri_accel::memsim::VramSim;
 use tri_accel::policy::registry;
 use tri_accel::runtime::Engine;
@@ -272,4 +273,173 @@ fn trace_plumbs_from_config_into_the_run() {
     };
     assert_eq!(run("const"), 0, "fits the full budget");
     assert!(run("step:0.01@6") > 0, "squeezed budget must OOM");
+}
+
+/// Steps on which a *fixed* footprint OOMs under a scenario at base
+/// budget `base_gb`: with `t_curv = 0` and zero noise the trainer
+/// charges exactly one accounting call per step, and both sides of
+/// the comparison use the same floats — so for a static method the
+/// expected OOM count is closed-form, no tolerance needed.
+fn expected_static_ooms(kind: ScenarioKind, steps: u64, base_gb: f64, footprint_gb: f64) -> u64 {
+    (0..steps).filter(|&s| footprint_gb > base_gb * kind.factor(s)).count() as u64
+}
+
+#[test]
+fn scenario_library_ooms_static_methods_exactly_and_elastic_methods_shed() {
+    // Calibrate from the simulator: `amp_static` runs uniform 2-byte
+    // precision at a fixed B=64, so its footprint is the BF16 usage at
+    // 64. The headroom per scenario places the squeeze: 1.2 clears the
+    // spike/frag plateaus (dips to 0.45/0.3 and the 0.595 ratchet tail
+    // bite), 1.05 lets the leak's gentle decline bite by step 12.
+    let e = engine();
+    let entry = e.manifest.model("tiny_cnn_c10").unwrap().clone();
+    let mut sim = VramSim::new(&entry, 1e9, 0.0, 0);
+    let codes = vec![BF16; entry.num_layers];
+    let u64gb = sim.usage(64, &codes, false).total_gb;
+
+    // (scenario, steps, headroom, strict): `strict` demands the elastic
+    // method OOM strictly less — true for persistent squeezes, where
+    // one shed absorbs the rest of the run; spike's 3-step bursts can
+    // cost the elastic ladder an OOM per burst step, so only `<=` is
+    // guaranteed there (the shed/recover asserts do the separating).
+    let cases = [
+        (ScenarioKind::Spike, 30u64, 1.2, false),
+        (ScenarioKind::Frag, 42, 1.2, true),
+        (ScenarioKind::Leak, 30, 1.05, true),
+    ];
+    for (kind, steps, headroom, strict) in cases {
+        let base = u64gb * headroom;
+        let want = expected_static_ooms(kind, steps, base, u64gb);
+        assert!(want > 0, "{}: calibration must make the squeeze bite", kind.name());
+        assert!(want < steps, "{}: the budget must also fit sometimes", kind.name());
+        let tweak = move |cfg: &mut Config| {
+            cfg.epochs = 1;
+            cfg.steps_per_epoch = Some(steps as usize);
+            cfg.train_examples = 4096;
+            cfg.eval_examples = 128;
+            cfg.batch_init = 64;
+            cfg.t_ctrl = 3;
+            cfg.t_curv = 0; // no probes: keep the footprint pure
+            cfg.batch_cooldown = 2;
+            cfg.warmup_epochs = 0;
+            cfg.mem_budget_gb = base;
+            cfg.mem_noise = 0.0;
+        };
+        let spec = format!("scenario:{}", kind.name());
+        let rows = harness::pressure(
+            &e,
+            "tiny_cnn_c10",
+            &["amp_static", "greedy_batch"],
+            &[0],
+            &spec,
+            &tweak,
+        )
+        .unwrap();
+        assert_eq!(rows.len(), 2);
+        let (stat, elastic) = (&rows[0], &rows[1]);
+        assert_eq!(stat.method_key, "amp_static");
+        assert_eq!(
+            stat.oom_events,
+            want,
+            "{}: static OOM count must match the closed-form factor series",
+            kind.name()
+        );
+        assert_eq!(stat.min_batch, 64, "{}: static method never sheds", kind.name());
+        assert!(elastic.min_batch < 64, "{}: elastic method must shed", kind.name());
+        if strict {
+            assert!(
+                elastic.oom_events < stat.oom_events,
+                "{}: shedding must beat ooming ({} vs {})",
+                kind.name(),
+                elastic.oom_events,
+                stat.oom_events
+            );
+        } else {
+            assert!(
+                elastic.oom_events <= stat.oom_events,
+                "{}: shedding must never oom more than static ({} vs {})",
+                kind.name(),
+                elastic.oom_events,
+                stat.oom_events
+            );
+        }
+        assert!(elastic.acc.mean().is_finite());
+    }
+}
+
+#[test]
+fn spike_scenario_sheds_and_recovers_the_batch() {
+    // Between spike bursts the budget returns to 1.0, so an elastic
+    // method must climb back: the batch trace has to show a shed below
+    // the initial rung *and* a final rung above its own minimum.
+    let e = engine();
+    let entry = e.manifest.model("tiny_cnn_c10").unwrap().clone();
+    let mut sim = VramSim::new(&entry, 1e9, 0.0, 0);
+    let codes = vec![BF16; entry.num_layers];
+    let base = sim.usage(64, &codes, false).total_gb * 1.2;
+
+    let mut cfg = quick_cfg("greedy_batch", 0);
+    cfg.batch_init = 64;
+    cfg.steps_per_epoch = Some(30);
+    cfg.train_examples = 4096;
+    cfg.t_ctrl = 3;
+    cfg.t_curv = 0;
+    cfg.batch_cooldown = 2;
+    cfg.mem_budget_gb = base;
+    cfg.mem_trace = "scenario:spike".to_string();
+    let mut tr = Trainer::new(&e, cfg).unwrap();
+    tr.run_epoch(0).unwrap();
+    let min_b = tr.metrics.batch_trace.iter().map(|&(_, b)| b).min().unwrap();
+    let (_, last_b) = *tr.metrics.batch_trace.last().unwrap();
+    assert!(min_b < 64, "the bursts must force a shed, trace {:?}", tr.metrics.batch_trace);
+    assert!(
+        last_b > min_b,
+        "the budget returns between bursts, so the ladder must climb back (min {min_b}, \
+         final {last_b})"
+    );
+}
+
+#[test]
+fn leak_scenario_sheds_replicas_before_any_oom() {
+    // The replica twin of the ramp test above, driven by the named
+    // scenario: the leak declines 0.4%/step — three times gentler than
+    // that ramp — so the replica controller always sheds at a window
+    // before the live aggregate outgrows the budget. Sized so the leak
+    // bottoms out where only a reduced replica set is sustainable.
+    let e = Engine::native_replicated(4, 1);
+    let entry = e.manifest.model("tiny_cnn_c10").unwrap().clone();
+    let mut sim = VramSim::new(&entry, 1e9, 0.0, 0);
+    let codes = vec![BF16; entry.num_layers];
+    sim.set_replicas(4);
+    let u4 = sim.usage(64, &codes, false).total_gb;
+    sim.set_replicas(2);
+    let u2 = sim.usage(64, &codes, false).total_gb;
+    let base = u4 * 1.25;
+    // Run until the leak reaches the factor where 2 replicas sit at
+    // ~85% occupancy (clamped above the scenario's 0.5 floor), plus a
+    // tail to let the shed settle.
+    let f_end = ((u2 / 0.85) / base).max(0.52);
+    let steps = ((1.0 - f_end) / 0.004).ceil() as usize + 10;
+
+    let mut cfg = quick_cfg("greedy_batch", 0); // pinned BF16: pure footprint
+    cfg.replicas = 4;
+    cfg.elastic_replicas = true;
+    cfg.batch_init = 64;
+    cfg.steps_per_epoch = Some(steps);
+    cfg.train_examples = 16384;
+    cfg.t_ctrl = 2;
+    cfg.t_curv = 0;
+    cfg.batch_cooldown = 2;
+    cfg.mem_budget_gb = base;
+    cfg.mem_trace = "scenario:leak".to_string();
+    let mut tr = Trainer::new(&e, cfg).unwrap();
+    tr.run_epoch(0).unwrap();
+    assert_eq!(tr.metrics.oom_events, 0, "the leak is gentle: shedding pre-empts every OOM");
+    assert!(tr.metrics.replica_decisions > 0, "the replica policy acted");
+    assert!(
+        tr.controller.replicas() < 4,
+        "the leak persists, so the shed must too (live: {})",
+        tr.controller.replicas()
+    );
+    assert!(tr.controller.replicas() >= 1);
 }

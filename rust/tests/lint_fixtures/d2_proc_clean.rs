@@ -1,0 +1,7 @@
+fn resident_pages() -> Option<u64> {
+    // A prose mention of /proc/self/statm in a comment is not a read.
+    // detlint: allow(d2) — fixture: host-meter read feeding telemetry
+    // only, never a deterministic artifact.
+    let text = std::fs::read_to_string("/proc/self/statm").ok()?;
+    text.split_whitespace().nth(1)?.parse().ok()
+}

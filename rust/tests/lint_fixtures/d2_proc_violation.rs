@@ -1,0 +1,4 @@
+fn resident_pages() -> Option<u64> {
+    let text = std::fs::read_to_string("/proc/self/statm").ok()?;
+    text.split_whitespace().nth(1)?.parse().ok()
+}

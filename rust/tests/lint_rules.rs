@@ -37,6 +37,16 @@ fn d2_flags_wall_clock_reads() {
 }
 
 #[test]
+fn d2_flags_host_environment_reads() {
+    let f = lint_source("memsim/fixture.rs", fixture!("d2_proc_violation.rs"));
+    assert_eq!(rule_ids(&f), ["d2"], "a /proc/ read without a pragma must be flagged: {f:?}");
+    assert!(
+        lint_source("memsim/fixture.rs", fixture!("d2_proc_clean.rs")).is_empty(),
+        "a justified pragma (and a prose mention in a comment) must pass"
+    );
+}
+
+#[test]
 fn d3_flags_thread_creation_outside_the_pools() {
     let f = lint_source("metrics/fixture.rs", fixture!("d3_violation.rs"));
     assert_eq!(rule_ids(&f), ["d3"], "{f:?}");

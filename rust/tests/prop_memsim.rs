@@ -1,0 +1,303 @@
+//! Property suite for the memory record/replay subsystem (ISSUE 10):
+//!
+//! * recording a pressure grid's `MemMax` series and replaying it via
+//!   `replay:FILE#DIGEST` reproduces the original grid bit-for-bit
+//!   (ledger results and telemetry, modulo the wall-clock/crc fields
+//!   `sched::replay` normalizes away);
+//! * replayed grids are `--jobs`-width invariant (byte-identical
+//!   report artifacts) and the replayed ceiling is `--replicas`-width
+//!   invariant (the absolute series lands bit-exact at any width);
+//! * a host-memory meter feeds `host_mem` telemetry only — even an
+//!   absurd fake sample never moves a loss, a batch decision, or any
+//!   other telemetry line;
+//! * malformed / oversized / non-finite / stale-digest replay specs
+//!   fail at validation time, never mid-grid.
+
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use tri_accel::config::Config;
+use tri_accel::manifest::BF16;
+use tri_accel::memsim::hostmem::{FakeMeter, MemSample};
+use tri_accel::memsim::tracefile::{TraceFile, MAX_TRACE_STEPS};
+use tri_accel::memsim::{BudgetTrace, VramSim};
+use tri_accel::metrics::telemetry::TelemetrySink;
+use tri_accel::policy::registry;
+use tri_accel::runtime::Engine;
+use tri_accel::sched::{self, replay, SchedOptions};
+use tri_accel::train::Trainer;
+use tri_accel::util::json::Json;
+
+const STEPS: usize = 12;
+
+fn tmp(tag: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("triaccel_memsim_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&p).ok();
+    p
+}
+
+fn opts(out: &Path, jobs: usize) -> SchedOptions {
+    SchedOptions {
+        jobs,
+        total_threads: 4,
+        out_dir: out.to_path_buf(),
+        quiet: true,
+        ..SchedOptions::default()
+    }
+}
+
+/// The squeeze base: B=32 at uniform 2-byte precision with 20%
+/// headroom, so scenario dips below ~0.83 actually bite.
+fn calibrated_base() -> f64 {
+    let e = Engine::native();
+    let entry = e.manifest.model("tiny_cnn_c10").unwrap().clone();
+    let mut sim = VramSim::new(&entry, 1e9, 0.0, 0);
+    let codes = vec![BF16; entry.num_layers];
+    sim.usage(32, &codes, false).total_gb * 1.2
+}
+
+fn run_pressure(
+    trace: &str,
+    out: &Path,
+    jobs: usize,
+    replicas: usize,
+    methods: &[&str],
+    base: f64,
+) -> sched::GridOutcome {
+    let tweak = move |cfg: &mut Config| {
+        cfg.epochs = 1;
+        cfg.steps_per_epoch = Some(STEPS);
+        cfg.train_examples = 1024;
+        cfg.eval_examples = 128;
+        cfg.batch_init = 32;
+        cfg.t_ctrl = 3;
+        cfg.t_curv = 0;
+        cfg.batch_cooldown = 2;
+        cfg.warmup_epochs = 0;
+        cfg.mem_budget_gb = base;
+        cfg.mem_noise = 0.0;
+        cfg.replicas = replicas;
+    };
+    let spec = sched::pressure_spec("tiny_cnn_c10", methods, &[0], trace, &tweak).unwrap();
+    sched::run_grid(&spec, &opts(out, jobs)).unwrap()
+}
+
+fn read(p: &Path) -> String {
+    std::fs::read_to_string(p).unwrap_or_else(|e| panic!("reading {}: {e}", p.display()))
+}
+
+/// Record a trace from the first job of a finished grid.
+fn record_first_job(o: &sched::GridOutcome) -> (String, TraceFile) {
+    let led = sched::Ledger::load(&o.grid_dir.join("ledger.json")).unwrap();
+    let key = led.cells[0].job_keys[0].clone();
+    let text = read(&o.grid_dir.join("events").join(format!("{key}.jsonl")));
+    let tf = TraceFile::from_events(&text, &key).unwrap();
+    (key, tf)
+}
+
+/// The bit pattern of every step event's `max_gb`, in step order.
+fn max_gb_series(events_text: &str) -> Vec<u64> {
+    let mut out = Vec::new();
+    for line in events_text.lines().filter(|l| !l.trim().is_empty()) {
+        let ev = Json::parse(line).unwrap();
+        if ev.get("event").and_then(Json::as_str) == Some("step") {
+            out.push(ev.req("max_gb").unwrap().as_f64().unwrap().to_bits());
+        }
+    }
+    out
+}
+
+#[test]
+fn record_replay_round_trips_bit_identically_across_jobs_widths() {
+    let root = tmp("roundtrip");
+    let base = calibrated_base();
+    let methods = ["amp_static", "greedy_batch"];
+
+    // Record: a spike-scenario grid whose dips force real decisions.
+    let a = run_pressure("scenario:spike", &root.join("rec"), 1, 1, &methods, base);
+    assert!(a.complete);
+    let (key, tf) = record_first_job(&a);
+    assert_eq!(tf.gb.len(), STEPS, "one ceiling sample per optimizer step ({key})");
+    let trace_path = root.join("trace.json");
+    tf.save(&trace_path).unwrap();
+    let spec = format!("replay:{}#{:016x}", trace_path.display(), tf.digest());
+
+    // Replay the recorded squeeze at two job widths.
+    let b1 = run_pressure(&spec, &root.join("b1"), 1, 1, &methods, base);
+    let b4 = run_pressure(&spec, &root.join("b4"), 4, 1, &methods, base);
+    assert!(b1.complete && b4.complete);
+
+    // Replay ≡ recording: same results and telemetry once the
+    // wall/crc/config-hash channels are normalized away.
+    let rep = replay::compare_grids(&a.grid_dir, &b1.grid_dir).unwrap();
+    assert!(rep.ok(), "record vs replay diverged:\n{}", rep.render());
+
+    // The two replay widths share a grid id and byte-identical
+    // wall-free report artifacts.
+    assert_eq!(b1.grid_id, b4.grid_id, "grid id is content-derived");
+    assert_ne!(a.grid_id, b1.grid_id, "the trace spec is part of grid identity");
+    for name in ["pressure.md", "BENCH_grid.json"] {
+        assert_eq!(
+            read(&b1.grid_dir.join(name)),
+            read(&b4.grid_dir.join(name)),
+            "{name} must not depend on job-pool width"
+        );
+    }
+    let rep14 = replay::compare_grids(&b1.grid_dir, &b4.grid_dir).unwrap();
+    assert!(rep14.ok(), "jobs 1 vs 4 diverged:\n{}", rep14.render());
+
+    // The replayed grid really saw the recorded ceilings, bit for bit.
+    let led = sched::Ledger::load(&b1.grid_dir.join("ledger.json")).unwrap();
+    for cell in &led.cells {
+        for key in &cell.job_keys {
+            let ev_path = b1.grid_dir.join("events").join(format!("{key}.jsonl"));
+            let got = max_gb_series(&read(&ev_path));
+            let want: Vec<u64> = tf.gb.iter().map(|g| g.to_bits()).collect();
+            assert_eq!(got, want, "replayed ceiling series for {key}");
+        }
+    }
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn replayed_ceiling_is_replica_width_invariant() {
+    let root = tmp("replica");
+    let base = calibrated_base();
+
+    // Record at one replica under the frag ratchet...
+    let a = run_pressure("scenario:frag", &root.join("rec"), 1, 1, &["greedy_batch"], base);
+    let (_, tf) = record_first_job(&a);
+    let trace_path = root.join("trace.json");
+    tf.save(&trace_path).unwrap();
+    let spec = format!("replay:{}#{:016x}", trace_path.display(), tf.digest());
+    let want: Vec<u64> = tf.gb.iter().map(|g| g.to_bits()).collect();
+
+    // ...then replay at 1 and 2 replicas: the absolute series is pure
+    // step-indexed data, so the imposed ceiling is identical even
+    // though the replicated footprint (and hence the decisions made
+    // under that ceiling) may differ.
+    for (replicas, tag) in [(1usize, "r1"), (2, "r2")] {
+        let o = run_pressure(&spec, &root.join(tag), 1, replicas, &["greedy_batch"], base);
+        assert!(o.complete, "replicas={replicas}");
+        let led = sched::Ledger::load(&o.grid_dir.join("ledger.json")).unwrap();
+        let key = led.cells[0].job_keys[0].clone();
+        if replicas == 2 {
+            assert!(key.contains("_r2"), "replicated jobs get suffixed keys: {key}");
+        }
+        let got = max_gb_series(&read(&o.grid_dir.join("events").join(format!("{key}.jsonl"))));
+        assert_eq!(got, want, "replayed ceiling series at replicas={replicas}");
+    }
+    std::fs::remove_dir_all(&root).ok();
+}
+
+struct VecSink(Arc<Mutex<Vec<String>>>);
+
+impl TelemetrySink for VecSink {
+    fn emit(&mut self, event: &Json) {
+        self.0.lock().unwrap().push(event.to_string_compact());
+    }
+}
+
+#[test]
+fn fake_host_meter_feeds_telemetry_without_moving_the_run() {
+    let e = Engine::native();
+    let run = |meter: Option<FakeMeter>| {
+        let spec = registry::resolve("greedy_batch").unwrap();
+        let mut cfg = Config::cell("tiny_cnn_c10", spec.family, 0);
+        registry::apply(&mut cfg, spec);
+        cfg.epochs = 1;
+        cfg.steps_per_epoch = Some(STEPS);
+        cfg.train_examples = 1024;
+        cfg.eval_examples = 128;
+        cfg.batch_init = 32;
+        cfg.t_ctrl = 3;
+        cfg.t_curv = 0;
+        cfg.batch_cooldown = 2;
+        cfg.warmup_epochs = 0;
+        cfg.mem_budget_gb = 0.0;
+        cfg.mem_noise = 0.0;
+        let mut tr = Trainer::new(&e, cfg).unwrap();
+        let events = Arc::new(Mutex::new(Vec::new()));
+        tr.set_telemetry(Box::new(VecSink(events.clone())));
+        if let Some(m) = meter {
+            tr.set_mem_meter(Box::new(m));
+        }
+        let rec = tr.run_epoch(0).unwrap();
+        let lines = events.lock().unwrap().clone();
+        (rec.train_loss, tr.metrics.oom_events, tr.metrics.batch_trace.clone(), lines)
+    };
+
+    let (loss0, oom0, batch0, ev0) = run(None);
+    // An absurd sample — "used" far above "max" — would force an
+    // emergency shrink if the meter could steer the §3.3 policy.
+    let samples = vec![
+        MemSample { used_gb: 123.0, max_gb: 8.0 },
+        MemSample { used_gb: 0.001, max_gb: 8.0 },
+    ];
+    let (loss1, oom1, batch1, ev1) = run(Some(FakeMeter::new(samples)));
+
+    assert_eq!(loss0.to_bits(), loss1.to_bits(), "loss trajectory untouched");
+    assert_eq!(oom0, oom1, "OOM accounting untouched");
+    assert_eq!(batch0, batch1, "batch decisions untouched");
+
+    // Every non-host_mem line is byte-identical once the wall-clock
+    // channel (epoch wall_s) is normalized away.
+    let normalized = |evs: &[String]| {
+        evs.iter()
+            .filter(|l| !l.contains("\"event\":\"host_mem\""))
+            .map(|l| replay::normalize_line(l).unwrap())
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(normalized(&ev0), normalized(&ev1), "telemetry unchanged outside host_mem");
+
+    assert!(
+        ev0.iter().all(|l| !l.contains("\"event\":\"host_mem\"")),
+        "no meter, no host_mem events"
+    );
+    let host: Vec<&String> = ev1.iter().filter(|l| l.contains("\"event\":\"host_mem\"")).collect();
+    assert!(!host.is_empty(), "control windows must sample the installed meter");
+    assert!(host.iter().all(|l| l.contains("\"source\":\"fake\"")), "{host:?}");
+    assert!(host[0].contains("\"used_gb\":123"), "first sample replayed in order: {}", host[0]);
+}
+
+#[test]
+fn replay_specs_reject_bad_traces_at_validation_time() {
+    let root = tmp("reject");
+    std::fs::create_dir_all(&root).unwrap();
+
+    // Non-finite, non-positive, empty, and oversized series never
+    // construct (standard JSON cannot even spell NaN, so a NaN file
+    // already dies in the parser; this guards direct construction).
+    assert!(TraceFile::new("t", vec![1.0, f64::NAN]).is_err());
+    assert!(TraceFile::new("t", vec![1.0, f64::INFINITY]).is_err());
+    assert!(TraceFile::new("t", vec![0.0]).is_err());
+    assert!(TraceFile::new("t", Vec::new()).is_err());
+    assert!(TraceFile::new("t", vec![1.0; MAX_TRACE_STEPS + 1]).is_err());
+
+    // A config carrying a bad replay spec fails at `validate()` —
+    // i.e. at CLI arg parsing, before any training work.
+    let check_err = |spec: String, needle: &str| {
+        let mut cfg = Config::default();
+        cfg.set("mem_trace", &spec).unwrap();
+        let err = format!("{:#}", cfg.validate().unwrap_err());
+        assert!(err.contains(needle), "spec `{spec}` error must mention `{needle}`: {err}");
+    };
+    check_err(format!("replay:{}", root.join("absent.json").display()), "trace file");
+    let bad = root.join("bad.json");
+    std::fs::write(&bad, "{not json").unwrap();
+    check_err(format!("replay:{}", bad.display()), "trace file");
+    let big = root.join("big.json");
+    std::fs::write(&big, vec![b' '; 16 * 1024 * 1024 + 1]).unwrap();
+    check_err(format!("replay:{}", big.display()), "cap");
+    let good = root.join("good.json");
+    TraceFile::new("t", vec![0.5, 0.25]).unwrap().save(&good).unwrap();
+    check_err(format!("replay:{}#{:016x}", good.display(), 1u64), "does not match");
+
+    // The pinned canonical form parses and round-trips through
+    // `to_spec`, so the string grid identity hashes is stable.
+    let tf = TraceFile::load(&good).unwrap();
+    let spec = format!("replay:{}#{:016x}", good.display(), tf.digest());
+    let parsed = BudgetTrace::parse(&spec).unwrap();
+    assert_eq!(parsed.to_spec(), spec, "replay specs canonicalize to themselves");
+    std::fs::remove_dir_all(&root).ok();
+}
